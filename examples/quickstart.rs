@@ -1,0 +1,89 @@
+//! Quickstart: the smallest end-to-end GraphMP pipeline.
+//!
+//! 1. generate a small power-law graph;
+//! 2. preprocess it into destination-sharded CSR + Bloom filters;
+//! 3. run PageRank — on the **three-layer AOT path** (rust → PJRT →
+//!    JAX/Pallas artifact) when `artifacts/` is built, else natively;
+//! 4. print per-iteration stats and the top-ranked vertices.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use graphmp::apps::PageRank;
+use graphmp::coordinator::datasets::Dataset;
+use graphmp::engine::{Backend, EngineConfig, VswEngine};
+use graphmp::runtime::ShardRuntime;
+use graphmp::sharding::{preprocess, PreprocessConfig};
+use graphmp::storage::DatasetDir;
+use graphmp::util::humansize;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a "small" dataset: 4K vertices, 120K edges, power-law
+    let dataset = Dataset::by_name("small")?;
+    let edges = dataset.generate();
+    println!(
+        "generated {}: |V|={} |E|={}",
+        dataset.name,
+        dataset.num_vertices(),
+        edges.len()
+    );
+
+    // 2. preprocess (the paper's 4-step pipeline, §II-B)
+    let dir = DatasetDir::new(std::env::temp_dir().join("graphmp_quickstart.gmp"));
+    let _ = std::fs::remove_dir_all(&dir.root);
+    let out = preprocess(
+        dataset.name,
+        &edges,
+        dataset.num_vertices(),
+        &dir,
+        &PreprocessConfig::default(),
+    )?;
+    println!(
+        "preprocessed into {} shards (bloom filters: {})",
+        out.property.num_shards(),
+        humansize::bytes(out.bloom_bytes)
+    );
+
+    // 3. pick the backend: AOT artifacts if available
+    let artifact_dir = std::path::Path::new("artifacts");
+    let backend = match ShardRuntime::load(artifact_dir) {
+        Ok(rt) => {
+            println!("using the xla backend (AOT Pallas kernels via PJRT)");
+            Backend::Xla(Arc::new(rt))
+        }
+        Err(e) => {
+            println!("artifacts not available ({e}); using the native backend");
+            Backend::Native
+        }
+    };
+
+    let engine = VswEngine::open(dir, EngineConfig { max_iters: 10, backend, ..Default::default() })?;
+    let result = engine.run(&PageRank::default())?;
+
+    // 4. report
+    for it in &result.stats.iters {
+        println!(
+            "iter {:2}: {:>9}  active {:.2}%  cache-hits {}",
+            it.iter,
+            humansize::duration(it.wall),
+            it.active_ratio * 100.0,
+            it.cache_hits
+        );
+    }
+    let mut ranked: Vec<(usize, f32)> = result.values.iter().copied().enumerate().collect();
+    ranked.sort_by(|a, b| b.1.total_cmp(&a.1));
+    println!("\ntop-5 vertices by rank:");
+    for (v, r) in ranked.iter().take(5) {
+        println!("  v{v:<6} rank {r:.6}");
+    }
+    println!(
+        "\nprocessed {} in {} ({})",
+        humansize::count(result.stats.edges_processed),
+        humansize::duration(result.stats.total_wall),
+        humansize::rate(result.stats.edges_processed, result.stats.total_wall)
+    );
+    Ok(())
+}

@@ -1,0 +1,93 @@
+"""AOT compile path: lower the L2 shard programs to HLO **text** artifacts.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser on the rust side reassigns ids, so text round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per shard program plus ``manifest.json``
+recording the kernel geometry; the rust runtime refuses to run against a
+manifest whose geometry disagrees with its compiled-in constants.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.segsum import E_MAX, TILE_E, V_MAX
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def specs():
+    f32e = jax.ShapeDtypeStruct((E_MAX,), jnp.float32)
+    i32e = jax.ShapeDtypeStruct((E_MAX,), jnp.int32)
+    f32v = jax.ShapeDtypeStruct((V_MAX,), jnp.float32)
+    f32s = jax.ShapeDtypeStruct((1,), jnp.float32)
+    return {
+        # name -> (fn, example args, input signature for the manifest)
+        "pr_shard": (model.pr_shard, (f32e, i32e, f32s),
+                     ["contrib:f32[E]", "dst:i32[E]", "inv_n:f32[1]"]),
+        "relaxmin_shard": (model.relaxmin_shard, (f32e, i32e, f32v),
+                           ["contrib:f32[E]", "dst:i32[E]", "old:f32[V]"]),
+        "segsum_shard": (model.segsum_shard, (f32e, i32e),
+                         ["contrib:f32[E]", "dst:i32[E]"]),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    wanted = set(args.only.split(",")) if args.only else None
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "geometry": {"v_max": V_MAX, "e_max": E_MAX, "tile_e": TILE_E},
+        "artifacts": {},
+    }
+    for name, (fn, example, sig) in specs().items():
+        if wanted is not None and name not in wanted:
+            continue
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": sig,
+            "output": "f32[V]",
+            "bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

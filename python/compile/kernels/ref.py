@@ -1,0 +1,53 @@
+"""Pure-jnp reference oracles for the Pallas shard kernels.
+
+These are the ground-truth semantics the Pallas kernels in ``segsum.py`` /
+``segmin.py`` must match bit-for-bit (up to f32 accumulation order).  They are
+used by pytest (``python/tests``) and never shipped in an artifact.
+
+Shard-kernel contract (see DESIGN.md, "Kernel geometry"):
+
+* ``contrib``  -- f32[E_MAX]  per-edge contribution, already gathered by the
+  rust coordinator (e.g. ``rank[src]/out_deg[src]`` for PageRank).  Padding
+  lanes carry the reduction identity (0 for sum, +inf for min).
+* ``dst``      -- i32[E_MAX]  *local* destination index in ``[0, V_MAX)``.
+  Padding lanes may point anywhere; their contribution is the identity.
+* result       -- f32[V_MAX]  per-destination reduction.
+"""
+
+import jax.numpy as jnp
+
+INF = jnp.float32(jnp.inf)
+
+
+def segsum_ref(contrib, dst, v_max: int):
+    """Segmented sum: out[v] = sum over edges e with dst[e]==v of contrib[e]."""
+    out = jnp.zeros((v_max,), dtype=contrib.dtype)
+    return out.at[dst].add(contrib)
+
+
+def segmin_ref(contrib, dst, v_max: int):
+    """Segmented min: out[v] = min over edges e with dst[e]==v of contrib[e].
+
+    Vertices with no incoming edge get +inf.
+    """
+    out = jnp.full((v_max,), INF, dtype=contrib.dtype)
+    return out.at[dst].min(contrib)
+
+
+def pr_shard_ref(contrib, dst, inv_n, v_max: int, damping: float = 0.85):
+    """PageRank shard update: new[v] = (1-d)/N + d * segsum(contrib)[v].
+
+    ``inv_n`` is a f32[1] array holding 1/|V| of the *global* graph (the shard
+    only sees V_MAX local slots).
+    """
+    s = segsum_ref(contrib, dst, v_max)
+    return (1.0 - damping) * inv_n[0] + damping * s
+
+
+def relaxmin_shard_ref(contrib, dst, old, v_max: int):
+    """SSSP/WCC shard update: new[v] = min(old[v], segmin(contrib)[v]).
+
+    SSSP feeds contrib = dist[src] + w(src,v); WCC feeds contrib = comp[src].
+    """
+    m = segmin_ref(contrib, dst, v_max)
+    return jnp.minimum(old, m)

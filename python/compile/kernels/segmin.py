@@ -1,0 +1,62 @@
+"""Pallas segmented-min kernel: the SSSP/WCC relax hot-spot.
+
+Min has no matmul form, so unlike ``segsum`` the MXU cannot help; instead we
+do a masked broadcast-reduce on the VPU:
+
+    masked[T, V] = where(dst_tile one-hot, contrib, +inf)
+    out[V]       = min(out, min over T of masked)
+
+Same streaming structure as segsum: edge arrays are tiled TILE_E at a time
+through VMEM while the V_MAX accumulator stays resident.  Padding lanes must
+carry +inf so they are identity under min.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .segsum import E_MAX, TILE_E, V_MAX  # shared geometry  # noqa: F401
+
+# NB: plain python float, not a jnp scalar — pallas_call rejects kernels
+# that capture traced constants.
+_INF = float("inf")
+
+
+def _segmin_kernel(contrib_ref, dst_ref, out_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, _INF)
+
+    contrib = contrib_ref[...]                      # f32[TILE_E]
+    dst = dst_ref[...]                              # i32[TILE_E]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (contrib.shape[0], out_ref.shape[0]), 1)
+    masked = jnp.where(dst[:, None] == cols, contrib[:, None], _INF)
+    tile_min = jnp.min(masked, axis=0)              # f32[V_MAX]
+    out_ref[...] = jnp.minimum(out_ref[...], tile_min)
+
+
+@functools.partial(jax.jit, static_argnames=("v_max", "tile_e"))
+def segmin(contrib, dst, *, v_max: int = V_MAX, tile_e: int = TILE_E):
+    """out[v] = min of contrib[e] over edges e with dst[e] == v (else +inf).
+
+    contrib: f32[E] with E % tile_e == 0 (padding lanes carry +inf).
+    dst:     i32[E] local destination indices in [0, v_max).
+    """
+    e = contrib.shape[0]
+    assert e % tile_e == 0, f"edge count {e} not a multiple of tile {tile_e}"
+    grid = e // tile_e
+    return pl.pallas_call(
+        _segmin_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile_e,), lambda i: (i,)),
+            pl.BlockSpec((tile_e,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((v_max,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((v_max,), jnp.float32),
+        interpret=True,
+    )(contrib, dst)

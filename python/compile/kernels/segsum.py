@@ -1,0 +1,74 @@
+"""Pallas segmented-sum kernel: the PageRank-style scatter-add hot-spot.
+
+Hardware adaptation (DESIGN.md "Hardware adaptation"): GraphMP's C++/OpenMP
+inner loop is a gather over CSR adjacency followed by a per-destination
+accumulate.  A TPU has no efficient random scatter, so we recast the
+scatter-add as a *one-hot matmul* that runs on the MXU systolic array:
+
+    out[V] += contrib[1, T] @ onehot(dst_tile)[T, V]
+
+The edge stream is tiled into blocks of TILE_E edges; each grid step builds
+the one-hot expansion of its destination indices in VMEM and feeds the MXU.
+BlockSpec expresses the HBM->VMEM schedule the paper's sliding window does
+with disk->memory shard loads: the edge arrays stream tile by tile while the
+V_MAX output accumulator stays resident in VMEM across the whole grid.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the Pallas interpreter to
+plain HLO (see /opt/xla-example/README.md).  Numeric behaviour is identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Canonical shard-kernel geometry.  Must match `rust/src/runtime/geometry.rs`
+# and is recorded in artifacts/manifest.json by aot.py.
+V_MAX = 2048       # padded vertices per shard interval
+E_MAX = 16384      # padded edges per shard
+TILE_E = 1024      # edges per grid step (one MXU pass each)
+
+
+def _segsum_kernel(contrib_ref, dst_ref, out_ref):
+    """One grid step: scatter-add TILE_E edges into the V_MAX accumulator."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    contrib = contrib_ref[...]                      # f32[TILE_E]
+    dst = dst_ref[...]                              # i32[TILE_E]
+    # One-hot expansion of the destination indices: f32[TILE_E, V_MAX].
+    cols = jax.lax.broadcasted_iota(jnp.int32, (contrib.shape[0], out_ref.shape[0]), 1)
+    onehot = (dst[:, None] == cols).astype(contrib.dtype)
+    # MXU pass: [1, TILE_E] @ [TILE_E, V_MAX] -> [1, V_MAX].
+    tile_sum = jnp.dot(contrib[None, :], onehot,
+                       preferred_element_type=jnp.float32)[0]
+    out_ref[...] += tile_sum
+
+
+@functools.partial(jax.jit, static_argnames=("v_max", "tile_e"))
+def segsum(contrib, dst, *, v_max: int = V_MAX, tile_e: int = TILE_E):
+    """out[v] = sum of contrib[e] over edges e with dst[e] == v.
+
+    contrib: f32[E] with E % tile_e == 0 (padding lanes carry 0.0).
+    dst:     i32[E] local destination indices in [0, v_max).
+    """
+    e = contrib.shape[0]
+    assert e % tile_e == 0, f"edge count {e} not a multiple of tile {tile_e}"
+    grid = e // tile_e
+    return pl.pallas_call(
+        _segsum_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((tile_e,), lambda i: (i,)),
+            pl.BlockSpec((tile_e,), lambda i: (i,)),
+        ],
+        # The accumulator is one block for the whole grid: stays in VMEM.
+        out_specs=pl.BlockSpec((v_max,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((v_max,), jnp.float32),
+        interpret=True,
+    )(contrib, dst)

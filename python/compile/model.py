@@ -1,0 +1,47 @@
+"""Layer-2: GraphMP's per-shard vertex-update programs as JAX functions.
+
+Each function is the compute half of one VSW sliding-window step
+(Algorithm 1, line 7-8 of the paper): the rust coordinator has already
+gathered per-edge contributions from ``SrcVertexArray`` (the L3 side owns the
+CSR walk and the ``rank/out_deg`` transform); these functions perform the
+per-destination reduction + apply on top of the Pallas kernels and hand back
+the slice of ``DstVertexArray`` covered by the shard's vertex interval.
+
+All functions are lowered AOT by ``aot.py`` into ``artifacts/*.hlo.txt`` and
+executed from rust via PJRT — python never runs on the iteration path.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.segmin import segmin
+from .kernels.segsum import segsum
+
+DAMPING = 0.85
+
+
+def pr_shard(contrib, dst, inv_n):
+    """PageRank (Algorithm 2, PR_Update): new[v] = 0.15/N + 0.85 * sum.
+
+    contrib[e] = rank[src(e)] / out_deg(src(e)), padding 0.
+    inv_n: f32[1] = 1 / |V| of the global graph.
+    Returns f32[V_MAX]: updated values for the shard's vertex interval.
+    """
+    s = segsum(contrib, dst)
+    return (1.0 - DAMPING) * inv_n[0] + DAMPING * s
+
+
+def relaxmin_shard(contrib, dst, old):
+    """SSSP/WCC (Algorithm 2, SSSP_Update / WCC_Update).
+
+    SSSP: contrib[e] = dist[src(e)] + val(e)   (unweighted: +1), padding +inf.
+    WCC:  contrib[e] = comp[src(e)], padding +inf.
+    new[v] = min(old[v], segmin(contrib)[v]).
+    """
+    m = segmin(contrib, dst)
+    return jnp.minimum(old, m)
+
+
+def segsum_shard(contrib, dst):
+    """Raw segmented sum — the generic SpMV building block (y = A^T x per
+    shard), exposed as its own artifact for the spmv app and micro-benches."""
+    return segsum(contrib, dst)

@@ -1,0 +1,151 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, dtypes-compatible value ranges and destination
+distributions; every case asserts allclose against ``ref.py``.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import pr_shard_ref, relaxmin_shard_ref, segmin_ref, segsum_ref
+from compile.kernels.segmin import segmin
+from compile.kernels.segsum import E_MAX, TILE_E, V_MAX, segsum
+
+RNG = np.random.default_rng(0xC0FFEE)
+
+
+def mk_inputs(n_edges, v_max, *, pad_to=None, identity=0.0, skew=False):
+    """Random contrib/dst arrays, optionally padded to a tile multiple."""
+    contrib = RNG.standard_normal(n_edges).astype(np.float32)
+    if skew:
+        # power-law-ish destination concentration (shard hot rows)
+        raw = RNG.zipf(1.5, size=n_edges)
+        dst = ((raw - 1) % v_max).astype(np.int32)
+    else:
+        dst = RNG.integers(0, v_max, n_edges).astype(np.int32)
+    if pad_to is not None:
+        pad = (-len(contrib)) % pad_to
+        contrib = np.concatenate([contrib, np.full(pad, identity, np.float32)])
+        dst = np.concatenate([dst, np.zeros(pad, np.int32)])
+    return jnp.asarray(contrib), jnp.asarray(dst)
+
+
+# ---------------------------------------------------------------- segsum
+
+class TestSegsum:
+    def test_full_geometry(self):
+        contrib, dst = mk_inputs(E_MAX, V_MAX)
+        got = segsum(contrib, dst)
+        want = segsum_ref(contrib, dst, V_MAX)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_all_edges_one_destination(self):
+        contrib = jnp.ones((E_MAX,), jnp.float32)
+        dst = jnp.zeros((E_MAX,), jnp.int32)
+        got = segsum(contrib, dst)
+        assert got[0] == E_MAX
+        assert float(jnp.abs(got[1:]).max()) == 0.0
+
+    def test_empty_contributions_padding(self):
+        # all-identity input => zero output
+        contrib = jnp.zeros((E_MAX,), jnp.float32)
+        dst = jnp.zeros((E_MAX,), jnp.int32)
+        assert float(jnp.abs(segsum(contrib, dst)).max()) == 0.0
+
+    def test_skewed_destinations(self):
+        contrib, dst = mk_inputs(E_MAX, V_MAX, skew=True)
+        got = segsum(contrib, dst)
+        want = segsum_ref(contrib, dst, V_MAX)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n_tiles=st.integers(1, 4),
+        v_max=st.sampled_from([8, 128, 2048]),
+        tile=st.sampled_from([128, 1024]),
+    )
+    def test_hypothesis_shapes(self, n_tiles, v_max, tile):
+        contrib, dst = mk_inputs(n_tiles * tile, v_max)
+        got = segsum(contrib, dst, v_max=v_max, tile_e=tile)
+        want = segsum_ref(contrib, dst, v_max)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_rejects_untiled_edge_count(self):
+        with pytest.raises(AssertionError):
+            segsum(jnp.zeros((100,), jnp.float32), jnp.zeros((100,), jnp.int32))
+
+
+# ---------------------------------------------------------------- segmin
+
+class TestSegmin:
+    def test_full_geometry(self):
+        contrib, dst = mk_inputs(E_MAX, V_MAX)
+        got = segmin(contrib, dst)
+        want = segmin_ref(contrib, dst, V_MAX)
+        np.testing.assert_array_equal(got, want)  # min is exact in f32
+
+    def test_untouched_lanes_are_inf(self):
+        contrib = jnp.zeros((TILE_E,), jnp.float32)
+        dst = jnp.zeros((TILE_E,), jnp.int32)
+        got = segmin(contrib, dst, v_max=16, tile_e=TILE_E)
+        assert got[0] == 0.0
+        assert np.all(np.isinf(np.asarray(got[1:])))
+
+    def test_inf_padding_is_identity(self):
+        base = jnp.asarray(np.float32([3.0, 1.0, 2.0] + [np.inf] * (TILE_E - 3)))
+        dst = jnp.zeros((TILE_E,), jnp.int32)
+        got = segmin(base, dst, v_max=4, tile_e=TILE_E)
+        assert got[0] == 1.0
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n_tiles=st.integers(1, 4),
+        v_max=st.sampled_from([8, 128, 2048]),
+        tile=st.sampled_from([128, 1024]),
+    )
+    def test_hypothesis_shapes(self, n_tiles, v_max, tile):
+        contrib, dst = mk_inputs(n_tiles * tile, v_max)
+        got = segmin(contrib, dst, v_max=v_max, tile_e=tile)
+        want = segmin_ref(contrib, dst, v_max)
+        np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------ L2 programs
+
+class TestModelPrograms:
+    def test_pr_shard(self):
+        from compile import model
+
+        contrib, dst = mk_inputs(E_MAX, V_MAX)
+        contrib = jnp.abs(contrib)  # ranks are positive
+        inv_n = jnp.asarray([1.0 / 1000.0], jnp.float32)
+        got = model.pr_shard(contrib, dst, inv_n)
+        want = pr_shard_ref(contrib, dst, inv_n, V_MAX)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_relaxmin_shard(self):
+        from compile import model
+
+        contrib, dst = mk_inputs(E_MAX, V_MAX, identity=np.inf)
+        old = jnp.asarray(RNG.standard_normal(V_MAX).astype(np.float32))
+        got = model.relaxmin_shard(contrib, dst, old)
+        want = relaxmin_shard_ref(contrib, dst, old, V_MAX)
+        np.testing.assert_array_equal(got, want)
+
+    def test_relaxmin_never_increases(self):
+        from compile import model
+
+        contrib, dst = mk_inputs(E_MAX, V_MAX)
+        old = jnp.asarray(RNG.standard_normal(V_MAX).astype(np.float32))
+        got = model.relaxmin_shard(contrib, dst, old)
+        assert bool(jnp.all(got <= old))
+
+    def test_segsum_shard_equals_kernel(self):
+        from compile import model
+
+        contrib, dst = mk_inputs(E_MAX, V_MAX)
+        np.testing.assert_array_equal(
+            model.segsum_shard(contrib, dst), segsum(contrib, dst)
+        )

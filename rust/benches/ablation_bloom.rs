@@ -1,0 +1,59 @@
+//! Ablation — the selective-scheduling threshold (§II-D.1): the paper fixes
+//! it at 0.001 and notes "users can choose a better value for specific
+//! applications".  Sweep it for SSSP and WCC and report total time, shard
+//! skips and Bloom-probe overhead.
+//!
+//! Expected shape: 0 (never selective) pays full processing; too-high
+//! thresholds waste time probing filters while nearly every shard is still
+//! active; the sweet spot sits where the frontier is genuinely sparse —
+//! for SSSP that is most of the run, so higher thresholds keep winning.
+
+use graphmp::apps::{self, VertexProgram};
+use graphmp::cache::Codec;
+use graphmp::coordinator::experiment::{ablation_dataset, ensure_dataset};
+use graphmp::coordinator::report;
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::util::bench::Table;
+use graphmp::util::humansize;
+
+fn main() -> anyhow::Result<()> {
+    let dataset = ablation_dataset();
+    println!("Ablation: selective-scheduling threshold on {}", dataset.name);
+    let dir = ensure_dataset(dataset)?;
+
+    let apps_list: Vec<Box<dyn VertexProgram>> =
+        vec![apps::by_name("sssp")?, apps::by_name("wcc")?];
+    let thresholds = [0.0, 0.0001, 0.001, 0.01, 0.1, 1.0];
+
+    let mut table = Table::new(
+        &format!("bloom threshold sweep on {}", dataset.name),
+        &["app", "threshold", "iters", "total", "shards skipped", "shards processed"],
+    );
+    for app in &apps_list {
+        for &thr in &thresholds {
+            let engine = VswEngine::open(
+                dir.clone(),
+                EngineConfig {
+                    selective: thr > 0.0,
+                    selective_threshold: thr,
+                    cache_codec: Codec::SnapLite,
+                    ..Default::default()
+                },
+            )?;
+            let run = engine.run(app.as_ref())?;
+            let skipped: usize = run.stats.iters.iter().map(|i| i.shards_skipped).sum();
+            let processed: usize = run.stats.iters.iter().map(|i| i.shards_processed).sum();
+            table.row(&[
+                app.name().into(),
+                if thr == 0.0 { "off".into() } else { format!("{thr}") },
+                run.stats.num_iters().to_string(),
+                humansize::duration(run.stats.total_wall),
+                skipped.to_string(),
+                processed.to_string(),
+            ]);
+        }
+    }
+    table.print();
+    report::append_markdown(&report::results_path(), &table)?;
+    Ok(())
+}

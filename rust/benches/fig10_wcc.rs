@@ -1,0 +1,19 @@
+//! Fig 10 — execution time of the five systems running **WCC** (10
+//! iterations, first includes loading) on the four datasets.
+//!
+//! Expected shape: like Fig 8 with a stronger GraphMP-NC showing (WCC's
+//! min-label propagation converges region by region, so selective
+//! scheduling recovers part of the cache's advantage).
+
+use graphmp::apps::Wcc;
+use graphmp::coordinator::experiment::{exec_time_figure, render_exec_figure};
+use graphmp::coordinator::report;
+
+fn main() -> anyhow::Result<()> {
+    println!("Fig 10: WCC execution time (10 iterations)");
+    let rows = exec_time_figure(&Wcc, 10)?;
+    let table = render_exec_figure("Fig10 WCC exec time", &rows);
+    table.print();
+    report::append_markdown(&report::results_path(), &table)?;
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Fig 11 — memory usage of the five systems running PageRank on each
+//! dataset (GraphMP with and without the compressed cache).
+//!
+//! Paper numbers on EU-2015: GraphChi 10.65 GB, X-Stream 1.22 GB, GridGraph
+//! 1.35 GB, GraphMP-NC 23.53 GB, GraphMP-C 91.37 GB (≈68 GB of compressed
+//! cache holding all 91.8 B edges).  Expected shape: the streaming systems
+//! tiny, GraphMP-NC = vertex-state-bound, GraphMP-C = cache-bound and the
+//! largest — trading memory for the zero-disk-read steady state.
+
+use graphmp::apps::PageRank;
+use graphmp::baselines;
+use graphmp::cache::Codec;
+use graphmp::coordinator::datasets::paper_datasets;
+use graphmp::coordinator::experiment::{bench_datasets, ensure_dataset, GraphMpVariant};
+use graphmp::coordinator::report;
+use graphmp::engine::VswEngine;
+use graphmp::util::bench::Table;
+use graphmp::util::humansize;
+
+fn main() -> anyhow::Result<()> {
+    let _ = paper_datasets();
+    println!("Fig 11: memory usage (PageRank)");
+    let mut table = Table::new(
+        "Fig11 memory usage, PageRank",
+        &["dataset", "GraphChi", "X-Stream", "GridGraph", "GraphMP-NC", "GraphMP-C"],
+    );
+    for dataset in bench_datasets() {
+        let dir = ensure_dataset(dataset)?;
+        let edges = dataset.generate();
+        let mut cells = vec![dataset.name.to_string()];
+        for sys in ["psw", "esg", "dsw"] {
+            let work = std::env::temp_dir().join(format!("graphmp_f11_{sys}_{}", dataset.name));
+            let mut eng = baselines::by_name(sys, work)?;
+            eng.prepare(&edges, dataset.num_vertices())?;
+            cells.push(humansize::bytes(eng.memory_estimate()));
+        }
+        for variant in [GraphMpVariant::NoCache, GraphMpVariant::Cached(Codec::SnapLite)] {
+            let engine = VswEngine::open(dir.clone(), variant.to_config(true, 2))?;
+            let run = engine.run(&PageRank::default())?;
+            cells.push(humansize::bytes(run.stats.memory_bytes));
+        }
+        table.row(&cells);
+    }
+    table.print();
+    report::append_markdown(&report::results_path(), &table)?;
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Fig 5 — effect of the selective scheduling mechanism.
+//!
+//! Paper setup: PageRank / SSSP / WCC on UK-2007 for 200 iterations,
+//! GraphMP-SS (selective scheduling on) vs GraphMP-NSS (off), reporting the
+//! vertex-activation ratio and the per-iteration execution time.
+//!
+//! Expected shape: per-iteration time of -SS drops below -NSS once the
+//! activation ratio falls under the 0.001 threshold; SSSP benefits most
+//! (paper: up to 2.86× per iteration, 50.1% overall), WCC moderately
+//! (1.75×, 9.5%), PageRank least and latest (1.67×, 5.8%).
+
+use graphmp::apps::{self, VertexProgram};
+use graphmp::cache::Codec;
+use graphmp::coordinator::datasets::Dataset;
+use graphmp::coordinator::experiment::{ensure_dataset, run_graphmp, GraphMpVariant};
+use graphmp::coordinator::report;
+use graphmp::util::bench::Table;
+use graphmp::util::humansize;
+
+fn main() -> anyhow::Result<()> {
+    let dataset = Dataset::by_name(
+        &std::env::var("GRAPHMP_FIG5_DATASET").unwrap_or_else(|_| "uk2007-s".into()),
+    )?;
+    let iters: usize = std::env::var("GRAPHMP_FIG5_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
+    println!("Fig 5: selective scheduling on {} ({iters} iterations)", dataset.name);
+    let dir = ensure_dataset(dataset)?;
+
+    let apps_list: Vec<Box<dyn VertexProgram>> = vec![
+        apps::by_name("pagerank")?,
+        apps::by_name("sssp")?,
+        apps::by_name("wcc")?,
+    ];
+    let mut table = Table::new(
+        &format!("Fig5 {} ({iters} iters)", dataset.name),
+        &[
+            "app",
+            "variant",
+            "iters",
+            "total",
+            "skipped-shards",
+            "first-selective-iter",
+            "max-iter-speedup",
+            "overall-gain",
+        ],
+    );
+
+    for app in &apps_list {
+        let (ss, _) =
+            run_graphmp(&dir, GraphMpVariant::Cached(Codec::SnapLite), true, app.as_ref(), iters)?;
+        let (nss, _) =
+            run_graphmp(&dir, GraphMpVariant::Cached(Codec::SnapLite), false, app.as_ref(), iters)?;
+
+        // per-iteration speedup where both ran (paper Fig 5 a2/b2/c2)
+        let mut max_speedup = 0.0f64;
+        for (a, b) in ss.stats.iters.iter().zip(&nss.stats.iters) {
+            if a.selective_enabled {
+                let s = b.wall.as_secs_f64() / a.wall.as_secs_f64().max(1e-12);
+                max_speedup = max_speedup.max(s);
+            }
+        }
+        let first_sel = ss
+            .stats
+            .iters
+            .iter()
+            .find(|i| i.selective_enabled)
+            .map(|i| i.iter.to_string())
+            .unwrap_or_else(|| "-".into());
+        let skipped: usize = ss.stats.iters.iter().map(|i| i.shards_skipped).sum();
+        let gain = 100.0
+            * (1.0 - ss.stats.total_wall.as_secs_f64() / nss.stats.total_wall.as_secs_f64());
+        table.row(&[
+            app.name().into(),
+            "GraphMP-SS".into(),
+            ss.stats.num_iters().to_string(),
+            humansize::duration(ss.stats.total_wall),
+            skipped.to_string(),
+            first_sel,
+            format!("{max_speedup:.2}x"),
+            format!("{gain:.1}%"),
+        ]);
+        table.row(&[
+            app.name().into(),
+            "GraphMP-NSS".into(),
+            nss.stats.num_iters().to_string(),
+            humansize::duration(nss.stats.total_wall),
+            "0".into(),
+            "-".into(),
+            "1.00x".into(),
+            "-".into(),
+        ]);
+
+        // activation-ratio curve samples (paper Fig 5 a1/b1/c1)
+        print!("  {} activation ratio:", app.name());
+        let samples = [0usize, 1, 2, 5, 10, 20, 50, 100, 150, iters.saturating_sub(1)];
+        for &s in samples.iter().filter(|&&s| s < ss.stats.iters.len()) {
+            print!(" i{}={:.4}", s, ss.stats.iters[s].active_ratio);
+        }
+        println!();
+    }
+    table.print();
+    report::append_markdown(&report::results_path(), &table)?;
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Fig 7 — per-iteration execution time + activation ratio: GraphMP vs
+//! GraphMat (in-memory) on Twitter, PageRank / SSSP / WCC, loading time
+//! excluded.
+//!
+//! Paper numbers (processing only): PR 28 s (GraphMat) vs 22 s (GraphMP);
+//! SSSP 1.3 s vs 9.9 s; WCC 1.5 s vs 2.1 s — i.e. GraphMP wins PR, the
+//! in-memory engine wins the frontier apps.  Expected shape: same ordering.
+
+use graphmp::apps::{self, VertexProgram};
+use graphmp::baselines::{InMemEngine, OocEngine};
+use graphmp::cache::Codec;
+use graphmp::coordinator::datasets::Dataset;
+use graphmp::coordinator::experiment::{ensure_dataset, run_graphmp, GraphMpVariant};
+use graphmp::coordinator::report;
+use graphmp::util::bench::Table;
+use graphmp::util::humansize;
+
+fn main() -> anyhow::Result<()> {
+    let dataset = Dataset::by_name("twitter-s")?;
+    println!("Fig 7: per-iteration, GraphMP vs GraphMat on {}", dataset.name);
+    let dir = ensure_dataset(dataset)?;
+    let edges = dataset.generate();
+
+    let apps_list: Vec<(Box<dyn VertexProgram>, usize)> = vec![
+        (apps::by_name("pagerank")?, 10),
+        (apps::by_name("sssp")?, 0),
+        (apps::by_name("wcc")?, 0),
+    ];
+    let mut table = Table::new(
+        "Fig7 processing time (loading excluded), twitter-s",
+        &["app", "GraphMP", "GraphMat", "GraphMP iters", "GraphMat iters"],
+    );
+
+    for (app, iters) in &apps_list {
+        let (g, _) = run_graphmp(
+            &dir,
+            GraphMpVariant::Cached(Codec::SnapLite),
+            true,
+            app.as_ref(),
+            *iters,
+        )?;
+        let mut inmem = InMemEngine::new();
+        inmem.prepare(&edges, dataset.num_vertices())?;
+        let m = inmem.run(app.as_ref(), if *iters == 0 { 10_000 } else { *iters })?;
+        table.row(&[
+            app.name().into(),
+            humansize::duration(g.stats.total_wall),
+            humansize::duration(m.total_wall),
+            g.stats.num_iters().to_string(),
+            m.iter_walls.len().to_string(),
+        ]);
+        // activation curve (Fig 7 left column)
+        print!("  {} activation ratio:", app.name());
+        for &s in [0usize, 1, 2, 4, 8].iter().filter(|&&s| s < g.stats.iters.len()) {
+            print!(" i{s}={:.4}", g.stats.iters[s].active_ratio);
+        }
+        println!();
+    }
+    table.print();
+    report::append_markdown(&report::results_path(), &table)?;
+    Ok(())
+}

@@ -1,0 +1,21 @@
+//! Fig 8 — execution time of GraphChi, X-Stream, GridGraph, GraphMP-NC and
+//! GraphMP-C running **PageRank** (10 iterations, first includes loading)
+//! on the four datasets.
+//!
+//! Expected shape (paper Table III column "PageRank"): GraphMP-C fastest;
+//! on cache-resident graphs GraphMP-NC ≈ GraphMP-C (ratios 1.0-1.1); the
+//! baselines one to two orders slower, X-Stream slowest on big graphs.
+//! Set GRAPHMP_BENCH_FULL=1 for all four datasets.
+
+use graphmp::apps::PageRank;
+use graphmp::coordinator::experiment::{exec_time_figure, render_exec_figure};
+use graphmp::coordinator::report;
+
+fn main() -> anyhow::Result<()> {
+    println!("Fig 8: PageRank execution time (10 iterations)");
+    let rows = exec_time_figure(&PageRank::default(), 10)?;
+    let table = render_exec_figure("Fig8 PageRank exec time", &rows);
+    table.print();
+    report::append_markdown(&report::results_path(), &table)?;
+    Ok(())
+}

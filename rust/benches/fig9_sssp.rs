@@ -1,0 +1,20 @@
+//! Fig 9 — execution time of the five systems running **SSSP** (10
+//! iterations, first includes loading) on the four datasets.
+//!
+//! Expected shape: selective scheduling lets both GraphMP variants and
+//! GridGraph skip work (the paper observes GridGraph's third-iteration dip
+//! on EU-2015); GraphChi is hit hardest because it re-reads + re-writes all
+//! edge values regardless of frontier size.
+
+use graphmp::apps::Sssp;
+use graphmp::coordinator::experiment::{exec_time_figure, render_exec_figure};
+use graphmp::coordinator::report;
+
+fn main() -> anyhow::Result<()> {
+    println!("Fig 9: SSSP execution time (10 iterations)");
+    let rows = exec_time_figure(&Sssp { source: 0 }, 10)?;
+    let table = render_exec_figure("Fig9 SSSP exec time", &rows);
+    table.print();
+    report::append_markdown(&report::results_path(), &table)?;
+    Ok(())
+}

@@ -1,0 +1,150 @@
+//! Micro-benchmarks of the hot paths the perf pass (EXPERIMENTS.md §Perf)
+//! optimizes: native shard update, Bloom probe, codec throughput, thread
+//! pool dispatch, shard (de)serialization, and the PJRT kernel call.
+
+use std::sync::Arc;
+
+use graphmp::apps::{PageRank, ProgramContext};
+use graphmp::bloom::BloomFilter;
+use graphmp::cache::Codec;
+use graphmp::engine::Backend;
+use graphmp::graph::csr::Csr;
+use graphmp::graph::generator;
+use graphmp::runtime::ShardRuntime;
+use graphmp::storage::shardfile;
+use graphmp::util::bench::{black_box, Bench, Table};
+use graphmp::util::humansize;
+use graphmp::util::rng::Xoshiro256;
+use graphmp::util::threadpool::ThreadPool;
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::default();
+    let mut table = Table::new("micro hot paths", &["path", "median", "throughput", "cv%"]);
+
+    // a realistic power-law shard: 2048-vertex interval, ~16K edges
+    let edges: Vec<(u32, u32)> = generator::rmat(14, 120_000, generator::RmatParams::default(), 3)
+        .into_iter()
+        .filter(|&(_, d)| d < 2048)
+        .take(16_384)
+        .collect();
+    let csr = Csr::from_edges(0, 2048, &edges);
+    let n_edges = csr.num_edges() as u64;
+    let num_v = 1 << 14;
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let src: Vec<f32> = (0..num_v).map(|_| rng.next_f32()).collect();
+    let out_deg: Vec<u32> = (0..num_v).map(|_| 1 + rng.gen_range(40) as u32).collect();
+    let ctx = ProgramContext { num_vertices: num_v as u64 };
+    let app = PageRank::default();
+
+    // --- native shard update (the engine's inner loop) ---------------------
+    let stats = bench.run(|| {
+        let out = Backend::Native.process_shard(&app, &csr, &src, &out_deg, &ctx).unwrap();
+        black_box(out);
+    });
+    table.row(&[
+        "native shard update".into(),
+        humansize::duration(stats.median()),
+        format!("{}/s", humansize::count((n_edges as f64 / stats.median().as_secs_f64()) as u64)),
+        format!("{:.1}", stats.cv_percent()),
+    ]);
+
+    // --- bloom probe --------------------------------------------------------
+    let mut bloom = BloomFilter::with_capacity(n_edges as usize, 0.01);
+    for &(s, _) in &edges {
+        bloom.insert(s as u64);
+    }
+    let keys: Vec<u64> = (0..10_000u64).map(|k| k * 7919).collect();
+    let stats = bench.run(|| {
+        let mut hits = 0u32;
+        for &k in &keys {
+            hits += bloom.contains(k) as u32;
+        }
+        black_box(hits);
+    });
+    table.row(&[
+        "bloom probe ×10k".into(),
+        humansize::duration(stats.median()),
+        format!("{}/s", humansize::count((10_000.0 / stats.median().as_secs_f64()) as u64)),
+        format!("{:.1}", stats.cv_percent()),
+    ]);
+
+    // --- codecs --------------------------------------------------------------
+    let payload = shardfile::to_bytes(&csr);
+    for codec in Codec::ALL {
+        let compressed = codec.compress(&payload)?;
+        let stats = bench.run(|| {
+            let shard = codec.decompress_shard(black_box(&compressed)).unwrap();
+            black_box(shard.num_edges());
+        });
+        table.row(&[
+            format!("decompress {}", codec.name()),
+            humansize::duration(stats.median()),
+            format!(
+                "{}/s",
+                humansize::bytes((payload.len() as f64 / stats.median().as_secs_f64()) as u64)
+            ),
+            format!("{:.1}", stats.cv_percent()),
+        ]);
+    }
+
+    // --- thread pool dispatch -------------------------------------------------
+    let pool = ThreadPool::new(4);
+    let stats = bench.run(|| {
+        pool.parallel_for(64, |i| {
+            black_box(i);
+        });
+    });
+    table.row(&[
+        "pool dispatch (64 items)".into(),
+        humansize::duration(stats.median()),
+        format!("{}/s", humansize::count((64.0 / stats.median().as_secs_f64()) as u64)),
+        format!("{:.1}", stats.cv_percent()),
+    ]);
+
+    // --- shard serialization ----------------------------------------------------
+    let stats = bench.run(|| {
+        let bytes = shardfile::to_bytes(black_box(&csr));
+        black_box(shardfile::from_bytes(&bytes).unwrap());
+    });
+    table.row(&[
+        "shard ser+de".into(),
+        humansize::duration(stats.median()),
+        format!(
+            "{}/s",
+            humansize::bytes((payload.len() as f64 / stats.median().as_secs_f64()) as u64)
+        ),
+        format!("{:.1}", stats.cv_percent()),
+    ]);
+
+    // --- PJRT kernel invocation (if artifacts exist) -----------------------------
+    let adir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if adir.join("manifest.json").exists() {
+        let rt = Arc::new(ShardRuntime::load(&adir)?);
+        let contrib: Vec<f32> = csr.col.iter().map(|&u| src[u as usize]).collect();
+        let mut dst_local = Vec::with_capacity(csr.num_edges());
+        for (i, (_, row)) in csr.iter_rows().enumerate() {
+            dst_local.extend(std::iter::repeat_n(i as u32, row.len()));
+        }
+        let quick = Bench::quick();
+        let stats = quick.run(|| {
+            let out = rt.pr_shard(&contrib, &dst_local, 1e-3, 2048).unwrap();
+            black_box(out);
+        });
+        table.row(&[
+            "PJRT pr_shard call".into(),
+            humansize::duration(stats.median()),
+            format!(
+                "{}/s",
+                humansize::count((n_edges as f64 / stats.median().as_secs_f64()) as u64)
+            ),
+            format!("{:.1}", stats.cv_percent()),
+        ]);
+    }
+
+    table.print();
+    graphmp::coordinator::report::append_markdown(
+        &graphmp::coordinator::report::results_path(),
+        &table,
+    )?;
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! Table II — the analytic per-iteration I/O model vs what the engines
+//! actually do: run one steady-state PageRank iteration per system, read
+//! the global byte counters, and compare with `iomodel`'s closed forms.
+//!
+//! Expected shape: measured read/write within tens of percent of each
+//! model's prediction (C=4, D varies per layout: 8 B raw pairs for
+//! ESG/DSW; ~4 B CSR col + row_ptr amortized for PSW/VSP/VSW), and the
+//! ordering PSW > ESG > {VSP, DSW} > VSW preserved exactly.
+//!
+//! Known idealization gaps (the paper's formulas, not bugs here):
+//! * ESG: a real update record carries the destination id, so it is
+//!   4+C = 8 B while Table II counts C = 4 B — measured write ≈ 2×
+//!   prediction, read correspondingly higher.
+//! * DSW: Table II charges C·√P·V writes, but GridGraph's own §3 text
+//!   writes each destination chunk once per column pass ⇒ C·V per
+//!   iteration; this implementation follows the text, so measured write ≈
+//!   prediction/√P.
+
+use graphmp::apps::PageRank;
+use graphmp::baselines::{self, OocEngine};
+use graphmp::coordinator::datasets::Dataset;
+use graphmp::coordinator::experiment::{ensure_dataset, GraphMpVariant};
+use graphmp::coordinator::report;
+use graphmp::engine::VswEngine;
+use graphmp::iomodel::{Model, ModelParams};
+use graphmp::util::bench::Table;
+use graphmp::util::humansize;
+
+fn main() -> anyhow::Result<()> {
+    let dataset = Dataset::by_name("twitter-s")?;
+    println!("Table II: analytic model vs measured I/O ({}, PageRank)", dataset.name);
+    let dir = ensure_dataset(dataset)?;
+    let edges = dataset.generate();
+    let (v, e) = (dataset.num_vertices() as u64, edges.len() as u64);
+
+    let mut table = Table::new(
+        "TableII predicted vs measured bytes/iteration (twitter-s, PageRank)",
+        &["model", "pred read", "meas read", "err", "pred write", "meas write", "err"],
+    );
+
+    let mut add_row = |name: &str, model: Model, p: ModelParams, read: u64, write: u64| {
+        let pred = model.predict(&p);
+        let fmt_err = |m: u64, pr: f64| {
+            if pr == 0.0 && m == 0 {
+                "0%".to_string()
+            } else if pr == 0.0 {
+                "inf".to_string()
+            } else {
+                format!("{:.0}%", 100.0 * (m as f64 - pr).abs() / pr)
+            }
+        };
+        table.row(&[
+            name.into(),
+            humansize::bytes(pred.read as u64),
+            humansize::bytes(read),
+            fmt_err(read, pred.read),
+            humansize::bytes(pred.write as u64),
+            humansize::bytes(write),
+            fmt_err(write, pred.write),
+        ]);
+    };
+
+    // ---- PSW (D ≈ 12: 4B CSR col entry + 8B paired-direction record) -----
+    {
+        let mut eng = baselines::PswEngine::new(std::env::temp_dir().join("gmp_t2_psw"));
+        eng.prepare(&edges, v as usize)?;
+        let run = eng.run(&PageRank::default(), 3)?;
+        let io = run.iter_io[1]; // steady state
+        // PSW stores value+structure per edge in both directions: C+D with
+        // D≈8 (edge record) — the paper's (C+D)=12 B/edge
+        let p = ModelParams { v, e, p: run.iter_walls.len().max(8) as u64, c: 4, d: 8, n_cores: 1, theta: 1.0 };
+        add_row("PSW (GraphChi)", Model::Psw, p, io.bytes_read, io.bytes_written);
+    }
+
+    // ---- ESG (D = 8 raw pairs) -------------------------------------------
+    {
+        let mut eng = baselines::EsgEngine::new(std::env::temp_dir().join("gmp_t2_esg"));
+        eng.prepare(&edges, v as usize)?;
+        let run = eng.run(&PageRank::default(), 3)?;
+        let io = run.iter_io[1];
+        let p = ModelParams { v, e, p: 8, c: 4, d: 8, n_cores: 1, theta: 1.0 };
+        add_row("ESG (X-Stream)", Model::Esg, p, io.bytes_read, io.bytes_written);
+    }
+
+    // ---- DSW (√P = 4 grid) ------------------------------------------------
+    {
+        let mut eng = baselines::DswEngine::new(std::env::temp_dir().join("gmp_t2_dsw"));
+        eng.prepare(&edges, v as usize)?;
+        let run = eng.run_full(&PageRank::default(), 3)?;
+        let io = run.iter_io[1];
+        let p = ModelParams { v, e, p: 16, c: 4, d: 8, n_cores: 1, theta: 1.0 };
+        add_row("DSW (GridGraph)", Model::Dsw, p, io.bytes_read, io.bytes_written);
+    }
+
+    // ---- VSP (D ≈ 5: CSR col + amortized row_ptr) --------------------------
+    {
+        let mut eng = baselines::VspEngine::new(std::env::temp_dir().join("gmp_t2_vsp"));
+        eng.prepare(&edges, v as usize)?;
+        let shards = eng.delta(); // force prepare-derived P before run
+        let _ = shards;
+        let run = eng.run(&PageRank::default(), 3)?;
+        let io = run.iter_io[1];
+        let p = ModelParams { v, e, p: 84, c: 4, d: 5, n_cores: 1, theta: 1.0 };
+        add_row("VSP (VENUS)", Model::Vsp, p, io.bytes_read, io.bytes_written);
+    }
+
+    // ---- VSW: cache off => θ=1; cache on => θ=0 ----------------------------
+    {
+        let engine = VswEngine::open(dir.clone(), GraphMpVariant::NoCache.to_config(false, 3))?;
+        let run = engine.run(&PageRank::default())?;
+        let io = run.stats.iters[1].io;
+        let shards = engine.property.num_shards() as u64;
+        let p = ModelParams { v, e, p: shards, c: 4, d: 5, n_cores: 1, theta: 1.0 };
+        add_row("VSW θ=1 (GraphMP-NC)", Model::Vsw, p, io.bytes_read, io.bytes_written);
+
+        let engine = VswEngine::open(
+            dir,
+            GraphMpVariant::Cached(graphmp::cache::Codec::SnapLite).to_config(false, 3),
+        )?;
+        let run = engine.run(&PageRank::default())?;
+        let io = run.stats.iters[1].io;
+        let p = ModelParams { v, e, p: shards, c: 4, d: 5, n_cores: 1, theta: 0.0 };
+        add_row("VSW θ=0 (GraphMP-C)", Model::Vsw, p, io.bytes_read, io.bytes_written);
+    }
+
+    table.print();
+    report::append_markdown(&report::results_path(), &table)?;
+    Ok(())
+}

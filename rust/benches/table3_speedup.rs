@@ -1,0 +1,57 @@
+//! Table III — performance speedup ratios compared to GraphMP-C, for
+//! PageRank / SSSP / WCC across the datasets (the condensed form of
+//! Figs 8-10).
+//!
+//! Paper's headline cells: PageRank EU-2015 — GraphChi 12.5, X-Stream 54.5,
+//! GridGraph 23.1, GraphMP-NC 7.4; SSSP EU-2015 — GraphChi 31.6; small
+//! graphs (Twitter/UK-2007) — GraphMP-NC ≈ 1.0-1.2 because everything fits
+//! cache either way.  Expected shape: same ordering, same ≈1.0 NC cells on
+//! the small datasets, double-digit ratios for the streaming baselines.
+
+use graphmp::apps::{self, VertexProgram};
+use graphmp::coordinator::experiment::exec_time_figure;
+use graphmp::coordinator::report;
+use graphmp::util::bench::Table;
+
+fn main() -> anyhow::Result<()> {
+    let iters: usize = std::env::var("GRAPHMP_TABLE3_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    println!("Table III: speedup ratios vs GraphMP-C ({iters} iters)");
+
+    let mut table = Table::new(
+        "TableIII speedups vs GraphMP-C",
+        &["app", "dataset", "GraphChi", "X-Stream", "GridGraph", "GraphMP-NC"],
+    );
+
+    let apps_list: Vec<Box<dyn VertexProgram>> = vec![
+        apps::by_name("pagerank")?,
+        apps::by_name("sssp")?,
+        apps::by_name("wcc")?,
+    ];
+    for app in &apps_list {
+        let rows = exec_time_figure(app.as_ref(), iters)?;
+        let datasets: std::collections::BTreeSet<_> = rows.iter().map(|r| r.dataset).collect();
+        for dataset in datasets {
+            let get = |prefix: &str| -> f64 {
+                rows.iter()
+                    .find(|r| r.dataset == dataset && r.system.starts_with(prefix))
+                    .map(|r| r.total.as_secs_f64())
+                    .unwrap_or(0.0)
+            };
+            let base = get("GraphMP-C");
+            table.row(&[
+                app.name().into(),
+                dataset.into(),
+                report::ratio(base, get("psw")),
+                report::ratio(base, get("esg")),
+                report::ratio(base, get("dsw")),
+                report::ratio(base, get("GraphMP-NC")),
+            ]);
+        }
+    }
+    table.print();
+    report::append_markdown(&report::results_path(), &table)?;
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! BFS levels — extension app (not in the paper's evaluation, but the
+//! standard fourth benchmark of the systems it compares against).
+//! Identical monoid structure to SSSP on unweighted graphs; kept separate so
+//! ablations can use a program whose frontier is strictly level-synchronous.
+
+use super::{KernelKind, ProgramContext, Reduce, VertexProgram};
+use crate::graph::VertexId;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Bfs {
+    pub root: VertexId,
+}
+
+impl Default for Bfs {
+    fn default() -> Self {
+        Self { root: 0 }
+    }
+}
+
+impl VertexProgram for Bfs {
+    fn name(&self) -> &'static str {
+        "bfs"
+    }
+
+    fn init(&self, v: VertexId, _ctx: &ProgramContext) -> f32 {
+        if v == self.root {
+            0.0
+        } else {
+            f32::INFINITY
+        }
+    }
+
+    fn initially_active(&self, v: VertexId, _ctx: &ProgramContext) -> bool {
+        v == self.root
+    }
+
+    #[inline]
+    fn gather(&self, src_val: f32, _src_out_deg: u32) -> f32 {
+        src_val + 1.0
+    }
+
+    fn reduce(&self) -> Reduce {
+        Reduce::Min
+    }
+
+    #[inline]
+    fn apply(&self, reduced: f32, old: f32, _ctx: &ProgramContext) -> f32 {
+        reduced.min(old)
+    }
+
+    fn kernel(&self) -> KernelKind {
+        KernelKind::RelaxMin
+    }
+
+    fn gather_kind(&self) -> super::GatherKind {
+        super::GatherKind::PlusOne
+    }
+
+    fn default_max_iters(&self) -> usize {
+        10_000
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_on_star() {
+        let b = Bfs { root: 0 };
+        let ctx = ProgramContext { num_vertices: 4 };
+        let vals = vec![0.0f32, f32::INFINITY, f32::INFINITY, f32::INFINITY];
+        let out_deg = vec![3u32, 0, 0, 0];
+        for leaf in 1..4u32 {
+            assert_eq!(b.update(leaf, &[0], &vals, &out_deg, &ctx), 1.0);
+        }
+    }
+}

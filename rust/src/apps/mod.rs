@@ -1,0 +1,171 @@
+//! Vertex programs (paper §II-C.2, Algorithm 2).
+//!
+//! GraphMP's user API is a single pull-style `Update(v, SrcVertexArray)`
+//! function.  Every application in the paper (and all extras here) factors
+//! into three pieces the engine can exploit:
+//!
+//! * **gather** — per-in-edge contribution from the source's current value;
+//! * **reduce** — a commutative monoid (sum or min) over contributions;
+//! * **apply**  — combine the reduction with the vertex's old value.
+//!
+//! This factorization is exactly what lets the hot loop run as an AOT
+//! kernel: gather happens on the L3 side (it needs the CSR walk + degree
+//! array), reduce+apply are the L1/L2 artifact (`pr_shard`,
+//! `relaxmin_shard`, `segsum_shard`).
+
+pub mod bfs;
+pub mod pagerank;
+pub mod spmv;
+pub mod sssp;
+pub mod wcc;
+
+pub use bfs::Bfs;
+pub use pagerank::PageRank;
+pub use spmv::SpMv;
+pub use sssp::Sssp;
+pub use wcc::Wcc;
+
+use crate::graph::VertexId;
+
+/// The reduction monoid of a program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reduce {
+    Sum,
+    Min,
+}
+
+impl Reduce {
+    #[inline]
+    pub fn identity(&self) -> f32 {
+        match self {
+            Reduce::Sum => 0.0,
+            Reduce::Min => f32::INFINITY,
+        }
+    }
+
+    #[inline]
+    pub fn combine(&self, a: f32, b: f32) -> f32 {
+        match self {
+            Reduce::Sum => a + b,
+            Reduce::Min => a.min(b),
+        }
+    }
+}
+
+/// Which AOT artifact computes reduce+apply for this program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// `pr_shard`: new = 0.15/N + 0.85·Σ contrib.
+    PrAffine,
+    /// `relaxmin_shard`: new = min(old, min contrib).
+    RelaxMin,
+    /// `segsum_shard`: new = Σ contrib.
+    RawSum,
+}
+
+/// Shape of the gather function, used by the native backend to select a
+/// monomorphized inner loop (a virtual call per *edge* costs ~2× on the
+/// hot path — see EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GatherKind {
+    /// `src_val / out_deg(src)` with 0 for dangling sources (PageRank).
+    RankOverOutDeg,
+    /// `src_val + 1` (SSSP/BFS on unit weights).
+    PlusOne,
+    /// `src_val` (WCC, SpMV).
+    Identity,
+    /// Anything else: the engine falls back to calling `gather` per edge.
+    Custom,
+}
+
+/// Static context handed to programs.
+#[derive(Debug, Clone, Copy)]
+pub struct ProgramContext {
+    pub num_vertices: u64,
+}
+
+/// A vertex-centric program (see module docs for the factorization).
+pub trait VertexProgram: Sync {
+    fn name(&self) -> &'static str;
+
+    /// Initial value of vertex `v`.
+    fn init(&self, v: VertexId, ctx: &ProgramContext) -> f32;
+
+    /// Is `v` active before the first iteration?
+    fn initially_active(&self, v: VertexId, ctx: &ProgramContext) -> bool;
+
+    /// Contribution pulled along an in-edge from source `u`.
+    fn gather(&self, src_val: f32, src_out_deg: u32) -> f32;
+
+    fn reduce(&self) -> Reduce;
+
+    /// Combine reduction result with the vertex's previous value.
+    fn apply(&self, reduced: f32, old: f32, ctx: &ProgramContext) -> f32;
+
+    /// AOT artifact implementing reduce+apply.
+    fn kernel(&self) -> KernelKind;
+
+    /// Gather-shape hint for the native backend's monomorphized loops.
+    /// The default is correct for any program; overriding it is purely a
+    /// performance optimization and must match `gather`'s semantics
+    /// (checked by `engine::backend` tests).
+    fn gather_kind(&self) -> GatherKind {
+        GatherKind::Custom
+    }
+
+    /// Default iteration cap when the caller does not override it
+    /// (PageRank-style programs never fully converge under float equality).
+    fn default_max_iters(&self) -> usize {
+        100
+    }
+
+    /// Reference `Update` semantics (Algorithm 2): single-vertex update
+    /// from an in-neighbor slice.  Used by tests and the baselines.
+    fn update(
+        &self,
+        v: VertexId,
+        in_neighbors: &[VertexId],
+        src: &[f32],
+        out_deg: &[u32],
+        ctx: &ProgramContext,
+    ) -> f32 {
+        let r = self.reduce();
+        let mut acc = r.identity();
+        for &u in in_neighbors {
+            acc = r.combine(acc, self.gather(src[u as usize], out_deg[u as usize]));
+        }
+        self.apply(acc, src[v as usize], ctx)
+    }
+}
+
+/// Look up a program by CLI name.
+pub fn by_name(name: &str) -> anyhow::Result<Box<dyn VertexProgram>> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "pagerank" | "pr" => Box::new(PageRank::default()),
+        "sssp" => Box::new(Sssp::default()),
+        "wcc" => Box::new(Wcc),
+        "bfs" => Box::new(Bfs::default()),
+        "spmv" => Box::new(SpMv::default()),
+        other => anyhow::bail!("unknown app {other:?} (pagerank|sssp|wcc|bfs|spmv)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduce_monoids() {
+        assert_eq!(Reduce::Sum.combine(Reduce::Sum.identity(), 3.0), 3.0);
+        assert_eq!(Reduce::Min.combine(Reduce::Min.identity(), 3.0), 3.0);
+        assert_eq!(Reduce::Min.combine(2.0, 3.0), 2.0);
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        for n in ["pagerank", "pr", "sssp", "wcc", "bfs", "spmv"] {
+            assert!(by_name(n).is_ok(), "{n}");
+        }
+        assert!(by_name("nope").is_err());
+    }
+}

@@ -1,0 +1,118 @@
+//! PageRank (Algorithm 2, `PR_Update`):
+//!
+//! ```text
+//! s = Σ_{u ∈ Γin(v)} src[u] / out_deg(u)
+//! new = 0.15 / |V| + 0.85 · s
+//! ```
+//!
+//! Dangling vertices (out-degree 0) contribute nothing, matching the paper's
+//! formulation (no dangling-mass redistribution).
+
+use super::{KernelKind, ProgramContext, Reduce, VertexProgram};
+use crate::graph::VertexId;
+
+#[derive(Debug, Clone, Copy)]
+pub struct PageRank {
+    pub damping: f32,
+}
+
+impl Default for PageRank {
+    fn default() -> Self {
+        Self { damping: 0.85 }
+    }
+}
+
+impl VertexProgram for PageRank {
+    fn name(&self) -> &'static str {
+        "pagerank"
+    }
+
+    fn init(&self, _v: VertexId, ctx: &ProgramContext) -> f32 {
+        1.0 / ctx.num_vertices.max(1) as f32
+    }
+
+    fn initially_active(&self, _v: VertexId, _ctx: &ProgramContext) -> bool {
+        true
+    }
+
+    #[inline]
+    fn gather(&self, src_val: f32, src_out_deg: u32) -> f32 {
+        if src_out_deg == 0 {
+            0.0
+        } else {
+            src_val / src_out_deg as f32
+        }
+    }
+
+    fn reduce(&self) -> Reduce {
+        Reduce::Sum
+    }
+
+    #[inline]
+    fn apply(&self, reduced: f32, _old: f32, ctx: &ProgramContext) -> f32 {
+        (1.0 - self.damping) / ctx.num_vertices.max(1) as f32 + self.damping * reduced
+    }
+
+    fn kernel(&self) -> KernelKind {
+        KernelKind::PrAffine
+    }
+
+    fn gather_kind(&self) -> super::GatherKind {
+        super::GatherKind::RankOverOutDeg
+    }
+
+    fn default_max_iters(&self) -> usize {
+        // the paper runs 10 iterations for Fig 8-10 and 200 for Fig 5
+        10
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_cycle_fixpoint() {
+        // 0 <-> 1: symmetric, rank stays 0.5 each
+        let pr = PageRank::default();
+        let ctx = ProgramContext { num_vertices: 2 };
+        let src = vec![0.5f32, 0.5];
+        let out_deg = vec![1u32, 1];
+        let v0 = pr.update(0, &[1], &src, &out_deg, &ctx);
+        assert!((v0 - 0.5).abs() < 1e-6, "{v0}");
+    }
+
+    #[test]
+    fn sink_gets_teleport_only() {
+        let pr = PageRank::default();
+        let ctx = ProgramContext { num_vertices: 4 };
+        let src = vec![0.25f32; 4];
+        let out_deg = vec![1u32; 4];
+        let v = pr.update(2, &[], &src, &out_deg, &ctx);
+        assert!((v - 0.15 / 4.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn dangling_source_contributes_zero() {
+        let pr = PageRank::default();
+        assert_eq!(pr.gather(0.7, 0), 0.0);
+    }
+
+    #[test]
+    fn ranks_sum_near_one_on_strongly_connected() {
+        // directed 4-cycle, iterate the reference update to fixpoint
+        let pr = PageRank::default();
+        let ctx = ProgramContext { num_vertices: 4 };
+        let adj: Vec<Vec<u32>> = vec![vec![3], vec![0], vec![1], vec![2]];
+        let out_deg = vec![1u32; 4];
+        let mut vals = vec![0.25f32; 4];
+        for _ in 0..50 {
+            let next: Vec<f32> = (0..4)
+                .map(|v| pr.update(v, &adj[v as usize], &vals, &out_deg, &ctx))
+                .collect();
+            vals = next;
+        }
+        let sum: f32 = vals.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "sum {sum}");
+    }
+}

@@ -1,0 +1,89 @@
+//! SpMV — `y = Aᵀ x` over the adjacency matrix, one iteration per call.
+//!
+//! Extension app exposing the raw segmented-sum artifact: GraphMat (the
+//! paper's in-memory comparator) maps *all* programs to SpMV, so having the
+//! primitive as a first-class program lets the Fig 6/7 benches compare
+//! like-for-like.  `x` is the init vector (deterministic per `seed`).
+
+use super::{KernelKind, ProgramContext, Reduce, VertexProgram};
+use crate::graph::VertexId;
+use crate::util::hash::hash64_seeded;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SpMv {
+    pub seed: u64,
+}
+
+impl Default for SpMv {
+    fn default() -> Self {
+        Self { seed: 1 }
+    }
+}
+
+impl VertexProgram for SpMv {
+    fn name(&self) -> &'static str {
+        "spmv"
+    }
+
+    fn init(&self, v: VertexId, _ctx: &ProgramContext) -> f32 {
+        // deterministic pseudo-random x vector in [0,1)
+        (hash64_seeded(v as u64, self.seed) >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    fn initially_active(&self, _v: VertexId, _ctx: &ProgramContext) -> bool {
+        true
+    }
+
+    #[inline]
+    fn gather(&self, src_val: f32, _src_out_deg: u32) -> f32 {
+        src_val
+    }
+
+    fn reduce(&self) -> Reduce {
+        Reduce::Sum
+    }
+
+    #[inline]
+    fn apply(&self, reduced: f32, _old: f32, _ctx: &ProgramContext) -> f32 {
+        reduced
+    }
+
+    fn kernel(&self) -> KernelKind {
+        KernelKind::RawSum
+    }
+
+    fn gather_kind(&self) -> super::GatherKind {
+        super::GatherKind::Identity
+    }
+
+    fn default_max_iters(&self) -> usize {
+        1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_step_is_matrix_vector_product() {
+        let s = SpMv { seed: 3 };
+        let ctx = ProgramContext { num_vertices: 3 };
+        let x: Vec<f32> = (0..3).map(|v| s.init(v, &ctx)).collect();
+        let out_deg = vec![2u32, 1, 0];
+        // v=2 has in-neighbors {0, 1}
+        let y2 = s.update(2, &[0, 1], &x, &out_deg, &ctx);
+        assert!((y2 - (x[0] + x[1])).abs() < 1e-6);
+    }
+
+    #[test]
+    fn init_is_deterministic_and_bounded() {
+        let s = SpMv { seed: 9 };
+        let ctx = ProgramContext { num_vertices: 10 };
+        for v in 0..10u32 {
+            let a = s.init(v, &ctx);
+            assert_eq!(a, s.init(v, &ctx));
+            assert!((0.0..1.0).contains(&a));
+        }
+    }
+}

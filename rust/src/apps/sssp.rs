@@ -1,0 +1,107 @@
+//! Single-source shortest paths (Algorithm 2, `SSSP_Update`), unweighted
+//! edges (`val(u,v) = 1` per §II-A):
+//!
+//! ```text
+//! d   = min_{u ∈ Γin(v)} src[u] + 1
+//! new = min(d, old)
+//! ```
+
+use super::{KernelKind, ProgramContext, Reduce, VertexProgram};
+use crate::graph::VertexId;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Sssp {
+    pub source: VertexId,
+}
+
+impl Default for Sssp {
+    fn default() -> Self {
+        Self { source: 0 }
+    }
+}
+
+impl VertexProgram for Sssp {
+    fn name(&self) -> &'static str {
+        "sssp"
+    }
+
+    fn init(&self, v: VertexId, _ctx: &ProgramContext) -> f32 {
+        if v == self.source {
+            0.0
+        } else {
+            f32::INFINITY
+        }
+    }
+
+    fn initially_active(&self, v: VertexId, _ctx: &ProgramContext) -> bool {
+        v == self.source
+    }
+
+    #[inline]
+    fn gather(&self, src_val: f32, _src_out_deg: u32) -> f32 {
+        src_val + 1.0
+    }
+
+    fn reduce(&self) -> Reduce {
+        Reduce::Min
+    }
+
+    #[inline]
+    fn apply(&self, reduced: f32, old: f32, _ctx: &ProgramContext) -> f32 {
+        reduced.min(old)
+    }
+
+    fn kernel(&self) -> KernelKind {
+        KernelKind::RelaxMin
+    }
+
+    fn gather_kind(&self) -> super::GatherKind {
+        super::GatherKind::PlusOne
+    }
+
+    fn default_max_iters(&self) -> usize {
+        10_000 // runs to convergence; diameter-bounded
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relaxes_along_path() {
+        let s = Sssp { source: 0 };
+        let ctx = ProgramContext { num_vertices: 3 };
+        // path 0 -> 1 -> 2
+        let mut vals = vec![0.0f32, f32::INFINITY, f32::INFINITY];
+        let out_deg = vec![1u32, 1, 0];
+        for _ in 0..3 {
+            let next = vec![
+                s.update(0, &[], &vals, &out_deg, &ctx),
+                s.update(1, &[0], &vals, &out_deg, &ctx),
+                s.update(2, &[1], &vals, &out_deg, &ctx),
+            ];
+            vals = next;
+        }
+        assert_eq!(vals, vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn unreachable_stays_infinite() {
+        let s = Sssp { source: 0 };
+        let ctx = ProgramContext { num_vertices: 2 };
+        let vals = vec![0.0f32, f32::INFINITY];
+        let out_deg = vec![0u32, 0];
+        assert!(s.update(1, &[], &vals, &out_deg, &ctx).is_infinite());
+    }
+
+    #[test]
+    fn never_increases_distance() {
+        let s = Sssp::default();
+        let ctx = ProgramContext { num_vertices: 2 };
+        let vals = vec![5.0f32, 2.0];
+        let out_deg = vec![1u32, 1];
+        // in-neighbor offers 5+1=6 > old 2 => keep 2
+        assert_eq!(s.update(1, &[0], &vals, &out_deg, &ctx), 2.0);
+    }
+}

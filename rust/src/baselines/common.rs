@@ -1,0 +1,157 @@
+//! Shared pieces of the baseline engines: the `OocEngine` trait, run
+//! statistics, equal-width vertex chunking and raw value/edge file helpers.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::apps::VertexProgram;
+use crate::graph::{Edge, VertexId};
+use crate::storage::io::{self, IoSnapshot};
+
+/// Result of a baseline run.
+#[derive(Debug, Clone)]
+pub struct BaselineRun {
+    pub values: Vec<f32>,
+    pub iter_walls: Vec<Duration>,
+    pub load_wall: Duration,
+    pub total_wall: Duration,
+    /// I/O delta over the iterations only (excludes prepare).
+    pub io: IoSnapshot,
+    /// Per-iteration I/O deltas.
+    pub iter_io: Vec<IoSnapshot>,
+    pub memory_bytes: u64,
+    pub edges_processed: u64,
+}
+
+impl BaselineRun {
+    pub fn total_iter_wall(&self) -> Duration {
+        self.iter_walls.iter().sum()
+    }
+}
+
+/// A baseline graph engine: builds its own on-disk layout, then iterates.
+pub trait OocEngine {
+    fn name(&self) -> &'static str;
+
+    /// Build the on-disk layout from a raw edge list (the system's own
+    /// preprocessing; not measured as iteration I/O).
+    fn prepare(&mut self, edges: &[Edge], num_vertices: usize) -> Result<()>;
+
+    /// Run `app` for at most `max_iters` iterations (or to convergence).
+    fn run(&mut self, app: &dyn VertexProgram, max_iters: usize) -> Result<BaselineRun>;
+
+    /// Resident-memory estimate during `run` (Fig 11's metric).
+    fn memory_estimate(&self) -> u64;
+}
+
+/// Split `n` vertices into `k` equal-width chunks; returns k+1 boundaries.
+pub fn equal_chunks(n: usize, k: usize) -> Vec<VertexId> {
+    let k = k.clamp(1, n.max(1));
+    let mut bounds = Vec::with_capacity(k + 1);
+    for i in 0..=k {
+        bounds.push(((n as u64 * i as u64) / k as u64) as VertexId);
+    }
+    bounds.dedup();
+    if bounds.len() == 1 {
+        bounds.push(n as VertexId);
+    }
+    bounds
+}
+
+/// Which chunk a vertex falls into, given `equal_chunks` boundaries.
+pub fn chunk_of(bounds: &[VertexId], v: VertexId) -> usize {
+    match bounds.binary_search(&v) {
+        Ok(i) => i.min(bounds.len() - 2),
+        Err(i) => i - 1,
+    }
+}
+
+// ---- raw little-endian files (values + edge pairs) --------------------------
+
+/// Write an f32 value array as a raw LE file (C = 4 bytes/vertex).
+pub fn write_values(path: &Path, vals: &[f32]) -> Result<()> {
+    let mut buf = Vec::with_capacity(vals.len() * 4);
+    for &v in vals {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    io::write_file(path, &buf)
+}
+
+/// Read an f32 value array.
+pub fn read_values(path: &Path) -> Result<Vec<f32>> {
+    let buf = io::read_file(path)?;
+    anyhow::ensure!(buf.len() % 4 == 0, "value file not 4-aligned");
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Write raw (src,dst) pairs (D = 8 bytes/edge).
+pub fn write_edges(path: &Path, edges: &[Edge]) -> Result<()> {
+    let mut buf = Vec::with_capacity(edges.len() * 8);
+    for &(s, d) in edges {
+        buf.extend_from_slice(&s.to_le_bytes());
+        buf.extend_from_slice(&d.to_le_bytes());
+    }
+    io::write_file(path, &buf)
+}
+
+/// Read raw (src,dst) pairs.
+pub fn read_edges(path: &Path) -> Result<Vec<Edge>> {
+    let buf = io::read_file(path)?;
+    anyhow::ensure!(buf.len() % 8 == 0, "edge file not 8-aligned");
+    Ok(buf
+        .chunks_exact(8)
+        .map(|c| {
+            (
+                u32::from_le_bytes(c[0..4].try_into().unwrap()),
+                u32::from_le_bytes(c[4..8].try_into().unwrap()),
+            )
+        })
+        .collect())
+}
+
+/// Fresh working directory for an engine.
+pub fn fresh_dir(root: &Path) -> Result<PathBuf> {
+    let _ = std::fs::remove_dir_all(root);
+    std::fs::create_dir_all(root)?;
+    Ok(root.to_path_buf())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_and_are_balanced() {
+        let b = equal_chunks(100, 4);
+        assert_eq!(b, vec![0, 25, 50, 75, 100]);
+        assert_eq!(chunk_of(&b, 0), 0);
+        assert_eq!(chunk_of(&b, 24), 0);
+        assert_eq!(chunk_of(&b, 25), 1);
+        assert_eq!(chunk_of(&b, 99), 3);
+    }
+
+    #[test]
+    fn chunks_degenerate_cases() {
+        assert_eq!(equal_chunks(3, 10), vec![0, 1, 2, 3]);
+        assert_eq!(equal_chunks(5, 1), vec![0, 5]);
+    }
+
+    #[test]
+    fn value_and_edge_files_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("gmp_bcom_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let vp = dir.join("v.bin");
+        write_values(&vp, &[1.0, -2.5, f32::INFINITY]).unwrap();
+        let vals = read_values(&vp).unwrap();
+        assert_eq!(vals[0], 1.0);
+        assert!(vals[2].is_infinite());
+        let ep = dir.join("e.bin");
+        write_edges(&ep, &[(1, 2), (3, 4)]).unwrap();
+        assert_eq!(read_edges(&ep).unwrap(), vec![(1, 2), (3, 4)]);
+    }
+}

@@ -1,0 +1,184 @@
+//! In-memory baseline — the **GraphMat** role (Sundaram et al., VLDB'15) in
+//! the paper's Fig 6/7 comparison.
+//!
+//! GraphMat maps vertex programs to SpMV over an in-memory sparse matrix.
+//! Faithful aspects reproduced here:
+//!
+//! * a heavyweight **load phase** that materializes both edge directions
+//!   (in-CSR for the pull computation + out-CSR as GraphMat's CSC twin) —
+//!   this is why GraphMat needed 122 GB and 390 s loading Twitter while
+//!   GraphMP needed 7.3 GB and 30 s (Fig 6);
+//! * fast iterations (no disk I/O at all once loaded);
+//! * SpMV-style per-iteration full sweeps.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::apps::{ProgramContext, VertexProgram};
+use crate::baselines::common::{BaselineRun, OocEngine};
+use crate::graph::csr::{Csr, OutCsr};
+use crate::graph::{Degrees, Edge, VertexId};
+use crate::storage::io;
+
+#[derive(Default)]
+pub struct InMemEngine {
+    in_csr: Option<Csr>,
+    out_csr: Option<OutCsr>,
+    out_deg: Vec<u32>,
+    num_vertices: usize,
+    num_edges: u64,
+}
+
+impl InMemEngine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The faithful load phase: GraphMat ingests a *text* edge list (the
+    /// paper's 25 GB CSV for Twitter) — read through the accounted/throttled
+    /// I/O layer, integer-parsed line by line, then both CSR directions are
+    /// built.  This is what Fig 6 times; `prepare` (from an in-memory vec)
+    /// remains for benches where load cost is not the subject.
+    pub fn prepare_from_text(&mut self, path: &std::path::Path, num_vertices: usize) -> Result<()> {
+        let bytes = io::read_file(path)?;
+        let text = std::str::from_utf8(&bytes)?;
+        let mut edges: Vec<Edge> = Vec::new();
+        for line in text.lines() {
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            let mut it = t.split_whitespace();
+            let (Some(a), Some(b)) = (it.next(), it.next()) else {
+                anyhow::bail!("bad edge line: {t:?}");
+            };
+            edges.push((a.parse()?, b.parse()?));
+        }
+        let degrees = Degrees::from_edges(num_vertices, edges.iter().copied());
+        self.out_deg = degrees.out_deg;
+        self.in_csr = Some(Csr::from_edges(0, num_vertices as VertexId, &edges));
+        self.out_csr = Some(OutCsr::from_edges(num_vertices, &edges));
+        self.num_vertices = num_vertices;
+        self.num_edges = edges.len() as u64;
+        Ok(())
+    }
+}
+
+impl OocEngine for InMemEngine {
+    fn name(&self) -> &'static str {
+        "inmem(graphmat)"
+    }
+
+    fn prepare(&mut self, edges: &[Edge], num_vertices: usize) -> Result<()> {
+        // the load phase GraphMat pays on every application start: build
+        // both directions + degree arrays
+        let degrees = Degrees::from_edges(num_vertices, edges.iter().copied());
+        self.out_deg = degrees.out_deg;
+        self.in_csr = Some(Csr::from_edges(0, num_vertices as VertexId, edges));
+        self.out_csr = Some(OutCsr::from_edges(num_vertices, edges));
+        self.num_vertices = num_vertices;
+        self.num_edges = edges.len() as u64;
+        // account the edge-list ingestion as read I/O (GraphMat reads the
+        // raw graph file once)
+        io::account_virtual_read(8 * edges.len() as u64);
+        Ok(())
+    }
+
+    fn run(&mut self, app: &dyn VertexProgram, max_iters: usize) -> Result<BaselineRun> {
+        let n = self.num_vertices;
+        let csr = self.in_csr.as_ref().expect("prepare first");
+        let ctx = ProgramContext { num_vertices: n as u64 };
+        let t0 = Instant::now();
+        let io_start = io::snapshot();
+
+        let mut vals: Vec<f32> = (0..n).map(|v| app.init(v as VertexId, &ctx)).collect();
+        let mut next = vals.clone();
+        let mut iter_walls = Vec::new();
+        let mut iter_io = Vec::new();
+        let mut edges_processed = 0u64;
+        let reduce = app.reduce();
+
+        for _iter in 0..max_iters {
+            let t_iter = Instant::now();
+            let io_before = io::snapshot();
+            let mut changed = false;
+            for v in 0..n {
+                let s = csr.row_ptr[v] as usize;
+                let e = csr.row_ptr[v + 1] as usize;
+                let mut acc = reduce.identity();
+                for &u in &csr.col[s..e] {
+                    acc = reduce.combine(acc, app.gather(vals[u as usize], self.out_deg[u as usize]));
+                }
+                let old = vals[v];
+                let nv = app.apply(acc, old, &ctx);
+                if !(nv.is_infinite() && old.is_infinite()) && nv != old {
+                    changed = true;
+                }
+                next[v] = nv;
+            }
+            edges_processed += self.num_edges;
+            std::mem::swap(&mut vals, &mut next);
+            iter_walls.push(t_iter.elapsed());
+            iter_io.push(io::snapshot().since(&io_before));
+            if !changed {
+                break;
+            }
+        }
+
+        Ok(BaselineRun {
+            values: vals,
+            iter_walls,
+            load_wall: std::time::Duration::ZERO, // loading happened in prepare
+            total_wall: t0.elapsed(),
+            io: io::snapshot().since(&io_start),
+            iter_io,
+            memory_bytes: self.memory_estimate(),
+            edges_processed,
+        })
+    }
+
+    /// The whole graph in memory, both directions, plus working arrays:
+    /// GraphMat's defining cost.
+    fn memory_estimate(&self) -> u64 {
+        let v = self.num_vertices as u64;
+        let e = self.num_edges;
+        // in-CSR + out-CSR (cols u32 + row_ptrs) + degrees + two value arrays
+        4 * e + 4 * v          // in-CSR
+            + 4 * e + 8 * v    // out-CSR
+            + 8 * v            // degrees
+            + 8 * v            // src+dst values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::PageRank;
+    use crate::graph::generator;
+
+    #[test]
+    fn inmem_pagerank_is_probability_distribution() {
+        // strongly-connected ring + chords so PR sums to 1
+        let n = 64u32;
+        let mut edges: Vec<Edge> = (0..n).map(|v| (v, (v + 1) % n)).collect();
+        edges.extend((0..n).map(|v| (v, (v + 7) % n)));
+        let mut eng = InMemEngine::new();
+        eng.prepare(&edges, n as usize).unwrap();
+        let run = eng.run(&PageRank::default(), 60).unwrap();
+        let sum: f32 = run.values.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3, "sum {sum}");
+        // no disk I/O during iterations
+        assert_eq!(run.io.bytes_read, 0);
+        assert_eq!(run.io.bytes_written, 0);
+    }
+
+    #[test]
+    fn memory_far_exceeds_sem_engines() {
+        let edges = generator::erdos_renyi(1000, 20_000, 5);
+        let mut eng = InMemEngine::new();
+        eng.prepare(&edges, 1000).unwrap();
+        // ≥ both edge directions
+        assert!(eng.memory_estimate() > 2 * 4 * 20_000);
+    }
+}

@@ -1,0 +1,56 @@
+//! Baseline engines: working reimplementations of the computation models
+//! GraphMP is evaluated against (paper §III, Table II).
+//!
+//! | model | system    | module    | read/iter              | write/iter        |
+//! |-------|-----------|-----------|------------------------|-------------------|
+//! | PSW   | GraphChi  | [`psw`]   | C·V + 2(C+D)·E         | C·V + 2(C+D)·E    |
+//! | ESG   | X-Stream  | [`esg`]   | C·V + (C+D)·E          | C·V + C·E         |
+//! | VSP   | VENUS     | [`vsp`]   | C(1+δ)·V + D·E         | C·V               |
+//! | DSW   | GridGraph | [`dsw`]   | C·√P·V + D·E           | C·√P·V            |
+//! | —     | GraphMat  | [`inmem`] | load once              | —                 |
+//!
+//! Each engine builds its own on-disk layout from a raw edge list, then
+//! iterates doing **real file I/O** for the dominant streams; fine-grained
+//! positioned accesses that a real system would serve from sliding windows
+//! are accounted through `storage::io::account_virtual_*` so the measured
+//! byte counters still match the model columns above (validated by
+//! `benches/table2_iomodel.rs`).  All engines converge to the same fixpoints
+//! as the VSW engine (see `tests/baseline_convergence.rs`).
+
+pub mod common;
+pub mod dsw;
+pub mod esg;
+pub mod inmem;
+pub mod psw;
+pub mod vsp;
+
+pub use common::{BaselineRun, OocEngine};
+pub use dsw::DswEngine;
+pub use esg::EsgEngine;
+pub use inmem::InMemEngine;
+pub use psw::PswEngine;
+pub use vsp::VspEngine;
+
+/// Construct a baseline by CLI name, rooted at `dir`.
+pub fn by_name(name: &str, dir: std::path::PathBuf) -> anyhow::Result<Box<dyn OocEngine>> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "psw" | "graphchi" => Box::new(PswEngine::new(dir)),
+        "esg" | "x-stream" | "xstream" => Box::new(EsgEngine::new(dir)),
+        "dsw" | "gridgraph" => Box::new(DswEngine::new(dir)),
+        "vsp" | "venus" => Box::new(VspEngine::new(dir)),
+        "inmem" | "graphmat" => Box::new(InMemEngine::new()),
+        other => anyhow::bail!("unknown baseline {other:?} (psw|esg|dsw|vsp|inmem)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn by_name_resolves_all() {
+        let dir = std::env::temp_dir();
+        for n in ["psw", "graphchi", "esg", "dsw", "vsp", "inmem", "graphmat"] {
+            assert!(super::by_name(n, dir.clone()).is_ok(), "{n}");
+        }
+        assert!(super::by_name("zzz", dir).is_err());
+    }
+}

@@ -1,0 +1,204 @@
+//! Bloom filters for selective scheduling (paper §II-D.1).
+//!
+//! Each shard gets a filter over the **source** vertices of its edges.  When
+//! the active-vertex ratio drops below the threshold (paper: 1/1000), the
+//! engine probes each shard's filter with the active set; a shard whose
+//! filter contains no active vertex is provably inactive (no false
+//! negatives) and is skipped — no disk read, no compute.
+
+use anyhow::Result;
+
+use crate::util::bitset::BitSet;
+use crate::util::hash::bloom_indexes;
+
+/// Maximum number of probe hashes supported.
+pub const MAX_K: u32 = 16;
+
+/// A standard Bloom filter keyed by `u64` (vertex ids widen losslessly).
+#[derive(Debug, Clone)]
+pub struct BloomFilter {
+    bits: BitSet,
+    k: u32,
+    items: u64,
+}
+
+impl BloomFilter {
+    /// Filter with `m_bits` bits and `k` hash probes.
+    pub fn new(m_bits: usize, k: u32) -> Self {
+        assert!(m_bits > 0 && k > 0 && k <= MAX_K);
+        Self { bits: BitSet::new(m_bits), k, items: 0 }
+    }
+
+    /// Size a filter for `n` expected items at `fpr` target false-positive
+    /// rate: `m = -n ln p / (ln 2)^2`, `k = (m/n) ln 2`.
+    pub fn with_capacity(n: usize, fpr: f64) -> Self {
+        let n = n.max(1) as f64;
+        let fpr = fpr.clamp(1e-9, 0.5);
+        let m = (-(n * fpr.ln()) / (std::f64::consts::LN_2 * std::f64::consts::LN_2)).ceil();
+        let k = ((m / n) * std::f64::consts::LN_2).round().clamp(1.0, MAX_K as f64);
+        Self::new((m as usize).max(64), k as u32)
+    }
+
+    pub fn insert(&mut self, key: u64) {
+        let mut idx = [0u64; MAX_K as usize];
+        bloom_indexes(key, self.k, self.bits.len() as u64, &mut idx);
+        for &i in &idx[..self.k as usize] {
+            self.bits.set(i as usize);
+        }
+        self.items += 1;
+    }
+
+    /// May return a false positive; never a false negative.
+    pub fn contains(&self, key: u64) -> bool {
+        let mut idx = [0u64; MAX_K as usize];
+        bloom_indexes(key, self.k, self.bits.len() as u64, &mut idx);
+        idx[..self.k as usize].iter().all(|&i| self.bits.get(i as usize))
+    }
+
+    /// True if any key in `keys` may be present (the shard-activity probe).
+    pub fn contains_any<I: IntoIterator<Item = u64>>(&self, keys: I) -> bool {
+        keys.into_iter().any(|k| self.contains(k))
+    }
+
+    /// Empirical bits-set ratio (diagnostics / load factor).
+    pub fn fill_ratio(&self) -> f64 {
+        self.bits.count_ones() as f64 / self.bits.len() as f64
+    }
+
+    /// Theoretical false-positive rate at the current fill.
+    pub fn est_fpr(&self) -> f64 {
+        self.fill_ratio().powi(self.k as i32)
+    }
+
+    pub fn num_bits(&self) -> usize {
+        self.bits.len()
+    }
+
+    pub fn num_hashes(&self) -> u32 {
+        self.k
+    }
+
+    pub fn items(&self) -> u64 {
+        self.items
+    }
+
+    /// Memory footprint of the bit array in bytes.
+    pub fn size_bytes(&self) -> usize {
+        self.bits.words().len() * 8
+    }
+
+    // ---- serialization (bloom_XXXX.gmb payload) ----------------------------
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(24 + self.bits.words().len() * 8);
+        out.extend_from_slice(&(self.bits.len() as u64).to_le_bytes());
+        out.extend_from_slice(&self.k.to_le_bytes());
+        out.extend_from_slice(&(self.items).to_le_bytes());
+        for w in self.bits.words() {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<Self> {
+        anyhow::ensure!(buf.len() >= 20, "bloom header truncated");
+        let m = u64::from_le_bytes(buf[0..8].try_into().unwrap()) as usize;
+        let k = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+        let items = u64::from_le_bytes(buf[12..20].try_into().unwrap());
+        anyhow::ensure!(k >= 1 && k <= MAX_K, "bloom k out of range");
+        let nwords = m.div_ceil(64);
+        anyhow::ensure!(buf.len() == 20 + nwords * 8, "bloom payload size mismatch");
+        let words = buf[20..]
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Self { bits: BitSet::from_words(words, m), k, items })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn no_false_negatives() {
+        let mut f = BloomFilter::with_capacity(10_000, 0.01);
+        for key in 0..10_000u64 {
+            f.insert(key * 7919);
+        }
+        for key in 0..10_000u64 {
+            assert!(f.contains(key * 7919));
+        }
+    }
+
+    #[test]
+    fn fpr_near_target() {
+        let mut f = BloomFilter::with_capacity(10_000, 0.01);
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let keys: Vec<u64> = (0..10_000).map(|_| rng.next_u64()).collect();
+        for &k in &keys {
+            f.insert(k);
+        }
+        // probe disjoint keys
+        let fp = (0..100_000)
+            .filter(|_| f.contains(rng.next_u64() | (1 << 63)))
+            .count();
+        let rate = fp as f64 / 100_000.0;
+        assert!(rate < 0.05, "fpr {rate} too high for 1% target");
+    }
+
+    #[test]
+    fn with_capacity_sizing() {
+        let f = BloomFilter::with_capacity(1000, 0.01);
+        // ~9.6 bits/item, ~7 hashes for 1% fpr
+        assert!((8000..12000).contains(&f.num_bits()), "{}", f.num_bits());
+        assert!((6..=8).contains(&f.num_hashes()));
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let mut f = BloomFilter::with_capacity(500, 0.02);
+        for k in 0..500u64 {
+            f.insert(k * 31);
+        }
+        let bytes = f.to_bytes();
+        let g = BloomFilter::from_bytes(&bytes).unwrap();
+        assert_eq!(g.num_bits(), f.num_bits());
+        assert_eq!(g.num_hashes(), f.num_hashes());
+        assert_eq!(g.items(), 500);
+        for k in 0..500u64 {
+            assert!(g.contains(k * 31));
+        }
+    }
+
+    #[test]
+    fn from_bytes_rejects_corrupt() {
+        let f = BloomFilter::with_capacity(100, 0.01);
+        let bytes = f.to_bytes();
+        assert!(BloomFilter::from_bytes(&bytes[..10]).is_err());
+        let mut bad = bytes.clone();
+        bad[8] = 99; // k out of range
+        assert!(BloomFilter::from_bytes(&bad).is_err());
+        let mut short = bytes;
+        short.truncate(short.len() - 8);
+        assert!(BloomFilter::from_bytes(&short).is_err());
+    }
+
+    #[test]
+    fn prop_inserted_always_contained() {
+        prop::check(0xB100, 30, |g| {
+            let n = g.usize_in(1, 400);
+            let mut f = BloomFilter::with_capacity(n, 0.01);
+            let keys: Vec<u64> = (0..n).map(|_| g.u64()).collect();
+            for &k in &keys {
+                f.insert(k);
+            }
+            for &k in &keys {
+                assert!(f.contains(k), "false negative for {k}");
+            }
+            assert!(f.contains_any(keys.iter().copied()));
+        });
+    }
+}

@@ -1,0 +1,25 @@
+//! Compressed edge cache (paper §II-D.2).
+//!
+//! Spare RAM caches shards so re-iterations skip disk.  The paper's four
+//! modes map onto [`codec::Codec`]:
+//!
+//! | paper  | here          | notes                                        |
+//! |--------|---------------|----------------------------------------------|
+//! | mode-1 | `Codec::None` | uncompressed                                  |
+//! | mode-2 | `Codec::SnapLite` | hand-rolled LZ77 byte codec (no snap crate) |
+//! | mode-3 | `Codec::Zlib1`| flate2 level 1                                |
+//! | mode-4 | `Codec::Zlib3`| flate2 level 3                                |
+//! | extra  | `Codec::Zstd1`| zstd level 1 (extension, ablation-only)       |
+//! | extra  | `Codec::DeltaVarint` | domain codec over CSR (extension)      |
+//!
+//! [`ShardCache`] enforces a byte budget with sharded locking and CLOCK
+//! eviction; `get` decompresses on hit, `insert` compresses on store.
+
+pub mod codec;
+pub mod deltavarint;
+pub mod snaplite;
+
+mod store;
+
+pub use codec::{CacheMode, Codec};
+pub use store::{CacheStats, ShardCache};

@@ -1,0 +1,122 @@
+//! Minimal CLI argument parser (the offline crate set has no clap).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! args and generated usage text.  Just enough for the `graphmp` binary and
+//! the bench binaries' `--quick`/`--dataset` options.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed arguments: flags + positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    /// `bool_flags` lists flags that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, bool_flags: &[&str]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(flag) = a.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&flag) {
+                    args.bools.push(flag.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .with_context(|| format!("--{flag} expects a value"))?;
+                    args.flags.insert(flag.to_string(), v);
+                }
+            } else if a.starts_with('-') && a.len() > 1 {
+                bail!("short flags not supported: {a}");
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.get(key).with_context(|| format!("missing required --{key}"))
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
+        }
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.bools.iter().any(|b| b == flag)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let a = Args::parse(
+            v(&["run", "--app", "pagerank", "--iters=10", "--quick"]),
+            &["quick"],
+        )
+        .unwrap();
+        assert_eq!(a.positional(), &["run"]);
+        assert_eq!(a.get("app"), Some("pagerank"));
+        assert_eq!(a.get_usize("iters", 0).unwrap(), 10);
+        assert!(a.has("quick"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(v(&["--app"]), &[]).is_err());
+    }
+
+    #[test]
+    fn req_and_defaults() {
+        let a = Args::parse(v(&["--x", "1"]), &[]).unwrap();
+        assert!(a.req("x").is_ok());
+        assert!(a.req("y").is_err());
+        assert_eq!(a.get_or("z", "d"), "d");
+        assert_eq!(a.get_f64("x", 0.0).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = Args::parse(v(&["--n", "abc"]), &[]).unwrap();
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

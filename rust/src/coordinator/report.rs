@@ -1,0 +1,59 @@
+//! Report output: append bench tables to a markdown log so EXPERIMENTS.md
+//! can cite machine-generated numbers, and format helpers shared by the
+//! bench binaries.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::bench::Table;
+
+/// Append a rendered table (with a timestamp header) to `path`.
+pub fn append_markdown(path: &Path, table: &Table) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    let epoch = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    writeln!(f, "\n<!-- generated at unix:{epoch} -->")?;
+    f.write_all(table.to_markdown().as_bytes())?;
+    Ok(())
+}
+
+/// Standard results file written by bench targets.
+pub fn results_path() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results.md")
+}
+
+/// Format a speedup ratio the way Table III prints them.
+pub fn ratio(base: f64, other: f64) -> String {
+    if base <= 0.0 {
+        "-".into()
+    } else {
+        format!("{:.1}", other / base)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_formats() {
+        assert_eq!(ratio(2.0, 25.0), "12.5");
+        assert_eq!(ratio(0.0, 10.0), "-");
+    }
+
+    #[test]
+    fn append_markdown_writes() {
+        let p = std::env::temp_dir().join(format!("gmp_report_{}.md", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        let mut t = Table::new("t", &["a"]);
+        t.row(&["1".into()]);
+        append_markdown(&p, &t).unwrap();
+        append_markdown(&p, &t).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.matches("### t").count(), 2);
+    }
+}

@@ -1,0 +1,102 @@
+//! `SharedSlice`: disjoint-interval concurrent writes without locks.
+//!
+//! The lock-free property of §II-C.3: "GraphMP only uses one CPU core to
+//! process a shard for updating its associated vertices … DstVertexArray[v]
+//! is computed and written by a single CPU core", so no atomics are needed.
+//! This wrapper encodes that argument: writers may only touch the interval
+//! their shard owns; intervals are disjoint by construction
+//! (`Property::intervals` partitions the vertex space).
+
+use std::cell::UnsafeCell;
+
+/// A slice writable from multiple threads under the caller-guaranteed
+/// invariant that no two threads write overlapping index ranges and no one
+/// reads a range while it may be written.
+pub struct SharedSlice<'a, T> {
+    data: &'a [UnsafeCell<T>],
+}
+
+unsafe impl<T: Send + Sync> Sync for SharedSlice<'_, T> {}
+
+impl<'a, T: Copy> SharedSlice<'a, T> {
+    /// Wrap a mutable slice for the duration of a parallel phase.
+    pub fn new(data: &'a mut [T]) -> Self {
+        // SAFETY: &mut guarantees exclusivity; UnsafeCell<T> has the same
+        // layout as T, so the cast is valid.
+        let ptr = data.as_mut_ptr() as *const UnsafeCell<T>;
+        Self { data: unsafe { std::slice::from_raw_parts(ptr, data.len()) } }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Write `value` at `i`.
+    ///
+    /// # Safety
+    /// The caller must guarantee `i` is in an index range owned exclusively
+    /// by the current thread for this phase (the shard's vertex interval).
+    #[inline]
+    pub unsafe fn write(&self, i: usize, value: T) {
+        *self.data[i].get() = value;
+    }
+
+    /// Copy `values` into `[start, start+len)`.
+    ///
+    /// # Safety
+    /// Same exclusivity contract as [`Self::write`].
+    #[inline]
+    pub unsafe fn write_range(&self, start: usize, values: &[T]) {
+        for (k, &v) in values.iter().enumerate() {
+            *self.data[start + k].get() = v;
+        }
+    }
+
+    /// Read the value at `i`.
+    ///
+    /// # Safety
+    /// No concurrent writer may own `i` during this phase.
+    #[inline]
+    pub unsafe fn read(&self, i: usize) -> T {
+        *self.data[i].get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::threadpool::parallel_for;
+
+    #[test]
+    fn disjoint_parallel_writes() {
+        let n = 10_000;
+        let mut data = vec![0u32; n];
+        {
+            let shared = SharedSlice::new(&mut data);
+            // 10 "shards" of 1000 vertices each
+            parallel_for(4, 10, |shard| {
+                let lo = shard * 1000;
+                for i in 0..1000 {
+                    unsafe { shared.write(lo + i, (shard * 1000 + i) as u32) };
+                }
+            });
+        }
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u32);
+        }
+    }
+
+    #[test]
+    fn write_range_copies() {
+        let mut data = vec![0f32; 8];
+        {
+            let shared = SharedSlice::new(&mut data);
+            unsafe { shared.write_range(2, &[1.0, 2.0, 3.0]) };
+        }
+        assert_eq!(data, vec![0.0, 0.0, 1.0, 2.0, 3.0, 0.0, 0.0, 0.0]);
+    }
+}

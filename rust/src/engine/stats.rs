@@ -1,0 +1,103 @@
+//! Per-iteration and per-run statistics — the raw material for every figure
+//! in the paper's evaluation (execution time per iteration, activation
+//! ratio, I/O volume, memory, cache behaviour).
+
+use std::time::Duration;
+
+use crate::storage::io::IoSnapshot;
+
+/// One iteration of Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct IterStats {
+    pub iter: usize,
+    pub wall: Duration,
+    pub shards_processed: usize,
+    pub shards_skipped: usize,
+    pub active_vertices: u64,
+    /// |active| / |V| at the *end* of this iteration.
+    pub active_ratio: f64,
+    /// I/O delta over this iteration.
+    pub io: IoSnapshot,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// PJRT kernel invocations (xla backend only).
+    pub kernel_calls: u64,
+    /// Was selective scheduling consulted this iteration?
+    pub selective_enabled: bool,
+}
+
+/// Whole-run statistics.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub iters: Vec<IterStats>,
+    pub total_wall: Duration,
+    pub load_wall: Duration,
+    /// Estimated resident memory high-water (bytes) — Fig 11's metric.
+    pub memory_bytes: u64,
+    pub edges_processed: u64,
+}
+
+impl RunStats {
+    pub fn num_iters(&self) -> usize {
+        self.iters.len()
+    }
+
+    /// Edges/second over the whole run (paper Table I's unit).
+    pub fn edges_per_sec(&self) -> f64 {
+        let s = self.total_wall.as_secs_f64();
+        if s <= 0.0 {
+            0.0
+        } else {
+            self.edges_processed as f64 / s
+        }
+    }
+
+    pub fn total_bytes_read(&self) -> u64 {
+        self.iters.iter().map(|i| i.io.bytes_read).sum()
+    }
+
+    pub fn total_bytes_written(&self) -> u64 {
+        self.iters.iter().map(|i| i.io.bytes_written).sum()
+    }
+}
+
+/// Final values + statistics.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub values: Vec<f32>,
+    pub stats: RunStats,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edges_per_sec_math() {
+        let stats = RunStats {
+            total_wall: Duration::from_secs(2),
+            edges_processed: 4_000_000,
+            ..Default::default()
+        };
+        assert!((stats.edges_per_sec() - 2_000_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn io_totals_sum_over_iters() {
+        let mk = |br: u64| IterStats {
+            iter: 0,
+            wall: Duration::ZERO,
+            shards_processed: 0,
+            shards_skipped: 0,
+            active_vertices: 0,
+            active_ratio: 0.0,
+            io: IoSnapshot { bytes_read: br, ..Default::default() },
+            cache_hits: 0,
+            cache_misses: 0,
+            kernel_calls: 0,
+            selective_enabled: false,
+        };
+        let stats = RunStats { iters: vec![mk(10), mk(32)], ..Default::default() };
+        assert_eq!(stats.total_bytes_read(), 42);
+    }
+}

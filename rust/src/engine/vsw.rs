@@ -1,0 +1,479 @@
+//! The VSW engine — Algorithm 1 of the paper.
+//!
+//! ```text
+//! init(src_vertex_array, dst_vertex_array)
+//! while active_vertex_ratio > 0:
+//!     parallel for shard in all_shards:                # thread pool
+//!         if ratio > 1/1000 or bloom[shard].has(active):
+//!             load_to_memory(shard)                    # cache first
+//!             for v in shard.vertices:
+//!                 dst[v] = update(v, src)              # backend
+//!     active = vertices that changed
+//!     swap(src, dst)
+//! ```
+//!
+//! Everything the paper measures hangs off this loop: per-iteration wall
+//! time, activation ratio, shard skips (Fig 5), I/O bytes (Table II), cache
+//! hits (§II-D.2) and memory (Fig 11).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::apps::{ProgramContext, VertexProgram};
+use crate::bloom::BloomFilter;
+use crate::cache::{Codec, ShardCache};
+use crate::engine::backend::Backend;
+use crate::engine::shared::SharedSlice;
+use crate::engine::stats::{IterStats, RunResult, RunStats};
+use crate::graph::VertexId;
+use crate::sharding::preprocess::load_bloom;
+use crate::storage::property::Property;
+use crate::storage::vertexinfo::VertexInfo;
+use crate::storage::{io, shardfile, DatasetDir};
+use crate::util::threadpool::{default_threads, ThreadPool};
+
+/// Engine configuration (defaults mirror the paper's settings).
+#[derive(Clone)]
+pub struct EngineConfig {
+    pub threads: usize,
+    /// Hard iteration cap; `0` = use the app's default.
+    pub max_iters: usize,
+    /// Enable Bloom-filter selective scheduling (§II-D.1).
+    pub selective: bool,
+    /// Activation-ratio threshold below which selective scheduling engages
+    /// (the paper uses 0.001).
+    pub selective_threshold: f64,
+    /// Cache codec (paper modes 1-4 + extensions).
+    pub cache_codec: Codec,
+    /// Cache budget in bytes; `0` disables the cache entirely (GraphMP-NC).
+    pub cache_budget: usize,
+    /// |new - old| > tol ⇒ vertex is active. 0.0 = exact equality (paper).
+    pub convergence_tol: f32,
+    pub backend: Backend,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            threads: default_threads(),
+            max_iters: 0,
+            selective: true,
+            selective_threshold: 0.001,
+            cache_codec: Codec::SnapLite,
+            cache_budget: usize::MAX,
+            convergence_tol: 0.0,
+            backend: Backend::Native,
+        }
+    }
+}
+
+/// An opened dataset ready to run programs (GraphMP's steady state: all
+/// vertices + metadata in memory, edges on disk/cache).
+pub struct VswEngine {
+    dir: DatasetDir,
+    pub property: Property,
+    pub vertex_info: VertexInfo,
+    blooms: Vec<BloomFilter>,
+    cache: ShardCache,
+    pool: ThreadPool,
+    cfg: EngineConfig,
+    pub load_wall: std::time::Duration,
+}
+
+impl VswEngine {
+    /// Open a preprocessed dataset: load property, vertex info and Bloom
+    /// filters (the paper's "data loading" phase; shards stay on disk but
+    /// are opportunistically pre-cached when a budget exists).
+    pub fn open(dir: DatasetDir, cfg: EngineConfig) -> Result<Self> {
+        let t0 = Instant::now();
+        let property = Property::load(&dir.property_path()).context("property")?;
+        let vertex_info = VertexInfo::load(&dir.vertexinfo_path()).context("vertexinfo")?;
+        anyhow::ensure!(
+            vertex_info.num_vertices() as u64 == property.info.num_vertices,
+            "vertexinfo/property disagree"
+        );
+        let p = property.num_shards();
+        let mut blooms = Vec::with_capacity(p);
+        for i in 0..p {
+            blooms.push(load_bloom(&dir, i).with_context(|| format!("bloom {i}"))?);
+        }
+        let cache = ShardCache::new(p, cfg.cache_codec, cfg.cache_budget.max(1));
+        let cache_enabled = cfg.cache_budget > 0;
+        // warm the cache during loading, like the paper's loading phase
+        // ("places processed shards in the cache if possible")
+        if cache_enabled {
+            for i in 0..p {
+                let bytes = io::read_file(&dir.shard_path(i))?;
+                cache.insert(i, &bytes)?;
+            }
+        }
+        let pool = ThreadPool::new(cfg.threads.max(1));
+        Ok(Self { dir, property, vertex_info, blooms, cache, pool, cfg, load_wall: t0.elapsed() })
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    pub fn cache(&self) -> &ShardCache {
+        &self.cache
+    }
+
+    /// Estimated resident memory (Fig 11's metric): vertex arrays, degree
+    /// arrays, Bloom filters, cache contents, plus per-thread shard
+    /// buffers.
+    pub fn memory_estimate(&self) -> u64 {
+        let v = self.property.info.num_vertices;
+        let vertex_arrays = 2 * 4 * v; // src + dst f32
+        let degree_arrays = 2 * 4 * v; // in + out u32
+        let blooms: u64 = self.blooms.iter().map(|b| b.size_bytes() as u64).sum();
+        let cache = self.cache.used_bytes() as u64;
+        let shard_buffers = (self.cfg.threads as u64)
+            * self
+                .property
+                .intervals
+                .windows(2)
+                .map(|w| (w[1] - w[0]) as u64 * 16)
+                .max()
+                .unwrap_or(0);
+        vertex_arrays + degree_arrays + blooms + cache + shard_buffers
+    }
+
+    /// Run `app` to convergence (or the iteration cap): Algorithm 1.
+    pub fn run(&self, app: &dyn VertexProgram) -> Result<RunResult> {
+        let t_run = Instant::now();
+        let n = self.property.info.num_vertices as usize;
+        let p = self.property.num_shards();
+        let ctx = ProgramContext { num_vertices: n as u64 };
+        let max_iters = if self.cfg.max_iters > 0 {
+            self.cfg.max_iters
+        } else {
+            app.default_max_iters()
+        };
+
+        // init(src, dst) — line 1
+        let mut src: Vec<f32> = (0..n).map(|v| app.init(v as VertexId, &ctx)).collect();
+        let mut dst = src.clone();
+        let mut active: Vec<VertexId> = (0..n as VertexId)
+            .filter(|&v| app.initially_active(v, &ctx))
+            .collect();
+        let mut active_ratio = active.len() as f64 / n.max(1) as f64;
+
+        let mut stats = RunStats {
+            load_wall: self.load_wall,
+            ..Default::default()
+        };
+        let mut edges_processed = 0u64;
+        let out_deg = &self.vertex_info.degrees.out_deg;
+
+        for iter in 0..max_iters {
+            if active.is_empty() {
+                break; // line 2: ratio == 0
+            }
+            let t_iter = Instant::now();
+            let io_before = io::snapshot();
+            let hits_before = self.cache.stats.hits.load(Ordering::Relaxed);
+            let miss_before = self.cache.stats.misses.load(Ordering::Relaxed);
+            let kernels_before = match &self.cfg.backend {
+                Backend::Xla(rt) => rt.call_count(),
+                Backend::Native => 0,
+            };
+
+            // selective scheduling engages under the threshold — line 5
+            let selective_now =
+                self.cfg.selective && active_ratio > 0.0 && active_ratio < self.cfg.selective_threshold;
+
+            let processed = AtomicU64::new(0);
+            let skipped = AtomicU64::new(0);
+            let edge_count = AtomicU64::new(0);
+            // per-shard slots: each worker touches exactly its shard's slot,
+            // so contention on these mutexes is zero by construction
+            let new_active: Vec<Mutex<Vec<VertexId>>> =
+                (0..p).map(|_| Mutex::new(Vec::new())).collect();
+            let err_slot: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+
+            {
+                let dst_shared = SharedSlice::new(&mut dst);
+                let src_ref: &[f32] = &src;
+                let active_ref: &[VertexId] = &active;
+                let cfg = &self.cfg;
+                let blooms = &self.blooms;
+                let cache = &self.cache;
+                let dir = &self.dir;
+                let property = &self.property;
+                let tol = cfg.convergence_tol;
+
+                self.pool.parallel_for(p, |shard| {
+                    let (lo, hi) = property.interval(shard);
+                    // line 5: skip provably-inactive shards
+                    if selective_now
+                        && !blooms[shard].contains_any(active_ref.iter().map(|&v| v as u64))
+                    {
+                        // carry values of the untouched interval forward
+                        unsafe {
+                            dst_shared
+                                .write_range(lo as usize, &src_ref[lo as usize..hi as usize]);
+                        }
+                        skipped.fetch_add(1, Ordering::Relaxed);
+                        return;
+                    }
+                    // line 6: load_to_memory(shard) — cache first, then disk
+                    let csr = match cache.get(shard) {
+                        Ok(Some(csr)) => csr,
+                        Ok(None) => {
+                            match io::read_file(&dir.shard_path(shard)) {
+                                Ok(bytes) => {
+                                    if cfg.cache_budget > 0 {
+                                        let _ = cache.insert(shard, &bytes);
+                                    }
+                                    match shardfile::from_bytes(&bytes) {
+                                        Ok(c) => std::sync::Arc::new(c),
+                                        Err(e) => {
+                                            *err_slot.lock().unwrap() = Some(e);
+                                            return;
+                                        }
+                                    }
+                                }
+                                Err(e) => {
+                                    *err_slot.lock().unwrap() = Some(e);
+                                    return;
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            *err_slot.lock().unwrap() = Some(e);
+                            return;
+                        }
+                    };
+                    // lines 7-8: update the shard's vertices via the backend
+                    let new_vals =
+                        match cfg.backend.process_shard(app, &csr, src_ref, out_deg, &ctx) {
+                            Ok(v) => v,
+                            Err(e) => {
+                                *err_slot.lock().unwrap() = Some(e);
+                                return;
+                            }
+                        };
+                    // line 9 (partial): record this shard's newly-active set
+                    let mut local_active = Vec::new();
+                    for (i, &nv) in new_vals.iter().enumerate() {
+                        let v = lo + i as VertexId;
+                        let old = src_ref[v as usize];
+                        let changed = if old.is_infinite() && nv.is_infinite() {
+                            false
+                        } else {
+                            (nv - old).abs() > tol
+                        };
+                        if changed {
+                            local_active.push(v);
+                        }
+                    }
+                    unsafe { dst_shared.write_range(lo as usize, &new_vals) };
+                    *new_active[shard].lock().unwrap() = local_active;
+                    processed.fetch_add(1, Ordering::Relaxed);
+                    edge_count.fetch_add(csr.num_edges() as u64, Ordering::Relaxed);
+                });
+            }
+            if let Some(e) = err_slot.into_inner().unwrap() {
+                return Err(e);
+            }
+
+            // line 9-11: merge active sets, swap arrays, recompute ratio
+            active = new_active
+                .into_iter()
+                .flat_map(|m| m.into_inner().unwrap())
+                .collect();
+            active_ratio = active.len() as f64 / n.max(1) as f64;
+            std::mem::swap(&mut src, &mut dst);
+
+            edges_processed += edge_count.load(Ordering::Relaxed);
+            stats.iters.push(IterStats {
+                iter,
+                wall: t_iter.elapsed(),
+                shards_processed: processed.load(Ordering::Relaxed) as usize,
+                shards_skipped: skipped.load(Ordering::Relaxed) as usize,
+                active_vertices: active.len() as u64,
+                active_ratio,
+                io: io::snapshot().since(&io_before),
+                cache_hits: self.cache.stats.hits.load(Ordering::Relaxed) - hits_before,
+                cache_misses: self.cache.stats.misses.load(Ordering::Relaxed) - miss_before,
+                kernel_calls: match &self.cfg.backend {
+                    Backend::Xla(rt) => rt.call_count() - kernels_before,
+                    Backend::Native => 0,
+                },
+                selective_enabled: selective_now,
+            });
+        }
+
+        stats.total_wall = t_run.elapsed();
+        stats.edges_processed = edges_processed;
+        stats.memory_bytes = self.memory_estimate();
+        Ok(RunResult { values: src, stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{PageRank, Sssp, Wcc};
+    use crate::graph::generator;
+    use crate::sharding::{preprocess, PreprocessConfig};
+
+    fn build_dataset(tag: &str, edges: &[(u32, u32)], n: usize, shard_cap: usize) -> DatasetDir {
+        let dir = DatasetDir::new(
+            std::env::temp_dir().join(format!("gmp_vsw_{tag}_{}", std::process::id())),
+        );
+        let _ = std::fs::remove_dir_all(&dir.root);
+        let cfg = PreprocessConfig { max_edges_per_shard: shard_cap, bloom_fpr: 0.01 };
+        preprocess(tag, edges, n, &dir, &cfg).unwrap();
+        dir
+    }
+
+    /// Single-threaded reference implementation of the whole program.
+    fn reference_run(
+        app: &dyn VertexProgram,
+        edges: &[(u32, u32)],
+        n: usize,
+        max_iters: usize,
+    ) -> Vec<f32> {
+        let ctx = ProgramContext { num_vertices: n as u64 };
+        let mut in_adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut out_deg = vec![0u32; n];
+        for &(s, d) in edges {
+            in_adj[d as usize].push(s);
+            out_deg[s as usize] += 1;
+        }
+        let mut vals: Vec<f32> = (0..n).map(|v| app.init(v as u32, &ctx)).collect();
+        for _ in 0..max_iters {
+            let next: Vec<f32> = (0..n)
+                .map(|v| app.update(v as u32, &in_adj[v], &vals, &out_deg, &ctx))
+                .collect();
+            let changed = next
+                .iter()
+                .zip(&vals)
+                .any(|(a, b)| !(a.is_infinite() && b.is_infinite()) && a != b);
+            vals = next;
+            if !changed {
+                break;
+            }
+        }
+        vals
+    }
+
+    #[test]
+    fn pagerank_matches_reference() {
+        let edges = generator::rmat(8, 2000, generator::RmatParams::default(), 1);
+        let n = 256;
+        let dir = build_dataset("pr", &edges, n, 300);
+        let engine = VswEngine::open(
+            dir,
+            EngineConfig { max_iters: 10, threads: 4, ..Default::default() },
+        )
+        .unwrap();
+        let result = engine.run(&PageRank::default()).unwrap();
+        let want = reference_run(&PageRank::default(), &edges, n, 10);
+        for (i, (a, b)) in result.values.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-5, "v{i}: {a} vs {b}");
+        }
+        assert!(result.stats.num_iters() <= 10);
+    }
+
+    #[test]
+    fn sssp_and_wcc_converge_to_reference() {
+        let edges = generator::erdos_renyi(300, 1500, 3);
+        let n = 300;
+        let dir = build_dataset("minapps", &edges, n, 256);
+        let engine = VswEngine::open(dir, EngineConfig { threads: 3, ..Default::default() }).unwrap();
+
+        let sssp = Sssp { source: 0 };
+        let got = engine.run(&sssp).unwrap();
+        let want = reference_run(&sssp, &edges, n, 1000);
+        for (i, (a, b)) in got.values.iter().zip(&want).enumerate() {
+            assert!(
+                (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-6,
+                "sssp v{i}: {a} vs {b}"
+            );
+        }
+
+        let got = engine.run(&Wcc).unwrap();
+        let want = reference_run(&Wcc, &edges, n, 1000);
+        assert_eq!(got.values, want, "wcc fixpoint");
+    }
+
+    #[test]
+    fn selective_scheduling_skips_shards_and_preserves_results() {
+        // SSSP on a long path: after the frontier passes, shards go inactive
+        let n = 400;
+        let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|v| (v, v + 1)).collect();
+        let dir = build_dataset("sel", &edges, n, 32);
+        // threshold 0.05: the SSSP frontier on a path is 1 vertex (ratio
+        // 1/400 = 0.0025), comfortably below it from iteration 1 on
+        let on = VswEngine::open(
+            dir.clone(),
+            EngineConfig {
+                selective: true,
+                selective_threshold: 0.05,
+                threads: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let off = VswEngine::open(
+            dir,
+            EngineConfig { selective: false, threads: 2, ..Default::default() },
+        )
+        .unwrap();
+        let app = Sssp { source: 0 };
+        let a = on.run(&app).unwrap();
+        let b = off.run(&app).unwrap();
+        assert_eq!(a.values, b.values, "selective must not change results");
+        let skipped: usize = a.stats.iters.iter().map(|i| i.shards_skipped).sum();
+        assert!(skipped > 0, "no shards were skipped");
+        let skipped_off: usize = b.stats.iters.iter().map(|i| i.shards_skipped).sum();
+        assert_eq!(skipped_off, 0);
+    }
+
+    #[test]
+    fn cache_disabled_reads_disk_every_iteration() {
+        let edges = generator::erdos_renyi(128, 1000, 9);
+        let dir = build_dataset("nocache", &edges, 128, 128);
+        let nc = VswEngine::open(
+            dir.clone(),
+            EngineConfig { cache_budget: 0, max_iters: 3, selective: false, ..Default::default() },
+        )
+        .unwrap();
+        let result = nc.run(&PageRank::default()).unwrap();
+        // every iteration must re-read every shard from disk
+        for it in &result.stats.iters {
+            assert!(it.io.bytes_read > 0, "iter {} read nothing", it.iter);
+            assert_eq!(it.cache_hits, 0);
+        }
+        // cached engine: zero disk reads after warmup
+        let c = VswEngine::open(
+            dir,
+            EngineConfig { max_iters: 3, selective: false, ..Default::default() },
+        )
+        .unwrap();
+        let result = c.run(&PageRank::default()).unwrap();
+        for it in &result.stats.iters {
+            assert_eq!(it.io.bytes_read, 0, "iter {} hit disk despite cache", it.iter);
+            assert!(it.cache_hits > 0);
+        }
+    }
+
+    #[test]
+    fn memory_estimate_scales_with_cache() {
+        let edges = generator::erdos_renyi(200, 3000, 4);
+        let dir = build_dataset("mem", &edges, 200, 512);
+        let nc = VswEngine::open(
+            dir.clone(),
+            EngineConfig { cache_budget: 0, ..Default::default() },
+        )
+        .unwrap();
+        let c = VswEngine::open(dir, EngineConfig::default()).unwrap();
+        assert!(c.memory_estimate() > nc.memory_estimate());
+    }
+}

@@ -1,0 +1,189 @@
+//! Compressed Sparse Row adjacency — the shard payload format (§II-B).
+//!
+//! A [`Csr`] covers a contiguous vertex interval `[lo, hi)` and stores the
+//! *incoming* adjacency of each vertex in that interval (GraphMP groups a
+//! shard's edges by destination): `row_ptr[v-lo] .. row_ptr[v-lo+1]` indexes
+//! into `col`, which holds source vertex ids.
+
+use crate::graph::{Edge, VertexId};
+
+/// CSR over the interval `[lo, hi)`. `col` holds source ids of in-edges.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Csr {
+    pub lo: VertexId,
+    pub hi: VertexId,
+    /// len = (hi - lo) + 1; row_ptr[0] == 0; row_ptr.last() == col.len().
+    pub row_ptr: Vec<u32>,
+    /// Source ids, grouped by destination, ascending destination.
+    pub col: Vec<VertexId>,
+}
+
+impl Csr {
+    /// Build from edges whose destinations all lie in `[lo, hi)`.
+    /// Edges need not be sorted; counting sort by destination is used
+    /// (O(|E| + |interval|)).
+    pub fn from_edges(lo: VertexId, hi: VertexId, edges: &[Edge]) -> Self {
+        let n = (hi - lo) as usize;
+        let mut counts = vec![0u32; n + 1];
+        for &(_, d) in edges {
+            debug_assert!(d >= lo && d < hi, "edge dst {d} outside [{lo},{hi})");
+            counts[(d - lo) as usize + 1] += 1;
+        }
+        for i in 1..=n {
+            counts[i] += counts[i - 1];
+        }
+        let row_ptr = counts.clone();
+        let mut cursor = row_ptr.clone();
+        let mut col = vec![0 as VertexId; edges.len()];
+        for &(s, d) in edges {
+            let slot = &mut cursor[(d - lo) as usize];
+            col[*slot as usize] = s;
+            *slot += 1;
+        }
+        Csr { lo, hi, row_ptr, col }
+    }
+
+    /// Number of vertices in the interval.
+    pub fn num_vertices(&self) -> usize {
+        (self.hi - self.lo) as usize
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.col.len()
+    }
+
+    /// Incoming adjacency list of global vertex `v` (must be in interval).
+    pub fn in_neighbors(&self, v: VertexId) -> &[VertexId] {
+        debug_assert!(v >= self.lo && v < self.hi);
+        let i = (v - self.lo) as usize;
+        &self.col[self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize]
+    }
+
+    /// Iterate `(global_dst, in_neighbors)` pairs.
+    pub fn iter_rows(&self) -> impl Iterator<Item = (VertexId, &[VertexId])> + '_ {
+        (0..self.num_vertices()).map(move |i| {
+            let v = self.lo + i as VertexId;
+            (v, &self.col[self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize])
+        })
+    }
+
+    /// Flatten back to an edge list (for tests / round-trips).
+    pub fn to_edges(&self) -> Vec<Edge> {
+        self.iter_rows()
+            .flat_map(|(v, srcs)| srcs.iter().map(move |&s| (s, v)))
+            .collect()
+    }
+
+    /// Structural validation (used after deserialization).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let n = self.num_vertices();
+        anyhow::ensure!(self.row_ptr.len() == n + 1, "row_ptr length");
+        anyhow::ensure!(self.row_ptr[0] == 0, "row_ptr[0] != 0");
+        anyhow::ensure!(
+            *self.row_ptr.last().unwrap() as usize == self.col.len(),
+            "row_ptr tail != col len"
+        );
+        anyhow::ensure!(
+            self.row_ptr.windows(2).all(|w| w[0] <= w[1]),
+            "row_ptr not monotone"
+        );
+        Ok(())
+    }
+}
+
+/// Whole-graph CSR over *out*-edges (used by the in-memory baseline and the
+/// generators' degree pass). `row_ptr[v]..row_ptr[v+1]` → destinations of v.
+#[derive(Debug, Clone)]
+pub struct OutCsr {
+    pub num_vertices: usize,
+    pub row_ptr: Vec<u64>,
+    pub col: Vec<VertexId>,
+}
+
+impl OutCsr {
+    pub fn from_edges(num_vertices: usize, edges: &[Edge]) -> Self {
+        let mut counts = vec![0u64; num_vertices + 1];
+        for &(s, _) in edges {
+            counts[s as usize + 1] += 1;
+        }
+        for i in 1..=num_vertices {
+            counts[i] += counts[i - 1];
+        }
+        let row_ptr = counts.clone();
+        let mut cursor = counts;
+        let mut col = vec![0 as VertexId; edges.len()];
+        for &(s, d) in edges {
+            let slot = &mut cursor[s as usize];
+            col[*slot as usize] = d;
+            *slot += 1;
+        }
+        OutCsr { num_vertices, row_ptr, col }
+    }
+
+    pub fn out_neighbors(&self, v: VertexId) -> &[VertexId] {
+        &self.col[self.row_ptr[v as usize] as usize..self.row_ptr[v as usize + 1] as usize]
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.col.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn csr_roundtrip_small() {
+        // interval [2,5): edges into 2,3,4
+        let edges = vec![(0, 2), (1, 2), (7, 4), (3, 3), (2, 2)];
+        let csr = Csr::from_edges(2, 5, &edges);
+        csr.validate().unwrap();
+        assert_eq!(csr.num_vertices(), 3);
+        assert_eq!(csr.num_edges(), 5);
+        assert_eq!(csr.in_neighbors(2), &[0, 1, 2]);
+        assert_eq!(csr.in_neighbors(3), &[3]);
+        assert_eq!(csr.in_neighbors(4), &[7]);
+        let mut back = csr.to_edges();
+        back.sort_unstable();
+        let mut want = edges.clone();
+        want.sort_unstable();
+        assert_eq!(back, want);
+    }
+
+    #[test]
+    fn csr_empty_interval_rows() {
+        let csr = Csr::from_edges(0, 4, &[]);
+        csr.validate().unwrap();
+        assert_eq!(csr.num_edges(), 0);
+        assert_eq!(csr.in_neighbors(1), &[] as &[VertexId]);
+    }
+
+    #[test]
+    fn prop_csr_preserves_multiset_of_edges() {
+        prop::check(0xC5A, 50, |g| {
+            let n = g.usize_in(1, 64) as u32;
+            let m = g.usize_in(0, 256);
+            let edges: Vec<Edge> = (0..m)
+                .map(|_| (g.usize_in(0, 64) as u32, g.usize_in(0, n as usize) as u32))
+                .collect();
+            let csr = Csr::from_edges(0, n, &edges);
+            csr.validate().unwrap();
+            let mut back = csr.to_edges();
+            back.sort_unstable();
+            let mut want = edges;
+            want.sort_unstable();
+            assert_eq!(back, want);
+        });
+    }
+
+    #[test]
+    fn out_csr_neighbors() {
+        let edges = vec![(0, 1), (0, 2), (2, 0)];
+        let csr = OutCsr::from_edges(3, &edges);
+        assert_eq!(csr.out_neighbors(0), &[1, 2]);
+        assert_eq!(csr.out_neighbors(1), &[] as &[VertexId]);
+        assert_eq!(csr.out_neighbors(2), &[0]);
+    }
+}

@@ -1,0 +1,301 @@
+//! Edge-list file formats.
+//!
+//! * **Text** — one `src dst` pair per line (whitespace separated, `#`
+//!   comments), the lingua franca of SNAP/LAW downloads; the preprocessing
+//!   pipeline ingests this.
+//! * **Binary** — `GMEL` magic + u64 count + little-endian `u32,u32` pairs +
+//!   CRC32; compact interchange between the generator and the preprocessor.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::Edge;
+
+const BIN_MAGIC: &[u8; 4] = b"GMEL";
+const BIN_VERSION: u32 = 1;
+
+/// Write edges as text (`src<TAB>dst` per line).
+pub fn write_text(path: &Path, edges: &[Edge]) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    writeln!(w, "# graphmp edge list: src\tdst")?;
+    for &(s, d) in edges {
+        writeln!(w, "{s}\t{d}")?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a text edge list; tolerates comments and blank lines.
+pub fn read_text(path: &Path) -> Result<Vec<Edge>> {
+    let r = BufReader::new(File::open(path).with_context(|| path.display().to_string())?);
+    let mut edges = Vec::new();
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (Some(a), Some(b)) = (it.next(), it.next()) else {
+            bail!("line {}: expected two fields", lineno + 1);
+        };
+        let s: u32 = a.parse().with_context(|| format!("line {}: src", lineno + 1))?;
+        let d: u32 = b.parse().with_context(|| format!("line {}: dst", lineno + 1))?;
+        edges.push((s, d));
+    }
+    Ok(edges)
+}
+
+/// Write the binary edge-list format.
+pub fn write_binary(path: &Path, edges: &[Edge]) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(BIN_MAGIC)?;
+    w.write_all(&BIN_VERSION.to_le_bytes())?;
+    w.write_all(&(edges.len() as u64).to_le_bytes())?;
+    let mut crc = crc32fast::Hasher::new();
+    // chunked buffer to keep syscalls and hasher updates amortized
+    let mut buf = Vec::with_capacity(8 * 1024);
+    for &(s, d) in edges {
+        buf.extend_from_slice(&s.to_le_bytes());
+        buf.extend_from_slice(&d.to_le_bytes());
+        if buf.len() >= 8 * 1024 {
+            crc.update(&buf);
+            w.write_all(&buf)?;
+            buf.clear();
+        }
+    }
+    if !buf.is_empty() {
+        crc.update(&buf);
+        w.write_all(&buf)?;
+    }
+    w.write_all(&crc.finalize().to_le_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read the binary edge-list format, verifying magic/version/CRC.
+pub fn read_binary(path: &Path) -> Result<Vec<Edge>> {
+    let mut r = BufReader::new(File::open(path).with_context(|| path.display().to_string())?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != BIN_MAGIC {
+        bail!("{}: bad magic {:?}", path.display(), magic);
+    }
+    let mut u32buf = [0u8; 4];
+    r.read_exact(&mut u32buf)?;
+    let version = u32::from_le_bytes(u32buf);
+    if version != BIN_VERSION {
+        bail!("{}: unsupported version {version}", path.display());
+    }
+    let mut u64buf = [0u8; 8];
+    r.read_exact(&mut u64buf)?;
+    let n = u64::from_le_bytes(u64buf) as usize;
+    let mut payload = vec![0u8; n * 8];
+    r.read_exact(&mut payload)?;
+    r.read_exact(&mut u32buf)?;
+    let want_crc = u32::from_le_bytes(u32buf);
+    let mut crc = crc32fast::Hasher::new();
+    crc.update(&payload);
+    if crc.finalize() != want_crc {
+        bail!("{}: CRC mismatch (corrupt edge list)", path.display());
+    }
+    let mut edges = Vec::with_capacity(n);
+    for chunk in payload.chunks_exact(8) {
+        let s = u32::from_le_bytes(chunk[0..4].try_into().unwrap());
+        let d = u32::from_le_bytes(chunk[4..8].try_into().unwrap());
+        edges.push((s, d));
+    }
+    Ok(edges)
+}
+
+/// Streaming binary-edge-list reader: yields edges without materializing
+/// the whole list (the external-memory preprocessing path).  CRC is
+/// verified incrementally; a corrupt tail surfaces as an `Err` item.
+pub struct BinaryEdgeStream {
+    r: BufReader<File>,
+    remaining: u64,
+    crc: crc32fast::Hasher,
+    path: std::path::PathBuf,
+}
+
+impl BinaryEdgeStream {
+    pub fn open(path: &Path) -> Result<Self> {
+        let mut r = BufReader::new(File::open(path).with_context(|| path.display().to_string())?);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != BIN_MAGIC {
+            bail!("{}: bad magic", path.display());
+        }
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        if u32::from_le_bytes(b4) != BIN_VERSION {
+            bail!("{}: unsupported version", path.display());
+        }
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8)?;
+        Ok(Self {
+            r,
+            remaining: u64::from_le_bytes(b8),
+            crc: crc32fast::Hasher::new(),
+            path: path.to_path_buf(),
+        })
+    }
+
+    /// Total edges declared by the header (remaining at open time).
+    pub fn len_hint(&self) -> u64 {
+        self.remaining
+    }
+}
+
+impl Iterator for BinaryEdgeStream {
+    type Item = Result<Edge>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.remaining == 0 {
+            // verify trailing CRC once
+            let mut b4 = [0u8; 4];
+            if let Err(e) = self.r.read_exact(&mut b4) {
+                return Some(Err(e.into()));
+            }
+            let want = u32::from_le_bytes(b4);
+            let got = std::mem::replace(&mut self.crc, crc32fast::Hasher::new()).finalize();
+            self.remaining = u64::MAX; // terminal state
+            if got != want {
+                return Some(Err(anyhow::anyhow!(
+                    "{}: CRC mismatch (corrupt edge stream)",
+                    self.path.display()
+                )));
+            }
+            return None;
+        }
+        if self.remaining == u64::MAX {
+            return None;
+        }
+        let mut buf = [0u8; 8];
+        match self.r.read_exact(&mut buf) {
+            Ok(()) => {
+                self.crc.update(&buf);
+                self.remaining -= 1;
+                Some(Ok((
+                    u32::from_le_bytes(buf[0..4].try_into().unwrap()),
+                    u32::from_le_bytes(buf[4..8].try_into().unwrap()),
+                )))
+            }
+            Err(e) => {
+                self.remaining = u64::MAX;
+                Some(Err(e.into()))
+            }
+        }
+    }
+}
+
+/// Auto-detect format by magic bytes.
+pub fn read_auto(path: &Path) -> Result<Vec<Edge>> {
+    let mut f = File::open(path).with_context(|| path.display().to_string())?;
+    let mut magic = [0u8; 4];
+    let got = f.read(&mut magic)?;
+    drop(f);
+    if got == 4 && &magic == BIN_MAGIC {
+        read_binary(path)
+    } else {
+        read_text(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("gmp_el_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let p = tmp("t.txt");
+        let edges = vec![(0, 1), (42, 7), (7, 42)];
+        write_text(&p, &edges).unwrap();
+        assert_eq!(read_text(&p).unwrap(), edges);
+        assert_eq!(read_auto(&p).unwrap(), edges);
+    }
+
+    #[test]
+    fn text_tolerates_comments() {
+        let p = tmp("c.txt");
+        std::fs::write(&p, "# c\n% m\n\n1 2\n3\t4\n").unwrap();
+        assert_eq!(read_text(&p).unwrap(), vec![(1, 2), (3, 4)]);
+    }
+
+    #[test]
+    fn text_rejects_garbage() {
+        let p = tmp("g.txt");
+        std::fs::write(&p, "1 x\n").unwrap();
+        assert!(read_text(&p).is_err());
+        std::fs::write(&p, "1\n").unwrap();
+        assert!(read_text(&p).is_err());
+    }
+
+    #[test]
+    fn binary_roundtrip_and_auto() {
+        let p = tmp("b.bin");
+        let edges: Vec<Edge> = (0..5000u32).map(|i| (i, i.wrapping_mul(7) % 5000)).collect();
+        write_binary(&p, &edges).unwrap();
+        assert_eq!(read_binary(&p).unwrap(), edges);
+        assert_eq!(read_auto(&p).unwrap(), edges);
+    }
+
+    #[test]
+    fn binary_detects_corruption() {
+        let p = tmp("bc.bin");
+        write_binary(&p, &[(1, 2), (3, 4)]).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_binary(&p).is_err());
+    }
+
+    #[test]
+    fn stream_matches_bulk_read() {
+        let p = tmp("s.bin");
+        let edges: Vec<Edge> = (0..3000u32).map(|i| (i, (i * 13) % 3000)).collect();
+        write_binary(&p, &edges).unwrap();
+        let s = BinaryEdgeStream::open(&p).unwrap();
+        assert_eq!(s.len_hint(), 3000);
+        let streamed: Vec<Edge> = s.map(|e| e.unwrap()).collect();
+        assert_eq!(streamed, edges);
+    }
+
+    #[test]
+    fn stream_detects_corruption() {
+        let p = tmp("sc.bin");
+        write_binary(&p, &[(1, 2), (3, 4), (5, 6)]).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[20] ^= 0xFF; // flip a payload byte
+        std::fs::write(&p, &bytes).unwrap();
+        let results: Vec<_> = BinaryEdgeStream::open(&p).unwrap().collect();
+        assert!(results.iter().any(|r| r.is_err()), "corruption not surfaced");
+    }
+
+    #[test]
+    fn stream_empty_list() {
+        let p = tmp("se.bin");
+        write_binary(&p, &[]).unwrap();
+        let items: Vec<_> = BinaryEdgeStream::open(&p).unwrap().collect();
+        assert!(items.is_empty());
+    }
+
+    #[test]
+    fn binary_detects_truncation() {
+        let p = tmp("bt.bin");
+        write_binary(&p, &[(1, 2), (3, 4), (5, 6)]).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 5]).unwrap();
+        assert!(read_binary(&p).is_err());
+    }
+}

@@ -1,0 +1,183 @@
+//! Synthetic graph generators — the dataset substitute (DESIGN.md §3).
+//!
+//! * [`rmat`] — R-MAT (Chakrabarti et al.) recursive-matrix power-law
+//!   graphs; with the classic `(a,b,c,d) = (0.57,0.19,0.19,0.05)` the
+//!   in-degree distribution matches the heavy skew of the paper's webgraphs
+//!   (Twitter max in-deg 0.7M at 42M vertices → same ratio here).
+//! * [`erdos_renyi`] — uniform G(n, m), the no-skew control used by tests.
+//! * [`grid2d`] — 2-D lattice "road network" for the SSSP example (long
+//!   diameter, low degree — the opposite regime from webgraphs).
+
+use crate::graph::{Edge, VertexId};
+use crate::util::rng::Xoshiro256;
+
+/// R-MAT parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct RmatParams {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    /// Probability of noise-perturbing quadrant probabilities per level
+    /// (avoids the striping artifacts of pure R-MAT).
+    pub noise: f64,
+}
+
+impl Default for RmatParams {
+    fn default() -> Self {
+        Self { a: 0.57, b: 0.19, c: 0.19, noise: 0.1 }
+    }
+}
+
+/// Generate an R-MAT graph with `2^scale` vertices and `num_edges` edges.
+/// Self-loops are kept (webgraphs have them); duplicate edges are kept too —
+/// the preprocessing pipeline treats the input as a multigraph, like the
+/// paper's CSV ingestion.
+pub fn rmat(scale: u32, num_edges: u64, params: RmatParams, seed: u64) -> Vec<Edge> {
+    let n: u64 = 1 << scale;
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut edges = Vec::with_capacity(num_edges as usize);
+    for _ in 0..num_edges {
+        let (mut x0, mut x1) = (0u64, n);
+        let (mut y0, mut y1) = (0u64, n);
+        let (mut a, mut b, mut c) = (params.a, params.b, params.c);
+        while x1 - x0 > 1 || y1 - y0 > 1 {
+            let r = rng.next_f64();
+            let (right, down) = if r < a {
+                (false, false)
+            } else if r < a + b {
+                (true, false)
+            } else if r < a + b + c {
+                (false, true)
+            } else {
+                (true, true)
+            };
+            let xm = (x0 + x1) / 2;
+            let ym = (y0 + y1) / 2;
+            if x1 - x0 > 1 {
+                if right {
+                    x0 = xm;
+                } else {
+                    x1 = xm;
+                }
+            }
+            if y1 - y0 > 1 {
+                if down {
+                    y0 = ym;
+                } else {
+                    y1 = ym;
+                }
+            }
+            if params.noise > 0.0 {
+                // multiplicative noise keeps expectation, breaks striping
+                let jitter = |p: f64, r: &mut Xoshiro256| {
+                    (p * (1.0 - params.noise + 2.0 * params.noise * r.next_f64())).max(1e-3)
+                };
+                a = jitter(a, &mut rng);
+                b = jitter(b, &mut rng);
+                c = jitter(c, &mut rng);
+                let s = a + b + c;
+                if s >= 0.999 {
+                    let k = 0.999 / s;
+                    a *= k;
+                    b *= k;
+                    c *= k;
+                }
+            }
+        }
+        edges.push((x0 as VertexId, y0 as VertexId));
+    }
+    edges
+}
+
+/// Uniform random G(n, m) digraph.
+pub fn erdos_renyi(num_vertices: usize, num_edges: u64, seed: u64) -> Vec<Edge> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..num_edges)
+        .map(|_| {
+            (
+                rng.range_usize(0, num_vertices) as VertexId,
+                rng.range_usize(0, num_vertices) as VertexId,
+            )
+        })
+        .collect()
+}
+
+/// 2-D lattice with bidirectional edges between 4-neighbors plus a few
+/// random "highway" shortcuts: a road-network-like workload for SSSP.
+pub fn grid2d(rows: usize, cols: usize, shortcuts: usize, seed: u64) -> Vec<Edge> {
+    let id = |r: usize, c: usize| (r * cols + c) as VertexId;
+    let mut edges = Vec::with_capacity(rows * cols * 4 + shortcuts * 2);
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                edges.push((id(r, c), id(r, c + 1)));
+                edges.push((id(r, c + 1), id(r, c)));
+            }
+            if r + 1 < rows {
+                edges.push((id(r, c), id(r + 1, c)));
+                edges.push((id(r + 1, c), id(r, c)));
+            }
+        }
+    }
+    let n = rows * cols;
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    for _ in 0..shortcuts {
+        let a = rng.range_usize(0, n) as VertexId;
+        let b = rng.range_usize(0, n) as VertexId;
+        edges.push((a, b));
+        edges.push((b, a));
+    }
+    edges
+}
+
+/// Number of vertices implied by `rmat(scale, ..)`.
+pub fn rmat_vertices(scale: u32) -> usize {
+    1usize << scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Degrees;
+
+    #[test]
+    fn rmat_shapes_and_determinism() {
+        let e1 = rmat(10, 5000, RmatParams::default(), 7);
+        let e2 = rmat(10, 5000, RmatParams::default(), 7);
+        assert_eq!(e1.len(), 5000);
+        assert_eq!(e1, e2, "same seed, same graph");
+        assert!(e1.iter().all(|&(s, d)| (s as usize) < 1024 && (d as usize) < 1024));
+        let e3 = rmat(10, 5000, RmatParams::default(), 8);
+        assert_ne!(e1, e3, "different seed differs");
+    }
+
+    #[test]
+    fn rmat_is_power_law_skewed() {
+        let scale = 12;
+        let edges = rmat(scale, 40_000, RmatParams::default(), 42);
+        let d = Degrees::from_edges(1 << scale, edges.iter().copied());
+        let max_in = *d.in_deg.iter().max().unwrap();
+        let avg = 40_000.0 / (1 << scale) as f64;
+        // power-law: max degree far above average (paper's graphs: 1000x+)
+        assert!(
+            (max_in as f64) > 20.0 * avg,
+            "max in-degree {max_in} not skewed vs avg {avg}"
+        );
+    }
+
+    #[test]
+    fn erdos_renyi_is_not_skewed() {
+        let edges = erdos_renyi(4096, 40_000, 1);
+        let d = Degrees::from_edges(4096, edges.iter().copied());
+        let max_in = *d.in_deg.iter().max().unwrap();
+        assert!(max_in < 50, "ER max in-degree should be near-mean, got {max_in}");
+    }
+
+    #[test]
+    fn grid_has_expected_edge_count() {
+        let e = grid2d(10, 10, 5, 3);
+        // 2 * (rows*(cols-1) + cols*(rows-1)) directed + 2*shortcuts
+        assert_eq!(e.len(), 2 * (10 * 9 + 10 * 9) + 10);
+        assert!(e.iter().all(|&(s, d)| (s as usize) < 100 && (d as usize) < 100));
+    }
+}

@@ -1,0 +1,84 @@
+//! Graph substrate: vertex/edge types, edge-list I/O, CSR construction and
+//! synthetic graph generators.
+//!
+//! The paper evaluates on power-law webgraphs (Twitter, UK-2007, UK-2014,
+//! EU-2015).  Those are proprietary-scale downloads, so [`generator`]
+//! produces R-MAT graphs with matching average degree and skew at ~1000×
+//! reduced scale (see DESIGN.md §3).
+
+pub mod csr;
+pub mod edgelist;
+pub mod generator;
+
+/// Vertex identifier. 32 bits covers the scaled datasets (≤ a few million
+/// vertices) and matches the paper's CSR `col` array element size (D=4..8B).
+pub type VertexId = u32;
+
+/// A directed edge `(src, dst)`. Graphs are unweighted (paper §II-A:
+/// `val(u,v) = 1` for all edges).
+pub type Edge = (VertexId, VertexId);
+
+/// Basic graph statistics gathered by the preprocessing scan (step 1 of
+/// §II-B) and stored in the property file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphInfo {
+    pub num_vertices: u64,
+    pub num_edges: u64,
+    pub max_in_degree: u32,
+    pub max_out_degree: u32,
+}
+
+impl GraphInfo {
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_vertices == 0 {
+            0.0
+        } else {
+            self.num_edges as f64 / self.num_vertices as f64
+        }
+    }
+}
+
+/// In/out degree arrays (the paper's vertex information file).
+#[derive(Debug, Clone, Default)]
+pub struct Degrees {
+    pub in_deg: Vec<u32>,
+    pub out_deg: Vec<u32>,
+}
+
+impl Degrees {
+    /// Single pass over an edge iterator.
+    pub fn from_edges<I: IntoIterator<Item = Edge>>(num_vertices: usize, edges: I) -> Self {
+        let mut d = Degrees { in_deg: vec![0; num_vertices], out_deg: vec![0; num_vertices] };
+        for (s, t) in edges {
+            d.out_deg[s as usize] += 1;
+            d.in_deg[t as usize] += 1;
+        }
+        d
+    }
+
+    pub fn info(&self, num_edges: u64) -> GraphInfo {
+        GraphInfo {
+            num_vertices: self.in_deg.len() as u64,
+            num_edges,
+            max_in_degree: self.in_deg.iter().copied().max().unwrap_or(0),
+            max_out_degree: self.out_deg.iter().copied().max().unwrap_or(0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degrees_from_edges() {
+        let edges = vec![(0, 1), (0, 2), (1, 2), (2, 0)];
+        let d = Degrees::from_edges(3, edges.iter().copied());
+        assert_eq!(d.out_deg, vec![2, 1, 1]);
+        assert_eq!(d.in_deg, vec![1, 1, 2]);
+        let info = d.info(4);
+        assert_eq!(info.max_in_degree, 2);
+        assert_eq!(info.max_out_degree, 2);
+        assert!((info.avg_degree() - 4.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,198 @@
+//! Table II: the closed-form per-iteration I/O + memory analysis of the
+//! five computation models.
+//!
+//! | model | data read              | data write        | memory            |
+//! |-------|------------------------|-------------------|-------------------|
+//! | PSW   | C·V + 2(C+D)·E         | C·V + 2(C+D)·E    | (C·V+2(C+D)·E)/P  |
+//! | ESG   | C·V + (C+D)·E          | C·V + C·E         | C·V/P             |
+//! | VSP   | C(1+δ)·V + D·E         | C·V               | C(2+δ)·V/P        |
+//! | DSW   | C·√P·V + D·E           | C·√P·V            | 2C·V/√P           |
+//! | VSW   | θ·D·E                  | 0                 | 2C·V + N·D·E/P    |
+//!
+//! with `C` bytes/vertex-value, `D` bytes/edge, `δ ≈ (1-e^(-d_avg/P))·P`,
+//! `θ` the cache miss ratio, `N` CPU cores.  `benches/table2_iomodel.rs`
+//! checks these predictions against the byte counters the engines actually
+//! report.
+
+/// Model inputs.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelParams {
+    /// |V|
+    pub v: u64,
+    /// |E|
+    pub e: u64,
+    /// Number of shards / partitions / grid blocks.
+    pub p: u64,
+    /// Bytes per vertex value (C). We use f32 ⇒ 4.
+    pub c: u64,
+    /// Bytes per edge record (D). Raw (src,dst) pairs ⇒ 8; CSR col entry ⇒ 4.
+    pub d: u64,
+    /// CPU cores (N).
+    pub n_cores: u64,
+    /// Cache miss ratio θ ∈ [0,1] (VSW only).
+    pub theta: f64,
+}
+
+impl ModelParams {
+    pub fn d_avg(&self) -> f64 {
+        self.e as f64 / self.v.max(1) as f64
+    }
+
+    /// δ ≈ (1 − e^(−d_avg/P))·P (Table II footnote).
+    pub fn delta(&self) -> f64 {
+        let p = self.p.max(1) as f64;
+        (1.0 - (-self.d_avg() / p).exp()) * p
+    }
+}
+
+/// Per-iteration prediction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Prediction {
+    pub read: f64,
+    pub write: f64,
+    pub memory: f64,
+}
+
+/// The five computation models of Table II.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Model {
+    Psw,
+    Esg,
+    Vsp,
+    Dsw,
+    Vsw,
+}
+
+impl Model {
+    pub const ALL: [Model; 5] = [Model::Psw, Model::Esg, Model::Vsp, Model::Dsw, Model::Vsw];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Model::Psw => "PSW (GraphChi)",
+            Model::Esg => "ESG (X-Stream)",
+            Model::Vsp => "VSP (VENUS)",
+            Model::Dsw => "DSW (GridGraph)",
+            Model::Vsw => "VSW (GraphMP)",
+        }
+    }
+
+    /// Table II row for this model.
+    pub fn predict(&self, p: &ModelParams) -> Prediction {
+        let (v, e) = (p.v as f64, p.e as f64);
+        let (c, d) = (p.c as f64, p.d as f64);
+        let shards = p.p.max(1) as f64;
+        match self {
+            Model::Psw => Prediction {
+                read: c * v + 2.0 * (c + d) * e,
+                write: c * v + 2.0 * (c + d) * e,
+                memory: (c * v + 2.0 * (c + d) * e) / shards,
+            },
+            Model::Esg => Prediction {
+                read: c * v + (c + d) * e,
+                write: c * v + c * e,
+                memory: c * v / shards,
+            },
+            Model::Vsp => Prediction {
+                read: c * (1.0 + p.delta()) * v + d * e,
+                write: c * v,
+                memory: c * (2.0 + p.delta()) * v / shards,
+            },
+            Model::Dsw => {
+                let sqrt_p = shards.sqrt();
+                Prediction {
+                    read: c * sqrt_p * v + d * e,
+                    write: c * sqrt_p * v,
+                    memory: 2.0 * c * v / sqrt_p,
+                }
+            }
+            Model::Vsw => Prediction {
+                read: p.theta * d * e,
+                write: 0.0,
+                memory: 2.0 * c * v + p.n_cores as f64 * d * e / shards,
+            },
+        }
+    }
+}
+
+/// Relative error |measured − predicted| / predicted (predicted > 0).
+pub fn rel_error(measured: f64, predicted: f64) -> f64 {
+    if predicted == 0.0 {
+        if measured == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (measured - predicted).abs() / predicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> ModelParams {
+        ModelParams { v: 1000, e: 20_000, p: 16, c: 4, d: 8, n_cores: 4, theta: 1.0 }
+    }
+
+    #[test]
+    fn vsw_reads_least_writes_nothing() {
+        let p = params();
+        let vsw = Model::Vsw.predict(&p);
+        assert_eq!(vsw.write, 0.0);
+        for m in [Model::Psw, Model::Esg, Model::Vsp, Model::Dsw] {
+            let other = m.predict(&p);
+            assert!(other.read > vsw.read, "{} should read more", m.name());
+            assert!(other.write > vsw.write);
+        }
+    }
+
+    #[test]
+    fn vsw_with_cache_hits_reads_less() {
+        let mut p = params();
+        p.theta = 1.0;
+        let cold = Model::Vsw.predict(&p);
+        p.theta = 0.25;
+        let warm = Model::Vsw.predict(&p);
+        assert!((warm.read - 0.25 * cold.read).abs() < 1e-9);
+    }
+
+    #[test]
+    fn psw_is_heaviest() {
+        let p = params();
+        let psw = Model::Psw.predict(&p);
+        for m in [Model::Esg, Model::Vsp, Model::Dsw, Model::Vsw] {
+            assert!(psw.read >= m.predict(&p).read);
+            assert!(psw.write >= m.predict(&p).write);
+        }
+    }
+
+    #[test]
+    fn vsw_memory_exceeds_ooc_models() {
+        // the paper's trade-off: lowest I/O at the cost of highest memory
+        let p = params();
+        let vsw = Model::Vsw.predict(&p);
+        for m in [Model::Psw, Model::Esg, Model::Vsp] {
+            assert!(
+                vsw.memory > m.predict(&p).memory,
+                "VSW should out-remember {}",
+                m.name()
+            );
+        }
+    }
+
+    #[test]
+    fn delta_matches_formula() {
+        let p = params();
+        let d_avg = 20.0;
+        let want = (1.0 - (-d_avg / 16.0f64).exp()) * 16.0;
+        assert!((p.delta() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_error_basics() {
+        assert_eq!(rel_error(110.0, 100.0), 0.1);
+        assert_eq!(rel_error(0.0, 0.0), 0.0);
+        assert!(rel_error(1.0, 0.0).is_infinite());
+    }
+}

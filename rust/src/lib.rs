@@ -1,0 +1,52 @@
+//! # GraphMP — semi-external-memory big graph processing
+//!
+//! A reproduction of *"GraphMP: An Efficient Semi-External-Memory Big Graph
+//! Processing System on a Single Machine"* (Sun, Wen, Duong, Xiao — 2017)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: graph sharding, the
+//!   vertex-centric sliding-window (VSW) engine, Bloom-filter selective
+//!   scheduling, the compressed shard cache, all four out-of-core baseline
+//!   engines (PSW/ESG/DSW/VSP) and the in-memory baseline.
+//! * **Layer 2 (`python/compile/model.py`)** — the per-shard vertex-update
+//!   programs (PageRank / SSSP / WCC) as JAX functions, AOT-lowered to HLO
+//!   text artifacts at build time.
+//! * **Layer 1 (`python/compile/kernels/`)** — the scatter-reduce hot-spot
+//!   as Pallas kernels (one-hot-matmul segmented sum on the MXU, masked
+//!   broadcast segmented min on the VPU).
+//!
+//! Python never runs on the iteration path: [`runtime`] loads the HLO
+//! artifacts once via PJRT and executes them from the engine hot loop.
+//!
+//! ## Crate map
+//!
+//! | module        | role                                                     |
+//! |---------------|----------------------------------------------------------|
+//! | [`util`]      | substrates: PRNG, varint, JSON, thread pool, bench timer |
+//! | [`graph`]     | edge lists, CSR, synthetic graph generators (R-MAT, …)   |
+//! | [`bloom`]     | Bloom filters for selective scheduling (§II-D.1)         |
+//! | [`storage`]   | on-disk formats + instrumented I/O accounting            |
+//! | [`sharding`]  | vertex intervals + the 4-step preprocessing pipeline     |
+//! | [`cache`]     | compressed shard cache, modes 1–4 (§II-D.2)              |
+//! | [`apps`]      | vertex programs: PageRank, SSSP, WCC, BFS, SpMV          |
+//! | [`engine`]    | the VSW engine (Algorithm 1)                             |
+//! | [`baselines`] | PSW / ESG / DSW / VSP out-of-core engines + in-memory    |
+//! | [`iomodel`]   | Table II analytic I/O model                              |
+//! | [`runtime`]   | PJRT loading + execution of the AOT artifacts            |
+//! | [`coordinator`]| job specs, experiment drivers, report formatting        |
+
+pub mod apps;
+pub mod baselines;
+pub mod bloom;
+pub mod cache;
+pub mod coordinator;
+pub mod engine;
+pub mod graph;
+pub mod iomodel;
+pub mod runtime;
+pub mod sharding;
+pub mod storage;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,292 @@
+//! `graphmp` — the CLI / leader entrypoint.
+//!
+//! ```text
+//! graphmp generate   --dataset twitter-s --out edges.bin
+//! graphmp preprocess --input edges.bin --vertices 32768 --out data.gmp [--symmetrize]
+//! graphmp run        --data data.gmp --app pagerank [--iters 10]
+//!                    [--engine native|xla] [--artifacts artifacts]
+//!                    [--cache mode-2|none|...] [--no-cache] [--no-selective]
+//!                    [--threads N] [--throttle-mbps 300]
+//! graphmp baseline   --system psw|esg|dsw|vsp|inmem --data edges.bin
+//!                    --vertices N --app pagerank [--iters 10]
+//! graphmp info       --data data.gmp
+//! graphmp datasets
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use graphmp::apps;
+use graphmp::baselines;
+use graphmp::cache::Codec;
+use graphmp::coordinator::cli::Args;
+use graphmp::coordinator::datasets::{Dataset, DATASETS};
+use graphmp::engine::{Backend, EngineConfig, VswEngine};
+use graphmp::graph::edgelist;
+use graphmp::runtime::ShardRuntime;
+use graphmp::sharding::{preprocess, PreprocessConfig};
+use graphmp::storage::{io, DatasetDir};
+use graphmp::util::humansize;
+
+const BOOL_FLAGS: &[&str] =
+    &["no-cache", "no-selective", "symmetrize", "streaming", "quick", "help"];
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw, BOOL_FLAGS)?;
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "generate" => cmd_generate(&args),
+        "preprocess" => cmd_preprocess(&args),
+        "run" => cmd_run(&args),
+        "baseline" => cmd_baseline(&args),
+        "info" => cmd_info(&args),
+        "datasets" => cmd_datasets(),
+        _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = r#"graphmp — semi-external-memory graph processing (GraphMP reproduction)
+
+USAGE:
+  graphmp generate   --dataset <name> --out <file>
+  graphmp preprocess --input <edges> --vertices <N> --out <dir> [--symmetrize]
+  graphmp run        --data <dir> --app <pagerank|sssp|wcc|bfs|spmv>
+                     [--iters N] [--engine native|xla] [--artifacts <dir>]
+                     [--cache <none|snaplite|zlib-1|zlib-3|zstd-1|delta-varint>]
+                     [--no-cache] [--no-selective] [--threads N]
+                     [--throttle-mbps N]
+  graphmp baseline   --system <psw|esg|dsw|vsp|inmem> --data <edges>
+                     --vertices <N> --app <name> [--iters N]
+  graphmp info       --data <dir>
+  graphmp datasets
+"#;
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let name = args.req("dataset")?;
+    let out = PathBuf::from(args.req("out")?);
+    let d = Dataset::by_name(name)?;
+    eprintln!(
+        "generating {} (stands in for {}): |V|={} |E|={}",
+        d.name,
+        d.stands_in_for,
+        humansize::count(d.num_vertices() as u64),
+        humansize::count(d.num_edges)
+    );
+    let edges = d.generate();
+    edgelist::write_binary(&out, &edges)?;
+    eprintln!("wrote {}", out.display());
+    Ok(())
+}
+
+fn cmd_preprocess(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.req("input")?);
+    let out = DatasetDir::new(args.req("out")?);
+    // --streaming: the external-memory two-pass pipeline (binary input only,
+    // no --symmetrize) for graphs larger than RAM
+    if args.has("streaming") {
+        anyhow::ensure!(
+            !args.has("symmetrize"),
+            "--streaming and --symmetrize are mutually exclusive"
+        );
+        let vertices = args.get_usize("vertices", 0)?;
+        anyhow::ensure!(vertices > 0, "--streaming requires --vertices");
+        let cfg = PreprocessConfig {
+            max_edges_per_shard: args.get_usize(
+                "max-edges-per-shard",
+                PreprocessConfig::default().max_edges_per_shard,
+            )?,
+            bloom_fpr: args.get_f64("bloom-fpr", 0.01)?,
+        };
+        let t0 = std::time::Instant::now();
+        let res = graphmp::sharding::preprocess_streaming(
+            input.file_stem().and_then(|s| s.to_str()).unwrap_or("graph"),
+            &input,
+            vertices,
+            &out,
+            &cfg,
+        )?;
+        eprintln!(
+            "preprocessed (streaming): |V|={} |E|={} shards={} in {}",
+            res.property.info.num_vertices,
+            res.property.info.num_edges,
+            res.property.num_shards(),
+            humansize::duration(t0.elapsed())
+        );
+        return Ok(());
+    }
+    let mut edges = edgelist::read_auto(&input)?;
+    if args.has("symmetrize") {
+        let rev: Vec<_> = edges.iter().map(|&(s, d)| (d, s)).collect();
+        edges.extend(rev);
+    }
+    let max_id = edges.iter().map(|&(s, d)| s.max(d)).max().unwrap_or(0) as usize;
+    let vertices = args.get_usize("vertices", max_id + 1)?;
+    let cfg = PreprocessConfig {
+        max_edges_per_shard: args
+            .get_usize("max-edges-per-shard", PreprocessConfig::default().max_edges_per_shard)?,
+        bloom_fpr: args.get_f64("bloom-fpr", 0.01)?,
+    };
+    let t0 = std::time::Instant::now();
+    let res = preprocess(
+        input.file_stem().and_then(|s| s.to_str()).unwrap_or("graph"),
+        &edges,
+        vertices,
+        &out,
+        &cfg,
+    )?;
+    eprintln!(
+        "preprocessed: |V|={} |E|={} shards={} bloom={} in {}",
+        res.property.info.num_vertices,
+        res.property.info.num_edges,
+        res.property.num_shards(),
+        humansize::bytes(res.bloom_bytes),
+        humansize::duration(t0.elapsed())
+    );
+    Ok(())
+}
+
+fn engine_config(args: &Args) -> Result<EngineConfig> {
+    let mut cfg = EngineConfig {
+        max_iters: args.get_usize("iters", 0)?,
+        selective: !args.has("no-selective"),
+        convergence_tol: args.get_f64("tol", 0.0)? as f32,
+        ..Default::default()
+    };
+    if let Some(t) = args.get("threads") {
+        cfg.threads = t.parse().context("--threads")?;
+    }
+    if args.has("no-cache") {
+        cfg.cache_budget = 0;
+    } else if let Some(c) = args.get("cache") {
+        cfg.cache_codec = c.parse::<Codec>()?;
+    }
+    if let Some(b) = args.get("cache-budget-mb") {
+        cfg.cache_budget = b.parse::<usize>().context("--cache-budget-mb")? << 20;
+    }
+    match args.get_or("engine", "native") {
+        "native" => {}
+        "xla" => {
+            let adir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+            let rt = ShardRuntime::load(&adir)
+                .context("loading AOT artifacts (run `make artifacts`)")?;
+            cfg.backend = Backend::Xla(Arc::new(rt));
+        }
+        other => bail!("unknown engine {other:?} (native|xla)"),
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let data = DatasetDir::new(args.req("data")?);
+    anyhow::ensure!(data.exists(), "{} is not a preprocessed dataset", data.root.display());
+    let app = apps::by_name(args.req("app")?)?;
+    if let Some(mbps) = args.get("throttle-mbps") {
+        io::set_throttle(mbps.parse::<u64>().context("--throttle-mbps")? << 20);
+    }
+    let cfg = engine_config(args)?;
+    let engine_name = cfg.backend.name();
+    let engine = VswEngine::open(data, cfg)?;
+    eprintln!(
+        "loaded {}: |V|={} |E|={} shards={} (load {})",
+        engine.property.name,
+        humansize::count(engine.property.info.num_vertices),
+        humansize::count(engine.property.info.num_edges),
+        engine.property.num_shards(),
+        humansize::duration(engine.load_wall)
+    );
+    let result = engine.run(app.as_ref())?;
+    let s = &result.stats;
+    println!(
+        "app={} engine={} iters={} total={} rate={} mem={}",
+        app.name(),
+        engine_name,
+        s.num_iters(),
+        humansize::duration(s.total_wall),
+        humansize::rate(s.edges_processed, s.total_wall),
+        humansize::bytes(s.memory_bytes),
+    );
+    for it in &s.iters {
+        println!(
+            "  iter {:3}: {:>9}  processed={:3} skipped={:3} active={:8} ({:.4}%) read={} hits={} {}",
+            it.iter,
+            humansize::duration(it.wall),
+            it.shards_processed,
+            it.shards_skipped,
+            it.active_vertices,
+            it.active_ratio * 100.0,
+            humansize::bytes(it.io.bytes_read),
+            it.cache_hits,
+            if it.selective_enabled { "[selective]" } else { "" },
+        );
+    }
+    io::set_throttle(0);
+    Ok(())
+}
+
+fn cmd_baseline(args: &Args) -> Result<()> {
+    let system = args.req("system")?;
+    let input = PathBuf::from(args.req("data")?);
+    let edges = edgelist::read_auto(&input)?;
+    let max_id = edges.iter().map(|&(s, d)| s.max(d)).max().unwrap_or(0) as usize;
+    let vertices = args.get_usize("vertices", max_id + 1)?;
+    let app = apps::by_name(args.req("app")?)?;
+    let iters = args.get_usize("iters", 10)?;
+    let work = std::env::temp_dir().join(format!("graphmp_baseline_{system}"));
+    let mut eng = baselines::by_name(system, work)?;
+    let t0 = std::time::Instant::now();
+    eng.prepare(&edges, vertices)?;
+    eprintln!("{}: prepared in {}", eng.name(), humansize::duration(t0.elapsed()));
+    let run = eng.run(app.as_ref(), iters)?;
+    println!(
+        "system={} app={} iters={} total={} read={} written={} mem={}",
+        eng.name(),
+        app.name(),
+        run.iter_walls.len(),
+        humansize::duration(run.total_wall),
+        humansize::bytes(run.io.bytes_read),
+        humansize::bytes(run.io.bytes_written),
+        humansize::bytes(run.memory_bytes),
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let data = DatasetDir::new(args.req("data")?);
+    let p = graphmp::storage::property::Property::load(&data.property_path())?;
+    println!("name:        {}", p.name);
+    println!("vertices:    {}", p.info.num_vertices);
+    println!("edges:       {}", p.info.num_edges);
+    println!("avg degree:  {:.1}", p.info.avg_degree());
+    println!("max in-deg:  {}", p.info.max_in_degree);
+    println!("max out-deg: {}", p.info.max_out_degree);
+    println!("shards:      {}", p.num_shards());
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    println!("{:<12} {:<28} {:>10} {:>12} {:>8}", "name", "stands in for", "|V|", "|E|", "avg-deg");
+    for d in &DATASETS {
+        println!(
+            "{:<12} {:<28} {:>10} {:>12} {:>8.1}",
+            d.name,
+            d.stands_in_for,
+            humansize::count(d.num_vertices() as u64),
+            humansize::count(d.num_edges),
+            d.avg_degree()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,180 @@
+//! `ShardRuntime`: compile the HLO artifacts once on the PJRT CPU client and
+//! expose typed shard-update entry points to the engine.
+//!
+//! Execution contract (see `python/compile/model.py`):
+//!
+//! * inputs are padded to the manifest geometry — `contrib` with the
+//!   reduction identity (0 for sum, +inf for min), `dst` with 0;
+//! * outputs come back as a 1-tuple (`return_tuple=True` at lowering) of a
+//!   `f32[V_MAX]` literal which is truncated to the shard's real vertex
+//!   count.
+//!
+//! # Thread safety
+//!
+//! The `xla` crate's client/executable handles are `Rc`-based and not
+//! `Send`/`Sync`.  The engine's worker threads all need to invoke kernels,
+//! so every touch of an xla object (compile, literal upload via execute,
+//! result fetch) happens under the single `inner` mutex; nothing `Rc`-backed
+//! ever escapes it.  Under that discipline cross-thread use is sound, hence
+//! the `unsafe impl`s below.  The CPU PJRT plugin largely serializes
+//! execution internally anyway, so the lock costs little.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::geometry::Geometry;
+use super::manifest::Manifest;
+
+/// Identity element padding for sum-reductions.
+pub const PAD_SUM: f32 = 0.0;
+/// Identity element padding for min-reductions.
+pub const PAD_MIN: f32 = f32::INFINITY;
+
+struct Inner {
+    #[allow(dead_code)] // owns the PJRT client the executables refer to
+    client: xla::PjRtClient,
+    kernels: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// Runtime holding the PJRT client + all compiled shard kernels.
+pub struct ShardRuntime {
+    inner: Mutex<Inner>,
+    pub geometry: Geometry,
+    /// Number of kernel invocations (for perf accounting).
+    calls: AtomicU64,
+}
+
+// SAFETY: all xla::* objects live inside `inner` and are only manipulated
+// while holding that mutex (see module docs); the Rc refcounts they contain
+// are therefore never touched concurrently.
+unsafe impl Send for ShardRuntime {}
+unsafe impl Sync for ShardRuntime {}
+
+impl ShardRuntime {
+    /// Load + compile every artifact in `artifact_dir`.
+    pub fn load(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        manifest.check_geometry()?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut kernels = BTreeMap::new();
+        for (name, entry) in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                entry.path.to_str().context("artifact path utf8")?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", entry.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            kernels.insert(name.clone(), exe);
+        }
+        Ok(Self {
+            inner: Mutex::new(Inner { client, kernels }),
+            geometry: manifest.geometry,
+            calls: AtomicU64::new(0),
+        })
+    }
+
+    /// Kernel invocation count since load.
+    pub fn call_count(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    pub fn has_kernel(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().kernels.contains_key(name)
+    }
+
+    fn run(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<f32>> {
+        let inner = self.inner.lock().unwrap();
+        let exe = inner
+            .kernels
+            .get(name)
+            .ok_or_else(|| anyhow!("kernel {name} not in manifest"))?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        drop(inner);
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        // Lowered with return_tuple=True => 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Pad `contrib`/`dst` to geometry. Panics if the shard exceeds capacity
+    /// (the sharder guarantees it never does).
+    fn pad_edges(&self, contrib: &[f32], dst: &[u32], identity: f32) -> (Vec<f32>, Vec<i32>) {
+        let g = &self.geometry;
+        assert!(
+            contrib.len() <= g.e_max && contrib.len() == dst.len(),
+            "shard edges {} exceed kernel capacity {}",
+            contrib.len(),
+            g.e_max
+        );
+        let mut c = Vec::with_capacity(g.e_max);
+        c.extend_from_slice(contrib);
+        c.resize(g.e_max, identity);
+        let mut d = Vec::with_capacity(g.e_max);
+        d.extend(dst.iter().map(|&x| x as i32));
+        d.resize(g.e_max, 0);
+        (c, d)
+    }
+
+    /// PageRank shard update: `new[v] = 0.15/n + 0.85 * Σ contrib[e]` over
+    /// edges with `dst[e] == v`.  Returns the first `n_vertices` lanes.
+    pub fn pr_shard(
+        &self,
+        contrib: &[f32],
+        dst: &[u32],
+        inv_n: f32,
+        n_vertices: usize,
+    ) -> Result<Vec<f32>> {
+        let (c, d) = self.pad_edges(contrib, dst, PAD_SUM);
+        let args = [
+            xla::Literal::vec1(&c),
+            xla::Literal::vec1(&d),
+            xla::Literal::vec1(&[inv_n]),
+        ];
+        let mut out = self.run("pr_shard", &args)?;
+        out.truncate(n_vertices);
+        Ok(out)
+    }
+
+    /// SSSP/WCC shard update: `new[v] = min(old[v], min contrib[e])`.
+    pub fn relaxmin_shard(
+        &self,
+        contrib: &[f32],
+        dst: &[u32],
+        old: &[f32],
+        n_vertices: usize,
+    ) -> Result<Vec<f32>> {
+        let g = &self.geometry;
+        assert!(old.len() <= g.v_max && n_vertices <= old.len());
+        let (c, d) = self.pad_edges(contrib, dst, PAD_MIN);
+        let mut o = Vec::with_capacity(g.v_max);
+        o.extend_from_slice(old);
+        o.resize(g.v_max, PAD_MIN);
+        let args = [
+            xla::Literal::vec1(&c),
+            xla::Literal::vec1(&d),
+            xla::Literal::vec1(&o),
+        ];
+        let mut out = self.run("relaxmin_shard", &args)?;
+        out.truncate(n_vertices);
+        Ok(out)
+    }
+
+    /// Raw segmented sum (generic SpMV building block).
+    pub fn segsum_shard(&self, contrib: &[f32], dst: &[u32], n_vertices: usize) -> Result<Vec<f32>> {
+        let (c, d) = self.pad_edges(contrib, dst, PAD_SUM);
+        let args = [xla::Literal::vec1(&c), xla::Literal::vec1(&d)];
+        let mut out = self.run("segsum_shard", &args)?;
+        out.truncate(n_vertices);
+        Ok(out)
+    }
+}

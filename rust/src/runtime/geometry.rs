@@ -1,0 +1,47 @@
+//! Kernel geometry: the fixed shapes every AOT artifact was lowered with.
+//!
+//! These constants must match `python/compile/kernels/segsum.py`; the
+//! manifest loader enforces the match at startup so a stale `artifacts/`
+//! directory fails fast instead of producing shape errors mid-run.
+
+/// Padded vertices per shard interval (f32 output lane count).
+pub const V_MAX: usize = 2048;
+/// Padded edges per shard (contrib/dst lane count).
+pub const E_MAX: usize = 16384;
+/// Edges per Pallas grid step.
+pub const TILE_E: usize = 1024;
+
+/// Geometry triple as read from a manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Geometry {
+    pub v_max: usize,
+    pub e_max: usize,
+    pub tile_e: usize,
+}
+
+impl Geometry {
+    /// The geometry this crate was compiled against.
+    pub const NATIVE: Geometry = Geometry { v_max: V_MAX, e_max: E_MAX, tile_e: TILE_E };
+
+    /// Max real (unpadded) edges a single kernel call can carry.
+    pub fn edge_capacity(&self) -> usize {
+        self.e_max
+    }
+
+    /// Max real vertices a single kernel call can cover.
+    pub fn vertex_capacity(&self) -> usize {
+        self.v_max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_geometry_is_consistent() {
+        let g = Geometry::NATIVE;
+        assert_eq!(g.e_max % g.tile_e, 0, "edges must tile evenly");
+        assert!(g.v_max > 0 && g.e_max > 0);
+    }
+}

@@ -1,0 +1,126 @@
+//! `artifacts/manifest.json` parsing + geometry validation.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::geometry::Geometry;
+use crate::util::json::Json;
+
+/// One AOT artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<String>,
+}
+
+/// Parsed manifest: geometry + artifact table.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: i64,
+    pub geometry: Geometry,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json` and verify every referenced artifact exists.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", mpath.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", mpath.display()))?;
+
+        let version = j.req("version")?.as_i64().context("version must be int")?;
+        let g = j.req("geometry")?;
+        let geometry = Geometry {
+            v_max: g.req("v_max")?.as_i64().context("v_max")? as usize,
+            e_max: g.req("e_max")?.as_i64().context("e_max")? as usize,
+            tile_e: g.req("tile_e")?.as_i64().context("tile_e")? as usize,
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in j.req("artifacts")?.as_obj().context("artifacts must be object")? {
+            let file = entry.req("file")?.as_str().context("file must be str")?;
+            let path = dir.join(file);
+            if !path.exists() {
+                bail!("artifact {name} missing on disk: {}", path.display());
+            }
+            let inputs = entry
+                .get("inputs")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+                .unwrap_or_default();
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry { name: name.clone(), path, inputs },
+            );
+        }
+        Ok(Self { version, geometry, artifacts, dir: dir.to_path_buf() })
+    }
+
+    /// Fail unless the manifest geometry matches the crate's compiled-in
+    /// constants (a stale `artifacts/` dir would silently mis-pad shards).
+    pub fn check_geometry(&self) -> Result<()> {
+        if self.geometry != Geometry::NATIVE {
+            bail!(
+                "artifact geometry {:?} != crate geometry {:?}; re-run `make artifacts`",
+                self.geometry,
+                Geometry::NATIVE
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, v_max: i64) {
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        write!(
+            f,
+            r#"{{"version":1,
+               "geometry":{{"v_max":{v_max},"e_max":16384,"tile_e":1024}},
+               "artifacts":{{"pr_shard":{{"file":"pr_shard.hlo.txt","inputs":["a"]}}}}}}"#
+        )
+        .unwrap();
+        std::fs::write(dir.join("pr_shard.hlo.txt"), "HloModule x").unwrap();
+    }
+
+    #[test]
+    fn load_and_validate() {
+        let dir = std::env::temp_dir().join(format!("gmp_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, 2048);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.version, 1);
+        assert!(m.check_geometry().is_ok());
+        assert!(m.artifacts.contains_key("pr_shard"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn geometry_mismatch_rejected() {
+        let dir = std::env::temp_dir().join(format!("gmp_manifest_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, 999);
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.check_geometry().is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_artifact_file_rejected() {
+        let dir = std::env::temp_dir().join(format!("gmp_manifest_miss_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, 2048);
+        std::fs::remove_file(dir.join("pr_shard.hlo.txt")).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts once, execute them from
+//! the engine hot path.  Python is never invoked here — the artifacts under
+//! `artifacts/` are self-contained HLO text produced at build time by
+//! `python/compile/aot.py`.
+//!
+//! ```text
+//! manifest.json ──► Manifest (geometry + artifact names)
+//! *.hlo.txt     ──► HloModuleProto::from_text_file ─► compile ─► executable
+//! shard data    ──► pad to geometry ─► execute ─► unpad
+//! ```
+
+mod executor;
+pub mod geometry;
+mod manifest;
+
+pub use executor::ShardRuntime;
+pub use geometry::Geometry;
+pub use manifest::Manifest;

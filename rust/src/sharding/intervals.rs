@@ -1,0 +1,147 @@
+//! Vertex-interval computation (§II-B policies):
+//!
+//! 1. every shard must load fully into memory → cap edges per shard;
+//! 2. edges per shard should be balanced.
+//!
+//! Given the in-degree array, a greedy sweep packs consecutive vertices
+//! until the running edge count would exceed the target, then cuts.  The
+//! target is `min(max_edges_per_shard, ceil(|E| / ceil(|E|/max)))` so the
+//! final shard is not pathologically small.
+
+use crate::graph::VertexId;
+
+/// Compute interval boundaries from the in-degree array.
+///
+/// Returns `intervals` with `intervals[0] == 0`,
+/// `intervals.last() == in_deg.len()`, and every `[i, i+1)` shard holding at
+/// most `max_edges_per_shard` edges — except where a single vertex's
+/// in-degree alone exceeds the cap, in which case that vertex gets a
+/// dedicated interval (the engine's kernel path then splits its edge list
+/// across multiple kernel calls).
+pub fn compute_intervals(in_deg: &[u32], max_edges_per_shard: usize) -> Vec<VertexId> {
+    let n = in_deg.len();
+    if n == 0 {
+        return vec![0, 0];
+    }
+    let total: u64 = in_deg.iter().map(|&d| d as u64).sum();
+    let cap = max_edges_per_shard.max(1) as u64;
+    // balance: number of shards needed at the cap, then equalize
+    let num_shards = total.div_ceil(cap).max(1);
+    let target = total.div_ceil(num_shards).max(1);
+
+    let cut_at = target.min(cap);
+    let mut intervals: Vec<VertexId> = vec![0];
+    let mut acc: u64 = 0;
+    for (v, &d) in in_deg.iter().enumerate() {
+        let d = d as u64;
+        if d > cut_at {
+            // unsplittable hub: dedicated single-vertex interval
+            if acc > 0 || *intervals.last().unwrap() < v as VertexId {
+                intervals.push(v as VertexId);
+            }
+            intervals.push(v as VertexId + 1);
+            acc = 0;
+            continue;
+        }
+        if acc > 0 && acc + d > cut_at {
+            intervals.push(v as VertexId);
+            acc = 0;
+        }
+        acc += d;
+    }
+    intervals.push(n as VertexId);
+    // guard: dedupe a trailing boundary if the loop cut exactly at n
+    intervals.dedup();
+    if intervals.len() == 1 {
+        intervals.push(n as VertexId);
+    }
+    intervals
+}
+
+/// Edges per shard implied by `intervals` over `in_deg` (for tests/benches).
+pub fn shard_edge_counts(in_deg: &[u32], intervals: &[VertexId]) -> Vec<u64> {
+    intervals
+        .windows(2)
+        .map(|w| {
+            in_deg[w[0] as usize..w[1] as usize]
+                .iter()
+                .map(|&d| d as u64)
+                .sum()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Xoshiro256;
+
+    fn validate(in_deg: &[u32], intervals: &[VertexId], cap: usize) {
+        assert!(intervals.len() >= 2);
+        assert_eq!(intervals[0], 0);
+        assert_eq!(*intervals.last().unwrap() as usize, in_deg.len());
+        assert!(intervals.windows(2).all(|w| w[0] < w[1]), "{intervals:?}");
+        for (i, &count) in shard_edge_counts(in_deg, intervals).iter().enumerate() {
+            let width = intervals[i + 1] - intervals[i];
+            // single-vertex intervals may exceed the cap (unsplittable)
+            if width > 1 {
+                assert!(count <= cap as u64, "shard {i} has {count} edges > cap {cap}");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_degrees_balanced() {
+        let in_deg = vec![10u32; 100]; // 1000 edges
+        let intervals = compute_intervals(&in_deg, 250);
+        validate(&in_deg, &intervals, 250);
+        let counts = shard_edge_counts(&in_deg, &intervals);
+        assert!(counts.len() >= 4);
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max - min <= 20, "unbalanced: {counts:?}");
+    }
+
+    #[test]
+    fn single_shard_when_under_cap() {
+        let in_deg = vec![1u32; 50];
+        let intervals = compute_intervals(&in_deg, 1000);
+        assert_eq!(intervals, vec![0, 50]);
+    }
+
+    #[test]
+    fn hub_vertex_gets_own_interval() {
+        let mut in_deg = vec![1u32; 10];
+        in_deg[5] = 10_000; // hub exceeding any cap
+        let intervals = compute_intervals(&in_deg, 100);
+        validate(&in_deg, &intervals, 100);
+        // vertex 5 must be alone in its interval
+        let pos = intervals.iter().position(|&b| b == 5).expect("cut before hub");
+        assert_eq!(intervals[pos + 1], 6, "hub interval is [5,6): {intervals:?}");
+    }
+
+    #[test]
+    fn empty_and_zero_degree() {
+        assert_eq!(compute_intervals(&[], 10), vec![0, 0]);
+        let in_deg = vec![0u32; 5];
+        let intervals = compute_intervals(&in_deg, 10);
+        assert_eq!(intervals, vec![0, 5]);
+    }
+
+    #[test]
+    fn prop_partition_invariants() {
+        prop::check(0x1AB5, 60, |g| {
+            let n = g.usize_in(1, 500);
+            let mut rng = Xoshiro256::seed_from_u64(g.u64());
+            let in_deg: Vec<u32> = (0..n).map(|_| rng.gen_range(40) as u32).collect();
+            let cap = g.usize_in(8, 200);
+            let intervals = compute_intervals(&in_deg, cap);
+            validate(&in_deg, &intervals, cap);
+            // total edges preserved
+            let total: u64 = in_deg.iter().map(|&d| d as u64).sum();
+            let sum: u64 = shard_edge_counts(&in_deg, &intervals).iter().sum();
+            assert_eq!(total, sum);
+        });
+    }
+}

@@ -1,0 +1,17 @@
+//! Graph sharding: vertex-interval computation and the 4-step preprocessing
+//! pipeline (paper §II-B).
+//!
+//! 1. scan the graph, record in/out degrees;
+//! 2. compute vertex intervals so every shard fits memory and edge counts
+//!    are balanced;
+//! 3. append each edge to its shard by destination;
+//! 4. transform shards to CSR, persist metadata (+ the Bloom filters used
+//!    by selective scheduling, built here so the engine never rescans).
+
+pub mod intervals;
+pub mod preprocess;
+pub mod streaming;
+
+pub use intervals::compute_intervals;
+pub use preprocess::{preprocess, PreprocessConfig, PreprocessOutput};
+pub use streaming::preprocess_streaming;

@@ -1,0 +1,241 @@
+//! The 4-step preprocessing pipeline (paper §II-B) turning an edge list into
+//! a `<name>.gmp/` dataset directory.
+//!
+//! Step 1 — scan: degrees + graph info.
+//! Step 2 — intervals: balanced, memory-bounded (see [`super::intervals`]).
+//! Step 3 — bucket edges by destination interval ("append each edge to a
+//!          shard file"); in-memory buckets here since the scaled datasets
+//!          fit, but the bucketing is still per-shard to mirror the paper.
+//! Step 4 — CSR transform + persist shards, Bloom filters, metadata.
+
+use anyhow::{Context, Result};
+
+use crate::bloom::BloomFilter;
+use crate::graph::csr::Csr;
+use crate::graph::{Degrees, Edge, VertexId};
+use crate::storage::format::frame;
+use crate::storage::property::Property;
+use crate::storage::vertexinfo::VertexInfo;
+use crate::storage::{io, shardfile, DatasetDir};
+
+pub(crate) const BLOOM_MAGIC: &[u8; 4] = b"GMBF";
+pub(crate) const BLOOM_VERSION: u32 = 1;
+
+/// Preprocessing knobs.
+#[derive(Debug, Clone)]
+pub struct PreprocessConfig {
+    /// Edge cap per shard. The paper uses 18–22M edges (~80 MB); the default
+    /// here matches the AOT kernel geometry so every shard is executable in
+    /// one kernel call (`runtime::geometry::E_MAX`).
+    pub max_edges_per_shard: usize,
+    /// Bloom filter target false-positive rate (per shard).
+    pub bloom_fpr: f64,
+}
+
+impl Default for PreprocessConfig {
+    fn default() -> Self {
+        Self {
+            max_edges_per_shard: crate::runtime::geometry::E_MAX,
+            bloom_fpr: 0.01,
+        }
+    }
+}
+
+/// Summary returned by [`preprocess`].
+#[derive(Debug, Clone)]
+pub struct PreprocessOutput {
+    pub property: Property,
+    pub shard_edge_counts: Vec<u64>,
+    pub bloom_bytes: u64,
+}
+
+/// Run the full pipeline. `num_vertices` may exceed the max id + 1 (isolated
+/// trailing vertices are allowed, as in the paper's datasets).
+pub fn preprocess(
+    name: &str,
+    edges: &[Edge],
+    num_vertices: usize,
+    out: &DatasetDir,
+    cfg: &PreprocessConfig,
+) -> Result<PreprocessOutput> {
+    // interval width is additionally capped by the kernel geometry so the
+    // xla engine can run any shard in one call
+    let v_cap = crate::runtime::geometry::V_MAX;
+    out.create()?;
+
+    // -- step 1: scan ---------------------------------------------------
+    for &(s, d) in edges {
+        anyhow::ensure!(
+            (s as usize) < num_vertices && (d as usize) < num_vertices,
+            "edge ({s},{d}) outside vertex range {num_vertices}"
+        );
+    }
+    let degrees = Degrees::from_edges(num_vertices, edges.iter().copied());
+    let info = degrees.info(edges.len() as u64);
+
+    // -- step 2: intervals -----------------------------------------------
+    let mut intervals =
+        super::intervals::compute_intervals(&degrees.in_deg, cfg.max_edges_per_shard);
+    intervals = split_wide_intervals(&intervals, v_cap);
+
+    // -- step 3: bucket edges by destination interval ---------------------
+    let num_shards = intervals.len() - 1;
+    let mut buckets: Vec<Vec<Edge>> = vec![Vec::new(); num_shards];
+    // interval lookup: binary search over boundaries
+    let shard_of = |v: VertexId| -> usize {
+        match intervals.binary_search(&v) {
+            Ok(i) => i.min(num_shards - 1),
+            Err(i) => i - 1,
+        }
+    };
+    for &(s, d) in edges {
+        buckets[shard_of(d)].push((s, d));
+    }
+
+    // -- step 4: CSR transform + persist ---------------------------------
+    let mut shard_edge_counts = Vec::with_capacity(num_shards);
+    let mut bloom_bytes = 0u64;
+    for (i, bucket) in buckets.iter().enumerate() {
+        let (lo, hi) = (intervals[i], intervals[i + 1]);
+        let csr = Csr::from_edges(lo, hi, bucket);
+        csr.validate().with_context(|| format!("shard {i}"))?;
+        shardfile::save(&csr, &out.shard_path(i))?;
+        shard_edge_counts.push(csr.num_edges() as u64);
+
+        // Bloom filter over *source* vertices of the shard's edges
+        let mut bloom = BloomFilter::with_capacity(bucket.len().max(1), cfg.bloom_fpr);
+        for &(s, _) in bucket {
+            bloom.insert(s as u64);
+        }
+        let framed = frame(BLOOM_MAGIC, BLOOM_VERSION, &bloom.to_bytes());
+        bloom_bytes += framed.len() as u64;
+        io::write_file(&out.bloom_path(i), &framed)?;
+    }
+
+    let property = Property { name: name.to_string(), info, intervals };
+    property.save(&out.property_path())?;
+    VertexInfo::new(degrees).save(&out.vertexinfo_path())?;
+
+    Ok(PreprocessOutput { property, shard_edge_counts, bloom_bytes })
+}
+
+/// Load a shard's Bloom filter.
+pub fn load_bloom(dir: &DatasetDir, shard: usize) -> Result<BloomFilter> {
+    let buf = io::read_file(&dir.bloom_path(shard))?;
+    let (version, payload) = crate::storage::format::unframe(BLOOM_MAGIC, &buf)?;
+    anyhow::ensure!(version == BLOOM_VERSION, "bloom version {version}");
+    BloomFilter::from_bytes(payload)
+}
+
+/// Enforce the kernel-geometry vertex cap by splitting wide intervals.
+pub(crate) fn split_wide_intervals(intervals: &[VertexId], v_cap: usize) -> Vec<VertexId> {
+    let mut out = Vec::with_capacity(intervals.len());
+    out.push(intervals[0]);
+    for w in intervals.windows(2) {
+        let (lo, hi) = (w[0], w[1]);
+        let mut cur = lo;
+        while (hi - cur) as usize > v_cap {
+            cur += v_cap as VertexId;
+            out.push(cur);
+        }
+        out.push(hi);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::util::prop;
+
+    fn tmpdir(tag: &str) -> DatasetDir {
+        let d = std::env::temp_dir().join(format!("gmp_prep_{}_{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        DatasetDir::new(d)
+    }
+
+    #[test]
+    fn pipeline_small_graph() {
+        let edges = vec![(0u32, 1u32), (1, 2), (2, 0), (0, 2), (3, 1)];
+        let dir = tmpdir("small");
+        let out = preprocess("small", &edges, 4, &dir, &PreprocessConfig::default()).unwrap();
+        assert_eq!(out.property.info.num_edges, 5);
+        assert_eq!(out.property.info.num_vertices, 4);
+        assert!(dir.exists());
+        // reload everything and check edge preservation
+        let p = Property::load(&dir.property_path()).unwrap();
+        let mut all = Vec::new();
+        for i in 0..p.num_shards() {
+            let csr = shardfile::load(&dir.shard_path(i)).unwrap();
+            assert_eq!((csr.lo, csr.hi), p.interval(i));
+            all.extend(csr.to_edges());
+        }
+        all.sort_unstable();
+        let mut want = edges.clone();
+        want.sort_unstable();
+        assert_eq!(all, want);
+    }
+
+    #[test]
+    fn bloom_covers_sources() {
+        let edges = generator::erdos_renyi(200, 2000, 11);
+        let dir = tmpdir("bloom");
+        let out = preprocess("b", &edges, 200, &dir, &PreprocessConfig::default()).unwrap();
+        let p = &out.property;
+        for i in 0..p.num_shards() {
+            let bloom = load_bloom(&dir, i).unwrap();
+            let csr = shardfile::load(&dir.shard_path(i)).unwrap();
+            for (_, srcs) in csr.iter_rows() {
+                for &s in srcs {
+                    assert!(bloom.contains(s as u64), "bloom false negative");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shards_respect_caps() {
+        let edges = generator::rmat(12, 30_000, generator::RmatParams::default(), 5);
+        let dir = tmpdir("caps");
+        let cfg = PreprocessConfig { max_edges_per_shard: 4096, bloom_fpr: 0.01 };
+        let out = preprocess("caps", &edges, 1 << 12, &dir, &cfg).unwrap();
+        for (i, w) in out.property.intervals.windows(2).enumerate() {
+            let width = (w[1] - w[0]) as usize;
+            assert!(width <= crate::runtime::geometry::V_MAX, "interval {i} too wide");
+            if width > 1 {
+                assert!(
+                    out.shard_edge_counts[i] <= 4096,
+                    "shard {i}: {} edges",
+                    out.shard_edge_counts[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_out_of_range_edges() {
+        let dir = tmpdir("oob");
+        assert!(preprocess("x", &[(0, 9)], 5, &dir, &PreprocessConfig::default()).is_err());
+    }
+
+    #[test]
+    fn prop_every_edge_in_exactly_one_shard() {
+        prop::check(0x9E9E, 15, |g| {
+            let n = g.usize_in(2, 300);
+            let m = g.usize_in(0, 1500);
+            let edges = g.edges(n, m);
+            let dir = tmpdir(&format!("p{}", g.case_seed));
+            let cfg = PreprocessConfig { max_edges_per_shard: 128, bloom_fpr: 0.05 };
+            let out = preprocess("p", &edges, n, &dir, &cfg).unwrap();
+            let total: u64 = out.shard_edge_counts.iter().sum();
+            assert_eq!(total, m as u64);
+            // intervals disjoint + covering
+            let iv = &out.property.intervals;
+            assert_eq!(iv[0], 0);
+            assert_eq!(*iv.last().unwrap() as usize, n);
+            assert!(iv.windows(2).all(|w| w[0] < w[1]));
+            let _ = std::fs::remove_dir_all(&dir.root);
+        });
+    }
+}

@@ -1,0 +1,156 @@
+//! Framed binary chunk container used by every GraphMP on-disk file.
+//!
+//! ```text
+//! [4B magic][4B version][8B payload_len][payload...][4B crc32(payload)]
+//! ```
+//!
+//! plus little-endian array helpers for `u32`/`u64`/`f32` slices.
+
+use anyhow::{bail, ensure, Result};
+
+/// Write a framed chunk.
+pub fn frame(magic: &[u8; 4], version: u32, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + 20);
+    out.extend_from_slice(magic);
+    out.extend_from_slice(&version.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    let mut crc = crc32fast::Hasher::new();
+    crc.update(payload);
+    out.extend_from_slice(&crc.finalize().to_le_bytes());
+    out
+}
+
+/// Parse a framed chunk, returning `(version, payload)`.
+pub fn unframe<'a>(magic: &[u8; 4], buf: &'a [u8]) -> Result<(u32, &'a [u8])> {
+    ensure!(buf.len() >= 20, "chunk truncated (len {})", buf.len());
+    if &buf[0..4] != magic {
+        bail!("bad magic {:?} (want {:?})", &buf[0..4], magic);
+    }
+    let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    let len = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+    ensure!(buf.len() == 20 + len, "chunk length mismatch: header {} vs actual {}", len, buf.len() - 20);
+    let payload = &buf[16..16 + len];
+    let want = u32::from_le_bytes(buf[16 + len..20 + len].try_into().unwrap());
+    let mut crc = crc32fast::Hasher::new();
+    crc.update(payload);
+    ensure!(crc.finalize() == want, "CRC mismatch (corrupt file)");
+    Ok((version, payload))
+}
+
+// ---- array helpers ---------------------------------------------------------
+
+pub fn put_u32s(out: &mut Vec<u8>, xs: &[u32]) {
+    out.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+pub fn get_u32s(buf: &[u8], pos: usize) -> Result<(Vec<u32>, usize)> {
+    ensure!(buf.len() >= pos + 8, "u32 array header truncated");
+    let n = u64::from_le_bytes(buf[pos..pos + 8].try_into().unwrap()) as usize;
+    let start = pos + 8;
+    ensure!(buf.len() >= start + n * 4, "u32 array payload truncated");
+    let v = buf[start..start + n * 4]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((v, start + n * 4))
+}
+
+pub fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+pub fn get_f32s(buf: &[u8], pos: usize) -> Result<(Vec<f32>, usize)> {
+    ensure!(buf.len() >= pos + 8, "f32 array header truncated");
+    let n = u64::from_le_bytes(buf[pos..pos + 8].try_into().unwrap()) as usize;
+    let start = pos + 8;
+    ensure!(buf.len() >= start + n * 4, "f32 array payload truncated");
+    let v = buf[start..start + n * 4]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((v, start + n * 4))
+}
+
+pub fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+pub fn get_u64(buf: &[u8], pos: usize) -> Result<(u64, usize)> {
+    ensure!(buf.len() >= pos + 8, "u64 truncated");
+    Ok((u64::from_le_bytes(buf[pos..pos + 8].try_into().unwrap()), pos + 8))
+}
+
+pub fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+pub fn get_u32(buf: &[u8], pos: usize) -> Result<(u32, usize)> {
+    ensure!(buf.len() >= pos + 4, "u32 truncated");
+    Ok((u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()), pos + 4))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let payload = b"hello world".to_vec();
+        let buf = frame(b"TEST", 3, &payload);
+        let (v, p) = unframe(b"TEST", &buf).unwrap();
+        assert_eq!(v, 3);
+        assert_eq!(p, payload.as_slice());
+    }
+
+    #[test]
+    fn frame_detects_bitflip_everywhere_in_payload() {
+        let payload: Vec<u8> = (0..=255u8).collect();
+        let buf = frame(b"TEST", 1, &payload);
+        for byte in 16..16 + payload.len() {
+            let mut bad = buf.clone();
+            bad[byte] ^= 0x01;
+            assert!(unframe(b"TEST", &bad).is_err(), "undetected flip at {byte}");
+        }
+    }
+
+    #[test]
+    fn frame_detects_truncation_and_magic() {
+        let buf = frame(b"TEST", 1, b"data");
+        assert!(unframe(b"TEST", &buf[..buf.len() - 1]).is_err());
+        assert!(unframe(b"NOPE", &buf).is_err());
+        assert!(unframe(b"TEST", &[]).is_err());
+    }
+
+    #[test]
+    fn array_helpers_roundtrip() {
+        let mut out = Vec::new();
+        put_u32s(&mut out, &[1, 2, 3]);
+        put_f32s(&mut out, &[1.5, -2.5]);
+        put_u64(&mut out, 99);
+        put_u32(&mut out, 7);
+        let (a, p) = get_u32s(&out, 0).unwrap();
+        let (b, p) = get_f32s(&out, p).unwrap();
+        let (c, p) = get_u64(&out, p).unwrap();
+        let (d, p) = get_u32(&out, p).unwrap();
+        assert_eq!(a, vec![1, 2, 3]);
+        assert_eq!(b, vec![1.5, -2.5]);
+        assert_eq!(c, 99);
+        assert_eq!(d, 7);
+        assert_eq!(p, out.len());
+    }
+
+    #[test]
+    fn array_helpers_reject_truncation() {
+        let mut out = Vec::new();
+        put_u32s(&mut out, &[1, 2, 3]);
+        assert!(get_u32s(&out[..out.len() - 1], 0).is_err());
+        assert!(get_u32s(&out[..4], 0).is_err());
+    }
+}

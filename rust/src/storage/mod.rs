@@ -1,0 +1,70 @@
+//! On-disk formats + instrumented I/O.
+//!
+//! Everything GraphMP persists lives in a `<name>.gmp/` directory (DESIGN.md
+//! §6): a JSON property file, a binary vertex-info file, one `.gms` CSR
+//! shard per interval and one `.gmb` Bloom filter per shard.  All binary
+//! files are framed by [`format`]'s chunk container (magic + version +
+//! length + CRC32) so corruption and truncation fail loudly.
+//!
+//! [`io`] wraps reads/writes with global byte counters — the measured side
+//! of the paper's Table II analysis — and an optional throttle that models
+//! HDD bandwidth so that disk-era cost ratios are reproducible on a
+//! container whose page cache would otherwise hide them.
+
+pub mod format;
+pub mod io;
+pub mod property;
+pub mod shardfile;
+pub mod vertexinfo;
+
+use std::path::{Path, PathBuf};
+
+/// Layout of a preprocessed dataset directory.
+#[derive(Debug, Clone)]
+pub struct DatasetDir {
+    pub root: PathBuf,
+}
+
+impl DatasetDir {
+    pub fn new<P: AsRef<Path>>(root: P) -> Self {
+        Self { root: root.as_ref().to_path_buf() }
+    }
+
+    pub fn property_path(&self) -> PathBuf {
+        self.root.join("property.json")
+    }
+
+    pub fn vertexinfo_path(&self) -> PathBuf {
+        self.root.join("vertexinfo.bin")
+    }
+
+    pub fn shard_path(&self, i: usize) -> PathBuf {
+        self.root.join(format!("shard_{i:04}.gms"))
+    }
+
+    pub fn bloom_path(&self, i: usize) -> PathBuf {
+        self.root.join(format!("bloom_{i:04}.gmb"))
+    }
+
+    pub fn exists(&self) -> bool {
+        self.property_path().exists()
+    }
+
+    pub fn create(&self) -> anyhow::Result<()> {
+        std::fs::create_dir_all(&self.root)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paths_are_stable() {
+        let d = DatasetDir::new("/tmp/x.gmp");
+        assert!(d.shard_path(3).ends_with("shard_0003.gms"));
+        assert!(d.bloom_path(12).ends_with("bloom_0012.gmb"));
+        assert!(d.property_path().ends_with("property.json"));
+    }
+}

@@ -1,0 +1,131 @@
+//! The property file: global metadata of a preprocessed graph (paper §II-B,
+//! "a property file contains the global information of the represented
+//! graph, including the number of vertices, edges and shards, and the
+//! vertex intervals").  Stored as JSON for inspectability.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::graph::{GraphInfo, VertexId};
+use crate::storage::io;
+use crate::util::json::Json;
+
+/// Property file contents.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Property {
+    pub name: String,
+    pub info: GraphInfo,
+    /// Interval boundaries: shard `i` covers `[intervals[i], intervals[i+1])`.
+    /// len = num_shards + 1; first = 0; last = num_vertices.
+    pub intervals: Vec<VertexId>,
+}
+
+impl Property {
+    pub fn num_shards(&self) -> usize {
+        self.intervals.len().saturating_sub(1)
+    }
+
+    pub fn interval(&self, shard: usize) -> (VertexId, VertexId) {
+        (self.intervals[shard], self.intervals[shard + 1])
+    }
+
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("num_vertices".into(), Json::Int(self.info.num_vertices as i64));
+        m.insert("num_edges".into(), Json::Int(self.info.num_edges as i64));
+        m.insert("max_in_degree".into(), Json::Int(self.info.max_in_degree as i64));
+        m.insert("max_out_degree".into(), Json::Int(self.info.max_out_degree as i64));
+        m.insert(
+            "intervals".into(),
+            Json::Arr(self.intervals.iter().map(|&v| Json::Int(v as i64)).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let name = j.req("name")?.as_str().context("name")?.to_string();
+        let info = GraphInfo {
+            num_vertices: j.req("num_vertices")?.as_i64().context("num_vertices")? as u64,
+            num_edges: j.req("num_edges")?.as_i64().context("num_edges")? as u64,
+            max_in_degree: j.req("max_in_degree")?.as_i64().context("max_in_degree")? as u32,
+            max_out_degree: j.req("max_out_degree")?.as_i64().context("max_out_degree")? as u32,
+        };
+        let intervals: Vec<VertexId> = j
+            .req("intervals")?
+            .as_arr()
+            .context("intervals")?
+            .iter()
+            .map(|x| x.as_i64().map(|v| v as VertexId).context("interval"))
+            .collect::<Result<_>>()?;
+        anyhow::ensure!(intervals.len() >= 2, "need at least one interval");
+        anyhow::ensure!(intervals[0] == 0, "intervals must start at 0");
+        anyhow::ensure!(
+            *intervals.last().unwrap() as u64 == info.num_vertices,
+            "intervals must end at num_vertices"
+        );
+        anyhow::ensure!(intervals.windows(2).all(|w| w[0] < w[1]), "intervals must be increasing");
+        Ok(Self { name, info, intervals })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        io::write_file(path, self.to_json().to_string().as_bytes())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = io::read_file(path)?;
+        let j = Json::parse(std::str::from_utf8(&bytes)?)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Property {
+        Property {
+            name: "test".into(),
+            info: GraphInfo {
+                num_vertices: 100,
+                num_edges: 500,
+                max_in_degree: 30,
+                max_out_degree: 20,
+            },
+            intervals: vec![0, 40, 100],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let p = sample();
+        let q = Property::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, q);
+        assert_eq!(q.num_shards(), 2);
+        assert_eq!(q.interval(1), (40, 100));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("gmp_prop_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("property.json");
+        let p = sample();
+        p.save(&path).unwrap();
+        assert_eq!(Property::load(&path).unwrap(), p);
+    }
+
+    #[test]
+    fn rejects_bad_intervals() {
+        let mut p = sample();
+        p.intervals = vec![0, 50, 40, 100];
+        assert!(Property::from_json(&p.to_json()).is_err());
+        p.intervals = vec![5, 100];
+        assert!(Property::from_json(&p.to_json()).is_err());
+        p.intervals = vec![0, 99];
+        assert!(Property::from_json(&p.to_json()).is_err());
+    }
+}

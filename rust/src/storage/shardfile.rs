@@ -1,0 +1,126 @@
+//! Shard files (`shard_XXXX.gms`): one CSR edge shard per vertex interval
+//! (paper §II-B, Figure 2).  Framed binary (`GMSH`), CRC-checked.
+//!
+//! Payload layout:
+//! ```text
+//! u32 lo, u32 hi                  vertex interval [lo, hi)
+//! u32[] row_ptr                   (hi-lo)+1 entries
+//! u32[] col                       source ids grouped by destination
+//! ```
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::graph::csr::Csr;
+use crate::storage::format::{frame, get_u32, get_u32s, put_u32, put_u32s, unframe};
+use crate::storage::io;
+
+const MAGIC: &[u8; 4] = b"GMSH";
+const VERSION: u32 = 1;
+
+/// Serialize a CSR shard to framed bytes.
+pub fn to_bytes(csr: &Csr) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(8 + (csr.row_ptr.len() + csr.col.len()) * 4 + 16);
+    put_u32(&mut payload, csr.lo);
+    put_u32(&mut payload, csr.hi);
+    put_u32s(&mut payload, &csr.row_ptr);
+    put_u32s(&mut payload, &csr.col);
+    frame(MAGIC, VERSION, &payload)
+}
+
+/// Deserialize + structurally validate a CSR shard.
+pub fn from_bytes(buf: &[u8]) -> Result<Csr> {
+    let (version, payload) = unframe(MAGIC, buf)?;
+    anyhow::ensure!(version == VERSION, "shard version {version}");
+    let (lo, p) = get_u32(payload, 0)?;
+    let (hi, p) = get_u32(payload, p)?;
+    anyhow::ensure!(lo < hi, "shard interval empty [{lo},{hi})");
+    let (row_ptr, p) = get_u32s(payload, p)?;
+    let (col, p) = get_u32s(payload, p)?;
+    anyhow::ensure!(p == payload.len(), "shard trailing bytes");
+    let csr = Csr { lo, hi, row_ptr, col };
+    csr.validate()?;
+    Ok(csr)
+}
+
+/// Write a shard through the accounting layer.
+pub fn save(csr: &Csr, path: &Path) -> Result<()> {
+    io::write_file(path, &to_bytes(csr))
+}
+
+/// Read a shard through the accounting layer.
+pub fn load(path: &Path) -> Result<Csr> {
+    from_bytes(&io::read_file(path)?)
+}
+
+/// On-disk size estimate without serializing (for cache budgeting).
+pub fn estimated_bytes(csr: &Csr) -> usize {
+    20 /* frame */ + 8 /* lo,hi */ + 16 /* array headers */
+        + (csr.row_ptr.len() + csr.col.len()) * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn sample() -> Csr {
+        Csr::from_edges(10, 13, &[(1, 10), (2, 10), (3, 12), (9, 11), (0, 10)])
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let a = sample();
+        let b = from_bytes(&to_bytes(&a)).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn estimated_size_is_exact_here() {
+        let a = sample();
+        assert_eq!(estimated_bytes(&a), to_bytes(&a).len());
+    }
+
+    #[test]
+    fn corrupt_and_truncated_rejected() {
+        let bytes = to_bytes(&sample());
+        for cut in [0, 5, bytes.len() - 1] {
+            assert!(from_bytes(&bytes[..cut]).is_err());
+        }
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x10;
+        assert!(from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("gmp_shard_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("shard_0000.gms");
+        let a = sample();
+        save(&a, &path).unwrap();
+        assert_eq!(load(&path).unwrap(), a);
+    }
+
+    #[test]
+    fn prop_arbitrary_shards_roundtrip() {
+        prop::check(0x5A4D, 40, |g| {
+            let lo = g.usize_in(0, 100) as u32;
+            let width = g.usize_in(1, 64) as u32;
+            let m = g.usize_in(0, 300);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| {
+                    (
+                        g.usize_in(0, 1000) as u32,
+                        lo + g.usize_in(0, width as usize) as u32,
+                    )
+                })
+                .collect();
+            let a = Csr::from_edges(lo, lo + width, &edges);
+            let b = from_bytes(&to_bytes(&a)).unwrap();
+            assert_eq!(a, b);
+        });
+    }
+}

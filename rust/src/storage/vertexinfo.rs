@@ -1,0 +1,111 @@
+//! The vertex information file (paper §II-B): per-vertex in-degree and
+//! out-degree arrays (and, at program end, the final vertex values).
+//! Framed binary (`GMVI`), CRC-checked.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::graph::Degrees;
+use crate::storage::format::{frame, get_f32s, get_u32s, put_f32s, put_u32s, unframe};
+use crate::storage::io;
+
+const MAGIC: &[u8; 4] = b"GMVI";
+const VERSION: u32 = 1;
+
+/// Vertex info: degrees plus optional persisted values.
+#[derive(Debug, Clone, Default)]
+pub struct VertexInfo {
+    pub degrees: Degrees,
+    /// Final vertex values (empty until a run persists results).
+    pub values: Vec<f32>,
+}
+
+impl VertexInfo {
+    pub fn new(degrees: Degrees) -> Self {
+        Self { degrees, values: Vec::new() }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.degrees.in_deg.len()
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut payload = Vec::new();
+        put_u32s(&mut payload, &self.degrees.in_deg);
+        put_u32s(&mut payload, &self.degrees.out_deg);
+        put_f32s(&mut payload, &self.values);
+        frame(MAGIC, VERSION, &payload)
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<Self> {
+        let (version, payload) = unframe(MAGIC, buf)?;
+        anyhow::ensure!(version == VERSION, "vertexinfo version {version}");
+        let (in_deg, p) = get_u32s(payload, 0)?;
+        let (out_deg, p) = get_u32s(payload, p)?;
+        let (values, p) = get_f32s(payload, p)?;
+        anyhow::ensure!(p == payload.len(), "vertexinfo trailing bytes");
+        anyhow::ensure!(in_deg.len() == out_deg.len(), "degree arrays disagree");
+        anyhow::ensure!(
+            values.is_empty() || values.len() == in_deg.len(),
+            "values length mismatch"
+        );
+        Ok(Self { degrees: Degrees { in_deg, out_deg }, values })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        io::write_file(path, &self.to_bytes())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_bytes(&io::read_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> VertexInfo {
+        VertexInfo {
+            degrees: Degrees { in_deg: vec![1, 2, 3], out_deg: vec![3, 2, 1] },
+            values: vec![0.5, 1.5, -2.0],
+        }
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let v = sample();
+        let w = VertexInfo::from_bytes(&v.to_bytes()).unwrap();
+        assert_eq!(w.degrees.in_deg, v.degrees.in_deg);
+        assert_eq!(w.degrees.out_deg, v.degrees.out_deg);
+        assert_eq!(w.values, v.values);
+    }
+
+    #[test]
+    fn empty_values_ok() {
+        let mut v = sample();
+        v.values.clear();
+        let w = VertexInfo::from_bytes(&v.to_bytes()).unwrap();
+        assert!(w.values.is_empty());
+    }
+
+    #[test]
+    fn corrupt_rejected() {
+        let mut bytes = sample().to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        assert!(VertexInfo::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("gmp_vi_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("vertexinfo.bin");
+        let v = sample();
+        v.save(&path).unwrap();
+        let w = VertexInfo::load(&path).unwrap();
+        assert_eq!(w.values, v.values);
+    }
+}

@@ -1,0 +1,214 @@
+//! Micro-benchmark harness (the offline crate set has no criterion).
+//!
+//! Provides warmup + repeated timed runs with median/mean/p95 statistics and
+//! a table printer used by every `rust/benches/*.rs` target (all declared
+//! with `harness = false`).  Deliberately simple: wall-clock `Instant`,
+//! black-box via `std::hint::black_box`, no outlier rejection beyond the
+//! median.
+
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+/// Statistics over a set of timed samples.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub samples: Vec<Duration>,
+}
+
+impl Stats {
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.samples.iter().sum();
+        total / self.samples.len().max(1) as u32
+    }
+
+    pub fn median(&self) -> Duration {
+        self.percentile(50.0)
+    }
+
+    pub fn min(&self) -> Duration {
+        self.samples.iter().copied().min().unwrap_or_default()
+    }
+
+    pub fn max(&self) -> Duration {
+        self.samples.iter().copied().max().unwrap_or_default()
+    }
+
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.samples.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut s = self.samples.clone();
+        s.sort_unstable();
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    /// Relative std-dev (coefficient of variation) in percent.
+    pub fn cv_percent(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let mean = self.mean().as_secs_f64();
+        if mean == 0.0 {
+            return 0.0;
+        }
+        let var = self
+            .samples
+            .iter()
+            .map(|d| {
+                let x = d.as_secs_f64() - mean;
+                x * x
+            })
+            .sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        100.0 * var.sqrt() / mean
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup: 2, iters: 7 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self { warmup: 1, iters: 3 }
+    }
+
+    /// Time `f` `iters` times after `warmup` unmeasured runs.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let samples = (0..self.iters.max(1))
+            .map(|_| {
+                let t0 = Instant::now();
+                f();
+                t0.elapsed()
+            })
+            .collect();
+        Stats { samples }
+    }
+}
+
+/// Fixed-width table printer for paper-style result rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$} | ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!(
+            "|{}|",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Render as markdown (for EXPERIMENTS.md capture).
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("### {}\n\n| {} |\n|{}|\n",
+            self.title,
+            self.headers.join(" | "),
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for row in &self.rows {
+            s.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats {
+            samples: vec![
+                Duration::from_millis(10),
+                Duration::from_millis(20),
+                Duration::from_millis(30),
+            ],
+        };
+        assert_eq!(s.mean(), Duration::from_millis(20));
+        assert_eq!(s.median(), Duration::from_millis(20));
+        assert_eq!(s.min(), Duration::from_millis(10));
+        assert_eq!(s.max(), Duration::from_millis(30));
+    }
+
+    #[test]
+    fn bench_runs_expected_count() {
+        let mut n = 0;
+        let b = Bench { warmup: 2, iters: 5 };
+        let stats = b.run(|| n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(stats.samples.len(), 5);
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        let s = Stats {
+            samples: (1..=100).map(Duration::from_millis).collect(),
+        };
+        assert_eq!(s.percentile(0.0), Duration::from_millis(1));
+        assert_eq!(s.percentile(100.0), Duration::from_millis(100));
+        assert!(s.percentile(95.0) >= Duration::from_millis(90));
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["1".into(), "xx".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | xx |"));
+    }
+
+    #[test]
+    fn cv_zero_for_identical() {
+        let s = Stats { samples: vec![Duration::from_millis(5); 4] };
+        assert!(s.cv_percent() < 1e-9);
+    }
+}

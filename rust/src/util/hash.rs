@@ -1,0 +1,94 @@
+//! Fast non-cryptographic hashing for the Bloom filters (§II-D.1).
+//!
+//! `hash64` is an xxHash64-style avalanche mix over a single `u64` key —
+//! exactly what the Bloom filter needs (vertex ids are `u32`/`u64`).  The
+//! double-hashing scheme `bloom_indexes` derives k bit positions from two
+//! independent 64-bit halves (Kirsch–Mitzenmacher).
+
+/// Strong 64-bit mix of a 64-bit key (finalizer from SplitMix64/xxh3).
+#[inline]
+pub fn hash64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Seeded variant: mixes the seed in before finalizing.
+#[inline]
+pub fn hash64_seeded(x: u64, seed: u64) -> u64 {
+    hash64(x ^ seed.wrapping_mul(0xA24BAED4963EE407))
+}
+
+/// FNV-1a over bytes, for hashing small byte strings (file headers etc.).
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Kirsch–Mitzenmacher double hashing: derive `k` indexes in `[0, m)` from
+/// one 64-bit hash. `m` must be > 0.
+#[inline]
+pub fn bloom_indexes(key: u64, k: u32, m: u64, out: &mut [u64]) {
+    debug_assert!(out.len() >= k as usize);
+    let h = hash64(key);
+    let h1 = h & 0xFFFF_FFFF;
+    let h2 = (h >> 32) | 1; // odd => full period mod powers of two
+    for (i, slot) in out.iter_mut().enumerate().take(k as usize) {
+        *slot = h1.wrapping_add(h2.wrapping_mul(i as u64)) % m;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash64_is_deterministic_and_spreads() {
+        assert_eq!(hash64(0), hash64(0));
+        assert_ne!(hash64(0), hash64(1));
+        // successive keys should differ in roughly half their bits
+        let d = (hash64(100) ^ hash64(101)).count_ones();
+        assert!((16..=48).contains(&d), "avalanche too weak: {d}");
+    }
+
+    #[test]
+    fn seeded_differs_per_seed() {
+        assert_ne!(hash64_seeded(42, 1), hash64_seeded(42, 2));
+    }
+
+    #[test]
+    fn fnv_known_vector() {
+        // FNV-1a("") = offset basis
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_ne!(fnv1a(b"a"), fnv1a(b"b"));
+    }
+
+    #[test]
+    fn bloom_indexes_in_range_and_distinctish() {
+        let mut out = [0u64; 8];
+        bloom_indexes(12345, 8, 1000, &mut out);
+        assert!(out.iter().all(|&i| i < 1000));
+        let mut uniq = out.to_vec();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert!(uniq.len() >= 6, "mostly distinct: {uniq:?}");
+    }
+
+    #[test]
+    fn hash_distribution_chi_square_ish() {
+        // 64 buckets, 64k keys: each bucket ~1024 ± a few sigma.
+        let mut counts = [0u32; 64];
+        for key in 0..65536u64 {
+            counts[(hash64(key) % 64) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((900..1150).contains(&c), "bucket skew: {c}");
+        }
+    }
+}

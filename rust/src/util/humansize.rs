@@ -1,0 +1,86 @@
+//! Human-readable formatting for byte counts, edge rates and durations —
+//! used by the CLI, examples and bench reports.
+
+use std::time::Duration;
+
+/// `1536 -> "1.50 KiB"`, `0 -> "0 B"`.
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    if n < 1024 {
+        return format!("{n} B");
+    }
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+/// `1_500_000 -> "1.50M"`, plain counts.
+pub fn count(n: u64) -> String {
+    const UNITS: [&str; 5] = ["", "K", "M", "B", "T"];
+    if n < 1000 {
+        return format!("{n}");
+    }
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1000.0 && u < UNITS.len() - 1 {
+        v /= 1000.0;
+        u += 1;
+    }
+    format!("{v:.2}{}", UNITS[u])
+}
+
+/// Edges-per-second rate, the paper's Table I performance unit.
+pub fn rate(edges: u64, dur: Duration) -> String {
+    let secs = dur.as_secs_f64().max(1e-12);
+    format!("{}/s", count((edges as f64 / secs) as u64))
+}
+
+/// `Duration` with adaptive units.
+pub fn duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 60.0 {
+        format!("{:.0}m{:.1}s", (s / 60.0).floor(), s % 60.0)
+    } else if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_fmt() {
+        assert_eq!(bytes(0), "0 B");
+        assert_eq!(bytes(1023), "1023 B");
+        assert_eq!(bytes(1536), "1.50 KiB");
+        assert_eq!(bytes(1 << 30), "1.00 GiB");
+    }
+
+    #[test]
+    fn count_fmt() {
+        assert_eq!(count(999), "999");
+        assert_eq!(count(1_500_000), "1.50M");
+        assert_eq!(count(91_800_000_000), "91.80B");
+    }
+
+    #[test]
+    fn duration_fmt() {
+        assert_eq!(duration(Duration::from_secs(90)), "1m30.0s");
+        assert_eq!(duration(Duration::from_millis(1500)), "1.50s");
+        assert_eq!(duration(Duration::from_micros(250)), "250.00µs");
+    }
+
+    #[test]
+    fn rate_fmt() {
+        assert_eq!(rate(2_000_000, Duration::from_secs(2)), "1.00M/s");
+    }
+}

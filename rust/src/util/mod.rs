@@ -1,0 +1,45 @@
+//! Substrate utilities built from scratch (the image has no serde / rayon /
+//! clap / criterion in its offline crate set, so this crate carries its own
+//! minimal equivalents).
+
+pub mod bench;
+pub mod bitset;
+pub mod hash;
+pub mod humansize;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;
+pub mod varint;
+
+/// Round `n` up to the next multiple of `m` (m > 0).
+pub fn round_up(n: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    n.div_ceil(m) * m
+}
+
+/// Integer ceiling division.
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basic() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn div_ceil_basic() {
+        assert_eq!(div_ceil(0, 4), 0);
+        assert_eq!(div_ceil(1, 4), 1);
+        assert_eq!(div_ceil(4, 4), 1);
+        assert_eq!(div_ceil(5, 4), 2);
+    }
+}

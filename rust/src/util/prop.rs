@@ -1,0 +1,108 @@
+//! Tiny property-testing harness (the offline crate set has no proptest).
+//!
+//! `check(seed, cases, |g| ...)` runs a closure against `cases` randomly
+//! generated inputs drawn through the [`Gen`] handle; on failure it reports
+//! the case seed so the exact input can be replayed deterministically.
+//! Used by coordinator/engine invariant tests (routing, batching, state).
+
+use crate::util::rng::Xoshiro256;
+
+/// Random-input source handed to property bodies.
+pub struct Gen {
+    rng: Xoshiro256,
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_usize(lo, hi)
+    }
+
+    pub fn f32_unit(&mut self) -> f32 {
+        self.rng.next_f32()
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Vector of length in `[min_len, max_len)` filled by `f`.
+    pub fn vec<T>(&mut self, min_len: usize, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = if min_len + 1 >= max_len { min_len } else { self.usize_in(min_len, max_len) };
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Random edge list over `n` vertices with `m` edges.
+    pub fn edges(&mut self, n: usize, m: usize) -> Vec<(u32, u32)> {
+        (0..m)
+            .map(|_| (self.usize_in(0, n) as u32, self.usize_in(0, n) as u32))
+            .collect()
+    }
+}
+
+/// Run `body` against `cases` random inputs.  Panics (with the replay seed)
+/// on the first failing case.
+pub fn check<F: FnMut(&mut Gen)>(seed: u64, cases: usize, mut body: F) {
+    let mut meta = Xoshiro256::seed_from_u64(seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut g = Gen { rng: Xoshiro256::seed_from_u64(case_seed), case_seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(e) = result {
+            eprintln!(
+                "property failed: top seed {seed}, case {case}, replay with case_seed {case_seed}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Replay a single case by its `case_seed` (printed on failure).
+pub fn replay<F: FnMut(&mut Gen)>(case_seed: u64, mut body: F) {
+    let mut g = Gen { rng: Xoshiro256::seed_from_u64(case_seed), case_seed };
+    body(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check(1, 50, |_| n += 1);
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        check(7, 3, |g| a.push(g.u64()));
+        check(7, 3, |g| b.push(g.u64()));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        check(2, 10, |g| assert!(g.usize_in(0, 10) < 5));
+    }
+
+    #[test]
+    fn edges_in_bounds() {
+        check(3, 20, |g| {
+            let n = g.usize_in(1, 50);
+            let edges = g.edges(n, 100);
+            assert!(edges.iter().all(|&(u, v)| (u as usize) < n && (v as usize) < n));
+        });
+    }
+}

@@ -1,0 +1,234 @@
+//! Parallel-for substrate — the OpenMP replacement.
+//!
+//! The paper parallelizes shard processing with
+//! `#pragma omp parallel for num_threads(N)` (Algorithm 1, line 3).  The
+//! offline crate set has no rayon, so this module provides:
+//!
+//! * [`parallel_for`] — scoped, chunk-self-scheduling parallel loop
+//!   (spawns per call; fine for coarse work).
+//! * [`ThreadPool`] — persistent workers for the engine's per-iteration hot
+//!   loop, avoiding thread spawn cost every iteration.
+//!
+//! Both use dynamic self-scheduling over an atomic cursor, which mirrors
+//! OpenMP's `schedule(dynamic)` — important because shard processing times
+//! vary wildly once selective scheduling starts skipping shards.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+
+/// Number of worker threads to use by default (like OpenMP's
+/// `OMP_NUM_THREADS` fallback): the machine's available parallelism.
+pub fn default_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `f(i)` for every `i in 0..n` on `threads` workers.  `f` must be
+/// `Sync` (it is shared by reference), and items are claimed one at a time
+/// from an atomic cursor (dynamic schedule, chunk = 1: shard-sized work
+/// items are coarse enough that finer chunking is pure overhead).
+pub fn parallel_for<F: Fn(usize) + Sync>(threads: usize, n: usize, f: F) {
+    if n == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Like [`parallel_for`] but each worker owns a mutable slot of `state`,
+/// enabling lock-free per-thread accumulators (`state.len()` must be >=
+/// `threads`).  Worker `t` receives `(&mut state[t], item)` calls.
+pub fn parallel_for_with<S: Send, F: Fn(&mut S, usize) + Sync>(
+    threads: usize,
+    n: usize,
+    state: &mut [S],
+    f: F,
+) {
+    if n == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, n.min(state.len()));
+    let cursor = AtomicUsize::new(0);
+    thread::scope(|s| {
+        for slot in state.iter_mut().take(threads) {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(slot, i);
+            });
+        }
+    });
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolShared {
+    done: Mutex<usize>,
+    cv: Condvar,
+}
+
+/// Persistent thread pool with a blocking `run_batch`.  Workers live for the
+/// pool's lifetime; each `run_batch` dispatches one closure per worker and
+/// waits for all of them — the engine uses it with an atomic item cursor to
+/// get a pooled `parallel_for` without per-iteration spawns.
+pub struct ThreadPool {
+    tx: Vec<mpsc::Sender<Job>>,
+    shared: Arc<PoolShared>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared { done: Mutex::new(0), cv: Condvar::new() });
+        let mut tx = Vec::with_capacity(threads);
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let (s, r) = mpsc::channel::<Job>();
+            tx.push(s);
+            let shared = shared.clone();
+            handles.push(thread::spawn(move || {
+                while let Ok(job) = r.recv() {
+                    job();
+                    let mut done = shared.done.lock().unwrap();
+                    *done += 1;
+                    shared.cv.notify_all();
+                }
+            }));
+        }
+        Self { tx, shared, handles }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.tx.len()
+    }
+
+    /// Run `f(i)` for `i in 0..n` across the pool's workers (dynamic
+    /// self-scheduling).  Blocks until every item is processed.
+    pub fn parallel_for<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
+        if n == 0 {
+            return;
+        }
+        let workers = self.tx.len().min(n);
+        // SAFETY-free trick: we hand each worker an Arc'd closure over a
+        // scoped borrow by boxing a 'static shim around raw pointers would be
+        // unsound; instead we copy the borrow into an Arc<dyn Fn> via a
+        // transmute-free channel: wrap in Arc and extend lifetime through a
+        // blocking join below. We guarantee the borrow outlives the batch by
+        // waiting on the done-counter before returning.
+        let cursor = Arc::new(AtomicUsize::new(0));
+        {
+            let mut done = self.shared.done.lock().unwrap();
+            *done = 0;
+        }
+        // Extend the lifetime of `f` to 'static for the duration of the
+        // batch. Sound because `parallel_for` blocks until all workers have
+        // finished running the closure (done-counter wait below), so the
+        // reference never outlives the borrow.
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        let f_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(f_ref) };
+        for t in 0..workers {
+            let cursor = cursor.clone();
+            let job: Job = Box::new(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f_static(i);
+            });
+            self.tx[t].send(job).expect("worker alive");
+        }
+        let mut done = self.shared.done.lock().unwrap();
+        while *done < workers {
+            done = self.shared.cv.wait(done).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.clear(); // close channels => workers exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_all_items_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(8, n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_zero_and_one() {
+        parallel_for(4, 0, |_| panic!("no items"));
+        let sum = AtomicU64::new(0);
+        parallel_for(4, 1, |i| {
+            sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn parallel_for_with_thread_state() {
+        let n = 1000;
+        let mut sums = vec![0u64; 4];
+        parallel_for_with(4, n, &mut sums, |acc, i| {
+            *acc += i as u64;
+        });
+        let total: u64 = sums.iter().sum();
+        assert_eq!(total, (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn pool_runs_batches_repeatedly() {
+        let pool = ThreadPool::new(4);
+        for round in 0..5 {
+            let sum = AtomicU64::new(0);
+            pool.parallel_for(100, |i| {
+                sum.fetch_add(i as u64, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 4950, "round {round}");
+        }
+    }
+
+    #[test]
+    fn pool_more_items_than_threads() {
+        let pool = ThreadPool::new(2);
+        let hits: Vec<AtomicUsize> = (0..5000).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_for(5000, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+}

@@ -1,0 +1,148 @@
+//! LEB128 variable-length integers + zigzag, used by the delta-varint shard
+//! codec (`cache::deltavarint`) and the compact on-disk formats.
+
+/// Append `v` as unsigned LEB128 to `out`. Returns bytes written (1..=10).
+#[inline]
+pub fn write_u64(out: &mut Vec<u8>, mut v: u64) -> usize {
+    let mut n = 0;
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        n += 1;
+        if v == 0 {
+            out.push(byte);
+            return n;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Read an unsigned LEB128 from `buf[pos..]`. Returns `(value, new_pos)`.
+#[inline]
+pub fn read_u64(buf: &[u8], mut pos: usize) -> Option<(u64, usize)> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let &byte = buf.get(pos)?;
+        pos += 1;
+        if shift == 63 && byte > 1 {
+            return None; // overflow
+        }
+        v |= ((byte & 0x7F) as u64) << shift;
+        if byte & 0x80 == 0 {
+            return Some((v, pos));
+        }
+        shift += 7;
+        if shift > 63 {
+            return None;
+        }
+    }
+}
+
+/// Zigzag encode: maps signed to unsigned preserving small magnitudes.
+#[inline]
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Zigzag decode.
+#[inline]
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+/// Append `v` as zigzag LEB128.
+#[inline]
+pub fn write_i64(out: &mut Vec<u8>, v: i64) -> usize {
+    write_u64(out, zigzag(v))
+}
+
+/// Read a zigzag LEB128.
+#[inline]
+pub fn read_i64(buf: &[u8], pos: usize) -> Option<(i64, usize)> {
+    read_u64(buf, pos).map(|(v, p)| (unzigzag(v), p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn roundtrip_u64_edges() {
+        for v in [0u64, 1, 127, 128, 255, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            write_u64(&mut buf, v);
+            let (got, pos) = read_u64(&buf, 0).unwrap();
+            assert_eq!(got, v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn roundtrip_i64_edges() {
+        for v in [0i64, 1, -1, 63, -64, i32::MIN as i64, i64::MAX, i64::MIN] {
+            let mut buf = Vec::new();
+            write_i64(&mut buf, v);
+            let (got, pos) = read_i64(&buf, 0).unwrap();
+            assert_eq!(got, v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn size_is_minimal() {
+        let mut buf = Vec::new();
+        write_u64(&mut buf, 127);
+        assert_eq!(buf.len(), 1);
+        buf.clear();
+        write_u64(&mut buf, 128);
+        assert_eq!(buf.len(), 2);
+        buf.clear();
+        write_u64(&mut buf, u64::MAX);
+        assert_eq!(buf.len(), 10);
+    }
+
+    #[test]
+    fn truncated_input_is_none() {
+        let mut buf = Vec::new();
+        write_u64(&mut buf, u64::MAX);
+        for cut in 0..buf.len() {
+            assert!(read_u64(&buf[..cut], 0).is_none());
+        }
+    }
+
+    #[test]
+    fn zigzag_small_magnitudes_are_small() {
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+        assert_eq!(zigzag(-2), 3);
+        for v in -1000i64..1000 {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_stream() {
+        // property: any sequence of u64s round-trips through a single buffer
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        for _ in 0..100 {
+            let n = rng.range_usize(1, 64);
+            let vals: Vec<u64> = (0..n)
+                .map(|_| rng.next_u64() >> rng.gen_range(64))
+                .collect();
+            let mut buf = Vec::new();
+            for &v in &vals {
+                write_u64(&mut buf, v);
+            }
+            let mut pos = 0;
+            for &v in &vals {
+                let (got, p) = read_u64(&buf, pos).unwrap();
+                assert_eq!(got, v);
+                pos = p;
+            }
+            assert_eq!(pos, buf.len());
+        }
+    }
+}

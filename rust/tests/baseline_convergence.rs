@@ -1,0 +1,129 @@
+//! Integration: all five baseline engines and the VSW engine converge to
+//! the same fixpoints on the same graph — the precondition for any of the
+//! paper's cross-system comparisons to be meaningful.
+
+use graphmp::apps::{PageRank, ProgramContext, Sssp, VertexProgram, Wcc};
+use graphmp::baselines::{DswEngine, EsgEngine, InMemEngine, OocEngine, PswEngine, VspEngine};
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::graph::generator;
+use graphmp::sharding::{preprocess, PreprocessConfig};
+use graphmp::storage::DatasetDir;
+
+const N: usize = 256;
+
+fn edges() -> Vec<(u32, u32)> {
+    let mut e = generator::rmat(8, 2500, generator::RmatParams::default(), 314);
+    // symmetrize so WCC components are well-defined and SSSP reaches more
+    let rev: Vec<_> = e.iter().map(|&(s, d)| (d, s)).collect();
+    e.extend(rev);
+    e
+}
+
+fn baseline_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("gmp_conv_{tag}_{}", std::process::id()))
+}
+
+fn engines() -> Vec<Box<dyn OocEngine>> {
+    vec![
+        Box::new(PswEngine::new(baseline_dir("psw"))),
+        Box::new(EsgEngine::new(baseline_dir("esg"))),
+        Box::new(DswEngine::new(baseline_dir("dsw"))),
+        Box::new(VspEngine::new(baseline_dir("vsp"))),
+        Box::new(InMemEngine::new()),
+    ]
+}
+
+fn vsw_run(app: &dyn VertexProgram, max_iters: usize) -> Vec<f32> {
+    let dir = DatasetDir::new(baseline_dir("vsw"));
+    let _ = std::fs::remove_dir_all(&dir.root);
+    preprocess(
+        "conv",
+        &edges(),
+        N,
+        &dir,
+        &PreprocessConfig { max_edges_per_shard: 1024, bloom_fpr: 0.01 },
+    )
+    .unwrap();
+    let engine = VswEngine::open(dir, EngineConfig { max_iters, ..Default::default() }).unwrap();
+    engine.run(app).unwrap().values
+}
+
+#[test]
+fn all_engines_agree_on_pagerank() {
+    let want = vsw_run(&PageRank::default(), 8);
+    let e = edges();
+    for mut eng in engines() {
+        eng.prepare(&e, N).unwrap();
+        let run = eng.run(&PageRank::default(), 8).unwrap();
+        assert_eq!(run.values.len(), N, "{}", eng.name());
+        for (i, (a, b)) in run.values.iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4 * b.abs().max(1e-6),
+                "{} v{i}: {a} vs {b}",
+                eng.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn all_engines_agree_on_sssp() {
+    let app = Sssp { source: 0 };
+    let want = vsw_run(&app, 0);
+    let e = edges();
+    for mut eng in engines() {
+        eng.prepare(&e, N).unwrap();
+        let run = eng.run(&app, 500).unwrap();
+        for (i, (a, b)) in run.values.iter().zip(&want).enumerate() {
+            assert!(
+                (a.is_infinite() && b.is_infinite()) || a == b,
+                "{} v{i}: {a} vs {b}",
+                eng.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn all_engines_agree_on_wcc() {
+    let want = vsw_run(&Wcc, 0);
+    let e = edges();
+    for mut eng in engines() {
+        eng.prepare(&e, N).unwrap();
+        let run = eng.run(&Wcc, 500).unwrap();
+        assert_eq!(run.values, want, "{}", eng.name());
+    }
+}
+
+#[test]
+fn io_ordering_matches_table2_shape() {
+    // per-iteration read volume: PSW > ESG > {DSW, VSP} > VSW(cached)=0
+    let e = edges();
+    let app = PageRank::default();
+    let mut read_per_iter = std::collections::BTreeMap::new();
+    for mut eng in engines() {
+        eng.prepare(&e, N).unwrap();
+        let run = eng.run(&app, 4).unwrap();
+        if run.iter_io.len() >= 2 {
+            // skip iter 0 (cold); measure steady state
+            read_per_iter.insert(eng.name().to_string(), run.iter_io[1].bytes_read);
+        }
+    }
+    let psw = read_per_iter["psw(graphchi)"];
+    let esg = read_per_iter["esg(x-stream)"];
+    let vsp = read_per_iter["vsp(venus)"];
+    let inm = read_per_iter["inmem(graphmat)"];
+    assert!(psw > esg, "PSW {psw} should out-read ESG {esg}");
+    assert!(esg > vsp, "ESG {esg} should out-read VSP {vsp}");
+    assert_eq!(inm, 0, "in-memory engine must not touch disk");
+
+    // VSW with full cache: zero steady-state reads
+    let ctx = ProgramContext { num_vertices: N as u64 };
+    let _ = ctx;
+    let dir = DatasetDir::new(baseline_dir("vsw_io"));
+    let _ = std::fs::remove_dir_all(&dir.root);
+    preprocess("io", &e, N, &dir, &PreprocessConfig::default()).unwrap();
+    let engine = VswEngine::open(dir, EngineConfig { max_iters: 4, ..Default::default() }).unwrap();
+    let run = engine.run(&app).unwrap();
+    assert_eq!(run.stats.iters[1].io.bytes_read, 0, "VSW cached should read 0");
+}

@@ -1,0 +1,125 @@
+//! Black-box tests of the `graphmp` binary itself: the generate →
+//! preprocess → info → run → baseline flow a user follows, driven through
+//! real process invocations.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_graphmp"))
+}
+
+fn workdir() -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gmp_clibin_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let out = bin().output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["generate", "preprocess", "run", "baseline", "info", "datasets"] {
+        assert!(text.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn datasets_prints_registry() {
+    let out = bin().arg("datasets").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("twitter-s") && text.contains("eu2015-s"));
+}
+
+#[test]
+fn full_user_flow() {
+    let d = workdir();
+    let edges = d.join("tiny.bin");
+    let data = d.join("tiny.gmp");
+
+    let out = bin()
+        .args(["generate", "--dataset", "tiny", "--out"])
+        .arg(&edges)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let out = bin()
+        .args(["preprocess", "--input"])
+        .arg(&edges)
+        .args(["--out"])
+        .arg(&data)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let out = bin().args(["info", "--data"]).arg(&data).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("edges:       4000"), "{text}");
+
+    let out = bin()
+        .args(["run", "--data"])
+        .arg(&data)
+        .args(["--app", "pagerank", "--iters", "3"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("iters=3"), "{text}");
+
+    let out = bin()
+        .args(["baseline", "--system", "dsw", "--data"])
+        .arg(&edges)
+        .args(["--app", "wcc", "--iters", "20"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("gridgraph"));
+}
+
+#[test]
+fn bad_inputs_fail_with_nonzero_exit() {
+    // unknown dataset
+    let out = bin()
+        .args(["generate", "--dataset", "nope", "--out", "/tmp/x"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown dataset"));
+
+    // run on a non-dataset
+    let out = bin()
+        .args(["run", "--data", "/definitely/not/there", "--app", "pr"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+
+    // missing required flag
+    let out = bin().args(["preprocess"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn symmetrize_doubles_edges() {
+    let d = workdir();
+    let edges = d.join("sym.bin");
+    let data = d.join("sym.gmp");
+    bin()
+        .args(["generate", "--dataset", "tiny", "--out"])
+        .arg(&edges)
+        .output()
+        .unwrap();
+    bin()
+        .args(["preprocess", "--symmetrize", "--input"])
+        .arg(&edges)
+        .args(["--out"])
+        .arg(&data)
+        .output()
+        .unwrap();
+    let out = bin().args(["info", "--data"]).arg(&data).output().unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("edges:       8000"), "{text}");
+}

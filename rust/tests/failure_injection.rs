@@ -1,0 +1,113 @@
+//! Failure injection: corruption, truncation and inconsistency in a
+//! preprocessed dataset must fail loudly at open/run time — never produce
+//! silently-wrong results.
+
+use graphmp::apps::PageRank;
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::graph::generator;
+use graphmp::sharding::{preprocess, PreprocessConfig};
+use graphmp::storage::DatasetDir;
+
+fn build(tag: &str) -> DatasetDir {
+    let dir = DatasetDir::new(
+        std::env::temp_dir().join(format!("gmp_fi_{tag}_{}", std::process::id())),
+    );
+    let _ = std::fs::remove_dir_all(&dir.root);
+    let edges = generator::erdos_renyi(200, 2000, 5);
+    preprocess(
+        tag,
+        &edges,
+        200,
+        &dir,
+        &PreprocessConfig { max_edges_per_shard: 256, bloom_fpr: 0.01 },
+    )
+    .unwrap();
+    dir
+}
+
+fn open_and_run(dir: DatasetDir) -> anyhow::Result<()> {
+    // cache disabled so shard reads happen lazily during run (exercising the
+    // run-time read path, not just open-time warming)
+    let engine = VswEngine::open(
+        dir,
+        EngineConfig { cache_budget: 0, max_iters: 2, ..Default::default() },
+    )?;
+    engine.run(&PageRank::default())?;
+    Ok(())
+}
+
+#[test]
+fn clean_dataset_runs() {
+    let dir = build("clean");
+    open_and_run(dir).expect("clean dataset must run");
+}
+
+#[test]
+fn bitflipped_shard_is_detected() {
+    let dir = build("flip");
+    let shard = dir.shard_path(1);
+    let mut bytes = std::fs::read(&shard).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&shard, bytes).unwrap();
+    let err = open_and_run(dir).expect_err("bitflip must be detected");
+    let msg = format!("{err:#}");
+    assert!(msg.to_lowercase().contains("crc"), "unexpected error: {msg}");
+}
+
+#[test]
+fn truncated_shard_is_detected() {
+    let dir = build("trunc");
+    let shard = dir.shard_path(0);
+    let bytes = std::fs::read(&shard).unwrap();
+    std::fs::write(&shard, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(open_and_run(dir).is_err());
+}
+
+#[test]
+fn missing_shard_is_detected() {
+    let dir = build("missing");
+    std::fs::remove_file(dir.shard_path(0)).unwrap();
+    assert!(open_and_run(dir).is_err());
+}
+
+#[test]
+fn corrupt_bloom_is_detected_at_open() {
+    let dir = build("bloom");
+    let bloom = dir.bloom_path(0);
+    let mut bytes = std::fs::read(&bloom).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&bloom, bytes).unwrap();
+    assert!(
+        VswEngine::open(dir, EngineConfig::default()).is_err(),
+        "corrupt bloom must fail open()"
+    );
+}
+
+#[test]
+fn vertexinfo_property_mismatch_is_detected() {
+    let dir = build("mismatch");
+    // swap in a vertexinfo from a smaller graph
+    let other = build("mismatch_other_src");
+    let small_edges = generator::erdos_renyi(50, 200, 6);
+    let small = DatasetDir::new(
+        std::env::temp_dir().join(format!("gmp_fi_small_{}", std::process::id())),
+    );
+    let _ = std::fs::remove_dir_all(&small.root);
+    preprocess("s", &small_edges, 50, &small, &PreprocessConfig::default()).unwrap();
+    std::fs::copy(small.vertexinfo_path(), dir.vertexinfo_path()).unwrap();
+    let _ = other;
+    assert!(VswEngine::open(dir, EngineConfig::default()).is_err());
+}
+
+#[test]
+fn tampered_property_intervals_rejected() {
+    let dir = build("prop");
+    let text = std::fs::read_to_string(dir.property_path()).unwrap();
+    // break monotonicity of the interval list
+    let bad = text.replacen("\"intervals\":[0,", "\"intervals\":[5,", 1);
+    assert_ne!(text, bad, "fixture should contain the interval header");
+    std::fs::write(dir.property_path(), bad).unwrap();
+    assert!(VswEngine::open(dir, EngineConfig::default()).is_err());
+}

@@ -1,0 +1,84 @@
+//! Full-pipeline integration through the public API exactly as the CLI
+//! drives it: generate → write edge list → preprocess → open → run each
+//! app → check cross-app invariants on a power-law multigraph.
+
+use graphmp::apps::{Bfs, PageRank, SpMv, Sssp, VertexProgram, Wcc};
+use graphmp::coordinator::datasets::Dataset;
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::graph::edgelist;
+use graphmp::sharding::{preprocess, PreprocessConfig};
+use graphmp::storage::DatasetDir;
+
+fn build_pipeline() -> (DatasetDir, usize) {
+    let d = Dataset::by_name("tiny").unwrap();
+    let edges = d.generate();
+    let tmp = std::env::temp_dir().join(format!("gmp_cli_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+
+    // exercise the on-disk interchange (binary edge list) like the CLI does
+    let el = tmp.join("edges.bin");
+    edgelist::write_binary(&el, &edges).unwrap();
+    let edges = edgelist::read_auto(&el).unwrap();
+
+    let dir = DatasetDir::new(tmp.join("data.gmp"));
+    preprocess("tiny", &edges, d.num_vertices(), &dir, &PreprocessConfig::default()).unwrap();
+    (dir, d.num_vertices())
+}
+
+fn run(dir: &DatasetDir, app: &dyn VertexProgram, iters: usize) -> Vec<f32> {
+    let engine = VswEngine::open(dir.clone(), EngineConfig { max_iters: iters, ..Default::default() })
+        .unwrap();
+    engine.run(app).unwrap().values
+}
+
+#[test]
+fn all_apps_run_and_satisfy_invariants() {
+    let (dir, n) = build_pipeline();
+
+    // PageRank: all positive, bounded by 1
+    let pr = run(&dir, &PageRank::default(), 10);
+    assert_eq!(pr.len(), n);
+    assert!(pr.iter().all(|&r| r > 0.0 && r < 1.0));
+
+    // SSSP and BFS agree on unweighted graphs
+    let sssp = run(&dir, &Sssp { source: 0 }, 0);
+    let bfs = run(&dir, &Bfs { root: 0 }, 0);
+    assert_eq!(sssp, bfs, "unit-weight SSSP must equal BFS levels");
+    assert_eq!(sssp[0], 0.0);
+
+    // WCC labels are component-minimal: label[v] <= v
+    let wcc = run(&dir, &Wcc, 0);
+    for (v, &c) in wcc.iter().enumerate() {
+        assert!(c <= v as f32, "label above own id at {v}");
+    }
+
+    // SpMV: y = A^T x  — total mass preserved modulo out-degree weighting
+    let spmv = run(&dir, &SpMv { seed: 7 }, 1);
+    assert_eq!(spmv.len(), n);
+    assert!(spmv.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn rerunning_on_same_dataset_is_deterministic() {
+    let (dir, _) = build_pipeline();
+    let a = run(&dir, &PageRank::default(), 5);
+    let b = run(&dir, &PageRank::default(), 5);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn thread_count_does_not_change_results() {
+    let (dir, _) = build_pipeline();
+    let mut results = Vec::new();
+    for threads in [1usize, 2, 8] {
+        let engine = VswEngine::open(
+            dir.clone(),
+            EngineConfig { max_iters: 6, threads, ..Default::default() },
+        )
+        .unwrap();
+        results.push(engine.run(&PageRank::default()).unwrap().values);
+    }
+    assert_eq!(results[0], results[1], "1 vs 2 threads");
+    assert_eq!(results[1], results[2], "2 vs 8 threads");
+}

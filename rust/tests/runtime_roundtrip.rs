@@ -1,0 +1,86 @@
+//! Integration test: the full AOT round trip.
+//!
+//! `make artifacts` (python/jax/pallas) must have produced `artifacts/`;
+//! this test loads the HLO text through PJRT and checks the kernels against
+//! a native rust oracle on random shard-shaped inputs.
+//!
+//! Skipped (with a loud message) if `artifacts/` is absent so that plain
+//! `cargo test` still passes before the first `make artifacts`.
+
+use std::path::PathBuf;
+
+use graphmp::runtime::ShardRuntime;
+use graphmp::util::rng::Xoshiro256;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn native_segsum(contrib: &[f32], dst: &[u32], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    for (c, &d) in contrib.iter().zip(dst) {
+        out[d as usize] += c;
+    }
+    out
+}
+
+fn native_segmin(contrib: &[f32], dst: &[u32], n: usize) -> Vec<f32> {
+    let mut out = vec![f32::INFINITY; n];
+    for (&c, &d) in contrib.iter().zip(dst) {
+        out[d as usize] = out[d as usize].min(c);
+    }
+    out
+}
+
+#[test]
+fn pjrt_kernels_match_native_oracle() {
+    let Some(dir) = artifact_dir() else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return;
+    };
+    let rt = ShardRuntime::load(&dir).expect("load artifacts");
+    let g = rt.geometry;
+    let mut rng = Xoshiro256::seed_from_u64(12345);
+
+    for trial in 0..3 {
+        let n_vertices = [1usize, 100, g.v_max][trial];
+        let n_edges = [1usize, 5_000, g.e_max][trial];
+        let contrib: Vec<f32> = (0..n_edges).map(|_| rng.next_f32()).collect();
+        let dst: Vec<u32> = (0..n_edges)
+            .map(|_| rng.range_usize(0, n_vertices) as u32)
+            .collect();
+
+        // segsum
+        let got = rt.segsum_shard(&contrib, &dst, n_vertices).unwrap();
+        let want = native_segsum(&contrib, &dst, n_vertices);
+        assert_eq!(got.len(), want.len());
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-3 * b.abs().max(1.0),
+                "segsum trial {trial} lane {i}: {a} vs {b}"
+            );
+        }
+
+        // pr_shard = 0.15/N + 0.85*segsum
+        let inv_n = 1.0 / 1000.0f32;
+        let got = rt.pr_shard(&contrib, &dst, inv_n, n_vertices).unwrap();
+        for (i, (a, s)) in got.iter().zip(&want).enumerate() {
+            let b = 0.15 * inv_n + 0.85 * s;
+            assert!(
+                (a - b).abs() <= 1e-3 * b.abs().max(1.0),
+                "pr trial {trial} lane {i}: {a} vs {b}"
+            );
+        }
+
+        // relaxmin = min(old, segmin)
+        let old: Vec<f32> = (0..n_vertices).map(|_| rng.next_f32() * 2.0).collect();
+        let got = rt.relaxmin_shard(&contrib, &dst, &old, n_vertices).unwrap();
+        let mins = native_segmin(&contrib, &dst, n_vertices);
+        for i in 0..n_vertices {
+            let b = old[i].min(mins[i]);
+            assert!((got[i] - b).abs() <= 1e-6, "relaxmin trial {trial} lane {i}");
+        }
+    }
+    assert!(rt.call_count() >= 9);
+}
