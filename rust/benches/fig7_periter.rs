@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
     ];
     let mut table = Table::new(
         "Fig7 processing time (loading excluded), twitter-s",
-        &["app", "GraphMP", "GraphMat", "GraphMP iters", "GraphMat iters"],
+        &["app", "GraphMP", "io wait", "compute", "GraphMat", "GraphMP iters", "GraphMat iters"],
     );
 
     for (app, iters) in &apps_list {
@@ -45,6 +45,10 @@ fn main() -> anyhow::Result<()> {
         table.row(&[
             app.name().into(),
             humansize::duration(g.stats.total_wall),
+            // acquisition vs kernel time: with the prefetch pipeline the io
+            // wait column is only the *unhidden* part of shard loading
+            humansize::duration(g.stats.total_io_wait()),
+            humansize::duration(g.stats.total_compute()),
             humansize::duration(m.total_wall),
             g.stats.num_iters().to_string(),
             m.iter_walls.len().to_string(),

@@ -81,7 +81,11 @@ pub fn write_values(path: &Path, vals: &[f32]) -> Result<()> {
 
 /// Read an f32 value array.
 pub fn read_values(path: &Path) -> Result<Vec<f32>> {
-    let buf = io::read_file(path)?;
+    values_from_bytes(&io::read_file(path)?)
+}
+
+/// Decode an f32 value array from raw LE bytes (the read-ahead path).
+pub fn values_from_bytes(buf: &[u8]) -> Result<Vec<f32>> {
     anyhow::ensure!(buf.len() % 4 == 0, "value file not 4-aligned");
     Ok(buf
         .chunks_exact(4)
@@ -101,7 +105,11 @@ pub fn write_edges(path: &Path, edges: &[Edge]) -> Result<()> {
 
 /// Read raw (src,dst) pairs.
 pub fn read_edges(path: &Path) -> Result<Vec<Edge>> {
-    let buf = io::read_file(path)?;
+    edges_from_bytes(&io::read_file(path)?)
+}
+
+/// Decode raw (src,dst) pairs from LE bytes (the read-ahead path).
+pub fn edges_from_bytes(buf: &[u8]) -> Result<Vec<Edge>> {
     anyhow::ensure!(buf.len() % 8 == 0, "edge file not 8-aligned");
     Ok(buf
         .chunks_exact(8)
@@ -112,6 +120,25 @@ pub fn read_edges(path: &Path) -> Result<Vec<Edge>> {
             )
         })
         .collect())
+}
+
+/// File read-ahead depth the baseline engines stream their per-iteration
+/// files with.  The baselines model single-disk systems, so a shallow
+/// ordered read-ahead (overlap the *next* file with current compute) keeps
+/// the comparison with GraphMP's pipelined engine fair without changing
+/// any engine's byte accounting: same files, same order, same counters.
+pub const READ_AHEAD_DEPTH: usize = 2;
+
+/// Pull the next read-ahead item, which must exist (the schedule length is
+/// fixed before iteration starts).
+pub fn next_buf(
+    stream: &mut crate::storage::prefetch::ReadAhead,
+    what: &'static str,
+) -> Result<Vec<u8>> {
+    match stream.next() {
+        Some(r) => r,
+        None => anyhow::bail!("read-ahead stream exhausted early at {what}"),
+    }
 }
 
 /// Fresh working directory for an engine.

@@ -28,6 +28,7 @@ use crate::apps::{ProgramContext, VertexProgram};
 use crate::baselines::common::{self, BaselineRun, OocEngine};
 use crate::graph::{Degrees, Edge, VertexId};
 use crate::storage::io;
+use crate::storage::prefetch::ReadAhead;
 use crate::util::bitset::BitSet;
 
 /// Grid dimension √P (GridGraph's P is the block count).
@@ -137,9 +138,27 @@ impl OocEngine for DswEngine {
             let mut changed = false;
             let mut next_active = BitSet::new(q);
 
+            // the whole iteration's read schedule is determined up front by
+            // `chunk_active` (chunk files only change at the end-of-iteration
+            // rename), so one ordered read-ahead covers every column — the
+            // skipped rows are never read, keeping Table II's byte counts
+            let mut schedule = Vec::new();
+            for j in 0..q {
+                schedule.push(self.chunk_path(j));
+                for i in 0..q {
+                    if selective && !chunk_active.get(i) {
+                        continue;
+                    }
+                    schedule.push(self.chunk_path(i));
+                    schedule.push(self.block_path(i, j));
+                }
+            }
+            let mut stream = ReadAhead::new(schedule, common::READ_AHEAD_DEPTH);
+
             for j in 0..q {
                 let (lo_j, hi_j) = (self.bounds[j], self.bounds[j + 1]);
-                let old = common::read_values(&self.chunk_path(j))?;
+                let old =
+                    common::values_from_bytes(&common::next_buf(&mut stream, "dsw column")?)?;
                 let reduce = app.reduce();
                 let mut acc = vec![reduce.identity(); (hi_j - lo_j) as usize];
                 // GridGraph still *applies* for inactive columns (values may
@@ -149,8 +168,12 @@ impl OocEngine for DswEngine {
                         continue; // skip row: no active sources in chunk i
                     }
                     let lo_i = self.bounds[i];
-                    let src = common::read_values(&self.chunk_path(i))?; // C·V/√P
-                    let block = common::read_edges(&self.block_path(i, j))?; // D·E
+                    // C·V/√P
+                    let src =
+                        common::values_from_bytes(&common::next_buf(&mut stream, "dsw chunk")?)?;
+                    // D·E
+                    let block =
+                        common::edges_from_bytes(&common::next_buf(&mut stream, "dsw block")?)?;
                     for (s, d) in block {
                         let k = (d - lo_j) as usize;
                         acc[k] = reduce.combine(

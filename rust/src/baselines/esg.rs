@@ -20,6 +20,7 @@ use crate::apps::{ProgramContext, VertexProgram};
 use crate::baselines::common::{self, BaselineRun, OocEngine};
 use crate::graph::{Degrees, Edge, VertexId};
 use crate::storage::io;
+use crate::storage::prefetch::ReadAhead;
 
 /// Number of streaming partitions (X-Stream sizes these to fit vertex state
 /// in memory; scaled for the container datasets).
@@ -119,11 +120,23 @@ impl OocEngine for EsgEngine {
             let mut changed = false;
 
             // --- phase 1: scatter ---------------------------------------
+            // chunk/edge streams read ahead of the scatter compute (same
+            // files, same order — byte accounting is unchanged)
+            let mut scatter_stream = ReadAhead::new(
+                (0..p)
+                    .flat_map(|i| [self.chunk_path(i), self.edges_path(i)])
+                    .collect(),
+                common::READ_AHEAD_DEPTH,
+            );
             let mut update_bufs: Vec<Vec<u8>> = vec![Vec::new(); p];
             for i in 0..p {
-                let chunk = common::read_values(&self.chunk_path(i))?; // C·V/P
+                // C·V/P
+                let chunk =
+                    common::values_from_bytes(&common::next_buf(&mut scatter_stream, "esg chunk")?)?;
                 let lo = self.bounds[i];
-                let edges = common::read_edges(&self.edges_path(i))?; // D·E/P
+                // D·E/P
+                let edges =
+                    common::edges_from_bytes(&common::next_buf(&mut scatter_stream, "esg edges")?)?;
                 for (s, d) in edges {
                     let contrib =
                         app.gather(chunk[(s - lo) as usize], self.out_deg[s as usize]);
@@ -137,10 +150,17 @@ impl OocEngine for EsgEngine {
             }
 
             // --- phase 2: gather ------------------------------------------
+            let mut gather_stream = ReadAhead::new(
+                (0..p)
+                    .flat_map(|i| [self.chunk_path(i), self.updates_path(i)])
+                    .collect(),
+                common::READ_AHEAD_DEPTH,
+            );
             for i in 0..p {
                 let (lo, hi) = (self.bounds[i], self.bounds[i + 1]);
-                let mut chunk = common::read_values(&self.chunk_path(i))?;
-                let updates = io::read_file(&self.updates_path(i))?; // C·E read
+                let mut chunk =
+                    common::values_from_bytes(&common::next_buf(&mut gather_stream, "esg chunk")?)?;
+                let updates = common::next_buf(&mut gather_stream, "esg updates")?; // C·E read
                 let reduce = app.reduce();
                 let mut acc = vec![reduce.identity(); (hi - lo) as usize];
                 for (d, contrib) in decode_updates(&updates) {

@@ -28,6 +28,7 @@ use crate::baselines::common::{self, BaselineRun, OocEngine};
 use crate::graph::csr::Csr;
 use crate::graph::{Degrees, Edge, VertexId};
 use crate::sharding::intervals::compute_intervals;
+use crate::storage::prefetch::ReadAhead;
 use crate::storage::{io, shardfile};
 
 /// Edges per shard (the paper's GraphChi config uses millions; scaled).
@@ -121,9 +122,21 @@ impl OocEngine for PswEngine {
             let mut new_values = values.clone();
             let mut changed = false;
 
-            for i in 0..p {
-                let csr = shardfile::load(&self.shard_path(i))?; // D·E/P real
-                let evals = common::read_values(&self.evals_path(i))?; // C·E/P real
+            // shard + edge-value files stream through an ordered read-ahead:
+            // same files, same order, same byte accounting — the next
+            // shard's disk time just overlaps the current shard's update
+            let mut stream = ReadAhead::new(
+                (0..p)
+                    .flat_map(|i| [self.shard_path(i), self.evals_path(i)])
+                    .collect(),
+                common::READ_AHEAD_DEPTH,
+            );
+            for _i in 0..p {
+                // D·E/P real
+                let csr = shardfile::from_bytes(&common::next_buf(&mut stream, "psw shard")?)?;
+                // C·E/P real
+                let evals =
+                    common::values_from_bytes(&common::next_buf(&mut stream, "psw evals")?)?;
                 // out-edge sliding-window pass reads the same bytes again
                 io::account_virtual_read((csr.num_edges() * 12) as u64);
                 let (lo, _hi) = (csr.lo, csr.hi);
@@ -155,8 +168,13 @@ impl OocEngine for PswEngine {
             // (direction-1 structure + all of direction 2, which GraphChi
             // rewrites through its sliding windows) is accounted virtually.
             common::write_values(&self.values_path(), &new_values)?;
+            let mut stream = ReadAhead::new(
+                (0..p).map(|i| self.shard_path(i)).collect(),
+                common::READ_AHEAD_DEPTH,
+            );
             for i in 0..p {
-                let csr = shardfile::load(&self.shard_path(i))?;
+                let csr =
+                    shardfile::from_bytes(&common::next_buf(&mut stream, "psw writeback")?)?;
                 let evals: Vec<f32> =
                     csr.col.iter().map(|&u| new_values[u as usize]).collect();
                 common::write_values(&self.evals_path(i), &evals)?;

@@ -26,6 +26,7 @@ use crate::baselines::common::{self, BaselineRun, OocEngine};
 use crate::graph::csr::Csr;
 use crate::graph::{Degrees, Edge, VertexId};
 use crate::sharding::intervals::compute_intervals;
+use crate::storage::prefetch::ReadAhead;
 use crate::storage::{io, shardfile};
 
 const EDGES_PER_SHARD: usize = 1 << 14;
@@ -133,8 +134,14 @@ impl OocEngine for VspEngine {
             let mut changed = false;
             let mut new_view = view.clone();
 
+            // g-shard structure streams ahead of the per-shard compute
+            let mut stream = ReadAhead::new(
+                (0..p).map(|i| self.gshard_path(i)).collect(),
+                common::READ_AHEAD_DEPTH,
+            );
             for i in 0..p {
-                let csr = shardfile::load(&self.gshard_path(i))?; // D·E real
+                // D·E real
+                let csr = shardfile::from_bytes(&common::next_buf(&mut stream, "vsp gshard")?)?;
                 // v-shard value gather: C·|v-shard| virtual read
                 io::account_virtual_read(4 * self.vshard_sizes[i] as u64);
                 let reduce = app.reduce();

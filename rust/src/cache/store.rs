@@ -193,6 +193,29 @@ impl ShardCache {
         Ok(())
     }
 
+    /// One-stop shard acquisition — the single entry point both the
+    /// synchronous engine path and the prefetch pipeline go through:
+    /// probe the cache (hit ⇒ ready-decoded buffer, no disk); on miss call
+    /// `read` for the serialized payload, admit it if `admit` (budget
+    /// permitting), and hand back the decoded CSR.
+    pub fn fetch_decoded(
+        &self,
+        id: usize,
+        admit: bool,
+        read: impl FnOnce() -> Result<Vec<u8>>,
+    ) -> Result<Arc<Csr>> {
+        if let Some(csr) = self.get(id)? {
+            return Ok(csr);
+        }
+        let bytes = read()?;
+        if admit {
+            // admission failure (over budget / codec reject) is not an
+            // error: the shard still decodes from the bytes in hand
+            let _ = self.insert(id, &bytes);
+        }
+        Ok(Arc::new(shardfile::from_bytes(&bytes)?))
+    }
+
     /// CLOCK sweep: clear reference bits until an unreferenced victim is
     /// found; skip `protect` (the id being inserted). Returns false if no
     /// victim exists.
@@ -301,6 +324,51 @@ mod tests {
         assert_eq!(cache.stats.hits.load(Ordering::Relaxed), 1);
         assert_eq!(cache.stats.misses.load(Ordering::Relaxed), 2);
         assert!((cache.stats.hit_ratio() - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fetch_decoded_hits_then_reads_once() {
+        let cache = ShardCache::new(2, Codec::SnapLite, usize::MAX);
+        let (csr, payload) = shard(0, 400);
+        let reads = AtomicU64::new(0);
+        let fetch = |cache: &ShardCache| {
+            cache
+                .fetch_decoded(0, true, || {
+                    reads.fetch_add(1, Ordering::Relaxed);
+                    Ok(payload.clone())
+                })
+                .unwrap()
+        };
+        let a = fetch(&cache);
+        assert_eq!(reads.load(Ordering::Relaxed), 1, "miss must read");
+        let b = fetch(&cache);
+        assert_eq!(reads.load(Ordering::Relaxed), 1, "hit must not read");
+        let mut x = a.to_edges();
+        x.sort_unstable();
+        let mut y = csr.to_edges();
+        y.sort_unstable();
+        let mut z = b.to_edges();
+        z.sort_unstable();
+        assert_eq!(x, y);
+        assert_eq!(x, z);
+    }
+
+    #[test]
+    fn fetch_decoded_without_admission_rereads() {
+        let cache = ShardCache::new(2, Codec::None, usize::MAX);
+        let (_, payload) = shard(0, 100);
+        let reads = AtomicU64::new(0);
+        for _ in 0..3 {
+            cache
+                .fetch_decoded(0, false, || {
+                    reads.fetch_add(1, Ordering::Relaxed);
+                    Ok(payload.clone())
+                })
+                .unwrap();
+        }
+        assert_eq!(reads.load(Ordering::Relaxed), 3);
+        assert_eq!(cache.num_cached(), 0);
+        assert_eq!(cache.stats.misses.load(Ordering::Relaxed), 3);
     }
 
     #[test]

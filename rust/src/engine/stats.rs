@@ -24,6 +24,18 @@ pub struct IterStats {
     pub kernel_calls: u64,
     /// Was selective scheduling consulted this iteration?
     pub selective_enabled: bool,
+    /// Time compute workers spent *acquiring* shards, summed across
+    /// workers: cache probe + disk read + decompress on the synchronous
+    /// path (`prefetch_depth = 0`), or waiting on the prefetch pipeline's
+    /// completion channel when it runs.  With prefetching, disk time the
+    /// pipeline hides behind compute does **not** appear here — shrinking
+    /// `io_wait` at equal `compute` is exactly the overlap the journal
+    /// version's loading figures measure.
+    pub io_wait: Duration,
+    /// Time compute workers spent in the vertex-update kernels plus the
+    /// active-set scan, summed across workers (can exceed `wall` when
+    /// several workers compute in parallel).
+    pub compute: Duration,
 }
 
 /// Whole-run statistics.
@@ -58,6 +70,29 @@ impl RunStats {
 
     pub fn total_bytes_written(&self) -> u64 {
         self.iters.iter().map(|i| i.io.bytes_written).sum()
+    }
+
+    /// Total worker time spent acquiring shards (see [`IterStats::io_wait`]).
+    pub fn total_io_wait(&self) -> Duration {
+        self.iters.iter().map(|i| i.io_wait).sum()
+    }
+
+    /// Total worker time spent computing (see [`IterStats::compute`]).
+    pub fn total_compute(&self) -> Duration {
+        self.iters.iter().map(|i| i.compute).sum()
+    }
+
+    /// Fraction of worker time spent acquiring shards rather than
+    /// computing — the headline number for the I/O-overlap figures
+    /// (0.0 = fully compute-bound, 1.0 = fully I/O-bound).
+    pub fn io_wait_fraction(&self) -> f64 {
+        let io = self.total_io_wait().as_secs_f64();
+        let total = io + self.total_compute().as_secs_f64();
+        if total <= 0.0 {
+            0.0
+        } else {
+            io / total
+        }
     }
 }
 
@@ -96,8 +131,34 @@ mod tests {
             cache_misses: 0,
             kernel_calls: 0,
             selective_enabled: false,
+            io_wait: Duration::ZERO,
+            compute: Duration::ZERO,
         };
         let stats = RunStats { iters: vec![mk(10), mk(32)], ..Default::default() };
         assert_eq!(stats.total_bytes_read(), 42);
+    }
+
+    #[test]
+    fn io_compute_split_sums_and_fraction() {
+        let mk = |io_ms: u64, comp_ms: u64| IterStats {
+            iter: 0,
+            wall: Duration::ZERO,
+            shards_processed: 0,
+            shards_skipped: 0,
+            active_vertices: 0,
+            active_ratio: 0.0,
+            io: IoSnapshot::default(),
+            cache_hits: 0,
+            cache_misses: 0,
+            kernel_calls: 0,
+            selective_enabled: false,
+            io_wait: Duration::from_millis(io_ms),
+            compute: Duration::from_millis(comp_ms),
+        };
+        let stats = RunStats { iters: vec![mk(10, 30), mk(20, 60)], ..Default::default() };
+        assert_eq!(stats.total_io_wait(), Duration::from_millis(30));
+        assert_eq!(stats.total_compute(), Duration::from_millis(90));
+        assert!((stats.io_wait_fraction() - 0.25).abs() < 1e-9);
+        assert_eq!(RunStats::default().io_wait_fraction(), 0.0);
     }
 }

@@ -6,7 +6,7 @@
 //! graphmp run        --data data.gmp --app pagerank [--iters 10]
 //!                    [--engine native|xla] [--artifacts artifacts]
 //!                    [--cache mode-2|none|...] [--no-cache] [--no-selective]
-//!                    [--threads N] [--throttle-mbps 300]
+//!                    [--threads N] [--prefetch-depth N] [--throttle-mbps 300]
 //! graphmp baseline   --system psw|esg|dsw|vsp|inmem --data edges.bin
 //!                    --vertices N --app pagerank [--iters 10]
 //! graphmp info       --data data.gmp
@@ -67,6 +67,8 @@ USAGE:
                      [--iters N] [--engine native|xla] [--artifacts <dir>]
                      [--cache <none|snaplite|zlib-1|zlib-3|zstd-1|delta-varint>]
                      [--no-cache] [--no-selective] [--threads N]
+                     [--prefetch-depth N]   shards the I/O pipeline decodes
+                                            ahead of compute (0 = synchronous)
                      [--throttle-mbps N]
   graphmp baseline   --system <psw|esg|dsw|vsp|inmem> --data <edges>
                      --vertices <N> --app <name> [--iters N]
@@ -168,6 +170,8 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     if let Some(t) = args.get("threads") {
         cfg.threads = t.parse().context("--threads")?;
     }
+    cfg.prefetch_depth =
+        args.get_usize("prefetch-depth", EngineConfig::default().prefetch_depth)?;
     if args.has("no-cache") {
         cfg.cache_budget = 0;
     } else if let Some(c) = args.get("cache") {
@@ -220,9 +224,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
     for it in &s.iters {
         println!(
-            "  iter {:3}: {:>9}  processed={:3} skipped={:3} active={:8} ({:.4}%) read={} hits={} {}",
+            "  iter {:3}: {:>9}  io_wait={:>9} compute={:>9} processed={:3} skipped={:3} active={:8} ({:.4}%) read={} hits={} {}",
             it.iter,
             humansize::duration(it.wall),
+            humansize::duration(it.io_wait),
+            humansize::duration(it.compute),
             it.shards_processed,
             it.shards_skipped,
             it.active_vertices,

@@ -13,6 +13,7 @@
 
 pub mod format;
 pub mod io;
+pub mod prefetch;
 pub mod property;
 pub mod shardfile;
 pub mod vertexinfo;

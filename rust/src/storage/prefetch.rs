@@ -1,0 +1,207 @@
+//! Pipelined shard I/O primitives (journal version §"overlapping I/O with
+//! computation", arXiv:1810.04334).
+//!
+//! The VSW engine's steady state is `load shard → update vertices`,
+//! repeated P times per iteration.  Loading synchronously on the compute
+//! path serializes disk + decompression behind the update kernels; these
+//! primitives let a small I/O stage run *ahead* of compute with a bounded
+//! in-flight budget, so the semi-external memory envelope still holds
+//! (never more than `depth` decoded shards beyond the ones being
+//! processed):
+//!
+//! * [`Semaphore`] — the in-flight budget gate shared by the engine's
+//!   producer (I/O pool) and consumers (compute pool);
+//! * [`ReadAhead`] — ordered background file read-ahead for strictly
+//!   sequential consumers (the engine's cache-warming load phase and the
+//!   PSW/ESG/DSW/VSP baselines' per-iteration streams).
+//!
+//! The engine-side orchestration (bloom screening + cache probe + decode on
+//! the I/O pool, completion channel into the compute pool) lives in
+//! `engine::vsw`; everything here is engine-agnostic.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::thread;
+
+use anyhow::Result;
+
+use crate::storage::io;
+
+/// A counting semaphore (no std equivalent in the offline crate set).
+///
+/// Gates how many prefetched shards may exist between "read off disk" and
+/// "consumed by a compute worker".
+pub struct Semaphore {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Semaphore {
+    pub fn new(permits: usize) -> Self {
+        Self { permits: Mutex::new(permits), cv: Condvar::new() }
+    }
+
+    /// Block until a permit is available, then take it.
+    pub fn acquire(&self) {
+        let mut p = self.permits.lock().unwrap();
+        while *p == 0 {
+            p = self.cv.wait(p).unwrap();
+        }
+        *p -= 1;
+    }
+
+    /// Return a permit.
+    pub fn release(&self) {
+        let mut p = self.permits.lock().unwrap();
+        *p += 1;
+        self.cv.notify_one();
+    }
+}
+
+enum Inner {
+    /// depth 0: plain synchronous reads (no thread, no reordering risk).
+    Sync(VecDeque<PathBuf>),
+    /// background reader feeding a bounded channel.
+    Async {
+        rx: Option<mpsc::Receiver<Result<Vec<u8>>>>,
+        handle: Option<thread::JoinHandle<()>>,
+    },
+}
+
+/// Ordered file read-ahead: yields each path's contents **in the order
+/// given**, reading up to `depth` files ahead of the consumer on a
+/// background thread.  All reads go through [`io::read_file`], so the
+/// global I/O accounting (and the HDD throttle) still applies.
+///
+/// Memory bound: at most `depth` buffered files + 1 in the reader's hand.
+pub struct ReadAhead {
+    inner: Inner,
+}
+
+impl ReadAhead {
+    pub fn new(paths: Vec<PathBuf>, depth: usize) -> Self {
+        if depth == 0 {
+            return Self { inner: Inner::Sync(paths.into()) };
+        }
+        let (tx, rx) = mpsc::sync_channel::<Result<Vec<u8>>>(depth);
+        let handle = thread::spawn(move || {
+            for path in paths {
+                let item = io::read_file(&path);
+                if tx.send(item).is_err() {
+                    return; // consumer dropped the iterator; stop reading
+                }
+            }
+        });
+        Self { inner: Inner::Async { rx: Some(rx), handle: Some(handle) } }
+    }
+}
+
+impl Iterator for ReadAhead {
+    type Item = Result<Vec<u8>>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        match &mut self.inner {
+            Inner::Sync(paths) => paths.pop_front().map(|p| io::read_file(&p)),
+            Inner::Async { rx, .. } => rx.as_ref()?.recv().ok(),
+        }
+    }
+}
+
+impl Drop for ReadAhead {
+    fn drop(&mut self) {
+        if let Inner::Async { rx, handle } = &mut self.inner {
+            drop(rx.take()); // unblocks the reader's send
+            if let Some(h) = handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn write_fixtures(tag: &str, n: usize) -> Vec<PathBuf> {
+        let dir = std::env::temp_dir().join(format!("gmp_pf_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        (0..n)
+            .map(|i| {
+                let p = dir.join(format!("f{i}.bin"));
+                std::fs::write(&p, vec![i as u8; 100 + i]).unwrap();
+                p
+            })
+            .collect()
+    }
+
+    #[test]
+    fn readahead_preserves_order() {
+        for depth in [0usize, 1, 3, 16] {
+            let paths = write_fixtures(&format!("ord{depth}"), 8);
+            let got: Vec<Vec<u8>> =
+                ReadAhead::new(paths, depth).map(|r| r.unwrap()).collect();
+            assert_eq!(got.len(), 8);
+            for (i, buf) in got.iter().enumerate() {
+                assert_eq!(buf.len(), 100 + i, "depth {depth} file {i}");
+                assert!(buf.iter().all(|&b| b == i as u8));
+            }
+        }
+    }
+
+    #[test]
+    fn readahead_surfaces_missing_file() {
+        let mut paths = write_fixtures("miss", 2);
+        paths.insert(1, PathBuf::from("/definitely/not/there.bin"));
+        let results: Vec<_> = ReadAhead::new(paths, 2).collect();
+        assert_eq!(results.len(), 3);
+        assert!(results[0].is_ok());
+        assert!(results[1].is_err());
+        assert!(results[2].is_ok(), "reader must continue past a failed file");
+    }
+
+    #[test]
+    fn readahead_accounts_bytes() {
+        let paths = write_fixtures("acct", 4);
+        let want: u64 = (0..4).map(|i| 100 + i as u64).sum();
+        let before = io::snapshot();
+        let n: usize = ReadAhead::new(paths, 2).map(|r| r.unwrap().len()).sum();
+        assert_eq!(n as u64, want);
+        assert!(io::snapshot().since(&before).bytes_read >= want);
+    }
+
+    #[test]
+    fn early_drop_does_not_hang() {
+        let paths = write_fixtures("drop", 16);
+        let mut ra = ReadAhead::new(paths, 2);
+        assert!(ra.next().unwrap().is_ok());
+        drop(ra); // must join the reader without deadlock
+    }
+
+    #[test]
+    fn semaphore_bounds_concurrency() {
+        let sem = Arc::new(Semaphore::new(3));
+        let inside = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..16 {
+            let (sem, inside, peak) = (sem.clone(), inside.clone(), peak.clone());
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    sem.acquire();
+                    let now = inside.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(now, Ordering::SeqCst);
+                    inside.fetch_sub(1, Ordering::SeqCst);
+                    sem.release();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 3, "peak {}", peak.load(Ordering::SeqCst));
+    }
+}

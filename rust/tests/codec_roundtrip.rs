@@ -1,0 +1,146 @@
+//! Roundtrip/fuzz-style property tests for the shard cache codecs
+//! (`cache::codec`, paper modes 1-4 + extensions) and the CSR-structural
+//! delta-varint codec (`cache::deltavarint`): random edge lists, empty /
+//! single-edge / duplicate-heavy shards, arbitrary byte blobs, truncation.
+
+use graphmp::cache::{deltavarint, Codec};
+use graphmp::graph::csr::Csr;
+use graphmp::storage::shardfile;
+use graphmp::util::prop::{self, Gen};
+
+/// Random shard: arbitrary interval, duplicate-friendly edge list.
+fn random_shard(g: &mut Gen) -> Csr {
+    let lo = g.usize_in(0, 200) as u32;
+    let width = g.usize_in(1, 96) as u32;
+    let m = g.usize_in(0, 500);
+    // duplicate-heavy half the time: draw sources from a tiny pool
+    let src_pool = if g.bool(0.5) { 4 } else { 100_000 };
+    let edges: Vec<(u32, u32)> = (0..m)
+        .map(|_| {
+            (
+                g.usize_in(0, src_pool) as u32,
+                lo + g.usize_in(0, width as usize) as u32,
+            )
+        })
+        .collect();
+    Csr::from_edges(lo, lo + width, &edges)
+}
+
+fn edge_multiset(csr: &Csr) -> Vec<(u32, u32)> {
+    let mut e = csr.to_edges();
+    e.sort_unstable();
+    e
+}
+
+#[test]
+fn prop_all_codecs_roundtrip_random_shards() {
+    prop::check(0xC0DEC, 40, |g| {
+        let csr = random_shard(g);
+        let payload = shardfile::to_bytes(&csr);
+        let want = edge_multiset(&csr);
+        for codec in Codec::ALL {
+            let compressed = codec.compress(&payload).unwrap();
+            let back = codec.decompress_shard(&compressed).unwrap();
+            back.validate().unwrap();
+            assert_eq!((back.lo, back.hi), (csr.lo, csr.hi), "{}", codec.name());
+            assert_eq!(edge_multiset(&back), want, "codec {}", codec.name());
+        }
+    });
+}
+
+#[test]
+fn paper_modes_handle_degenerate_shards() {
+    let cases: Vec<(&str, Csr)> = vec![
+        ("empty", Csr::from_edges(3, 10, &[])),
+        ("single-edge", Csr::from_edges(0, 1, &[(42, 0)])),
+        (
+            "duplicate-heavy",
+            Csr::from_edges(5, 8, &vec![(7u32, 6u32); 300]),
+        ),
+        (
+            "one-hot-row",
+            Csr::from_edges(0, 64, &(0..500u32).map(|i| (i, 13)).collect::<Vec<_>>()),
+        ),
+    ];
+    for (tag, csr) in &cases {
+        let payload = shardfile::to_bytes(csr);
+        let want = edge_multiset(csr);
+        // the paper's four modes, plus the extensions for good measure
+        for codec in Codec::ALL {
+            let compressed = codec.compress(&payload).unwrap();
+            let back = codec.decompress_shard(&compressed).unwrap();
+            assert_eq!(edge_multiset(&back), want, "{tag} via {}", codec.name());
+        }
+    }
+}
+
+#[test]
+fn prop_byte_codecs_roundtrip_arbitrary_blobs() {
+    // the byte-oriented modes must invert compress on *any* input, not just
+    // shard payloads (DeltaVarint is CSR-structural and excluded)
+    let byte_codecs = [Codec::None, Codec::SnapLite, Codec::Zlib1, Codec::Zlib3, Codec::Zstd1];
+    prop::check(0xB10B, 40, |g| {
+        let n = g.usize_in(0, 8192);
+        let mut data = Vec::with_capacity(n);
+        while data.len() < n {
+            if g.bool(0.4) {
+                // a run (compressible)
+                let b = g.u64() as u8;
+                let len = g.usize_in(1, 128).min(n - data.len());
+                data.extend(std::iter::repeat_n(b, len));
+            } else {
+                data.push(g.u64() as u8);
+            }
+        }
+        for codec in byte_codecs {
+            let c = codec.compress(&data).unwrap();
+            assert_eq!(codec.decompress(&c).unwrap(), data, "codec {}", codec.name());
+        }
+    });
+}
+
+#[test]
+fn prop_deltavarint_roundtrips_and_rejects_truncation() {
+    prop::check(0xD17A, 30, |g| {
+        let csr = random_shard(g);
+        let buf = deltavarint::encode(&csr);
+        let back = deltavarint::decode(&buf).unwrap();
+        assert_eq!(edge_multiset(&back), edge_multiset(&csr));
+        // every per-row source list comes back sorted
+        for (_, srcs) in back.iter_rows() {
+            assert!(srcs.windows(2).all(|w| w[0] <= w[1]), "row not sorted");
+        }
+        // truncations must never decode successfully
+        if !buf.is_empty() {
+            let cut = g.usize_in(0, buf.len());
+            if cut < buf.len() {
+                assert!(
+                    deltavarint::decode(&buf[..cut]).is_err(),
+                    "accepted truncation at {cut}/{}",
+                    buf.len()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn compressing_codecs_shrink_a_realistic_shard() {
+    // power-law-ish shard: the compression claim the cache's mode ablation
+    // rests on must hold for every non-identity codec
+    let edges: Vec<(u32, u32)> = (0..6000u32)
+        .map(|i| ((i * i % 997) as u32, i % 512))
+        .collect();
+    let csr = Csr::from_edges(0, 512, &edges);
+    let payload = shardfile::to_bytes(&csr);
+    for codec in [Codec::SnapLite, Codec::Zlib1, Codec::Zlib3, Codec::Zstd1, Codec::DeltaVarint] {
+        let c = codec.compress(&payload).unwrap();
+        assert!(
+            c.len() < payload.len(),
+            "{} did not shrink: {} vs {}",
+            codec.name(),
+            c.len(),
+            payload.len()
+        );
+    }
+}

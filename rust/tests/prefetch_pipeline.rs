@@ -1,0 +1,250 @@
+//! Cross-engine equivalence + prefetch-pipeline determinism.
+//!
+//! 1. Property test: on random small R-MAT graphs, the VSW engine under the
+//!    full configuration matrix (selective on/off × threads {1,2,4} ×
+//!    prefetch_depth {0,2,4}) and every out-of-core baseline agree with the
+//!    single-threaded in-memory reference for PageRank / SSSP / WCC.
+//! 2. Regression: same graph, same seed — every (threads, prefetch_depth)
+//!    combination must produce **bit-identical** vertex arrays and identical
+//!    per-iteration `shards_processed` / `shards_skipped` accounting.  This
+//!    is the acceptance bar for the pipelined shard prefetcher: overlapping
+//!    I/O with compute must be invisible in results, visible only in time.
+
+use graphmp::apps::{PageRank, ProgramContext, Sssp, VertexProgram, Wcc};
+use graphmp::baselines::{self, OocEngine};
+use graphmp::engine::{EngineConfig, RunResult, VswEngine};
+use graphmp::graph::generator;
+use graphmp::sharding::{preprocess, PreprocessConfig};
+use graphmp::storage::DatasetDir;
+use graphmp::util::prop;
+
+const THREADS: [usize; 3] = [1, 2, 4];
+const DEPTHS: [usize; 3] = [0, 2, 4];
+
+/// Single-threaded in-memory reference (Algorithm 2 swept synchronously).
+fn reference(app: &dyn VertexProgram, edges: &[(u32, u32)], n: usize, max_iters: usize) -> Vec<f32> {
+    let ctx = ProgramContext { num_vertices: n as u64 };
+    let mut in_adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut out_deg = vec![0u32; n];
+    for &(s, d) in edges {
+        in_adj[d as usize].push(s);
+        out_deg[s as usize] += 1;
+    }
+    let mut vals: Vec<f32> = (0..n).map(|v| app.init(v as u32, &ctx)).collect();
+    for _ in 0..max_iters {
+        let next: Vec<f32> = (0..n)
+            .map(|v| app.update(v as u32, &in_adj[v], &vals, &out_deg, &ctx))
+            .collect();
+        let changed = next
+            .iter()
+            .zip(&vals)
+            .any(|(a, b)| !(a.is_infinite() && b.is_infinite()) && a != b);
+        vals = next;
+        if !changed {
+            break;
+        }
+    }
+    vals
+}
+
+fn build_dataset(tag: &str, edges: &[(u32, u32)], n: usize, shard_cap: usize) -> DatasetDir {
+    let dir = DatasetDir::new(
+        std::env::temp_dir().join(format!("gmp_pfp_{tag}_{}", std::process::id())),
+    );
+    let _ = std::fs::remove_dir_all(&dir.root);
+    preprocess(
+        tag,
+        edges,
+        n,
+        &dir,
+        &PreprocessConfig { max_edges_per_shard: shard_cap, bloom_fpr: 0.01 },
+    )
+    .unwrap();
+    dir
+}
+
+fn run_vsw(
+    dir: &DatasetDir,
+    app: &dyn VertexProgram,
+    max_iters: usize,
+    selective: bool,
+    threads: usize,
+    depth: usize,
+) -> RunResult {
+    let engine = VswEngine::open(
+        dir.clone(),
+        EngineConfig {
+            max_iters,
+            threads,
+            selective,
+            // high threshold so SSSP/WCC tails actually exercise skipping
+            selective_threshold: 0.05,
+            prefetch_depth: depth,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    engine.run(app).unwrap()
+}
+
+fn assert_close(
+    got: &[f32],
+    want: &[f32],
+    exact: bool,
+    what: &str,
+) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        if a.is_infinite() && b.is_infinite() {
+            continue;
+        }
+        if exact {
+            assert_eq!(a, b, "{what} v{i}: {a} vs {b}");
+        } else {
+            assert!(
+                (a - b).abs() <= 1e-4 * b.abs().max(1e-6),
+                "{what} v{i}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+/// The apps the paper evaluates, with (iteration cap, exact?) semantics:
+/// PageRank compares at a fixed horizon with float tolerance, the
+/// min-monoid apps run to their (unique) fixpoint and compare exactly.
+fn app_matrix() -> Vec<(Box<dyn VertexProgram>, usize, usize, bool)> {
+    vec![
+        (Box::new(PageRank::default()), 6, 6, false),
+        (Box::new(Sssp { source: 0 }), 400, 1000, true),
+        (Box::new(Wcc), 400, 1000, true),
+    ]
+}
+
+#[test]
+fn vsw_config_matrix_and_baselines_match_reference() {
+    prop::check(0xE911, 3, |g| {
+        // a fresh random power-law multigraph per case, symmetrized so the
+        // min-monoid apps have interesting reachable sets
+        let scale = 7 + g.usize_in(0, 2) as u32; // 128 or 256 vertices
+        let n = 1usize << scale;
+        let m = g.usize_in(300, 900) as u64;
+        let mut edges = generator::rmat(scale, m, generator::RmatParams::default(), g.u64());
+        let rev: Vec<_> = edges.iter().map(|&(s, d)| (d, s)).collect();
+        edges.extend(rev);
+        let tag = format!("eq{}", g.case_seed);
+        let dir = build_dataset(&tag, &edges, n, 256);
+
+        for (app, engine_iters, ref_iters, exact) in app_matrix() {
+            let want = reference(app.as_ref(), &edges, n, ref_iters);
+
+            // VSW configuration matrix
+            for selective in [false, true] {
+                for &threads in &THREADS {
+                    for &depth in &DEPTHS {
+                        let got =
+                            run_vsw(&dir, app.as_ref(), engine_iters, selective, threads, depth);
+                        assert_close(
+                            &got.values,
+                            &want,
+                            exact,
+                            &format!(
+                                "{} sel={selective} t={threads} d={depth}",
+                                app.name()
+                            ),
+                        );
+                    }
+                }
+            }
+
+            // every out-of-core baseline + the in-memory engine
+            for sys in ["psw", "esg", "dsw", "vsp", "inmem"] {
+                let work = std::env::temp_dir()
+                    .join(format!("gmp_pfp_base_{sys}_{}_{}", tag, std::process::id()));
+                let mut eng = baselines::by_name(sys, work).unwrap();
+                eng.prepare(&edges, n).unwrap();
+                let run = eng.run(app.as_ref(), engine_iters).unwrap();
+                assert_close(&run.values, &want, exact, &format!("{} {}", sys, app.name()));
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir.root);
+    });
+}
+
+#[test]
+fn results_and_accounting_are_bit_identical_across_threads_and_depths() {
+    // fixed graph, fixed seed: the determinism regression the prefetcher
+    // must never break
+    let n = 1usize << 9;
+    let edges = generator::rmat(9, 4000, generator::RmatParams::default(), 2024);
+    let dir = build_dataset("det", &edges, n, 300);
+
+    for (app, engine_iters, _, _) in app_matrix() {
+        let mut golden: Option<(Vec<u32>, Vec<(usize, usize)>)> = None;
+        for &threads in &THREADS {
+            for &depth in &DEPTHS {
+                let got = run_vsw(&dir, app.as_ref(), engine_iters, true, threads, depth);
+                let bits: Vec<u32> = got.values.iter().map(|v| v.to_bits()).collect();
+                let accounting: Vec<(usize, usize)> = got
+                    .stats
+                    .iters
+                    .iter()
+                    .map(|i| (i.shards_processed, i.shards_skipped))
+                    .collect();
+                match &golden {
+                    None => golden = Some((bits, accounting)),
+                    Some((gb, ga)) => {
+                        assert_eq!(
+                            gb, &bits,
+                            "{}: t={threads} d={depth} changed value bits",
+                            app.name()
+                        );
+                        assert_eq!(
+                            ga, &accounting,
+                            "{}: t={threads} d={depth} changed shard accounting",
+                            app.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn frontier_skipping_is_deterministic_under_prefetch() {
+    // SSSP on a long path: selective scheduling skips most shards once the
+    // frontier passes; skipped/processed counts must not depend on the
+    // pipeline configuration, and skipping must actually happen
+    let n = 400usize;
+    let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|v| (v, v + 1)).collect();
+    let dir = build_dataset("path", &edges, n, 32);
+    let app = Sssp { source: 0 };
+
+    let mut golden: Option<Vec<(usize, usize)>> = None;
+    let mut golden_values: Option<Vec<u32>> = None;
+    for &threads in &THREADS {
+        for &depth in &DEPTHS {
+            let got = run_vsw(&dir, &app, 0, true, threads, depth);
+            let accounting: Vec<(usize, usize)> = got
+                .stats
+                .iters
+                .iter()
+                .map(|i| (i.shards_processed, i.shards_skipped))
+                .collect();
+            let skipped: usize = accounting.iter().map(|(_, s)| s).sum();
+            assert!(skipped > 0, "t={threads} d={depth}: no shards skipped");
+            let bits: Vec<u32> = got.values.iter().map(|v| v.to_bits()).collect();
+            match (&golden, &golden_values) {
+                (None, _) => {
+                    golden = Some(accounting);
+                    golden_values = Some(bits);
+                }
+                (Some(ga), Some(gv)) => {
+                    assert_eq!(ga, &accounting, "t={threads} d={depth} accounting");
+                    assert_eq!(gv, &bits, "t={threads} d={depth} values");
+                }
+                _ => unreachable!(),
+            }
+        }
+    }
+}

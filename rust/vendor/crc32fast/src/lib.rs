@@ -1,0 +1,95 @@
+//! Offline shim for the `crc32fast` crate: a table-driven CRC-32 (IEEE
+//! 802.3, the zlib/PNG polynomial) exposing the same `Hasher` API.  No SIMD,
+//! but byte-for-byte compatible checksums, which is all the framed on-disk
+//! formats need.
+
+const POLY: u32 = 0xEDB8_8320;
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ POLY } else { crc >> 1 };
+            k += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// Incremental CRC-32 state.
+#[derive(Debug, Clone)]
+pub struct Hasher {
+    state: u32,
+}
+
+impl Default for Hasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hasher {
+    pub fn new() -> Self {
+        Hasher { state: 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut crc = self.state;
+        for &b in bytes {
+            crc = (crc >> 8) ^ TABLE[((crc ^ b as u32) & 0xFF) as usize];
+        }
+        self.state = crc;
+    }
+
+    pub fn finalize(self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+/// One-shot convenience.
+pub fn hash(bytes: &[u8]) -> u32 {
+    let mut h = Hasher::new();
+    h.update(bytes);
+    h.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // standard CRC-32 check values
+        assert_eq!(hash(b""), 0);
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+        assert_eq!(hash(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn incremental_equals_oneshot() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let mut h = Hasher::new();
+        for chunk in data.chunks(37) {
+            h.update(chunk);
+        }
+        assert_eq!(h.finalize(), hash(&data));
+    }
+
+    #[test]
+    fn detects_single_bitflips() {
+        let data = b"some payload worth protecting".to_vec();
+        let want = hash(&data);
+        for byte in 0..data.len() {
+            let mut bad = data.clone();
+            bad[byte] ^= 0x20;
+            assert_ne!(hash(&bad), want, "undetected flip at {byte}");
+        }
+    }
+}

@@ -1,0 +1,177 @@
+//! Offline shim for the `xla` PJRT binding.
+//!
+//! The container ships no PJRT plugin or XLA shared library, so this crate
+//! provides the exact API surface `graphmp::runtime` compiles against while
+//! reporting PJRT as unavailable at client-construction time
+//! ([`PjRtClient::cpu`] returns `Err`).  Every caller of the runtime
+//! (engine backends, tests, examples, the CLI's `--engine xla`) already
+//! treats "runtime failed to load" as "fall back to native / skip", so the
+//! three-layer path degrades gracefully instead of breaking the build.
+//!
+//! When a real PJRT environment exists, this directory is the single swap
+//! point: replace the shim with the real binding, nothing else changes.
+
+use std::fmt;
+use std::path::PathBuf;
+
+/// Error type surfaced by every fallible call (`{:?}`-formatted upstream).
+pub struct XlaError(pub String);
+
+impl fmt::Debug for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "XlaError({})", self.0)
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+type Result<T> = std::result::Result<T, XlaError>;
+
+/// A parsed HLO module (text form retained; nothing interprets it here).
+pub struct HloModuleProto {
+    pub path: PathBuf,
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| XlaError(format!("reading {path}: {e}")))?;
+        Ok(Self { path: PathBuf::from(path), text })
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    _text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        Self { _text: proto.text.clone() }
+    }
+}
+
+/// PJRT client handle.  Construction fails in this shim.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(XlaError(
+            "PJRT plugin not available in this build (vendored xla shim); \
+             use the native backend"
+                .into(),
+        ))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError("PJRT unavailable (vendored xla shim)".into()))
+    }
+}
+
+/// A compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: AsLiteral>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError("PJRT unavailable (vendored xla shim)".into()))
+    }
+}
+
+/// A device buffer returned by `execute`.
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// Element types a [`Literal`] can carry.
+pub trait NativeType: Copy {
+    fn wrap(vals: &[Self]) -> Literal;
+    fn unwrap(lit: &Literal) -> Option<Vec<Self>>;
+}
+
+/// A host literal (rank-1 only — all the runtime ever builds).
+#[derive(Clone)]
+pub enum Literal {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl NativeType for f32 {
+    fn wrap(vals: &[Self]) -> Literal {
+        Literal::F32(vals.to_vec())
+    }
+
+    fn unwrap(lit: &Literal) -> Option<Vec<Self>> {
+        match lit {
+            Literal::F32(v) => Some(v.clone()),
+            Literal::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(vals: &[Self]) -> Literal {
+        Literal::I32(vals.to_vec())
+    }
+
+    fn unwrap(lit: &Literal) -> Option<Vec<Self>> {
+        match lit {
+            Literal::I32(v) => Some(v.clone()),
+            Literal::F32(_) => None,
+        }
+    }
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(vals: &[T]) -> Literal {
+        T::wrap(vals)
+    }
+
+    /// Unwrap a 1-tuple result (identity here: rank-1 literals only).
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Ok(self)
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(self).ok_or_else(|| XlaError("literal element type mismatch".into()))
+    }
+}
+
+/// Marker for types accepted by [`PjRtLoadedExecutable::execute`].
+pub trait AsLiteral {}
+
+impl AsLiteral for Literal {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("shim must fail");
+        assert!(format!("{err:?}").contains("PJRT"));
+    }
+
+    #[test]
+    fn literals_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+        assert!(l.to_vec::<i32>().is_err());
+        let l = Literal::vec1(&[3i32]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![3]);
+    }
+}

@@ -1,0 +1,53 @@
+//! Offline shim for the `zstd` crate's bulk API.
+//!
+//! No crates.io access and no libzstd in the container, so `bulk::compress`
+//! / `bulk::decompress` are backed by the vendored LZSS engine (see the
+//! `flate2` shim) at a deep match-search setting — "fast codec, decent
+//! ratio", the same design point the real zstd-1 occupies in the cache's
+//! mode ablation.  The byte format is this workspace's own, not the zstd
+//! frame format.
+
+pub mod bulk {
+    use std::io;
+
+    /// Deep-chain LZSS — deeper search than any zlib level the shim maps,
+    /// so "zstd-1" keeps its place as the best-ratio byte codec.
+    const CHAIN: usize = 192;
+
+    pub fn compress(source: &[u8], _level: i32) -> io::Result<Vec<u8>> {
+        Ok(flate2::lzss::compress(source, CHAIN))
+    }
+
+    /// `capacity` bounds the decoded size (the caller's memory budget).
+    pub fn decompress(source: &[u8], capacity: usize) -> io::Result<Vec<u8>> {
+        let out = flate2::lzss::decompress(source)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+        if out.len() > capacity {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("decoded size {} exceeds capacity {}", out.len(), capacity),
+            ));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::bulk;
+
+    #[test]
+    fn roundtrip_and_capacity() {
+        let data: Vec<u8> = (0..30_000u32).flat_map(|i| (i / 3).to_le_bytes()).collect();
+        let c = bulk::compress(&data, 1).unwrap();
+        assert!(c.len() < data.len(), "did not compress");
+        assert_eq!(bulk::decompress(&c, 1 << 30).unwrap(), data);
+        assert!(bulk::decompress(&c, 10).is_err(), "capacity not enforced");
+    }
+
+    #[test]
+    fn empty_roundtrip() {
+        let c = bulk::compress(b"", 1).unwrap();
+        assert_eq!(bulk::decompress(&c, 1 << 20).unwrap(), b"");
+    }
+}
