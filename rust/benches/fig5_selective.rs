@@ -2,29 +2,55 @@
 //!
 //! Paper setup: PageRank / SSSP / WCC on UK-2007 for 200 iterations,
 //! GraphMP-SS (selective scheduling on) vs GraphMP-NSS (off), reporting the
-//! vertex-activation ratio and the per-iteration execution time.
+//! vertex-activation ratio and the per-iteration execution time.  This
+//! driver adds the adaptive-I/O-governor ablation: every app also runs with
+//! `--adaptive` (same selective setting), so the table shows what the
+//! feedback loop changes relative to the fixed prefetch window.
 //!
 //! Expected shape: per-iteration time of -SS drops below -NSS once the
 //! activation ratio falls under the 0.001 threshold; SSSP benefits most
 //! (paper: up to 2.86× per iteration, 50.1% overall), WCC moderately
-//! (1.75×, 9.5%), PageRank least and latest (1.67×, 5.8%).
+//! (1.75×, 9.5%), PageRank least and latest (1.67×, 5.8%).  The adaptive
+//! rows must produce identical iteration counts/skips (determinism) while
+//! the window column shows where the governor settled.
+//!
+//! `--quick` (the CI bench-smoke mode): tiny dataset, 20 iterations, and a
+//! machine-readable record appended to `$GRAPHMP_BENCH_JSON` if set.
+
+use std::time::Instant;
 
 use graphmp::apps::{self, VertexProgram};
 use graphmp::cache::Codec;
+use graphmp::coordinator::benchjson::{self, BenchRecord};
+use graphmp::coordinator::cli::Args;
 use graphmp::coordinator::datasets::Dataset;
-use graphmp::coordinator::experiment::{ensure_dataset, run_graphmp, GraphMpVariant};
+use graphmp::coordinator::experiment::{
+    ensure_dataset, run_graphmp, run_graphmp_adaptive, GraphMpVariant,
+};
 use graphmp::coordinator::report;
+use graphmp::engine::RunStats;
 use graphmp::util::bench::Table;
 use graphmp::util::humansize;
 
 fn main() -> anyhow::Result<()> {
-    let dataset = Dataset::by_name(
-        &std::env::var("GRAPHMP_FIG5_DATASET").unwrap_or_else(|_| "uk2007-s".into()),
-    )?;
-    let iters: usize = std::env::var("GRAPHMP_FIG5_ITERS")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(200);
+    let t_bench = Instant::now();
+    let args = Args::parse(std::env::args().skip(1), &["quick", "bench"])?;
+    let quick = args.has("quick");
+    let dataset = if quick {
+        Dataset::by_name("tiny")?
+    } else {
+        Dataset::by_name(
+            &std::env::var("GRAPHMP_FIG5_DATASET").unwrap_or_else(|_| "uk2007-s".into()),
+        )?
+    };
+    let iters: usize = if quick {
+        20
+    } else {
+        std::env::var("GRAPHMP_FIG5_ITERS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(200)
+    };
     println!("Fig 5: selective scheduling on {} ({iters} iterations)", dataset.name);
     let dir = ensure_dataset(dataset)?;
 
@@ -38,6 +64,7 @@ fn main() -> anyhow::Result<()> {
         &[
             "app",
             "variant",
+            "prefetch",
             "iters",
             "total",
             "skipped-shards",
@@ -46,12 +73,17 @@ fn main() -> anyhow::Result<()> {
             "overall-gain",
         ],
     );
+    // the CI gate records the first adaptive run's engine statistics
+    let mut gate_stats: Option<RunStats> = None;
 
     for app in &apps_list {
-        let (ss, _) =
-            run_graphmp(&dir, GraphMpVariant::Cached(Codec::SnapLite), true, app.as_ref(), iters)?;
-        let (nss, _) =
-            run_graphmp(&dir, GraphMpVariant::Cached(Codec::SnapLite), false, app.as_ref(), iters)?;
+        let variant = GraphMpVariant::Cached(Codec::SnapLite);
+        let (ss, _) = run_graphmp(&dir, variant, true, app.as_ref(), iters)?;
+        let (ssa, _) = run_graphmp_adaptive(&dir, variant, true, app.as_ref(), iters)?;
+        let (nss, _) = run_graphmp(&dir, variant, false, app.as_ref(), iters)?;
+        if gate_stats.is_none() {
+            gate_stats = Some(ssa.stats.clone());
+        }
 
         // per-iteration speedup where both ran (paper Fig 5 a2/b2/c2)
         let mut max_speedup = 0.0f64;
@@ -68,22 +100,37 @@ fn main() -> anyhow::Result<()> {
             .find(|i| i.selective_enabled)
             .map(|i| i.iter.to_string())
             .unwrap_or_else(|| "-".into());
-        let skipped: usize = ss.stats.iters.iter().map(|i| i.shards_skipped).sum();
-        let gain = 100.0
-            * (1.0 - ss.stats.total_wall.as_secs_f64() / nss.stats.total_wall.as_secs_f64());
+        let gain = |run: &RunStats| {
+            100.0 * (1.0 - run.total_wall.as_secs_f64() / nss.stats.total_wall.as_secs_f64())
+        };
+        let skipped =
+            |run: &RunStats| -> usize { run.iters.iter().map(|i| i.shards_skipped).sum() };
         table.row(&[
             app.name().into(),
             "GraphMP-SS".into(),
+            "fixed(2)".into(),
             ss.stats.num_iters().to_string(),
             humansize::duration(ss.stats.total_wall),
-            skipped.to_string(),
-            first_sel,
+            skipped(&ss.stats).to_string(),
+            first_sel.clone(),
             format!("{max_speedup:.2}x"),
-            format!("{gain:.1}%"),
+            format!("{:.1}%", gain(&ss.stats)),
+        ]);
+        table.row(&[
+            app.name().into(),
+            "GraphMP-SS-A".into(),
+            format!("adaptive→{}", ssa.stats.final_prefetch_depth()),
+            ssa.stats.num_iters().to_string(),
+            humansize::duration(ssa.stats.total_wall),
+            skipped(&ssa.stats).to_string(),
+            first_sel,
+            "-".into(),
+            format!("{:.1}%", gain(&ssa.stats)),
         ]);
         table.row(&[
             app.name().into(),
             "GraphMP-NSS".into(),
+            "fixed(2)".into(),
             nss.stats.num_iters().to_string(),
             humansize::duration(nss.stats.total_wall),
             "0".into(),
@@ -102,5 +149,12 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
     report::append_markdown(&report::results_path(), &table)?;
+    if let Some(stats) = &gate_stats {
+        benchjson::record_if_requested(&BenchRecord::from_stats(
+            "fig5_selective",
+            t_bench.elapsed(),
+            stats,
+        ))?;
+    }
     Ok(())
 }

@@ -6,12 +6,22 @@
 //! filters and pre-warming the compressed cache).  Expected shape here: the
 //! in-memory engine's load memory is a large multiple of GraphMP's working
 //! set, and load time is higher, while its per-iteration time is lower.
+//!
+//! Three GraphMP rows form the I/O-pipeline ablation: synchronous loads,
+//! the fixed 2-deep prefetch window, and the adaptive governor (window
+//! sized per iteration from the io-wait feedback, shards issued
+//! hottest-first).
+//!
+//! `--quick` (the CI bench-smoke mode): tiny dataset and a machine-readable
+//! record appended to `$GRAPHMP_BENCH_JSON` if set.
 
 use std::time::Instant;
 
 use graphmp::apps::PageRank;
 use graphmp::baselines::{InMemEngine, OocEngine};
 use graphmp::cache::Codec;
+use graphmp::coordinator::benchjson::{self, BenchRecord};
+use graphmp::coordinator::cli::Args;
 use graphmp::coordinator::datasets::Dataset;
 use graphmp::coordinator::experiment::ensure_dataset;
 use graphmp::coordinator::report;
@@ -20,7 +30,10 @@ use graphmp::util::bench::Table;
 use graphmp::util::humansize;
 
 fn main() -> anyhow::Result<()> {
-    let dataset = Dataset::by_name("twitter-s")?;
+    let t_bench = Instant::now();
+    let args = Args::parse(std::env::args().skip(1), &["quick", "bench"])?;
+    let quick = args.has("quick");
+    let dataset = Dataset::by_name(if quick { "tiny" } else { "twitter-s" })?;
     println!("Fig 6: loading cost on {} (PageRank)", dataset.name);
     let dir = ensure_dataset(dataset)?;
     let edges = dataset.generate();
@@ -29,28 +42,49 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut table = Table::new(
-        "Fig6 loading: GraphMP vs GraphMat (twitter-s)",
-        &["system", "load time", "memory", "10-iter run", "io wait", "compute", "load+run"],
+        &format!("Fig6 loading: GraphMP vs GraphMat ({})", dataset.name),
+        &[
+            "system",
+            "window",
+            "load time",
+            "memory",
+            "10-iter run",
+            "io wait",
+            "compute",
+            "load+run",
+        ],
     );
+    let mut gate_stats = None;
 
     // GraphMP-C: open() performs the loading phase (bloom + cache warm,
-    // with the shard read-ahead overlapping disk and compression); both
-    // prefetch settings run so the io_wait column shows the overlap the
-    // pipelined engine buys
-    for (label, depth) in [("GraphMP-C (sync io)", 0usize), ("GraphMP-C (pipelined)", 2)] {
+    // with the shard read-ahead overlapping disk and compression); all
+    // three prefetch settings run so the io_wait column shows the overlap
+    // the pipelined engine buys and what the governor does on top
+    for (label, depth, adaptive) in [
+        ("GraphMP-C (sync io)", 0usize, false),
+        ("GraphMP-C (pipelined)", 2, false),
+        ("GraphMP-C (adaptive)", 2, true),
+    ] {
         let engine = VswEngine::open(
             dir.clone(),
             EngineConfig {
                 max_iters: 10,
                 cache_codec: Codec::SnapLite,
                 prefetch_depth: depth,
+                adaptive,
                 ..Default::default()
             },
         )?;
         let load = engine.load_wall;
         let run = engine.run(&PageRank::default())?;
+        let window = if adaptive {
+            format!("{}→{}", depth, run.stats.final_prefetch_depth())
+        } else {
+            depth.to_string()
+        };
         table.row(&[
             label.into(),
+            window,
             humansize::duration(load),
             humansize::bytes(run.stats.memory_bytes),
             humansize::duration(run.stats.total_wall),
@@ -58,6 +92,9 @@ fn main() -> anyhow::Result<()> {
             humansize::duration(run.stats.total_compute()),
             humansize::duration(load + run.stats.total_wall),
         ]);
+        if adaptive {
+            gate_stats = Some(run.stats.clone());
+        }
     }
 
     // GraphMat stand-in: its load phase parses the text edge list (the
@@ -78,6 +115,7 @@ fn main() -> anyhow::Result<()> {
     let run = inmem.run(&PageRank::default(), 10)?;
     table.row(&[
         "GraphMat (inmem)".into(),
+        "-".into(),
         humansize::duration(load),
         humansize::bytes(run.memory_bytes),
         humansize::duration(run.total_wall),
@@ -89,5 +127,12 @@ fn main() -> anyhow::Result<()> {
     graphmp::storage::io::set_throttle(0);
     table.print();
     report::append_markdown(&report::results_path(), &table)?;
+    if let Some(stats) = &gate_stats {
+        benchjson::record_if_requested(&BenchRecord::from_stats(
+            "fig6_loading",
+            t_bench.elapsed(),
+            stats,
+        ))?;
+    }
     Ok(())
 }

@@ -5,50 +5,80 @@
 //! Paper numbers (processing only): PR 28 s (GraphMat) vs 22 s (GraphMP);
 //! SSSP 1.3 s vs 9.9 s; WCC 1.5 s vs 2.1 s — i.e. GraphMP wins PR, the
 //! in-memory engine wins the frontier apps.  Expected shape: same ordering.
+//! The adaptive column is the governor ablation: same app, same dataset,
+//! window and shard order chosen by the per-iteration feedback loop
+//! (results bit-identical, time and io-wait may differ).
+//!
+//! `--quick` (the CI bench-smoke mode): tiny dataset, short PageRank
+//! horizon, and a machine-readable record appended to
+//! `$GRAPHMP_BENCH_JSON` if set.
+
+use std::time::Instant;
 
 use graphmp::apps::{self, VertexProgram};
 use graphmp::baselines::{InMemEngine, OocEngine};
 use graphmp::cache::Codec;
+use graphmp::coordinator::benchjson::{self, BenchRecord};
+use graphmp::coordinator::cli::Args;
 use graphmp::coordinator::datasets::Dataset;
-use graphmp::coordinator::experiment::{ensure_dataset, run_graphmp, GraphMpVariant};
+use graphmp::coordinator::experiment::{
+    ensure_dataset, run_graphmp, run_graphmp_adaptive, GraphMpVariant,
+};
 use graphmp::coordinator::report;
+use graphmp::engine::RunStats;
 use graphmp::util::bench::Table;
 use graphmp::util::humansize;
 
 fn main() -> anyhow::Result<()> {
-    let dataset = Dataset::by_name("twitter-s")?;
+    let t_bench = Instant::now();
+    let args = Args::parse(std::env::args().skip(1), &["quick", "bench"])?;
+    let quick = args.has("quick");
+    let dataset = Dataset::by_name(if quick { "tiny" } else { "twitter-s" })?;
     println!("Fig 7: per-iteration, GraphMP vs GraphMat on {}", dataset.name);
     let dir = ensure_dataset(dataset)?;
     let edges = dataset.generate();
 
+    let pr_iters = if quick { 5 } else { 10 };
     let apps_list: Vec<(Box<dyn VertexProgram>, usize)> = vec![
-        (apps::by_name("pagerank")?, 10),
+        (apps::by_name("pagerank")?, pr_iters),
         (apps::by_name("sssp")?, 0),
         (apps::by_name("wcc")?, 0),
     ];
     let mut table = Table::new(
-        "Fig7 processing time (loading excluded), twitter-s",
-        &["app", "GraphMP", "io wait", "compute", "GraphMat", "GraphMP iters", "GraphMat iters"],
+        &format!("Fig7 processing time (loading excluded), {}", dataset.name),
+        &[
+            "app",
+            "GraphMP (fixed)",
+            "GraphMP (adaptive)",
+            "window",
+            "io wait (a)",
+            "compute (a)",
+            "GraphMat",
+            "GraphMP iters",
+            "GraphMat iters",
+        ],
     );
+    let mut gate_stats: Option<RunStats> = None;
 
     for (app, iters) in &apps_list {
-        let (g, _) = run_graphmp(
-            &dir,
-            GraphMpVariant::Cached(Codec::SnapLite),
-            true,
-            app.as_ref(),
-            *iters,
-        )?;
+        let variant = GraphMpVariant::Cached(Codec::SnapLite);
+        let (g, _) = run_graphmp(&dir, variant, true, app.as_ref(), *iters)?;
+        let (ga, _) = run_graphmp_adaptive(&dir, variant, true, app.as_ref(), *iters)?;
+        if gate_stats.is_none() {
+            gate_stats = Some(ga.stats.clone());
+        }
         let mut inmem = InMemEngine::new();
         inmem.prepare(&edges, dataset.num_vertices())?;
         let m = inmem.run(app.as_ref(), if *iters == 0 { 10_000 } else { *iters })?;
         table.row(&[
             app.name().into(),
             humansize::duration(g.stats.total_wall),
+            humansize::duration(ga.stats.total_wall),
+            format!("2→{}", ga.stats.final_prefetch_depth()),
             // acquisition vs kernel time: with the prefetch pipeline the io
             // wait column is only the *unhidden* part of shard loading
-            humansize::duration(g.stats.total_io_wait()),
-            humansize::duration(g.stats.total_compute()),
+            humansize::duration(ga.stats.total_io_wait()),
+            humansize::duration(ga.stats.total_compute()),
             humansize::duration(m.total_wall),
             g.stats.num_iters().to_string(),
             m.iter_walls.len().to_string(),
@@ -62,5 +92,12 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
     report::append_markdown(&report::results_path(), &table)?;
+    if let Some(stats) = &gate_stats {
+        benchjson::record_if_requested(&BenchRecord::from_stats(
+            "fig7_periter",
+            t_bench.elapsed(),
+            stats,
+        ))?;
+    }
     Ok(())
 }

@@ -6,15 +6,9 @@
 use super::{KernelKind, ProgramContext, Reduce, VertexProgram};
 use crate::graph::VertexId;
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct Bfs {
     pub root: VertexId,
-}
-
-impl Default for Bfs {
-    fn default() -> Self {
-        Self { root: 0 }
-    }
 }
 
 impl VertexProgram for Bfs {

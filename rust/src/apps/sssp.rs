@@ -9,15 +9,9 @@
 use super::{KernelKind, ProgramContext, Reduce, VertexProgram};
 use crate::graph::VertexId;
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct Sssp {
     pub source: VertexId,
-}
-
-impl Default for Sssp {
-    fn default() -> Self {
-        Self { source: 0 }
-    }
 }
 
 impl VertexProgram for Sssp {

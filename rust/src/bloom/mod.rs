@@ -60,6 +60,14 @@ impl BloomFilter {
         keys.into_iter().any(|k| self.contains(k))
     }
 
+    /// How many of `keys` may be present — the I/O governor's active-source
+    /// density signal (§selective scheduling turns the same filters it
+    /// skips shards with into a shard-priority estimate).  Counts false
+    /// positives like any Bloom probe, but never undercounts.
+    pub fn count_contained<I: IntoIterator<Item = u64>>(&self, keys: I) -> usize {
+        keys.into_iter().filter(|&k| self.contains(k)).count()
+    }
+
     /// Empirical bits-set ratio (diagnostics / load factor).
     pub fn fill_ratio(&self) -> f64 {
         self.bits.count_ones() as f64 / self.bits.len() as f64
@@ -199,6 +207,24 @@ mod tests {
                 assert!(f.contains(k), "false negative for {k}");
             }
             assert!(f.contains_any(keys.iter().copied()));
+            assert_eq!(
+                f.count_contained(keys.iter().copied()),
+                keys.len(),
+                "count_contained must never undercount inserted keys"
+            );
         });
+    }
+
+    #[test]
+    fn count_contained_measures_density() {
+        let mut f = BloomFilter::with_capacity(1000, 0.001);
+        for k in 0..100u64 {
+            f.insert(k);
+        }
+        assert_eq!(f.count_contained(0..100u64), 100);
+        assert_eq!(f.count_contained(std::iter::empty::<u64>()), 0);
+        // disjoint probe set: essentially none contained at 0.1% fpr
+        let fp = f.count_contained((0..1000u64).map(|k| k + 1_000_000));
+        assert!(fp < 20, "density over disjoint keys should be near zero, got {fp}");
     }
 }

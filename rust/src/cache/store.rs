@@ -65,6 +65,10 @@ struct Slot {
     data: Option<CacheVal>,
     /// CLOCK reference bit.
     referenced: AtomicBool,
+    /// Per-shard probe history (under the slot lock) — the governor's
+    /// "how disk-bound has this shard been" signal.
+    hits: u64,
+    misses: u64,
 }
 
 /// Byte-budgeted shard cache indexed by shard id.
@@ -83,6 +87,9 @@ pub struct ShardCache {
     used: AtomicUsize,
     clock_hand: AtomicUsize,
     evict: bool,
+    /// Per-shard eviction priorities (higher = keep longer), installed by
+    /// the adaptive governor each iteration; empty = CLOCK order.
+    priorities: Mutex<Vec<u64>>,
     pub stats: CacheStats,
 }
 
@@ -93,13 +100,21 @@ impl ShardCache {
     pub fn new(num_shards: usize, codec: Codec, budget: usize) -> Self {
         Self {
             slots: (0..num_shards)
-                .map(|_| Mutex::new(Slot { data: None, referenced: AtomicBool::new(false) }))
+                .map(|_| {
+                    Mutex::new(Slot {
+                        data: None,
+                        referenced: AtomicBool::new(false),
+                        hits: 0,
+                        misses: 0,
+                    })
+                })
                 .collect(),
             codec,
             budget,
             used: AtomicUsize::new(0),
             clock_hand: AtomicUsize::new(0),
             evict: false,
+            priorities: Mutex::new(Vec::new()),
             stats: CacheStats::default(),
         }
     }
@@ -132,28 +147,66 @@ impl ShardCache {
     /// Probe for shard `id`; on hit, return the CSR (allocation-free for
     /// mode-1, decompressed otherwise).
     pub fn get(&self, id: usize) -> Result<Option<Arc<Csr>>> {
-        let slot = self.slots[id].lock().unwrap();
-        match &slot.data {
-            Some(CacheVal::Decoded(csr)) => {
-                slot.referenced.store(true, Ordering::Relaxed);
-                self.stats.hits.fetch_add(1, Ordering::Relaxed);
-                Ok(Some(csr.clone()))
-            }
+        let mut slot = self.slots[id].lock().unwrap();
+        let found: Option<Arc<Csr>> = match &slot.data {
+            Some(CacheVal::Decoded(csr)) => Some(csr.clone()),
             Some(CacheVal::Bytes(data)) => {
-                slot.referenced.store(true, Ordering::Relaxed);
                 let t0 = std::time::Instant::now();
                 let csr = self.codec.decompress_shard(data)?;
                 self.stats
                     .decompress_ns
                     .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                Some(Arc::new(csr))
+            }
+            None => None,
+        };
+        match found {
+            Some(csr) => {
+                slot.referenced.store(true, Ordering::Relaxed);
+                slot.hits += 1;
                 self.stats.hits.fetch_add(1, Ordering::Relaxed);
-                Ok(Some(Arc::new(csr)))
+                Ok(Some(csr))
             }
             None => {
+                slot.misses += 1;
                 self.stats.misses.fetch_add(1, Ordering::Relaxed);
                 Ok(None)
             }
         }
+    }
+
+    /// Is shard `id` currently cached?  A pure peek: unlike [`Self::get`] it
+    /// neither decodes nor touches the hit/miss accounting, so the governor
+    /// can consult residency when building its schedule without distorting
+    /// the statistics its own scores are derived from.
+    pub fn is_resident(&self, id: usize) -> bool {
+        self.slots[id].lock().unwrap().data.is_some()
+    }
+
+    /// Lifetime (hits, misses) for shard `id` — the governor's per-shard
+    /// history signal.
+    pub fn shard_history(&self, id: usize) -> (u64, u64) {
+        let slot = self.slots[id].lock().unwrap();
+        (slot.hits, slot.misses)
+    }
+
+    /// Unused budget available for loan to the prefetch pipeline's in-flight
+    /// allowance.  Shrinks as the cache fills, which is exactly how the loan
+    /// is reclaimed.
+    pub fn lendable_bytes(&self) -> usize {
+        self.budget.saturating_sub(self.used.load(Ordering::Relaxed))
+    }
+
+    /// Install per-shard eviction priorities (higher = hotter = keep).
+    /// Called by the adaptive governor each iteration; a wrong-length slice
+    /// is ignored rather than panicking mid-run.
+    pub fn set_priorities(&self, scores: &[u64]) {
+        if scores.len() != self.slots.len() {
+            return;
+        }
+        let mut p = self.priorities.lock().unwrap();
+        p.clear();
+        p.extend_from_slice(scores);
     }
 
     /// Insert shard `id` given its serialized payload.  Evicts via CLOCK if
@@ -212,15 +265,60 @@ impl ShardCache {
             // admission failure (over budget / codec reject) is not an
             // error: the shard still decodes from the bytes in hand
             let _ = self.insert(id, &bytes);
+            // mode-1 admission already decoded the payload into the slot —
+            // hand that Arc back instead of decoding a second time (a plain
+            // peek, no hit/miss accounting: this acquisition was already
+            // counted as a miss above)
+            if self.codec == Codec::None {
+                let slot = self.slots[id].lock().unwrap();
+                if let Some(CacheVal::Decoded(csr)) = &slot.data {
+                    return Ok(csr.clone());
+                }
+            }
         }
         Ok(Arc::new(shardfile::from_bytes(&bytes)?))
     }
 
-    /// CLOCK sweep: clear reference bits until an unreferenced victim is
-    /// found; skip `protect` (the id being inserted). Returns false if no
-    /// victim exists.
+    /// Pick a victim and drop it; skip `protect` (the id being inserted).
+    /// With governor priorities installed the coldest (lowest-priority)
+    /// resident shard goes first; otherwise a CLOCK sweep (second-chance
+    /// LRU approximation). Returns false if no victim exists.
     fn evict_one(&self, protect: usize) -> bool {
         let n = self.slots.len();
+        // priority path: min-scan for the lowest-priority *occupied* slot
+        // (O(n), no allocation — an insert may evict several times in a
+        // row).  Holding the priorities lock across the scan is fine:
+        // set_priorities runs once per iteration and nothing acquires the
+        // locks in the opposite order.
+        {
+            let p = self.priorities.lock().unwrap();
+            if p.len() == n {
+                loop {
+                    let mut best: Option<(u64, usize)> = None;
+                    for i in (0..n).filter(|&i| i != protect) {
+                        if best.is_some_and(|(bp, bi)| (p[i], i) >= (bp, bi)) {
+                            continue;
+                        }
+                        if self.slots[i].lock().unwrap().data.is_some() {
+                            best = Some((p[i], i));
+                        }
+                    }
+                    let Some((_, i)) = best else {
+                        return false; // nothing evictable left
+                    };
+                    let mut slot = self.slots[i].lock().unwrap();
+                    if let Some(old) = slot.data.take() {
+                        self.used.fetch_sub(old.size(), Ordering::Relaxed);
+                        self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                        return true;
+                    }
+                    // a concurrent insert/evict emptied the chosen slot
+                    // between the scan and the take — rescan; occupancy
+                    // only shrinks under this race, so the loop terminates
+                }
+            }
+        }
+        // CLOCK path (no priorities installed)
         for _ in 0..2 * n {
             let h = self.clock_hand.fetch_add(1, Ordering::Relaxed) % n;
             if h == protect {
@@ -390,5 +488,61 @@ mod tests {
             }
         });
         assert!(cache.used_bytes() <= 1 << 20);
+    }
+
+    #[test]
+    fn residency_peek_and_history_do_not_touch_stats() {
+        let cache = ShardCache::new(2, Codec::None, usize::MAX);
+        let (_, payload) = shard(0, 100);
+        assert!(!cache.is_resident(0));
+        cache.insert(0, &payload).unwrap();
+        assert!(cache.is_resident(0));
+        assert_eq!(cache.stats.hits.load(Ordering::Relaxed), 0);
+        assert_eq!(cache.stats.misses.load(Ordering::Relaxed), 0);
+        assert_eq!(cache.shard_history(0), (0, 0));
+        cache.get(0).unwrap();
+        cache.get(1).unwrap();
+        cache.get(1).unwrap();
+        assert_eq!(cache.shard_history(0), (1, 0));
+        assert_eq!(cache.shard_history(1), (0, 2));
+    }
+
+    #[test]
+    fn lendable_bytes_shrink_as_cache_fills() {
+        let (_, payload) = shard(0, 500);
+        let one = Codec::None.compress(&payload).unwrap().len();
+        let cache = ShardCache::new(4, Codec::None, one * 4);
+        assert_eq!(cache.lendable_bytes(), one * 4);
+        cache.insert(0, &payload).unwrap();
+        let after_one = cache.lendable_bytes();
+        assert!(after_one < one * 4);
+        cache.insert(1, &payload).unwrap();
+        assert!(cache.lendable_bytes() < after_one);
+        // unbounded budget: effectively infinite loan
+        let unbounded = ShardCache::new(2, Codec::None, usize::MAX);
+        unbounded.insert(0, &payload).unwrap();
+        assert!(unbounded.lendable_bytes() > (1 << 40));
+    }
+
+    #[test]
+    fn eviction_prefers_low_priority_when_scores_installed() {
+        let (_, payload) = shard(0, 2000);
+        let one = Codec::None.compress(&payload).unwrap().len();
+        // room for exactly 2 entries
+        let cache = ShardCache::new(4, Codec::None, one * 2 + 10).with_eviction();
+        cache.insert(0, &payload).unwrap();
+        cache.insert(1, &payload).unwrap();
+        // shard 0 is hot (priority 100), shard 1 cold (priority 1)
+        cache.set_priorities(&[100, 1, 50, 50]);
+        let (_, p2) = shard(16, 2000);
+        cache.insert(2, &p2).unwrap();
+        assert!(cache.is_resident(0), "hot shard must survive eviction");
+        assert!(!cache.is_resident(1), "cold shard must be the victim");
+        assert!(cache.is_resident(2));
+        // a wrong-length priority slice is ignored (previous scores stand)
+        cache.set_priorities(&[1, 2]);
+        let (_, p3) = shard(24, 2000);
+        cache.insert(3, &p3).unwrap();
+        assert!(cache.used_bytes() <= cache.budget());
     }
 }

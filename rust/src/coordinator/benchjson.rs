@@ -1,0 +1,293 @@
+//! Machine-readable bench records (`BENCH_*.json`) and the CI perf gate.
+//!
+//! Every `--quick` bench driver appends one record — wall seconds, io-wait
+//! fraction, cache hit ratio — to the file named by `GRAPHMP_BENCH_JSON`
+//! (CI points it at `BENCH_pr.json`).  `graphmp bench-compare` then diffs
+//! that file against the committed `BENCH_baseline.json` and fails the job
+//! on a regression, so the perf trajectory is recorded PR over PR instead
+//! of regressions shipping silently.
+//!
+//! File format: one JSON object keyed by bench name,
+//! `{"fig5_selective": {"wall_secs": 1.2, "io_wait_fraction": 0.31,
+//! "cache_hit_ratio": 0.98}, ...}` — parsed with the in-tree
+//! [`crate::util::json`] (the offline crate set has no serde).
+//!
+//! Gate semantics: a bench regresses when its wall time exceeds
+//! `baseline * (1 + tolerance)` **and** the absolute slowdown exceeds
+//! `min_abs_secs` (quick benches run ~seconds; the absolute floor keeps
+//! scheduler noise on a 50 ms bench from tripping a 25 % gate).  A bench
+//! present in the baseline but absent from the current file also fails —
+//! silently dropping a bench must not read as "no regression".  The io-wait
+//! fraction and hit ratio ride along for the trajectory record but are not
+//! gated: they are diagnostic, and machine-dependent enough that gating
+//! them would gate the hardware.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::engine::RunStats;
+use crate::util::json::Json;
+
+/// One bench's recorded numbers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    pub name: String,
+    pub wall_secs: f64,
+    pub io_wait_fraction: f64,
+    pub cache_hit_ratio: f64,
+}
+
+/// Round to µs-ish precision so the JSON stays diff-friendly.
+fn round6(x: f64) -> f64 {
+    (x * 1e6).round() / 1e6
+}
+
+impl BenchRecord {
+    /// Build a record from a bench's overall wall time plus the
+    /// representative run's engine statistics.
+    pub fn from_stats(name: &str, wall: Duration, stats: &RunStats) -> Self {
+        Self {
+            name: name.to_string(),
+            wall_secs: round6(wall.as_secs_f64()),
+            io_wait_fraction: round6(stats.io_wait_fraction()),
+            cache_hit_ratio: round6(stats.cache_hit_ratio()),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("wall_secs".to_string(), Json::Num(self.wall_secs));
+        m.insert("io_wait_fraction".to_string(), Json::Num(self.io_wait_fraction));
+        m.insert("cache_hit_ratio".to_string(), Json::Num(self.cache_hit_ratio));
+        Json::Obj(m)
+    }
+}
+
+/// Where `--quick` bench drivers should record to, if anywhere
+/// (`GRAPHMP_BENCH_JSON`).
+pub fn env_path() -> Option<PathBuf> {
+    std::env::var_os("GRAPHMP_BENCH_JSON").map(PathBuf::from)
+}
+
+/// Load a `BENCH_*.json` file into name-keyed records.
+pub fn load(path: &Path) -> Result<BTreeMap<String, BenchRecord>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let root = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+    let obj = root
+        .as_obj()
+        .with_context(|| format!("{}: top level must be an object", path.display()))?;
+    let mut out = BTreeMap::new();
+    for (name, v) in obj {
+        let rec = BenchRecord {
+            name: name.clone(),
+            wall_secs: v
+                .req("wall_secs")
+                .with_context(|| format!("bench {name:?}"))?
+                .as_f64()
+                .with_context(|| format!("bench {name:?}: wall_secs must be a number"))?,
+            io_wait_fraction: v.get("io_wait_fraction").and_then(Json::as_f64).unwrap_or(0.0),
+            cache_hit_ratio: v.get("cache_hit_ratio").and_then(Json::as_f64).unwrap_or(0.0),
+        };
+        out.insert(name.clone(), rec);
+    }
+    Ok(out)
+}
+
+/// Insert/overwrite one record in `path` (creating the file if needed).
+/// Bench drivers run sequentially in CI, so read-modify-write suffices.
+pub fn append_record(path: &Path, rec: &BenchRecord) -> Result<()> {
+    let mut map = if path.exists() {
+        load(path)?
+    } else {
+        BTreeMap::new()
+    };
+    map.insert(rec.name.clone(), rec.clone());
+    let obj: BTreeMap<String, Json> =
+        map.iter().map(|(k, v)| (k.clone(), v.to_json())).collect();
+    std::fs::write(path, format!("{}\n", Json::Obj(obj)))
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Record `rec` if `GRAPHMP_BENCH_JSON` is set; no-op otherwise so local
+/// bench runs stay side-effect free.
+pub fn record_if_requested(rec: &BenchRecord) -> Result<()> {
+    if let Some(path) = env_path() {
+        append_record(&path, rec)?;
+        eprintln!(
+            "[benchjson] {} -> {} (wall {:.3}s, io_wait {:.1}%, hit {:.1}%)",
+            rec.name,
+            path.display(),
+            rec.wall_secs,
+            rec.io_wait_fraction * 100.0,
+            rec.cache_hit_ratio * 100.0
+        );
+    }
+    Ok(())
+}
+
+/// Outcome of a baseline-vs-current comparison.
+#[derive(Debug, Default)]
+pub struct CompareReport {
+    /// Benches present in both files.
+    pub compared: usize,
+    /// Human-readable per-bench lines (all benches, regressed or not).
+    pub lines: Vec<String>,
+    /// One message per failed gate; empty = pass.
+    pub regressions: Vec<String>,
+    /// Benches whose current wall time is far *below* baseline: the
+    /// baseline is stale and the gate has slack it shouldn't have.  Not a
+    /// failure (a genuine speedup looks the same), but surfaced loudly so
+    /// the baseline gets refreshed and the gate stays tight.
+    pub stale_baseline: Vec<String>,
+}
+
+/// Diff `current` against `baseline` under the gate semantics documented
+/// at module level.
+pub fn compare(
+    baseline: &BTreeMap<String, BenchRecord>,
+    current: &BTreeMap<String, BenchRecord>,
+    tolerance: f64,
+    min_abs_secs: f64,
+) -> CompareReport {
+    let mut report = CompareReport::default();
+    for (name, base) in baseline {
+        let Some(cur) = current.get(name) else {
+            report
+                .regressions
+                .push(format!("{name}: present in baseline but missing from current run"));
+            continue;
+        };
+        report.compared += 1;
+        let ratio = if base.wall_secs > 0.0 {
+            cur.wall_secs / base.wall_secs
+        } else {
+            1.0
+        };
+        report.lines.push(format!(
+            "{name}: wall {:.3}s vs baseline {:.3}s ({:+.1}%), io_wait {:.1}% (was {:.1}%), hit {:.1}% (was {:.1}%)",
+            cur.wall_secs,
+            base.wall_secs,
+            (ratio - 1.0) * 100.0,
+            cur.io_wait_fraction * 100.0,
+            base.io_wait_fraction * 100.0,
+            cur.cache_hit_ratio * 100.0,
+            base.cache_hit_ratio * 100.0,
+        ));
+        let over_ratio = cur.wall_secs > base.wall_secs * (1.0 + tolerance);
+        let over_abs = cur.wall_secs - base.wall_secs > min_abs_secs;
+        if over_ratio && over_abs {
+            report.regressions.push(format!(
+                "{name}: {:.3}s > {:.3}s * {:.2} (+{:.3}s)",
+                cur.wall_secs,
+                base.wall_secs,
+                1.0 + tolerance,
+                cur.wall_secs - base.wall_secs
+            ));
+        } else if cur.wall_secs < base.wall_secs * 0.5
+            && base.wall_secs - cur.wall_secs > min_abs_secs
+        {
+            report.stale_baseline.push(format!(
+                "{name}: current {:.3}s is under half of baseline {:.3}s — refresh \
+                 BENCH_baseline.json or the {:.0}% gate has dead slack",
+                cur.wall_secs,
+                base.wall_secs,
+                tolerance * 100.0
+            ));
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(name: &str, wall: f64) -> BenchRecord {
+        BenchRecord {
+            name: name.into(),
+            wall_secs: wall,
+            io_wait_fraction: 0.25,
+            cache_hit_ratio: 0.9,
+        }
+    }
+
+    fn map(recs: &[BenchRecord]) -> BTreeMap<String, BenchRecord> {
+        recs.iter().map(|r| (r.name.clone(), r.clone())).collect()
+    }
+
+    #[test]
+    fn append_then_load_roundtrips() {
+        let path = std::env::temp_dir().join(format!("gmp_bj_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        append_record(&path, &rec("fig5", 1.5)).unwrap();
+        append_record(&path, &rec("fig6", 2.25)).unwrap();
+        // overwrite is idempotent per name
+        append_record(&path, &rec("fig5", 1.75)).unwrap();
+        let m = load(&path).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m["fig5"].wall_secs, 1.75);
+        assert_eq!(m["fig6"].wall_secs, 2.25);
+        assert!((m["fig6"].io_wait_fraction - 0.25).abs() < 1e-9);
+        assert!((m["fig6"].cache_hit_ratio - 0.9).abs() < 1e-9);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_rejects_malformed() {
+        let path = std::env::temp_dir().join(format!("gmp_bj_bad_{}.json", std::process::id()));
+        std::fs::write(&path, "[1, 2]").unwrap();
+        assert!(load(&path).is_err(), "top-level array must be rejected");
+        std::fs::write(&path, r#"{"x": {"io_wait_fraction": 1}}"#).unwrap();
+        assert!(load(&path).is_err(), "missing wall_secs must be rejected");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance() {
+        let base = map(&[rec("a", 2.0), rec("b", 4.0)]);
+        let cur = map(&[rec("a", 2.4), rec("b", 3.0), rec("extra", 9.0)]);
+        let r = compare(&base, &cur, 0.25, 0.25);
+        assert_eq!(r.compared, 2);
+        assert!(r.regressions.is_empty(), "{:?}", r.regressions);
+        assert_eq!(r.lines.len(), 2);
+    }
+
+    #[test]
+    fn gate_fails_past_tolerance_and_on_missing_bench() {
+        let base = map(&[rec("a", 2.0), rec("gone", 1.0)]);
+        let cur = map(&[rec("a", 2.8)]);
+        let r = compare(&base, &cur, 0.25, 0.25);
+        assert_eq!(r.regressions.len(), 2, "{:?}", r.regressions);
+        assert!(r.regressions.iter().any(|m| m.contains("gone")));
+        assert!(r.regressions.iter().any(|m| m.starts_with("a:")));
+    }
+
+    #[test]
+    fn stale_baseline_is_flagged_but_not_failed() {
+        let base = map(&[rec("a", 5.0), rec("b", 5.0)]);
+        let cur = map(&[rec("a", 0.4), rec("b", 4.8)]);
+        let r = compare(&base, &cur, 0.25, 0.25);
+        assert!(r.regressions.is_empty());
+        assert_eq!(r.stale_baseline.len(), 1, "{:?}", r.stale_baseline);
+        assert!(r.stale_baseline[0].starts_with("a:"));
+    }
+
+    #[test]
+    fn absolute_floor_damps_noise_on_tiny_benches() {
+        // 0.05s -> 0.09s is +80% but only 40ms — below the absolute floor
+        let base = map(&[rec("micro", 0.05)]);
+        let cur = map(&[rec("micro", 0.09)]);
+        let r = compare(&base, &cur, 0.25, 0.25);
+        assert!(r.regressions.is_empty());
+        // the same ratio at real scale does fail
+        let base = map(&[rec("macro", 5.0)]);
+        let cur = map(&[rec("macro", 9.0)]);
+        let r = compare(&base, &cur, 0.25, 0.25);
+        assert_eq!(r.regressions.len(), 1);
+    }
+}

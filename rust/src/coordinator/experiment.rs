@@ -82,7 +82,30 @@ pub fn run_graphmp(
     app: &dyn VertexProgram,
     max_iters: usize,
 ) -> Result<(RunResult, std::time::Duration)> {
-    let engine = VswEngine::open(dir.clone(), variant.to_config(selective, max_iters))?;
+    run_graphmp_cfg(dir, variant.to_config(selective, max_iters), app)
+}
+
+/// [`run_graphmp`] with the adaptive I/O governor switched on — the
+/// "adaptive" column of the fig5/fig6/fig7 ablations.
+pub fn run_graphmp_adaptive(
+    dir: &DatasetDir,
+    variant: GraphMpVariant,
+    selective: bool,
+    app: &dyn VertexProgram,
+    max_iters: usize,
+) -> Result<(RunResult, std::time::Duration)> {
+    let mut cfg = variant.to_config(selective, max_iters);
+    cfg.adaptive = true;
+    run_graphmp_cfg(dir, cfg, app)
+}
+
+/// Open + run an arbitrary engine configuration on a materialized dataset.
+pub fn run_graphmp_cfg(
+    dir: &DatasetDir,
+    cfg: EngineConfig,
+    app: &dyn VertexProgram,
+) -> Result<(RunResult, std::time::Duration)> {
+    let engine = VswEngine::open(dir.clone(), cfg)?;
     let load = engine.load_wall;
     let result = engine.run(app)?;
     Ok((result, load))
@@ -177,7 +200,8 @@ pub fn exec_time_figure(
             });
         }
 
-        for variant in [GraphMpVariant::NoCache, GraphMpVariant::Cached(crate::cache::Codec::SnapLite)]
+        for variant in
+            [GraphMpVariant::NoCache, GraphMpVariant::Cached(crate::cache::Codec::SnapLite)]
         {
             let engine = VswEngine::open(dir.clone(), variant.to_config(true, iters))?;
             let load = engine.load_wall;
@@ -227,7 +251,8 @@ pub fn render_exec_figure(title: &str, rows: &[ExecRow]) -> crate::util::bench::
             .unwrap_or(0.0);
         for r in rows.iter().filter(|r| r.dataset == dataset) {
             let steady = if r.iter_walls.len() > 1 {
-                r.iter_walls[1..].iter().sum::<std::time::Duration>() / (r.iter_walls.len() - 1) as u32
+                r.iter_walls[1..].iter().sum::<std::time::Duration>()
+                    / (r.iter_walls.len() - 1) as u32
             } else {
                 r.total
             };
@@ -261,6 +286,20 @@ mod tests {
             run_graphmp(&dir1, GraphMpVariant::NoCache, false, &PageRank::default(), 3).unwrap();
         assert_eq!(result.values.len(), d.num_vertices());
         assert_eq!(result.stats.num_iters(), 3);
+    }
+
+    #[test]
+    fn adaptive_runner_is_bit_identical_to_fixed() {
+        let d = Dataset::by_name("tiny").unwrap();
+        let dir = ensure_dataset(d).unwrap();
+        let app = PageRank::default();
+        let (fixed, _) =
+            run_graphmp(&dir, GraphMpVariant::Cached(Codec::SnapLite), true, &app, 4).unwrap();
+        let (adaptive, _) =
+            run_graphmp_adaptive(&dir, GraphMpVariant::Cached(Codec::SnapLite), true, &app, 4)
+                .unwrap();
+        assert_eq!(fixed.values, adaptive.values);
+        assert!(adaptive.stats.final_prefetch_depth() >= 1);
     }
 
     #[test]

@@ -1,10 +1,11 @@
 //! Coordination layer: dataset registry, experiment drivers and report
 //! output shared by the CLI, the examples and every bench target.
 
+pub mod benchjson;
 pub mod cli;
 pub mod datasets;
 pub mod experiment;
 pub mod report;
 
 pub use datasets::{Dataset, DATASETS};
-pub use experiment::{ensure_dataset, run_graphmp, GraphMpVariant};
+pub use experiment::{ensure_dataset, run_graphmp, run_graphmp_adaptive, GraphMpVariant};

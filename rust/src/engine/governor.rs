@@ -1,0 +1,323 @@
+//! The adaptive I/O governor — one feedback loop in place of three knobs.
+//!
+//! PR 1's prefetch pipeline exposed three static tuning parameters: the
+//! read-ahead window (`prefetch_depth`), the cache byte budget, and the
+//! (implicit, file-order) shard schedule.  Each is machine- and
+//! workload-dependent: a window that hides a cold HDD's latency wastes
+//! memory on a warm NVMe cache, and file-order read-ahead spends its slots
+//! on shards the cache would have served for free.  NXgraph
+//! (arXiv:1510.06916) makes the same observation for whole strategies —
+//! picking adaptively from observed conditions is what makes a
+//! single-machine system robust across hardware.
+//!
+//! The governor closes the loop per iteration, using **only prior-iteration
+//! statistics** so every decision is a deterministic function of completed
+//! work (results stay bit-identical to any fixed configuration —
+//! `tests/prefetch_pipeline.rs` proves it):
+//!
+//! 1. **Adaptive window** ([`Governor::observe`] / [`Governor::plan_window`])
+//!    — after each iteration the engine reports the workers' `io_wait` vs
+//!    `compute` split ([`crate::engine::IterStats`]).  When the fraction of
+//!    time stalled on shard acquisition exceeds [`GovernorConfig::grow_threshold`]
+//!    the window doubles (slow-start style: stalls mean the pipeline is
+//!    starved, so react fast); when it falls below
+//!    [`GovernorConfig::shrink_threshold`] the window shrinks by one (the
+//!    pipeline is already ahead; release memory gently).  The window is
+//!    clamped to `[1, max_depth]`.
+//!
+//! 2. **Cache-budget loan** — a finite cache budget is part of the
+//!    semi-external memory envelope.  Unused cache bytes are lent to the
+//!    prefetch in-flight allowance (`extra slots = lendable / shard bytes`)
+//!    and reclaimed automatically as the cache fills, because
+//!    [`Governor::plan_window`] re-reads the lendable amount every
+//!    iteration.  An unbounded or disabled cache imposes no loan constraint
+//!    (`lendable = None`).
+//!
+//! 3. **Priority schedule** ([`Governor::schedule`]) — shards are issued to
+//!    the I/O pool hottest-first instead of in file order: uncached shards
+//!    ranked by the Bloom screen's active-source density (plus accumulated
+//!    miss history) come first, cache-resident shards last.  Mode-1
+//!    (uncompressed) residents additionally never *wait* for a read-ahead
+//!    slot — their hit is a clone of the cached `Arc`, no new decoded
+//!    bytes — while compressing codecs decompress per hit and therefore
+//!    stay gated.  The same scores feed
+//!    [`crate::cache::ShardCache::set_priorities`], steering eviction away
+//!    from hot shards.
+//!
+//! With `adaptive = false` every method degenerates to the fixed PR 1
+//! behavior: constant window, identity schedule, no gate bypass.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::bloom::BloomFilter;
+use crate::cache::ShardCache;
+use crate::graph::VertexId;
+
+/// Tuning envelope for the governor (defaults are deliberately coarse —
+/// the feedback loop, not the constants, does the work).
+#[derive(Debug, Clone)]
+pub struct GovernorConfig {
+    /// Master switch; `false` freezes every decision at the fixed-knob
+    /// behavior.
+    pub adaptive: bool,
+    /// Starting read-ahead window (the engine's `prefetch_depth`).
+    pub initial_depth: usize,
+    /// Hard ceiling for the window (`--prefetch-max`).
+    pub max_depth: usize,
+    /// Grow the window when the prior iteration's io-wait fraction exceeds
+    /// this (workers are starving on acquisition).
+    pub grow_threshold: f64,
+    /// Shrink the window when the fraction falls below this (the pipeline
+    /// is comfortably ahead; hand memory back).
+    pub shrink_threshold: f64,
+}
+
+impl GovernorConfig {
+    pub fn from_engine(adaptive: bool, prefetch_depth: usize, prefetch_max: usize) -> Self {
+        Self {
+            adaptive,
+            initial_depth: prefetch_depth,
+            max_depth: prefetch_max.max(1),
+            grow_threshold: 0.4,
+            shrink_threshold: 0.15,
+        }
+    }
+}
+
+/// Per-run adaptive state.  All interior-mutable so the engine can hold the
+/// governor behind `&self` alongside its thread pools.
+pub struct Governor {
+    cfg: GovernorConfig,
+    /// Current window (next iteration's in-flight budget before the loan
+    /// clamp).
+    depth: AtomicUsize,
+    /// Largest window ever planned — the honest input for
+    /// `VswEngine::memory_estimate`.
+    high_water: AtomicUsize,
+    /// Decoded size of the largest shard, used to convert lent cache bytes
+    /// into whole read-ahead slots.
+    shard_bytes: usize,
+}
+
+impl Governor {
+    pub fn new(cfg: GovernorConfig, max_shard_bytes: usize) -> Self {
+        let initial = if cfg.adaptive {
+            cfg.initial_depth.clamp(1, cfg.max_depth)
+        } else {
+            cfg.initial_depth
+        };
+        Self {
+            cfg,
+            depth: AtomicUsize::new(initial),
+            high_water: AtomicUsize::new(initial),
+            shard_bytes: max_shard_bytes.max(1),
+        }
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        self.cfg.adaptive
+    }
+
+    /// Current raw window (before the per-iteration loan clamp).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// Largest window any iteration was planned with.
+    pub fn high_water(&self) -> usize {
+        self.high_water.load(Ordering::Relaxed)
+    }
+
+    /// Decide this iteration's in-flight window.  `lendable` is the cache's
+    /// unused budget in bytes when the cache has a *finite* budget (the loan
+    /// source), or `None` when the cache is disabled or unbounded (no loan
+    /// constraint — the envelope is `max_depth` alone).
+    ///
+    /// The base window (`initial_depth`) is always honored: the loan only
+    /// gates growth *beyond* the configuration the user asked for, so a
+    /// filling cache reclaims exactly the slots it lent.
+    pub fn plan_window(&self, lendable: Option<usize>) -> usize {
+        if !self.cfg.adaptive {
+            return self.cfg.initial_depth;
+        }
+        let base = self.cfg.initial_depth.clamp(1, self.cfg.max_depth);
+        let mut window = self.depth.load(Ordering::Relaxed).clamp(1, self.cfg.max_depth);
+        if let Some(lendable) = lendable {
+            let lent_slots = lendable / self.shard_bytes;
+            window = window.min(base.saturating_add(lent_slots)).max(1);
+        }
+        self.high_water.fetch_max(window, Ordering::Relaxed);
+        window
+    }
+
+    /// Feed back one completed iteration's worker-time split.  Pure
+    /// function of prior-iteration stats: the *decision* is deterministic
+    /// given the measurements, and no decision can alter results — only
+    /// when bytes move.
+    pub fn observe(&self, io_wait_ns: u64, compute_ns: u64) {
+        if !self.cfg.adaptive {
+            return;
+        }
+        let total = io_wait_ns + compute_ns;
+        if total == 0 {
+            return;
+        }
+        let frac = io_wait_ns as f64 / total as f64;
+        let cur = self.depth.load(Ordering::Relaxed);
+        let next = if frac > self.cfg.grow_threshold {
+            (cur * 2).clamp(1, self.cfg.max_depth)
+        } else if frac < self.cfg.shrink_threshold {
+            cur.saturating_sub(1).max(1)
+        } else {
+            cur
+        };
+        self.depth.store(next, Ordering::Relaxed);
+    }
+
+    /// Priority score for one shard: higher = read sooner.  Composed of the
+    /// Bloom screen's active-source density (dominant term) and the cache's
+    /// per-shard miss history (tie-breaker that keeps historically
+    /// disk-bound shards early even before selective scheduling engages).
+    fn score(
+        &self,
+        shard: usize,
+        selective_now: bool,
+        active: &[VertexId],
+        blooms: &[BloomFilter],
+        cache: &ShardCache,
+    ) -> u64 {
+        let density = if selective_now && !active.is_empty() {
+            // |active ∩ bloom| / |active| in per-mille; the selective
+            // threshold guarantees `active` is small here, so the probe is
+            // cheap
+            let hits = blooms[shard].count_contained(active.iter().map(|&v| v as u64)) as u64;
+            hits * 1000 / active.len() as u64
+        } else {
+            // activation too high for the Bloom screen to discriminate:
+            // every shard is (almost surely) active, rank on history alone
+            1000
+        };
+        let (_, misses) = cache.shard_history(shard);
+        density * 1_000_000 + misses.min(999_999)
+    }
+
+    /// Compute this iteration's shard issue order (a permutation of
+    /// `0..num_shards`): hot uncached shards first (score descending, shard
+    /// id ascending for determinism), cache-resident shards last.  Also
+    /// installs the scores as the cache's eviction priorities so a
+    /// over-budget cache sheds its coldest shards first.
+    ///
+    /// Non-adaptive mode returns file order — bit-for-bit the PR 1 issue
+    /// sequence.
+    pub fn schedule(
+        &self,
+        num_shards: usize,
+        selective_now: bool,
+        active: &[VertexId],
+        blooms: &[BloomFilter],
+        cache: &ShardCache,
+    ) -> Vec<usize> {
+        if !self.cfg.adaptive {
+            return (0..num_shards).collect();
+        }
+        let scores: Vec<u64> = (0..num_shards)
+            .map(|s| self.score(s, selective_now, active, blooms, cache))
+            .collect();
+        cache.set_priorities(&scores);
+        // materialize residency once: sort_by_key re-evaluates its key per
+        // comparison, and is_resident takes a slot lock each call
+        let resident: Vec<bool> = (0..num_shards).map(|s| cache.is_resident(s)).collect();
+        let mut order: Vec<usize> = (0..num_shards).collect();
+        // resident shards sort after all non-resident ones; within each
+        // class, score descending then id ascending — fully deterministic
+        order.sort_by_key(|&s| (resident[s], std::cmp::Reverse(scores[s]), s));
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::Codec;
+    use crate::graph::csr::Csr;
+    use crate::storage::shardfile;
+
+    fn adaptive(initial: usize, max: usize) -> Governor {
+        Governor::new(GovernorConfig::from_engine(true, initial, max), 1000)
+    }
+
+    #[test]
+    fn fixed_mode_never_moves() {
+        let g = Governor::new(GovernorConfig::from_engine(false, 3, 8), 1000);
+        assert_eq!(g.plan_window(None), 3);
+        g.observe(1_000_000, 1); // 100% io-bound
+        assert_eq!(g.plan_window(Some(0)), 3);
+        assert_eq!(g.high_water(), 3);
+        let cache = ShardCache::new(4, Codec::None, usize::MAX);
+        let blooms: Vec<BloomFilter> = (0..4).map(|_| BloomFilter::new(64, 1)).collect();
+        assert_eq!(g.schedule(4, false, &[], &blooms, &cache), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn grows_when_io_bound_and_shrinks_when_compute_bound() {
+        let g = adaptive(1, 8);
+        // io-bound iterations: 1 -> 2 -> 4 -> 8, capped
+        for want in [2usize, 4, 8, 8] {
+            g.observe(900, 100);
+            assert_eq!(g.plan_window(None), want);
+        }
+        assert_eq!(g.high_water(), 8);
+        // compute-bound: additive decrease down to 1
+        for want in [7usize, 6, 5] {
+            g.observe(1, 999);
+            assert_eq!(g.plan_window(None), want);
+        }
+        for _ in 0..20 {
+            g.observe(0, 100);
+        }
+        assert_eq!(g.plan_window(None), 1, "floor at 1 keeps the pipeline alive");
+        // mid-band fraction: hold steady
+        g.observe(25, 75);
+        assert_eq!(g.plan_window(None), 1);
+    }
+
+    #[test]
+    fn cache_loan_caps_growth_and_is_reclaimed() {
+        let g = Governor::new(GovernorConfig::from_engine(true, 2, 16), 1000);
+        for _ in 0..4 {
+            g.observe(900, 100); // wants 16
+        }
+        assert_eq!(g.depth(), 16);
+        // empty finite cache lends 3 whole slots => base 2 + 3
+        assert_eq!(g.plan_window(Some(3500)), 5);
+        // cache fills, loan reclaimed down to the configured base
+        assert_eq!(g.plan_window(Some(900)), 2);
+        assert_eq!(g.plan_window(Some(0)), 2);
+        // unbounded/disabled cache: only max_depth gates
+        assert_eq!(g.plan_window(None), 16);
+        assert_eq!(g.high_water(), 16);
+    }
+
+    #[test]
+    fn schedule_puts_hot_uncached_first_and_resident_last() {
+        let g = adaptive(2, 8);
+        // 3 shards over intervals [0,8), [8,16), [16,24)
+        let mut blooms: Vec<BloomFilter> = (0..3).map(|_| BloomFilter::new(256, 2)).collect();
+        // shard 0: no active sources; shard 1: both; shard 2: one
+        blooms[1].insert(100);
+        blooms[1].insert(101);
+        blooms[2].insert(100);
+        let cache = ShardCache::new(3, Codec::None, usize::MAX);
+        // make shard 0 cache-resident
+        let edges: Vec<(u32, u32)> = (0..16).map(|i| (i % 4, i % 8)).collect();
+        let payload = shardfile::to_bytes(&Csr::from_edges(0, 8, &edges));
+        cache.insert(0, &payload).unwrap();
+        assert!(cache.is_resident(0));
+
+        let order = g.schedule(3, true, &[100, 101], &blooms, &cache);
+        assert_eq!(order, vec![1, 2, 0], "densest uncached first, resident last");
+
+        // determinism: identical inputs, identical order
+        assert_eq!(order, g.schedule(3, true, &[100, 101], &blooms, &cache));
+    }
+}

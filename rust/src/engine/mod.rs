@@ -1,11 +1,13 @@
 //! The vertex-centric sliding window engine (paper §II-C, Algorithm 1).
 
 mod backend;
+mod governor;
 mod shared;
 mod stats;
 mod vsw;
 
 pub use backend::Backend;
+pub use governor::{Governor, GovernorConfig};
 pub use shared::SharedSlice;
 pub use stats::{IterStats, RunResult, RunStats};
 pub use vsw::{EngineConfig, VswEngine};

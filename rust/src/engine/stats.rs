@@ -36,6 +36,10 @@ pub struct IterStats {
     /// active-set scan, summed across workers (can exceed `wall` when
     /// several workers compute in parallel).
     pub compute: Duration,
+    /// Read-ahead window this iteration ran with: the fixed
+    /// `prefetch_depth` normally, the governor's planned window under
+    /// `--adaptive`, 0 on the synchronous path.
+    pub prefetch_depth: usize,
 }
 
 /// Whole-run statistics.
@@ -94,6 +98,30 @@ impl RunStats {
             io / total
         }
     }
+
+    /// Whole-run cache hit ratio (hits / probes), 0.0 when no probes were
+    /// made — one of the three numbers the CI bench gate records.
+    pub fn cache_hit_ratio(&self) -> f64 {
+        let hits: u64 = self.iters.iter().map(|i| i.cache_hits).sum();
+        let misses: u64 = self.iters.iter().map(|i| i.cache_misses).sum();
+        if hits + misses == 0 {
+            0.0
+        } else {
+            hits as f64 / (hits + misses) as f64
+        }
+    }
+
+    /// Read-ahead window of the last iteration — where the adaptive
+    /// governor's feedback loop settled.
+    pub fn final_prefetch_depth(&self) -> usize {
+        self.iters.last().map(|i| i.prefetch_depth).unwrap_or(0)
+    }
+
+    /// Largest read-ahead window any iteration ran with (the memory
+    /// high-water contribution Fig 11 must account).
+    pub fn max_prefetch_depth(&self) -> usize {
+        self.iters.iter().map(|i| i.prefetch_depth).max().unwrap_or(0)
+    }
 }
 
 /// Final values + statistics.
@@ -133,6 +161,7 @@ mod tests {
             selective_enabled: false,
             io_wait: Duration::ZERO,
             compute: Duration::ZERO,
+            prefetch_depth: 0,
         };
         let stats = RunStats { iters: vec![mk(10), mk(32)], ..Default::default() };
         assert_eq!(stats.total_bytes_read(), 42);
@@ -154,11 +183,41 @@ mod tests {
             selective_enabled: false,
             io_wait: Duration::from_millis(io_ms),
             compute: Duration::from_millis(comp_ms),
+            prefetch_depth: 0,
         };
         let stats = RunStats { iters: vec![mk(10, 30), mk(20, 60)], ..Default::default() };
         assert_eq!(stats.total_io_wait(), Duration::from_millis(30));
         assert_eq!(stats.total_compute(), Duration::from_millis(90));
         assert!((stats.io_wait_fraction() - 0.25).abs() < 1e-9);
         assert_eq!(RunStats::default().io_wait_fraction(), 0.0);
+    }
+
+    #[test]
+    fn cache_hit_ratio_and_depth_trajectory() {
+        let mk = |hits: u64, misses: u64, depth: usize| IterStats {
+            iter: 0,
+            wall: Duration::ZERO,
+            shards_processed: 0,
+            shards_skipped: 0,
+            active_vertices: 0,
+            active_ratio: 0.0,
+            io: IoSnapshot::default(),
+            cache_hits: hits,
+            cache_misses: misses,
+            kernel_calls: 0,
+            selective_enabled: false,
+            io_wait: Duration::ZERO,
+            compute: Duration::ZERO,
+            prefetch_depth: depth,
+        };
+        let stats = RunStats {
+            iters: vec![mk(3, 1, 2), mk(5, 3, 4), mk(8, 0, 3)],
+            ..Default::default()
+        };
+        assert!((stats.cache_hit_ratio() - 0.8).abs() < 1e-9);
+        assert_eq!(stats.final_prefetch_depth(), 3);
+        assert_eq!(stats.max_prefetch_depth(), 4);
+        assert_eq!(RunStats::default().cache_hit_ratio(), 0.0);
+        assert_eq!(RunStats::default().final_prefetch_depth(), 0);
     }
 }

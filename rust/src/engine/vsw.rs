@@ -29,6 +29,19 @@
 //! shard's interval is written exactly once) — `tests/prefetch_pipeline.rs`
 //! locks that in.  [`IterStats::io_wait`] / [`IterStats::compute`] expose
 //! how much acquisition time the pipeline hides.
+//!
+//! ## The adaptive I/O governor
+//!
+//! With [`EngineConfig::adaptive`] the window, the shard issue order and
+//! the cache/prefetch memory split all come from one per-iteration feedback
+//! loop ([`crate::engine::Governor`]): the window grows while workers stall
+//! on acquisition and shrinks when compute-bound (clamped to
+//! `[1, prefetch_max]` and to what a finite cache budget can lend), shards
+//! are issued hottest-first (Bloom active-density + miss history), and
+//! mode-1 cache residents never wait for a read-ahead slot.  Every decision
+//! is a function of *completed* iterations only, so results remain
+//! bit-identical to every fixed configuration — `tests/governor_adaptive.rs`
+//! and the extended determinism regression prove it.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -40,6 +53,7 @@ use crate::apps::{ProgramContext, VertexProgram};
 use crate::bloom::BloomFilter;
 use crate::cache::{Codec, ShardCache};
 use crate::engine::backend::Backend;
+use crate::engine::governor::{Governor, GovernorConfig};
 use crate::engine::shared::SharedSlice;
 use crate::engine::stats::{IterStats, RunResult, RunStats};
 use crate::graph::csr::Csr;
@@ -72,8 +86,17 @@ pub struct EngineConfig {
     /// Shards the I/O pipeline may hold decoded ahead of compute.
     /// `0` = synchronous loads on the compute path (the conference paper's
     /// behavior); `>= 1` = pipelined prefetch (the journal version's
-    /// overlap).  Results are identical either way.
+    /// overlap).  Results are identical either way.  Under `adaptive` this
+    /// is only the *starting* window.
     pub prefetch_depth: usize,
+    /// Enable the adaptive I/O governor ([`crate::engine::Governor`]):
+    /// per-iteration feedback sizes the read-ahead window between 1 and
+    /// `prefetch_max`, shards are issued hottest-first, and a finite cache
+    /// budget lends its unused bytes to the in-flight allowance.  Results
+    /// stay bit-identical to any fixed configuration.
+    pub adaptive: bool,
+    /// Hard ceiling for the adaptive window (`--prefetch-max`).
+    pub prefetch_max: usize,
 }
 
 impl Default for EngineConfig {
@@ -88,18 +111,22 @@ impl Default for EngineConfig {
             convergence_tol: 0.0,
             backend: Backend::Native,
             prefetch_depth: 2,
+            adaptive: false,
+            prefetch_max: 8,
         }
     }
 }
 
-/// What the prefetch pipeline delivers for one scheduled shard.
+/// What the prefetch pipeline delivers for one scheduled shard.  The bool
+/// records whether the producer took an in-flight permit for it (cache-
+/// resident shards under the adaptive governor may bypass the gate).
 enum Fetched {
     /// Bloom screening proved the shard inactive — no I/O was done.
     Skipped(usize),
-    /// Ready-decoded shard buffer (holds an in-flight permit).
-    Ready(usize, Arc<Csr>),
-    /// Acquisition failed (holds an in-flight permit).
-    Failed(anyhow::Error),
+    /// Ready-decoded shard buffer.
+    Ready(usize, Arc<Csr>, bool),
+    /// Acquisition failed.
+    Failed(anyhow::Error, bool),
 }
 
 /// An opened dataset ready to run programs (GraphMP's steady state: all
@@ -111,8 +138,12 @@ pub struct VswEngine {
     blooms: Vec<BloomFilter>,
     cache: ShardCache,
     pool: ThreadPool,
-    /// Dedicated I/O workers for the prefetch pipeline (None ⇔ depth 0).
+    /// Dedicated I/O workers for the prefetch pipeline (None ⇔ the
+    /// synchronous path: depth 0 and the governor disabled).
     io_pool: Option<ThreadPool>,
+    /// Adaptive I/O governor; with `cfg.adaptive == false` it pins every
+    /// decision at the fixed-knob behavior.
+    governor: Governor,
     cfg: EngineConfig,
     pub load_wall: std::time::Duration,
 }
@@ -134,7 +165,15 @@ impl VswEngine {
         for i in 0..p {
             blooms.push(load_bloom(&dir, i).with_context(|| format!("bloom {i}"))?);
         }
-        let cache = ShardCache::new(p, cfg.cache_codec, cfg.cache_budget.max(1));
+        // default admission is no-evict (optimal under the cyclic sweep);
+        // the adaptive governor installs per-shard priorities every
+        // iteration, which makes replacement smarter than the cyclic
+        // degenerate case — so adaptive mode runs with eviction enabled
+        // and the victim is always the coldest (lowest-priority) shard
+        let mut cache = ShardCache::new(p, cfg.cache_codec, cfg.cache_budget.max(1));
+        if cfg.adaptive {
+            cache = cache.with_eviction();
+        }
         let cache_enabled = cfg.cache_budget > 0;
         // warm the cache during loading, like the paper's loading phase
         // ("places processed shards in the cache if possible"); with
@@ -147,13 +186,24 @@ impl VswEngine {
             }
         }
         let pool = ThreadPool::new(cfg.threads.max(1));
-        let io_pool = if cfg.prefetch_depth > 0 {
+        let io_pool = if cfg.prefetch_depth > 0 || cfg.adaptive {
             // a few readers saturate the pipeline; decode parallelism is
-            // bounded by depth anyway
-            Some(ThreadPool::new(cfg.prefetch_depth.clamp(1, 4)))
+            // bounded by the in-flight window anyway
+            let readers = if cfg.adaptive { cfg.prefetch_max } else { cfg.prefetch_depth };
+            Some(ThreadPool::new(readers.clamp(1, 4)))
         } else {
             None
         };
+        let max_shard_bytes = property
+            .intervals
+            .windows(2)
+            .map(|w| (w[1] - w[0]) as u64 * 16)
+            .max()
+            .unwrap_or(0);
+        let governor = Governor::new(
+            GovernorConfig::from_engine(cfg.adaptive, cfg.prefetch_depth, cfg.prefetch_max),
+            max_shard_bytes as usize,
+        );
         Ok(Self {
             dir,
             property,
@@ -162,6 +212,7 @@ impl VswEngine {
             cache,
             pool,
             io_pool,
+            governor,
             cfg,
             load_wall: t0.elapsed(),
         })
@@ -175,9 +226,18 @@ impl VswEngine {
         &self.cache
     }
 
+    /// The run's adaptive I/O governor (frozen at the fixed-knob behavior
+    /// unless [`EngineConfig::adaptive`] is set).
+    pub fn governor(&self) -> &Governor {
+        &self.governor
+    }
+
     /// Estimated resident memory (Fig 11's metric): vertex arrays, degree
     /// arrays, Bloom filters, cache contents, plus per-thread shard
-    /// buffers and the prefetch pipeline's in-flight slots.
+    /// buffers and the prefetch pipeline's in-flight slots.  The pipeline
+    /// term uses the governor's window *high-water mark*, not the
+    /// configured depth — under `--adaptive` the window moves, and the
+    /// honest memory figure is the largest it ever got.
     pub fn memory_estimate(&self) -> u64 {
         let v = self.property.info.num_vertices;
         let vertex_arrays = 2 * 4 * v; // src + dst f32
@@ -192,7 +252,7 @@ impl VswEngine {
             .max()
             .unwrap_or(0);
         let shard_buffers =
-            (self.cfg.threads + self.cfg.prefetch_depth) as u64 * max_shard_bytes;
+            (self.cfg.threads + self.governor.high_water()) as u64 * max_shard_bytes;
         vertex_arrays + degree_arrays + blooms + cache + shard_buffers
     }
 
@@ -240,6 +300,27 @@ impl VswEngine {
             let selective_now = self.cfg.selective
                 && active_ratio > 0.0
                 && active_ratio < self.cfg.selective_threshold;
+
+            // governor: size this iteration's in-flight window (a finite
+            // cache budget lends its unused bytes; an unbounded or disabled
+            // cache imposes no loan) and pick the shard issue order
+            let window = if self.io_pool.is_some() {
+                let lendable =
+                    if self.cfg.cache_budget == 0 || self.cfg.cache_budget == usize::MAX {
+                        None
+                    } else {
+                        Some(self.cache.lendable_bytes())
+                    };
+                self.governor.plan_window(lendable)
+            } else {
+                0
+            };
+            let order = if self.io_pool.is_some() {
+                self.governor
+                    .schedule(p, selective_now, &active, &self.blooms, &self.cache)
+            } else {
+                Vec::new()
+            };
 
             let processed = AtomicU64::new(0);
             let skipped = AtomicU64::new(0);
@@ -315,36 +396,74 @@ impl VswEngine {
                     Ok(())
                 };
 
-                if let Some(io_pool) = self.io_pool.as_ref().filter(|_| cfg.prefetch_depth > 0) {
-                    // ---- pipelined path: I/O pool produces, compute pool
-                    // consumes; at most `depth` decoded shards in flight ----
-                    let depth = cfg.prefetch_depth;
-                    let gate = &Semaphore::new(depth);
+                if let Some(io_pool) = self.io_pool.as_ref().filter(|_| window > 0) {
+                    // ---- pipelined path: I/O pool produces (hottest shard
+                    // first, per the governor's schedule), compute pool
+                    // consumes; at most `window` decoded shards in flight ---
+                    let gate = &Semaphore::new(window);
                     let (tx, rx) = mpsc::channel::<Fetched>();
                     let rx = Mutex::new(rx);
+                    let adaptive = self.governor.is_adaptive();
                     std::thread::scope(|scope| {
                         let screened_out = &screened_out;
-                        let fetch = &fetch;
+                        let order = &order;
                         scope.spawn(move || {
                             let tx = Mutex::new(tx);
-                            io_pool.parallel_for(p, |shard| {
+                            io_pool.parallel_for(p, |k| {
+                                let shard = order[k];
                                 if screened_out(shard) {
                                     let _ = tx.lock().unwrap().send(Fetched::Skipped(shard));
                                     return;
                                 }
-                                gate.acquire(); // in-flight budget
+                                // in-flight budget — except that under the
+                                // governor a *mode-1* (uncompressed) cache
+                                // hit hands out a clone of the cached Arc:
+                                // no disk read and no new decoded bytes, so
+                                // it never waits for a read-ahead slot (it
+                                // still takes a free one opportunistically).
+                                // Compressing codecs decompress a fresh
+                                // buffer per hit, which is exactly the
+                                // memory the window bounds — they go
+                                // through the gate like any other shard.
+                                let fast_resident = adaptive
+                                    && cache.codec() == Codec::None
+                                    && cache.is_resident(shard);
+                                let mut holds_permit = if fast_resident {
+                                    gate.try_acquire()
+                                } else {
+                                    gate.acquire();
+                                    true
+                                };
                                 // a panic inside acquisition (e.g. a poisoned
                                 // cache lock) must not kill the pool worker —
                                 // that would starve the consumers' recv();
                                 // surface it as a Failed message instead
+                                let did_read = std::cell::Cell::new(false);
                                 let msg = match std::panic::catch_unwind(
-                                    std::panic::AssertUnwindSafe(|| fetch(shard)),
+                                    std::panic::AssertUnwindSafe(|| {
+                                        cache.fetch_decoded(shard, cfg.cache_budget > 0, || {
+                                            did_read.set(true);
+                                            io::read_file(&dir.shard_path(shard))
+                                        })
+                                    }),
                                 ) {
-                                    Ok(Ok(csr)) => Fetched::Ready(shard, csr),
-                                    Ok(Err(e)) => Fetched::Failed(e),
-                                    Err(_) => Fetched::Failed(anyhow::anyhow!(
-                                        "shard {shard} acquisition panicked"
-                                    )),
+                                    Ok(Ok(csr)) => {
+                                        // the resident-bypass raced an
+                                        // eviction and the shard came off
+                                        // disk after all: take the in-flight
+                                        // permit it owes before publishing,
+                                        // so the decoded-shard envelope holds
+                                        if !holds_permit && did_read.get() {
+                                            gate.acquire();
+                                            holds_permit = true;
+                                        }
+                                        Fetched::Ready(shard, csr, holds_permit)
+                                    }
+                                    Ok(Err(e)) => Fetched::Failed(e, holds_permit),
+                                    Err(_) => Fetched::Failed(
+                                        anyhow::anyhow!("shard {shard} acquisition panicked"),
+                                        holds_permit,
+                                    ),
                                 };
                                 let _ = tx.lock().unwrap().send(msg);
                             });
@@ -357,16 +476,20 @@ impl VswEngine {
                             let t_comp = Instant::now();
                             match msg {
                                 Ok(Fetched::Skipped(shard)) => carry_skipped(shard),
-                                Ok(Fetched::Ready(shard, csr)) => {
+                                Ok(Fetched::Ready(shard, csr, permit)) => {
                                     if let Err(e) = process_ready(shard, &csr) {
                                         record_err(e);
                                     }
                                     drop(csr);
-                                    gate.release();
+                                    if permit {
+                                        gate.release();
+                                    }
                                 }
-                                Ok(Fetched::Failed(e)) => {
+                                Ok(Fetched::Failed(e, permit)) => {
                                     record_err(e);
-                                    gate.release();
+                                    if permit {
+                                        gate.release();
+                                    }
                                 }
                                 Err(_) => record_err(anyhow::anyhow!(
                                     "prefetch pipeline terminated early"
@@ -413,6 +536,13 @@ impl VswEngine {
             active_ratio = active.len() as f64 / n.max(1) as f64;
             std::mem::swap(&mut src, &mut dst);
 
+            // feedback: the governor only ever sees *completed* iterations,
+            // so its next decision is a pure function of prior work
+            self.governor.observe(
+                io_wait_ns.load(Ordering::Relaxed),
+                compute_ns.load(Ordering::Relaxed),
+            );
+
             edges_processed += edge_count.load(Ordering::Relaxed);
             stats.iters.push(IterStats {
                 iter,
@@ -431,6 +561,7 @@ impl VswEngine {
                 selective_enabled: selective_now,
                 io_wait: std::time::Duration::from_nanos(io_wait_ns.load(Ordering::Relaxed)),
                 compute: std::time::Duration::from_nanos(compute_ns.load(Ordering::Relaxed)),
+                prefetch_depth: window,
             });
         }
 
@@ -512,7 +643,8 @@ mod tests {
         let edges = generator::erdos_renyi(300, 1500, 3);
         let n = 300;
         let dir = build_dataset("minapps", &edges, n, 256);
-        let engine = VswEngine::open(dir, EngineConfig { threads: 3, ..Default::default() }).unwrap();
+        let engine =
+            VswEngine::open(dir, EngineConfig { threads: 3, ..Default::default() }).unwrap();
 
         let sssp = Sssp { source: 0 };
         let got = engine.run(&sssp).unwrap();
@@ -637,6 +769,47 @@ mod tests {
                 assert_eq!(a.shards_skipped, b.shards_skipped, "depth {depth}");
             }
         }
+    }
+
+    #[test]
+    fn adaptive_governor_preserves_results_and_reports_window() {
+        let edges = generator::rmat(9, 5000, generator::RmatParams::default(), 7);
+        let n = 512;
+        let dir = build_dataset("gov", &edges, n, 400);
+        let fixed = VswEngine::open(
+            dir.clone(),
+            EngineConfig { max_iters: 6, threads: 4, prefetch_depth: 2, ..Default::default() },
+        )
+        .unwrap();
+        let adaptive = VswEngine::open(
+            dir,
+            EngineConfig {
+                max_iters: 6,
+                threads: 4,
+                prefetch_depth: 2,
+                adaptive: true,
+                prefetch_max: 8,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let a = fixed.run(&PageRank::default()).unwrap();
+        let b = adaptive.run(&PageRank::default()).unwrap();
+        assert_eq!(a.values, b.values, "governor must not change results");
+        for it in &b.stats.iters {
+            assert!(
+                (1..=8).contains(&it.prefetch_depth),
+                "iter {} window {} outside [1, max]",
+                it.iter,
+                it.prefetch_depth
+            );
+        }
+        // the memory estimate must account the window high-water, which the
+        // governor tracks and can never undershoot the planned windows
+        assert!(adaptive.governor().high_water() >= b.stats.max_prefetch_depth());
+        assert!(adaptive.governor().high_water() >= 1);
+        // fixed engine: high-water == configured depth, estimate unchanged
+        assert_eq!(fixed.governor().high_water(), 2);
     }
 
     #[test]

@@ -48,6 +48,32 @@
 //! (`benches/fig6_loading.rs`, `benches/fig7_periter.rs`).  Results are
 //! bit-identical to synchronous loading for every thread count and depth
 //! (`tests/prefetch_pipeline.rs`).
+//!
+//! ## The adaptive I/O governor
+//!
+//! The pipeline's three static knobs — read-ahead depth, cache byte
+//! budget, file-order shard issue — collapse into one per-iteration
+//! feedback loop under `--adaptive` ([`engine::Governor`]):
+//!
+//! * **window**: grows (×2) while workers stall on shard acquisition
+//!   (`io_wait_fraction` above ~0.4), shrinks (−1) when compute-bound,
+//!   clamped to `[1, --prefetch-max]`;
+//! * **memory split**: a finite cache budget lends its unused bytes to the
+//!   in-flight allowance and reclaims them as the cache fills, so the
+//!   semi-external envelope holds with the window in motion;
+//! * **schedule**: shards are issued hottest-first (Bloom active-source
+//!   density + per-shard miss history); mode-1 cache residents never wait
+//!   for a read-ahead slot (their hit is an `Arc` clone, not a fresh
+//!   decode), and the same scores steer cache eviction away from hot
+//!   shards.
+//!
+//! Decisions read only *completed* iterations, so results stay
+//! bit-identical to every fixed configuration (`tests/governor_adaptive.rs`
+//! and the determinism regression), while `VswEngine::memory_estimate`
+//! reports the window's high-water mark so Fig 11 stays honest.  The CI
+//! `bench-smoke` job records each PR's wall time / io-wait fraction / cache
+//! hit ratio to `BENCH_pr.json` and gates >25 % regressions against the
+//! committed `BENCH_baseline.json` ([`coordinator::benchjson`]).
 
 pub mod apps;
 pub mod baselines;

@@ -31,7 +31,7 @@ use graphmp::storage::{io, DatasetDir};
 use graphmp::util::humansize;
 
 const BOOL_FLAGS: &[&str] =
-    &["no-cache", "no-selective", "symmetrize", "streaming", "quick", "help"];
+    &["no-cache", "no-selective", "symmetrize", "streaming", "quick", "help", "adaptive"];
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -49,6 +49,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
         "preprocess" => cmd_preprocess(&args),
         "run" => cmd_run(&args),
         "baseline" => cmd_baseline(&args),
+        "bench-compare" => cmd_bench_compare(&args),
         "info" => cmd_info(&args),
         "datasets" => cmd_datasets(),
         _ => {
@@ -69,9 +70,16 @@ USAGE:
                      [--no-cache] [--no-selective] [--threads N]
                      [--prefetch-depth N]   shards the I/O pipeline decodes
                                             ahead of compute (0 = synchronous)
+                     [--adaptive]           let the I/O governor size the
+                                            window, order shards hottest-
+                                            first and loan spare cache budget
+                     [--prefetch-max N]     adaptive window ceiling (def. 8)
                      [--throttle-mbps N]
   graphmp baseline   --system <psw|esg|dsw|vsp|inmem> --data <edges>
                      --vertices <N> --app <name> [--iters N]
+  graphmp bench-compare --baseline <BENCH_baseline.json> --current <BENCH_pr.json>
+                     [--tolerance 0.25] [--min-abs-secs 0.25]
+                     (exit 1 when any bench regressed past the gate)
   graphmp info       --data <dir>
   graphmp datasets
 "#;
@@ -172,6 +180,8 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     }
     cfg.prefetch_depth =
         args.get_usize("prefetch-depth", EngineConfig::default().prefetch_depth)?;
+    cfg.adaptive = args.has("adaptive");
+    cfg.prefetch_max = args.get_usize("prefetch-max", EngineConfig::default().prefetch_max)?;
     if args.has("no-cache") {
         cfg.cache_budget = 0;
     } else if let Some(c) = args.get("cache") {
@@ -224,11 +234,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
     for it in &s.iters {
         println!(
-            "  iter {:3}: {:>9}  io_wait={:>9} compute={:>9} processed={:3} skipped={:3} active={:8} ({:.4}%) read={} hits={} {}",
+            "  iter {:3}: {:>9}  io_wait={:>9} compute={:>9} window={:2} processed={:3} skipped={:3} active={:8} ({:.4}%) read={} hits={} {}",
             it.iter,
             humansize::duration(it.wall),
             humansize::duration(it.io_wait),
             humansize::duration(it.compute),
+            it.prefetch_depth,
             it.shards_processed,
             it.shards_skipped,
             it.active_vertices,
@@ -267,6 +278,42 @@ fn cmd_baseline(args: &Args) -> Result<()> {
         humansize::bytes(run.memory_bytes),
     );
     Ok(())
+}
+
+/// The CI perf gate: compare a fresh `BENCH_pr.json` against the committed
+/// `BENCH_baseline.json` and fail (exit 1 via error) on regression.
+fn cmd_bench_compare(args: &Args) -> Result<()> {
+    use graphmp::coordinator::benchjson;
+    let baseline = PathBuf::from(args.req("baseline")?);
+    let current = PathBuf::from(args.req("current")?);
+    let tolerance = args.get_f64("tolerance", 0.25)?;
+    let min_abs = args.get_f64("min-abs-secs", 0.25)?;
+    let base = benchjson::load(&baseline)
+        .with_context(|| format!("loading baseline {}", baseline.display()))?;
+    let cur = benchjson::load(&current)
+        .with_context(|| format!("loading current {}", current.display()))?;
+    let report = benchjson::compare(&base, &cur, tolerance, min_abs);
+    for line in &report.lines {
+        println!("{line}");
+    }
+    for warn in &report.stale_baseline {
+        println!("WARNING stale baseline — {warn}");
+    }
+    if report.regressions.is_empty() {
+        println!(
+            "bench-compare: {} bench(es) within {:.0}% of baseline",
+            report.compared,
+            tolerance * 100.0
+        );
+        Ok(())
+    } else {
+        bail!(
+            "bench-compare: {} regression(s) past the {:.0}% gate:\n  {}",
+            report.regressions.len(),
+            tolerance * 100.0,
+            report.regressions.join("\n  ")
+        )
+    }
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -52,6 +52,19 @@ impl Semaphore {
         *p -= 1;
     }
 
+    /// Take a permit if one is free right now; never blocks.  The adaptive
+    /// governor's cache-resident fast path uses this: a shard the cache can
+    /// serve should not wait behind (or consume) a read-ahead slot.
+    pub fn try_acquire(&self) -> bool {
+        let mut p = self.permits.lock().unwrap();
+        if *p == 0 {
+            false
+        } else {
+            *p -= 1;
+            true
+        }
+    }
+
     /// Return a permit.
     pub fn release(&self) {
         let mut p = self.permits.lock().unwrap();
@@ -203,5 +216,20 @@ mod tests {
             h.join().unwrap();
         }
         assert!(peak.load(Ordering::SeqCst) <= 3, "peak {}", peak.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn try_acquire_never_blocks_and_respects_budget() {
+        let sem = Semaphore::new(2);
+        assert!(sem.try_acquire());
+        assert!(sem.try_acquire());
+        assert!(!sem.try_acquire(), "no permits left");
+        sem.release();
+        assert!(sem.try_acquire());
+        sem.release();
+        sem.release();
+        // blocking acquire still works after try_acquire traffic
+        sem.acquire();
+        sem.release();
     }
 }

@@ -99,7 +99,7 @@ struct Parser<'a> {
     pos: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn skip_ws(&mut self) {
         while let Some(&c) = self.b.get(self.pos) {
             if c == b' ' || c == b'\t' || c == b'\n' || c == b'\r' {

@@ -123,3 +123,82 @@ fn symmetrize_doubles_edges() {
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("edges:       8000"), "{text}");
 }
+
+#[test]
+fn adaptive_run_flag_works_and_reports_window() {
+    let d = workdir();
+    let edges = d.join("adpt.bin");
+    let data = d.join("adpt.gmp");
+    bin()
+        .args(["generate", "--dataset", "tiny", "--out"])
+        .arg(&edges)
+        .output()
+        .unwrap();
+    bin()
+        .args(["preprocess", "--input"])
+        .arg(&edges)
+        .args(["--out"])
+        .arg(&data)
+        .output()
+        .unwrap();
+    let out = bin()
+        .args(["run", "--data"])
+        .arg(&data)
+        .args(["--app", "pagerank", "--iters", "3", "--adaptive", "--prefetch-max", "4"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("iters=3"), "{text}");
+    assert!(text.contains("window="), "per-iteration dump must show the window: {text}");
+}
+
+#[test]
+fn bench_compare_gates_regressions() {
+    let d = workdir();
+    let base = d.join("BENCH_baseline.json");
+    let cur = d.join("BENCH_pr.json");
+    std::fs::write(
+        &base,
+        r#"{"b1":{"wall_secs":2.0,"io_wait_fraction":0.2,"cache_hit_ratio":0.9}}"#,
+    )
+    .unwrap();
+    // within tolerance: +10%
+    std::fs::write(
+        &cur,
+        r#"{"b1":{"wall_secs":2.2,"io_wait_fraction":0.25,"cache_hit_ratio":0.9}}"#,
+    )
+    .unwrap();
+    let out = bin()
+        .args(["bench-compare", "--baseline"])
+        .arg(&base)
+        .args(["--current"])
+        .arg(&cur)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("within"), "pass summary expected");
+
+    // past tolerance AND past the absolute floor: must fail
+    std::fs::write(&cur, r#"{"b1":{"wall_secs":9.0}}"#).unwrap();
+    let out = bin()
+        .args(["bench-compare", "--baseline"])
+        .arg(&base)
+        .args(["--current"])
+        .arg(&cur)
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "regression must exit nonzero");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("regression"));
+
+    // missing bench in current: must fail
+    std::fs::write(&cur, r#"{}"#).unwrap();
+    let out = bin()
+        .args(["bench-compare", "--baseline"])
+        .arg(&base)
+        .args(["--current"])
+        .arg(&cur)
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "missing bench must exit nonzero");
+}

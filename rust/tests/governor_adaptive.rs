@@ -1,0 +1,155 @@
+//! Governor convergence: the adaptive window must *move the right way*
+//! under artificial I/O conditions, without ever changing results.
+//!
+//! Two runs of the same PageRank workload, same graph, same seed:
+//!
+//! * **slow I/O** — cache disabled, the global byte throttle engaged, so
+//!   every iteration re-reads every shard at HDD-ish speed.  Workers stall
+//!   on acquisition, the io-wait fraction saturates, and the governor must
+//!   grow the read-ahead window.
+//! * **instant I/O** — mode-1 cache (decoded `Arc`s, allocation-free hits)
+//!   warmed at open, no throttle.  Acquisition is a pointer clone, compute
+//!   dominates, and the governor must not grow (and should shrink) the
+//!   window.
+//!
+//! The slow run must end with a strictly larger window than the instant
+//! run, and both value arrays must match the in-memory reference — the
+//! feedback loop may only change *when bytes move*, never what is computed.
+//!
+//! Kept to a single `#[test]` because the I/O throttle is process-global.
+
+use graphmp::apps::{PageRank, ProgramContext, VertexProgram};
+use graphmp::cache::Codec;
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::graph::generator;
+use graphmp::sharding::{preprocess, PreprocessConfig};
+use graphmp::storage::{io, DatasetDir};
+
+/// Single-threaded in-memory reference.
+fn reference(
+    app: &dyn VertexProgram,
+    edges: &[(u32, u32)],
+    n: usize,
+    max_iters: usize,
+) -> Vec<f32> {
+    let ctx = ProgramContext { num_vertices: n as u64 };
+    let mut in_adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut out_deg = vec![0u32; n];
+    for &(s, d) in edges {
+        in_adj[d as usize].push(s);
+        out_deg[s as usize] += 1;
+    }
+    let mut vals: Vec<f32> = (0..n).map(|v| app.init(v as u32, &ctx)).collect();
+    for _ in 0..max_iters {
+        vals = (0..n)
+            .map(|v| app.update(v as u32, &in_adj[v], &vals, &out_deg, &ctx))
+            .collect();
+    }
+    vals
+}
+
+fn assert_matches(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-4 * b.abs().max(1e-6),
+            "{what} v{i}: {a} vs {b}"
+        );
+    }
+}
+
+/// Clears the global throttle even if an assertion fires mid-test.
+struct ThrottleOff;
+impl Drop for ThrottleOff {
+    fn drop(&mut self) {
+        io::set_throttle(0);
+    }
+}
+
+#[test]
+fn window_grows_under_slow_io_shrinks_under_instant_io_and_matches_reference() {
+    let _guard = ThrottleOff;
+    let n = 1usize << 11; // 2048 vertices
+    let edges = generator::rmat(11, 400_000, generator::RmatParams::default(), 77);
+    let dir = DatasetDir::new(
+        std::env::temp_dir().join(format!("gmp_gov_{}", std::process::id())),
+    );
+    let _ = std::fs::remove_dir_all(&dir.root);
+    // ~50 shards of ~8K edges: enough shards for the window to matter, and
+    // several milliseconds of compute per iteration, so pipeline-startup
+    // noise on a loaded CI runner cannot masquerade as an I/O stall in the
+    // instant-I/O run
+    preprocess(
+        "gov",
+        &edges,
+        n,
+        &dir,
+        &PreprocessConfig { max_edges_per_shard: 8192, bloom_fpr: 0.01 },
+    )
+    .unwrap();
+
+    let iters = 8;
+    let want = reference(&PageRank::default(), &edges, n, iters);
+    let base_cfg = EngineConfig {
+        max_iters: iters,
+        threads: 4,
+        selective: false,
+        adaptive: true,
+        prefetch_depth: 2, // both runs start from the same window
+        prefetch_max: 8,
+        ..Default::default()
+    };
+
+    // -- slow I/O: no cache, throttled disk => io-bound => window grows ---
+    io::set_throttle(32 << 20); // 32 MiB/s
+    let slow_engine = VswEngine::open(
+        dir.clone(),
+        EngineConfig { cache_budget: 0, ..base_cfg.clone() },
+    )
+    .unwrap();
+    let slow = slow_engine.run(&PageRank::default()).unwrap();
+    io::set_throttle(0);
+
+    // -- instant I/O: warmed mode-1 cache (allocation-free hits) =>
+    // compute-bound => window must not grow ----------------------------
+    let fast_engine = VswEngine::open(
+        dir.clone(),
+        EngineConfig { cache_codec: Codec::None, ..base_cfg },
+    )
+    .unwrap();
+    let fast = fast_engine.run(&PageRank::default()).unwrap();
+
+    let slow_final = slow.stats.final_prefetch_depth();
+    let fast_final = fast.stats.final_prefetch_depth();
+    assert!(
+        slow_final > fast_final,
+        "slow-I/O window ({slow_final}) must end above instant-I/O window ({fast_final});\n\
+         slow trajectory: {:?}\nfast trajectory: {:?}",
+        slow.stats.iters.iter().map(|i| i.prefetch_depth).collect::<Vec<_>>(),
+        fast.stats.iters.iter().map(|i| i.prefetch_depth).collect::<Vec<_>>(),
+    );
+    assert!(
+        slow_final >= 4,
+        "throttled disk never grew the window past {slow_final}"
+    );
+    assert!(
+        fast.stats.io_wait_fraction() < slow.stats.io_wait_fraction(),
+        "warmed cache should wait less than throttled disk"
+    );
+    // the memory estimate must account the high-water window
+    assert!(slow_engine.governor().high_water() >= slow.stats.max_prefetch_depth());
+
+    // adaptation may only change *when bytes move*, never the results
+    assert_matches(&slow.values, &want, "slow/adaptive");
+    assert_matches(&fast.values, &want, "fast/adaptive");
+    assert_eq!(
+        slow.values
+            .iter()
+            .map(|v| v.to_bits())
+            .collect::<Vec<_>>(),
+        fast.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "adaptive runs under different I/O speeds must stay bit-identical"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir.root);
+}

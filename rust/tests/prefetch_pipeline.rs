@@ -4,11 +4,13 @@
 //!    full configuration matrix (selective on/off × threads {1,2,4} ×
 //!    prefetch_depth {0,2,4}) and every out-of-core baseline agree with the
 //!    single-threaded in-memory reference for PageRank / SSSP / WCC.
-//! 2. Regression: same graph, same seed — every (threads, prefetch_depth)
-//!    combination must produce **bit-identical** vertex arrays and identical
-//!    per-iteration `shards_processed` / `shards_skipped` accounting.  This
-//!    is the acceptance bar for the pipelined shard prefetcher: overlapping
-//!    I/O with compute must be invisible in results, visible only in time.
+//! 2. Regression: same graph, same seed — every (threads, prefetch_depth,
+//!    adaptive) combination must produce **bit-identical** vertex arrays and
+//!    identical per-iteration `shards_processed` / `shards_skipped`
+//!    accounting.  This is the acceptance bar for the pipelined shard
+//!    prefetcher *and* the adaptive I/O governor: overlapping I/O with
+//!    compute — and re-sizing/re-ordering that overlap from run-time
+//!    feedback — must be invisible in results, visible only in time.
 
 use graphmp::apps::{PageRank, ProgramContext, Sssp, VertexProgram, Wcc};
 use graphmp::baselines::{self, OocEngine};
@@ -22,7 +24,12 @@ const THREADS: [usize; 3] = [1, 2, 4];
 const DEPTHS: [usize; 3] = [0, 2, 4];
 
 /// Single-threaded in-memory reference (Algorithm 2 swept synchronously).
-fn reference(app: &dyn VertexProgram, edges: &[(u32, u32)], n: usize, max_iters: usize) -> Vec<f32> {
+fn reference(
+    app: &dyn VertexProgram,
+    edges: &[(u32, u32)],
+    n: usize,
+    max_iters: usize,
+) -> Vec<f32> {
     let ctx = ProgramContext { num_vertices: n as u64 };
     let mut in_adj: Vec<Vec<u32>> = vec![Vec::new(); n];
     let mut out_deg = vec![0u32; n];
@@ -71,6 +78,18 @@ fn run_vsw(
     threads: usize,
     depth: usize,
 ) -> RunResult {
+    run_vsw_gov(dir, app, max_iters, selective, threads, depth, false)
+}
+
+fn run_vsw_gov(
+    dir: &DatasetDir,
+    app: &dyn VertexProgram,
+    max_iters: usize,
+    selective: bool,
+    threads: usize,
+    depth: usize,
+    adaptive: bool,
+) -> RunResult {
     let engine = VswEngine::open(
         dir.clone(),
         EngineConfig {
@@ -80,6 +99,7 @@ fn run_vsw(
             // high threshold so SSSP/WCC tails actually exercise skipping
             selective_threshold: 0.05,
             prefetch_depth: depth,
+            adaptive,
             ..Default::default()
         },
     )
@@ -172,8 +192,11 @@ fn vsw_config_matrix_and_baselines_match_reference() {
 
 #[test]
 fn results_and_accounting_are_bit_identical_across_threads_and_depths() {
-    // fixed graph, fixed seed: the determinism regression the prefetcher
-    // must never break
+    // fixed graph, fixed seed: the determinism regression the prefetcher —
+    // and, since PR 2, the adaptive I/O governor — must never break.  The
+    // governor re-sizes the window and re-orders shard issue from run-time
+    // measurements, so this is exactly where nondeterminism would leak in:
+    // every `--adaptive` run must be bit-identical to every fixed one.
     let n = 1usize << 9;
     let edges = generator::rmat(9, 4000, generator::RmatParams::default(), 2024);
     let dir = build_dataset("det", &edges, n, 300);
@@ -182,27 +205,37 @@ fn results_and_accounting_are_bit_identical_across_threads_and_depths() {
         let mut golden: Option<(Vec<u32>, Vec<(usize, usize)>)> = None;
         for &threads in &THREADS {
             for &depth in &DEPTHS {
-                let got = run_vsw(&dir, app.as_ref(), engine_iters, true, threads, depth);
-                let bits: Vec<u32> = got.values.iter().map(|v| v.to_bits()).collect();
-                let accounting: Vec<(usize, usize)> = got
-                    .stats
-                    .iters
-                    .iter()
-                    .map(|i| (i.shards_processed, i.shards_skipped))
-                    .collect();
-                match &golden {
-                    None => golden = Some((bits, accounting)),
-                    Some((gb, ga)) => {
-                        assert_eq!(
-                            gb, &bits,
-                            "{}: t={threads} d={depth} changed value bits",
-                            app.name()
-                        );
-                        assert_eq!(
-                            ga, &accounting,
-                            "{}: t={threads} d={depth} changed shard accounting",
-                            app.name()
-                        );
+                for adaptive in [false, true] {
+                    let got = run_vsw_gov(
+                        &dir,
+                        app.as_ref(),
+                        engine_iters,
+                        true,
+                        threads,
+                        depth,
+                        adaptive,
+                    );
+                    let bits: Vec<u32> = got.values.iter().map(|v| v.to_bits()).collect();
+                    let accounting: Vec<(usize, usize)> = got
+                        .stats
+                        .iters
+                        .iter()
+                        .map(|i| (i.shards_processed, i.shards_skipped))
+                        .collect();
+                    match &golden {
+                        None => golden = Some((bits, accounting)),
+                        Some((gb, ga)) => {
+                            assert_eq!(
+                                gb, &bits,
+                                "{}: t={threads} d={depth} adaptive={adaptive} changed value bits",
+                                app.name()
+                            );
+                            assert_eq!(
+                                ga, &accounting,
+                                "{}: t={threads} d={depth} adaptive={adaptive} changed shard accounting",
+                                app.name()
+                            );
+                        }
                     }
                 }
             }
@@ -223,8 +256,8 @@ fn frontier_skipping_is_deterministic_under_prefetch() {
     let mut golden: Option<Vec<(usize, usize)>> = None;
     let mut golden_values: Option<Vec<u32>> = None;
     for &threads in &THREADS {
-        for &depth in &DEPTHS {
-            let got = run_vsw(&dir, &app, 0, true, threads, depth);
+        for &(depth, adaptive) in &[(0usize, false), (2, false), (4, false), (2, true)] {
+            let got = run_vsw_gov(&dir, &app, 0, true, threads, depth, adaptive);
             let accounting: Vec<(usize, usize)> = got
                 .stats
                 .iters
