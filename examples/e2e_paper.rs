@@ -56,9 +56,9 @@ fn main() -> anyhow::Result<()> {
     );
 
     let app_list: Vec<Box<dyn VertexProgram>> = vec![
-        apps::by_name("pagerank")?,
-        apps::by_name("sssp")?,
-        apps::by_name("wcc")?,
+        apps::by_name("pagerank")?.into_f32()?,
+        apps::by_name("sssp")?.into_f32()?,
+        apps::by_name("wcc")?.into_f32()?,
     ];
 
     for app in &app_list {

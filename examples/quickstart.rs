@@ -60,7 +60,8 @@ fn main() -> anyhow::Result<()> {
         }
     };
 
-    let engine = VswEngine::open(dir, EngineConfig { max_iters: 10, backend, ..Default::default() })?;
+    let cfg = EngineConfig { max_iters: 10, backend, ..Default::default() };
+    let engine = VswEngine::open(dir, cfg)?;
     let result = engine.run(&PageRank::default())?;
 
     // 4. report

@@ -1,0 +1,295 @@
+#!/usr/bin/env python3
+"""Golden-fixture generator for rust/tests/golden_fixtures.rs.
+
+Reproduces the Rust in-memory reference (Algorithm 2 swept synchronously,
+`update_weighted` semantics) in IEEE-754 binary32/binary64 arithmetic via
+numpy, over the fixture graph defined below — the same closed-form graph
+the Rust test rebuilds.  Running this script must reproduce the committed
+files under rust/tests/fixtures/ bit-for-bit; the Rust test fails loudly if
+the engine, the Rust reference, or these fixtures ever disagree.
+
+Fixture format: one value per line, 48 lines per app.
+  * f32 lanes: 8 hex digits of the IEEE bit pattern (to_bits)
+  * f64 lanes: 16 hex digits
+  * u32/u64 lanes: decimal
+
+Usage: python3 python/tools/gen_fixtures.py [--check]
+  --check: verify the committed fixtures instead of rewriting them.
+"""
+
+import os
+import struct
+import sys
+
+import numpy as np
+
+N = 48
+M = 160
+MAX_ITERS = 1000
+
+F32 = np.float32
+F64 = np.float64
+INF32 = np.float32(np.inf)
+INF64 = np.float64(np.inf)
+
+
+def fixture_graph():
+    """(src, dst, weight) triples — must match golden_fixtures.rs.
+
+    Two affine edge families: the second breaks the one-successor
+    degeneracy of the first so degrees (and PageRank) are non-uniform.
+    """
+    edges = []
+    weights = []
+    for i in range(M):
+        s = (7 * i) % N
+        d = (13 * i + 5) % N
+        w = np.float32((i % 7) + 1) * np.float32(0.25)
+        edges.append((s, d))
+        weights.append(np.float32(w))
+    for i in range(M // 2):
+        s = (5 * i + 11) % N
+        d = (11 * i + 2) % N
+        w = np.float32((i % 5) + 1) * np.float32(0.5)
+        edges.append((s, d))
+        weights.append(np.float32(w))
+    return edges, weights
+
+
+def adjacency(edges, weights):
+    in_adj = [[] for _ in range(N)]
+    in_w = [[] for _ in range(N)]
+    out_deg = [0] * N
+    for (s, d), w in zip(edges, weights):
+        in_adj[d].append(s)
+        in_w[d].append(w)
+        out_deg[s] += 1
+    return in_adj, in_w, out_deg
+
+
+def hash64(x):
+    mask = (1 << 64) - 1
+    z = (x + 0x9E3779B97F4A7C15) & mask
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & mask
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & mask
+    return (z ^ (z >> 31)) & mask
+
+
+def hash64_seeded(x, seed):
+    mask = (1 << 64) - 1
+    return hash64(x ^ ((seed * 0xA24BAED4963EE407) & mask))
+
+
+# ---- per-app semantics (mirror rust/src/apps/*.rs exactly) -----------------
+
+class App:
+    name = None
+    lane = None          # "f32" | "f64" | "u32" | "u64"
+    reduce = None        # "sum" | "min" | "max"
+    fixed_iters = None   # None = run to convergence
+
+    def identity(self):
+        if self.reduce == "sum":
+            return {"f32": F32(0.0), "f64": F64(0.0)}.get(self.lane, 0)
+        if self.reduce == "min":
+            return {"f32": INF32, "f64": INF64,
+                    "u32": (1 << 32) - 1, "u64": (1 << 64) - 1}[self.lane]
+        return {"f32": -INF32, "f64": -INF64, "u32": 0, "u64": 0}[self.lane]
+
+    def combine(self, a, b):
+        if self.reduce == "sum":
+            return a + b
+        if self.reduce == "min":
+            return min(a, b)
+        return max(a, b)
+
+    def changed(self, old, new):
+        if self.lane in ("f32", "f64"):
+            if np.isinf(old) and np.isinf(new):
+                return False
+            return new != old
+        return new != old
+
+
+class PageRank(App):
+    name, lane, reduce, fixed_iters = "pagerank", "f32", "sum", 10
+    damping = F32(0.85)
+
+    def init(self, v):
+        return F32(1.0) / F32(N)
+
+    def gather(self, src, deg, w):
+        if deg == 0:
+            return F32(0.0)
+        return F32(src / F32(deg))
+
+    def apply(self, reduced, old):
+        return F32((F32(1.0) - self.damping) / F32(N) + self.damping * F32(reduced))
+
+
+class Sssp(App):
+    name, lane, reduce, fixed_iters = "sssp", "f32", "min", None
+    source = 0
+
+    def init(self, v):
+        return F32(0.0) if v == self.source else INF32
+
+    def gather(self, src, deg, w):
+        return F32(src + F32(1.0))
+
+    def apply(self, reduced, old):
+        return min(reduced, old)
+
+
+class Bfs(Sssp):
+    name = "bfs"
+
+
+class Wcc(App):
+    name, lane, reduce, fixed_iters = "wcc", "f32", "min", None
+
+    def init(self, v):
+        return F32(v)
+
+    def gather(self, src, deg, w):
+        return src
+
+    def apply(self, reduced, old):
+        return min(reduced, old)
+
+
+class SpMv(App):
+    name, lane, reduce, fixed_iters = "spmv", "f32", "sum", 1
+    seed = 1
+
+    def init(self, v):
+        return F32(np.float32(hash64_seeded(v, self.seed) >> 40) / F32(1 << 24))
+
+    def gather(self, src, deg, w):
+        return src
+
+    def apply(self, reduced, old):
+        return reduced
+
+
+class SpMv64(App):
+    name, lane, reduce, fixed_iters = "spmv64", "f64", "sum", 1
+    seed = 1
+
+    def init(self, v):
+        return F64(np.float64(hash64_seeded(v, self.seed) >> 40) / F64(1 << 24))
+
+    def gather(self, src, deg, w):
+        return src
+
+    def apply(self, reduced, old):
+        return reduced
+
+
+class WeightedSssp(App):
+    name, lane, reduce, fixed_iters = "wsssp", "f32", "min", None
+    source = 0
+
+    def init(self, v):
+        return F32(0.0) if v == self.source else INF32
+
+    def gather(self, src, deg, w):
+        return F32(src + w)
+
+    def apply(self, reduced, old):
+        return min(reduced, old)
+
+
+class LabelProp(App):
+    name, lane, reduce, fixed_iters = "labelprop", "u64", "min", None
+
+    def init(self, v):
+        return v
+
+    def gather(self, src, deg, w):
+        return src
+
+    def apply(self, reduced, old):
+        return min(reduced, old)
+
+
+class MaxDeg(App):
+    name, lane, reduce, fixed_iters = "maxdeg", "u32", "max", None
+
+    def init(self, v):
+        return 0
+
+    def gather(self, src, deg, w):
+        return max(src, deg)
+
+    def apply(self, reduced, old):
+        return max(reduced, old)
+
+
+APPS = [PageRank(), Sssp(), Wcc(), Bfs(), SpMv(), SpMv64(),
+        WeightedSssp(), LabelProp(), MaxDeg()]
+
+
+def run_reference(app):
+    edges, weights = fixture_graph()
+    in_adj, in_w, out_deg = adjacency(edges, weights)
+    vals = [app.init(v) for v in range(N)]
+    iters = app.fixed_iters if app.fixed_iters is not None else MAX_ITERS
+    for _ in range(iters):
+        nxt = []
+        for v in range(N):
+            acc = app.identity()
+            for u, w in zip(in_adj[v], in_w[v]):
+                acc = app.combine(acc, app.gather(vals[u], out_deg[u], w))
+            nxt.append(app.apply(acc, vals[v]))
+        changed = any(app.changed(o, n) for o, n in zip(vals, nxt))
+        vals = nxt
+        if not changed:
+            break
+    if app.lane == "f32":
+        assert all(isinstance(x, np.float32) for x in vals), app.name
+    if app.lane == "f64":
+        assert all(isinstance(x, np.float64) for x in vals), app.name
+    return vals
+
+
+def render(app, vals):
+    lines = []
+    for x in vals:
+        if app.lane == "f32":
+            bits = struct.unpack("<I", struct.pack("<f", float(x)))[0]
+            lines.append(f"{bits:08x}")
+        elif app.lane == "f64":
+            bits = struct.unpack("<Q", struct.pack("<d", float(x)))[0]
+            lines.append(f"{bits:016x}")
+        else:
+            lines.append(str(int(x)))
+    return "\n".join(lines) + "\n"
+
+
+def main():
+    check = "--check" in sys.argv
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "fixtures")
+    root = os.path.normpath(root)
+    os.makedirs(root, exist_ok=True)
+    status = 0
+    for app in APPS:
+        body = render(app, run_reference(app))
+        path = os.path.join(root, f"{app.name}.txt")
+        if check:
+            with open(path) as f:
+                committed = f.read()
+            if committed != body:
+                print(f"MISMATCH: {path}")
+                status = 1
+            else:
+                print(f"ok: {path}")
+        else:
+            with open(path, "w") as f:
+                f.write(body)
+            print(f"wrote {path}")
+    sys.exit(status)
+
+
+if __name__ == "__main__":
+    main()

@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
     let dir = ensure_dataset(dataset)?;
 
     let apps_list: Vec<Box<dyn VertexProgram>> =
-        vec![apps::by_name("sssp")?, apps::by_name("wcc")?];
+        vec![apps::by_name("sssp")?.into_f32()?, apps::by_name("wcc")?.into_f32()?];
     let thresholds = [0.0, 0.0001, 0.001, 0.01, 0.1, 1.0];
 
     let mut table = Table::new(

@@ -55,9 +55,9 @@ fn main() -> anyhow::Result<()> {
     let dir = ensure_dataset(dataset)?;
 
     let apps_list: Vec<Box<dyn VertexProgram>> = vec![
-        apps::by_name("pagerank")?,
-        apps::by_name("sssp")?,
-        apps::by_name("wcc")?,
+        apps::by_name("pagerank")?.into_f32()?,
+        apps::by_name("sssp")?.into_f32()?,
+        apps::by_name("wcc")?.into_f32()?,
     ];
     let mut table = Table::new(
         &format!("Fig5 {} ({iters} iters)", dataset.name),

@@ -40,9 +40,9 @@ fn main() -> anyhow::Result<()> {
 
     let pr_iters = if quick { 5 } else { 10 };
     let apps_list: Vec<(Box<dyn VertexProgram>, usize)> = vec![
-        (apps::by_name("pagerank")?, pr_iters),
-        (apps::by_name("sssp")?, 0),
-        (apps::by_name("wcc")?, 0),
+        (apps::by_name("pagerank")?.into_f32()?, pr_iters),
+        (apps::by_name("sssp")?.into_f32()?, 0),
+        (apps::by_name("wcc")?.into_f32()?, 0),
     ];
     let mut table = Table::new(
         &format!("Fig7 processing time (loading excluded), {}", dataset.name),

@@ -68,7 +68,15 @@ fn main() -> anyhow::Result<()> {
         let io = run.iter_io[1]; // steady state
         // PSW stores value+structure per edge in both directions: C+D with
         // D≈8 (edge record) — the paper's (C+D)=12 B/edge
-        let p = ModelParams { v, e, p: run.iter_walls.len().max(8) as u64, c: 4, d: 8, n_cores: 1, theta: 1.0 };
+        let p = ModelParams {
+            v,
+            e,
+            p: run.iter_walls.len().max(8) as u64,
+            c: 4,
+            d: 8,
+            n_cores: 1,
+            theta: 1.0,
+        };
         add_row("PSW (GraphChi)", Model::Psw, p, io.bytes_read, io.bytes_written);
     }
 

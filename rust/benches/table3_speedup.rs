@@ -26,9 +26,9 @@ fn main() -> anyhow::Result<()> {
     );
 
     let apps_list: Vec<Box<dyn VertexProgram>> = vec![
-        apps::by_name("pagerank")?,
-        apps::by_name("sssp")?,
-        apps::by_name("wcc")?,
+        apps::by_name("pagerank")?.into_f32()?,
+        apps::by_name("sssp")?.into_f32()?,
+        apps::by_name("wcc")?.into_f32()?,
     ];
     for app in &apps_list {
         let rows = exec_time_figure(app.as_ref(), iters)?;

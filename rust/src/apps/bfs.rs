@@ -4,7 +4,7 @@
 //! ablations can use a program whose frontier is strictly level-synchronous.
 
 use super::{KernelKind, ProgramContext, Reduce, VertexProgram};
-use crate::graph::VertexId;
+use crate::graph::{VertexId, Weight};
 
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Bfs {
@@ -29,7 +29,7 @@ impl VertexProgram for Bfs {
     }
 
     #[inline]
-    fn gather(&self, src_val: f32, _src_out_deg: u32) -> f32 {
+    fn gather(&self, src_val: f32, _src_out_deg: u32, _weight: Weight) -> f32 {
         src_val + 1.0
     }
 
@@ -52,6 +52,10 @@ impl VertexProgram for Bfs {
 
     fn default_max_iters(&self) -> usize {
         10_000
+    }
+
+    fn as_f32_program(&self) -> Option<&dyn VertexProgram<f32>> {
+        Some(self)
     }
 }
 

@@ -1,0 +1,95 @@
+//! MaxDeg — maximum reachable out-degree, on the `u32` lane with the `Max`
+//! reduction: a degree-centrality / k-core-style integer workload.
+//!
+//! ```text
+//! g   = max_{u ∈ Γin(v)} max(src[u], out_deg(u))
+//! new = max(g, old)
+//! ```
+//!
+//! At the fixpoint, `value[v]` is the largest out-degree among all vertices
+//! with a directed path to `v` (0 for vertices with no in-path — including
+//! isolated ones).  It is the `Max`-monoid witness of the generic API: the
+//! reduction is order-insensitive and integer-exact, so every engine must
+//! agree bit-for-bit, and it exercises the `src_out_deg` gather argument
+//! that PageRank alone used before.
+
+use super::{KernelKind, ProgramContext, Reduce, VertexProgram};
+use crate::graph::{VertexId, Weight};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MaxDeg;
+
+impl VertexProgram<u32> for MaxDeg {
+    fn name(&self) -> &'static str {
+        "maxdeg"
+    }
+
+    fn init(&self, _v: VertexId, _ctx: &ProgramContext) -> u32 {
+        0
+    }
+
+    fn initially_active(&self, _v: VertexId, _ctx: &ProgramContext) -> bool {
+        true
+    }
+
+    #[inline]
+    fn gather(&self, src_val: u32, src_out_deg: u32, _weight: Weight) -> u32 {
+        src_val.max(src_out_deg)
+    }
+
+    fn reduce(&self) -> Reduce {
+        Reduce::Max
+    }
+
+    #[inline]
+    fn apply(&self, reduced: u32, old: u32, _ctx: &ProgramContext) -> u32 {
+        reduced.max(old)
+    }
+
+    fn kernel(&self) -> KernelKind {
+        KernelKind::None
+    }
+
+    fn default_max_iters(&self) -> usize {
+        10_000
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn propagates_largest_upstream_degree() {
+        let md = MaxDeg;
+        let ctx = ProgramContext { num_vertices: 4 };
+        // 0 -> 1 -> 2 -> 3 with out_deg = [3, 1, 1, 0] (0 has extra edges)
+        let adj: Vec<Vec<u32>> = vec![vec![], vec![0], vec![1], vec![2]];
+        let out_deg = vec![3u32, 1, 1, 0];
+        let mut vals: Vec<u32> = (0..4).map(|v| md.init(v, &ctx)).collect();
+        for _ in 0..4 {
+            vals = (0..4)
+                .map(|v| md.update(v, &adj[v as usize], &vals, &out_deg, &ctx))
+                .collect();
+        }
+        // the hub's degree 3 reaches every downstream vertex
+        assert_eq!(vals, vec![0, 3, 3, 3]);
+    }
+
+    #[test]
+    fn isolated_vertices_stay_zero() {
+        let md = MaxDeg;
+        let ctx = ProgramContext { num_vertices: 2 };
+        let vals = vec![0u32, 0];
+        assert_eq!(md.update(1, &[], &vals, &[0, 0], &ctx), 0);
+    }
+
+    #[test]
+    fn fixpoint_is_stable() {
+        let md = MaxDeg;
+        let ctx = ProgramContext { num_vertices: 2 };
+        // once old >= every offered contribution, the value never moves
+        let vals = vec![5u32, 7];
+        assert_eq!(md.update(1, &[0], &vals, &[2, 0], &ctx), 7);
+    }
+}

@@ -4,51 +4,79 @@
 //! function.  Every application in the paper (and all extras here) factors
 //! into three pieces the engine can exploit:
 //!
-//! * **gather** — per-in-edge contribution from the source's current value;
-//! * **reduce** — a commutative monoid (sum or min) over contributions;
+//! * **gather** — per-in-edge contribution from the source's current value
+//!   and the edge's weight (`val(u,v)`, 1 on unweighted graphs);
+//! * **reduce** — a commutative monoid (sum, min or max) over contributions;
 //! * **apply**  — combine the reduction with the vertex's old value.
 //!
 //! This factorization is exactly what lets the hot loop run as an AOT
 //! kernel: gather happens on the L3 side (it needs the CSR walk + degree
 //! array), reduce+apply are the L1/L2 artifact (`pr_shard`,
 //! `relaxmin_shard`, `segsum_shard`).
+//!
+//! ## Typed vertex state
+//!
+//! `VertexProgram<V>` is generic over the vertex-value lane
+//! ([`VertexValue`]: `u32`/`u64`/`f32`/`f64`); the default parameter keeps
+//! `dyn VertexProgram` meaning the classic `f32` programs.  [`AnyProgram`]
+//! is the lane-erased handle the CLI and drivers dispatch on, and
+//! [`REGISTRY`] is the single table every app name, alias and error message
+//! derives from.
 
 pub mod bfs;
+pub mod labelprop;
+pub mod maxdeg;
 pub mod pagerank;
 pub mod spmv;
 pub mod sssp;
 pub mod wcc;
+pub mod wsssp;
 
 pub use bfs::Bfs;
+pub use labelprop::LabelProp;
+pub use maxdeg::MaxDeg;
 pub use pagerank::PageRank;
-pub use spmv::SpMv;
+pub use spmv::{SpMv, SpMv64};
 pub use sssp::Sssp;
 pub use wcc::Wcc;
+pub use wsssp::WeightedSssp;
 
-use crate::graph::VertexId;
+pub use crate::graph::value::{Lane, VertexValue};
+use crate::graph::{VertexId, Weight};
 
 /// The reduction monoid of a program.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Reduce {
     Sum,
     Min,
+    Max,
 }
 
 impl Reduce {
     #[inline]
-    pub fn identity(&self) -> f32 {
+    pub fn identity<V: VertexValue>(&self) -> V {
         match self {
-            Reduce::Sum => 0.0,
-            Reduce::Min => f32::INFINITY,
+            Reduce::Sum => V::vzero(),
+            Reduce::Min => V::vmax_value(),
+            Reduce::Max => V::vmin_value(),
         }
     }
 
     #[inline]
-    pub fn combine(&self, a: f32, b: f32) -> f32 {
+    pub fn combine<V: VertexValue>(&self, a: V, b: V) -> V {
         match self {
-            Reduce::Sum => a + b,
-            Reduce::Min => a.min(b),
+            Reduce::Sum => a.vadd(b),
+            Reduce::Min => a.vmin(b),
+            Reduce::Max => a.vmax(b),
         }
+    }
+
+    /// Is `apply(identity, old) == old` preserved under re-offered inputs?
+    /// Min/Max programs fold monotonically into `old`, so engines may skip
+    /// quiet sources (GridGraph row skipping); Sum programs recompute the
+    /// full in-edge sum and must never skip.
+    pub fn is_monotone(&self) -> bool {
+        matches!(self, Reduce::Min | Reduce::Max)
     }
 }
 
@@ -61,6 +89,8 @@ pub enum KernelKind {
     RelaxMin,
     /// `segsum_shard`: new = Σ contrib.
     RawSum,
+    /// No AOT artifact; the xla backend falls back to the native loop.
+    None,
 }
 
 /// Shape of the gather function, used by the native backend to select a
@@ -72,7 +102,9 @@ pub enum GatherKind {
     RankOverOutDeg,
     /// `src_val + 1` (SSSP/BFS on unit weights).
     PlusOne,
-    /// `src_val` (WCC, SpMV).
+    /// `src_val + val(u,v)` (weighted SSSP).
+    PlusWeight,
+    /// `src_val` (WCC, SpMV, label propagation).
     Identity,
     /// Anything else: the engine falls back to calling `gather` per edge.
     Custom,
@@ -84,23 +116,26 @@ pub struct ProgramContext {
     pub num_vertices: u64,
 }
 
-/// A vertex-centric program (see module docs for the factorization).
-pub trait VertexProgram: Sync {
+/// A vertex-centric program over value lane `V` (see module docs for the
+/// factorization).  The default `V = f32` keeps `dyn VertexProgram`
+/// meaning the paper's float programs.
+pub trait VertexProgram<V: VertexValue = f32>: Sync {
     fn name(&self) -> &'static str;
 
     /// Initial value of vertex `v`.
-    fn init(&self, v: VertexId, ctx: &ProgramContext) -> f32;
+    fn init(&self, v: VertexId, ctx: &ProgramContext) -> V;
 
     /// Is `v` active before the first iteration?
     fn initially_active(&self, v: VertexId, ctx: &ProgramContext) -> bool;
 
-    /// Contribution pulled along an in-edge from source `u`.
-    fn gather(&self, src_val: f32, src_out_deg: u32) -> f32;
+    /// Contribution pulled along an in-edge from source `u` with edge
+    /// weight `val(u,v)` (1 on unweighted graphs).
+    fn gather(&self, src_val: V, src_out_deg: u32, weight: Weight) -> V;
 
     fn reduce(&self) -> Reduce;
 
     /// Combine reduction result with the vertex's previous value.
-    fn apply(&self, reduced: f32, old: f32, ctx: &ProgramContext) -> f32;
+    fn apply(&self, reduced: V, old: V, ctx: &ProgramContext) -> V;
 
     /// AOT artifact implementing reduce+apply.
     fn kernel(&self) -> KernelKind;
@@ -119,35 +154,194 @@ pub trait VertexProgram: Sync {
         100
     }
 
-    /// Reference `Update` semantics (Algorithm 2): single-vertex update
-    /// from an in-neighbor slice.  Used by tests and the baselines.
+    /// The `f32`-lane view of this program, if it is one — the xla backend
+    /// only has artifacts for the float path and uses this to dispatch;
+    /// other lanes fall back to the native loop.  `f32` programs should
+    /// override this to `Some(self)`.
+    fn as_f32_program(&self) -> Option<&dyn VertexProgram<f32>> {
+        None
+    }
+
+    /// Reference `Update` semantics (Algorithm 2) on unit weights: used by
+    /// tests and the baselines for unweighted graphs.
     fn update(
         &self,
         v: VertexId,
         in_neighbors: &[VertexId],
-        src: &[f32],
+        src: &[V],
         out_deg: &[u32],
         ctx: &ProgramContext,
-    ) -> f32 {
+    ) -> V {
+        self.update_weighted(v, in_neighbors, &[], src, out_deg, ctx)
+    }
+
+    /// Reference `Update` semantics with explicit per-in-edge weights
+    /// (empty ⇒ unit weights), parallel to `in_neighbors`.
+    fn update_weighted(
+        &self,
+        v: VertexId,
+        in_neighbors: &[VertexId],
+        weights: &[Weight],
+        src: &[V],
+        out_deg: &[u32],
+        ctx: &ProgramContext,
+    ) -> V {
         let r = self.reduce();
         let mut acc = r.identity();
-        for &u in in_neighbors {
-            acc = r.combine(acc, self.gather(src[u as usize], out_deg[u as usize]));
+        for (j, &u) in in_neighbors.iter().enumerate() {
+            let w = if weights.is_empty() { 1.0 } else { weights[j] };
+            acc = r.combine(acc, self.gather(src[u as usize], out_deg[u as usize], w));
         }
         self.apply(acc, src[v as usize], ctx)
     }
 }
 
-/// Look up a program by CLI name.
-pub fn by_name(name: &str) -> anyhow::Result<Box<dyn VertexProgram>> {
-    Ok(match name.to_ascii_lowercase().as_str() {
-        "pagerank" | "pr" => Box::new(PageRank::default()),
-        "sssp" => Box::new(Sssp::default()),
-        "wcc" => Box::new(Wcc),
-        "bfs" => Box::new(Bfs::default()),
-        "spmv" => Box::new(SpMv::default()),
-        other => anyhow::bail!("unknown app {other:?} (pagerank|sssp|wcc|bfs|spmv)"),
-    })
+/// A lane-erased vertex program — what [`by_name`] hands the CLI and
+/// drivers.  Match on it (or use [`crate::engine::VswEngine::run_any`]) to
+/// reach the typed engine paths.
+pub enum AnyProgram {
+    F32(Box<dyn VertexProgram<f32>>),
+    F64(Box<dyn VertexProgram<f64>>),
+    U32(Box<dyn VertexProgram<u32>>),
+    U64(Box<dyn VertexProgram<u64>>),
+}
+
+impl AnyProgram {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AnyProgram::F32(p) => p.name(),
+            AnyProgram::F64(p) => p.name(),
+            AnyProgram::U32(p) => p.name(),
+            AnyProgram::U64(p) => p.name(),
+        }
+    }
+
+    pub fn lane(&self) -> Lane {
+        match self {
+            AnyProgram::F32(_) => Lane::F32,
+            AnyProgram::F64(_) => Lane::F64,
+            AnyProgram::U32(_) => Lane::U32,
+            AnyProgram::U64(_) => Lane::U64,
+        }
+    }
+
+    pub fn default_max_iters(&self) -> usize {
+        match self {
+            AnyProgram::F32(p) => p.default_max_iters(),
+            AnyProgram::F64(p) => p.default_max_iters(),
+            AnyProgram::U32(p) => p.default_max_iters(),
+            AnyProgram::U64(p) => p.default_max_iters(),
+        }
+    }
+
+    /// Unwrap the classic float lane (legacy drivers); errors for typed
+    /// programs.
+    pub fn into_f32(self) -> anyhow::Result<Box<dyn VertexProgram<f32>>> {
+        match self {
+            AnyProgram::F32(p) => Ok(p),
+            other => anyhow::bail!(
+                "app {:?} runs on the {} lane, not f32",
+                other.name(),
+                other.lane().name()
+            ),
+        }
+    }
+}
+
+/// One registry row: the single source of truth for an app's CLI name,
+/// aliases, value lane and description.  [`by_name`]'s error message and
+/// every driver's app list derive from this table — never hand-write the
+/// name list anywhere else.
+pub struct AppEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub lane: Lane,
+    pub about: &'static str,
+    pub make: fn() -> AnyProgram,
+}
+
+/// Every registered vertex program.
+pub static REGISTRY: &[AppEntry] = &[
+    AppEntry {
+        name: "pagerank",
+        aliases: &["pr"],
+        lane: Lane::F32,
+        about: "PageRank, damping 0.85 (paper Fig 8)",
+        make: || AnyProgram::F32(Box::new(PageRank::default())),
+    },
+    AppEntry {
+        name: "sssp",
+        aliases: &[],
+        lane: Lane::F32,
+        about: "single-source shortest paths, unit weights (paper Fig 9)",
+        make: || AnyProgram::F32(Box::new(Sssp::default())),
+    },
+    AppEntry {
+        name: "wcc",
+        aliases: &[],
+        lane: Lane::F32,
+        about: "weakly connected components via min-label (paper Fig 10)",
+        make: || AnyProgram::F32(Box::new(Wcc)),
+    },
+    AppEntry {
+        name: "bfs",
+        aliases: &[],
+        lane: Lane::F32,
+        about: "BFS levels from a root",
+        make: || AnyProgram::F32(Box::new(Bfs::default())),
+    },
+    AppEntry {
+        name: "spmv",
+        aliases: &[],
+        lane: Lane::F32,
+        about: "one sparse matrix-vector product",
+        make: || AnyProgram::F32(Box::new(SpMv::default())),
+    },
+    AppEntry {
+        name: "spmv64",
+        aliases: &[],
+        lane: Lane::F64,
+        about: "SpMV on the f64 lane",
+        make: || AnyProgram::F64(Box::new(SpMv64::default())),
+    },
+    AppEntry {
+        name: "wsssp",
+        aliases: &["weighted-sssp"],
+        lane: Lane::F32,
+        about: "weighted SSSP over the per-edge weight lane",
+        make: || AnyProgram::F32(Box::new(WeightedSssp::default())),
+    },
+    AppEntry {
+        name: "labelprop",
+        aliases: &["lp"],
+        lane: Lane::U64,
+        about: "min-label propagation on u64 labels",
+        make: || AnyProgram::U64(Box::new(LabelProp)),
+    },
+    AppEntry {
+        name: "maxdeg",
+        aliases: &["degcent"],
+        lane: Lane::U32,
+        about: "max reachable out-degree on u32 (degree-centrality style)",
+        make: || AnyProgram::U32(Box::new(MaxDeg)),
+    },
+];
+
+/// `"pagerank|sssp|..."` — derived from [`REGISTRY`], used by error
+/// messages and usage text so the list can never drift from the table.
+pub fn app_names() -> String {
+    REGISTRY.iter().map(|e| e.name).collect::<Vec<_>>().join("|")
+}
+
+/// Look up a program by CLI name or alias.
+pub fn by_name(name: &str) -> anyhow::Result<AnyProgram> {
+    let lower = name.to_ascii_lowercase();
+    for entry in REGISTRY {
+        if entry.name == lower || entry.aliases.contains(&lower.as_str()) {
+            return Ok((entry.make)());
+        }
+    }
+    anyhow::bail!("unknown app {name:?} ({})", app_names())
 }
 
 #[cfg(test)]
@@ -156,16 +350,42 @@ mod tests {
 
     #[test]
     fn reduce_monoids() {
-        assert_eq!(Reduce::Sum.combine(Reduce::Sum.identity(), 3.0), 3.0);
-        assert_eq!(Reduce::Min.combine(Reduce::Min.identity(), 3.0), 3.0);
-        assert_eq!(Reduce::Min.combine(2.0, 3.0), 2.0);
+        assert_eq!(Reduce::Sum.combine(Reduce::Sum.identity(), 3.0f32), 3.0);
+        assert_eq!(Reduce::Min.combine(Reduce::Min.identity(), 3.0f32), 3.0);
+        assert_eq!(Reduce::Min.combine(2.0f32, 3.0), 2.0);
+        assert_eq!(Reduce::Max.combine(Reduce::Max.identity(), 3u32), 3);
+        assert_eq!(Reduce::Max.combine(5u64, 3), 5);
+        assert!(Reduce::Min.is_monotone() && Reduce::Max.is_monotone());
+        assert!(!Reduce::Sum.is_monotone());
     }
 
     #[test]
-    fn by_name_resolves() {
-        for n in ["pagerank", "pr", "sssp", "wcc", "bfs", "spmv"] {
-            assert!(by_name(n).is_ok(), "{n}");
+    fn by_name_resolves_every_registry_row_and_alias() {
+        for entry in REGISTRY {
+            let p = by_name(entry.name).unwrap();
+            assert_eq!(p.name(), entry.name);
+            assert_eq!(p.lane(), entry.lane);
+            for alias in entry.aliases {
+                assert_eq!(by_name(alias).unwrap().name(), entry.name, "{alias}");
+            }
         }
         assert!(by_name("nope").is_err());
+    }
+
+    #[test]
+    fn unknown_app_error_lists_registry_names() {
+        // the satellite fix: the error message must come from the table,
+        // so every registered name appears in it
+        let msg = format!("{:#}", by_name("zzz").unwrap_err());
+        for entry in REGISTRY {
+            assert!(msg.contains(entry.name), "error message missing {}", entry.name);
+        }
+    }
+
+    #[test]
+    fn into_f32_rejects_typed_lanes() {
+        assert!(by_name("pagerank").unwrap().into_f32().is_ok());
+        assert!(by_name("labelprop").unwrap().into_f32().is_err());
+        assert!(by_name("maxdeg").unwrap().into_f32().is_err());
     }
 }

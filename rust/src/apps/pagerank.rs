@@ -9,7 +9,7 @@
 //! formulation (no dangling-mass redistribution).
 
 use super::{KernelKind, ProgramContext, Reduce, VertexProgram};
-use crate::graph::VertexId;
+use crate::graph::{VertexId, Weight};
 
 #[derive(Debug, Clone, Copy)]
 pub struct PageRank {
@@ -36,7 +36,7 @@ impl VertexProgram for PageRank {
     }
 
     #[inline]
-    fn gather(&self, src_val: f32, src_out_deg: u32) -> f32 {
+    fn gather(&self, src_val: f32, src_out_deg: u32, _weight: Weight) -> f32 {
         if src_out_deg == 0 {
             0.0
         } else {
@@ -64,6 +64,10 @@ impl VertexProgram for PageRank {
     fn default_max_iters(&self) -> usize {
         // the paper runs 10 iterations for Fig 8-10 and 200 for Fig 5
         10
+    }
+
+    fn as_f32_program(&self) -> Option<&dyn VertexProgram<f32>> {
+        Some(self)
     }
 }
 
@@ -95,7 +99,7 @@ mod tests {
     #[test]
     fn dangling_source_contributes_zero() {
         let pr = PageRank::default();
-        assert_eq!(pr.gather(0.7, 0), 0.0);
+        assert_eq!(pr.gather(0.7, 0, 1.0), 0.0);
     }
 
     #[test]

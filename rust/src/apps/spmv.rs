@@ -4,9 +4,13 @@
 //! paper's in-memory comparator) maps *all* programs to SpMV, so having the
 //! primitive as a first-class program lets the Fig 6/7 benches compare
 //! like-for-like.  `x` is the init vector (deterministic per `seed`).
+//!
+//! [`SpMv64`] is the same program on the `f64` lane — the double-precision
+//! witness of the typed `VertexProgram` API (no AOT artifact exists for
+//! f64, so the xla backend falls back to the native loop).
 
 use super::{KernelKind, ProgramContext, Reduce, VertexProgram};
-use crate::graph::VertexId;
+use crate::graph::{VertexId, Weight};
 use crate::util::hash::hash64_seeded;
 
 #[derive(Debug, Clone, Copy)]
@@ -35,7 +39,7 @@ impl VertexProgram for SpMv {
     }
 
     #[inline]
-    fn gather(&self, src_val: f32, _src_out_deg: u32) -> f32 {
+    fn gather(&self, src_val: f32, _src_out_deg: u32, _weight: Weight) -> f32 {
         src_val
     }
 
@@ -50,6 +54,62 @@ impl VertexProgram for SpMv {
 
     fn kernel(&self) -> KernelKind {
         KernelKind::RawSum
+    }
+
+    fn gather_kind(&self) -> super::GatherKind {
+        super::GatherKind::Identity
+    }
+
+    fn default_max_iters(&self) -> usize {
+        1
+    }
+
+    fn as_f32_program(&self) -> Option<&dyn VertexProgram<f32>> {
+        Some(self)
+    }
+}
+
+/// SpMV on the `f64` lane (same deterministic `x`, widened).
+#[derive(Debug, Clone, Copy)]
+pub struct SpMv64 {
+    pub seed: u64,
+}
+
+impl Default for SpMv64 {
+    fn default() -> Self {
+        Self { seed: 1 }
+    }
+}
+
+impl VertexProgram<f64> for SpMv64 {
+    fn name(&self) -> &'static str {
+        "spmv64"
+    }
+
+    fn init(&self, v: VertexId, _ctx: &ProgramContext) -> f64 {
+        (hash64_seeded(v as u64, self.seed) >> 40) as f64 / (1u64 << 24) as f64
+    }
+
+    fn initially_active(&self, _v: VertexId, _ctx: &ProgramContext) -> bool {
+        true
+    }
+
+    #[inline]
+    fn gather(&self, src_val: f64, _src_out_deg: u32, _weight: Weight) -> f64 {
+        src_val
+    }
+
+    fn reduce(&self) -> Reduce {
+        Reduce::Sum
+    }
+
+    #[inline]
+    fn apply(&self, reduced: f64, _old: f64, _ctx: &ProgramContext) -> f64 {
+        reduced
+    }
+
+    fn kernel(&self) -> KernelKind {
+        KernelKind::None
     }
 
     fn gather_kind(&self) -> super::GatherKind {
@@ -85,5 +145,19 @@ mod tests {
             assert_eq!(a, s.init(v, &ctx));
             assert!((0.0..1.0).contains(&a));
         }
+    }
+
+    #[test]
+    fn f64_twin_matches_f32_to_single_precision() {
+        let s32 = SpMv { seed: 5 };
+        let s64 = SpMv64 { seed: 5 };
+        let ctx = ProgramContext { num_vertices: 8 };
+        let x64: Vec<f64> = (0..8).map(|v| s64.init(v, &ctx)).collect();
+        let x32: Vec<f32> = (0..8).map(|v| s32.init(v, &ctx)).collect();
+        for (a, b) in x64.iter().zip(&x32) {
+            assert!((a - *b as f64).abs() < 1e-7, "{a} vs {b}");
+        }
+        let y = s64.update(2, &[0, 1], &x64, &[1, 1, 0, 0, 0, 0, 0, 0], &ctx);
+        assert!((y - (x64[0] + x64[1])).abs() < 1e-12);
     }
 }

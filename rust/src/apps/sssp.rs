@@ -7,7 +7,7 @@
 //! ```
 
 use super::{KernelKind, ProgramContext, Reduce, VertexProgram};
-use crate::graph::VertexId;
+use crate::graph::{VertexId, Weight};
 
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Sssp {
@@ -32,7 +32,7 @@ impl VertexProgram for Sssp {
     }
 
     #[inline]
-    fn gather(&self, src_val: f32, _src_out_deg: u32) -> f32 {
+    fn gather(&self, src_val: f32, _src_out_deg: u32, _weight: Weight) -> f32 {
         src_val + 1.0
     }
 
@@ -55,6 +55,10 @@ impl VertexProgram for Sssp {
 
     fn default_max_iters(&self) -> usize {
         10_000 // runs to convergence; diameter-bounded
+    }
+
+    fn as_f32_program(&self) -> Option<&dyn VertexProgram<f32>> {
+        Some(self)
     }
 }
 

@@ -1,0 +1,116 @@
+//! Weighted single-source shortest paths (Algorithm 2, `SSSP_Update` with
+//! real `val(u,v)` — the journal version and NXgraph both evaluate this):
+//!
+//! ```text
+//! d   = min_{u ∈ Γin(v)} src[u] + val(u,v)
+//! new = min(d, old)
+//! ```
+//!
+//! On an unweighted dataset every `val(u,v)` is 1 and the program is
+//! bit-identical to [`super::Sssp`].  Path sums are per-path sequential f32
+//! adds and the min-monoid is order-insensitive, so results are
+//! bit-identical across every engine regardless of gather order.
+
+use super::{KernelKind, ProgramContext, Reduce, VertexProgram};
+use crate::graph::{VertexId, Weight};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WeightedSssp {
+    pub source: VertexId,
+}
+
+impl VertexProgram for WeightedSssp {
+    fn name(&self) -> &'static str {
+        "wsssp"
+    }
+
+    fn init(&self, v: VertexId, _ctx: &ProgramContext) -> f32 {
+        if v == self.source {
+            0.0
+        } else {
+            f32::INFINITY
+        }
+    }
+
+    fn initially_active(&self, v: VertexId, _ctx: &ProgramContext) -> bool {
+        v == self.source
+    }
+
+    #[inline]
+    fn gather(&self, src_val: f32, _src_out_deg: u32, weight: Weight) -> f32 {
+        src_val + weight
+    }
+
+    fn reduce(&self) -> Reduce {
+        Reduce::Min
+    }
+
+    #[inline]
+    fn apply(&self, reduced: f32, old: f32, _ctx: &ProgramContext) -> f32 {
+        reduced.min(old)
+    }
+
+    fn kernel(&self) -> KernelKind {
+        KernelKind::RelaxMin
+    }
+
+    fn gather_kind(&self) -> super::GatherKind {
+        super::GatherKind::PlusWeight
+    }
+
+    fn default_max_iters(&self) -> usize {
+        10_000
+    }
+
+    fn as_f32_program(&self) -> Option<&dyn VertexProgram<f32>> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relaxes_along_weighted_path() {
+        let s = WeightedSssp { source: 0 };
+        let ctx = ProgramContext { num_vertices: 3 };
+        // path 0 -(0.5)-> 1 -(2.0)-> 2
+        let mut vals = vec![0.0f32, f32::INFINITY, f32::INFINITY];
+        let out_deg = vec![1u32, 1, 0];
+        for _ in 0..3 {
+            let next = vec![
+                s.update_weighted(0, &[], &[], &vals, &out_deg, &ctx),
+                s.update_weighted(1, &[0], &[0.5], &vals, &out_deg, &ctx),
+                s.update_weighted(2, &[1], &[2.0], &vals, &out_deg, &ctx),
+            ];
+            vals = next;
+        }
+        assert_eq!(vals, vec![0.0, 0.5, 2.5]);
+    }
+
+    #[test]
+    fn unit_weights_reduce_to_plain_sssp() {
+        let w = WeightedSssp { source: 0 };
+        let s = super::super::Sssp { source: 0 };
+        let ctx = ProgramContext { num_vertices: 4 };
+        let vals = vec![0.0f32, 1.0, f32::INFINITY, f32::INFINITY];
+        let out_deg = vec![1u32; 4];
+        // empty weight slice = unit weights
+        assert_eq!(
+            w.update_weighted(2, &[1], &[], &vals, &out_deg, &ctx),
+            s.update(2, &[1], &vals, &out_deg, &ctx)
+        );
+    }
+
+    #[test]
+    fn picks_the_lighter_path() {
+        let s = WeightedSssp { source: 0 };
+        let ctx = ProgramContext { num_vertices: 3 };
+        // two in-edges into v=2: via 0 (weight 5) and via 1 (dist 1 + 0.5)
+        let vals = vec![0.0f32, 1.0, f32::INFINITY];
+        let out_deg = vec![2u32, 1, 0];
+        let got = s.update_weighted(2, &[0, 1], &[5.0, 0.5], &vals, &out_deg, &ctx);
+        assert_eq!(got, 1.5);
+    }
+}

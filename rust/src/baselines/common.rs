@@ -1,19 +1,24 @@
 //! Shared pieces of the baseline engines: the `OocEngine` trait, run
 //! statistics, equal-width vertex chunking and raw value/edge file helpers.
+//!
+//! Value files are generic over the vertex-value lane (`V::BYTES` per
+//! vertex); edge files optionally carry the per-edge weight lane (12 B
+//! records instead of 8 B).  The classic `f32` path is the trait's default
+//! type parameter, so pre-lane code reads unchanged.
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::apps::VertexProgram;
-use crate::graph::{Edge, VertexId};
+use crate::apps::{VertexProgram, VertexValue};
+use crate::graph::{Edge, VertexId, Weight};
 use crate::storage::io::{self, IoSnapshot};
 
-/// Result of a baseline run.
+/// Result of a baseline run, typed by the program's value lane.
 #[derive(Debug, Clone)]
-pub struct BaselineRun {
-    pub values: Vec<f32>,
+pub struct BaselineRun<V = f32> {
+    pub values: Vec<V>,
     pub iter_walls: Vec<Duration>,
     pub load_wall: Duration,
     pub total_wall: Duration,
@@ -25,19 +30,34 @@ pub struct BaselineRun {
     pub edges_processed: u64,
 }
 
-impl BaselineRun {
+impl<V> BaselineRun<V> {
     pub fn total_iter_wall(&self) -> Duration {
         self.iter_walls.iter().sum()
     }
 }
 
 /// A baseline graph engine: builds its own on-disk layout, then iterates.
+///
+/// The trait is the object-safe `f32` facade (what `by_name` boxes); each
+/// engine additionally exposes an inherent `run_typed` generic over any
+/// [`VertexValue`] lane, reachable via [`super::run_typed_by_name`].
 pub trait OocEngine {
     fn name(&self) -> &'static str;
 
     /// Build the on-disk layout from a raw edge list (the system's own
     /// preprocessing; not measured as iteration I/O).
-    fn prepare(&mut self, edges: &[Edge], num_vertices: usize) -> Result<()>;
+    fn prepare(&mut self, edges: &[Edge], num_vertices: usize) -> Result<()> {
+        self.prepare_weighted(edges, &[], num_vertices)
+    }
+
+    /// [`Self::prepare`] with a per-edge weight lane (parallel to `edges`;
+    /// empty = unweighted).
+    fn prepare_weighted(
+        &mut self,
+        edges: &[Edge],
+        weights: &[Weight],
+        num_vertices: usize,
+    ) -> Result<()>;
 
     /// Run `app` for at most `max_iters` iterations (or to convergence).
     fn run(&mut self, app: &dyn VertexProgram, max_iters: usize) -> Result<BaselineRun>;
@@ -68,58 +88,105 @@ pub fn chunk_of(bounds: &[VertexId], v: VertexId) -> usize {
     }
 }
 
-// ---- raw little-endian files (values + edge pairs) --------------------------
+/// Bucket edges (and their parallel weight lane, empty = unweighted) into
+/// `num` chunks keyed by `key(edge)` through [`chunk_of`] — the shared
+/// partitioning step of the engines' prepare paths.  Input order is
+/// preserved within each bucket.
+pub fn bucket_weighted(
+    bounds: &[VertexId],
+    num: usize,
+    edges: &[Edge],
+    weights: &[Weight],
+    key: impl Fn(Edge) -> VertexId,
+) -> (Vec<Vec<Edge>>, Vec<Vec<Weight>>) {
+    let weighted = !weights.is_empty();
+    let mut buckets: Vec<Vec<Edge>> = vec![Vec::new(); num];
+    let mut wbuckets: Vec<Vec<Weight>> = vec![Vec::new(); num];
+    for (k, &e) in edges.iter().enumerate() {
+        let i = chunk_of(bounds, key(e));
+        buckets[i].push(e);
+        if weighted {
+            wbuckets[i].push(weights[k]);
+        }
+    }
+    (buckets, wbuckets)
+}
 
-/// Write an f32 value array as a raw LE file (C = 4 bytes/vertex).
-pub fn write_values(path: &Path, vals: &[f32]) -> Result<()> {
-    let mut buf = Vec::with_capacity(vals.len() * 4);
+// ---- raw little-endian files (values + edge records) ------------------------
+
+/// Write a value array as a raw LE file (C = `V::BYTES` bytes/vertex).
+pub fn write_values<V: VertexValue>(path: &Path, vals: &[V]) -> Result<()> {
+    let mut buf = Vec::with_capacity(vals.len() * V::BYTES);
     for &v in vals {
-        buf.extend_from_slice(&v.to_le_bytes());
+        v.write_le(&mut buf);
     }
     io::write_file(path, &buf)
 }
 
-/// Read an f32 value array.
-pub fn read_values(path: &Path) -> Result<Vec<f32>> {
+/// Read a value array.
+pub fn read_values<V: VertexValue>(path: &Path) -> Result<Vec<V>> {
     values_from_bytes(&io::read_file(path)?)
 }
 
-/// Decode an f32 value array from raw LE bytes (the read-ahead path).
-pub fn values_from_bytes(buf: &[u8]) -> Result<Vec<f32>> {
-    anyhow::ensure!(buf.len() % 4 == 0, "value file not 4-aligned");
-    Ok(buf
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect())
+/// Decode a value array from raw LE bytes (the read-ahead path).
+pub fn values_from_bytes<V: VertexValue>(buf: &[u8]) -> Result<Vec<V>> {
+    anyhow::ensure!(buf.len() % V::BYTES == 0, "value file not {}-aligned", V::BYTES);
+    Ok(buf.chunks_exact(V::BYTES).map(V::read_le).collect())
 }
 
-/// Write raw (src,dst) pairs (D = 8 bytes/edge).
-pub fn write_edges(path: &Path, edges: &[Edge]) -> Result<()> {
-    let mut buf = Vec::with_capacity(edges.len() * 8);
-    for &(s, d) in edges {
+/// Write raw edge records: `(src,dst)` pairs (D = 8 B/edge), or
+/// `(src,dst,weight)` triples (12 B/edge) when `weights` is non-empty.
+pub fn write_edges_w(path: &Path, edges: &[Edge], weights: &[Weight]) -> Result<()> {
+    let weighted = !weights.is_empty();
+    if weighted {
+        anyhow::ensure!(weights.len() == edges.len(), "weights must be parallel to edges");
+    }
+    let rec = if weighted { 12 } else { 8 };
+    let mut buf = Vec::with_capacity(edges.len() * rec);
+    for (k, &(s, d)) in edges.iter().enumerate() {
         buf.extend_from_slice(&s.to_le_bytes());
         buf.extend_from_slice(&d.to_le_bytes());
+        if weighted {
+            buf.extend_from_slice(&weights[k].to_le_bytes());
+        }
     }
     io::write_file(path, &buf)
 }
 
-/// Read raw (src,dst) pairs.
+/// Write raw unweighted `(src,dst)` pairs (D = 8 bytes/edge).
+pub fn write_edges(path: &Path, edges: &[Edge]) -> Result<()> {
+    write_edges_w(path, edges, &[])
+}
+
+/// Read raw unweighted `(src,dst)` pairs.
 pub fn read_edges(path: &Path) -> Result<Vec<Edge>> {
     edges_from_bytes(&io::read_file(path)?)
 }
 
-/// Decode raw (src,dst) pairs from LE bytes (the read-ahead path).
+/// Decode raw unweighted `(src,dst)` pairs from LE bytes.
 pub fn edges_from_bytes(buf: &[u8]) -> Result<Vec<Edge>> {
-    anyhow::ensure!(buf.len() % 8 == 0, "edge file not 8-aligned");
-    Ok(buf
-        .chunks_exact(8)
-        .map(|c| {
-            (
-                u32::from_le_bytes(c[0..4].try_into().unwrap()),
-                u32::from_le_bytes(c[4..8].try_into().unwrap()),
-            )
-        })
-        .collect())
+    let (edges, _) = edges_from_bytes_w(buf, false)?;
+    Ok(edges)
+}
+
+/// Decode raw edge records from LE bytes; the caller says whether the file
+/// was written with the weight lane (`weighted` ⇒ 12 B records).
+pub fn edges_from_bytes_w(buf: &[u8], weighted: bool) -> Result<(Vec<Edge>, Vec<Weight>)> {
+    let rec = if weighted { 12 } else { 8 };
+    anyhow::ensure!(buf.len() % rec == 0, "edge file not {rec}-aligned");
+    let n = buf.len() / rec;
+    let mut edges = Vec::with_capacity(n);
+    let mut weights = Vec::with_capacity(if weighted { n } else { 0 });
+    for c in buf.chunks_exact(rec) {
+        edges.push((
+            u32::from_le_bytes(c[0..4].try_into().unwrap()),
+            u32::from_le_bytes(c[4..8].try_into().unwrap()),
+        ));
+        if weighted {
+            weights.push(f32::from_le_bytes(c[8..12].try_into().unwrap()));
+        }
+    }
+    Ok((edges, weights))
 }
 
 /// File read-ahead depth the baseline engines stream their per-iteration
@@ -173,12 +240,42 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("gmp_bcom_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let vp = dir.join("v.bin");
-        write_values(&vp, &[1.0, -2.5, f32::INFINITY]).unwrap();
-        let vals = read_values(&vp).unwrap();
+        write_values(&vp, &[1.0f32, -2.5, f32::INFINITY]).unwrap();
+        let vals: Vec<f32> = read_values(&vp).unwrap();
         assert_eq!(vals[0], 1.0);
         assert!(vals[2].is_infinite());
         let ep = dir.join("e.bin");
         write_edges(&ep, &[(1, 2), (3, 4)]).unwrap();
         assert_eq!(read_edges(&ep).unwrap(), vec![(1, 2), (3, 4)]);
+    }
+
+    #[test]
+    fn typed_value_files_roundtrip_all_lanes() {
+        let dir = std::env::temp_dir().join(format!("gmp_bcomt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("tv.bin");
+        write_values(&p, &[1u64, u64::MAX, 7]).unwrap();
+        assert_eq!(read_values::<u64>(&p).unwrap(), vec![1, u64::MAX, 7]);
+        write_values(&p, &[3u32, 9]).unwrap();
+        assert_eq!(read_values::<u32>(&p).unwrap(), vec![3, 9]);
+        write_values(&p, &[0.5f64, -1.25]).unwrap();
+        assert_eq!(read_values::<f64>(&p).unwrap(), vec![0.5, -1.25]);
+        // a u64 file is not 4-aligned-compatible garbage for u32 semantics,
+        // but alignment itself is checked
+        write_values(&p, &[1u32, 2, 3]).unwrap();
+        assert!(values_from_bytes::<u64>(&std::fs::read(&p).unwrap()).is_err());
+    }
+
+    #[test]
+    fn weighted_edge_files_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("gmp_bcomw_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("we.bin");
+        let edges = vec![(1, 2), (3, 4), (5, 6)];
+        let weights = vec![0.25f32, 1.0, 2.0];
+        write_edges_w(&p, &edges, &weights).unwrap();
+        let (e, w) = edges_from_bytes_w(&std::fs::read(&p).unwrap(), true).unwrap();
+        assert_eq!(e, edges);
+        assert_eq!(w, weights);
     }
 }

@@ -24,9 +24,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::apps::{ProgramContext, VertexProgram};
+use crate::apps::{ProgramContext, VertexProgram, VertexValue};
 use crate::baselines::common::{self, BaselineRun, OocEngine};
-use crate::graph::{Degrees, Edge, VertexId};
+use crate::graph::{Degrees, Edge, VertexId, Weight};
 use crate::storage::io;
 use crate::storage::prefetch::ReadAhead;
 use crate::util::bitset::BitSet;
@@ -40,6 +40,7 @@ pub struct DswEngine {
     num_vertices: usize,
     num_edges: u64,
     out_deg: Vec<u32>,
+    weighted: bool,
     /// Enable source-chunk selective scheduling.
     pub selective: bool,
 }
@@ -52,6 +53,7 @@ impl DswEngine {
             num_vertices: 0,
             num_edges: 0,
             out_deg: Vec::new(),
+            weighted: false,
             selective: true,
         }
     }
@@ -71,53 +73,36 @@ impl DswEngine {
     fn q(&self) -> usize {
         self.bounds.len().saturating_sub(1)
     }
-}
 
-impl OocEngine for DswEngine {
-    fn name(&self) -> &'static str {
-        "dsw(gridgraph)"
+    /// Memory model with an explicit lane width `c`: two vertex chunks —
+    /// 2·C·V/√P.
+    fn memory_estimate_lane(&self, c: u64) -> u64 {
+        2 * c * self.num_vertices as u64 / self.q().max(1) as u64
     }
 
-    fn prepare(&mut self, edges: &[Edge], num_vertices: usize) -> Result<()> {
-        common::fresh_dir(&self.dir)?;
-        let degrees = Degrees::from_edges(num_vertices, edges.iter().copied());
-        self.out_deg = degrees.out_deg;
-        self.bounds = common::equal_chunks(num_vertices, GRID);
-        self.num_vertices = num_vertices;
-        self.num_edges = edges.len() as u64;
-        let q = self.q();
-        let mut blocks: Vec<Vec<Edge>> = vec![Vec::new(); q * q];
-        for &(s, d) in edges {
-            let i = common::chunk_of(&self.bounds, s);
-            let j = common::chunk_of(&self.bounds, d);
-            blocks[i * q + j].push((s, d));
-        }
-        for i in 0..q {
-            for j in 0..q {
-                common::write_edges(&self.block_path(i, j), &blocks[i * q + j])?;
-            }
-        }
-        Ok(())
-    }
-
-    fn run(&mut self, app: &dyn VertexProgram, max_iters: usize) -> Result<BaselineRun> {
+    /// Typed run over any value lane (see trait docs).
+    pub fn run_typed<V: VertexValue, P: VertexProgram<V> + ?Sized>(
+        &mut self,
+        app: &P,
+        max_iters: usize,
+    ) -> Result<BaselineRun<V>> {
         let n = self.num_vertices;
         let q = self.q();
         let ctx = ProgramContext { num_vertices: n as u64 };
         let t0 = Instant::now();
 
-        let init: Vec<f32> = (0..n).map(|v| app.init(v as VertexId, &ctx)).collect();
+        let init: Vec<V> = (0..n).map(|v| app.init(v as VertexId, &ctx)).collect();
         for i in 0..q {
             let (lo, hi) = (self.bounds[i] as usize, self.bounds[i + 1] as usize);
             common::write_values(&self.chunk_path(i), &init[lo..hi])?;
         }
         let load_wall = t0.elapsed();
 
-        // Row skipping is only sound for monotone Min programs (a quiet
-        // source chunk re-offers the same already-applied relaxations).
+        // Row skipping is only sound for monotone (Min/Max) programs — a
+        // quiet source chunk re-offers the same already-applied folds.
         // Sum programs recompute the full in-edge sum each iteration, so a
         // skipped row would corrupt it.
-        let selective = self.selective && app.reduce() == crate::apps::Reduce::Min;
+        let selective = self.selective && app.reduce().is_monotone();
 
         // chunk-level activity: initially per the app's initially_active
         let mut chunk_active = BitSet::new(q);
@@ -157,10 +142,10 @@ impl OocEngine for DswEngine {
 
             for j in 0..q {
                 let (lo_j, hi_j) = (self.bounds[j], self.bounds[j + 1]);
-                let old =
+                let old: Vec<V> =
                     common::values_from_bytes(&common::next_buf(&mut stream, "dsw column")?)?;
                 let reduce = app.reduce();
-                let mut acc = vec![reduce.identity(); (hi_j - lo_j) as usize];
+                let mut acc = vec![reduce.identity::<V>(); (hi_j - lo_j) as usize];
                 // GridGraph still *applies* for inactive columns (values may
                 // decay to apply(identity, old)), so we always run apply.
                 for i in 0..q {
@@ -169,16 +154,19 @@ impl OocEngine for DswEngine {
                     }
                     let lo_i = self.bounds[i];
                     // C·V/√P
-                    let src =
+                    let src: Vec<V> =
                         common::values_from_bytes(&common::next_buf(&mut stream, "dsw chunk")?)?;
                     // D·E
-                    let block =
-                        common::edges_from_bytes(&common::next_buf(&mut stream, "dsw block")?)?;
-                    for (s, d) in block {
+                    let (block, bweights) = common::edges_from_bytes_w(
+                        &common::next_buf(&mut stream, "dsw block")?,
+                        self.weighted,
+                    )?;
+                    for (kk, (s, d)) in block.into_iter().enumerate() {
+                        let w = if self.weighted { bweights[kk] } else { 1.0 };
                         let k = (d - lo_j) as usize;
                         acc[k] = reduce.combine(
                             acc[k],
-                            app.gather(src[(s - lo_i) as usize], self.out_deg[s as usize]),
+                            app.gather(src[(s - lo_i) as usize], self.out_deg[s as usize], w),
                         );
                         edges_processed += 1;
                     }
@@ -189,7 +177,7 @@ impl OocEngine for DswEngine {
                     // in-edge set; with skipped rows the sum would be partial,
                     // so Sum programs disable row skipping (see above).
                     let nv = app.apply(acc[k], old[k], &ctx);
-                    if !(nv.is_infinite() && old[k].is_infinite()) && nv != old[k] {
+                    if V::changed(old[k], nv, 0.0) {
                         changed = true;
                         next_active.set(j);
                     }
@@ -213,7 +201,7 @@ impl OocEngine for DswEngine {
 
         let mut values = Vec::with_capacity(n);
         for i in 0..q {
-            values.extend(common::read_values(&self.chunk_path(i))?);
+            values.extend(common::read_values::<V>(&self.chunk_path(i))?);
         }
         Ok(BaselineRun {
             values,
@@ -222,33 +210,81 @@ impl OocEngine for DswEngine {
             total_wall: t0.elapsed(),
             io: io::snapshot().since(&io_start),
             iter_io,
-            memory_bytes: self.memory_estimate(),
+            memory_bytes: self.memory_estimate_lane(V::BYTES as u64),
             edges_processed,
         })
     }
 
-    /// GridGraph keeps two vertex chunks in memory: 2·C·V/√P.
-    fn memory_estimate(&self) -> u64 {
-        2 * 4 * self.num_vertices as u64 / self.q().max(1) as u64
+    /// Run with row skipping disabled — required for Sum-monoid programs
+    /// (PageRank) whose apply needs the *complete* in-edge sum.
+    pub fn run_full<V: VertexValue, P: VertexProgram<V> + ?Sized>(
+        &mut self,
+        app: &P,
+        max_iters: usize,
+    ) -> Result<BaselineRun<V>> {
+        let was = self.selective;
+        self.selective = false;
+        let r = self.run_typed(app, max_iters);
+        self.selective = was;
+        r
     }
 }
 
-impl DswEngine {
-    /// Run with row skipping disabled — required for Sum-monoid programs
-    /// (PageRank) whose apply needs the *complete* in-edge sum.
-    pub fn run_full(&mut self, app: &dyn VertexProgram, max_iters: usize) -> Result<BaselineRun> {
-        let was = self.selective;
-        self.selective = false;
-        let r = self.run(app, max_iters);
-        self.selective = was;
-        r
+impl OocEngine for DswEngine {
+    fn name(&self) -> &'static str {
+        "dsw(gridgraph)"
+    }
+
+    fn prepare_weighted(
+        &mut self,
+        edges: &[Edge],
+        weights: &[Weight],
+        num_vertices: usize,
+    ) -> Result<()> {
+        common::fresh_dir(&self.dir)?;
+        let degrees = Degrees::from_edges(num_vertices, edges.iter().copied());
+        self.out_deg = degrees.out_deg;
+        self.bounds = common::equal_chunks(num_vertices, GRID);
+        self.num_vertices = num_vertices;
+        self.num_edges = edges.len() as u64;
+        self.weighted = !weights.is_empty();
+        let q = self.q();
+        let mut blocks: Vec<Vec<Edge>> = vec![Vec::new(); q * q];
+        let mut wblocks: Vec<Vec<Weight>> = vec![Vec::new(); q * q];
+        for (k, &(s, d)) in edges.iter().enumerate() {
+            let i = common::chunk_of(&self.bounds, s);
+            let j = common::chunk_of(&self.bounds, d);
+            blocks[i * q + j].push((s, d));
+            if self.weighted {
+                wblocks[i * q + j].push(weights[k]);
+            }
+        }
+        for i in 0..q {
+            for j in 0..q {
+                common::write_edges_w(
+                    &self.block_path(i, j),
+                    &blocks[i * q + j],
+                    &wblocks[i * q + j],
+                )?;
+            }
+        }
+        Ok(())
+    }
+
+    fn run(&mut self, app: &dyn VertexProgram, max_iters: usize) -> Result<BaselineRun> {
+        self.run_typed(app, max_iters)
+    }
+
+    /// GridGraph keeps two vertex chunks in memory: 2·C·V/√P (f32 C=4).
+    fn memory_estimate(&self) -> u64 {
+        self.memory_estimate_lane(4)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::apps::{PageRank, Sssp};
+    use crate::apps::{PageRank, Sssp, WeightedSssp};
     use crate::graph::generator;
 
     fn reference(
@@ -310,5 +346,19 @@ mod tests {
                 "v{i}: {a} vs {b}"
             );
         }
+    }
+
+    #[test]
+    fn dsw_weighted_sssp_through_grid_blocks() {
+        // weights must survive the grid bucketing: 0 -(2)-> 1 -(0.25)-> 2,
+        // plus a direct heavy edge 0 -(9)-> 2
+        let edges = vec![(0u32, 1u32), (1, 2), (0, 2)];
+        let weights = vec![2.0f32, 0.25, 9.0];
+        let mut eng = DswEngine::new(
+            std::env::temp_dir().join(format!("gmp_dsw_w_{}", std::process::id())),
+        );
+        eng.prepare_weighted(&edges, &weights, 3).unwrap();
+        let run = eng.run_typed(&WeightedSssp { source: 0 }, 50).unwrap();
+        assert_eq!(run.values, vec![0.0, 2.0, 2.25]);
     }
 }

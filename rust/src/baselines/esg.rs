@@ -10,15 +10,17 @@
 //!
 //! Everything here is real file traffic — X-Stream's whole point is that
 //! sequential streams beat random access, and that is what the files do.
+//! Contributions are `V::BYTES` wide (the update record is `dst` + one
+//! lane element), and the edge files carry the weight lane when present.
 
 use std::path::PathBuf;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::apps::{ProgramContext, VertexProgram};
+use crate::apps::{ProgramContext, VertexProgram, VertexValue};
 use crate::baselines::common::{self, BaselineRun, OocEngine};
-use crate::graph::{Degrees, Edge, VertexId};
+use crate::graph::{Degrees, Edge, VertexId, Weight};
 use crate::storage::io;
 use crate::storage::prefetch::ReadAhead;
 
@@ -32,11 +34,19 @@ pub struct EsgEngine {
     num_vertices: usize,
     num_edges: u64,
     out_deg: Vec<u32>,
+    weighted: bool,
 }
 
 impl EsgEngine {
     pub fn new(dir: PathBuf) -> Self {
-        Self { dir, bounds: Vec::new(), num_vertices: 0, num_edges: 0, out_deg: Vec::new() }
+        Self {
+            dir,
+            bounds: Vec::new(),
+            num_vertices: 0,
+            num_edges: 0,
+            out_deg: Vec::new(),
+            weighted: false,
+        }
     }
 
     fn edges_path(&self, i: usize) -> PathBuf {
@@ -54,55 +64,26 @@ impl EsgEngine {
     fn num_parts(&self) -> usize {
         self.bounds.len().saturating_sub(1)
     }
-}
 
-/// An update record: destination vertex + contribution (8 bytes = C+id).
-fn encode_updates(buf: &mut Vec<u8>, dst: VertexId, contrib: f32) {
-    buf.extend_from_slice(&dst.to_le_bytes());
-    buf.extend_from_slice(&contrib.to_le_bytes());
-}
-
-fn decode_updates(buf: &[u8]) -> impl Iterator<Item = (VertexId, f32)> + '_ {
-    buf.chunks_exact(8).map(|c| {
-        (
-            u32::from_le_bytes(c[0..4].try_into().unwrap()),
-            f32::from_le_bytes(c[4..8].try_into().unwrap()),
-        )
-    })
-}
-
-impl OocEngine for EsgEngine {
-    fn name(&self) -> &'static str {
-        "esg(x-stream)"
+    /// Memory model with an explicit lane width `c`: one partition's
+    /// vertices — C·V/P.
+    fn memory_estimate_lane(&self, c: u64) -> u64 {
+        c * self.num_vertices as u64 / self.num_parts().max(1) as u64
     }
 
-    fn prepare(&mut self, edges: &[Edge], num_vertices: usize) -> Result<()> {
-        common::fresh_dir(&self.dir)?;
-        let degrees = Degrees::from_edges(num_vertices, edges.iter().copied());
-        self.out_deg = degrees.out_deg;
-        self.bounds = common::equal_chunks(num_vertices, PARTITIONS);
-        self.num_vertices = num_vertices;
-        self.num_edges = edges.len() as u64;
-        // out-edges partitioned by SOURCE (X-Stream's streaming partitions)
-        let p = self.num_parts();
-        let mut buckets: Vec<Vec<Edge>> = vec![Vec::new(); p];
-        for &(s, d) in edges {
-            buckets[common::chunk_of(&self.bounds, s)].push((s, d));
-        }
-        for (i, b) in buckets.iter().enumerate() {
-            common::write_edges(&self.edges_path(i), b)?;
-        }
-        Ok(())
-    }
-
-    fn run(&mut self, app: &dyn VertexProgram, max_iters: usize) -> Result<BaselineRun> {
+    /// Typed run over any value lane (see trait docs).
+    pub fn run_typed<V: VertexValue, P: VertexProgram<V> + ?Sized>(
+        &mut self,
+        app: &P,
+        max_iters: usize,
+    ) -> Result<BaselineRun<V>> {
         let n = self.num_vertices;
         let p = self.num_parts();
         let ctx = ProgramContext { num_vertices: n as u64 };
         let t0 = Instant::now();
 
         // vertex chunks initialized on disk
-        let init: Vec<f32> = (0..n).map(|v| app.init(v as VertexId, &ctx)).collect();
+        let init: Vec<V> = (0..n).map(|v| app.init(v as VertexId, &ctx)).collect();
         for i in 0..p {
             let (lo, hi) = (self.bounds[i] as usize, self.bounds[i + 1] as usize);
             common::write_values(&self.chunk_path(i), &init[lo..hi])?;
@@ -131,17 +112,20 @@ impl OocEngine for EsgEngine {
             let mut update_bufs: Vec<Vec<u8>> = vec![Vec::new(); p];
             for i in 0..p {
                 // C·V/P
-                let chunk =
-                    common::values_from_bytes(&common::next_buf(&mut scatter_stream, "esg chunk")?)?;
+                let chunk_buf = common::next_buf(&mut scatter_stream, "esg chunk")?;
+                let chunk: Vec<V> = common::values_from_bytes(&chunk_buf)?;
                 let lo = self.bounds[i];
                 // D·E/P
-                let edges =
-                    common::edges_from_bytes(&common::next_buf(&mut scatter_stream, "esg edges")?)?;
-                for (s, d) in edges {
+                let (edges, weights) = common::edges_from_bytes_w(
+                    &common::next_buf(&mut scatter_stream, "esg edges")?,
+                    self.weighted,
+                )?;
+                for (k, (s, d)) in edges.into_iter().enumerate() {
+                    let w = if self.weighted { weights[k] } else { 1.0 };
                     let contrib =
-                        app.gather(chunk[(s - lo) as usize], self.out_deg[s as usize]);
+                        app.gather(chunk[(s - lo) as usize], self.out_deg[s as usize], w);
                     let target = common::chunk_of(&self.bounds, d);
-                    encode_updates(&mut update_bufs[target], d, contrib);
+                    encode_update(&mut update_bufs[target], d, contrib);
                 }
                 edges_processed += self.num_edges / p as u64;
             }
@@ -158,19 +142,19 @@ impl OocEngine for EsgEngine {
             );
             for i in 0..p {
                 let (lo, hi) = (self.bounds[i], self.bounds[i + 1]);
-                let mut chunk =
+                let mut chunk: Vec<V> =
                     common::values_from_bytes(&common::next_buf(&mut gather_stream, "esg chunk")?)?;
                 let updates = common::next_buf(&mut gather_stream, "esg updates")?; // C·E read
                 let reduce = app.reduce();
-                let mut acc = vec![reduce.identity(); (hi - lo) as usize];
-                for (d, contrib) in decode_updates(&updates) {
+                let mut acc = vec![reduce.identity::<V>(); (hi - lo) as usize];
+                for (d, contrib) in decode_updates::<V>(&updates) {
                     let k = (d - lo) as usize;
                     acc[k] = reduce.combine(acc[k], contrib);
                 }
                 for k in 0..acc.len() {
                     let old = chunk[k];
                     let nv = app.apply(acc[k], old, &ctx);
-                    if !(nv.is_infinite() && old.is_infinite()) && nv != old {
+                    if V::changed(old, nv, 0.0) {
                         changed = true;
                     }
                     chunk[k] = nv;
@@ -188,7 +172,7 @@ impl OocEngine for EsgEngine {
         // collect final values
         let mut values = Vec::with_capacity(n);
         for i in 0..p {
-            values.extend(common::read_values(&self.chunk_path(i))?);
+            values.extend(common::read_values::<V>(&self.chunk_path(i))?);
         }
         Ok(BaselineRun {
             values,
@@ -197,21 +181,69 @@ impl OocEngine for EsgEngine {
             total_wall: t0.elapsed(),
             io: io::snapshot().since(&io_start),
             iter_io,
-            memory_bytes: self.memory_estimate(),
+            memory_bytes: self.memory_estimate_lane(V::BYTES as u64),
             edges_processed,
         })
     }
+}
 
-    /// X-Stream keeps one partition's vertices in memory: C·V/P.
+/// An update record: destination vertex + contribution (4 + `V::BYTES`).
+fn encode_update<V: VertexValue>(buf: &mut Vec<u8>, dst: VertexId, contrib: V) {
+    buf.extend_from_slice(&dst.to_le_bytes());
+    contrib.write_le(buf);
+}
+
+fn decode_updates<V: VertexValue>(buf: &[u8]) -> impl Iterator<Item = (VertexId, V)> + '_ {
+    buf.chunks_exact(4 + V::BYTES).map(|c| {
+        (
+            u32::from_le_bytes(c[0..4].try_into().unwrap()),
+            V::read_le(&c[4..]),
+        )
+    })
+}
+
+impl OocEngine for EsgEngine {
+    fn name(&self) -> &'static str {
+        "esg(x-stream)"
+    }
+
+    fn prepare_weighted(
+        &mut self,
+        edges: &[Edge],
+        weights: &[Weight],
+        num_vertices: usize,
+    ) -> Result<()> {
+        common::fresh_dir(&self.dir)?;
+        let degrees = Degrees::from_edges(num_vertices, edges.iter().copied());
+        self.out_deg = degrees.out_deg;
+        self.bounds = common::equal_chunks(num_vertices, PARTITIONS);
+        self.num_vertices = num_vertices;
+        self.num_edges = edges.len() as u64;
+        self.weighted = !weights.is_empty();
+        // out-edges partitioned by SOURCE (X-Stream's streaming partitions)
+        let p = self.num_parts();
+        let (buckets, wbuckets) =
+            common::bucket_weighted(&self.bounds, p, edges, weights, |(s, _)| s);
+        for (i, b) in buckets.iter().enumerate() {
+            common::write_edges_w(&self.edges_path(i), b, &wbuckets[i])?;
+        }
+        Ok(())
+    }
+
+    fn run(&mut self, app: &dyn VertexProgram, max_iters: usize) -> Result<BaselineRun> {
+        self.run_typed(app, max_iters)
+    }
+
+    /// X-Stream keeps one partition's vertices in memory: C·V/P (f32 C=4).
     fn memory_estimate(&self) -> u64 {
-        4 * self.num_vertices as u64 / self.num_parts().max(1) as u64
+        self.memory_estimate_lane(4)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::apps::{Sssp, Wcc};
+    use crate::apps::{MaxDeg, Sssp, Wcc};
     use crate::graph::generator;
 
     #[test]
@@ -253,5 +285,18 @@ mod tests {
         assert_eq!(run.values.len(), 120);
         // write volume should exceed VSW's zero but stay below PSW's
         assert!(run.io.bytes_written > 0);
+    }
+
+    #[test]
+    fn esg_typed_u32_max_monoid_converges() {
+        // star: hub 0 with high out-degree feeding a path
+        let edges = vec![(0u32, 1u32), (0, 2), (0, 3), (3, 4)];
+        let mut eng = EsgEngine::new(
+            std::env::temp_dir().join(format!("gmp_esg_u32_{}", std::process::id())),
+        );
+        eng.prepare(&edges, 5).unwrap();
+        let run = eng.run_typed(&MaxDeg, 50).unwrap();
+        // out_deg = [3,0,0,1,0]; everything downstream of 0 sees 3
+        assert_eq!(run.values, vec![0, 3, 3, 3, 3]);
     }
 }

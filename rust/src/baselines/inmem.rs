@@ -10,15 +10,18 @@
 //!   GraphMP needed 7.3 GB and 30 s (Fig 6);
 //! * fast iterations (no disk I/O at all once loaded);
 //! * SpMV-style per-iteration full sweeps.
+//!
+//! `run_typed` is the cross-engine conformance matrix's **oracle**: a
+//! single-threaded synchronous sweep over any value lane.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::apps::{ProgramContext, VertexProgram};
+use crate::apps::{ProgramContext, VertexProgram, VertexValue};
 use crate::baselines::common::{BaselineRun, OocEngine};
 use crate::graph::csr::{Csr, OutCsr};
-use crate::graph::{Degrees, Edge, VertexId};
+use crate::graph::{Degrees, Edge, VertexId, Weight};
 use crate::storage::io;
 
 #[derive(Default)]
@@ -55,44 +58,50 @@ impl InMemEngine {
             };
             edges.push((a.parse()?, b.parse()?));
         }
-        let degrees = Degrees::from_edges(num_vertices, edges.iter().copied());
-        self.out_deg = degrees.out_deg;
-        self.in_csr = Some(Csr::from_edges(0, num_vertices as VertexId, &edges));
-        self.out_csr = Some(OutCsr::from_edges(num_vertices, &edges));
-        self.num_vertices = num_vertices;
-        self.num_edges = edges.len() as u64;
+        self.build(&edges, &[], num_vertices);
         Ok(())
     }
-}
 
-impl OocEngine for InMemEngine {
-    fn name(&self) -> &'static str {
-        "inmem(graphmat)"
+    /// Memory model with an explicit lane width `c`: both CSR directions
+    /// (u32 columns regardless of lane) + degrees + two value arrays.
+    fn memory_estimate_lane(&self, c: u64) -> u64 {
+        let v = self.num_vertices as u64;
+        let e = self.num_edges;
+        4 * e + 4 * v          // in-CSR
+            + 4 * e + 8 * v    // out-CSR
+            + 8 * v            // degrees
+            + 2 * c * v        // src+dst values
     }
 
-    fn prepare(&mut self, edges: &[Edge], num_vertices: usize) -> Result<()> {
-        // the load phase GraphMat pays on every application start: build
-        // both directions + degree arrays
+    fn build(&mut self, edges: &[Edge], weights: &[Weight], num_vertices: usize) {
         let degrees = Degrees::from_edges(num_vertices, edges.iter().copied());
         self.out_deg = degrees.out_deg;
-        self.in_csr = Some(Csr::from_edges(0, num_vertices as VertexId, edges));
+        self.in_csr = Some(Csr::from_edges_weighted(
+            0,
+            num_vertices as VertexId,
+            edges,
+            weights,
+        ));
         self.out_csr = Some(OutCsr::from_edges(num_vertices, edges));
         self.num_vertices = num_vertices;
         self.num_edges = edges.len() as u64;
-        // account the edge-list ingestion as read I/O (GraphMat reads the
-        // raw graph file once)
-        io::account_virtual_read(8 * edges.len() as u64);
-        Ok(())
     }
 
-    fn run(&mut self, app: &dyn VertexProgram, max_iters: usize) -> Result<BaselineRun> {
+    /// Typed run over any value lane — the single-threaded synchronous
+    /// reference sweep (Algorithm 2 applied to every vertex each
+    /// iteration).
+    pub fn run_typed<V: VertexValue, P: VertexProgram<V> + ?Sized>(
+        &mut self,
+        app: &P,
+        max_iters: usize,
+    ) -> Result<BaselineRun<V>> {
         let n = self.num_vertices;
         let csr = self.in_csr.as_ref().expect("prepare first");
         let ctx = ProgramContext { num_vertices: n as u64 };
         let t0 = Instant::now();
         let io_start = io::snapshot();
 
-        let mut vals: Vec<f32> = (0..n).map(|v| app.init(v as VertexId, &ctx)).collect();
+        let mut vals: Vec<V> = (0..n).map(|v| app.init(v as VertexId, &ctx)).collect();
         let mut next = vals.clone();
         let mut iter_walls = Vec::new();
         let mut iter_io = Vec::new();
@@ -107,12 +116,16 @@ impl OocEngine for InMemEngine {
                 let s = csr.row_ptr[v] as usize;
                 let e = csr.row_ptr[v + 1] as usize;
                 let mut acc = reduce.identity();
-                for &u in &csr.col[s..e] {
-                    acc = reduce.combine(acc, app.gather(vals[u as usize], self.out_deg[u as usize]));
+                for k in s..e {
+                    let u = csr.col[k] as usize;
+                    acc = reduce.combine(
+                        acc,
+                        app.gather(vals[u], self.out_deg[u], csr.weight(k)),
+                    );
                 }
                 let old = vals[v];
                 let nv = app.apply(acc, old, &ctx);
-                if !(nv.is_infinite() && old.is_infinite()) && nv != old {
+                if V::changed(old, nv, 0.0) {
                     changed = true;
                 }
                 next[v] = nv;
@@ -133,28 +146,48 @@ impl OocEngine for InMemEngine {
             total_wall: t0.elapsed(),
             io: io::snapshot().since(&io_start),
             iter_io,
-            memory_bytes: self.memory_estimate(),
+            memory_bytes: self.memory_estimate_lane(V::BYTES as u64),
             edges_processed,
         })
     }
+}
+
+impl OocEngine for InMemEngine {
+    fn name(&self) -> &'static str {
+        "inmem(graphmat)"
+    }
+
+    fn prepare_weighted(
+        &mut self,
+        edges: &[Edge],
+        weights: &[Weight],
+        num_vertices: usize,
+    ) -> Result<()> {
+        // the load phase GraphMat pays on every application start: build
+        // both directions + degree arrays
+        self.build(edges, weights, num_vertices);
+        // account the edge-list ingestion as read I/O (GraphMat reads the
+        // raw graph file once; weighted records are 12 B)
+        let rec = if weights.is_empty() { 8 } else { 12 };
+        io::account_virtual_read(rec * edges.len() as u64);
+        Ok(())
+    }
+
+    fn run(&mut self, app: &dyn VertexProgram, max_iters: usize) -> Result<BaselineRun> {
+        self.run_typed(app, max_iters)
+    }
 
     /// The whole graph in memory, both directions, plus working arrays:
-    /// GraphMat's defining cost.
+    /// GraphMat's defining cost (f32 lane, C=4).
     fn memory_estimate(&self) -> u64 {
-        let v = self.num_vertices as u64;
-        let e = self.num_edges;
-        // in-CSR + out-CSR (cols u32 + row_ptrs) + degrees + two value arrays
-        4 * e + 4 * v          // in-CSR
-            + 4 * e + 8 * v    // out-CSR
-            + 8 * v            // degrees
-            + 8 * v            // src+dst values
+        self.memory_estimate_lane(4)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::apps::PageRank;
+    use crate::apps::{LabelProp, PageRank, WeightedSssp};
     use crate::graph::generator;
 
     #[test]
@@ -180,5 +213,20 @@ mod tests {
         eng.prepare(&edges, 1000).unwrap();
         // ≥ both edge directions
         assert!(eng.memory_estimate() > 2 * 4 * 20_000);
+    }
+
+    #[test]
+    fn typed_and_weighted_runs_work() {
+        // a path with non-unit weights: 0 -(0.5)-> 1 -(0.25)-> 2
+        let edges = vec![(0, 1), (1, 2)];
+        let weights = vec![0.5f32, 0.25];
+        let mut eng = InMemEngine::new();
+        eng.prepare_weighted(&edges, &weights, 3).unwrap();
+        let run = eng.run_typed(&WeightedSssp { source: 0 }, 100).unwrap();
+        assert_eq!(run.values, vec![0.0, 0.5, 0.75]);
+
+        // u64 label propagation on the same structure
+        let run = eng.run_typed(&LabelProp, 100).unwrap();
+        assert_eq!(run.values, vec![0, 0, 0]);
     }
 }

@@ -9,13 +9,15 @@
 //! | DSW   | GridGraph | [`dsw`]   | C·√P·V + D·E           | C·√P·V            |
 //! | —     | GraphMat  | [`inmem`] | load once              | —                 |
 //!
-//! Each engine builds its own on-disk layout from a raw edge list, then
-//! iterates doing **real file I/O** for the dominant streams; fine-grained
-//! positioned accesses that a real system would serve from sliding windows
-//! are accounted through `storage::io::account_virtual_*` so the measured
-//! byte counters still match the model columns above (validated by
-//! `benches/table2_iomodel.rs`).  All engines converge to the same fixpoints
-//! as the VSW engine (see `tests/baseline_convergence.rs`).
+//! Each engine builds its own on-disk layout from a raw edge list (with the
+//! optional per-edge weight lane), then iterates doing **real file I/O**
+//! for the dominant streams; fine-grained positioned accesses that a real
+//! system would serve from sliding windows are accounted through
+//! `storage::io::account_virtual_*` so the measured byte counters still
+//! match the model columns above (validated by `benches/table2_iomodel.rs`).
+//! All engines converge to the same fixpoints as the VSW engine on every
+//! value lane (see `tests/baseline_convergence.rs` and the conformance
+//! matrix in `tests/engine_equivalence.rs`).
 
 pub mod common;
 pub mod dsw;
@@ -31,16 +33,83 @@ pub use inmem::InMemEngine;
 pub use psw::PswEngine;
 pub use vsp::VspEngine;
 
-/// Construct a baseline by CLI name, rooted at `dir`.
-pub fn by_name(name: &str, dir: std::path::PathBuf) -> anyhow::Result<Box<dyn OocEngine>> {
+use crate::apps::{VertexProgram, VertexValue};
+use crate::graph::{Edge, Weight};
+
+/// Resolve a CLI name/alias to its canonical engine token — the single
+/// alias table both [`by_name`] and [`run_typed_by_name`] dispatch on, so
+/// the two paths (and their error message) can never drift.
+fn canonical(name: &str) -> anyhow::Result<&'static str> {
     Ok(match name.to_ascii_lowercase().as_str() {
-        "psw" | "graphchi" => Box::new(PswEngine::new(dir)),
-        "esg" | "x-stream" | "xstream" => Box::new(EsgEngine::new(dir)),
-        "dsw" | "gridgraph" => Box::new(DswEngine::new(dir)),
-        "vsp" | "venus" => Box::new(VspEngine::new(dir)),
-        "inmem" | "graphmat" => Box::new(InMemEngine::new()),
+        "psw" | "graphchi" => "psw",
+        "esg" | "x-stream" | "xstream" => "esg",
+        "dsw" | "gridgraph" => "dsw",
+        "vsp" | "venus" => "vsp",
+        "inmem" | "graphmat" => "inmem",
         other => anyhow::bail!("unknown baseline {other:?} (psw|esg|dsw|vsp|inmem)"),
     })
+}
+
+/// Construct a baseline by CLI name, rooted at `dir` (the `f32` trait-object
+/// facade; typed lanes go through [`run_typed_by_name`]).
+pub fn by_name(name: &str, dir: std::path::PathBuf) -> anyhow::Result<Box<dyn OocEngine>> {
+    Ok(match canonical(name)? {
+        "psw" => Box::new(PswEngine::new(dir)),
+        "esg" => Box::new(EsgEngine::new(dir)),
+        "dsw" => Box::new(DswEngine::new(dir)),
+        "vsp" => Box::new(VspEngine::new(dir)),
+        "inmem" => Box::new(InMemEngine::new()),
+        _ => unreachable!("canonical() returns only known tokens"),
+    })
+}
+
+/// Canonical display name for a baseline CLI token — derived from the
+/// engine's own `OocEngine::name` (single source; engine construction
+/// touches no disk), so figures and the CLI can never drift from it.
+pub fn display_name(name: &str) -> anyhow::Result<&'static str> {
+    Ok(by_name(name, std::env::temp_dir())?.name())
+}
+
+/// Prepare + run a baseline by name on any value lane: the typed
+/// counterpart of [`by_name`] + `prepare`/`run`, used by the CLI and the
+/// cross-engine conformance matrix.  `weights` empty ⇒ unweighted.
+pub fn run_typed_by_name<V: VertexValue>(
+    name: &str,
+    dir: std::path::PathBuf,
+    edges: &[Edge],
+    weights: &[Weight],
+    num_vertices: usize,
+    app: &dyn VertexProgram<V>,
+    max_iters: usize,
+) -> anyhow::Result<BaselineRun<V>> {
+    match canonical(name)? {
+        "psw" => {
+            let mut e = PswEngine::new(dir);
+            e.prepare_weighted(edges, weights, num_vertices)?;
+            e.run_typed(app, max_iters)
+        }
+        "esg" => {
+            let mut e = EsgEngine::new(dir);
+            e.prepare_weighted(edges, weights, num_vertices)?;
+            e.run_typed(app, max_iters)
+        }
+        "dsw" => {
+            let mut e = DswEngine::new(dir);
+            e.prepare_weighted(edges, weights, num_vertices)?;
+            e.run_typed(app, max_iters)
+        }
+        "vsp" => {
+            let mut e = VspEngine::new(dir);
+            e.prepare_weighted(edges, weights, num_vertices)?;
+            e.run_typed(app, max_iters)
+        }
+        "inmem" => {
+            let mut e = InMemEngine::new();
+            e.prepare_weighted(edges, weights, num_vertices)?;
+            e.run_typed(app, max_iters)
+        }
+        _ => unreachable!("canonical() returns only known tokens"),
+    }
 }
 
 #[cfg(test)]
@@ -52,5 +121,24 @@ mod tests {
             assert!(super::by_name(n, dir.clone()).is_ok(), "{n}");
         }
         assert!(super::by_name("zzz", dir).is_err());
+    }
+
+    #[test]
+    fn typed_dispatch_runs_every_engine() {
+        use crate::apps::{LabelProp, VertexProgram};
+        let app: &dyn VertexProgram<u64> = &LabelProp;
+        let edges = vec![(0u32, 1u32), (1, 2), (2, 0)];
+        for n in ["psw", "esg", "dsw", "vsp", "inmem"] {
+            let dir = std::env::temp_dir().join(format!(
+                "gmp_basetyped_{n}_{}",
+                std::process::id()
+            ));
+            let run = super::run_typed_by_name(n, dir, &edges, &[], 3, app, 50).unwrap();
+            assert_eq!(run.values, vec![0, 0, 0], "{n}");
+        }
+        assert!(
+            super::run_typed_by_name("zzz", std::env::temp_dir(), &edges, &[], 3, app, 1)
+                .is_err()
+        );
     }
 }

@@ -10,23 +10,23 @@
 //! 2. update vertex values from the edge values;
 //! 3. write vertices and both edge directions back — `C·V + 2(C+D)·E`.
 //!
-//! Here the in-edge structure (CSR) and the edge-value files are real disk
-//! files, re-read and re-written every iteration.  The *out-edge window*
-//! traffic (GraphChi's P sliding windows that update source values in the
-//! other shards) touches the same bytes a second time; we refresh the edge
-//! values from the new vertex array in one pass and account the second
-//! direction via `account_virtual_*`, keeping the measured volume equal to
-//! the model's.
+//! Here the in-edge structure (CSR, with the optional weight lane) and the
+//! edge-value files are real disk files, re-read and re-written every
+//! iteration.  The *out-edge window* traffic (GraphChi's P sliding windows
+//! that update source values in the other shards) touches the same bytes a
+//! second time; we refresh the edge values from the new vertex array in one
+//! pass and account the second direction via `account_virtual_*`, keeping
+//! the measured volume equal to the model's.
 
 use std::path::PathBuf;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::apps::{ProgramContext, VertexProgram};
+use crate::apps::{ProgramContext, VertexProgram, VertexValue};
 use crate::baselines::common::{self, BaselineRun, OocEngine};
 use crate::graph::csr::Csr;
-use crate::graph::{Degrees, Edge, VertexId};
+use crate::graph::{Degrees, Edge, VertexId, Weight};
 use crate::sharding::intervals::compute_intervals;
 use crate::storage::prefetch::ReadAhead;
 use crate::storage::{io, shardfile};
@@ -62,48 +62,31 @@ impl PswEngine {
     fn num_shards(&self) -> usize {
         self.intervals.len().saturating_sub(1)
     }
-}
 
-impl OocEngine for PswEngine {
-    fn name(&self) -> &'static str {
-        "psw(graphchi)"
+    /// Memory model with an explicit lane width `c` (the paper's C; 4 for
+    /// the f32 case): one shard's subgraph — (C·V + 2(C+D)·E)/P.
+    fn memory_estimate_lane(&self, c: u64) -> u64 {
+        let p = self.num_shards().max(1) as u64;
+        (c * self.num_vertices as u64 + 2 * (c + 8) * self.num_edges) / p
     }
 
-    fn prepare(&mut self, edges: &[Edge], num_vertices: usize) -> Result<()> {
-        common::fresh_dir(&self.dir)?;
-        let degrees = Degrees::from_edges(num_vertices, edges.iter().copied());
-        self.out_deg = degrees.out_deg.clone();
-        self.intervals = compute_intervals(&degrees.in_deg, EDGES_PER_SHARD);
-        self.num_vertices = num_vertices;
-        self.num_edges = edges.len() as u64;
-
-        let p = self.num_shards();
-        let mut buckets: Vec<Vec<Edge>> = vec![Vec::new(); p];
-        for &(s, d) in edges {
-            let i = common::chunk_of(&self.intervals, d);
-            buckets[i].push((s, d));
-        }
-        for (i, bucket) in buckets.iter().enumerate() {
-            let csr = Csr::from_edges(self.intervals[i], self.intervals[i + 1], bucket);
-            shardfile::save(&csr, &self.shard_path(i))?;
-            // edge-value slots start at 0 (filled on first iteration)
-            common::write_values(&self.evals_path(i), &vec![0.0; csr.num_edges()])?;
-        }
-        Ok(())
-    }
-
-    fn run(&mut self, app: &dyn VertexProgram, max_iters: usize) -> Result<BaselineRun> {
+    /// Typed run over any value lane (see trait docs).
+    pub fn run_typed<V: VertexValue, P: VertexProgram<V> + ?Sized>(
+        &mut self,
+        app: &P,
+        max_iters: usize,
+    ) -> Result<BaselineRun<V>> {
         let n = self.num_vertices;
         let p = self.num_shards();
         let ctx = ProgramContext { num_vertices: n as u64 };
         let t0 = Instant::now();
 
         // initialize the on-disk vertex value file and edge values
-        let init: Vec<f32> = (0..n).map(|v| app.init(v as VertexId, &ctx)).collect();
+        let init: Vec<V> = (0..n).map(|v| app.init(v as VertexId, &ctx)).collect();
         common::write_values(&self.values_path(), &init)?;
         for i in 0..p {
             let csr = shardfile::load(&self.shard_path(i))?;
-            let evals: Vec<f32> = csr.col.iter().map(|&u| init[u as usize]).collect();
+            let evals: Vec<V> = csr.col.iter().map(|&u| init[u as usize]).collect();
             common::write_values(&self.evals_path(i), &evals)?;
         }
         let load_wall = t0.elapsed();
@@ -118,7 +101,7 @@ impl OocEngine for PswEngine {
             let io_before = io::snapshot();
 
             // step 1 reads: the iteration's vertex value file (C·V)
-            let values = common::read_values(&self.values_path())?;
+            let values: Vec<V> = common::read_values(&self.values_path())?;
             let mut new_values = values.clone();
             let mut changed = false;
 
@@ -135,10 +118,12 @@ impl OocEngine for PswEngine {
                 // D·E/P real
                 let csr = shardfile::from_bytes(&common::next_buf(&mut stream, "psw shard")?)?;
                 // C·E/P real
-                let evals =
+                let evals: Vec<V> =
                     common::values_from_bytes(&common::next_buf(&mut stream, "psw evals")?)?;
-                // out-edge sliding-window pass reads the same bytes again
-                io::account_virtual_read((csr.num_edges() * 12) as u64);
+                // out-edge sliding-window pass reads the same bytes again:
+                // C+D per edge with C = the lane width (the paper's C=4 is
+                // the f32 case)
+                io::account_virtual_read((csr.num_edges() * (V::BYTES + 8)) as u64);
                 let (lo, _hi) = (csr.lo, csr.hi);
                 for (row, (v, _)) in csr.iter_rows().enumerate() {
                     let s = csr.row_ptr[row] as usize;
@@ -149,12 +134,14 @@ impl OocEngine for PswEngine {
                         let src = csr.col[k];
                         // GraphChi semantics: the source value comes off the
                         // edge, not a vertex array
-                        acc = reduce
-                            .combine(acc, app.gather(evals[k], self.out_deg[src as usize]));
+                        acc = reduce.combine(
+                            acc,
+                            app.gather(evals[k], self.out_deg[src as usize], csr.weight(k)),
+                        );
                     }
                     let old = values[v as usize];
                     let nv = app.apply(acc, old, &ctx);
-                    if !(nv.is_infinite() && old.is_infinite()) && nv != old {
+                    if V::changed(old, nv, 0.0) {
                         changed = true;
                     }
                     new_values[(lo + row as u32) as usize] = nv;
@@ -175,10 +162,12 @@ impl OocEngine for PswEngine {
             for i in 0..p {
                 let csr =
                     shardfile::from_bytes(&common::next_buf(&mut stream, "psw writeback")?)?;
-                let evals: Vec<f32> =
+                let evals: Vec<V> =
                     csr.col.iter().map(|&u| new_values[u as usize]).collect();
                 common::write_values(&self.evals_path(i), &evals)?;
-                io::account_virtual_write((csr.num_edges() * 20) as u64);
+                // direction-1 structure (D=8) + all of direction 2 (C+D),
+                // lane-width aware (f32 reproduces the paper's 20 B/edge)
+                io::account_virtual_write((csr.num_edges() * (V::BYTES + 16)) as u64);
             }
 
             iter_walls.push(t_iter.elapsed());
@@ -188,7 +177,7 @@ impl OocEngine for PswEngine {
             }
         }
 
-        let values = common::read_values(&self.values_path())?;
+        let values: Vec<V> = common::read_values(&self.values_path())?;
         Ok(BaselineRun {
             values,
             iter_walls,
@@ -196,23 +185,61 @@ impl OocEngine for PswEngine {
             total_wall: t0.elapsed(),
             io: io::snapshot().since(&io_start),
             iter_io,
-            memory_bytes: self.memory_estimate(),
+            memory_bytes: self.memory_estimate_lane(V::BYTES as u64),
             edges_processed,
         })
     }
+}
+
+impl OocEngine for PswEngine {
+    fn name(&self) -> &'static str {
+        "psw(graphchi)"
+    }
+
+    fn prepare_weighted(
+        &mut self,
+        edges: &[Edge],
+        weights: &[Weight],
+        num_vertices: usize,
+    ) -> Result<()> {
+        common::fresh_dir(&self.dir)?;
+        let degrees = Degrees::from_edges(num_vertices, edges.iter().copied());
+        self.out_deg = degrees.out_deg.clone();
+        self.intervals = compute_intervals(&degrees.in_deg, EDGES_PER_SHARD);
+        self.num_vertices = num_vertices;
+        self.num_edges = edges.len() as u64;
+        let p = self.num_shards();
+        let (buckets, wbuckets) =
+            common::bucket_weighted(&self.intervals, p, edges, weights, |(_, d)| d);
+        for (i, bucket) in buckets.iter().enumerate() {
+            let csr = Csr::from_edges_weighted(
+                self.intervals[i],
+                self.intervals[i + 1],
+                bucket,
+                &wbuckets[i],
+            );
+            shardfile::save(&csr, &self.shard_path(i))?;
+            // edge-value slots start at 0 (re-filled from init at run start)
+            common::write_values(&self.evals_path(i), &vec![0.0f32; csr.num_edges()])?;
+        }
+        Ok(())
+    }
+
+    fn run(&mut self, app: &dyn VertexProgram, max_iters: usize) -> Result<BaselineRun> {
+        self.run_typed(app, max_iters)
+    }
 
     /// GraphChi keeps one shard's subgraph in memory: |V|/P vertices and
-    /// their in/out edges — (C·V + 2(C+D)·E)/P.
+    /// their in/out edges — (C·V + 2(C+D)·E)/P with the f32 lane's C=4.
     fn memory_estimate(&self) -> u64 {
-        let p = self.num_shards().max(1) as u64;
-        (4 * self.num_vertices as u64 + 2 * 12 * self.num_edges) / p
+        self.memory_estimate_lane(4)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::apps::PageRank;
+    use crate::apps::{PageRank, WeightedSssp};
     use crate::graph::generator;
 
     #[test]
@@ -244,5 +271,18 @@ mod tests {
         }
         // Table II shape: writes ≈ reads (PSW writes edges back both ways)
         assert!(run.io.bytes_written as f64 > 0.5 * run.io.bytes_read as f64);
+    }
+
+    #[test]
+    fn psw_weighted_sssp_relaxes_through_edge_values() {
+        // weighted path 0 -(0.5)-> 1 -(0.25)-> 2 plus a heavy shortcut
+        let edges = vec![(0u32, 1u32), (1, 2), (0, 2)];
+        let weights = vec![0.5f32, 0.25, 5.0];
+        let mut eng = PswEngine::new(
+            std::env::temp_dir().join(format!("gmp_psw_w_{}", std::process::id())),
+        );
+        eng.prepare_weighted(&edges, &weights, 3).unwrap();
+        let run = eng.run_typed(&WeightedSssp { source: 0 }, 50).unwrap();
+        assert_eq!(run.values, vec![0.0, 0.5, 0.75]);
     }
 }

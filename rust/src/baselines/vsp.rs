@@ -21,10 +21,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::apps::{ProgramContext, VertexProgram};
+use crate::apps::{ProgramContext, VertexProgram, VertexValue};
 use crate::baselines::common::{self, BaselineRun, OocEngine};
 use crate::graph::csr::Csr;
-use crate::graph::{Degrees, Edge, VertexId};
+use crate::graph::{Degrees, Edge, VertexId, Weight};
 use crate::sharding::intervals::compute_intervals;
 use crate::storage::prefetch::ReadAhead;
 use crate::storage::{io, shardfile};
@@ -71,51 +71,26 @@ impl VspEngine {
         let d_avg = self.num_edges as f64 / self.num_vertices.max(1) as f64;
         (1.0 - (-d_avg / p).exp()) * p
     }
-}
 
-impl OocEngine for VspEngine {
-    fn name(&self) -> &'static str {
-        "vsp(venus)"
+    /// Memory model with an explicit lane width `c`: one v-shard + its
+    /// updates — C(2+δ)·V/P.
+    fn memory_estimate_lane(&self, c: u64) -> u64 {
+        let p = self.num_shards().max(1) as f64;
+        (c as f64 * (2.0 + self.delta()) * self.num_vertices as f64 / p) as u64
     }
 
-    fn prepare(&mut self, edges: &[Edge], num_vertices: usize) -> Result<()> {
-        common::fresh_dir(&self.dir)?;
-        let degrees = Degrees::from_edges(num_vertices, edges.iter().copied());
-        self.out_deg = degrees.out_deg;
-        self.intervals = compute_intervals(&degrees.in_deg, EDGES_PER_SHARD);
-        self.num_vertices = num_vertices;
-        self.num_edges = edges.len() as u64;
-
-        let p = self.num_shards();
-        let mut buckets: Vec<Vec<Edge>> = vec![Vec::new(); p];
-        for &(s, d) in edges {
-            buckets[common::chunk_of(&self.intervals, d)].push((s, d));
-        }
-        self.vshard_sizes.clear();
-        for (i, bucket) in buckets.iter().enumerate() {
-            let csr = Csr::from_edges(self.intervals[i], self.intervals[i + 1], bucket);
-            // v-shard = interval + distinct external sources
-            let mut srcs: Vec<u32> = csr.col.clone();
-            srcs.sort_unstable();
-            srcs.dedup();
-            let interval_len = (csr.hi - csr.lo) as usize;
-            let external = srcs
-                .iter()
-                .filter(|&&s| s < csr.lo || s >= csr.hi)
-                .count();
-            self.vshard_sizes.push(interval_len + external);
-            shardfile::save(&csr, &self.gshard_path(i))?;
-        }
-        Ok(())
-    }
-
-    fn run(&mut self, app: &dyn VertexProgram, max_iters: usize) -> Result<BaselineRun> {
+    /// Typed run over any value lane (see trait docs).
+    pub fn run_typed<V: VertexValue, P: VertexProgram<V> + ?Sized>(
+        &mut self,
+        app: &P,
+        max_iters: usize,
+    ) -> Result<BaselineRun<V>> {
         let n = self.num_vertices;
         let p = self.num_shards();
         let ctx = ProgramContext { num_vertices: n as u64 };
         let t0 = Instant::now();
 
-        let init: Vec<f32> = (0..n).map(|v| app.init(v as VertexId, &ctx)).collect();
+        let init: Vec<V> = (0..n).map(|v| app.init(v as VertexId, &ctx)).collect();
         common::write_values(&self.values_path(), &init)?;
         let load_wall = t0.elapsed();
 
@@ -142,20 +117,24 @@ impl OocEngine for VspEngine {
             for i in 0..p {
                 // D·E real
                 let csr = shardfile::from_bytes(&common::next_buf(&mut stream, "vsp gshard")?)?;
-                // v-shard value gather: C·|v-shard| virtual read
-                io::account_virtual_read(4 * self.vshard_sizes[i] as u64);
+                // v-shard value gather: C·|v-shard| virtual read (C = the
+                // lane width; f32 reproduces the paper's C=4)
+                io::account_virtual_read((V::BYTES * self.vshard_sizes[i]) as u64);
                 let reduce = app.reduce();
                 for (row, (v, _)) in csr.iter_rows().enumerate() {
                     let s = csr.row_ptr[row] as usize;
                     let e = csr.row_ptr[row + 1] as usize;
-                    let mut acc = reduce.identity();
-                    for &u in &csr.col[s..e] {
-                        acc = reduce
-                            .combine(acc, app.gather(view[u as usize], self.out_deg[u as usize]));
+                    let mut acc = reduce.identity::<V>();
+                    for k in s..e {
+                        let u = csr.col[k] as usize;
+                        acc = reduce.combine(
+                            acc,
+                            app.gather(view[u], self.out_deg[u], csr.weight(k)),
+                        );
                     }
                     let old = view[v as usize];
                     let nv = app.apply(acc, old, &ctx);
-                    if !(nv.is_infinite() && old.is_infinite()) && nv != old {
+                    if V::changed(old, nv, 0.0) {
                         changed = true;
                     }
                     new_view[v as usize] = nv;
@@ -174,7 +153,7 @@ impl OocEngine for VspEngine {
             }
         }
 
-        let values = common::read_values(&self.values_path())?;
+        let values: Vec<V> = common::read_values(&self.values_path())?;
         Ok(BaselineRun {
             values,
             iter_walls,
@@ -182,22 +161,70 @@ impl OocEngine for VspEngine {
             total_wall: t0.elapsed(),
             io: io::snapshot().since(&io_start),
             iter_io,
-            memory_bytes: self.memory_estimate(),
+            memory_bytes: self.memory_estimate_lane(V::BYTES as u64),
             edges_processed,
         })
     }
+}
 
-    /// VENUS keeps one v-shard + its updates in memory: C(2+δ)·V/P.
+impl OocEngine for VspEngine {
+    fn name(&self) -> &'static str {
+        "vsp(venus)"
+    }
+
+    fn prepare_weighted(
+        &mut self,
+        edges: &[Edge],
+        weights: &[Weight],
+        num_vertices: usize,
+    ) -> Result<()> {
+        common::fresh_dir(&self.dir)?;
+        let degrees = Degrees::from_edges(num_vertices, edges.iter().copied());
+        self.out_deg = degrees.out_deg;
+        self.intervals = compute_intervals(&degrees.in_deg, EDGES_PER_SHARD);
+        self.num_vertices = num_vertices;
+        self.num_edges = edges.len() as u64;
+        let p = self.num_shards();
+        let (buckets, wbuckets) =
+            common::bucket_weighted(&self.intervals, p, edges, weights, |(_, d)| d);
+        self.vshard_sizes.clear();
+        for (i, bucket) in buckets.iter().enumerate() {
+            let csr = Csr::from_edges_weighted(
+                self.intervals[i],
+                self.intervals[i + 1],
+                bucket,
+                &wbuckets[i],
+            );
+            // v-shard = interval + distinct external sources
+            let mut srcs: Vec<u32> = csr.col.clone();
+            srcs.sort_unstable();
+            srcs.dedup();
+            let interval_len = (csr.hi - csr.lo) as usize;
+            let external = srcs
+                .iter()
+                .filter(|&&s| s < csr.lo || s >= csr.hi)
+                .count();
+            self.vshard_sizes.push(interval_len + external);
+            shardfile::save(&csr, &self.gshard_path(i))?;
+        }
+        Ok(())
+    }
+
+    fn run(&mut self, app: &dyn VertexProgram, max_iters: usize) -> Result<BaselineRun> {
+        self.run_typed(app, max_iters)
+    }
+
+    /// VENUS keeps one v-shard + its updates in memory: C(2+δ)·V/P
+    /// (f32 C=4).
     fn memory_estimate(&self) -> u64 {
-        let p = self.num_shards().max(1) as f64;
-        (4.0 * (2.0 + self.delta()) * self.num_vertices as f64 / p) as u64
+        self.memory_estimate_lane(4)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::apps::Wcc;
+    use crate::apps::{LabelProp, Wcc};
     use crate::graph::generator;
 
     #[test]
@@ -225,6 +252,12 @@ mod tests {
         }
         // VSP writes only vertices: far fewer bytes written than read
         assert!(run.io.bytes_written * 4 < run.io.bytes_read);
+
+        // the u64 label lane reaches the same component structure
+        let typed = eng.run_typed(&LabelProp, 100).unwrap();
+        for (v, &label) in typed.values.iter().enumerate() {
+            assert_eq!(label as f32, run.values[v], "lane mismatch at {v}");
+        }
     }
 
     #[test]

@@ -166,7 +166,9 @@ mod tests {
     #[test]
     fn compressing_codecs_shrink_shards() {
         let payload = shard_payload();
-        for codec in [Codec::SnapLite, Codec::Zlib1, Codec::Zlib3, Codec::Zstd1, Codec::DeltaVarint] {
+        let codecs =
+            [Codec::SnapLite, Codec::Zlib1, Codec::Zlib3, Codec::Zstd1, Codec::DeltaVarint];
+        for codec in codecs {
             let c = codec.compress(&payload).unwrap();
             assert!(
                 c.len() < payload.len(),

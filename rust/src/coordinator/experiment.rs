@@ -7,12 +7,17 @@ use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 
-use crate::apps::VertexProgram;
+use crate::apps::{VertexProgram, VertexValue};
 use crate::cache::Codec;
 use crate::coordinator::datasets::Dataset;
 use crate::engine::{Backend, EngineConfig, RunResult, VswEngine};
-use crate::sharding::{preprocess, PreprocessConfig};
+use crate::graph::{generator, Weight};
+use crate::sharding::{preprocess, preprocess_weighted, PreprocessConfig};
 use crate::storage::DatasetDir;
+
+/// Seed for the deterministic synthetic weight lane attached to generated
+/// datasets (`ensure_dataset_weighted` / `dataset_weights` must agree).
+pub const WEIGHT_SEED: u64 = 0xA11CE;
 
 /// Root under which materialized datasets live (override with
 /// `GRAPHMP_DATA_DIR`).
@@ -38,6 +43,43 @@ pub fn ensure_dataset(dataset: &Dataset) -> Result<DatasetDir> {
         &PreprocessConfig::default(),
     )
     .with_context(|| format!("preprocessing {}", dataset.name))?;
+    Ok(dir)
+}
+
+/// Weighted twin of [`ensure_dataset`]: same edges plus the deterministic
+/// synthetic weight lane ([`WEIGHT_SEED`]), materialized under
+/// `<name>-w.gmp`.
+pub fn ensure_dataset_weighted(dataset: &Dataset) -> Result<DatasetDir> {
+    let dir = DatasetDir::new(data_root().join(format!("{}-w.gmp", dataset.name)));
+    if dir.exists() {
+        return Ok(dir);
+    }
+    let edges = dataset.generate();
+    let weights = generator::synth_weights(&edges, WEIGHT_SEED);
+    ensure_dataset_weighted_from(dataset, &edges, &weights)
+}
+
+/// [`ensure_dataset_weighted`] when the caller already holds the generated
+/// edges + weights (saves regenerating a multi-million-edge R-MAT just to
+/// hit the on-disk cache).
+pub fn ensure_dataset_weighted_from(
+    dataset: &Dataset,
+    edges: &[crate::graph::Edge],
+    weights: &[Weight],
+) -> Result<DatasetDir> {
+    let dir = DatasetDir::new(data_root().join(format!("{}-w.gmp", dataset.name)));
+    if dir.exists() {
+        return Ok(dir);
+    }
+    preprocess_weighted(
+        dataset.name,
+        edges,
+        weights,
+        dataset.num_vertices(),
+        &dir,
+        &PreprocessConfig::default(),
+    )
+    .with_context(|| format!("preprocessing weighted {}", dataset.name))?;
     Ok(dir)
 }
 
@@ -167,6 +209,18 @@ pub fn exec_time_figure(
     app: &dyn VertexProgram,
     iters: usize,
 ) -> Result<Vec<ExecRow>> {
+    exec_time_typed(app, iters, false)
+}
+
+/// Typed/weighted generalization of [`exec_time_figure`]: runs any value
+/// lane through every baseline (via `run_typed_by_name`) and both GraphMP
+/// variants; `weighted` attaches the deterministic synthetic weight lane
+/// to both the baselines' layouts and the VSW dataset.
+pub fn exec_time_typed<V: VertexValue>(
+    app: &dyn VertexProgram<V>,
+    iters: usize,
+    weighted: bool,
+) -> Result<Vec<ExecRow>> {
     use crate::baselines;
 
     crate::storage::io::set_throttle(figure_throttle_mbps() << 20);
@@ -175,22 +229,44 @@ pub fn exec_time_figure(
 
     let mut rows = Vec::new();
     for dataset in bench_datasets() {
-        let dir = ensure_dataset(dataset)?;
+        // generate once; both the VSW dataset materialization and the
+        // baselines' layouts reuse the same edge/weight arrays
         let edges = dataset.generate();
+        let weights = if weighted {
+            generator::synth_weights(&edges, WEIGHT_SEED)
+        } else {
+            Vec::new()
+        };
+        let dir = if weighted {
+            ensure_dataset_weighted_from(dataset, &edges, &weights)?
+        } else {
+            ensure_dataset(dataset)?
+        };
 
         for sys in ["psw", "esg", "dsw"] {
-            let work = std::env::temp_dir().join(format!("graphmp_fig_{sys}_{}", dataset.name));
-            let mut eng = baselines::by_name(sys, work)?;
+            let work = std::env::temp_dir().join(format!(
+                "graphmp_fig_{sys}_{}{}",
+                dataset.name,
+                if weighted { "_w" } else { "" }
+            ));
             let t0 = std::time::Instant::now();
-            eng.prepare(&edges, dataset.num_vertices())?;
-            let load = t0.elapsed();
-            let run = eng.run(app, iters)?;
+            let run = baselines::run_typed_by_name(
+                sys,
+                work,
+                &edges,
+                &weights,
+                dataset.num_vertices(),
+                app,
+                iters,
+            )?;
+            // prepare time = everything the call spent outside the run loop
+            let load = t0.elapsed().saturating_sub(run.total_wall);
             let mut walls = run.iter_walls.clone();
             if let Some(first) = walls.first_mut() {
                 *first += load; // paper: first iteration includes loading
             }
             rows.push(ExecRow {
-                system: eng.name().to_string(),
+                system: baselines::display_name(sys)?.to_string(),
                 dataset: dataset.name,
                 total: walls.iter().sum(),
                 iter_walls: walls,

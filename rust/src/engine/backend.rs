@@ -1,19 +1,23 @@
 //! Compute backends for the per-shard update.
 //!
 //! * [`Backend::Native`] — pure-rust segmented reduce+apply; the fast path
-//!   used by paper-scale benches.
+//!   used by paper-scale benches.  Generic over the vertex-value lane.
 //! * [`Backend::Xla`] — the three-layer path: gather in rust, reduce+apply
-//!   in the AOT-compiled Pallas/JAX artifact via PJRT.  Proves the stack
-//!   composes; used by examples, the e2e driver and equivalence tests.
+//!   in the AOT-compiled Pallas/JAX artifact via PJRT.  Artifacts exist for
+//!   the `f32` lane only; typed programs (`u32`/`u64`/`f64` lanes, or
+//!   `KernelKind::None`) fall back to the native loop so every app runs on
+//!   either backend.
 //!
 //! Both produce identical results (`tests/engine_equivalence.rs`).
 
+use std::any::TypeId;
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::apps::{KernelKind, ProgramContext, VertexProgram};
+use crate::apps::{GatherKind, KernelKind, ProgramContext, Reduce, VertexProgram, VertexValue};
 use crate::graph::csr::Csr;
+use crate::graph::Weight;
 use crate::runtime::ShardRuntime;
 
 /// Pluggable shard-update executor.
@@ -32,6 +36,31 @@ impl std::fmt::Debug for Backend {
     }
 }
 
+/// Reinterpret a slice as the same POD lane under a `TypeId` proof.
+/// Returns `None` when `A` and `B` differ, so the cast is total and safe
+/// to call speculatively.
+fn same_lane_slice<A: 'static, B: 'static>(s: &[A]) -> Option<&[B]> {
+    if TypeId::of::<A>() == TypeId::of::<B>() {
+        // SAFETY: A and B are the very same type (TypeId equality above),
+        // so layout, alignment and validity are trivially identical.
+        Some(unsafe { std::slice::from_raw_parts(s.as_ptr() as *const B, s.len()) })
+    } else {
+        None
+    }
+}
+
+/// Owned counterpart of [`same_lane_slice`].
+fn same_lane_vec<A: 'static, B: 'static>(v: Vec<A>) -> Option<Vec<B>> {
+    if TypeId::of::<A>() == TypeId::of::<B>() {
+        let mut v = std::mem::ManuallyDrop::new(v);
+        // SAFETY: identical types (TypeId equality), so pointer, length and
+        // capacity transfer verbatim; ManuallyDrop prevents a double free.
+        Some(unsafe { Vec::from_raw_parts(v.as_mut_ptr() as *mut B, v.len(), v.capacity()) })
+    } else {
+        None
+    }
+}
+
 impl Backend {
     pub fn name(&self) -> &'static str {
         match self {
@@ -45,17 +74,30 @@ impl Backend {
     /// `src` is the full SrcVertexArray, `out_deg` the full out-degree
     /// array; the returned vec has `csr.num_vertices()` entries (the
     /// interval `[csr.lo, csr.hi)`).
-    pub fn process_shard(
+    pub fn process_shard<V: VertexValue, P: VertexProgram<V> + ?Sized>(
         &self,
-        app: &dyn VertexProgram,
+        app: &P,
         csr: &Csr,
-        src: &[f32],
+        src: &[V],
         out_deg: &[u32],
         ctx: &ProgramContext,
-    ) -> Result<Vec<f32>> {
+    ) -> Result<Vec<V>> {
         match self {
             Backend::Native => Ok(native_shard(app, csr, src, out_deg, ctx)),
-            Backend::Xla(rt) => xla_shard(rt, app, csr, src, out_deg, ctx),
+            Backend::Xla(rt) => {
+                // the AOT artifacts cover the f32 lane's three kernels; any
+                // other lane (or KernelKind::None) runs the native loop
+                if app.kernel() != KernelKind::None {
+                    if let (Some(app32), Some(src32)) =
+                        (app.as_f32_program(), same_lane_slice::<V, f32>(src))
+                    {
+                        let out = xla_shard(rt, app32, csr, src32, out_deg, ctx)?;
+                        return Ok(same_lane_vec::<f32, V>(out)
+                            .expect("f32 program on a non-f32 lane"));
+                    }
+                }
+                Ok(native_shard(app, csr, src, out_deg, ctx))
+            }
         }
     }
 }
@@ -64,84 +106,103 @@ impl Backend {
 ///
 /// The generic path pays a virtual `gather` call per edge; the engine's
 /// whole steady state is this loop, so the common (gather, reduce) shapes
-/// are monomorphized below (§Perf: ~2.3× on PageRank).  `apply` runs once
-/// per *vertex* and stays virtual.
-fn native_shard(
-    app: &dyn VertexProgram,
+/// are monomorphized below (§Perf: ~2.3× on PageRank) — now per value
+/// lane, with the weight lane folded in.  `apply` runs once per *vertex*
+/// and stays virtual.
+fn native_shard<V: VertexValue, P: VertexProgram<V> + ?Sized>(
+    app: &P,
     csr: &Csr,
-    src: &[f32],
+    src: &[V],
     out_deg: &[u32],
     ctx: &ProgramContext,
-) -> Vec<f32> {
-    use crate::apps::GatherKind;
+) -> Vec<V> {
     match (app.gather_kind(), app.reduce()) {
-        (GatherKind::RankOverOutDeg, Reduce2::Sum) => specialized_shard(
+        (GatherKind::RankOverOutDeg, Reduce::Sum) => specialized_shard(
             app,
             csr,
             src,
             ctx,
-            0.0,
+            V::vzero(),
             #[inline(always)]
-            |acc, u| {
+            |acc: V, u, _w| {
                 let d = out_deg[u];
                 // branchless dangling-source guard: 0 contribution
-                acc + if d == 0 { 0.0 } else { src[u] / d as f32 }
+                acc.vadd(if d == 0 { V::vzero() } else { src[u].div_deg(d) })
             },
         ),
-        (GatherKind::PlusOne, Reduce2::Min) => specialized_shard(
+        (GatherKind::PlusOne, Reduce::Min) => specialized_shard(
             app,
             csr,
             src,
             ctx,
-            f32::INFINITY,
+            V::vmax_value(),
             #[inline(always)]
-            |acc: f32, u| acc.min(src[u] + 1.0),
+            |acc: V, u, _w| acc.vmin(src[u].vadd(V::vone())),
         ),
-        (GatherKind::Identity, Reduce2::Min) => specialized_shard(
+        (GatherKind::PlusWeight, Reduce::Min) => specialized_shard(
             app,
             csr,
             src,
             ctx,
-            f32::INFINITY,
+            V::vmax_value(),
             #[inline(always)]
-            |acc: f32, u| acc.min(src[u]),
+            |acc: V, u, w| acc.vmin(src[u].vadd(V::from_weight(w))),
         ),
-        (GatherKind::Identity, Reduce2::Sum) => specialized_shard(
+        (GatherKind::Identity, Reduce::Min) => specialized_shard(
             app,
             csr,
             src,
             ctx,
-            0.0,
+            V::vmax_value(),
             #[inline(always)]
-            |acc, u| acc + src[u],
+            |acc: V, u, _w| acc.vmin(src[u]),
+        ),
+        (GatherKind::Identity, Reduce::Sum) => specialized_shard(
+            app,
+            csr,
+            src,
+            ctx,
+            V::vzero(),
+            #[inline(always)]
+            |acc: V, u, _w| acc.vadd(src[u]),
+        ),
+        (GatherKind::Identity, Reduce::Max) => specialized_shard(
+            app,
+            csr,
+            src,
+            ctx,
+            V::vmin_value(),
+            #[inline(always)]
+            |acc: V, u, _w| acc.vmax(src[u]),
         ),
         _ => generic_shard(app, csr, src, out_deg, ctx),
     }
 }
 
-// local alias so the match above reads cleanly
-use crate::apps::Reduce as Reduce2;
-
-/// Monomorphized inner loop: `fold` is inlined per edge.
+/// Monomorphized inner loop: `fold` is inlined per edge and receives the
+/// source index plus the edge's weight.
 #[inline]
-fn specialized_shard<F: Fn(f32, usize) -> f32>(
-    app: &dyn VertexProgram,
+fn specialized_shard<V: VertexValue, P: VertexProgram<V> + ?Sized, F: Fn(V, usize, Weight) -> V>(
+    app: &P,
     csr: &Csr,
-    src: &[f32],
+    src: &[V],
     ctx: &ProgramContext,
-    identity: f32,
+    identity: V,
     fold: F,
-) -> Vec<f32> {
+) -> Vec<V> {
     let n = csr.num_vertices();
     let mut out = Vec::with_capacity(n);
     let row_ptr = &csr.row_ptr;
     let col = &csr.col;
+    let wgt = &csr.wgt;
+    let weighted = !wgt.is_empty();
     for i in 0..n {
         let s = row_ptr[i] as usize;
         let e = row_ptr[i + 1] as usize;
         let mut acc = identity;
-        for &u in &col[s..e] {
-            acc = fold(acc, u as usize);
+        for k in s..e {
+            let w = if weighted { wgt[k] } else { 1.0 };
+            acc = fold(acc, col[k] as usize, w);
         }
         let old = src[csr.lo as usize + i];
         out.push(app.apply(acc, old, ctx));
@@ -149,14 +210,15 @@ fn specialized_shard<F: Fn(f32, usize) -> f32>(
     out
 }
 
-/// Fallback for `GatherKind::Custom` programs.
-fn generic_shard(
-    app: &dyn VertexProgram,
+/// Fallback for `GatherKind::Custom` programs (and the oracle the
+/// specialization tests compare against).
+fn generic_shard<V: VertexValue, P: VertexProgram<V> + ?Sized>(
+    app: &P,
     csr: &Csr,
-    src: &[f32],
+    src: &[V],
     out_deg: &[u32],
     ctx: &ProgramContext,
-) -> Vec<f32> {
+) -> Vec<V> {
     let reduce = app.reduce();
     let n = csr.num_vertices();
     let mut out = Vec::with_capacity(n);
@@ -164,8 +226,9 @@ fn generic_shard(
         let s = csr.row_ptr[i] as usize;
         let e = csr.row_ptr[i + 1] as usize;
         let mut acc = reduce.identity();
-        for &u in &csr.col[s..e] {
-            acc = reduce.combine(acc, app.gather(src[u as usize], out_deg[u as usize]));
+        for k in s..e {
+            let u = csr.col[k] as usize;
+            acc = reduce.combine(acc, app.gather(src[u], out_deg[u], csr.weight(k)));
         }
         let old = src[csr.lo as usize + i];
         out.push(app.apply(acc, old, ctx));
@@ -173,14 +236,14 @@ fn generic_shard(
     out
 }
 
-/// Three-layer shard update: gather contributions on the rust side, run the
-/// AOT artifact for reduce+apply.  Shards wider than the kernel's edge
-/// capacity are chunked; partial reductions chain through the monoid
-/// (sum: add partials via raw `segsum`; min: thread `old` through
+/// Three-layer shard update: gather contributions on the rust side (weights
+/// included), run the AOT artifact for reduce+apply.  Shards wider than the
+/// kernel's edge capacity are chunked; partial reductions chain through the
+/// monoid (sum: add partials via raw `segsum`; min: thread `old` through
 /// `relaxmin` calls).
 fn xla_shard(
     rt: &ShardRuntime,
-    app: &dyn VertexProgram,
+    app: &dyn VertexProgram<f32>,
     csr: &Csr,
     src: &[f32],
     out_deg: &[u32],
@@ -202,8 +265,9 @@ fn xla_shard(
     for i in 0..n {
         let s = csr.row_ptr[i] as usize;
         let e = csr.row_ptr[i + 1] as usize;
-        for &u in &csr.col[s..e] {
-            contrib.push(app.gather(src[u as usize], out_deg[u as usize]));
+        for k in s..e {
+            let u = csr.col[k] as usize;
+            contrib.push(app.gather(src[u], out_deg[u], csr.weight(k)));
             dst_local.push(i as u32);
         }
     }
@@ -253,13 +317,14 @@ fn xla_shard(
             }
             Ok(sums)
         }
+        KernelKind::None => unreachable!("KernelKind::None is filtered in process_shard"),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::apps::{PageRank, Sssp, Wcc};
+    use crate::apps::{LabelProp, MaxDeg, PageRank, Sssp, Wcc, WeightedSssp};
 
     fn fixture() -> (Csr, Vec<f32>, Vec<u32>) {
         // interval [0,4); edges (1,0),(2,0),(3,1),(0,2),(1,2)
@@ -272,14 +337,16 @@ mod tests {
     #[test]
     fn specialized_loops_match_generic_fallback() {
         // the gather_kind hint must never change results: compare each
-        // app's specialized path against generic_shard on a random shard
+        // f32 app's specialized path against generic_shard on a random
+        // weighted shard
         use crate::apps::{Bfs, SpMv};
         use crate::graph::generator;
         let edges: Vec<(u32, u32)> = generator::rmat(9, 3000, generator::RmatParams::default(), 5)
             .into_iter()
             .filter(|&(_, d)| d < 128)
             .collect();
-        let csr = Csr::from_edges(0, 128, &edges);
+        let weights = generator::synth_weights(&edges, 11);
+        let csr = Csr::from_edges_weighted(0, 128, &edges, &weights);
         let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(2);
         let src: Vec<f32> = (0..512).map(|_| rng.next_f32()).collect();
         let out_deg: Vec<u32> = (0..512).map(|_| rng.gen_range(20) as u32).collect();
@@ -290,6 +357,7 @@ mod tests {
             Box::new(Wcc),
             Box::new(Bfs { root: 0 }),
             Box::new(SpMv { seed: 1 }),
+            Box::new(WeightedSssp { source: 0 }),
         ];
         for app in &apps {
             let fast = native_shard(app.as_ref(), &csr, &src, &out_deg, &ctx);
@@ -302,6 +370,29 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn typed_lanes_specialize_identically_too() {
+        // u64 (Identity, Min) and u32 (Custom -> generic) lanes through the
+        // same machinery
+        let csr = Csr::from_edges(0, 4, &[(1, 0), (2, 0), (3, 1), (0, 2), (1, 2)]);
+        let ctx = ProgramContext { num_vertices: 4 };
+        let out_deg = vec![1u32, 2, 1, 1];
+
+        let lp = LabelProp;
+        let src: Vec<u64> = (0..4).collect();
+        let fast = native_shard(&lp, &csr, &src, &out_deg, &ctx);
+        let slow = generic_shard(&lp, &csr, &src, &out_deg, &ctx);
+        assert_eq!(fast, slow);
+        // v0: min(0, {1,2}) = 0; v1: min(1, {3}) = 1; v2: min(2, {0,1}) = 0
+        assert_eq!(fast, vec![0, 1, 0, 3]);
+
+        let md = MaxDeg;
+        let src: Vec<u32> = vec![0, 0, 0, 0];
+        let got = native_shard(&md, &csr, &src, &out_deg, &ctx);
+        // v0 sees sources {1,2} (out_deg 2,1) => 2; v2 sees {0,1} => 2
+        assert_eq!(got, vec![2, 1, 2, 0]);
     }
 
     #[test]
@@ -333,5 +424,32 @@ mod tests {
         // v0: min(old=0, src{1,2}) = 0; v1: min(1, src{3}) = 1;
         // v2: min(2, src{0,1}) = 0; v3: no in-edges => old = 3
         assert_eq!(got, vec![0.0, 1.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn weighted_shard_relaxes_with_real_weights() {
+        // 0 -(0.5)-> 1, 0 -(2.5)-> 2, 1 -(0.25)-> 2 inside [0,3)
+        let csr = Csr::from_edges_weighted(
+            0,
+            3,
+            &[(0, 1), (0, 2), (1, 2)],
+            &[0.5, 2.5, 0.25],
+        );
+        let app = WeightedSssp { source: 0 };
+        let ctx = ProgramContext { num_vertices: 3 };
+        let src = vec![0.0f32, 0.5, f32::INFINITY];
+        let out_deg = vec![2u32, 1, 0];
+        let got = Backend::Native.process_shard(&app, &csr, &src, &out_deg, &ctx).unwrap();
+        // v2: min(0 + 2.5, 0.5 + 0.25) = 0.75
+        assert_eq!(got, vec![0.0, 0.5, 0.75]);
+    }
+
+    #[test]
+    fn lane_casts_are_identity_only() {
+        let xs = [1.0f32, 2.0];
+        assert!(same_lane_slice::<f32, f32>(&xs).is_some());
+        assert!(same_lane_slice::<f32, u32>(&xs).is_none());
+        assert_eq!(same_lane_vec::<f32, f32>(vec![3.0]).unwrap(), vec![3.0]);
+        assert!(same_lane_vec::<f32, f64>(vec![3.0f32]).is_none());
     }
 }

@@ -9,5 +9,5 @@ mod vsw;
 pub use backend::Backend;
 pub use governor::{Governor, GovernorConfig};
 pub use shared::SharedSlice;
-pub use stats::{IterStats, RunResult, RunStats};
+pub use stats::{AnyRunResult, IterStats, RunResult, RunStats};
 pub use vsw::{EngineConfig, VswEngine};

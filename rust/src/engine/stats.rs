@@ -4,6 +4,7 @@
 
 use std::time::Duration;
 
+use crate::graph::AnyValues;
 use crate::storage::io::IoSnapshot;
 
 /// One iteration of Algorithm 1.
@@ -124,10 +125,19 @@ impl RunStats {
     }
 }
 
-/// Final values + statistics.
+/// Final values + statistics, typed by the program's value lane
+/// (defaulting to the classic `f32` so pre-lane code reads unchanged).
 #[derive(Debug, Clone)]
-pub struct RunResult {
-    pub values: Vec<f32>,
+pub struct RunResult<V = f32> {
+    pub values: Vec<V>,
+    pub stats: RunStats,
+}
+
+/// Lane-erased run result — what [`crate::engine::VswEngine::run_any`]
+/// returns for an [`crate::apps::AnyProgram`].
+#[derive(Debug, Clone)]
+pub struct AnyRunResult {
+    pub values: AnyValues,
     pub stats: RunStats,
 }
 

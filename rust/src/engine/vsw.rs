@@ -49,13 +49,13 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::apps::{ProgramContext, VertexProgram};
+use crate::apps::{AnyProgram, ProgramContext, VertexProgram, VertexValue};
 use crate::bloom::BloomFilter;
 use crate::cache::{Codec, ShardCache};
 use crate::engine::backend::Backend;
 use crate::engine::governor::{Governor, GovernorConfig};
 use crate::engine::shared::SharedSlice;
-use crate::engine::stats::{IterStats, RunResult, RunStats};
+use crate::engine::stats::{AnyRunResult, IterStats, RunResult, RunStats};
 use crate::graph::csr::Csr;
 use crate::graph::VertexId;
 use crate::sharding::preprocess::load_bloom;
@@ -256,8 +256,36 @@ impl VswEngine {
         vertex_arrays + degree_arrays + blooms + cache + shard_buffers
     }
 
+    /// Run a lane-erased program (the CLI path): dispatches to the typed
+    /// [`Self::run`] for the program's value lane.
+    pub fn run_any(&self, app: &AnyProgram) -> Result<AnyRunResult> {
+        Ok(match app {
+            AnyProgram::F32(p) => {
+                let r = self.run(p.as_ref())?;
+                AnyRunResult { values: r.values.into(), stats: r.stats }
+            }
+            AnyProgram::F64(p) => {
+                let r = self.run(p.as_ref())?;
+                AnyRunResult { values: r.values.into(), stats: r.stats }
+            }
+            AnyProgram::U32(p) => {
+                let r = self.run(p.as_ref())?;
+                AnyRunResult { values: r.values.into(), stats: r.stats }
+            }
+            AnyProgram::U64(p) => {
+                let r = self.run(p.as_ref())?;
+                AnyRunResult { values: r.values.into(), stats: r.stats }
+            }
+        })
+    }
+
     /// Run `app` to convergence (or the iteration cap): Algorithm 1.
-    pub fn run(&self, app: &dyn VertexProgram) -> Result<RunResult> {
+    /// Generic over the program's value lane `V`; the edge weight lane (if
+    /// the dataset carries one) reaches `gather` through the shard CSRs.
+    pub fn run<V: VertexValue, P: VertexProgram<V> + ?Sized>(
+        &self,
+        app: &P,
+    ) -> Result<RunResult<V>> {
         let t_run = Instant::now();
         let n = self.property.info.num_vertices as usize;
         let p = self.property.num_shards();
@@ -269,7 +297,7 @@ impl VswEngine {
         };
 
         // init(src, dst) — line 1
-        let mut src: Vec<f32> = (0..n).map(|v| app.init(v as VertexId, &ctx)).collect();
+        let mut src: Vec<V> = (0..n).map(|v| app.init(v as VertexId, &ctx)).collect();
         let mut dst = src.clone();
         let mut active: Vec<VertexId> = (0..n as VertexId)
             .filter(|&v| app.initially_active(v, &ctx))
@@ -335,7 +363,7 @@ impl VswEngine {
 
             {
                 let dst_shared = SharedSlice::new(&mut dst);
-                let src_ref: &[f32] = &src;
+                let src_ref: &[V] = &src;
                 let active_ref: &[VertexId] = &active;
                 let cfg = &self.cfg;
                 let blooms = &self.blooms;
@@ -380,12 +408,7 @@ impl VswEngine {
                     for (i, &nv) in new_vals.iter().enumerate() {
                         let v = lo + i as VertexId;
                         let old = src_ref[v as usize];
-                        let changed = if old.is_infinite() && nv.is_infinite() {
-                            false
-                        } else {
-                            (nv - old).abs() > tol
-                        };
-                        if changed {
+                        if V::changed(old, nv, tol as f64) {
                             local_active.push(v);
                         }
                     }
@@ -810,6 +833,43 @@ mod tests {
         assert!(adaptive.governor().high_water() >= 1);
         // fixed engine: high-water == configured depth, estimate unchanged
         assert_eq!(fixed.governor().high_water(), 2);
+    }
+
+    #[test]
+    fn typed_lanes_and_weights_run_end_to_end() {
+        use crate::apps::{AnyProgram, LabelProp, MaxDeg, WeightedSssp};
+        use crate::sharding::preprocess_weighted;
+        // weighted path 0 -(0.5)-> 1 -(0.25)-> 2 -(2.0)-> 3, heavy shortcut
+        let edges = vec![(0u32, 1u32), (1, 2), (2, 3), (0, 3)];
+        let weights = vec![0.5f32, 0.25, 2.0, 9.0];
+        let n = 4;
+        let dir = DatasetDir::new(
+            std::env::temp_dir().join(format!("gmp_vsw_typed_{}", std::process::id())),
+        );
+        let _ = std::fs::remove_dir_all(&dir.root);
+        let cfg = PreprocessConfig { max_edges_per_shard: 2, bloom_fpr: 0.01 };
+        preprocess_weighted("typed", &edges, &weights, n, &dir, &cfg).unwrap();
+        let engine =
+            VswEngine::open(dir, EngineConfig { threads: 2, ..Default::default() }).unwrap();
+
+        // f32 over the weight lane
+        let w = engine.run(&WeightedSssp { source: 0 }).unwrap();
+        assert_eq!(w.values, vec![0.0, 0.5, 0.75, 2.75]);
+
+        // u64 min-label lane
+        let lp: &dyn VertexProgram<u64> = &LabelProp;
+        let l = engine.run(lp).unwrap();
+        assert_eq!(l.values, vec![0, 0, 0, 0]);
+
+        // u32 max lane: out_deg = [2,1,1,0]; every downstream vertex sees 2
+        let md: &dyn VertexProgram<u32> = &MaxDeg;
+        let m = engine.run(md).unwrap();
+        assert_eq!(m.values, vec![0, 2, 2, 2]);
+
+        // the lane-erased CLI path agrees with the typed one
+        let any = AnyProgram::U32(Box::new(MaxDeg));
+        let a = engine.run_any(&any).unwrap();
+        assert_eq!(a.values, crate::graph::AnyValues::U32(m.values));
     }
 
     #[test]

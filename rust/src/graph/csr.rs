@@ -5,10 +5,10 @@
 //! shard's edges by destination): `row_ptr[v-lo] .. row_ptr[v-lo+1]` indexes
 //! into `col`, which holds source vertex ids.
 
-use crate::graph::{Edge, VertexId};
+use crate::graph::{Edge, VertexId, Weight};
 
 /// CSR over the interval `[lo, hi)`. `col` holds source ids of in-edges.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Csr {
     pub lo: VertexId,
     pub hi: VertexId,
@@ -16,13 +16,30 @@ pub struct Csr {
     pub row_ptr: Vec<u32>,
     /// Source ids, grouped by destination, ascending destination.
     pub col: Vec<VertexId>,
+    /// Per-edge weights, parallel to `col`.  Empty ⇒ unweighted (every
+    /// `val(u,v) = 1`, the conference paper's graphs).
+    pub wgt: Vec<Weight>,
 }
 
 impl Csr {
     /// Build from edges whose destinations all lie in `[lo, hi)`.
     /// Edges need not be sorted; counting sort by destination is used
-    /// (O(|E| + |interval|)).
-    pub fn from_edges(lo: VertexId, hi: VertexId, edges: &[Edge]) -> Self {
+    /// (O(|E| + |interval|)).  `weights` must be empty (unweighted) or
+    /// parallel to `edges`; it is permuted alongside `col`.
+    pub fn from_edges_weighted(
+        lo: VertexId,
+        hi: VertexId,
+        edges: &[Edge],
+        weights: &[Weight],
+    ) -> Self {
+        // hard assert (not debug): a short weights slice would otherwise
+        // surface as an opaque out-of-bounds panic mid-permutation
+        assert!(
+            weights.is_empty() || weights.len() == edges.len(),
+            "weights must be empty or parallel to edges ({} vs {})",
+            weights.len(),
+            edges.len()
+        );
         let n = (hi - lo) as usize;
         let mut counts = vec![0u32; n + 1];
         for &(_, d) in edges {
@@ -35,12 +52,25 @@ impl Csr {
         let row_ptr = counts.clone();
         let mut cursor = row_ptr.clone();
         let mut col = vec![0 as VertexId; edges.len()];
-        for &(s, d) in edges {
+        let mut wgt = if weights.is_empty() {
+            Vec::new()
+        } else {
+            vec![0.0 as Weight; edges.len()]
+        };
+        for (k, &(s, d)) in edges.iter().enumerate() {
             let slot = &mut cursor[(d - lo) as usize];
             col[*slot as usize] = s;
+            if !weights.is_empty() {
+                wgt[*slot as usize] = weights[k];
+            }
             *slot += 1;
         }
-        Csr { lo, hi, row_ptr, col }
+        Csr { lo, hi, row_ptr, col, wgt }
+    }
+
+    /// Unweighted construction (unit `val(u,v)`).
+    pub fn from_edges(lo: VertexId, hi: VertexId, edges: &[Edge]) -> Self {
+        Self::from_edges_weighted(lo, hi, edges, &[])
     }
 
     /// Number of vertices in the interval.
@@ -52,11 +82,37 @@ impl Csr {
         self.col.len()
     }
 
+    /// Does this shard carry an explicit weight lane?
+    pub fn is_weighted(&self) -> bool {
+        !self.wgt.is_empty()
+    }
+
+    /// Weight of edge slot `k` (an index into `col`); 1 when unweighted.
+    #[inline]
+    pub fn weight(&self, k: usize) -> Weight {
+        if self.wgt.is_empty() {
+            1.0
+        } else {
+            self.wgt[k]
+        }
+    }
+
     /// Incoming adjacency list of global vertex `v` (must be in interval).
     pub fn in_neighbors(&self, v: VertexId) -> &[VertexId] {
         debug_assert!(v >= self.lo && v < self.hi);
         let i = (v - self.lo) as usize;
         &self.col[self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize]
+    }
+
+    /// Weights of `v`'s in-edges, parallel to [`Self::in_neighbors`];
+    /// empty when the shard is unweighted.
+    pub fn in_weights(&self, v: VertexId) -> &[Weight] {
+        if self.wgt.is_empty() {
+            return &[];
+        }
+        debug_assert!(v >= self.lo && v < self.hi);
+        let i = (v - self.lo) as usize;
+        &self.wgt[self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize]
     }
 
     /// Iterate `(global_dst, in_neighbors)` pairs.
@@ -74,6 +130,19 @@ impl Csr {
             .collect()
     }
 
+    /// Flatten to `(src, dst, weight)` triples (unit weights when
+    /// unweighted) — for tests / round-trips.
+    pub fn to_wedges(&self) -> Vec<(VertexId, VertexId, Weight)> {
+        let mut out = Vec::with_capacity(self.num_edges());
+        for i in 0..self.num_vertices() {
+            let v = self.lo + i as VertexId;
+            for k in self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize {
+                out.push((self.col[k], v, self.weight(k)));
+            }
+        }
+        out
+    }
+
     /// Structural validation (used after deserialization).
     pub fn validate(&self) -> anyhow::Result<()> {
         let n = self.num_vertices();
@@ -86,6 +155,10 @@ impl Csr {
         anyhow::ensure!(
             self.row_ptr.windows(2).all(|w| w[0] <= w[1]),
             "row_ptr not monotone"
+        );
+        anyhow::ensure!(
+            self.wgt.is_empty() || self.wgt.len() == self.col.len(),
+            "weight lane length != col length"
         );
         Ok(())
     }
@@ -176,6 +249,35 @@ mod tests {
             want.sort_unstable();
             assert_eq!(back, want);
         });
+    }
+
+    #[test]
+    fn weighted_csr_permutes_weights_with_sources() {
+        // interval [0,3): weights must follow their edges through the
+        // counting sort
+        let edges = vec![(5, 2), (1, 0), (9, 2), (4, 1), (2, 0)];
+        let weights = vec![0.5, 1.5, 2.5, 3.5, 4.5];
+        let csr = Csr::from_edges_weighted(0, 3, &edges, &weights);
+        csr.validate().unwrap();
+        assert!(csr.is_weighted());
+        let mut triples = csr.to_wedges();
+        triples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut want: Vec<(u32, u32, f32)> = edges
+            .iter()
+            .zip(&weights)
+            .map(|(&(s, d), &w)| (s, d, w))
+            .collect();
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(triples, want);
+        // per-row weight slices stay parallel to in_neighbors
+        for v in 0..3u32 {
+            assert_eq!(csr.in_neighbors(v).len(), csr.in_weights(v).len());
+        }
+        // unweighted shards report unit weights
+        let u = Csr::from_edges(0, 3, &edges);
+        assert!(!u.is_weighted());
+        assert_eq!(u.weight(0), 1.0);
+        assert!(u.in_weights(1).is_empty());
     }
 
     #[test]

@@ -1,10 +1,13 @@
 //! Edge-list file formats.
 //!
-//! * **Text** — one `src dst` pair per line (whitespace separated, `#`
-//!   comments), the lingua franca of SNAP/LAW downloads; the preprocessing
-//!   pipeline ingests this.
-//! * **Binary** — `GMEL` magic + u64 count + little-endian `u32,u32` pairs +
-//!   CRC32; compact interchange between the generator and the preprocessor.
+//! * **Text** — one `src dst [weight]` triple per line (whitespace
+//!   separated, `#` comments), the lingua franca of SNAP/LAW downloads; the
+//!   preprocessing pipeline ingests this.  The weight column is optional
+//!   and must be present on every edge line or none.
+//! * **Binary** — `GMEL` magic + u64 count + little-endian records + CRC32;
+//!   compact interchange between the generator and the preprocessor.
+//!   Version 1 records are `u32,u32` pairs (unweighted); version 2 records
+//!   append an `f32` weight (`u32,u32,f32`).  Readers accept both.
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
@@ -12,10 +15,12 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::graph::Edge;
+use crate::graph::{Edge, Weight};
 
 const BIN_MAGIC: &[u8; 4] = b"GMEL";
-const BIN_VERSION: u32 = 1;
+/// v1 = 8-byte (src,dst) records; v2 = 12-byte (src,dst,weight) records.
+const BIN_VERSION_UNWEIGHTED: u32 = 1;
+const BIN_VERSION_WEIGHTED: u32 = 2;
 
 /// Write edges as text (`src<TAB>dst` per line).
 pub fn write_text(path: &Path, edges: &[Edge]) -> Result<()> {
@@ -28,10 +33,32 @@ pub fn write_text(path: &Path, edges: &[Edge]) -> Result<()> {
     Ok(())
 }
 
-/// Read a text edge list; tolerates comments and blank lines.
+/// Write edges as weighted text (`src<TAB>dst<TAB>weight` per line);
+/// `weights` must be parallel to `edges`.
+pub fn write_text_weighted(path: &Path, edges: &[Edge], weights: &[Weight]) -> Result<()> {
+    anyhow::ensure!(weights.len() == edges.len(), "weights must be parallel to edges");
+    let mut w = BufWriter::new(File::create(path)?);
+    writeln!(w, "# graphmp edge list: src\tdst\tweight")?;
+    for (&(s, d), &wt) in edges.iter().zip(weights) {
+        writeln!(w, "{s}\t{d}\t{wt}")?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a text edge list; tolerates comments and blank lines, ignores a
+/// weight column if present.
 pub fn read_text(path: &Path) -> Result<Vec<Edge>> {
+    Ok(read_text_weighted(path)?.0)
+}
+
+/// Read a text edge list with its optional weight column.  Returns
+/// `(edges, weights)`; `weights` is empty when no line carries a third
+/// field.  Mixing weighted and unweighted lines is an error.
+pub fn read_text_weighted(path: &Path) -> Result<(Vec<Edge>, Vec<Weight>)> {
     let r = BufReader::new(File::open(path).with_context(|| path.display().to_string())?);
     let mut edges = Vec::new();
+    let mut weights = Vec::new();
     for (lineno, line) in r.lines().enumerate() {
         let line = line?;
         let t = line.trim();
@@ -44,23 +71,46 @@ pub fn read_text(path: &Path) -> Result<Vec<Edge>> {
         };
         let s: u32 = a.parse().with_context(|| format!("line {}: src", lineno + 1))?;
         let d: u32 = b.parse().with_context(|| format!("line {}: dst", lineno + 1))?;
+        if let Some(c) = it.next() {
+            let w: Weight =
+                c.parse().with_context(|| format!("line {}: weight", lineno + 1))?;
+            anyhow::ensure!(
+                weights.len() == edges.len(),
+                "line {}: weighted line in an unweighted list",
+                lineno + 1
+            );
+            weights.push(w);
+        } else {
+            anyhow::ensure!(
+                weights.is_empty(),
+                "line {}: unweighted line in a weighted list",
+                lineno + 1
+            );
+        }
         edges.push((s, d));
     }
-    Ok(edges)
+    Ok((edges, weights))
 }
 
-/// Write the binary edge-list format.
-pub fn write_binary(path: &Path, edges: &[Edge]) -> Result<()> {
+fn write_binary_impl(path: &Path, edges: &[Edge], weights: &[Weight]) -> Result<()> {
+    let weighted = !weights.is_empty();
+    if weighted {
+        anyhow::ensure!(weights.len() == edges.len(), "weights must be parallel to edges");
+    }
+    let version = if weighted { BIN_VERSION_WEIGHTED } else { BIN_VERSION_UNWEIGHTED };
     let mut w = BufWriter::new(File::create(path)?);
     w.write_all(BIN_MAGIC)?;
-    w.write_all(&BIN_VERSION.to_le_bytes())?;
+    w.write_all(&version.to_le_bytes())?;
     w.write_all(&(edges.len() as u64).to_le_bytes())?;
     let mut crc = crc32fast::Hasher::new();
     // chunked buffer to keep syscalls and hasher updates amortized
     let mut buf = Vec::with_capacity(8 * 1024);
-    for &(s, d) in edges {
+    for (k, &(s, d)) in edges.iter().enumerate() {
         buf.extend_from_slice(&s.to_le_bytes());
         buf.extend_from_slice(&d.to_le_bytes());
+        if weighted {
+            buf.extend_from_slice(&weights[k].to_le_bytes());
+        }
         if buf.len() >= 8 * 1024 {
             crc.update(&buf);
             w.write_all(&buf)?;
@@ -76,47 +126,48 @@ pub fn write_binary(path: &Path, edges: &[Edge]) -> Result<()> {
     Ok(())
 }
 
-/// Read the binary edge-list format, verifying magic/version/CRC.
-pub fn read_binary(path: &Path) -> Result<Vec<Edge>> {
-    let mut r = BufReader::new(File::open(path).with_context(|| path.display().to_string())?);
-    let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
-    if &magic != BIN_MAGIC {
-        bail!("{}: bad magic {:?}", path.display(), magic);
-    }
-    let mut u32buf = [0u8; 4];
-    r.read_exact(&mut u32buf)?;
-    let version = u32::from_le_bytes(u32buf);
-    if version != BIN_VERSION {
-        bail!("{}: unsupported version {version}", path.display());
-    }
-    let mut u64buf = [0u8; 8];
-    r.read_exact(&mut u64buf)?;
-    let n = u64::from_le_bytes(u64buf) as usize;
-    let mut payload = vec![0u8; n * 8];
-    r.read_exact(&mut payload)?;
-    r.read_exact(&mut u32buf)?;
-    let want_crc = u32::from_le_bytes(u32buf);
-    let mut crc = crc32fast::Hasher::new();
-    crc.update(&payload);
-    if crc.finalize() != want_crc {
-        bail!("{}: CRC mismatch (corrupt edge list)", path.display());
-    }
-    let mut edges = Vec::with_capacity(n);
-    for chunk in payload.chunks_exact(8) {
-        let s = u32::from_le_bytes(chunk[0..4].try_into().unwrap());
-        let d = u32::from_le_bytes(chunk[4..8].try_into().unwrap());
-        edges.push((s, d));
-    }
-    Ok(edges)
+/// Write the binary edge-list format (v1, unweighted).
+pub fn write_binary(path: &Path, edges: &[Edge]) -> Result<()> {
+    write_binary_impl(path, edges, &[])
 }
 
-/// Streaming binary-edge-list reader: yields edges without materializing
-/// the whole list (the external-memory preprocessing path).  CRC is
-/// verified incrementally; a corrupt tail surfaces as an `Err` item.
+/// Write the weighted binary edge-list format (v2).
+pub fn write_binary_weighted(path: &Path, edges: &[Edge], weights: &[Weight]) -> Result<()> {
+    anyhow::ensure!(!weights.is_empty(), "use write_binary for unweighted lists");
+    write_binary_impl(path, edges, weights)
+}
+
+/// Read the binary edge-list format (either version), discarding weights.
+pub fn read_binary(path: &Path) -> Result<Vec<Edge>> {
+    Ok(read_binary_weighted(path)?.0)
+}
+
+/// Read the binary edge-list format, verifying magic/version/CRC.
+/// Returns `(edges, weights)`; `weights` is empty for v1 files.
+pub fn read_binary_weighted(path: &Path) -> Result<(Vec<Edge>, Vec<Weight>)> {
+    let mut stream = BinaryEdgeStream::open(path)?;
+    let weighted = stream.weighted();
+    let n = stream.len_hint() as usize;
+    let mut edges = Vec::with_capacity(n);
+    let mut weights = Vec::with_capacity(if weighted { n } else { 0 });
+    for item in &mut stream {
+        let ((s, d), w) = item?;
+        edges.push((s, d));
+        if weighted {
+            weights.push(w);
+        }
+    }
+    Ok((edges, weights))
+}
+
+/// Streaming binary-edge-list reader: yields `(edge, weight)` items without
+/// materializing the whole list (the external-memory preprocessing path).
+/// v1 files yield unit weights.  CRC is verified incrementally; a corrupt
+/// tail surfaces as an `Err` item.
 pub struct BinaryEdgeStream {
     r: BufReader<File>,
     remaining: u64,
+    weighted: bool,
     crc: crc32fast::Hasher,
     path: std::path::PathBuf,
 }
@@ -131,14 +182,18 @@ impl BinaryEdgeStream {
         }
         let mut b4 = [0u8; 4];
         r.read_exact(&mut b4)?;
-        if u32::from_le_bytes(b4) != BIN_VERSION {
-            bail!("{}: unsupported version", path.display());
-        }
+        let version = u32::from_le_bytes(b4);
+        let weighted = match version {
+            BIN_VERSION_UNWEIGHTED => false,
+            BIN_VERSION_WEIGHTED => true,
+            other => bail!("{}: unsupported version {other}", path.display()),
+        };
         let mut b8 = [0u8; 8];
         r.read_exact(&mut b8)?;
         Ok(Self {
             r,
             remaining: u64::from_le_bytes(b8),
+            weighted,
             crc: crc32fast::Hasher::new(),
             path: path.to_path_buf(),
         })
@@ -148,10 +203,15 @@ impl BinaryEdgeStream {
     pub fn len_hint(&self) -> u64 {
         self.remaining
     }
+
+    /// Does this file carry a weight lane (v2)?
+    pub fn weighted(&self) -> bool {
+        self.weighted
+    }
 }
 
 impl Iterator for BinaryEdgeStream {
-    type Item = Result<Edge>;
+    type Item = Result<(Edge, Weight)>;
 
     fn next(&mut self) -> Option<Self::Item> {
         if self.remaining == 0 {
@@ -174,15 +234,20 @@ impl Iterator for BinaryEdgeStream {
         if self.remaining == u64::MAX {
             return None;
         }
-        let mut buf = [0u8; 8];
-        match self.r.read_exact(&mut buf) {
+        let mut buf = [0u8; 12];
+        let rec = if self.weighted { 12 } else { 8 };
+        match self.r.read_exact(&mut buf[..rec]) {
             Ok(()) => {
-                self.crc.update(&buf);
+                self.crc.update(&buf[..rec]);
                 self.remaining -= 1;
-                Some(Ok((
-                    u32::from_le_bytes(buf[0..4].try_into().unwrap()),
-                    u32::from_le_bytes(buf[4..8].try_into().unwrap()),
-                )))
+                let s = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+                let d = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+                let w = if self.weighted {
+                    f32::from_le_bytes(buf[8..12].try_into().unwrap())
+                } else {
+                    1.0
+                };
+                Some(Ok(((s, d), w)))
             }
             Err(e) => {
                 self.remaining = u64::MAX;
@@ -192,16 +257,22 @@ impl Iterator for BinaryEdgeStream {
     }
 }
 
-/// Auto-detect format by magic bytes.
+/// Auto-detect format by magic bytes, discarding any weight lane.
 pub fn read_auto(path: &Path) -> Result<Vec<Edge>> {
+    Ok(read_auto_weighted(path)?.0)
+}
+
+/// Auto-detect format by magic bytes, keeping the weight lane when the
+/// file carries one (`weights` empty otherwise).
+pub fn read_auto_weighted(path: &Path) -> Result<(Vec<Edge>, Vec<Weight>)> {
     let mut f = File::open(path).with_context(|| path.display().to_string())?;
     let mut magic = [0u8; 4];
     let got = f.read(&mut magic)?;
     drop(f);
     if got == 4 && &magic == BIN_MAGIC {
-        read_binary(path)
+        read_binary_weighted(path)
     } else {
-        read_text(path)
+        read_text_weighted(path)
     }
 }
 
@@ -222,6 +293,30 @@ mod tests {
         write_text(&p, &edges).unwrap();
         assert_eq!(read_text(&p).unwrap(), edges);
         assert_eq!(read_auto(&p).unwrap(), edges);
+    }
+
+    #[test]
+    fn weighted_text_roundtrip() {
+        let p = tmp("tw.txt");
+        let edges = vec![(0, 1), (42, 7)];
+        let weights = vec![0.5, 2.25];
+        write_text_weighted(&p, &edges, &weights).unwrap();
+        let (e, w) = read_text_weighted(&p).unwrap();
+        assert_eq!(e, edges);
+        assert_eq!(w, weights);
+        let (e, w) = read_auto_weighted(&p).unwrap();
+        assert_eq!((e, w), (edges.clone(), weights));
+        // unweighted readers still parse it, dropping the lane
+        assert_eq!(read_text(&p).unwrap(), edges);
+    }
+
+    #[test]
+    fn mixed_weight_columns_rejected() {
+        let p = tmp("mix.txt");
+        std::fs::write(&p, "1 2 0.5\n3 4\n").unwrap();
+        assert!(read_text_weighted(&p).is_err());
+        std::fs::write(&p, "1 2\n3 4 0.5\n").unwrap();
+        assert!(read_text_weighted(&p).is_err());
     }
 
     #[test]
@@ -247,6 +342,23 @@ mod tests {
         write_binary(&p, &edges).unwrap();
         assert_eq!(read_binary(&p).unwrap(), edges);
         assert_eq!(read_auto(&p).unwrap(), edges);
+        let (_, w) = read_binary_weighted(&p).unwrap();
+        assert!(w.is_empty(), "v1 files have no weight lane");
+    }
+
+    #[test]
+    fn weighted_binary_roundtrip_and_auto() {
+        let p = tmp("bw.bin");
+        let edges: Vec<Edge> = (0..2000u32).map(|i| (i, (i * 3) % 2000)).collect();
+        let weights: Vec<f32> = (0..2000).map(|i| ((i % 8) + 1) as f32 * 0.25).collect();
+        write_binary_weighted(&p, &edges, &weights).unwrap();
+        let (e, w) = read_binary_weighted(&p).unwrap();
+        assert_eq!(e, edges);
+        assert_eq!(w, weights);
+        let (e, w) = read_auto_weighted(&p).unwrap();
+        assert_eq!((e.len(), w.len()), (2000, 2000));
+        // unweighted reader drops the lane but keeps the edges
+        assert_eq!(read_binary(&p).unwrap(), edges);
     }
 
     #[test]
@@ -267,8 +379,24 @@ mod tests {
         write_binary(&p, &edges).unwrap();
         let s = BinaryEdgeStream::open(&p).unwrap();
         assert_eq!(s.len_hint(), 3000);
-        let streamed: Vec<Edge> = s.map(|e| e.unwrap()).collect();
+        assert!(!s.weighted());
+        let streamed: Vec<Edge> = s.map(|e| e.unwrap().0).collect();
         assert_eq!(streamed, edges);
+    }
+
+    #[test]
+    fn weighted_stream_yields_weights() {
+        let p = tmp("sw.bin");
+        let edges: Vec<Edge> = vec![(1, 2), (3, 4), (5, 6)];
+        let weights = vec![0.25f32, 1.5, 2.0];
+        write_binary_weighted(&p, &edges, &weights).unwrap();
+        let s = BinaryEdgeStream::open(&p).unwrap();
+        assert!(s.weighted());
+        let items: Vec<(Edge, Weight)> = s.map(|e| e.unwrap()).collect();
+        assert_eq!(
+            items,
+            edges.iter().copied().zip(weights.iter().copied()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

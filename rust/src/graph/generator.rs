@@ -8,8 +8,24 @@
 //! * [`grid2d`] — 2-D lattice "road network" for the SSSP example (long
 //!   diameter, low degree — the opposite regime from webgraphs).
 
-use crate::graph::{Edge, VertexId};
+use crate::graph::{Edge, VertexId, Weight};
+use crate::util::hash::hash64_seeded;
 use crate::util::rng::Xoshiro256;
+
+/// Deterministic synthetic edge weights for a generated graph: a pure
+/// function of `(src, dst, seed)`, so every engine, driver and the Python
+/// fixture port derive the identical weight for the same edge.  Weights are
+/// dyadic rationals in `{0.25, 0.5, …, 2.0}` — exactly representable in
+/// `f32`, which keeps cross-engine comparisons bit-sharp.
+pub fn synth_weights(edges: &[Edge], seed: u64) -> Vec<Weight> {
+    edges
+        .iter()
+        .map(|&(s, d)| {
+            let h = hash64_seeded(((s as u64) << 32) | d as u64, seed);
+            (1 + (h & 7)) as Weight * 0.25
+        })
+        .collect()
+}
 
 /// R-MAT parameters.
 #[derive(Debug, Clone, Copy)]
@@ -171,6 +187,20 @@ mod tests {
         let d = Degrees::from_edges(4096, edges.iter().copied());
         let max_in = *d.in_deg.iter().max().unwrap();
         assert!(max_in < 50, "ER max in-degree should be near-mean, got {max_in}");
+    }
+
+    #[test]
+    fn synth_weights_deterministic_dyadic_positive() {
+        let edges = rmat(8, 1000, RmatParams::default(), 3);
+        let w1 = synth_weights(&edges, 11);
+        let w2 = synth_weights(&edges, 11);
+        assert_eq!(w1, w2, "same seed, same weights");
+        assert_eq!(w1.len(), edges.len());
+        assert!(w1.iter().all(|&w| (0.25..=2.0).contains(&w)));
+        // dyadic: 4*w is a small integer, exactly representable in f32
+        assert!(w1.iter().all(|&w| (w * 4.0).fract() == 0.0));
+        let w3 = synth_weights(&edges, 12);
+        assert_ne!(w1, w3, "different seed differs");
     }
 
     #[test]

@@ -9,14 +9,25 @@
 pub mod csr;
 pub mod edgelist;
 pub mod generator;
+pub mod value;
+
+pub use value::{AnyValues, Lane, VertexValue};
 
 /// Vertex identifier. 32 bits covers the scaled datasets (≤ a few million
 /// vertices) and matches the paper's CSR `col` array element size (D=4..8B).
 pub type VertexId = u32;
 
-/// A directed edge `(src, dst)`. Graphs are unweighted (paper §II-A:
-/// `val(u,v) = 1` for all edges).
+/// A directed edge `(src, dst)`. The conference paper's graphs are
+/// unweighted (§II-A: `val(u,v) = 1`); the optional per-edge weight lane
+/// ([`Weight`]) carries `val(u,v)` when a workload needs it.
 pub type Edge = (VertexId, VertexId);
+
+/// Per-edge weight lane. `f32` everywhere: it is `val(u,v)` in the paper's
+/// notation, and programs on wider lanes lift it via
+/// [`VertexValue::from_weight`].  An empty weight array means "unit weights"
+/// (every `val(u,v) = 1`), which reproduces the unweighted semantics
+/// bit-for-bit.
+pub type Weight = f32;
 
 /// Basic graph statistics gathered by the preprocessing scan (step 1 of
 /// §II-B) and stored in the property file.

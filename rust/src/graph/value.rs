@@ -1,0 +1,490 @@
+//! Typed vertex-state lanes — the `VertexValue` POD trait.
+//!
+//! The paper's user API (§II-C, Algorithm 2) is `Update(v, SrcVertexArray)`
+//! over an *arbitrary* vertex array; nothing in the model fixes the element
+//! type to `f32`.  This module opens that axis: a vertex program's state is
+//! any [`VertexValue`] — a plain-old-data scalar with a little-endian wire
+//! format, the monoid elements the engine's reductions need (zero/min/max
+//! identities, add/min/max combines), and the convergence predicate the
+//! active-set scan uses.  Four lanes are provided: `u32`, `u64`, `f32`,
+//! `f64`.
+//!
+//! Everything downstream is generic over the lane: `storage::format` /
+//! `storage::vertexinfo` serialize any lane, `engine::backend`'s
+//! monomorphized gather loops fold any lane, and the baselines' raw value
+//! files hold `V::BYTES` per vertex.  [`AnyValues`] is the lane-tagged
+//! dynamic counterpart used where a single runtime type must carry any lane
+//! (the CLI, persisted vertex values).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::graph::Weight;
+
+/// Which scalar lane a value belongs to.  The `tag` is the on-disk
+/// discriminant (vertexinfo v2); never renumber existing lanes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lane {
+    U32,
+    U64,
+    F32,
+    F64,
+}
+
+impl Lane {
+    /// All lanes, for fuzz/conformance sweeps.
+    pub const ALL: [Lane; 4] = [Lane::U32, Lane::U64, Lane::F32, Lane::F64];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::U32 => "u32",
+            Lane::U64 => "u64",
+            Lane::F32 => "f32",
+            Lane::F64 => "f64",
+        }
+    }
+
+    /// On-disk discriminant.
+    pub fn tag(self) -> u32 {
+        match self {
+            Lane::U32 => 1,
+            Lane::U64 => 2,
+            Lane::F32 => 3,
+            Lane::F64 => 4,
+        }
+    }
+
+    pub fn from_tag(tag: u32) -> Result<Lane> {
+        Ok(match tag {
+            1 => Lane::U32,
+            2 => Lane::U64,
+            3 => Lane::F32,
+            4 => Lane::F64,
+            other => bail!("unknown value-lane tag {other}"),
+        })
+    }
+
+    /// Bytes per element in this lane.
+    pub fn bytes(self) -> usize {
+        match self {
+            Lane::U32 | Lane::F32 => 4,
+            Lane::U64 | Lane::F64 => 8,
+        }
+    }
+}
+
+/// A plain-old-data vertex value: fixed-width little-endian wire format,
+/// the monoid pieces the engine's `Sum`/`Min`/`Max` reductions need, and
+/// the convergence predicate for active-set tracking.
+///
+/// The `v*`-prefixed method names avoid resolution clashes with the
+/// `std::ops`/`Ord` methods of the same spelling at call sites that import
+/// both.
+pub trait VertexValue:
+    Copy + PartialEq + Send + Sync + std::fmt::Debug + std::fmt::Display + 'static
+{
+    const LANE: Lane;
+    /// Wire width; equals `Self::LANE.bytes()`.
+    const BYTES: usize;
+
+    /// Additive identity (`Reduce::Sum`).
+    fn vzero() -> Self;
+    /// Unit step (`GatherKind::PlusOne`).
+    fn vone() -> Self;
+    /// `Reduce::Min`'s identity (`+inf` for floats, `MAX` for ints).
+    fn vmax_value() -> Self;
+    /// `Reduce::Max`'s identity (`-inf` for floats, `MIN` for ints).
+    fn vmin_value() -> Self;
+
+    fn vadd(self, other: Self) -> Self;
+    fn vmin(self, other: Self) -> Self;
+    fn vmax(self, other: Self) -> Self;
+
+    /// Lift an edge weight into this lane (`GatherKind::PlusWeight`).
+    fn from_weight(w: Weight) -> Self;
+    /// `self / deg` — PageRank's per-out-edge share.  Integer lanes use
+    /// integer division (well-defined, though no integer app divides).
+    /// `deg` must be non-zero.
+    fn div_deg(self, deg: u32) -> Self;
+
+    /// Did the value change beyond `tol`?  Float lanes treat two infinities
+    /// as unchanged and compare `|new - old| > tol` (bit-compatible with
+    /// the engine's historical f32 predicate); integer lanes ignore `tol`
+    /// and compare equality.
+    fn changed(old: Self, new: Self, tol: f64) -> bool;
+
+    /// Lossy f64 view, for tolerance-based comparisons and display.
+    fn approx_f64(self) -> f64;
+
+    /// Append the little-endian wire form.
+    fn write_le(self, out: &mut Vec<u8>);
+    /// Read from exactly `Self::BYTES` bytes.
+    fn read_le(buf: &[u8]) -> Self;
+}
+
+impl VertexValue for u32 {
+    const LANE: Lane = Lane::U32;
+    const BYTES: usize = 4;
+
+    fn vzero() -> Self {
+        0
+    }
+    fn vone() -> Self {
+        1
+    }
+    fn vmax_value() -> Self {
+        u32::MAX
+    }
+    fn vmin_value() -> Self {
+        u32::MIN
+    }
+    fn vadd(self, other: Self) -> Self {
+        self.wrapping_add(other)
+    }
+    fn vmin(self, other: Self) -> Self {
+        Ord::min(self, other)
+    }
+    fn vmax(self, other: Self) -> Self {
+        Ord::max(self, other)
+    }
+    fn from_weight(w: Weight) -> Self {
+        w as u32
+    }
+    fn div_deg(self, deg: u32) -> Self {
+        self / deg
+    }
+    fn changed(old: Self, new: Self, _tol: f64) -> bool {
+        old != new
+    }
+    fn approx_f64(self) -> f64 {
+        self as f64
+    }
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(buf: &[u8]) -> Self {
+        u32::from_le_bytes(buf[..4].try_into().unwrap())
+    }
+}
+
+impl VertexValue for u64 {
+    const LANE: Lane = Lane::U64;
+    const BYTES: usize = 8;
+
+    fn vzero() -> Self {
+        0
+    }
+    fn vone() -> Self {
+        1
+    }
+    fn vmax_value() -> Self {
+        u64::MAX
+    }
+    fn vmin_value() -> Self {
+        u64::MIN
+    }
+    fn vadd(self, other: Self) -> Self {
+        self.wrapping_add(other)
+    }
+    fn vmin(self, other: Self) -> Self {
+        Ord::min(self, other)
+    }
+    fn vmax(self, other: Self) -> Self {
+        Ord::max(self, other)
+    }
+    fn from_weight(w: Weight) -> Self {
+        w as u64
+    }
+    fn div_deg(self, deg: u32) -> Self {
+        self / deg as u64
+    }
+    fn changed(old: Self, new: Self, _tol: f64) -> bool {
+        old != new
+    }
+    fn approx_f64(self) -> f64 {
+        self as f64
+    }
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(buf: &[u8]) -> Self {
+        u64::from_le_bytes(buf[..8].try_into().unwrap())
+    }
+}
+
+impl VertexValue for f32 {
+    const LANE: Lane = Lane::F32;
+    const BYTES: usize = 4;
+
+    fn vzero() -> Self {
+        0.0
+    }
+    fn vone() -> Self {
+        1.0
+    }
+    fn vmax_value() -> Self {
+        f32::INFINITY
+    }
+    fn vmin_value() -> Self {
+        f32::NEG_INFINITY
+    }
+    fn vadd(self, other: Self) -> Self {
+        self + other
+    }
+    fn vmin(self, other: Self) -> Self {
+        f32::min(self, other)
+    }
+    fn vmax(self, other: Self) -> Self {
+        f32::max(self, other)
+    }
+    fn from_weight(w: Weight) -> Self {
+        w
+    }
+    fn div_deg(self, deg: u32) -> Self {
+        self / deg as f32
+    }
+    fn changed(old: Self, new: Self, tol: f64) -> bool {
+        if old.is_infinite() && new.is_infinite() {
+            return false;
+        }
+        (new - old).abs() > tol as f32
+    }
+    fn approx_f64(self) -> f64 {
+        self as f64
+    }
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(buf: &[u8]) -> Self {
+        f32::from_le_bytes(buf[..4].try_into().unwrap())
+    }
+}
+
+impl VertexValue for f64 {
+    const LANE: Lane = Lane::F64;
+    const BYTES: usize = 8;
+
+    fn vzero() -> Self {
+        0.0
+    }
+    fn vone() -> Self {
+        1.0
+    }
+    fn vmax_value() -> Self {
+        f64::INFINITY
+    }
+    fn vmin_value() -> Self {
+        f64::NEG_INFINITY
+    }
+    fn vadd(self, other: Self) -> Self {
+        self + other
+    }
+    fn vmin(self, other: Self) -> Self {
+        f64::min(self, other)
+    }
+    fn vmax(self, other: Self) -> Self {
+        f64::max(self, other)
+    }
+    fn from_weight(w: Weight) -> Self {
+        w as f64
+    }
+    fn div_deg(self, deg: u32) -> Self {
+        self / deg as f64
+    }
+    fn changed(old: Self, new: Self, tol: f64) -> bool {
+        if old.is_infinite() && new.is_infinite() {
+            return false;
+        }
+        (new - old).abs() > tol
+    }
+    fn approx_f64(self) -> f64 {
+        self
+    }
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    fn read_le(buf: &[u8]) -> Self {
+        f64::from_le_bytes(buf[..8].try_into().unwrap())
+    }
+}
+
+/// A lane-tagged value vector: the dynamic counterpart of `Vec<V>` used
+/// where one runtime type must carry any lane (persisted vertex values,
+/// CLI results).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AnyValues {
+    U32(Vec<u32>),
+    U64(Vec<u64>),
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+impl Default for AnyValues {
+    fn default() -> Self {
+        AnyValues::F32(Vec::new())
+    }
+}
+
+impl From<Vec<u32>> for AnyValues {
+    fn from(v: Vec<u32>) -> Self {
+        AnyValues::U32(v)
+    }
+}
+impl From<Vec<u64>> for AnyValues {
+    fn from(v: Vec<u64>) -> Self {
+        AnyValues::U64(v)
+    }
+}
+impl From<Vec<f32>> for AnyValues {
+    fn from(v: Vec<f32>) -> Self {
+        AnyValues::F32(v)
+    }
+}
+impl From<Vec<f64>> for AnyValues {
+    fn from(v: Vec<f64>) -> Self {
+        AnyValues::F64(v)
+    }
+}
+
+impl AnyValues {
+    pub fn lane(&self) -> Lane {
+        match self {
+            AnyValues::U32(_) => Lane::U32,
+            AnyValues::U64(_) => Lane::U64,
+            AnyValues::F32(_) => Lane::F32,
+            AnyValues::F64(_) => Lane::F64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            AnyValues::U32(v) => v.len(),
+            AnyValues::U64(v) => v.len(),
+            AnyValues::F32(v) => v.len(),
+            AnyValues::F64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lossy f64 view of element `i` (display / tolerance comparisons).
+    pub fn approx_f64(&self, i: usize) -> f64 {
+        match self {
+            AnyValues::U32(v) => v[i].approx_f64(),
+            AnyValues::U64(v) => v[i].approx_f64(),
+            AnyValues::F32(v) => v[i].approx_f64(),
+            AnyValues::F64(v) => v[i].approx_f64(),
+        }
+    }
+
+    /// Append the wire form: `[lane tag u32][count u64][raw LE elements]`.
+    pub fn write(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.lane().tag().to_le_bytes());
+        out.extend_from_slice(&(self.len() as u64).to_le_bytes());
+        match self {
+            AnyValues::U32(v) => v.iter().for_each(|x| x.write_le(out)),
+            AnyValues::U64(v) => v.iter().for_each(|x| x.write_le(out)),
+            AnyValues::F32(v) => v.iter().for_each(|x| x.write_le(out)),
+            AnyValues::F64(v) => v.iter().for_each(|x| x.write_le(out)),
+        }
+    }
+
+    /// Invert [`Self::write`], returning the values and the new cursor.
+    pub fn read(buf: &[u8], pos: usize) -> Result<(AnyValues, usize)> {
+        ensure!(buf.len() >= pos + 12, "value array header truncated");
+        let lane = Lane::from_tag(u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()))?;
+        let n = u64::from_le_bytes(buf[pos + 4..pos + 12].try_into().unwrap()) as usize;
+        let start = pos + 12;
+        let nbytes = n
+            .checked_mul(lane.bytes())
+            .ok_or_else(|| anyhow::anyhow!("value array count overflow"))?;
+        ensure!(buf.len() >= start + nbytes, "value array payload truncated");
+        fn decode<V: VertexValue>(buf: &[u8], n: usize) -> Vec<V> {
+            buf.chunks_exact(V::BYTES).take(n).map(V::read_le).collect()
+        }
+        let body = &buf[start..start + nbytes];
+        let vals = match lane {
+            Lane::U32 => AnyValues::U32(decode(body, n)),
+            Lane::U64 => AnyValues::U64(decode(body, n)),
+            Lane::F32 => AnyValues::F32(decode(body, n)),
+            Lane::F64 => AnyValues::F64(decode(body, n)),
+        };
+        Ok((vals, start + nbytes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_tags_roundtrip() {
+        for lane in Lane::ALL {
+            assert_eq!(Lane::from_tag(lane.tag()).unwrap(), lane);
+            assert!(lane.bytes() == 4 || lane.bytes() == 8);
+        }
+        assert!(Lane::from_tag(99).is_err());
+    }
+
+    #[test]
+    fn scalar_wire_roundtrip_all_lanes() {
+        fn rt<V: VertexValue>(x: V) {
+            let mut buf = Vec::new();
+            x.write_le(&mut buf);
+            assert_eq!(buf.len(), V::BYTES);
+            assert_eq!(V::read_le(&buf), x);
+        }
+        rt(0xDEAD_BEEFu32);
+        rt(0x0123_4567_89AB_CDEFu64);
+        rt(-1.5f32);
+        rt(std::f64::consts::PI);
+    }
+
+    #[test]
+    fn monoid_identities() {
+        assert_eq!(u32::vmax_value().vmin(7), 7);
+        assert_eq!(u64::vmin_value().vmax(7), 7);
+        assert_eq!(f32::vmax_value().vmin(7.0), 7.0);
+        assert_eq!(f64::vmin_value().vmax(7.0), 7.0);
+        assert_eq!(u32::vzero().vadd(3), 3);
+    }
+
+    #[test]
+    fn changed_predicate_per_lane() {
+        assert!(u32::changed(1, 2, 0.0));
+        assert!(!u32::changed(2, 2, 0.0));
+        assert!(!f32::changed(f32::INFINITY, f32::INFINITY, 0.0));
+        assert!(f32::changed(1.0, 1.5, 0.0));
+        assert!(!f32::changed(1.0, 1.5, 1.0));
+        assert!(!f64::changed(f64::INFINITY, f64::INFINITY, 0.0));
+    }
+
+    #[test]
+    fn anyvalues_wire_roundtrip_all_lanes() {
+        let cases: Vec<AnyValues> = vec![
+            AnyValues::U32(vec![0, 1, u32::MAX]),
+            AnyValues::U64(vec![42, u64::MAX]),
+            AnyValues::F32(vec![0.5, f32::INFINITY, -1.0]),
+            AnyValues::F64(vec![]),
+        ];
+        for v in cases {
+            let mut buf = Vec::new();
+            v.write(&mut buf);
+            let (back, pos) = AnyValues::read(&buf, 0).unwrap();
+            assert_eq!(back, v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn anyvalues_rejects_truncation_and_bad_lane() {
+        let mut buf = Vec::new();
+        AnyValues::U64(vec![1, 2, 3]).write(&mut buf);
+        assert!(AnyValues::read(&buf[..buf.len() - 1], 0).is_err());
+        assert!(AnyValues::read(&buf[..4], 0).is_err());
+        let mut bad = buf.clone();
+        bad[0] = 99;
+        assert!(AnyValues::read(&bad, 0).is_err());
+    }
+}

@@ -28,7 +28,9 @@
 //! | [`storage`]   | on-disk formats, instrumented I/O, prefetch pipeline     |
 //! | [`sharding`]  | vertex intervals + the 4-step preprocessing pipeline     |
 //! | [`cache`]     | compressed shard cache, modes 1–4 (§II-D.2)              |
-//! | [`apps`]      | vertex programs: PageRank, SSSP, WCC, BFS, SpMV          |
+//! | [`apps`]      | vertex programs over typed value lanes (u32/u64/f32/f64): |
+//! |               | PageRank, SSSP, WCC, BFS, SpMV(+f64), weighted SSSP,     |
+//! |               | label propagation, max-degree                            |
 //! | [`engine`]    | the VSW engine (Algorithm 1) + pipelined shard prefetch  |
 //! | [`baselines`] | PSW / ESG / DSW / VSP out-of-core engines + in-memory    |
 //! | [`iomodel`]   | Table II analytic I/O model                              |

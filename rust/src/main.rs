@@ -26,12 +26,20 @@ use graphmp::coordinator::datasets::{Dataset, DATASETS};
 use graphmp::engine::{Backend, EngineConfig, VswEngine};
 use graphmp::graph::edgelist;
 use graphmp::runtime::ShardRuntime;
-use graphmp::sharding::{preprocess, PreprocessConfig};
+use graphmp::sharding::PreprocessConfig;
 use graphmp::storage::{io, DatasetDir};
 use graphmp::util::humansize;
 
-const BOOL_FLAGS: &[&str] =
-    &["no-cache", "no-selective", "symmetrize", "streaming", "quick", "help", "adaptive"];
+const BOOL_FLAGS: &[&str] = &[
+    "no-cache",
+    "no-selective",
+    "symmetrize",
+    "streaming",
+    "quick",
+    "help",
+    "adaptive",
+    "weighted",
+];
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -52,19 +60,25 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
         "bench-compare" => cmd_bench_compare(&args),
         "info" => cmd_info(&args),
         "datasets" => cmd_datasets(),
+        "apps" => cmd_apps(),
         _ => {
-            print!("{}", HELP);
+            print!("{}", help());
             Ok(())
         }
     }
 }
 
-const HELP: &str = r#"graphmp — semi-external-memory graph processing (GraphMP reproduction)
+/// Usage text; the app list is derived from `apps::REGISTRY` so it can
+/// never drift from `by_name`.
+fn help() -> String {
+    format!(
+        r#"graphmp — semi-external-memory graph processing (GraphMP reproduction)
 
 USAGE:
-  graphmp generate   --dataset <name> --out <file>
+  graphmp generate   --dataset <name> --out <file> [--weighted]
   graphmp preprocess --input <edges> --vertices <N> --out <dir> [--symmetrize]
-  graphmp run        --data <dir> --app <pagerank|sssp|wcc|bfs|spmv>
+                     (a weighted input's weight lane is carried into the shards)
+  graphmp run        --data <dir> --app <{apps}>
                      [--iters N] [--engine native|xla] [--artifacts <dir>]
                      [--cache <none|snaplite|zlib-1|zlib-3|zstd-1|delta-varint>]
                      [--no-cache] [--no-selective] [--threads N]
@@ -82,21 +96,48 @@ USAGE:
                      (exit 1 when any bench regressed past the gate)
   graphmp info       --data <dir>
   graphmp datasets
-"#;
+  graphmp apps       (list every vertex program with its value lane)
+"#,
+        apps = apps::app_names()
+    )
+}
+
+fn cmd_apps() -> Result<()> {
+    println!("{:<12} {:<6} {:<20} about", "name", "lane", "aliases");
+    for entry in apps::REGISTRY {
+        println!(
+            "{:<12} {:<6} {:<20} {}",
+            entry.name,
+            entry.lane.name(),
+            entry.aliases.join(","),
+            entry.about
+        );
+    }
+    Ok(())
+}
 
 fn cmd_generate(args: &Args) -> Result<()> {
     let name = args.req("dataset")?;
     let out = PathBuf::from(args.req("out")?);
     let d = Dataset::by_name(name)?;
     eprintln!(
-        "generating {} (stands in for {}): |V|={} |E|={}",
+        "generating {} (stands in for {}): |V|={} |E|={}{}",
         d.name,
         d.stands_in_for,
         humansize::count(d.num_vertices() as u64),
-        humansize::count(d.num_edges)
+        humansize::count(d.num_edges),
+        if args.has("weighted") { " [weighted]" } else { "" }
     );
     let edges = d.generate();
-    edgelist::write_binary(&out, &edges)?;
+    if args.has("weighted") {
+        let weights = graphmp::graph::generator::synth_weights(
+            &edges,
+            graphmp::coordinator::experiment::WEIGHT_SEED,
+        );
+        edgelist::write_binary_weighted(&out, &edges, &weights)?;
+    } else {
+        edgelist::write_binary(&out, &edges)?;
+    }
     eprintln!("wrote {}", out.display());
     Ok(())
 }
@@ -137,10 +178,12 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
         );
         return Ok(());
     }
-    let mut edges = edgelist::read_auto(&input)?;
+    let (mut edges, mut weights) = edgelist::read_auto_weighted(&input)?;
     if args.has("symmetrize") {
         let rev: Vec<_> = edges.iter().map(|&(s, d)| (d, s)).collect();
         edges.extend(rev);
+        let wrev = weights.clone();
+        weights.extend(wrev);
     }
     let max_id = edges.iter().map(|&(s, d)| s.max(d)).max().unwrap_or(0) as usize;
     let vertices = args.get_usize("vertices", max_id + 1)?;
@@ -150,15 +193,17 @@ fn cmd_preprocess(args: &Args) -> Result<()> {
         bloom_fpr: args.get_f64("bloom-fpr", 0.01)?,
     };
     let t0 = std::time::Instant::now();
-    let res = preprocess(
+    let res = graphmp::sharding::preprocess_weighted(
         input.file_stem().and_then(|s| s.to_str()).unwrap_or("graph"),
         &edges,
+        &weights,
         vertices,
         &out,
         &cfg,
     )?;
     eprintln!(
-        "preprocessed: |V|={} |E|={} shards={} bloom={} in {}",
+        "preprocessed{}: |V|={} |E|={} shards={} bloom={} in {}",
+        if weights.is_empty() { "" } else { " (weighted)" },
         res.property.info.num_vertices,
         res.property.info.num_edges,
         res.property.num_shards(),
@@ -221,11 +266,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         engine.property.num_shards(),
         humansize::duration(engine.load_wall)
     );
-    let result = engine.run(app.as_ref())?;
+    let result = engine.run_any(&app)?;
     let s = &result.stats;
     println!(
-        "app={} engine={} iters={} total={} rate={} mem={}",
+        "app={} lane={} engine={} iters={} total={} rate={} mem={}",
         app.name(),
+        app.lane().name(),
         engine_name,
         s.num_iters(),
         humansize::duration(s.total_wall),
@@ -253,29 +299,62 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Lane-independent summary of a baseline run, for CLI printing.
+struct BaselineSummary {
+    iters: usize,
+    total: std::time::Duration,
+    read: u64,
+    written: u64,
+    mem: u64,
+}
+
+impl BaselineSummary {
+    fn of<V>(run: &graphmp::baselines::BaselineRun<V>) -> Self {
+        Self {
+            iters: run.iter_walls.len(),
+            total: run.total_wall,
+            read: run.io.bytes_read,
+            written: run.io.bytes_written,
+            mem: run.memory_bytes,
+        }
+    }
+}
+
 fn cmd_baseline(args: &Args) -> Result<()> {
+    use graphmp::apps::AnyProgram;
     let system = args.req("system")?;
     let input = PathBuf::from(args.req("data")?);
-    let edges = edgelist::read_auto(&input)?;
+    let (edges, weights) = edgelist::read_auto_weighted(&input)?;
     let max_id = edges.iter().map(|&(s, d)| s.max(d)).max().unwrap_or(0) as usize;
     let vertices = args.get_usize("vertices", max_id + 1)?;
     let app = apps::by_name(args.req("app")?)?;
     let iters = args.get_usize("iters", 10)?;
     let work = std::env::temp_dir().join(format!("graphmp_baseline_{system}"));
-    let mut eng = baselines::by_name(system, work)?;
-    let t0 = std::time::Instant::now();
-    eng.prepare(&edges, vertices)?;
-    eprintln!("{}: prepared in {}", eng.name(), humansize::duration(t0.elapsed()));
-    let run = eng.run(app.as_ref(), iters)?;
+    // dispatch the program's lane through the typed baseline path
+    let summary = match &app {
+        AnyProgram::F32(p) => BaselineSummary::of(&baselines::run_typed_by_name(
+            system, work, &edges, &weights, vertices, p.as_ref(), iters,
+        )?),
+        AnyProgram::F64(p) => BaselineSummary::of(&baselines::run_typed_by_name(
+            system, work, &edges, &weights, vertices, p.as_ref(), iters,
+        )?),
+        AnyProgram::U32(p) => BaselineSummary::of(&baselines::run_typed_by_name(
+            system, work, &edges, &weights, vertices, p.as_ref(), iters,
+        )?),
+        AnyProgram::U64(p) => BaselineSummary::of(&baselines::run_typed_by_name(
+            system, work, &edges, &weights, vertices, p.as_ref(), iters,
+        )?),
+    };
     println!(
-        "system={} app={} iters={} total={} read={} written={} mem={}",
-        eng.name(),
+        "system={} app={} lane={} iters={} total={} read={} written={} mem={}",
+        baselines::display_name(system)?,
         app.name(),
-        run.iter_walls.len(),
-        humansize::duration(run.total_wall),
-        humansize::bytes(run.io.bytes_read),
-        humansize::bytes(run.io.bytes_written),
-        humansize::bytes(run.memory_bytes),
+        app.lane().name(),
+        summary.iters,
+        humansize::duration(summary.total),
+        humansize::bytes(summary.read),
+        humansize::bytes(summary.written),
+        humansize::bytes(summary.mem),
     );
     Ok(())
 }

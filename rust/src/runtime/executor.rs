@@ -170,7 +170,12 @@ impl ShardRuntime {
     }
 
     /// Raw segmented sum (generic SpMV building block).
-    pub fn segsum_shard(&self, contrib: &[f32], dst: &[u32], n_vertices: usize) -> Result<Vec<f32>> {
+    pub fn segsum_shard(
+        &self,
+        contrib: &[f32],
+        dst: &[u32],
+        n_vertices: usize,
+    ) -> Result<Vec<f32>> {
         let (c, d) = self.pad_edges(contrib, dst, PAD_SUM);
         let args = [xla::Literal::vec1(&c), xla::Literal::vec1(&d)];
         let mut out = self.run("segsum_shard", &args)?;

@@ -13,5 +13,5 @@ pub mod preprocess;
 pub mod streaming;
 
 pub use intervals::compute_intervals;
-pub use preprocess::{preprocess, PreprocessConfig, PreprocessOutput};
+pub use preprocess::{preprocess, preprocess_weighted, PreprocessConfig, PreprocessOutput};
 pub use streaming::preprocess_streaming;

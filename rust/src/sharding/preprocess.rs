@@ -12,7 +12,7 @@ use anyhow::{Context, Result};
 
 use crate::bloom::BloomFilter;
 use crate::graph::csr::Csr;
-use crate::graph::{Degrees, Edge, VertexId};
+use crate::graph::{Degrees, Edge, VertexId, Weight};
 use crate::storage::format::frame;
 use crate::storage::property::Property;
 use crate::storage::vertexinfo::VertexInfo;
@@ -58,6 +58,27 @@ pub fn preprocess(
     out: &DatasetDir,
     cfg: &PreprocessConfig,
 ) -> Result<PreprocessOutput> {
+    preprocess_weighted(name, edges, &[], num_vertices, out, cfg)
+}
+
+/// [`preprocess`] with an explicit per-edge weight lane (parallel to
+/// `edges`; empty = unweighted).  Weights ride through the destination
+/// bucketing into each shard's CSR, so `gather` sees the real `val(u,v)`.
+pub fn preprocess_weighted(
+    name: &str,
+    edges: &[Edge],
+    weights: &[Weight],
+    num_vertices: usize,
+    out: &DatasetDir,
+    cfg: &PreprocessConfig,
+) -> Result<PreprocessOutput> {
+    anyhow::ensure!(
+        weights.is_empty() || weights.len() == edges.len(),
+        "weights must be empty or parallel to edges ({} vs {})",
+        weights.len(),
+        edges.len()
+    );
+    let weighted = !weights.is_empty();
     // interval width is additionally capped by the kernel geometry so the
     // xla engine can run any shard in one call
     let v_cap = crate::runtime::geometry::V_MAX;
@@ -81,6 +102,7 @@ pub fn preprocess(
     // -- step 3: bucket edges by destination interval ---------------------
     let num_shards = intervals.len() - 1;
     let mut buckets: Vec<Vec<Edge>> = vec![Vec::new(); num_shards];
+    let mut wbuckets: Vec<Vec<Weight>> = vec![Vec::new(); num_shards];
     // interval lookup: binary search over boundaries
     let shard_of = |v: VertexId| -> usize {
         match intervals.binary_search(&v) {
@@ -88,8 +110,12 @@ pub fn preprocess(
             Err(i) => i - 1,
         }
     };
-    for &(s, d) in edges {
-        buckets[shard_of(d)].push((s, d));
+    for (k, &(s, d)) in edges.iter().enumerate() {
+        let i = shard_of(d);
+        buckets[i].push((s, d));
+        if weighted {
+            wbuckets[i].push(weights[k]);
+        }
     }
 
     // -- step 4: CSR transform + persist ---------------------------------
@@ -97,7 +123,7 @@ pub fn preprocess(
     let mut bloom_bytes = 0u64;
     for (i, bucket) in buckets.iter().enumerate() {
         let (lo, hi) = (intervals[i], intervals[i + 1]);
-        let csr = Csr::from_edges(lo, hi, bucket);
+        let csr = Csr::from_edges_weighted(lo, hi, bucket, &wbuckets[i]);
         csr.validate().with_context(|| format!("shard {i}"))?;
         shardfile::save(&csr, &out.shard_path(i))?;
         shard_edge_counts.push(csr.num_edges() as u64);
@@ -217,6 +243,43 @@ mod tests {
     fn rejects_out_of_range_edges() {
         let dir = tmpdir("oob");
         assert!(preprocess("x", &[(0, 9)], 5, &dir, &PreprocessConfig::default()).is_err());
+    }
+
+    #[test]
+    fn rejects_mismatched_weight_lane() {
+        let dir = tmpdir("wlen");
+        assert!(preprocess_weighted(
+            "x",
+            &[(0, 1), (1, 2)],
+            &[1.0],
+            3,
+            &dir,
+            &PreprocessConfig::default()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn weighted_pipeline_preserves_weight_per_edge() {
+        let edges = generator::erdos_renyi(120, 900, 23);
+        let weights = generator::synth_weights(&edges, 7);
+        let dir = tmpdir("weighted");
+        let cfg = PreprocessConfig { max_edges_per_shard: 128, bloom_fpr: 0.01 };
+        let out = preprocess_weighted("w", &edges, &weights, 120, &dir, &cfg).unwrap();
+        let mut got = Vec::new();
+        for i in 0..out.property.num_shards() {
+            let csr = shardfile::load(&dir.shard_path(i)).unwrap();
+            assert!(csr.is_weighted());
+            got.extend(csr.to_wedges());
+        }
+        let mut want: Vec<(u32, u32, f32)> = edges
+            .iter()
+            .zip(&weights)
+            .map(|(&(s, d), &w)| (s, d, w))
+            .collect();
+        got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(got, want);
     }
 
     #[test]

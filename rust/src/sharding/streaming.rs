@@ -21,7 +21,7 @@ use anyhow::{Context, Result};
 use crate::bloom::BloomFilter;
 use crate::graph::csr::Csr;
 use crate::graph::edgelist::BinaryEdgeStream;
-use crate::graph::{Degrees, Edge, VertexId};
+use crate::graph::{Degrees, Edge, VertexId, Weight};
 use crate::storage::format::frame;
 use crate::storage::property::Property;
 use crate::storage::vertexinfo::VertexInfo;
@@ -35,7 +35,10 @@ use super::preprocess::{PreprocessConfig, PreprocessOutput};
 const SPILL_BUFFER_EDGES: usize = 4096;
 
 /// Streaming counterpart of [`super::preprocess`]: input is a binary edge
-/// list *file* (written by `edgelist::write_binary` / `graphmp generate`).
+/// list *file* (written by `edgelist::write_binary` /
+/// `edgelist::write_binary_weighted` / `graphmp generate`).  A v2
+/// (weighted) input streams its weight lane through the spill files into
+/// the shard CSRs.
 pub fn preprocess_streaming(
     name: &str,
     input: &Path,
@@ -52,8 +55,10 @@ pub fn preprocess_streaming(
         out_deg: vec![0; num_vertices],
     };
     let mut num_edges = 0u64;
-    for e in BinaryEdgeStream::open(input)? {
-        let (s, d) = e?;
+    let scan = BinaryEdgeStream::open(input)?;
+    let weighted = scan.weighted();
+    for e in scan {
+        let ((s, d), _w) = e?;
         anyhow::ensure!(
             (s as usize) < num_vertices && (d as usize) < num_vertices,
             "edge ({s},{d}) outside vertex range {num_vertices}"
@@ -71,8 +76,10 @@ pub fn preprocess_streaming(
     let p = intervals.len() - 1;
 
     // -- pass 2 / step 3: append each edge to its shard spill file ---------
+    // spill records are 8 B (s,d) unweighted or 12 B (s,d,w) weighted
+    let rec = if weighted { 12 } else { 8 };
     let spill_path = |i: usize| out.root.join(format!("spill_{i:04}.tmp"));
-    let mut buffers: Vec<Vec<u8>> = vec![Vec::with_capacity(SPILL_BUFFER_EDGES * 8); p];
+    let mut buffers: Vec<Vec<u8>> = vec![Vec::with_capacity(SPILL_BUFFER_EDGES * rec); p];
     // spill files must start empty even if a previous run crashed mid-way
     for i in 0..p {
         let _ = std::fs::remove_file(spill_path(i));
@@ -91,11 +98,14 @@ pub fn preprocess_streaming(
         Ok(())
     };
     for e in BinaryEdgeStream::open(input)? {
-        let (s, d) = e?;
+        let ((s, d), w) = e?;
         let i = shard_of(d);
         buffers[i].extend_from_slice(&s.to_le_bytes());
         buffers[i].extend_from_slice(&d.to_le_bytes());
-        if buffers[i].len() >= SPILL_BUFFER_EDGES * 8 {
+        if weighted {
+            buffers[i].extend_from_slice(&w.to_le_bytes());
+        }
+        if buffers[i].len() >= SPILL_BUFFER_EDGES * rec {
             flush(i, &mut buffers[i])?;
         }
     }
@@ -109,23 +119,22 @@ pub fn preprocess_streaming(
     let mut bloom_bytes = 0u64;
     for i in 0..p {
         let (lo, hi) = (intervals[i], intervals[i + 1]);
-        let bucket: Vec<Edge> = match std::fs::metadata(spill_path(i)) {
-            Ok(_) => {
-                let bytes = io::read_file(&spill_path(i))?;
-                anyhow::ensure!(bytes.len() % 8 == 0, "spill {i} misaligned");
-                bytes
-                    .chunks_exact(8)
-                    .map(|c| {
-                        (
-                            u32::from_le_bytes(c[0..4].try_into().unwrap()),
-                            u32::from_le_bytes(c[4..8].try_into().unwrap()),
-                        )
-                    })
-                    .collect()
+        let mut bucket: Vec<Edge> = Vec::new();
+        let mut wbucket: Vec<Weight> = Vec::new();
+        if std::fs::metadata(spill_path(i)).is_ok() {
+            let bytes = io::read_file(&spill_path(i))?;
+            anyhow::ensure!(bytes.len() % rec == 0, "spill {i} misaligned");
+            for c in bytes.chunks_exact(rec) {
+                bucket.push((
+                    u32::from_le_bytes(c[0..4].try_into().unwrap()),
+                    u32::from_le_bytes(c[4..8].try_into().unwrap()),
+                ));
+                if weighted {
+                    wbucket.push(f32::from_le_bytes(c[8..12].try_into().unwrap()));
+                }
             }
-            Err(_) => Vec::new(), // no edges landed in this interval
-        };
-        let csr = Csr::from_edges(lo, hi, &bucket);
+        }
+        let csr = Csr::from_edges_weighted(lo, hi, &bucket, &wbucket);
         csr.validate().with_context(|| format!("shard {i}"))?;
         crate::storage::shardfile::save(&csr, &out.shard_path(i))?;
         shard_edge_counts.push(csr.num_edges() as u64);
@@ -134,7 +143,11 @@ pub fn preprocess_streaming(
         for &(s, _) in &bucket {
             bloom.insert(s as u64);
         }
-        let framed = frame(super::preprocess::BLOOM_MAGIC, super::preprocess::BLOOM_VERSION, &bloom.to_bytes());
+        let framed = frame(
+            super::preprocess::BLOOM_MAGIC,
+            super::preprocess::BLOOM_VERSION,
+            &bloom.to_bytes(),
+        );
         bloom_bytes += framed.len() as u64;
         io::write_file(&out.bloom_path(i), &framed)?;
         let _ = std::fs::remove_file(spill_path(i));
@@ -217,5 +230,37 @@ mod tests {
         edgelist::write_binary(&input, &[(0, 99)]).unwrap();
         let dir = DatasetDir::new(base.join("d.gmp"));
         assert!(preprocess_streaming("x", &input, 10, &dir, &PreprocessConfig::default()).is_err());
+    }
+
+    #[test]
+    fn weighted_streaming_equals_weighted_in_memory_pipeline() {
+        let base = tmp("weq");
+        let edges = generator::rmat(9, 3000, generator::RmatParams::default(), 5);
+        let weights = generator::synth_weights(&edges, 99);
+        let input = base.join("edges.bin");
+        edgelist::write_binary_weighted(&input, &edges, &weights).unwrap();
+        let cfg = PreprocessConfig { max_edges_per_shard: 512, bloom_fpr: 0.01 };
+
+        let mem_dir = DatasetDir::new(base.join("mem.gmp"));
+        let mem = super::super::preprocess::preprocess_weighted(
+            "g", &edges, &weights, 1 << 9, &mem_dir, &cfg,
+        )
+        .unwrap();
+
+        let st_dir = DatasetDir::new(base.join("stream.gmp"));
+        let st = preprocess_streaming("g", &input, 1 << 9, &st_dir, &cfg).unwrap();
+
+        assert_eq!(mem.property.intervals, st.property.intervals);
+        assert_eq!(mem.shard_edge_counts, st.shard_edge_counts);
+        for i in 0..mem.property.num_shards() {
+            let a = shardfile::load(&mem_dir.shard_path(i)).unwrap();
+            let b = shardfile::load(&st_dir.shard_path(i)).unwrap();
+            assert_eq!(a.is_weighted(), b.is_weighted(), "shard {i}");
+            let mut ea = a.to_wedges();
+            let mut eb = b.to_wedges();
+            ea.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            eb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            assert_eq!(ea, eb, "shard {i}");
+        }
     }
 }

@@ -4,9 +4,25 @@
 //! [4B magic][4B version][8B payload_len][payload...][4B crc32(payload)]
 //! ```
 //!
-//! plus little-endian array helpers for `u32`/`u64`/`f32` slices.
+//! plus little-endian array helpers for every vertex-value lane
+//! (`u32`/`u64`/`f32`/`f64`, see [`crate::graph::value::VertexValue`]) and
+//! the lane-tagged [`AnyValues`] vector.
+//!
+//! ## Format versions
+//!
+//! The chunk header's `version` field is per-file-type.  Notable bumps:
+//!
+//! * **shard files (`GMSH`) v1 → v2**: v2 appends the optional per-edge
+//!   weight lane (`f32[] wgt`, empty = unweighted) after `col`.  Readers
+//!   accept both; v1 shards load as unweighted and reproduce pre-weight
+//!   results unchanged (`storage::shardfile`).
+//! * **vertex info (`GMVI`) v1 → v2**: v2 stores persisted vertex values as
+//!   a lane-tagged [`AnyValues`] array instead of bare `f32[]`
+//!   (`storage::vertexinfo`).
 
 use anyhow::{bail, ensure, Result};
+
+use crate::graph::value::{AnyValues, VertexValue};
 
 /// Write a framed chunk.
 pub fn frame(magic: &[u8; 4], version: u32, payload: &[u8]) -> Vec<u8> {
@@ -29,7 +45,12 @@ pub fn unframe<'a>(magic: &[u8; 4], buf: &'a [u8]) -> Result<(u32, &'a [u8])> {
     }
     let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
     let len = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
-    ensure!(buf.len() == 20 + len, "chunk length mismatch: header {} vs actual {}", len, buf.len() - 20);
+    ensure!(
+        buf.len() == 20 + len,
+        "chunk length mismatch: header {} vs actual {}",
+        len,
+        buf.len() - 20
+    );
     let payload = &buf[16..16 + len];
     let want = u32::from_le_bytes(buf[16 + len..20 + len].try_into().unwrap());
     let mut crc = crc32fast::Hasher::new();
@@ -76,6 +97,80 @@ pub fn get_f32s(buf: &[u8], pos: usize) -> Result<(Vec<f32>, usize)> {
         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
         .collect();
     Ok((v, start + n * 4))
+}
+
+pub fn put_u64s(out: &mut Vec<u8>, xs: &[u64]) {
+    out.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+pub fn get_u64s(buf: &[u8], pos: usize) -> Result<(Vec<u64>, usize)> {
+    ensure!(buf.len() >= pos + 8, "u64 array header truncated");
+    let n = u64::from_le_bytes(buf[pos..pos + 8].try_into().unwrap()) as usize;
+    let start = pos + 8;
+    ensure!(buf.len() >= start + n * 8, "u64 array payload truncated");
+    let v = buf[start..start + n * 8]
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((v, start + n * 8))
+}
+
+pub fn put_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+    out.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+pub fn get_f64s(buf: &[u8], pos: usize) -> Result<(Vec<f64>, usize)> {
+    ensure!(buf.len() >= pos + 8, "f64 array header truncated");
+    let n = u64::from_le_bytes(buf[pos..pos + 8].try_into().unwrap()) as usize;
+    let start = pos + 8;
+    ensure!(buf.len() >= start + n * 8, "f64 array payload truncated");
+    let v = buf[start..start + n * 8]
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((v, start + n * 8))
+}
+
+/// Length-prefixed array of any vertex-value lane (the generic counterpart
+/// of `put_u32s`/`put_f32s`).
+pub fn put_vals<V: VertexValue>(out: &mut Vec<u8>, xs: &[V]) {
+    out.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+    for &x in xs {
+        x.write_le(out);
+    }
+}
+
+/// Invert [`put_vals`].
+pub fn get_vals<V: VertexValue>(buf: &[u8], pos: usize) -> Result<(Vec<V>, usize)> {
+    ensure!(buf.len() >= pos + 8, "value array header truncated");
+    let n = u64::from_le_bytes(buf[pos..pos + 8].try_into().unwrap()) as usize;
+    let start = pos + 8;
+    let nbytes = n
+        .checked_mul(V::BYTES)
+        .ok_or_else(|| anyhow::anyhow!("value array count overflow"))?;
+    ensure!(buf.len() >= start + nbytes, "value array payload truncated");
+    let v = buf[start..start + nbytes]
+        .chunks_exact(V::BYTES)
+        .map(V::read_le)
+        .collect();
+    Ok((v, start + nbytes))
+}
+
+/// Lane-tagged value vector (`[lane u32][count u64][raw]`) — used by the
+/// vertex-info v2 payload.
+pub fn put_any_values(out: &mut Vec<u8>, vals: &AnyValues) {
+    vals.write(out);
+}
+
+/// Invert [`put_any_values`].
+pub fn get_any_values(buf: &[u8], pos: usize) -> Result<(AnyValues, usize)> {
+    AnyValues::read(buf, pos)
 }
 
 pub fn put_u64(out: &mut Vec<u8>, x: u64) {
@@ -152,5 +247,46 @@ mod tests {
         put_u32s(&mut out, &[1, 2, 3]);
         assert!(get_u32s(&out[..out.len() - 1], 0).is_err());
         assert!(get_u32s(&out[..4], 0).is_err());
+    }
+
+    #[test]
+    fn wide_lane_helpers_roundtrip() {
+        let mut out = Vec::new();
+        put_u64s(&mut out, &[1, u64::MAX]);
+        put_f64s(&mut out, &[-2.5, f64::INFINITY]);
+        let (a, p) = get_u64s(&out, 0).unwrap();
+        let (b, p) = get_f64s(&out, p).unwrap();
+        assert_eq!(a, vec![1, u64::MAX]);
+        assert_eq!(b, vec![-2.5, f64::INFINITY]);
+        assert_eq!(p, out.len());
+        assert!(get_u64s(&out[..out.len() - 1], 8 + 16).is_err());
+    }
+
+    #[test]
+    fn generic_lane_helpers_roundtrip_all_lanes() {
+        fn rt<V: VertexValue>(xs: Vec<V>) {
+            let mut out = Vec::new();
+            put_vals(&mut out, &xs);
+            let (back, p) = get_vals::<V>(&out, 0).unwrap();
+            assert_eq!(back, xs);
+            assert_eq!(p, out.len());
+            if !out.is_empty() {
+                assert!(get_vals::<V>(&out[..out.len() - 1], 0).is_err());
+            }
+        }
+        rt(vec![1u32, 2, u32::MAX]);
+        rt(vec![7u64, u64::MAX]);
+        rt(vec![0.5f32, f32::INFINITY]);
+        rt(vec![1.25f64, -0.0]);
+    }
+
+    #[test]
+    fn any_values_helpers_roundtrip() {
+        let vals = AnyValues::U64(vec![3, 2, 1]);
+        let mut out = Vec::new();
+        put_any_values(&mut out, &vals);
+        let (back, p) = get_any_values(&out, 0).unwrap();
+        assert_eq!(back, vals);
+        assert_eq!(p, out.len());
     }
 }

@@ -1,47 +1,80 @@
 //! Shard files (`shard_XXXX.gms`): one CSR edge shard per vertex interval
 //! (paper §II-B, Figure 2).  Framed binary (`GMSH`), CRC-checked.
 //!
-//! Payload layout:
+//! Payload layout (version 2):
 //! ```text
 //! u32 lo, u32 hi                  vertex interval [lo, hi)
 //! u32[] row_ptr                   (hi-lo)+1 entries
 //! u32[] col                       source ids grouped by destination
+//! f32[] wgt                       per-edge weights (len 0 = unweighted)
 //! ```
+//!
+//! Version 1 (pre-weight-lane) payloads end after `col`; readers accept
+//! both, and a v1 shard loads as an unweighted CSR that reproduces pre-v2
+//! results bit-for-bit.  Writers always emit v2.
 
 use std::path::Path;
 
 use anyhow::Result;
 
 use crate::graph::csr::Csr;
-use crate::storage::format::{frame, get_u32, get_u32s, put_u32, put_u32s, unframe};
+use crate::storage::format::{
+    frame, get_f32s, get_u32, get_u32s, put_f32s, put_u32, put_u32s, unframe,
+};
 use crate::storage::io;
 
 const MAGIC: &[u8; 4] = b"GMSH";
-const VERSION: u32 = 1;
+/// Current written version (v2 = optional weight lane).
+const VERSION: u32 = 2;
+/// Oldest readable version (v1 = unweighted payload without `wgt`).
+const MIN_VERSION: u32 = 1;
 
-/// Serialize a CSR shard to framed bytes.
+/// Serialize a CSR shard to framed bytes (always version 2).
 pub fn to_bytes(csr: &Csr) -> Vec<u8> {
-    let mut payload = Vec::with_capacity(8 + (csr.row_ptr.len() + csr.col.len()) * 4 + 16);
+    let mut payload = Vec::with_capacity(
+        8 + (csr.row_ptr.len() + csr.col.len() + csr.wgt.len()) * 4 + 24,
+    );
     put_u32(&mut payload, csr.lo);
     put_u32(&mut payload, csr.hi);
     put_u32s(&mut payload, &csr.row_ptr);
     put_u32s(&mut payload, &csr.col);
+    put_f32s(&mut payload, &csr.wgt);
     frame(MAGIC, VERSION, &payload)
 }
 
-/// Deserialize + structurally validate a CSR shard.
+/// Deserialize + structurally validate a CSR shard (accepts v1 and v2).
 pub fn from_bytes(buf: &[u8]) -> Result<Csr> {
     let (version, payload) = unframe(MAGIC, buf)?;
-    anyhow::ensure!(version == VERSION, "shard version {version}");
+    anyhow::ensure!(
+        (MIN_VERSION..=VERSION).contains(&version),
+        "shard version {version} (readable: {MIN_VERSION}..={VERSION})"
+    );
     let (lo, p) = get_u32(payload, 0)?;
     let (hi, p) = get_u32(payload, p)?;
     anyhow::ensure!(lo < hi, "shard interval empty [{lo},{hi})");
     let (row_ptr, p) = get_u32s(payload, p)?;
     let (col, p) = get_u32s(payload, p)?;
+    let (wgt, p) = if version >= 2 {
+        get_f32s(payload, p)?
+    } else {
+        (Vec::new(), p)
+    };
     anyhow::ensure!(p == payload.len(), "shard trailing bytes");
-    let csr = Csr { lo, hi, row_ptr, col };
+    let csr = Csr { lo, hi, row_ptr, col, wgt };
     csr.validate()?;
     Ok(csr)
+}
+
+/// Serialize in the legacy v1 layout (no weight lane).  Only for
+/// compatibility tests and migrating fixtures; `csr` must be unweighted.
+pub fn to_bytes_v1(csr: &Csr) -> Vec<u8> {
+    assert!(!csr.is_weighted(), "v1 layout cannot carry weights");
+    let mut payload = Vec::with_capacity(8 + (csr.row_ptr.len() + csr.col.len()) * 4 + 16);
+    put_u32(&mut payload, csr.lo);
+    put_u32(&mut payload, csr.hi);
+    put_u32s(&mut payload, &csr.row_ptr);
+    put_u32s(&mut payload, &csr.col);
+    frame(MAGIC, 1, &payload)
 }
 
 /// Write a shard through the accounting layer.
@@ -56,8 +89,8 @@ pub fn load(path: &Path) -> Result<Csr> {
 
 /// On-disk size estimate without serializing (for cache budgeting).
 pub fn estimated_bytes(csr: &Csr) -> usize {
-    20 /* frame */ + 8 /* lo,hi */ + 16 /* array headers */
-        + (csr.row_ptr.len() + csr.col.len()) * 4
+    20 /* frame */ + 8 /* lo,hi */ + 24 /* array headers */
+        + (csr.row_ptr.len() + csr.col.len() + csr.wgt.len()) * 4
 }
 
 #[cfg(test)]
@@ -69,6 +102,15 @@ mod tests {
         Csr::from_edges(10, 13, &[(1, 10), (2, 10), (3, 12), (9, 11), (0, 10)])
     }
 
+    fn sample_weighted() -> Csr {
+        Csr::from_edges_weighted(
+            10,
+            13,
+            &[(1, 10), (2, 10), (3, 12), (9, 11), (0, 10)],
+            &[0.25, 0.5, 0.75, 1.25, 2.0],
+        )
+    }
+
     #[test]
     fn bytes_roundtrip() {
         let a = sample();
@@ -77,9 +119,30 @@ mod tests {
     }
 
     #[test]
+    fn weighted_bytes_roundtrip() {
+        let a = sample_weighted();
+        let b = from_bytes(&to_bytes(&a)).unwrap();
+        assert_eq!(a, b);
+        assert!(b.is_weighted());
+    }
+
+    #[test]
+    fn v1_payloads_still_load_unweighted() {
+        let a = sample();
+        let v1 = to_bytes_v1(&a);
+        let b = from_bytes(&v1).unwrap();
+        assert_eq!(a, b);
+        assert!(!b.is_weighted());
+        // and the v1 bytes differ from v2 only by the empty weight array
+        assert_eq!(to_bytes(&a).len(), v1.len() + 8);
+    }
+
+    #[test]
     fn estimated_size_is_exact_here() {
         let a = sample();
         assert_eq!(estimated_bytes(&a), to_bytes(&a).len());
+        let w = sample_weighted();
+        assert_eq!(estimated_bytes(&w), to_bytes(&w).len());
     }
 
     #[test]
@@ -95,11 +158,24 @@ mod tests {
     }
 
     #[test]
+    fn unknown_version_rejected() {
+        let a = sample();
+        let mut payload = Vec::new();
+        put_u32(&mut payload, a.lo);
+        put_u32(&mut payload, a.hi);
+        put_u32s(&mut payload, &a.row_ptr);
+        put_u32s(&mut payload, &a.col);
+        put_f32s(&mut payload, &a.wgt);
+        let bytes = frame(MAGIC, VERSION + 1, &payload);
+        assert!(from_bytes(&bytes).is_err());
+    }
+
+    #[test]
     fn file_roundtrip() {
         let dir = std::env::temp_dir().join(format!("gmp_shard_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("shard_0000.gms");
-        let a = sample();
+        let a = sample_weighted();
         save(&a, &path).unwrap();
         assert_eq!(load(&path).unwrap(), a);
     }
@@ -118,7 +194,13 @@ mod tests {
                     )
                 })
                 .collect();
-            let a = Csr::from_edges(lo, lo + width, &edges);
+            let weighted = g.bool(0.5);
+            let weights: Vec<f32> = if weighted {
+                (0..m).map(|_| (g.usize_in(1, 16) as f32) * 0.25).collect()
+            } else {
+                Vec::new()
+            };
+            let a = Csr::from_edges_weighted(lo, lo + width, &edges, &weights);
             let b = from_bytes(&to_bytes(&a)).unwrap();
             assert_eq!(a, b);
         });

@@ -1,29 +1,38 @@
 //! The vertex information file (paper §II-B): per-vertex in-degree and
 //! out-degree arrays (and, at program end, the final vertex values).
 //! Framed binary (`GMVI`), CRC-checked.
+//!
+//! Version 2 stores the persisted values as a lane-tagged
+//! [`AnyValues`] array, so any vertex-value lane (`u32`/`u64`/`f32`/`f64`)
+//! round-trips; version 1 files (bare `f32[]` values) still load.
 
 use std::path::Path;
 
 use anyhow::Result;
 
-use crate::graph::Degrees;
-use crate::storage::format::{frame, get_f32s, get_u32s, put_f32s, put_u32s, unframe};
+use crate::graph::{AnyValues, Degrees};
+use crate::storage::format::{
+    frame, get_any_values, get_f32s, get_u32s, put_any_values, put_u32s, unframe,
+};
 use crate::storage::io;
 
 const MAGIC: &[u8; 4] = b"GMVI";
-const VERSION: u32 = 1;
+/// Current written version (v2 = lane-tagged values).
+const VERSION: u32 = 2;
+/// Oldest readable version (v1 = bare f32 values).
+const MIN_VERSION: u32 = 1;
 
-/// Vertex info: degrees plus optional persisted values.
+/// Vertex info: degrees plus optional persisted values (any lane).
 #[derive(Debug, Clone, Default)]
 pub struct VertexInfo {
     pub degrees: Degrees,
     /// Final vertex values (empty until a run persists results).
-    pub values: Vec<f32>,
+    pub values: AnyValues,
 }
 
 impl VertexInfo {
     pub fn new(degrees: Degrees) -> Self {
-        Self { degrees, values: Vec::new() }
+        Self { degrees, values: AnyValues::default() }
     }
 
     pub fn num_vertices(&self) -> usize {
@@ -34,16 +43,24 @@ impl VertexInfo {
         let mut payload = Vec::new();
         put_u32s(&mut payload, &self.degrees.in_deg);
         put_u32s(&mut payload, &self.degrees.out_deg);
-        put_f32s(&mut payload, &self.values);
+        put_any_values(&mut payload, &self.values);
         frame(MAGIC, VERSION, &payload)
     }
 
     pub fn from_bytes(buf: &[u8]) -> Result<Self> {
         let (version, payload) = unframe(MAGIC, buf)?;
-        anyhow::ensure!(version == VERSION, "vertexinfo version {version}");
+        anyhow::ensure!(
+            (MIN_VERSION..=VERSION).contains(&version),
+            "vertexinfo version {version} (readable: {MIN_VERSION}..={VERSION})"
+        );
         let (in_deg, p) = get_u32s(payload, 0)?;
         let (out_deg, p) = get_u32s(payload, p)?;
-        let (values, p) = get_f32s(payload, p)?;
+        let (values, p) = if version >= 2 {
+            get_any_values(payload, p)?
+        } else {
+            let (vals, p) = get_f32s(payload, p)?;
+            (AnyValues::F32(vals), p)
+        };
         anyhow::ensure!(p == payload.len(), "vertexinfo trailing bytes");
         anyhow::ensure!(in_deg.len() == out_deg.len(), "degree arrays disagree");
         anyhow::ensure!(
@@ -65,11 +82,12 @@ impl VertexInfo {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::storage::format::put_f32s;
 
     fn sample() -> VertexInfo {
         VertexInfo {
             degrees: Degrees { in_deg: vec![1, 2, 3], out_deg: vec![3, 2, 1] },
-            values: vec![0.5, 1.5, -2.0],
+            values: AnyValues::F32(vec![0.5, 1.5, -2.0]),
         }
     }
 
@@ -83,9 +101,38 @@ mod tests {
     }
 
     #[test]
+    fn typed_values_roundtrip_all_lanes() {
+        let degrees = Degrees { in_deg: vec![0, 1], out_deg: vec![1, 0] };
+        let lanes: Vec<AnyValues> = vec![
+            AnyValues::U32(vec![7, u32::MAX]),
+            AnyValues::U64(vec![0, u64::MAX]),
+            AnyValues::F32(vec![f32::INFINITY, -1.0]),
+            AnyValues::F64(vec![2.5, 0.0]),
+        ];
+        for values in lanes {
+            let v = VertexInfo { degrees: degrees.clone(), values: values.clone() };
+            let w = VertexInfo::from_bytes(&v.to_bytes()).unwrap();
+            assert_eq!(w.values, values);
+        }
+    }
+
+    #[test]
+    fn v1_payload_loads_as_f32_values() {
+        // hand-build a v1 payload: degrees + bare f32 values
+        let mut payload = Vec::new();
+        put_u32s(&mut payload, &[1, 2]);
+        put_u32s(&mut payload, &[2, 1]);
+        put_f32s(&mut payload, &[0.25, 4.0]);
+        let bytes = frame(MAGIC, 1, &payload);
+        let v = VertexInfo::from_bytes(&bytes).unwrap();
+        assert_eq!(v.values, AnyValues::F32(vec![0.25, 4.0]));
+        assert_eq!(v.degrees.in_deg, vec![1, 2]);
+    }
+
+    #[test]
     fn empty_values_ok() {
         let mut v = sample();
-        v.values.clear();
+        v.values = AnyValues::default();
         let w = VertexInfo::from_bytes(&v.to_bytes()).unwrap();
         assert!(w.values.is_empty());
     }

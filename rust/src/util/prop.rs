@@ -35,7 +35,12 @@ impl Gen {
     }
 
     /// Vector of length in `[min_len, max_len)` filled by `f`.
-    pub fn vec<T>(&mut self, min_len: usize, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+    pub fn vec<T>(
+        &mut self,
+        min_len: usize,
+        max_len: usize,
+        mut f: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
         let n = if min_len + 1 >= max_len { min_len } else { self.usize_in(min_len, max_len) };
         (0..n).map(|_| f(self)).collect()
     }

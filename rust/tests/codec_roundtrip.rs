@@ -1,14 +1,18 @@
 //! Roundtrip/fuzz-style property tests for the shard cache codecs
-//! (`cache::codec`, paper modes 1-4 + extensions) and the CSR-structural
-//! delta-varint codec (`cache::deltavarint`): random edge lists, empty /
-//! single-edge / duplicate-heavy shards, arbitrary byte blobs, truncation.
+//! (`cache::codec`, paper modes 1-4 + extensions), the CSR-structural
+//! delta-varint codec (`cache::deltavarint`), the weighted shard format
+//! (v1→v2 compatibility included) and the lane-tagged `VertexInfo`
+//! payloads: random edge lists, empty / single-edge / duplicate-heavy
+//! shards, arbitrary byte blobs, truncation, all four value lanes.
 
 use graphmp::cache::{deltavarint, Codec};
 use graphmp::graph::csr::Csr;
-use graphmp::storage::shardfile;
+use graphmp::graph::{AnyValues, Degrees, VertexValue};
+use graphmp::storage::{shardfile, vertexinfo::VertexInfo};
 use graphmp::util::prop::{self, Gen};
 
-/// Random shard: arbitrary interval, duplicate-friendly edge list.
+/// Random shard: arbitrary interval, duplicate-friendly edge list, weight
+/// lane half the time.
 fn random_shard(g: &mut Gen) -> Csr {
     let lo = g.usize_in(0, 200) as u32;
     let width = g.usize_in(1, 96) as u32;
@@ -23,11 +27,28 @@ fn random_shard(g: &mut Gen) -> Csr {
             )
         })
         .collect();
-    Csr::from_edges(lo, lo + width, &edges)
+    let weights: Vec<f32> = if g.bool(0.5) {
+        (0..m).map(|_| (g.usize_in(1, 64) as f32) * 0.125).collect()
+    } else {
+        Vec::new()
+    };
+    Csr::from_edges_weighted(lo, lo + width, &edges, &weights)
 }
 
 fn edge_multiset(csr: &Csr) -> Vec<(u32, u32)> {
     let mut e = csr.to_edges();
+    e.sort_unstable();
+    e
+}
+
+/// `(src, dst, weight-bits)` multiset — the weight lane must survive every
+/// codec bit-for-bit, attached to the same edge.
+fn wedge_multiset(csr: &Csr) -> Vec<(u32, u32, u32)> {
+    let mut e: Vec<(u32, u32, u32)> = csr
+        .to_wedges()
+        .into_iter()
+        .map(|(s, d, w)| (s, d, w.to_bits()))
+        .collect();
     e.sort_unstable();
     e
 }
@@ -37,13 +58,82 @@ fn prop_all_codecs_roundtrip_random_shards() {
     prop::check(0xC0DEC, 40, |g| {
         let csr = random_shard(g);
         let payload = shardfile::to_bytes(&csr);
-        let want = edge_multiset(&csr);
+        let want = wedge_multiset(&csr);
         for codec in Codec::ALL {
             let compressed = codec.compress(&payload).unwrap();
             let back = codec.decompress_shard(&compressed).unwrap();
             back.validate().unwrap();
             assert_eq!((back.lo, back.hi), (csr.lo, csr.hi), "{}", codec.name());
-            assert_eq!(edge_multiset(&back), want, "codec {}", codec.name());
+            assert_eq!(back.is_weighted(), csr.is_weighted(), "{}", codec.name());
+            assert_eq!(wedge_multiset(&back), want, "codec {}", codec.name());
+        }
+    });
+}
+
+#[test]
+fn prop_v1_shard_payloads_load_through_every_codec() {
+    // the v1→v2 compatibility path: legacy unweighted payloads must decode
+    // through the byte codecs and the cache's shard entry point unchanged
+    prop::check(0x1001, 30, |g| {
+        let lo = g.usize_in(0, 50) as u32;
+        let width = g.usize_in(1, 40) as u32;
+        let m = g.usize_in(0, 200);
+        let edges: Vec<(u32, u32)> = (0..m)
+            .map(|_| {
+                (
+                    g.usize_in(0, 500) as u32,
+                    lo + g.usize_in(0, width as usize) as u32,
+                )
+            })
+            .collect();
+        let csr = Csr::from_edges(lo, lo + width, &edges);
+        let v1 = shardfile::to_bytes_v1(&csr);
+        // direct load
+        let back = shardfile::from_bytes(&v1).unwrap();
+        assert_eq!(back, csr);
+        assert!(!back.is_weighted());
+        // through every byte codec (DeltaVarint re-parses the payload, so
+        // it exercises the v1 reader too)
+        for codec in Codec::ALL {
+            let compressed = codec.compress(&v1).unwrap();
+            let decoded = codec.decompress_shard(&compressed).unwrap();
+            assert_eq!(edge_multiset(&decoded), edge_multiset(&csr), "{}", codec.name());
+        }
+    });
+}
+
+#[test]
+fn prop_vertexinfo_payloads_roundtrip_every_lane() {
+    fn lane_values<V: VertexValue>(g: &mut Gen, n: usize, f: fn(u64) -> V) -> Vec<V> {
+        (0..n).map(|_| f(g.u64())).collect()
+    }
+    prop::check(0x71FE, 40, |g| {
+        let n = g.usize_in(0, 200);
+        let degrees = Degrees {
+            in_deg: (0..n).map(|_| g.usize_in(0, 1000) as u32).collect(),
+            out_deg: (0..n).map(|_| g.usize_in(0, 1000) as u32).collect(),
+        };
+        let values = match g.usize_in(0, 5) {
+            0 => AnyValues::U32(lane_values(g, n, |x| x as u32)),
+            1 => AnyValues::U64(lane_values(g, n, |x| x)),
+            2 => AnyValues::F32(lane_values(g, n, |x| (x >> 40) as f32 * 0.5)),
+            3 => AnyValues::F64(lane_values(g, n, |x| (x >> 20) as f64 * 0.25)),
+            _ => AnyValues::default(), // empty values stay legal
+        };
+        let vi = VertexInfo { degrees, values };
+        let bytes = vi.to_bytes();
+        let back = VertexInfo::from_bytes(&bytes).unwrap();
+        assert_eq!(back.degrees.in_deg, vi.degrees.in_deg);
+        assert_eq!(back.degrees.out_deg, vi.degrees.out_deg);
+        if vi.values.is_empty() {
+            assert!(back.values.is_empty());
+        } else {
+            assert_eq!(back.values, vi.values);
+        }
+        // truncation anywhere must fail loudly
+        let cut = g.usize_in(0, bytes.len());
+        if cut < bytes.len() {
+            assert!(VertexInfo::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
         }
     });
 }

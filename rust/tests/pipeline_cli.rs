@@ -27,8 +27,8 @@ fn build_pipeline() -> (DatasetDir, usize) {
 }
 
 fn run(dir: &DatasetDir, app: &dyn VertexProgram, iters: usize) -> Vec<f32> {
-    let engine = VswEngine::open(dir.clone(), EngineConfig { max_iters: iters, ..Default::default() })
-        .unwrap();
+    let cfg = EngineConfig { max_iters: iters, ..Default::default() };
+    let engine = VswEngine::open(dir.clone(), cfg).unwrap();
     engine.run(app).unwrap().values
 }
 
