@@ -10,10 +10,15 @@
 //! (results bit-identical, time and io-wait may differ).
 //!
 //! `--quick` (the CI bench-smoke mode): tiny dataset, short PageRank
-//! horizon, and a machine-readable record appended to
-//! `$GRAPHMP_BENCH_JSON` if set.
+//! horizon, and machine-readable records appended to
+//! `$GRAPHMP_BENCH_JSON` if set — the headline `fig7_periter` run plus the
+//! compressed-domain ablation pair (`fig7_gather_stream` /
+//! `fig7_gather_decode`: same app, same compressed cache, hits streamed
+//! into the gather vs decoded to a CSR per hit).  The `decode` column is
+//! the `decode_ns` split: time spent turning cached bytes into walkable
+//! form, as opposed to gathering over them.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use graphmp::apps::{self, VertexProgram};
 use graphmp::baselines::{InMemEngine, OocEngine};
@@ -22,7 +27,7 @@ use graphmp::coordinator::benchjson::{self, BenchRecord};
 use graphmp::coordinator::cli::Args;
 use graphmp::coordinator::datasets::Dataset;
 use graphmp::coordinator::experiment::{
-    ensure_dataset, run_graphmp, run_graphmp_adaptive, GraphMpVariant,
+    ensure_dataset, run_graphmp, run_graphmp_adaptive, run_graphmp_cfg, GraphMpVariant,
 };
 use graphmp::coordinator::report;
 use graphmp::engine::RunStats;
@@ -53,6 +58,7 @@ fn main() -> anyhow::Result<()> {
             "window",
             "io wait (a)",
             "compute (a)",
+            "decode (a)",
             "GraphMat",
             "GraphMP iters",
             "GraphMat iters",
@@ -79,6 +85,9 @@ fn main() -> anyhow::Result<()> {
             // wait column is only the *unhidden* part of shard loading
             humansize::duration(ga.stats.total_io_wait()),
             humansize::duration(ga.stats.total_compute()),
+            // decode_ns: byte→walkable work (runs on the I/O pool, so it
+            // is hidden behind compute, not a subset of either column)
+            humansize::duration(Duration::from_nanos(ga.stats.total_decode_ns())),
             humansize::duration(m.total_wall),
             g.stats.num_iters().to_string(),
             m.iter_walls.len().to_string(),
@@ -99,5 +108,37 @@ fn main() -> anyhow::Result<()> {
             stats,
         ))?;
     }
+
+    // ---- compressed-domain ablation: the same PageRank workload over the
+    // same compressed (snaplite) cache, with hits streamed into the gather
+    // fold (the default) vs decoded to a fresh CSR per hit (the pre-
+    // streaming behavior).  Both rows land in $GRAPHMP_BENCH_JSON so the
+    // bench-smoke gate tracks the pair PR over PR.
+    let pr = apps::by_name("pagerank")?.into_f32()?;
+    let mut ablation = Table::new(
+        &format!("Fig7 ablation: compressed-domain gather vs decode, {}", dataset.name),
+        &["path", "total", "io wait", "compute", "decode", "hit ratio"],
+    );
+    for (label, stream) in [("stream (default)", true), ("decode per hit", false)] {
+        let t0 = Instant::now();
+        let mut cfg = GraphMpVariant::Cached(Codec::SnapLite).to_config(true, pr_iters);
+        cfg.stream_gather = stream;
+        let (run, _load) = run_graphmp_cfg(&dir, cfg, pr.as_ref())?;
+        ablation.row(&[
+            label.into(),
+            humansize::duration(run.stats.total_wall),
+            humansize::duration(run.stats.total_io_wait()),
+            humansize::duration(run.stats.total_compute()),
+            humansize::duration(Duration::from_nanos(run.stats.total_decode_ns())),
+            format!("{:.1}%", run.stats.cache_hit_ratio() * 100.0),
+        ]);
+        benchjson::record_if_requested(&BenchRecord::from_stats(
+            if stream { "fig7_gather_stream" } else { "fig7_gather_decode" },
+            t0.elapsed(),
+            &run.stats,
+        ))?;
+    }
+    ablation.print();
+    report::append_markdown(&report::results_path(), &ablation)?;
     Ok(())
 }

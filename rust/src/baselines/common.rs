@@ -130,8 +130,21 @@ pub fn read_values<V: VertexValue>(path: &Path) -> Result<Vec<V>> {
 
 /// Decode a value array from raw LE bytes (the read-ahead path).
 pub fn values_from_bytes<V: VertexValue>(buf: &[u8]) -> Result<Vec<V>> {
+    let mut out = Vec::new();
+    values_from_bytes_into(buf, &mut out)?;
+    Ok(out)
+}
+
+/// [`values_from_bytes`] into a caller-owned buffer (cleared first) — the
+/// baselines' shared fetch path re-reads value files every iteration, and
+/// decoding into a reused buffer keeps their steady state allocation-free
+/// too (the same discipline as the VSW engine's scratch arenas).
+pub fn values_from_bytes_into<V: VertexValue>(buf: &[u8], out: &mut Vec<V>) -> Result<()> {
     anyhow::ensure!(buf.len() % V::BYTES == 0, "value file not {}-aligned", V::BYTES);
-    Ok(buf.chunks_exact(V::BYTES).map(V::read_le).collect())
+    out.clear();
+    out.reserve(buf.len() / V::BYTES);
+    out.extend(buf.chunks_exact(V::BYTES).map(V::read_le));
+    Ok(())
 }
 
 /// Write raw edge records: `(src,dst)` pairs (D = 8 B/edge), or

@@ -116,6 +116,12 @@ impl DswEngine {
         let mut iter_walls = Vec::new();
         let mut iter_io = Vec::new();
         let mut edges_processed = 0u64;
+        // reusable value-decode buffers (the shared fetch path's scratch):
+        // every (column, block) pair re-reads value files each iteration,
+        // so decoding into fresh vectors dominated steady-state allocation
+        let mut old_buf: Vec<V> = Vec::new();
+        let mut src_buf: Vec<V> = Vec::new();
+        let mut chunk_buf: Vec<V> = Vec::new();
 
         for _iter in 0..max_iters {
             let t_iter = Instant::now();
@@ -142,8 +148,11 @@ impl DswEngine {
 
             for j in 0..q {
                 let (lo_j, hi_j) = (self.bounds[j], self.bounds[j + 1]);
-                let old: Vec<V> =
-                    common::values_from_bytes(&common::next_buf(&mut stream, "dsw column")?)?;
+                common::values_from_bytes_into(
+                    &common::next_buf(&mut stream, "dsw column")?,
+                    &mut old_buf,
+                )?;
+                let old = &old_buf;
                 let reduce = app.reduce();
                 let mut acc = vec![reduce.identity::<V>(); (hi_j - lo_j) as usize];
                 // GridGraph still *applies* for inactive columns (values may
@@ -154,8 +163,11 @@ impl DswEngine {
                     }
                     let lo_i = self.bounds[i];
                     // C·V/√P
-                    let src: Vec<V> =
-                        common::values_from_bytes(&common::next_buf(&mut stream, "dsw chunk")?)?;
+                    common::values_from_bytes_into(
+                        &common::next_buf(&mut stream, "dsw chunk")?,
+                        &mut src_buf,
+                    )?;
+                    let src = &src_buf;
                     // D·E
                     let (block, bweights) = common::edges_from_bytes_w(
                         &common::next_buf(&mut stream, "dsw block")?,
@@ -171,7 +183,8 @@ impl DswEngine {
                         edges_processed += 1;
                     }
                 }
-                let mut chunk = old.clone();
+                chunk_buf.clear();
+                chunk_buf.extend_from_slice(old);
                 for k in 0..acc.len() {
                     // PageRank-style Sum programs recompute from the full
                     // in-edge set; with skipped rows the sum would be partial,
@@ -181,11 +194,11 @@ impl DswEngine {
                         changed = true;
                         next_active.set(j);
                     }
-                    chunk[k] = nv;
+                    chunk_buf[k] = nv;
                 }
                 // double-buffered chunk write (Jacobi semantics): later
                 // columns must still read this iteration's *input* values
-                common::write_values(&self.chunk_next_path(j), &chunk)?; // C·V/√P
+                common::write_values(&self.chunk_next_path(j), &chunk_buf)?; // C·V/√P
             }
             for j in 0..q {
                 std::fs::rename(self.chunk_next_path(j), self.chunk_path(j))?;

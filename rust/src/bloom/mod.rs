@@ -9,10 +9,29 @@
 use anyhow::Result;
 
 use crate::util::bitset::BitSet;
-use crate::util::hash::bloom_indexes;
+use crate::util::hash::{bloom_basis, bloom_indexes};
 
 /// Maximum number of probe hashes supported.
 pub const MAX_K: u32 = 16;
+
+/// A key's precomputed double-hashing basis: the filter-independent part
+/// of a Bloom probe.  The engine probes every shard's filter with the same
+/// active set each iteration; hashing each vertex once into a `Digest` and
+/// reusing it across all `P` filters turns the screening cost from
+/// `O(P × |active| × hash)` into `O(|active| × hash + P × |active| × k)`
+/// integer ops — the hash is the expensive part.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Digest {
+    h1: u64,
+    h2: u64,
+}
+
+/// Hash a key once into its reusable probe [`Digest`].
+#[inline]
+pub fn digest(key: u64) -> Digest {
+    let (h1, h2) = bloom_basis(key);
+    Digest { h1, h2 }
+}
 
 /// A standard Bloom filter keyed by `u64` (vertex ids widen losslessly).
 #[derive(Debug, Clone)]
@@ -48,16 +67,30 @@ impl BloomFilter {
         self.items += 1;
     }
 
+    /// Probe with a precomputed basis: derives this filter's `k` bit
+    /// positions from `(h1, h2)` — identical bits to [`Self::contains`].
+    #[inline]
+    pub fn contains_digest(&self, d: Digest) -> bool {
+        let m = self.bits.len() as u64;
+        (0..self.k as u64)
+            .all(|i| self.bits.get((d.h1.wrapping_add(d.h2.wrapping_mul(i)) % m) as usize))
+    }
+
     /// May return a false positive; never a false negative.
     pub fn contains(&self, key: u64) -> bool {
-        let mut idx = [0u64; MAX_K as usize];
-        bloom_indexes(key, self.k, self.bits.len() as u64, &mut idx);
-        idx[..self.k as usize].iter().all(|&i| self.bits.get(i as usize))
+        self.contains_digest(digest(key))
     }
 
     /// True if any key in `keys` may be present (the shard-activity probe).
     pub fn contains_any<I: IntoIterator<Item = u64>>(&self, keys: I) -> bool {
         keys.into_iter().any(|k| self.contains(k))
+    }
+
+    /// [`Self::contains_any`] over pre-hashed digests — the engine hashes
+    /// each active vertex once per iteration and screens every shard's
+    /// filter with the same digest array.
+    pub fn contains_any_digest(&self, digests: &[Digest]) -> bool {
+        digests.iter().any(|&d| self.contains_digest(d))
     }
 
     /// How many of `keys` may be present — the I/O governor's active-source
@@ -66,6 +99,11 @@ impl BloomFilter {
     /// positives like any Bloom probe, but never undercounts.
     pub fn count_contained<I: IntoIterator<Item = u64>>(&self, keys: I) -> usize {
         keys.into_iter().filter(|&k| self.contains(k)).count()
+    }
+
+    /// [`Self::count_contained`] over pre-hashed digests.
+    pub fn count_contained_digest(&self, digests: &[Digest]) -> usize {
+        digests.iter().filter(|&&d| self.contains_digest(d)).count()
     }
 
     /// Empirical bits-set ratio (diagnostics / load factor).
@@ -213,6 +251,40 @@ mod tests {
                 "count_contained must never undercount inserted keys"
             );
         });
+    }
+
+    #[test]
+    fn digest_probes_agree_with_key_probes() {
+        // one digest per key, probed against filters of different (m, k)
+        // geometries, must answer exactly like the per-key path
+        let mut filters = vec![
+            BloomFilter::with_capacity(100, 0.01),
+            BloomFilter::with_capacity(5000, 0.001),
+            BloomFilter::new(64, 1),
+        ];
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let keys: Vec<u64> = (0..300).map(|_| rng.next_u64()).collect();
+        for f in &mut filters {
+            for &k in keys.iter().step_by(3) {
+                f.insert(k);
+            }
+        }
+        let digests: Vec<Digest> = keys.iter().map(|&k| digest(k)).collect();
+        for f in &filters {
+            for (&k, &d) in keys.iter().zip(&digests) {
+                assert_eq!(f.contains(k), f.contains_digest(d));
+            }
+            assert_eq!(
+                f.count_contained(keys.iter().copied()),
+                f.count_contained_digest(&digests)
+            );
+            assert_eq!(
+                f.contains_any(keys.iter().copied()),
+                f.contains_any_digest(&digests)
+            );
+        }
+        assert!(!filters[0].contains_any_digest(&[]));
+        assert_eq!(filters[0].count_contained_digest(&[]), 0);
     }
 
     #[test]

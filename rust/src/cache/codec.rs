@@ -117,6 +117,43 @@ impl Codec {
             _ => crate::storage::shardfile::from_bytes(&self.decompress(data)?),
         }
     }
+
+    /// Does a cache slot under this codec hold transformed bytes (true) or
+    /// the decoded shard itself (false, mode-1)?
+    pub fn is_compressing(&self) -> bool {
+        *self != Codec::None
+    }
+
+    /// Byte-codec decompression into a caller-owned scratch buffer
+    /// (cleared first) — the compressed-domain gather path's decode step,
+    /// reusing one allocation per worker across shards.  `DeltaVarint` is
+    /// structural, not byte-oriented: walk it with
+    /// [`super::deltavarint::plan`]/`DvCursor` instead.
+    pub fn decompress_payload_into(&self, data: &[u8], out: &mut Vec<u8>) -> Result<()> {
+        match self {
+            Codec::None => {
+                out.clear();
+                out.extend_from_slice(data);
+            }
+            Codec::SnapLite => super::snaplite::decompress_into(data, out)?,
+            Codec::Zlib1 | Codec::Zlib3 => {
+                out.clear();
+                let mut dec = flate2::read::ZlibDecoder::new(data);
+                dec.read_to_end(out)?;
+            }
+            Codec::Zstd1 => {
+                // the vendored shim's bulk API allocates internally; copy
+                // into the scratch so the caller's reuse contract holds
+                let v = zstd::bulk::decompress(data, 1 << 30).context("zstd decompress")?;
+                out.clear();
+                out.extend_from_slice(&v);
+            }
+            Codec::DeltaVarint => {
+                bail!("delta-varint payloads are walked structurally, not byte-decompressed")
+            }
+        }
+        Ok(())
+    }
 }
 
 impl FromStr for Codec {
@@ -187,6 +224,21 @@ mod tests {
         let m2 = Codec::SnapLite.compress(&payload).unwrap().len();
         let m4 = Codec::Zlib3.compress(&payload).unwrap().len();
         assert!(m4 <= m2, "zlib-3 {m4} vs snaplite {m2}");
+    }
+
+    #[test]
+    fn payload_scratch_decode_matches_decompress() {
+        let payload = shard_payload();
+        let mut scratch = Vec::new();
+        for codec in [Codec::None, Codec::SnapLite, Codec::Zlib1, Codec::Zlib3, Codec::Zstd1] {
+            let c = codec.compress(&payload).unwrap();
+            codec.decompress_payload_into(&c, &mut scratch).unwrap();
+            assert_eq!(scratch, codec.decompress(&c).unwrap(), "codec {}", codec.name());
+            assert_eq!(scratch, payload, "codec {}", codec.name());
+        }
+        let dv = Codec::DeltaVarint.compress(&payload).unwrap();
+        assert!(Codec::DeltaVarint.decompress_payload_into(&dv, &mut scratch).is_err());
+        assert!(Codec::DeltaVarint.is_compressing() && !Codec::None.is_compressing());
     }
 
     #[test]

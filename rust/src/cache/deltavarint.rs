@@ -110,6 +110,181 @@ pub fn decode(buf: &[u8]) -> Result<Csr> {
     Ok(csr)
 }
 
+// ---- compressed-domain walking ---------------------------------------------
+//
+// The cursor API lets the engine gather straight out of a delta-varint
+// payload: no `row_ptr`/`col`/`wgt` vectors are ever materialized.  A
+// [`plan`] pass validates the payload end-to-end (same rejections as
+// [`decode`]) and records per-chunk byte offsets so a shard's rows can be
+// decoded independently on several cores; each [`DvCursor`] then streams
+// its chunk's rows in exactly the order [`decode`] would store them, so a
+// fold over the cursor is bit-identical to a fold over the decoded CSR.
+
+/// One independently decodable run of rows inside a payload.
+#[derive(Debug, Clone, Copy)]
+pub struct DvChunk {
+    /// Covered rows `[start_row, end_row)`, shard-local.
+    pub start_row: usize,
+    pub end_row: usize,
+    /// Byte offset of `start_row`'s degree varint.
+    deg_pos: usize,
+    /// Byte offset of `start_row`'s first source varint.
+    col_pos: usize,
+}
+
+/// A validated chunked walk plan over one delta-varint payload.
+#[derive(Debug, Clone)]
+pub struct DvPlan {
+    pub lo: u32,
+    pub num_rows: usize,
+    pub weighted: bool,
+    pub num_edges: usize,
+    pub chunks: Vec<DvChunk>,
+}
+
+/// Scan `buf` once — validating exactly what [`decode`] validates, but
+/// materializing nothing — and split its rows into chunks of at most
+/// `chunk_rows` (0 ⇒ a single chunk).  The scan is the codec's full
+/// integrity check: truncation, unknown flags, column overflow and
+/// trailing bytes are all rejected here, so cursor walks over a planned
+/// payload only fail on logic bugs.
+pub fn plan(buf: &[u8], chunk_rows: usize) -> Result<DvPlan> {
+    let chunk_rows = if chunk_rows == 0 { usize::MAX } else { chunk_rows };
+    let mut pos = 0usize;
+    let (lo, p) = varint::read_u64(buf, pos).ok_or_else(|| anyhow::anyhow!("dv: lo"))?;
+    pos = p;
+    let (width, p) = varint::read_u64(buf, pos).ok_or_else(|| anyhow::anyhow!("dv: width"))?;
+    pos = p;
+    let (flags, p) = varint::read_u64(buf, pos).ok_or_else(|| anyhow::anyhow!("dv: flags"))?;
+    pos = p;
+    ensure!(flags & !FLAG_WEIGHTED == 0, "dv: unknown flags {flags:#x}");
+    ensure!(
+        lo.checked_add(width).is_some_and(|hi| hi <= u32::MAX as u64),
+        "dv: interval overflow"
+    );
+    let weighted = flags & FLAG_WEIGHTED != 0;
+    let n = width as usize;
+
+    // pass 1: the degree section — total edge count and the column start
+    let deg_start = pos;
+    let mut total = 0u64;
+    for _ in 0..n {
+        let (d, p) = varint::read_u64(buf, pos).ok_or_else(|| anyhow::anyhow!("dv: degree"))?;
+        pos = p;
+        total = total.saturating_add(d);
+        ensure!(total <= u32::MAX as u64, "dv: too many edges");
+    }
+    let col_start = pos;
+
+    // pass 2: walk the column section row by row (degrees re-read from the
+    // degree section with a second pointer), recording chunk boundaries
+    let mut chunks = Vec::with_capacity(if n == 0 { 1 } else { n.div_ceil(chunk_rows) });
+    let mut deg_pos = deg_start;
+    let mut col_pos = col_start;
+    for row in 0..n {
+        if row % chunk_rows == 0 {
+            chunks.push(DvChunk {
+                start_row: row,
+                end_row: row.saturating_add(chunk_rows).min(n),
+                deg_pos,
+                col_pos,
+            });
+        }
+        let (d, p) =
+            varint::read_u64(buf, deg_pos).ok_or_else(|| anyhow::anyhow!("dv: degree"))?;
+        deg_pos = p;
+        let mut prev = 0u64;
+        for j in 0..d {
+            let (delta, p) =
+                varint::read_u64(buf, col_pos).ok_or_else(|| anyhow::anyhow!("dv: col"))?;
+            col_pos = p;
+            // saturating: an adversarial delta rejects via the range check
+            let v = if j == 0 { delta } else { prev.saturating_add(delta) };
+            ensure!(v <= u32::MAX as u64, "dv: col overflow");
+            prev = v;
+            if weighted {
+                ensure!(buf.len() >= col_pos + 4, "dv: weight truncated");
+                col_pos += 4;
+            }
+        }
+    }
+    ensure!(col_pos == buf.len(), "dv: trailing bytes");
+    if chunks.is_empty() {
+        chunks.push(DvChunk { start_row: 0, end_row: 0, deg_pos, col_pos });
+    }
+    Ok(DvPlan {
+        lo: lo as u32,
+        num_rows: n,
+        weighted,
+        num_edges: total as usize,
+        chunks,
+    })
+}
+
+impl DvPlan {
+    /// A streaming cursor over one of this plan's chunks.  `buf` must be
+    /// the same payload the plan was built from.
+    pub fn cursor<'a>(&self, buf: &'a [u8], chunk: &DvChunk) -> DvCursor<'a> {
+        DvCursor {
+            buf,
+            weighted: self.weighted,
+            deg_pos: chunk.deg_pos,
+            col_pos: chunk.col_pos,
+            row: chunk.start_row,
+            end_row: chunk.end_row,
+        }
+    }
+}
+
+/// Streams one chunk's rows straight out of the varint payload, in the
+/// exact per-row sorted order [`decode`] materializes.
+pub struct DvCursor<'a> {
+    buf: &'a [u8],
+    weighted: bool,
+    deg_pos: usize,
+    col_pos: usize,
+    row: usize,
+    end_row: usize,
+}
+
+impl DvCursor<'_> {
+    pub fn rows_left(&self) -> usize {
+        self.end_row - self.row
+    }
+
+    /// Decode the next row, calling `f(src, weight)` once per in-edge
+    /// (weight 1.0 on unweighted payloads).
+    #[inline]
+    pub fn next_row<F: FnMut(u32, f32)>(&mut self, mut f: F) -> Result<()> {
+        ensure!(self.row < self.end_row, "dv: cursor walked past its chunk");
+        let (d, p) = varint::read_u64(self.buf, self.deg_pos)
+            .ok_or_else(|| anyhow::anyhow!("dv: degree"))?;
+        self.deg_pos = p;
+        let mut prev = 0u64;
+        for j in 0..d {
+            let (delta, p) = varint::read_u64(self.buf, self.col_pos)
+                .ok_or_else(|| anyhow::anyhow!("dv: col"))?;
+            self.col_pos = p;
+            // saturating: an adversarial delta rejects via the range check
+            let v = if j == 0 { delta } else { prev.saturating_add(delta) };
+            ensure!(v <= u32::MAX as u64, "dv: col overflow");
+            prev = v;
+            let w = if self.weighted {
+                ensure!(self.buf.len() >= self.col_pos + 4, "dv: weight truncated");
+                let bits =
+                    u32::from_le_bytes(self.buf[self.col_pos..self.col_pos + 4].try_into().unwrap());
+                self.col_pos += 4;
+                f32::from_bits(bits)
+            } else {
+                1.0
+            };
+            f(v as u32, w);
+        }
+        self.row += 1;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,6 +376,72 @@ mod tests {
         for cut in 0..buf.len() {
             assert!(decode(&buf[..cut]).is_err(), "accepted truncation at {cut}");
         }
+    }
+
+    /// Walk every chunk of a plan, reconstructing (row, src, weight-bits)
+    /// triples in visit order.
+    fn walk(buf: &[u8], chunk_rows: usize) -> (DvPlan, Vec<(usize, u32, u32)>) {
+        let plan = plan(buf, chunk_rows).unwrap();
+        let mut out = Vec::new();
+        for chunk in &plan.chunks {
+            let mut cur = plan.cursor(buf, chunk);
+            for row in chunk.start_row..chunk.end_row {
+                cur.next_row(|s, w| out.push((row, s, w.to_bits()))).unwrap();
+            }
+            assert_eq!(cur.rows_left(), 0);
+        }
+        (plan, out)
+    }
+
+    /// The decoded CSR flattened in the same (row, src, weight) order the
+    /// cursor streams.
+    fn decoded_triples(csr: &Csr) -> Vec<(usize, u32, u32)> {
+        let mut out = Vec::new();
+        for i in 0..csr.num_vertices() {
+            for k in csr.row_ptr[i] as usize..csr.row_ptr[i + 1] as usize {
+                out.push((i, csr.col[k], csr.weight(k).to_bits()));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn cursor_streams_exactly_what_decode_materializes() {
+        for weighted in [false, true] {
+            let edges = [(9u32, 5u32), (2, 5), (2, 7), (0, 7), (1, 6), (2, 5)];
+            let weights: Vec<f32> =
+                if weighted { vec![1.5, 0.25, 2.0, 0.5, 1.0, 0.125] } else { Vec::new() };
+            let csr = Csr::from_edges_weighted(5, 9, &edges, &weights);
+            let buf = encode(&csr);
+            let decoded = decode(&buf).unwrap();
+            for chunk_rows in [0usize, 1, 2, 3, 100] {
+                let (p, triples) = walk(&buf, chunk_rows);
+                assert_eq!(p.lo, 5);
+                assert_eq!(p.num_rows, 4);
+                assert_eq!(p.weighted, weighted);
+                assert_eq!(p.num_edges, 6);
+                assert_eq!(triples, decoded_triples(&decoded), "chunk_rows={chunk_rows}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_rejects_what_decode_rejects() {
+        let csr = Csr::from_edges_weighted(
+            0,
+            4,
+            &[(1, 0), (2, 1), (3, 2)],
+            &[0.5, 1.5, 2.5],
+        );
+        let buf = encode(&csr);
+        for cut in 0..buf.len() {
+            assert!(plan(&buf[..cut], 2).is_err(), "plan accepted truncation at {cut}");
+        }
+        // trailing garbage is rejected too
+        let mut long = buf.clone();
+        long.push(0);
+        assert!(plan(&long, 2).is_err());
+        assert!(plan(&buf, 2).is_ok());
     }
 
     #[test]

@@ -22,4 +22,4 @@ pub mod snaplite;
 mod store;
 
 pub use codec::{CacheMode, Codec};
-pub use store::{CacheStats, ShardCache};
+pub use store::{CacheStats, ShardCache, ShardView};

@@ -108,9 +108,20 @@ fn table_pos_fix(cand: usize) -> usize {
 
 /// Decompress a [`compress`] output.
 pub fn decompress(input: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    decompress_into(input, &mut out)?;
+    Ok(out)
+}
+
+/// [`decompress`] into a caller-owned buffer (cleared first), so a hot
+/// loop can reuse one allocation across payloads — the compressed edge
+/// cache decompresses every cached shard every iteration, and this is
+/// what keeps that steady state allocation-free.
+pub fn decompress_into(input: &[u8], out: &mut Vec<u8>) -> Result<()> {
     ensure!(input.len() >= 8, "snaplite: header truncated");
     let expect = u64::from_le_bytes(input[0..8].try_into().unwrap()) as usize;
-    let mut out = Vec::with_capacity(expect);
+    out.clear();
+    out.reserve(expect);
     let mut pos = 8usize;
     while pos < input.len() {
         let tag = input[pos];
@@ -151,7 +162,7 @@ pub fn decompress(input: &[u8]) -> Result<Vec<u8>> {
         }
     }
     ensure!(out.len() == expect, "snaplite: length mismatch {} vs {}", out.len(), expect);
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -206,6 +217,19 @@ mod tests {
         // worst case: 8B header + ~1 tag per 126 literals
         assert!(c.len() < data.len() + data.len() / 64 + 64);
         assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn decompress_into_reuses_buffer_across_payloads() {
+        let small = compress(b"hello hello hello hello");
+        let big = compress(&vec![7u8; 4096]);
+        let mut buf = Vec::new();
+        decompress_into(&big, &mut buf).unwrap();
+        assert_eq!(buf, vec![7u8; 4096]);
+        // big -> small: contents replaced, capacity retained for reuse
+        decompress_into(&small, &mut buf).unwrap();
+        assert_eq!(buf, b"hello hello hello hello");
+        assert!(buf.capacity() >= 4096);
     }
 
     #[test]

@@ -44,10 +44,11 @@ impl CacheStats {
 /// behind an `Arc` — the paper's uncompressed cache keeps the in-memory
 /// shard representation, and returning a clone of the Arc makes a cache hit
 /// allocation-free (§Perf opt-2: -31% steady-iteration time).  Compressing
-/// codecs store the compressed bytes and decompress per hit, exactly the
-/// trade the paper's modes 2-4 make.
+/// codecs store the compressed bytes — also behind an `Arc`, so a hit can
+/// share the slot's payload with the compressed-domain gather path (or
+/// decompress it) without copying a byte or holding the slot lock.
 enum CacheVal {
-    Bytes(Vec<u8>),
+    Bytes(Arc<Vec<u8>>),
     Decoded(Arc<Csr>),
 }
 
@@ -58,6 +59,21 @@ impl CacheVal {
             CacheVal::Decoded(c) => shardfile::estimated_bytes(c),
         }
     }
+}
+
+/// What [`ShardCache::fetch_view`] hands the engine: the cheapest faithful
+/// representation of the shard it could produce.  `Decoded` is the mode-1
+/// hit (and mode-1 admission) — a clone of the cached `Arc<Csr>`.
+/// `Compressed` is a compressing-codec hit: the slot's payload shared by
+/// `Arc` (no `payload.clone()`, no decode) for the caller to walk in the
+/// compressed domain or decompress into its own scratch.  `Raw` is a disk
+/// read that was not (or could not be) admitted decoded: the serialized
+/// shard bytes, ready for an in-place
+/// [`crate::storage::shardfile::parse_layout`] walk.
+pub enum ShardView {
+    Decoded(Arc<Csr>),
+    Compressed { codec: Codec, bytes: Arc<Vec<u8>> },
+    Raw(Arc<Vec<u8>>),
 }
 
 struct Slot {
@@ -144,34 +160,49 @@ impl ShardCache {
             .count()
     }
 
-    /// Probe for shard `id`; on hit, return the CSR (allocation-free for
-    /// mode-1, decompressed otherwise).
-    pub fn get(&self, id: usize) -> Result<Option<Arc<Csr>>> {
+    /// Probe the slot under its lock; on hit the payload comes back as a
+    /// cheap `Arc` clone and the hit/miss accounting is updated.
+    fn probe(&self, id: usize) -> Option<ShardView> {
         let mut slot = self.slots[id].lock().unwrap();
-        let found: Option<Arc<Csr>> = match &slot.data {
-            Some(CacheVal::Decoded(csr)) => Some(csr.clone()),
-            Some(CacheVal::Bytes(data)) => {
-                let t0 = std::time::Instant::now();
-                let csr = self.codec.decompress_shard(data)?;
-                self.stats
-                    .decompress_ns
-                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                Some(Arc::new(csr))
+        let found = match &slot.data {
+            Some(CacheVal::Decoded(csr)) => Some(ShardView::Decoded(csr.clone())),
+            Some(CacheVal::Bytes(b)) => {
+                Some(ShardView::Compressed { codec: self.codec, bytes: b.clone() })
             }
             None => None,
         };
         match found {
-            Some(csr) => {
+            Some(view) => {
                 slot.referenced.store(true, Ordering::Relaxed);
                 slot.hits += 1;
                 self.stats.hits.fetch_add(1, Ordering::Relaxed);
-                Ok(Some(csr))
+                Some(view)
             }
             None => {
                 slot.misses += 1;
                 self.stats.misses.fetch_add(1, Ordering::Relaxed);
-                Ok(None)
+                None
             }
+        }
+    }
+
+    /// Probe for shard `id`; on hit, return the CSR (allocation-free for
+    /// mode-1, decompressed otherwise).  Decompression runs on the slot's
+    /// `Arc`-shared payload *after* the slot lock is released — a slow
+    /// codec never serializes other probes, and no payload copy is made.
+    pub fn get(&self, id: usize) -> Result<Option<Arc<Csr>>> {
+        match self.probe(id) {
+            Some(ShardView::Decoded(csr)) => Ok(Some(csr)),
+            Some(ShardView::Compressed { codec, bytes }) => {
+                let t0 = std::time::Instant::now();
+                let csr = codec.decompress_shard(&bytes)?;
+                self.stats
+                    .decompress_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                Ok(Some(Arc::new(csr)))
+            }
+            Some(ShardView::Raw(_)) => unreachable!("probe never yields Raw"),
+            None => Ok(None),
         }
     }
 
@@ -213,10 +244,10 @@ impl ShardCache {
     /// over budget; gives up (rejects) if the payload alone exceeds budget.
     pub fn insert(&self, id: usize, payload: &[u8]) -> Result<()> {
         let t0 = std::time::Instant::now();
-        let val = if self.codec == Codec::None {
-            CacheVal::Decoded(Arc::new(shardfile::from_bytes(payload)?))
+        let val = if self.codec.is_compressing() {
+            CacheVal::Bytes(Arc::new(self.codec.compress(payload)?))
         } else {
-            CacheVal::Bytes(self.codec.compress(payload)?)
+            CacheVal::Decoded(Arc::new(shardfile::from_bytes(payload)?))
         };
         self.stats
             .compress_ns
@@ -269,7 +300,7 @@ impl ShardCache {
             // hand that Arc back instead of decoding a second time (a plain
             // peek, no hit/miss accounting: this acquisition was already
             // counted as a miss above)
-            if self.codec == Codec::None {
+            if !self.codec.is_compressing() {
                 let slot = self.slots[id].lock().unwrap();
                 if let Some(CacheVal::Decoded(csr)) = &slot.data {
                     return Ok(csr.clone());
@@ -277,6 +308,34 @@ impl ShardCache {
             }
         }
         Ok(Arc::new(shardfile::from_bytes(&bytes)?))
+    }
+
+    /// [`Self::fetch_decoded`]'s compressed-domain twin: same probe / read
+    /// / admit protocol and identical hit/miss accounting, but the caller
+    /// gets the cheapest faithful [`ShardView`] instead of a decoded CSR —
+    /// a compressing-codec hit shares the slot payload by `Arc` (no clone,
+    /// no decode), and a miss returns the serialized bytes just read for
+    /// in-place walking.  Mode-1 behaves exactly like `fetch_decoded`.
+    pub fn fetch_view(
+        &self,
+        id: usize,
+        admit: bool,
+        read: impl FnOnce() -> Result<Vec<u8>>,
+    ) -> Result<ShardView> {
+        if let Some(view) = self.probe(id) {
+            return Ok(view);
+        }
+        let bytes = read()?;
+        if admit {
+            let _ = self.insert(id, &bytes);
+            if !self.codec.is_compressing() {
+                let slot = self.slots[id].lock().unwrap();
+                if let Some(CacheVal::Decoded(csr)) = &slot.data {
+                    return Ok(ShardView::Decoded(csr.clone()));
+                }
+            }
+        }
+        Ok(ShardView::Raw(Arc::new(bytes)))
     }
 
     /// Pick a victim and drop it; skip `protect` (the id being inserted).
@@ -467,6 +526,61 @@ mod tests {
         assert_eq!(reads.load(Ordering::Relaxed), 3);
         assert_eq!(cache.num_cached(), 0);
         assert_eq!(cache.stats.misses.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn fetch_view_shares_slot_bytes_without_cloning() {
+        let cache = ShardCache::new(2, Codec::SnapLite, usize::MAX);
+        let (csr, payload) = shard(0, 400);
+        let reads = AtomicU64::new(0);
+        // miss: serialized bytes come back raw, one read
+        let v = cache
+            .fetch_view(0, true, || {
+                reads.fetch_add(1, Ordering::Relaxed);
+                Ok(payload.clone())
+            })
+            .unwrap();
+        match v {
+            ShardView::Raw(bytes) => assert_eq!(*bytes, payload),
+            _ => panic!("miss must return the raw read"),
+        }
+        assert_eq!(reads.load(Ordering::Relaxed), 1);
+        // hit: the compressed slot payload, Arc-shared with the slot
+        let v = cache.fetch_view(0, true, || panic!("hit must not read")).unwrap();
+        match v {
+            ShardView::Compressed { codec, bytes } => {
+                assert_eq!(codec, Codec::SnapLite);
+                assert!(Arc::strong_count(&bytes) >= 2, "payload must be shared, not cloned");
+                let mut a = codec.decompress_shard(&bytes).unwrap().to_edges();
+                a.sort_unstable();
+                let mut b = csr.to_edges();
+                b.sort_unstable();
+                assert_eq!(a, b);
+            }
+            _ => panic!("compressing-codec hit must return the slot bytes"),
+        }
+        assert_eq!(cache.stats.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.stats.misses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn fetch_view_mode1_matches_fetch_decoded() {
+        let cache = ShardCache::new(2, Codec::None, usize::MAX);
+        let (_, payload) = shard(0, 100);
+        // admission decodes into the slot; the view is that same Arc
+        let v = cache.fetch_view(0, true, || Ok(payload.clone())).unwrap();
+        let ShardView::Decoded(a) = v else { panic!("mode-1 admit must yield Decoded") };
+        let ShardView::Decoded(b) = cache.fetch_view(0, true, || panic!("hit")).unwrap() else {
+            panic!("mode-1 hit must yield Decoded")
+        };
+        assert!(Arc::ptr_eq(&a, &b), "both views must share the cached Arc");
+        // without admission the raw bytes come back
+        let nc = ShardCache::new(2, Codec::None, usize::MAX);
+        match nc.fetch_view(0, false, || Ok(payload.clone())).unwrap() {
+            ShardView::Raw(bytes) => assert_eq!(*bytes, payload),
+            _ => panic!("unadmitted read must stay raw"),
+        }
+        assert_eq!(nc.num_cached(), 0);
     }
 
     #[test]

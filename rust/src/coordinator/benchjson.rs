@@ -38,6 +38,11 @@ pub struct BenchRecord {
     pub wall_secs: f64,
     pub io_wait_fraction: f64,
     pub cache_hit_ratio: f64,
+    /// Shard-decode nanoseconds of the representative run (payload
+    /// decompression + delta-varint planning + layout validation) — the
+    /// decode half of the fig7 compressed-domain split.  Diagnostic, not
+    /// gated; 0 for records written before the lane existed.
+    pub decode_ns: f64,
 }
 
 /// Round to µs-ish precision so the JSON stays diff-friendly.
@@ -54,6 +59,7 @@ impl BenchRecord {
             wall_secs: round6(wall.as_secs_f64()),
             io_wait_fraction: round6(stats.io_wait_fraction()),
             cache_hit_ratio: round6(stats.cache_hit_ratio()),
+            decode_ns: stats.total_decode_ns() as f64,
         }
     }
 
@@ -62,6 +68,7 @@ impl BenchRecord {
         m.insert("wall_secs".to_string(), Json::Num(self.wall_secs));
         m.insert("io_wait_fraction".to_string(), Json::Num(self.io_wait_fraction));
         m.insert("cache_hit_ratio".to_string(), Json::Num(self.cache_hit_ratio));
+        m.insert("decode_ns".to_string(), Json::Num(self.decode_ns));
         Json::Obj(m)
     }
 }
@@ -91,6 +98,7 @@ pub fn load(path: &Path) -> Result<BTreeMap<String, BenchRecord>> {
                 .with_context(|| format!("bench {name:?}: wall_secs must be a number"))?,
             io_wait_fraction: v.get("io_wait_fraction").and_then(Json::as_f64).unwrap_or(0.0),
             cache_hit_ratio: v.get("cache_hit_ratio").and_then(Json::as_f64).unwrap_or(0.0),
+            decode_ns: v.get("decode_ns").and_then(Json::as_f64).unwrap_or(0.0),
         };
         out.insert(name.clone(), rec);
     }
@@ -213,6 +221,7 @@ mod tests {
             wall_secs: wall,
             io_wait_fraction: 0.25,
             cache_hit_ratio: 0.9,
+            decode_ns: 1_500.0,
         }
     }
 
@@ -234,6 +243,10 @@ mod tests {
         assert_eq!(m["fig6"].wall_secs, 2.25);
         assert!((m["fig6"].io_wait_fraction - 0.25).abs() < 1e-9);
         assert!((m["fig6"].cache_hit_ratio - 0.9).abs() < 1e-9);
+        assert!((m["fig6"].decode_ns - 1_500.0).abs() < 1e-9);
+        // records written before the decode_ns lane existed load as 0
+        std::fs::write(&path, r#"{"legacy": {"wall_secs": 1.0}}"#).unwrap();
+        assert_eq!(load(&path).unwrap()["legacy"].decode_ns, 0.0);
         let _ = std::fs::remove_file(&path);
     }
 

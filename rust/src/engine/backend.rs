@@ -16,9 +16,11 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::apps::{GatherKind, KernelKind, ProgramContext, Reduce, VertexProgram, VertexValue};
+use crate::cache::deltavarint::DvCursor;
 use crate::graph::csr::Csr;
-use crate::graph::Weight;
+use crate::graph::{VertexId, Weight};
 use crate::runtime::ShardRuntime;
+use crate::storage::shardfile::PayloadView;
 
 /// Pluggable shard-update executor.
 #[derive(Clone)]
@@ -102,24 +104,172 @@ impl Backend {
     }
 }
 
-/// Pure-rust shard update: walk CSR rows, gather + reduce + apply.
-///
-/// The generic path pays a virtual `gather` call per edge; the engine's
-/// whole steady state is this loop, so the common (gather, reduce) shapes
-/// are monomorphized below (§Perf: ~2.3× on PageRank) — now per value
-/// lane, with the weight lane folded in.  `apply` runs once per *vertex*
-/// and stays virtual.
-fn native_shard<V: VertexValue, P: VertexProgram<V> + ?Sized>(
+// ---- row-streaming edge sources --------------------------------------------
+//
+// The native update is a fold over (row, src, weight) streams.  Abstracting
+// the stream behind [`EdgeSource`] lets one monomorphized loop consume a
+// decoded CSR, a serialized shard buffer walked in place, or a
+// delta-varint payload decoded on the fly — the compressed-domain gather.
+// Every source visits rows and edges in exactly the order the decoded CSR
+// stores them, so per-vertex fold order (and therefore every float result)
+// is bit-identical across representations; each source may also cover just
+// a sub-range of rows, which is what the engine's intra-shard chunks
+// schedule across cores.
+
+/// A stream of CSR rows: call [`Self::next_row`] exactly
+/// [`Self::num_rows`] times, in order.
+pub trait EdgeSource {
+    /// Global vertex id of the first row this source covers.
+    fn first_vertex(&self) -> VertexId;
+    /// Rows covered (a whole shard interval or one chunk of it).
+    fn num_rows(&self) -> usize;
+    /// Stream the next row's in-edges, in storage order, into
+    /// `f(src_id, weight)` (weight 1.0 on unweighted shards).
+    fn next_row<F: FnMut(VertexId, Weight)>(&mut self, f: F) -> Result<()>;
+}
+
+/// Rows of a decoded [`Csr`] (optionally a sub-range).
+pub struct CsrRows<'a> {
+    csr: &'a Csr,
+    row: usize,
+    end: usize,
+    start_vertex: VertexId,
+}
+
+impl<'a> CsrRows<'a> {
+    pub fn new(csr: &'a Csr, rows: std::ops::Range<usize>) -> Self {
+        debug_assert!(rows.end <= csr.num_vertices());
+        Self {
+            csr,
+            row: rows.start,
+            end: rows.end,
+            start_vertex: csr.lo + rows.start as VertexId,
+        }
+    }
+}
+
+impl EdgeSource for CsrRows<'_> {
+    fn first_vertex(&self) -> VertexId {
+        self.start_vertex
+    }
+
+    fn num_rows(&self) -> usize {
+        self.end - (self.start_vertex - self.csr.lo) as usize
+    }
+
+    #[inline]
+    fn next_row<F: FnMut(VertexId, Weight)>(&mut self, mut f: F) -> Result<()> {
+        anyhow::ensure!(self.row < self.end, "csr row source exhausted");
+        let s = self.csr.row_ptr[self.row] as usize;
+        let e = self.csr.row_ptr[self.row + 1] as usize;
+        if self.csr.wgt.is_empty() {
+            for k in s..e {
+                f(self.csr.col[k], 1.0);
+            }
+        } else {
+            for k in s..e {
+                f(self.csr.col[k], self.csr.wgt[k]);
+            }
+        }
+        self.row += 1;
+        Ok(())
+    }
+}
+
+/// Rows of a serialized shard buffer, read in place through a validated
+/// [`PayloadView`] — no `row_ptr`/`col`/`wgt` vectors are ever built.
+pub struct ViewRows<'a> {
+    view: PayloadView<'a>,
+    row: usize,
+    end: usize,
+    start_vertex: VertexId,
+}
+
+impl<'a> ViewRows<'a> {
+    pub fn new(view: PayloadView<'a>, rows: std::ops::Range<usize>) -> Self {
+        debug_assert!(rows.end <= view.num_rows());
+        let start_vertex = view.lo() + rows.start as VertexId;
+        Self { view, row: rows.start, end: rows.end, start_vertex }
+    }
+}
+
+impl EdgeSource for ViewRows<'_> {
+    fn first_vertex(&self) -> VertexId {
+        self.start_vertex
+    }
+
+    fn num_rows(&self) -> usize {
+        self.end - (self.start_vertex - self.view.lo()) as usize
+    }
+
+    #[inline]
+    fn next_row<F: FnMut(VertexId, Weight)>(&mut self, mut f: F) -> Result<()> {
+        anyhow::ensure!(self.row < self.end, "view row source exhausted");
+        let s = self.view.row_ptr(self.row);
+        let e = self.view.row_ptr(self.row + 1);
+        if self.view.is_weighted() {
+            for k in s..e {
+                f(self.view.col(k), self.view.weight(k));
+            }
+        } else {
+            for k in s..e {
+                f(self.view.col(k), 1.0);
+            }
+        }
+        self.row += 1;
+        Ok(())
+    }
+}
+
+/// Rows decoded straight from a delta-varint payload chunk — the fully
+/// compressed-domain source (nothing is materialized at any point).
+pub struct DvRows<'a> {
+    cursor: DvCursor<'a>,
+    start_vertex: VertexId,
+    rows: usize,
+}
+
+impl<'a> DvRows<'a> {
+    /// `lo` is the payload's interval start (`DvPlan::lo`); the cursor
+    /// must come from the same plan + payload.
+    pub fn new(cursor: DvCursor<'a>, lo: VertexId, start_row: usize, rows: usize) -> Self {
+        Self { cursor, start_vertex: lo + start_row as VertexId, rows }
+    }
+}
+
+impl EdgeSource for DvRows<'_> {
+    fn first_vertex(&self) -> VertexId {
+        self.start_vertex
+    }
+
+    fn num_rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    fn next_row<F: FnMut(VertexId, Weight)>(&mut self, f: F) -> Result<()> {
+        self.cursor.next_row(f)
+    }
+}
+
+/// Stream-fold any [`EdgeSource`] through the program, writing one value
+/// per row into `out` (`out.len() == source.num_rows()`).  This is the one
+/// native inner loop: the decoded path runs it over [`CsrRows`], so the
+/// compressed-domain paths are bit-identical to it by construction.  The
+/// common (gather, reduce) shapes are monomorphized (§Perf: ~2.3× on
+/// PageRank) — `apply` runs once per vertex and stays virtual.
+pub fn process_rows<V: VertexValue, P: VertexProgram<V> + ?Sized, S: EdgeSource>(
     app: &P,
-    csr: &Csr,
+    source: &mut S,
     src: &[V],
     out_deg: &[u32],
     ctx: &ProgramContext,
-) -> Vec<V> {
+    out: &mut [V],
+) -> Result<()> {
     match (app.gather_kind(), app.reduce()) {
-        (GatherKind::RankOverOutDeg, Reduce::Sum) => specialized_shard(
+        (GatherKind::RankOverOutDeg, Reduce::Sum) => stream_fold(
             app,
-            csr,
+            source,
             src,
             ctx,
             V::vzero(),
@@ -129,84 +279,124 @@ fn native_shard<V: VertexValue, P: VertexProgram<V> + ?Sized>(
                 // branchless dangling-source guard: 0 contribution
                 acc.vadd(if d == 0 { V::vzero() } else { src[u].div_deg(d) })
             },
+            out,
         ),
-        (GatherKind::PlusOne, Reduce::Min) => specialized_shard(
+        (GatherKind::PlusOne, Reduce::Min) => stream_fold(
             app,
-            csr,
+            source,
             src,
             ctx,
             V::vmax_value(),
             #[inline(always)]
             |acc: V, u, _w| acc.vmin(src[u].vadd(V::vone())),
+            out,
         ),
-        (GatherKind::PlusWeight, Reduce::Min) => specialized_shard(
+        (GatherKind::PlusWeight, Reduce::Min) => stream_fold(
             app,
-            csr,
+            source,
             src,
             ctx,
             V::vmax_value(),
             #[inline(always)]
             |acc: V, u, w| acc.vmin(src[u].vadd(V::from_weight(w))),
+            out,
         ),
-        (GatherKind::Identity, Reduce::Min) => specialized_shard(
+        (GatherKind::Identity, Reduce::Min) => stream_fold(
             app,
-            csr,
+            source,
             src,
             ctx,
             V::vmax_value(),
             #[inline(always)]
             |acc: V, u, _w| acc.vmin(src[u]),
+            out,
         ),
-        (GatherKind::Identity, Reduce::Sum) => specialized_shard(
+        (GatherKind::Identity, Reduce::Sum) => stream_fold(
             app,
-            csr,
+            source,
             src,
             ctx,
             V::vzero(),
             #[inline(always)]
             |acc: V, u, _w| acc.vadd(src[u]),
+            out,
         ),
-        (GatherKind::Identity, Reduce::Max) => specialized_shard(
+        (GatherKind::Identity, Reduce::Max) => stream_fold(
             app,
-            csr,
+            source,
             src,
             ctx,
             V::vmin_value(),
             #[inline(always)]
             |acc: V, u, _w| acc.vmax(src[u]),
+            out,
         ),
-        _ => generic_shard(app, csr, src, out_deg, ctx),
+        _ => stream_fold_generic(app, source, src, out_deg, ctx, out),
     }
 }
 
 /// Monomorphized inner loop: `fold` is inlined per edge and receives the
 /// source index plus the edge's weight.
 #[inline]
-fn specialized_shard<V: VertexValue, P: VertexProgram<V> + ?Sized, F: Fn(V, usize, Weight) -> V>(
+fn stream_fold<
+    V: VertexValue,
+    P: VertexProgram<V> + ?Sized,
+    S: EdgeSource,
+    F: Fn(V, usize, Weight) -> V,
+>(
     app: &P,
-    csr: &Csr,
+    source: &mut S,
     src: &[V],
     ctx: &ProgramContext,
     identity: V,
     fold: F,
+    out: &mut [V],
+) -> Result<()> {
+    debug_assert_eq!(out.len(), source.num_rows());
+    let lo = source.first_vertex() as usize;
+    for (i, slot) in out.iter_mut().enumerate() {
+        let mut acc = identity;
+        source.next_row(|u, w| acc = fold(acc, u as usize, w))?;
+        *slot = app.apply(acc, src[lo + i], ctx);
+    }
+    Ok(())
+}
+
+/// Fallback for `GatherKind::Custom` programs: virtual `gather` per edge.
+fn stream_fold_generic<V: VertexValue, P: VertexProgram<V> + ?Sized, S: EdgeSource>(
+    app: &P,
+    source: &mut S,
+    src: &[V],
+    out_deg: &[u32],
+    ctx: &ProgramContext,
+    out: &mut [V],
+) -> Result<()> {
+    debug_assert_eq!(out.len(), source.num_rows());
+    let reduce = app.reduce();
+    let lo = source.first_vertex() as usize;
+    for (i, slot) in out.iter_mut().enumerate() {
+        let mut acc = reduce.identity();
+        source.next_row(|u, w| {
+            let u = u as usize;
+            acc = reduce.combine(acc, app.gather(src[u], out_deg[u], w));
+        })?;
+        *slot = app.apply(acc, src[lo + i], ctx);
+    }
+    Ok(())
+}
+
+/// Pure-rust whole-shard update: [`process_rows`] over the decoded CSR.
+fn native_shard<V: VertexValue, P: VertexProgram<V> + ?Sized>(
+    app: &P,
+    csr: &Csr,
+    src: &[V],
+    out_deg: &[u32],
+    ctx: &ProgramContext,
 ) -> Vec<V> {
     let n = csr.num_vertices();
-    let mut out = Vec::with_capacity(n);
-    let row_ptr = &csr.row_ptr;
-    let col = &csr.col;
-    let wgt = &csr.wgt;
-    let weighted = !wgt.is_empty();
-    for i in 0..n {
-        let s = row_ptr[i] as usize;
-        let e = row_ptr[i + 1] as usize;
-        let mut acc = identity;
-        for k in s..e {
-            let w = if weighted { wgt[k] } else { 1.0 };
-            acc = fold(acc, col[k] as usize, w);
-        }
-        let old = src[csr.lo as usize + i];
-        out.push(app.apply(acc, old, ctx));
-    }
+    let mut out = vec![V::vzero(); n];
+    process_rows(app, &mut CsrRows::new(csr, 0..n), src, out_deg, ctx, &mut out)
+        .expect("decoded CSR rows cannot fail to stream");
     out
 }
 
@@ -442,6 +632,116 @@ mod tests {
         let got = Backend::Native.process_shard(&app, &csr, &src, &out_deg, &ctx).unwrap();
         // v2: min(0 + 2.5, 0.5 + 0.25) = 0.75
         assert_eq!(got, vec![0.0, 0.5, 0.75]);
+    }
+
+    /// Run `app` over every source representation (decoded rows, in-place
+    /// payload view, delta-varint cursor) at several chunk splits and
+    /// demand bit-identical output everywhere.
+    fn assert_all_sources_agree<V: VertexValue>(
+        app: &dyn VertexProgram<V>,
+        csr: &Csr,
+        src: &[V],
+        out_deg: &[u32],
+        ctx: &ProgramContext,
+    ) {
+        use crate::cache::deltavarint;
+        use crate::storage::shardfile;
+        let n = csr.num_vertices();
+        let want = native_shard(app, csr, src, out_deg, ctx);
+
+        let payload = shardfile::to_bytes(csr);
+        let layout = shardfile::parse_layout(&payload).unwrap();
+        let dv = deltavarint::encode(csr);
+        // dv normalizes row order; its oracle is the decoded-dv CSR
+        let dv_csr = deltavarint::decode(&dv).unwrap();
+        let dv_want = native_shard(app, &dv_csr, src, out_deg, ctx);
+
+        for chunk_rows in [n.max(1), 1, 3] {
+            let mut got = vec![V::vzero(); n];
+            for start in (0..n).step_by(chunk_rows) {
+                let end = (start + chunk_rows).min(n);
+                let mut rows = CsrRows::new(csr, start..end);
+                process_rows(app, &mut rows, src, out_deg, ctx, &mut got[start..end]).unwrap();
+            }
+            assert_eq!(got, want, "CsrRows chunk_rows={chunk_rows}");
+
+            let mut got = vec![V::vzero(); n];
+            for start in (0..n).step_by(chunk_rows) {
+                let end = (start + chunk_rows).min(n);
+                let mut rows = ViewRows::new(layout.view(&payload), start..end);
+                process_rows(app, &mut rows, src, out_deg, ctx, &mut got[start..end]).unwrap();
+            }
+            assert_eq!(got, want, "ViewRows chunk_rows={chunk_rows}");
+
+            let plan = deltavarint::plan(&dv, chunk_rows).unwrap();
+            let mut got = vec![V::vzero(); n];
+            for chunk in &plan.chunks {
+                let mut rows = DvRows::new(
+                    plan.cursor(&dv, chunk),
+                    plan.lo,
+                    chunk.start_row,
+                    chunk.end_row - chunk.start_row,
+                );
+                process_rows(
+                    app,
+                    &mut rows,
+                    src,
+                    out_deg,
+                    ctx,
+                    &mut got[chunk.start_row..chunk.end_row],
+                )
+                .unwrap();
+            }
+            assert_eq!(got, dv_want, "DvRows chunk_rows={chunk_rows}");
+        }
+    }
+
+    #[test]
+    fn compressed_domain_sources_match_decoded_bit_for_bit() {
+        use crate::apps::Bfs;
+        use crate::graph::generator;
+        let edges: Vec<(u32, u32)> =
+            generator::rmat(8, 1500, generator::RmatParams::default(), 21)
+                .into_iter()
+                .filter(|&(_, d)| d < 64)
+                .collect();
+        let weights = generator::synth_weights(&edges, 5);
+        let ctx = ProgramContext { num_vertices: 256 };
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(9);
+        let out_deg: Vec<u32> = (0..256).map(|_| rng.gen_range(16) as u32).collect();
+
+        for weighted in [false, true] {
+            let csr = if weighted {
+                Csr::from_edges_weighted(0, 64, &edges, &weights)
+            } else {
+                Csr::from_edges(0, 64, &edges)
+            };
+            // f32 lane: every gather/reduce shape incl. the generic path
+            let src: Vec<f32> = (0..256).map(|v| (v as f32) * 0.25 + 0.5).collect();
+            let f32_apps: Vec<Box<dyn VertexProgram>> = vec![
+                Box::new(PageRank::default()),
+                Box::new(Sssp { source: 0 }),
+                Box::new(WeightedSssp { source: 0 }),
+                Box::new(Wcc),
+                Box::new(Bfs { root: 0 }),
+            ];
+            for app in &f32_apps {
+                assert_all_sources_agree(app.as_ref(), &csr, &src, &out_deg, &ctx);
+            }
+            // integer + wide lanes
+            let src64: Vec<u64> = (0..256).collect();
+            assert_all_sources_agree::<u64>(&LabelProp, &csr, &src64, &out_deg, &ctx);
+            let src32: Vec<u32> = vec![0; 256];
+            assert_all_sources_agree::<u32>(&MaxDeg, &csr, &src32, &out_deg, &ctx);
+            let srcf64: Vec<f64> = (0..256).map(|v| (v as f64) * 0.125).collect();
+            assert_all_sources_agree::<f64>(
+                &crate::apps::SpMv64::default(),
+                &csr,
+                &srcf64,
+                &out_deg,
+                &ctx,
+            );
+        }
     }
 
     #[test]

@@ -36,11 +36,13 @@
 //! 3. **Priority schedule** ([`Governor::schedule`]) — shards are issued to
 //!    the I/O pool hottest-first instead of in file order: uncached shards
 //!    ranked by the Bloom screen's active-source density (plus accumulated
-//!    miss history) come first, cache-resident shards last.  Mode-1
-//!    (uncompressed) residents additionally never *wait* for a read-ahead
-//!    slot — their hit is a clone of the cached `Arc`, no new decoded
-//!    bytes — while compressing codecs decompress per hit and therefore
-//!    stay gated.  The same scores feed
+//!    miss history) come first, cache-resident shards last.  Residents
+//!    whose hit materializes no new decoded bytes additionally never
+//!    *wait* for a read-ahead slot: mode-1 (a clone of the cached
+//!    `Arc<Csr>`) and, under the compressed-domain gather, delta-varint
+//!    (streamed straight from the slot's `Arc`-shared payload).  Byte
+//!    codecs decompress a payload-sized buffer per hit and therefore stay
+//!    gated.  The same scores feed
 //!    [`crate::cache::ShardCache::set_priorities`], steering eviction away
 //!    from hot shards.
 //!
@@ -49,9 +51,8 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use crate::bloom::BloomFilter;
+use crate::bloom::{BloomFilter, Digest};
 use crate::cache::ShardCache;
-use crate::graph::VertexId;
 
 /// Tuning envelope for the governor (defaults are deliberately coarse —
 /// the feedback loop, not the constants, does the work).
@@ -178,20 +179,26 @@ impl Governor {
     /// Bloom screen's active-source density (dominant term) and the cache's
     /// per-shard miss history (tie-breaker that keeps historically
     /// disk-bound shards early even before selective scheduling engages).
+    ///
+    /// Takes the engine's *pre-hashed* active set: each active vertex is
+    /// hashed into a [`Digest`] once per iteration and that digest array
+    /// is reused by every shard's density probe here **and** every
+    /// screening probe in the engine — without it the scheduler alone
+    /// re-hashed every active vertex `shards × k` times per iteration.
     fn score(
         &self,
         shard: usize,
         selective_now: bool,
-        active: &[VertexId],
+        digests: &[Digest],
         blooms: &[BloomFilter],
         cache: &ShardCache,
     ) -> u64 {
-        let density = if selective_now && !active.is_empty() {
+        let density = if selective_now && !digests.is_empty() {
             // |active ∩ bloom| / |active| in per-mille; the selective
             // threshold guarantees `active` is small here, so the probe is
             // cheap
-            let hits = blooms[shard].count_contained(active.iter().map(|&v| v as u64)) as u64;
-            hits * 1000 / active.len() as u64
+            let hits = blooms[shard].count_contained_digest(digests) as u64;
+            hits * 1000 / digests.len() as u64
         } else {
             // activation too high for the Bloom screen to discriminate:
             // every shard is (almost surely) active, rank on history alone
@@ -213,7 +220,7 @@ impl Governor {
         &self,
         num_shards: usize,
         selective_now: bool,
-        active: &[VertexId],
+        digests: &[Digest],
         blooms: &[BloomFilter],
         cache: &ShardCache,
     ) -> Vec<usize> {
@@ -221,7 +228,7 @@ impl Governor {
             return (0..num_shards).collect();
         }
         let scores: Vec<u64> = (0..num_shards)
-            .map(|s| self.score(s, selective_now, active, blooms, cache))
+            .map(|s| self.score(s, selective_now, digests, blooms, cache))
             .collect();
         cache.set_priorities(&scores);
         // materialize residency once: sort_by_key re-evaluates its key per
@@ -256,6 +263,10 @@ mod tests {
         let cache = ShardCache::new(4, Codec::None, usize::MAX);
         let blooms: Vec<BloomFilter> = (0..4).map(|_| BloomFilter::new(64, 1)).collect();
         assert_eq!(g.schedule(4, false, &[], &blooms, &cache), vec![0, 1, 2, 3]);
+    }
+
+    fn digests(keys: &[u64]) -> Vec<crate::bloom::Digest> {
+        keys.iter().map(|&k| crate::bloom::digest(k)).collect()
     }
 
     #[test]
@@ -314,10 +325,11 @@ mod tests {
         cache.insert(0, &payload).unwrap();
         assert!(cache.is_resident(0));
 
-        let order = g.schedule(3, true, &[100, 101], &blooms, &cache);
+        let active = digests(&[100, 101]);
+        let order = g.schedule(3, true, &active, &blooms, &cache);
         assert_eq!(order, vec![1, 2, 0], "densest uncached first, resident last");
 
         // determinism: identical inputs, identical order
-        assert_eq!(order, g.schedule(3, true, &[100, 101], &blooms, &cache));
+        assert_eq!(order, g.schedule(3, true, &active, &blooms, &cache));
     }
 }

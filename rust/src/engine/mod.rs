@@ -6,7 +6,7 @@ mod shared;
 mod stats;
 mod vsw;
 
-pub use backend::Backend;
+pub use backend::{process_rows, Backend, CsrRows, DvRows, EdgeSource, ViewRows};
 pub use governor::{Governor, GovernorConfig};
 pub use shared::SharedSlice;
 pub use stats::{AnyRunResult, IterStats, RunResult, RunStats};

@@ -64,6 +64,24 @@ impl<'a, T: Copy> SharedSlice<'a, T> {
     pub unsafe fn read(&self, i: usize) -> T {
         *self.data[i].get()
     }
+
+    /// Exclusive mutable view of `[start, start+len)` — lets a shard (or
+    /// intra-shard chunk) worker write its results in place instead of
+    /// materializing a scratch vector and copying it in.
+    ///
+    /// # Safety
+    /// Same exclusivity contract as [`Self::write`]: the caller must own
+    /// the whole range for the duration of the borrow, with no concurrent
+    /// reader or writer touching it.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start + len <= self.data.len());
+        if len == 0 {
+            return &mut [];
+        }
+        std::slice::from_raw_parts_mut(self.data[start].get(), len)
+    }
 }
 
 #[cfg(test)]
@@ -84,6 +102,25 @@ mod tests {
                     unsafe { shared.write(lo + i, (shard * 1000 + i) as u32) };
                 }
             });
+        }
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u32);
+        }
+    }
+
+    #[test]
+    fn slice_mut_gives_disjoint_parallel_windows() {
+        let n = 8000;
+        let mut data = vec![0u32; n];
+        {
+            let shared = SharedSlice::new(&mut data);
+            parallel_for(4, 8, |chunk| {
+                let out = unsafe { shared.slice_mut(chunk * 1000, 1000) };
+                for (k, slot) in out.iter_mut().enumerate() {
+                    *slot = (chunk * 1000 + k) as u32;
+                }
+            });
+            assert!(unsafe { shared.slice_mut(n, 0) }.is_empty());
         }
         for (i, &v) in data.iter().enumerate() {
             assert_eq!(v, i as u32);

@@ -41,6 +41,15 @@ pub struct IterStats {
     /// `prefetch_depth` normally, the governor's planned window under
     /// `--adaptive`, 0 on the synchronous path.
     pub prefetch_depth: usize,
+    /// Nanoseconds spent turning cached/compressed shard bytes into a
+    /// walkable form this iteration: payload decompression into worker
+    /// scratch, delta-varint chunk planning, and in-place layout
+    /// validation.  On the pipelined path this work runs on the I/O pool,
+    /// so it is *not* a subset of `compute` — it is the decode half of the
+    /// fig7 compressed-domain ablation.  The fused varint decode inside a
+    /// delta-varint gather is deliberately not separable (that fusion is
+    /// the optimization) and lands in `compute`.
+    pub decode_ns: u64,
 }
 
 /// Whole-run statistics.
@@ -85,6 +94,12 @@ impl RunStats {
     /// Total worker time spent computing (see [`IterStats::compute`]).
     pub fn total_compute(&self) -> Duration {
         self.iters.iter().map(|i| i.compute).sum()
+    }
+
+    /// Total shard-decode time (see [`IterStats::decode_ns`]) — the
+    /// decode half of the fig7 compressed-domain split.
+    pub fn total_decode_ns(&self) -> u64 {
+        self.iters.iter().map(|i| i.decode_ns).sum()
     }
 
     /// Fraction of worker time spent acquiring shards rather than
@@ -172,6 +187,7 @@ mod tests {
             io_wait: Duration::ZERO,
             compute: Duration::ZERO,
             prefetch_depth: 0,
+            decode_ns: 0,
         };
         let stats = RunStats { iters: vec![mk(10), mk(32)], ..Default::default() };
         assert_eq!(stats.total_bytes_read(), 42);
@@ -194,10 +210,12 @@ mod tests {
             io_wait: Duration::from_millis(io_ms),
             compute: Duration::from_millis(comp_ms),
             prefetch_depth: 0,
+            decode_ns: io_ms * 1000,
         };
         let stats = RunStats { iters: vec![mk(10, 30), mk(20, 60)], ..Default::default() };
         assert_eq!(stats.total_io_wait(), Duration::from_millis(30));
         assert_eq!(stats.total_compute(), Duration::from_millis(90));
+        assert_eq!(stats.total_decode_ns(), 30_000);
         assert!((stats.io_wait_fraction() - 0.25).abs() < 1e-9);
         assert_eq!(RunStats::default().io_wait_fraction(), 0.0);
     }
@@ -219,6 +237,7 @@ mod tests {
             io_wait: Duration::ZERO,
             compute: Duration::ZERO,
             prefetch_depth: depth,
+            decode_ns: 0,
         };
         let stats = RunStats {
             iters: vec![mk(3, 1, 2), mk(5, 3, 4), mk(8, 0, 3)],

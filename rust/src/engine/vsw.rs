@@ -42,17 +42,51 @@
 //! is a function of *completed* iterations only, so results remain
 //! bit-identical to every fixed configuration — `tests/governor_adaptive.rs`
 //! and the extended determinism regression prove it.
+//!
+//! ## Zero-allocation steady state
+//!
+//! Three mechanisms make a warm-cache iteration allocation-free along the
+//! vertex/edge axes and keep every core busy:
+//!
+//! * **Compressed-domain gather** ([`EngineConfig::stream_gather`], on by
+//!   default for `Backend::Native`): a compressed-cache hit is consumed
+//!   through [`crate::cache::ShardCache::fetch_view`] instead of decoding a
+//!   fresh CSR — delta-varint payloads stream straight from the slot's
+//!   `Arc`-shared bytes into the gather fold, byte codecs decompress into a
+//!   pooled buffer that is walked in place, and disk reads are walked
+//!   serialized.  Per-vertex fold order is bit-identical to the decoded
+//!   path because the decoded path runs the very same
+//!   [`crate::engine::backend::process_rows`] loop.
+//! * **Worker scratch arenas**: compute workers own reusable active-set
+//!   buffers ([`crate::util::threadpool::ThreadPool::broadcast_with`]),
+//!   results are written straight into the destination array
+//!   ([`SharedSlice::slice_mut`]) instead of through per-shard vectors, and
+//!   active vertices merge deterministically from per-worker runs keyed by
+//!   (shard, chunk).
+//! * **Intra-shard chunking** ([`EngineConfig::chunk_rows`]): a ready shard
+//!   is split into row chunks claimed off a shared board by every compute
+//!   worker, so the largest shard no longer serializes the iteration tail
+//!   on a single core (NXgraph's sub-interval observation,
+//!   arXiv:1510.06916).  Chunks are pure per-row functions of `src`, so
+//!   results stay bit-identical for every chunk size.
+//!
+//! Bloom screening also hashes each active vertex exactly once per
+//! iteration ([`crate::bloom::digest`]); the digest array is reused by
+//! every shard's screening probe and the governor's density scoring.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::apps::{AnyProgram, ProgramContext, VertexProgram, VertexValue};
-use crate::bloom::BloomFilter;
-use crate::cache::{Codec, ShardCache};
-use crate::engine::backend::Backend;
+use crate::bloom::{digest, BloomFilter, Digest};
+use crate::cache::deltavarint::DvPlan;
+use crate::cache::{deltavarint, Codec, ShardCache, ShardView};
+use crate::engine::backend::{process_rows, Backend, CsrRows, DvRows, ViewRows};
 use crate::engine::governor::{Governor, GovernorConfig};
 use crate::engine::shared::SharedSlice;
 use crate::engine::stats::{AnyRunResult, IterStats, RunResult, RunStats};
@@ -61,6 +95,7 @@ use crate::graph::VertexId;
 use crate::sharding::preprocess::load_bloom;
 use crate::storage::prefetch::{ReadAhead, Semaphore};
 use crate::storage::property::Property;
+use crate::storage::shardfile::{self, PayloadLayout};
 use crate::storage::vertexinfo::VertexInfo;
 use crate::storage::{io, DatasetDir};
 use crate::util::threadpool::{default_threads, ThreadPool};
@@ -97,6 +132,16 @@ pub struct EngineConfig {
     pub adaptive: bool,
     /// Hard ceiling for the adaptive window (`--prefetch-max`).
     pub prefetch_max: usize,
+    /// Consume compressed-cache hits in the compressed domain (stream the
+    /// payload into the gather fold) instead of decoding a CSR per hit.
+    /// `Backend::Native` only; the xla backend always decodes.  Results
+    /// are bit-identical either way — this is the default; switching it
+    /// off is the fig7 ablation's decode path.
+    pub stream_gather: bool,
+    /// Rows per intra-shard work chunk scheduled across the compute pool
+    /// (`--chunk-rows`); shards wider than this span several cores.
+    /// `0` = never split.  Any value produces identical results.
+    pub chunk_rows: usize,
 }
 
 impl Default for EngineConfig {
@@ -113,20 +158,169 @@ impl Default for EngineConfig {
             prefetch_depth: 2,
             adaptive: false,
             prefetch_max: 8,
+            stream_gather: true,
+            chunk_rows: 8192,
         }
     }
 }
 
-/// What the prefetch pipeline delivers for one scheduled shard.  The bool
-/// records whether the producer took an in-flight permit for it (cache-
-/// resident shards under the adaptive governor may bypass the gate).
-enum Fetched {
-    /// Bloom screening proved the shard inactive — no I/O was done.
-    Skipped(usize),
-    /// Ready-decoded shard buffer.
-    Ready(usize, Arc<Csr>, bool),
-    /// Acquisition failed.
-    Failed(anyhow::Error, bool),
+/// What one scheduled shard carries onto the chunk board.
+enum WorkPayload {
+    /// Bloom screening proved the shard inactive — carry values forward.
+    Skipped,
+    /// Acquisition failed; the error was already recorded.
+    Failed,
+    /// Decoded CSR: a mode-1 hit/admission, or any acquisition on the
+    /// non-streaming (decode) path.
+    Decoded(Arc<Csr>),
+    /// Serialized shard bytes walked in place: a fresh disk read, or a
+    /// byte-codec hit the producer decompressed into a pooled buffer
+    /// (`pooled` ⇒ the buffer returns to the [`BufPool`] at finalize).
+    View {
+        bytes: Arc<Vec<u8>>,
+        layout: PayloadLayout,
+        pooled: bool,
+    },
+    /// Delta-varint payload streamed in the compressed domain — nothing
+    /// is ever materialized for these.
+    Dv { bytes: Arc<Vec<u8>>, plan: DvPlan },
+}
+
+/// One shard scheduled on the chunk board.  `permit` records whether the
+/// producer took an in-flight read-ahead permit for it (cache residents
+/// that materialize no decoded bytes may bypass the gate under the
+/// adaptive governor).
+struct ShardWork {
+    shard: usize,
+    payload: WorkPayload,
+    permit: bool,
+    num_chunks: usize,
+    /// Next chunk to hand out; claims are serialized under the board lock.
+    next_chunk: AtomicUsize,
+    /// Chunks fully processed; the worker completing the last one
+    /// finalizes the shard.
+    done_chunks: AtomicUsize,
+    edges: u64,
+}
+
+impl ShardWork {
+    fn new(shard: usize, payload: WorkPayload, num_chunks: usize, edges: u64) -> Self {
+        Self {
+            shard,
+            payload,
+            permit: false,
+            num_chunks: num_chunks.max(1),
+            next_chunk: AtomicUsize::new(0),
+            done_chunks: AtomicUsize::new(0),
+            edges,
+        }
+    }
+}
+
+struct BoardState {
+    queue: VecDeque<Arc<ShardWork>>,
+    /// Shards not yet finalized (pushed or still to be pushed).
+    remaining: usize,
+}
+
+/// The two-level scheduler of the compute phase: producers push ready
+/// shards, compute workers claim *chunks* off the front.  Chunk-level
+/// claiming is what lets every core help finish the hottest shard instead
+/// of letting it serialize the iteration tail on one worker.
+struct ChunkBoard {
+    state: Mutex<BoardState>,
+    cv: Condvar,
+}
+
+impl ChunkBoard {
+    fn new(total_shards: usize) -> Self {
+        Self {
+            state: Mutex::new(BoardState {
+                queue: VecDeque::with_capacity(total_shards),
+                remaining: total_shards,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn push(&self, work: ShardWork) {
+        let mut s = self.state.lock().unwrap();
+        s.queue.push_back(Arc::new(work));
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Claim the next chunk, blocking while shards are still in flight.
+    /// Returns `None` once every shard has been finalized.
+    fn claim(&self) -> Option<(Arc<ShardWork>, usize)> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(front) = s.queue.front() {
+                // claims are serialized by the board lock, and the front is
+                // popped when its last chunk is handed out, so `c` is
+                // always in range
+                let c = front.next_chunk.fetch_add(1, Ordering::Relaxed);
+                let work = front.clone();
+                if c + 1 == work.num_chunks {
+                    s.queue.pop_front();
+                }
+                return Some((work, c));
+            }
+            if s.remaining == 0 {
+                return None;
+            }
+            s = self.cv.wait(s).unwrap();
+        }
+    }
+
+    /// Mark one shard fully processed; wakes waiters so they can re-check
+    /// the exit condition (or pick up newly pushed work).
+    fn finalized(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.remaining -= 1;
+        drop(s);
+        self.cv.notify_all();
+    }
+}
+
+/// Freelist of payload-sized buffers for byte-codec compressed hits: the
+/// producer decompresses into one, chunk workers read it shared, and the
+/// finalizing worker returns it.  Bounded by the in-flight window, so the
+/// steady state allocates nothing per shard.
+struct BufPool(Mutex<Vec<Arc<Vec<u8>>>>);
+
+impl BufPool {
+    fn new() -> Self {
+        Self(Mutex::new(Vec::new()))
+    }
+
+    fn take(&self) -> Vec<u8> {
+        let mut g = self.0.lock().unwrap();
+        while let Some(a) = g.pop() {
+            // a straggling reference means the buffer is still in use
+            // somewhere; drop that entry and keep looking
+            if let Ok(v) = Arc::try_unwrap(a) {
+                return v;
+            }
+        }
+        Vec::new()
+    }
+
+    fn put(&self, a: Arc<Vec<u8>>) {
+        self.0.lock().unwrap().push(a);
+    }
+}
+
+/// Per-compute-worker reusable buffers, owned across iterations via
+/// [`ThreadPool::broadcast_with`] — the scratch arena that removes the
+/// per-shard-per-iteration allocations from the steady state.
+#[derive(Default)]
+struct WorkerScratch {
+    /// Newly-active vertices found by this worker, appended chunk by chunk.
+    active: Vec<VertexId>,
+    /// `(shard, chunk, start, len)` runs into `active`; merged in
+    /// deterministic (shard, chunk) order after the parallel phase.
+    runs: Vec<(usize, usize, usize, usize)>,
 }
 
 /// An opened dataset ready to run programs (GraphMP's steady state: all
@@ -238,6 +432,16 @@ impl VswEngine {
     /// term uses the governor's window *high-water mark*, not the
     /// configured depth — under `--adaptive` the window moves, and the
     /// honest memory figure is the largest it ever got.
+    ///
+    /// Compressed-domain accounting: with [`EngineConfig::stream_gather`]
+    /// a compressed hit no longer materializes a decoded CSR — an
+    /// in-flight slot holds at most a payload-sized pooled buffer (byte
+    /// codecs) or nothing beyond the cache's own bytes (delta-varint,
+    /// which streams from the slot; such residents may also bypass the
+    /// window gate precisely because they add no decoded bytes).  The
+    /// `(threads + window-high-water) × max-shard-bytes` term kept here is
+    /// therefore a *ceiling* on the in-flight footprint: Fig 11 can only
+    /// over-report, never under-report, which keeps the figure honest.
     pub fn memory_estimate(&self) -> u64 {
         let v = self.property.info.num_vertices;
         let vertex_arrays = 2 * 4 * v; // src + dst f32
@@ -311,6 +515,20 @@ impl VswEngine {
         let mut edges_processed = 0u64;
         let out_deg = &self.vertex_info.degrees.out_deg;
 
+        // persistent per-run state: worker scratch arenas, the digest
+        // array, the active-merge staging and the payload-buffer freelist
+        // are allocated once here and reused by every iteration — the
+        // zero-allocation steady state
+        let mut scratch: Vec<WorkerScratch> =
+            (0..self.pool.threads()).map(|_| WorkerScratch::default()).collect();
+        let mut digest_buf: Vec<Digest> = Vec::new();
+        let mut next_active: Vec<VertexId> = Vec::new();
+        let mut run_index: Vec<(usize, usize, usize, usize, usize)> = Vec::new();
+        let native = matches!(self.cfg.backend, Backend::Native);
+        let use_stream = native && self.cfg.stream_gather;
+        let chunk_rows = if self.cfg.chunk_rows == 0 { usize::MAX } else { self.cfg.chunk_rows };
+        let buf_pool = BufPool::new();
+
         for iter in 0..max_iters {
             if active.is_empty() {
                 break; // line 2: ratio == 0
@@ -329,6 +547,17 @@ impl VswEngine {
                 && active_ratio > 0.0
                 && active_ratio < self.cfg.selective_threshold;
 
+            // hash each active vertex exactly once; every Bloom probe this
+            // iteration — per-shard screening *and* the governor's density
+            // scoring — reuses this digest array instead of re-hashing the
+            // active set once per shard (the old O(shards × |active| × k)
+            // screening cost, now O(|active|) hashes + cheap derivations)
+            digest_buf.clear();
+            if selective_now {
+                digest_buf.extend(active.iter().map(|&v| digest(v as u64)));
+            }
+            let digests: &[Digest] = &digest_buf;
+
             // governor: size this iteration's in-flight window (a finite
             // cache budget lends its unused bytes; an unbounded or disabled
             // cache imposes no loan) and pick the shard issue order
@@ -345,7 +574,7 @@ impl VswEngine {
             };
             let order = if self.io_pool.is_some() {
                 self.governor
-                    .schedule(p, selective_now, &active, &self.blooms, &self.cache)
+                    .schedule(p, selective_now, digests, &self.blooms, &self.cache)
             } else {
                 Vec::new()
             };
@@ -355,23 +584,20 @@ impl VswEngine {
             let edge_count = AtomicU64::new(0);
             let io_wait_ns = AtomicU64::new(0);
             let compute_ns = AtomicU64::new(0);
-            // per-shard slots: each shard is delivered exactly once, so
-            // contention on these mutexes is zero by construction
-            let new_active: Vec<Mutex<Vec<VertexId>>> =
-                (0..p).map(|_| Mutex::new(Vec::new())).collect();
+            let decode_ns = AtomicU64::new(0);
             let err_slot: Mutex<Option<anyhow::Error>> = Mutex::new(None);
 
             {
                 let dst_shared = SharedSlice::new(&mut dst);
                 let src_ref: &[V] = &src;
-                let active_ref: &[VertexId] = &active;
                 let cfg = &self.cfg;
                 let blooms = &self.blooms;
                 let cache = &self.cache;
                 let dir = &self.dir;
                 let property = &self.property;
                 let tol = cfg.convergence_tol;
-                let new_active = &new_active;
+                let buf_pool = &buf_pool;
+                let decode_ns = &decode_ns;
 
                 // -- per-shard pieces shared by both paths ----------------
                 let record_err = |e: anyhow::Error| {
@@ -380,169 +606,334 @@ impl VswEngine {
                         *slot = Some(e);
                     }
                 };
-                // line 5: is the shard provably inactive?
-                let screened_out = |shard: usize| {
-                    selective_now
-                        && !blooms[shard].contains_any(active_ref.iter().map(|&v| v as u64))
-                };
-                // carry values of an untouched interval forward
+                // line 5: is the shard provably inactive?  One digest per
+                // active vertex, computed above, serves all P probes.
+                let screened_out =
+                    |shard: usize| selective_now && !blooms[shard].contains_any_digest(digests);
+                // carry values of an untouched interval forward (counted
+                // as skipped at finalize time)
                 let carry_skipped = |shard: usize| {
                     let (lo, hi) = property.interval(shard);
                     unsafe {
                         dst_shared.write_range(lo as usize, &src_ref[lo as usize..hi as usize]);
                     }
-                    skipped.fetch_add(1, Ordering::Relaxed);
                 };
-                // line 6: load_to_memory(shard) — cache first, then disk
-                let fetch = |shard: usize| {
-                    cache.fetch_decoded(shard, cfg.cache_budget > 0, || {
+                // row range of chunk `c` in a `rows`-wide shard
+                let chunk_range = move |rows: usize, c: usize| {
+                    let a = c.saturating_mul(chunk_rows).min(rows);
+                    let b = a.saturating_add(chunk_rows).min(rows);
+                    (a, b)
+                };
+                let chunks_of =
+                    move |rows: usize| if native { rows.div_ceil(chunk_rows).max(1) } else { 1 };
+                // in-place writes through `slice_mut` rely on the shard
+                // staying inside its property interval — reject a payload
+                // that disagrees before any chunk touches `dst`
+                let check_interval = |shard: usize, lo: u32, rows: usize| -> Result<()> {
+                    let (plo, phi) = property.interval(shard);
+                    anyhow::ensure!(
+                        lo == plo && rows == (phi - plo) as usize,
+                        "shard {shard} interval [{lo}, +{rows}) disagrees with property \
+                         [{plo},{phi})"
+                    );
+                    Ok(())
+                };
+                // line 6: load_to_memory(shard) — cache first, then disk.
+                // Builds the shard's board entry: the cheapest faithful
+                // representation (decoded Arc, in-place payload view, or
+                // delta-varint stream) plus its chunk split.  Decode work
+                // not fused into the gather (payload decompression, dv
+                // planning, layout validation) is timed into `decode_ns`.
+                let acquire = |shard: usize, did_read: &Cell<bool>| -> ShardWork {
+                    let admit = cfg.cache_budget > 0;
+                    let read = || {
+                        did_read.set(true);
                         io::read_file(&dir.shard_path(shard))
-                    })
-                };
-                // lines 7-9: update the shard's vertices via the backend and
-                // record its newly-active set
-                let process_ready = |shard: usize, csr: &Csr| -> Result<()> {
-                    let (lo, _hi) = property.interval(shard);
-                    let new_vals = cfg.backend.process_shard(app, csr, src_ref, out_deg, &ctx)?;
-                    let mut local_active = Vec::new();
-                    for (i, &nv) in new_vals.iter().enumerate() {
-                        let v = lo + i as VertexId;
-                        let old = src_ref[v as usize];
-                        if V::changed(old, nv, tol as f64) {
-                            local_active.push(v);
+                    };
+                    let built: Result<(WorkPayload, usize, u64)> = (|| {
+                        if !use_stream {
+                            let csr = cache.fetch_decoded(shard, admit, read)?;
+                            check_interval(shard, csr.lo, csr.num_vertices())?;
+                            let chunks = chunks_of(csr.num_vertices());
+                            let edges = csr.num_edges() as u64;
+                            return Ok((WorkPayload::Decoded(csr), chunks, edges));
+                        }
+                        match cache.fetch_view(shard, admit, read)? {
+                            ShardView::Decoded(csr) => {
+                                check_interval(shard, csr.lo, csr.num_vertices())?;
+                                let chunks = chunks_of(csr.num_vertices());
+                                let edges = csr.num_edges() as u64;
+                                Ok((WorkPayload::Decoded(csr), chunks, edges))
+                            }
+                            ShardView::Raw(bytes) => {
+                                let t0 = Instant::now();
+                                let layout = shardfile::parse_layout(&bytes)?;
+                                decode_ns
+                                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                                check_interval(shard, layout.lo, layout.num_rows())?;
+                                let chunks = chunks_of(layout.num_rows());
+                                let edges = layout.num_edges as u64;
+                                Ok((
+                                    WorkPayload::View { bytes, layout, pooled: false },
+                                    chunks,
+                                    edges,
+                                ))
+                            }
+                            ShardView::Compressed { codec: Codec::DeltaVarint, bytes } => {
+                                // planned per hit: the plan pass doubles as
+                                // the payload's integrity check (exactly
+                                // what decode validated before), costs two
+                                // allocation-free varint sweeps, and buys
+                                // chunk-parallel decoding — still strictly
+                                // cheaper than the decoded path's
+                                // three-vector materialization per hit
+                                let t0 = Instant::now();
+                                let plan = deltavarint::plan(&bytes, chunk_rows)?;
+                                decode_ns
+                                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                                check_interval(shard, plan.lo, plan.num_rows)?;
+                                let chunks = plan.chunks.len();
+                                let edges = plan.num_edges as u64;
+                                Ok((WorkPayload::Dv { bytes, plan }, chunks, edges))
+                            }
+                            ShardView::Compressed { codec, bytes } => {
+                                let t0 = Instant::now();
+                                let mut buf = buf_pool.take();
+                                codec.decompress_payload_into(&bytes, &mut buf)?;
+                                let layout = shardfile::parse_layout(&buf)?;
+                                decode_ns
+                                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                                check_interval(shard, layout.lo, layout.num_rows())?;
+                                let chunks = chunks_of(layout.num_rows());
+                                let edges = layout.num_edges as u64;
+                                Ok((
+                                    WorkPayload::View {
+                                        bytes: Arc::new(buf),
+                                        layout,
+                                        pooled: true,
+                                    },
+                                    chunks,
+                                    edges,
+                                ))
+                            }
+                        }
+                    })();
+                    match built {
+                        Ok((payload, chunks, edges)) => {
+                            ShardWork::new(shard, payload, chunks, edges)
+                        }
+                        Err(e) => {
+                            record_err(e);
+                            ShardWork::new(shard, WorkPayload::Failed, 1, 0)
                         }
                     }
-                    unsafe { dst_shared.write_range(lo as usize, &new_vals) };
-                    *new_active[shard].lock().unwrap() = local_active;
-                    processed.fetch_add(1, Ordering::Relaxed);
-                    edge_count.fetch_add(csr.num_edges() as u64, Ordering::Relaxed);
-                    Ok(())
+                };
+                // record a chunk's newly-active vertices into the worker's
+                // arena (merged deterministically after the phase)
+                let scan_active =
+                    |s: &mut WorkerScratch, shard: usize, chunk: usize, base: usize, out: &[V]| {
+                        let start = s.active.len();
+                        for (i, &nv) in out.iter().enumerate() {
+                            if V::changed(src_ref[base + i], nv, tol as f64) {
+                                s.active.push((base + i) as VertexId);
+                            }
+                        }
+                        let len = s.active.len() - start;
+                        if len > 0 {
+                            s.runs.push((shard, chunk, start, len));
+                        }
+                    };
+                // lines 7-9 for one chunk: stream the rows through the
+                // backend straight into `dst` (no per-shard value vector),
+                // then scan the written range for activity
+                let process_chunk = |s: &mut WorkerScratch, work: &ShardWork, chunk: usize| {
+                    match &work.payload {
+                        WorkPayload::Skipped => carry_skipped(work.shard),
+                        WorkPayload::Failed => {}
+                        WorkPayload::Decoded(csr) => {
+                            let lo = csr.lo as usize;
+                            if native {
+                                let (a, b) = chunk_range(csr.num_vertices(), chunk);
+                                let out = unsafe { dst_shared.slice_mut(lo + a, b - a) };
+                                let mut rows = CsrRows::new(csr, a..b);
+                                match process_rows(app, &mut rows, src_ref, out_deg, &ctx, out) {
+                                    Ok(()) => scan_active(s, work.shard, chunk, lo + a, out),
+                                    Err(e) => record_err(e),
+                                }
+                            } else {
+                                // xla path: whole-shard kernels, one chunk
+                                match cfg.backend.process_shard(app, csr, src_ref, out_deg, &ctx)
+                                {
+                                    Ok(new_vals) => {
+                                        unsafe { dst_shared.write_range(lo, &new_vals) };
+                                        scan_active(s, work.shard, chunk, lo, &new_vals);
+                                    }
+                                    Err(e) => record_err(e),
+                                }
+                            }
+                        }
+                        WorkPayload::View { bytes, layout, .. } => {
+                            let lo = layout.lo as usize;
+                            let (a, b) = chunk_range(layout.num_rows(), chunk);
+                            let out = unsafe { dst_shared.slice_mut(lo + a, b - a) };
+                            let mut rows = ViewRows::new(layout.view(bytes), a..b);
+                            match process_rows(app, &mut rows, src_ref, out_deg, &ctx, out) {
+                                Ok(()) => scan_active(s, work.shard, chunk, lo + a, out),
+                                Err(e) => record_err(e),
+                            }
+                        }
+                        WorkPayload::Dv { bytes, plan } => {
+                            let dv = &plan.chunks[chunk];
+                            let lo = plan.lo as usize;
+                            let (a, b) = (dv.start_row, dv.end_row);
+                            let out = unsafe { dst_shared.slice_mut(lo + a, b - a) };
+                            let mut rows = DvRows::new(plan.cursor(bytes, dv), plan.lo, a, b - a);
+                            match process_rows(app, &mut rows, src_ref, out_deg, &ctx, out) {
+                                Ok(()) => scan_active(s, work.shard, chunk, lo + a, out),
+                                Err(e) => record_err(e),
+                            }
+                        }
+                    }
+                };
+                // shard bookkeeping once its last chunk lands (pooled
+                // payload buffers go back to the freelist here)
+                let finalize = |work: &ShardWork| match &work.payload {
+                    WorkPayload::Skipped => {
+                        skipped.fetch_add(1, Ordering::Relaxed);
+                    }
+                    WorkPayload::Failed => {}
+                    other => {
+                        processed.fetch_add(1, Ordering::Relaxed);
+                        edge_count.fetch_add(work.edges, Ordering::Relaxed);
+                        if let WorkPayload::View { bytes, pooled: true, .. } = other {
+                            buf_pool.put(bytes.clone());
+                        }
+                    }
                 };
 
                 if let Some(io_pool) = self.io_pool.as_ref().filter(|_| window > 0) {
-                    // ---- pipelined path: I/O pool produces (hottest shard
-                    // first, per the governor's schedule), compute pool
-                    // consumes; at most `window` decoded shards in flight ---
+                    // ---- pipelined path: the I/O pool produces ready
+                    // shards (hottest first, per the governor's schedule)
+                    // onto the chunk board; every compute worker claims
+                    // chunk-sized pieces off the board, so a wide shard
+                    // spans cores instead of serializing the iteration
+                    // tail.  At most `window` permit-holding shards are in
+                    // flight at once. -------------------------------------
                     let gate = &Semaphore::new(window);
-                    let (tx, rx) = mpsc::channel::<Fetched>();
-                    let rx = Mutex::new(rx);
+                    let board = &ChunkBoard::new(p);
                     let adaptive = self.governor.is_adaptive();
+                    let scratch_ref: &mut [WorkerScratch] = &mut scratch;
                     std::thread::scope(|scope| {
                         let screened_out = &screened_out;
+                        let acquire = &acquire;
+                        let record_err = &record_err;
                         let order = &order;
                         scope.spawn(move || {
-                            let tx = Mutex::new(tx);
                             io_pool.parallel_for(p, |k| {
                                 let shard = order[k];
                                 if screened_out(shard) {
-                                    let _ = tx.lock().unwrap().send(Fetched::Skipped(shard));
+                                    board.push(ShardWork::new(shard, WorkPayload::Skipped, 1, 0));
                                     return;
                                 }
-                                // in-flight budget — except that under the
-                                // governor a *mode-1* (uncompressed) cache
-                                // hit hands out a clone of the cached Arc:
-                                // no disk read and no new decoded bytes, so
-                                // it never waits for a read-ahead slot (it
+                                // in-flight budget — except that a cache
+                                // hit that materializes no decoded bytes
+                                // (mode-1's Arc clone; delta-varint under
+                                // the compressed-domain gather, which
+                                // streams straight from the slot payload)
+                                // never waits for a read-ahead slot (it
                                 // still takes a free one opportunistically).
-                                // Compressing codecs decompress a fresh
-                                // buffer per hit, which is exactly the
-                                // memory the window bounds — they go
-                                // through the gate like any other shard.
-                                let fast_resident = adaptive
-                                    && cache.codec() == Codec::None
-                                    && cache.is_resident(shard);
+                                // Byte codecs decompress a payload-sized
+                                // buffer per hit — exactly the memory the
+                                // window bounds — so they stay gated.
+                                let resident_streams = cache.codec() == Codec::None
+                                    || (use_stream && cache.codec() == Codec::DeltaVarint);
+                                let fast_resident =
+                                    adaptive && resident_streams && cache.is_resident(shard);
                                 let mut holds_permit = if fast_resident {
                                     gate.try_acquire()
                                 } else {
                                     gate.acquire();
                                     true
                                 };
-                                // a panic inside acquisition (e.g. a poisoned
-                                // cache lock) must not kill the pool worker —
-                                // that would starve the consumers' recv();
-                                // surface it as a Failed message instead
-                                let did_read = std::cell::Cell::new(false);
-                                let msg = match std::panic::catch_unwind(
-                                    std::panic::AssertUnwindSafe(|| {
-                                        cache.fetch_decoded(shard, cfg.cache_budget > 0, || {
-                                            did_read.set(true);
-                                            io::read_file(&dir.shard_path(shard))
-                                        })
-                                    }),
+                                // a panic inside acquisition (e.g. a
+                                // poisoned cache lock) must not kill the
+                                // pool worker — that would starve the
+                                // board; surface it as a Failed entry
+                                let did_read = Cell::new(false);
+                                let mut work = match std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(|| acquire(shard, &did_read)),
                                 ) {
-                                    Ok(Ok(csr)) => {
-                                        // the resident-bypass raced an
-                                        // eviction and the shard came off
-                                        // disk after all: take the in-flight
-                                        // permit it owes before publishing,
-                                        // so the decoded-shard envelope holds
-                                        if !holds_permit && did_read.get() {
-                                            gate.acquire();
-                                            holds_permit = true;
-                                        }
-                                        Fetched::Ready(shard, csr, holds_permit)
+                                    Ok(work) => work,
+                                    Err(_) => {
+                                        record_err(anyhow::anyhow!(
+                                            "shard {shard} acquisition panicked"
+                                        ));
+                                        ShardWork::new(shard, WorkPayload::Failed, 1, 0)
                                     }
-                                    Ok(Err(e)) => Fetched::Failed(e, holds_permit),
-                                    Err(_) => Fetched::Failed(
-                                        anyhow::anyhow!("shard {shard} acquisition panicked"),
-                                        holds_permit,
-                                    ),
                                 };
-                                let _ = tx.lock().unwrap().send(msg);
+                                // the resident-bypass raced an eviction and
+                                // the shard came off disk after all: take
+                                // the in-flight permit it owes before
+                                // publishing, so the decoded envelope holds
+                                if !holds_permit && did_read.get() {
+                                    gate.acquire();
+                                    holds_permit = true;
+                                }
+                                work.permit = holds_permit;
+                                board.push(work);
                             });
                         });
-                        self.pool.parallel_for(p, |_| {
+                        self.pool.broadcast_with(scratch_ref, |s, _worker| loop {
                             let t_wait = Instant::now();
-                            let msg = rx.lock().unwrap().recv();
-                            io_wait_ns
-                                .fetch_add(t_wait.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                            let claimed = board.claim();
+                            let waited = t_wait.elapsed().as_nanos() as u64;
+                            // the terminal wait (claim -> None while peers
+                            // drain the tail) is bookkeeping, not an I/O
+                            // stall: counting it would overstate
+                            // io_wait_fraction and mislead the governor
+                            // toward growing the window on compute-bound
+                            // iterations
+                            let Some((work, chunk)) = claimed else { break };
+                            io_wait_ns.fetch_add(waited, Ordering::Relaxed);
                             let t_comp = Instant::now();
-                            match msg {
-                                Ok(Fetched::Skipped(shard)) => carry_skipped(shard),
-                                Ok(Fetched::Ready(shard, csr, permit)) => {
-                                    if let Err(e) = process_ready(shard, &csr) {
-                                        record_err(e);
-                                    }
-                                    drop(csr);
-                                    if permit {
-                                        gate.release();
-                                    }
-                                }
-                                Ok(Fetched::Failed(e, permit)) => {
-                                    record_err(e);
-                                    if permit {
-                                        gate.release();
-                                    }
-                                }
-                                Err(_) => record_err(anyhow::anyhow!(
-                                    "prefetch pipeline terminated early"
-                                )),
-                            }
+                            process_chunk(s, &work, chunk);
                             compute_ns
                                 .fetch_add(t_comp.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                            if work.done_chunks.fetch_add(1, Ordering::AcqRel) + 1
+                                == work.num_chunks
+                            {
+                                finalize(&work);
+                                if work.permit {
+                                    gate.release();
+                                }
+                                board.finalized();
+                            }
                         });
                     });
                 } else {
-                    // ---- synchronous path (prefetch_depth = 0) -----------
-                    self.pool.parallel_for(p, |shard| {
+                    // ---- synchronous path (prefetch_depth = 0): workers
+                    // acquire and process whole shards off a shared cursor,
+                    // chunk by chunk, with the same scratch arenas --------
+                    let cursor = AtomicUsize::new(0);
+                    self.pool.broadcast_with(&mut scratch, |s, _worker| loop {
+                        let shard = cursor.fetch_add(1, Ordering::Relaxed);
+                        if shard >= p {
+                            break;
+                        }
                         if screened_out(shard) {
                             carry_skipped(shard);
-                            return;
+                            skipped.fetch_add(1, Ordering::Relaxed);
+                            continue;
                         }
                         let t_io = Instant::now();
-                        let fetched = fetch(shard);
+                        let did_read = Cell::new(false);
+                        let work = acquire(shard, &did_read);
                         io_wait_ns.fetch_add(t_io.elapsed().as_nanos() as u64, Ordering::Relaxed);
-                        let csr = match fetched {
-                            Ok(csr) => csr,
-                            Err(e) => {
-                                record_err(e);
-                                return;
-                            }
-                        };
                         let t_comp = Instant::now();
-                        if let Err(e) = process_ready(shard, &csr) {
-                            record_err(e);
+                        for chunk in 0..work.num_chunks {
+                            process_chunk(s, &work, chunk);
                         }
+                        finalize(&work);
                         compute_ns.fetch_add(t_comp.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     });
                 }
@@ -551,11 +942,28 @@ impl VswEngine {
                 return Err(e);
             }
 
-            // line 9-11: merge active sets, swap arrays, recompute ratio
-            active = new_active
-                .into_iter()
-                .flat_map(|m| m.into_inner().unwrap())
-                .collect();
+            // lines 9-11: merge the workers' active runs in deterministic
+            // (shard, chunk) order — each (shard, chunk) was processed by
+            // exactly one worker, so the sorted run list reproduces the
+            // per-shard ascending order regardless of scheduling — then
+            // swap arrays and recompute the ratio.  The staging buffers
+            // persist across iterations: no allocation in steady state.
+            run_index.clear();
+            for (w, s) in scratch.iter().enumerate() {
+                for &(shard, chunk, start, len) in &s.runs {
+                    run_index.push((shard, chunk, w, start, len));
+                }
+            }
+            run_index.sort_unstable();
+            next_active.clear();
+            for &(_, _, w, start, len) in &run_index {
+                next_active.extend_from_slice(&scratch[w].active[start..start + len]);
+            }
+            for s in scratch.iter_mut() {
+                s.active.clear();
+                s.runs.clear();
+            }
+            std::mem::swap(&mut active, &mut next_active);
             active_ratio = active.len() as f64 / n.max(1) as f64;
             std::mem::swap(&mut src, &mut dst);
 
@@ -585,6 +993,7 @@ impl VswEngine {
                 io_wait: std::time::Duration::from_nanos(io_wait_ns.load(Ordering::Relaxed)),
                 compute: std::time::Duration::from_nanos(compute_ns.load(Ordering::Relaxed)),
                 prefetch_depth: window,
+                decode_ns: decode_ns.load(Ordering::Relaxed),
             });
         }
 
@@ -833,6 +1242,66 @@ mod tests {
         assert!(adaptive.governor().high_water() >= 1);
         // fixed engine: high-water == configured depth, estimate unchanged
         assert_eq!(fixed.governor().high_water(), 2);
+    }
+
+    #[test]
+    fn compressed_domain_and_chunking_are_bit_identical() {
+        // the tentpole's acceptance bar, at unit scope: every codec ×
+        // stream on/off × several chunk sizes must reproduce the exact
+        // value bits and shard accounting of the legacy configuration
+        let edges = generator::rmat(9, 6000, generator::RmatParams::default(), 31);
+        let n = 512;
+        let dir = build_dataset("stream", &edges, n, 300);
+        let run = |codec: Codec, stream: bool, chunk_rows: usize, depth: usize| {
+            let engine = VswEngine::open(
+                dir.clone(),
+                EngineConfig {
+                    max_iters: 5,
+                    threads: 4,
+                    cache_codec: codec,
+                    stream_gather: stream,
+                    chunk_rows,
+                    prefetch_depth: depth,
+                    selective: false,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            engine.run(&PageRank::default()).unwrap()
+        };
+        for codec in [Codec::None, Codec::SnapLite, Codec::Zlib1, Codec::DeltaVarint] {
+            // golden is per-codec (decode path, no chunk splitting,
+            // synchronous): delta-varint normalizes row order, which
+            // legitimately reorders float-Sum folds vs the byte codecs —
+            // but within a codec every knob must be bit-invisible
+            let golden = run(codec, false, 0, 0);
+            let golden_bits: Vec<u32> = golden.values.iter().map(|v| v.to_bits()).collect();
+            for stream in [false, true] {
+                for chunk_rows in [0usize, 7, 64, 8192] {
+                    for depth in [0usize, 2] {
+                        let got = run(codec, stream, chunk_rows, depth);
+                        let bits: Vec<u32> = got.values.iter().map(|v| v.to_bits()).collect();
+                        assert_eq!(
+                            golden_bits, bits,
+                            "codec={} stream={stream} chunk_rows={chunk_rows} depth={depth}",
+                            codec.name()
+                        );
+                        assert_eq!(golden.stats.iters.len(), got.stats.iters.len());
+                        for (a, b) in golden.stats.iters.iter().zip(&got.stats.iters) {
+                            assert_eq!(a.shards_processed, b.shards_processed);
+                            assert_eq!(a.shards_skipped, b.shards_skipped);
+                        }
+                    }
+                }
+            }
+        }
+        // the compressed-domain path is the default and reports its decode
+        // split for compressing codecs on the pipelined path
+        let dv = run(Codec::DeltaVarint, true, 64, 2);
+        assert!(
+            dv.stats.total_decode_ns() > 0,
+            "dv planning must land in the decode_ns lane"
+        );
     }
 
     #[test]

@@ -39,6 +39,7 @@ const BOOL_FLAGS: &[&str] = &[
     "help",
     "adaptive",
     "weighted",
+    "no-stream-gather",
 ];
 
 fn main() {
@@ -88,6 +89,11 @@ USAGE:
                                             window, order shards hottest-
                                             first and loan spare cache budget
                      [--prefetch-max N]     adaptive window ceiling (def. 8)
+                     [--no-stream-gather]   decode compressed cache hits to a
+                                            CSR instead of streaming them into
+                                            the gather (the ablation path)
+                     [--chunk-rows N]       rows per intra-shard work chunk
+                                            (def. 8192; 0 = never split)
                      [--throttle-mbps N]
   graphmp baseline   --system <psw|esg|dsw|vsp|inmem> --data <edges>
                      --vertices <N> --app <name> [--iters N]
@@ -227,6 +233,8 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
         args.get_usize("prefetch-depth", EngineConfig::default().prefetch_depth)?;
     cfg.adaptive = args.has("adaptive");
     cfg.prefetch_max = args.get_usize("prefetch-max", EngineConfig::default().prefetch_max)?;
+    cfg.stream_gather = !args.has("no-stream-gather");
+    cfg.chunk_rows = args.get_usize("chunk-rows", EngineConfig::default().chunk_rows)?;
     if args.has("no-cache") {
         cfg.cache_budget = 0;
     } else if let Some(c) = args.get("cache") {
@@ -280,11 +288,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
     for it in &s.iters {
         println!(
-            "  iter {:3}: {:>9}  io_wait={:>9} compute={:>9} window={:2} processed={:3} skipped={:3} active={:8} ({:.4}%) read={} hits={} {}",
+            "  iter {:3}: {:>9}  io_wait={:>9} compute={:>9} decode={:>9} window={:2} processed={:3} skipped={:3} active={:8} ({:.4}%) read={} hits={} {}",
             it.iter,
             humansize::duration(it.wall),
             humansize::duration(it.io_wait),
             humansize::duration(it.compute),
+            humansize::duration(std::time::Duration::from_nanos(it.decode_ns)),
             it.prefetch_depth,
             it.shards_processed,
             it.shards_skipped,

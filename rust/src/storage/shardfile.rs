@@ -93,6 +93,159 @@ pub fn estimated_bytes(csr: &Csr) -> usize {
         + (csr.row_ptr.len() + csr.col.len() + csr.wgt.len()) * 4
 }
 
+// ---- zero-copy payload views -----------------------------------------------
+//
+// The compressed-domain gather path walks serialized shard bytes in place:
+// `parse_layout` validates a framed buffer once (everything `from_bytes`
+// checks — CRC, version, monotone `row_ptr`, array bounds) and records the
+// section offsets in a `Copy` struct, and `PayloadLayout::view` then hands
+// out an accessor whose `row_ptr`/`col`/`weight` reads are plain LE loads.
+// No `Vec` is ever built, which is what makes a compressed-cache hit (or a
+// fresh disk read) free of the decoded-CSR allocations.
+
+/// Validated section offsets of a framed shard buffer (`Copy`, borrow-free
+/// — safe to ship across threads next to the bytes it describes).
+#[derive(Debug, Clone, Copy)]
+pub struct PayloadLayout {
+    pub lo: u32,
+    pub hi: u32,
+    /// Edge count (`col` length).
+    pub num_edges: usize,
+    pub weighted: bool,
+    /// Byte offset of `row_ptr[0]` within the framed buffer.
+    row_ptr_off: usize,
+    /// Byte offset of `col[0]`.
+    col_off: usize,
+    /// Byte offset of `wgt[0]` (meaningful only when `weighted`).
+    wgt_off: usize,
+}
+
+/// Parse + fully validate a framed shard buffer without materializing it.
+/// Accepts exactly what [`from_bytes`] accepts (including v1 payloads).
+pub fn parse_layout(buf: &[u8]) -> Result<PayloadLayout> {
+    let (version, payload) = unframe(MAGIC, buf)?;
+    anyhow::ensure!(
+        (MIN_VERSION..=VERSION).contains(&version),
+        "shard version {version} (readable: {MIN_VERSION}..={VERSION})"
+    );
+    // offsets below are relative to `buf`, so everything the view reads is
+    // one add away from the framed bytes the cache/prefetcher already holds
+    let base = buf.len() - 4 - payload.len();
+    let (lo, p) = get_u32(payload, 0)?;
+    let (hi, p) = get_u32(payload, p)?;
+    anyhow::ensure!(lo < hi, "shard interval empty [{lo},{hi})");
+    let rows = (hi - lo) as usize;
+
+    let read_len = |pos: usize| -> Result<(usize, usize)> {
+        anyhow::ensure!(payload.len() >= pos + 8, "array header truncated");
+        let n = u64::from_le_bytes(payload[pos..pos + 8].try_into().unwrap()) as usize;
+        let start = pos + 8;
+        let room = payload.len().saturating_sub(start);
+        anyhow::ensure!(
+            n.checked_mul(4).is_some_and(|bytes| room >= bytes),
+            "array payload truncated"
+        );
+        Ok((n, start))
+    };
+    let (rp_len, rp_start) = read_len(p)?;
+    anyhow::ensure!(rp_len == rows + 1, "row_ptr length");
+    let (col_len, col_start) = read_len(rp_start + rp_len * 4)?;
+    let (wgt_len, wgt_start) = if version >= 2 {
+        read_len(col_start + col_len * 4)?
+    } else {
+        (0, col_start + col_len * 4)
+    };
+    anyhow::ensure!(
+        wgt_len == 0 || wgt_len == col_len,
+        "weight lane length != col length"
+    );
+    anyhow::ensure!(wgt_start + wgt_len * 4 == payload.len(), "shard trailing bytes");
+
+    // structural validation, mirroring Csr::validate
+    let rp = |i: usize| {
+        u32::from_le_bytes(payload[rp_start + i * 4..rp_start + i * 4 + 4].try_into().unwrap())
+    };
+    anyhow::ensure!(rp(0) == 0, "row_ptr[0] != 0");
+    anyhow::ensure!(rp(rows) as usize == col_len, "row_ptr tail != col len");
+    for i in 0..rows {
+        anyhow::ensure!(rp(i) <= rp(i + 1), "row_ptr not monotone");
+    }
+    Ok(PayloadLayout {
+        lo,
+        hi,
+        num_edges: col_len,
+        weighted: wgt_len > 0,
+        row_ptr_off: base + rp_start,
+        col_off: base + col_start,
+        wgt_off: base + wgt_start,
+    })
+}
+
+impl PayloadLayout {
+    pub fn num_rows(&self) -> usize {
+        (self.hi - self.lo) as usize
+    }
+
+    /// Accessor over `buf`, which must be the exact buffer this layout was
+    /// parsed from (same length; offsets are positional).
+    pub fn view<'a>(&self, buf: &'a [u8]) -> PayloadView<'a> {
+        PayloadView { layout: *self, buf }
+    }
+}
+
+/// In-place reader over a validated framed shard buffer — the borrowed
+/// counterpart of a decoded [`Csr`].
+#[derive(Clone, Copy)]
+pub struct PayloadView<'a> {
+    layout: PayloadLayout,
+    buf: &'a [u8],
+}
+
+impl PayloadView<'_> {
+    #[inline]
+    fn u32_at(&self, off: usize) -> u32 {
+        u32::from_le_bytes(self.buf[off..off + 4].try_into().unwrap())
+    }
+
+    pub fn lo(&self) -> u32 {
+        self.layout.lo
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.layout.num_rows()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.layout.num_edges
+    }
+
+    pub fn is_weighted(&self) -> bool {
+        self.layout.weighted
+    }
+
+    /// `row_ptr[i]` as an edge index (i ≤ num_rows).
+    #[inline]
+    pub fn row_ptr(&self, i: usize) -> usize {
+        self.u32_at(self.layout.row_ptr_off + i * 4) as usize
+    }
+
+    /// Source id of edge slot `k`.
+    #[inline]
+    pub fn col(&self, k: usize) -> u32 {
+        self.u32_at(self.layout.col_off + k * 4)
+    }
+
+    /// Weight of edge slot `k` (1.0 when unweighted).
+    #[inline]
+    pub fn weight(&self, k: usize) -> f32 {
+        if self.layout.weighted {
+            f32::from_bits(self.u32_at(self.layout.wgt_off + k * 4))
+        } else {
+            1.0
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,6 +331,43 @@ mod tests {
         let a = sample_weighted();
         save(&a, &path).unwrap();
         assert_eq!(load(&path).unwrap(), a);
+    }
+
+    fn assert_view_matches(csr: &Csr, buf: &[u8]) {
+        let layout = parse_layout(buf).unwrap();
+        let view = layout.view(buf);
+        assert_eq!((view.lo(), layout.hi), (csr.lo, csr.hi));
+        assert_eq!(view.num_rows(), csr.num_vertices());
+        assert_eq!(view.num_edges(), csr.num_edges());
+        assert_eq!(view.is_weighted(), csr.is_weighted());
+        for i in 0..=csr.num_vertices() {
+            assert_eq!(view.row_ptr(i), csr.row_ptr[i] as usize);
+        }
+        for k in 0..csr.num_edges() {
+            assert_eq!(view.col(k), csr.col[k]);
+            assert_eq!(view.weight(k).to_bits(), csr.weight(k).to_bits());
+        }
+    }
+
+    #[test]
+    fn payload_view_reads_v1_and_v2_in_place() {
+        let w = sample_weighted();
+        assert_view_matches(&w, &to_bytes(&w));
+        let u = sample();
+        assert_view_matches(&u, &to_bytes(&u));
+        assert_view_matches(&u, &to_bytes_v1(&u));
+    }
+
+    #[test]
+    fn payload_layout_rejects_what_from_bytes_rejects() {
+        let bytes = to_bytes(&sample_weighted());
+        for cut in [0, 5, bytes.len() - 1] {
+            assert!(parse_layout(&bytes[..cut]).is_err());
+        }
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x10;
+        assert!(parse_layout(&bad).is_err(), "CRC damage must be caught");
     }
 
     #[test]

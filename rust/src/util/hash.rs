@@ -31,14 +31,25 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
+/// The Kirsch–Mitzenmacher double-hashing basis `(h1, h2)` of a key: the
+/// filter-independent part of a Bloom probe.  Hashing is the per-key cost;
+/// deriving the `k` bit positions for a particular filter from `(h1, h2)`
+/// is a handful of integer ops — so a key probed against many filters
+/// should compute its basis once (see `bloom::digest`).
+#[inline]
+pub fn bloom_basis(key: u64) -> (u64, u64) {
+    let h = hash64(key);
+    let h1 = h & 0xFFFF_FFFF;
+    let h2 = (h >> 32) | 1; // odd => full period mod powers of two
+    (h1, h2)
+}
+
 /// Kirsch–Mitzenmacher double hashing: derive `k` indexes in `[0, m)` from
 /// one 64-bit hash. `m` must be > 0.
 #[inline]
 pub fn bloom_indexes(key: u64, k: u32, m: u64, out: &mut [u64]) {
     debug_assert!(out.len() >= k as usize);
-    let h = hash64(key);
-    let h1 = h & 0xFFFF_FFFF;
-    let h2 = (h >> 32) | 1; // odd => full period mod powers of two
+    let (h1, h2) = bloom_basis(key);
     for (i, slot) in out.iter_mut().enumerate().take(k as usize) {
         *slot = h1.wrapping_add(h2.wrapping_mul(i as u64)) % m;
     }
@@ -78,6 +89,23 @@ mod tests {
         uniq.sort_unstable();
         uniq.dedup();
         assert!(uniq.len() >= 6, "mostly distinct: {uniq:?}");
+    }
+
+    #[test]
+    fn bloom_basis_matches_bloom_indexes() {
+        // the precomputed basis must derive exactly the bit positions the
+        // one-shot path produces, for any (k, m)
+        for key in [0u64, 1, 12345, u64::MAX] {
+            let (h1, h2) = bloom_basis(key);
+            assert_eq!(h2 & 1, 1, "h2 must be odd");
+            for &(k, m) in &[(1u32, 64u64), (7, 1000), (16, 1 << 20)] {
+                let mut out = [0u64; 16];
+                bloom_indexes(key, k, m, &mut out);
+                for (i, &want) in out.iter().enumerate().take(k as usize) {
+                    assert_eq!(h1.wrapping_add(h2.wrapping_mul(i as u64)) % m, want);
+                }
+            }
+        }
     }
 
     #[test]

@@ -163,6 +163,43 @@ impl ThreadPool {
             done = self.shared.cv.wait(done).unwrap();
         }
     }
+
+    /// Run `f(&mut state[t], t)` once on **every** worker `t`, blocking
+    /// until all return.  This is the substrate for worker-owned scratch
+    /// arenas: each worker gets exclusive `&mut` access to its own state
+    /// slot for the whole batch (no locks), and the slots persist across
+    /// batches so per-iteration buffers are allocated once and reused.
+    /// `state.len()` must be >= [`Self::threads`].
+    pub fn broadcast_with<S: Send, F: Fn(&mut S, usize) + Sync>(&self, state: &mut [S], f: F) {
+        let workers = self.tx.len();
+        assert!(state.len() >= workers, "one state slot per worker required");
+        {
+            let mut done = self.shared.done.lock().unwrap();
+            *done = 0;
+        }
+        // Lifetime extension with the same soundness argument as
+        // `parallel_for`: the done-counter wait below keeps `f` and
+        // `state` borrowed past every worker's last use.  Slots are
+        // disjoint (`t`-indexed), so handing each worker a raw pointer to
+        // its own element upholds &mut exclusivity.
+        let f_ref: &(dyn Fn(&mut S, usize) + Sync) = &f;
+        let f_static: &'static (dyn Fn(&mut S, usize) + Sync) =
+            unsafe { std::mem::transmute(f_ref) };
+        let base = state.as_mut_ptr() as usize;
+        for t in 0..workers {
+            let job: Job = Box::new(move || {
+                // SAFETY: slot `t` is touched by worker `t` alone, and the
+                // batch-blocking wait keeps the borrow alive.
+                let slot = unsafe { &mut *(base as *mut S).add(t) };
+                f_static(slot, t);
+            });
+            self.tx[t].send(job).expect("worker alive");
+        }
+        let mut done = self.shared.done.lock().unwrap();
+        while *done < workers {
+            done = self.shared.cv.wait(done).unwrap();
+        }
+    }
 }
 
 impl Drop for ThreadPool {
@@ -219,6 +256,28 @@ mod tests {
                 sum.fetch_add(i as u64, Ordering::Relaxed);
             });
             assert_eq!(sum.load(Ordering::Relaxed), 4950, "round {round}");
+        }
+    }
+
+    #[test]
+    fn broadcast_with_gives_every_worker_its_own_state() {
+        let pool = ThreadPool::new(4);
+        let mut scratch: Vec<Vec<u64>> = vec![Vec::new(); 4];
+        for round in 0..3u64 {
+            let cursor = AtomicUsize::new(0);
+            pool.broadcast_with(&mut scratch, |s, t| {
+                s.push(t as u64 + round * 10);
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= 100 {
+                        break;
+                    }
+                }
+            });
+        }
+        // every worker ran every round, into its own slot, which persisted
+        for (t, s) in scratch.iter().enumerate() {
+            assert_eq!(s.as_slice(), &[t as u64, t as u64 + 10, t as u64 + 20]);
         }
     }
 

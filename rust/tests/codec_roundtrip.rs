@@ -215,6 +215,144 @@ fn prop_deltavarint_roundtrips_and_rejects_truncation() {
 }
 
 #[test]
+fn prop_dv_cursor_api_streams_what_decode_materializes() {
+    // the compressed-domain cursor API: a chunked plan + cursor walk over
+    // any random shard's payload must visit exactly the rows/sources/
+    // weight-bits the decoder materializes, for any chunk size, and the
+    // plan must reject every truncation the decoder rejects
+    prop::check(0xDC0DE, 30, |g| {
+        let csr = random_shard(g);
+        let buf = deltavarint::encode(&csr);
+        let decoded = deltavarint::decode(&buf).unwrap();
+        let chunk_rows = [0usize, 1, 3, 17, 4096][g.usize_in(0, 5)];
+        let plan = deltavarint::plan(&buf, chunk_rows).unwrap();
+        assert_eq!(plan.lo, decoded.lo);
+        assert_eq!(plan.num_rows, decoded.num_vertices());
+        assert_eq!(plan.num_edges, decoded.num_edges());
+        assert_eq!(plan.weighted, decoded.is_weighted());
+        let mut triples: Vec<(usize, u32, u32)> = Vec::new();
+        for chunk in &plan.chunks {
+            let mut cur = plan.cursor(&buf, chunk);
+            for row in chunk.start_row..chunk.end_row {
+                cur.next_row(|s, w| triples.push((row, s, w.to_bits()))).unwrap();
+            }
+        }
+        let want: Vec<(usize, u32, u32)> = (0..decoded.num_vertices())
+            .flat_map(|i| {
+                (decoded.row_ptr[i] as usize..decoded.row_ptr[i + 1] as usize)
+                    .map(move |k| (i, decoded.col[k], decoded.weight(k).to_bits()))
+            })
+            .collect();
+        assert_eq!(triples, want, "chunk_rows={chunk_rows}");
+        if !buf.is_empty() {
+            let cut = g.usize_in(0, buf.len());
+            if cut < buf.len() {
+                assert!(deltavarint::plan(&buf[..cut], chunk_rows).is_err(), "cut {cut}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_compressed_domain_gather_equals_decoded_every_codec_and_lane() {
+    // the tentpole's correctness bar: for every codec, the engine-side
+    // row stream built from the *compressed* representation must fold to
+    // bit-identical per-vertex results as the decoded-CSR stream — on all
+    // four value lanes, weighted and unweighted, at random chunk splits
+    use graphmp::apps::{
+        LabelProp, MaxDeg, PageRank, ProgramContext, SpMv64, VertexProgram, WeightedSssp,
+    };
+    use graphmp::engine::{process_rows, CsrRows, DvRows, ViewRows};
+
+    /// Bit-exact view of a value array (PartialEq would conflate 0.0 and
+    /// -0.0 on float lanes; the wire format cannot).
+    fn wire<V: VertexValue>(vals: &[V]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(vals.len() * V::BYTES);
+        for &v in vals {
+            v.write_le(&mut out);
+        }
+        out
+    }
+
+    fn fold_sources<V: VertexValue>(
+        app: &dyn VertexProgram<V>,
+        csr: &Csr,
+        src: &[V],
+        out_deg: &[u32],
+        chunk_rows: usize,
+    ) {
+        let ctx = ProgramContext { num_vertices: src.len() as u64 };
+        let n = csr.num_vertices();
+        let step = chunk_rows.max(1);
+        // oracle: the decoded-CSR stream, whole shard in one chunk
+        let mut want = vec![V::vzero(); n];
+        process_rows(app, &mut CsrRows::new(csr, 0..n), src, out_deg, &ctx, &mut want)
+            .unwrap();
+
+        // serialized payload walked in place (what byte-codec hits and
+        // raw disk reads use), chunked
+        let payload = shardfile::to_bytes(csr);
+        let layout = shardfile::parse_layout(&payload).unwrap();
+        let mut got = vec![V::vzero(); n];
+        for a in (0..n).step_by(step) {
+            let b = (a + step).min(n);
+            let mut rows = ViewRows::new(layout.view(&payload), a..b);
+            process_rows(app, &mut rows, src, out_deg, &ctx, &mut got[a..b]).unwrap();
+        }
+        assert_eq!(wire(&want), wire(&got), "ViewRows diverged ({}, chunk {step})", app.name());
+
+        // delta-varint streamed in the compressed domain, chunked; its
+        // oracle is the decoded-dv CSR (dv sorts rows)
+        let dv = deltavarint::encode(csr);
+        let dv_csr = deltavarint::decode(&dv).unwrap();
+        let mut dv_want = vec![V::vzero(); n];
+        process_rows(app, &mut CsrRows::new(&dv_csr, 0..n), src, out_deg, &ctx, &mut dv_want)
+            .unwrap();
+        let plan = deltavarint::plan(&dv, step).unwrap();
+        let mut dv_got = vec![V::vzero(); n];
+        for chunk in &plan.chunks {
+            let mut rows = DvRows::new(
+                plan.cursor(&dv, chunk),
+                plan.lo,
+                chunk.start_row,
+                chunk.end_row - chunk.start_row,
+            );
+            process_rows(
+                app,
+                &mut rows,
+                src,
+                out_deg,
+                &ctx,
+                &mut dv_got[chunk.start_row..chunk.end_row],
+            )
+            .unwrap();
+        }
+        assert_eq!(
+            wire(&dv_want),
+            wire(&dv_got),
+            "DvRows diverged ({}, chunk {step})",
+            app.name()
+        );
+    }
+
+    prop::check(0x5EA7, 12, |g| {
+        let csr = random_shard(g);
+        let max_id = 100_000 + 1; // random_shard draws sources up to this
+        let chunk_rows = [1usize, 4, 33, 4096][g.usize_in(0, 4)];
+        let out_deg: Vec<u32> = (0..max_id).map(|_| (g.u64() % 9) as u32).collect();
+        let src32: Vec<f32> = (0..max_id).map(|_| (g.u64() >> 44) as f32 * 0.5).collect();
+        fold_sources::<f32>(&PageRank::default(), &csr, &src32, &out_deg, chunk_rows);
+        fold_sources::<f32>(&WeightedSssp { source: 0 }, &csr, &src32, &out_deg, chunk_rows);
+        let srcu64: Vec<u64> = (0..max_id as u64).collect();
+        fold_sources::<u64>(&LabelProp, &csr, &srcu64, &out_deg, chunk_rows);
+        let srcu32: Vec<u32> = (0..max_id as u32).collect();
+        fold_sources::<u32>(&MaxDeg, &csr, &srcu32, &out_deg, chunk_rows);
+        let srcf64: Vec<f64> = (0..max_id).map(|_| (g.u64() >> 40) as f64 * 0.25).collect();
+        fold_sources::<f64>(&SpMv64::default(), &csr, &srcf64, &out_deg, chunk_rows);
+    });
+}
+
+#[test]
 fn compressing_codecs_shrink_a_realistic_shard() {
     // power-law-ish shard: the compression claim the cache's mode ablation
     // rests on must hold for every non-identity codec

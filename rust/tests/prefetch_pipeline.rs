@@ -244,6 +244,74 @@ fn results_and_accounting_are_bit_identical_across_threads_and_depths() {
 }
 
 #[test]
+fn chunked_scheduler_and_compressed_gather_are_bit_identical() {
+    // the intra-shard chunk scheduler hands pieces of one shard to many
+    // workers, and the compressed-domain gather swaps the whole hit-path
+    // representation — both must be invisible in results AND in the
+    // per-iteration shard accounting, across codecs, chunk sizes, thread
+    // counts and both prefetch paths
+    use graphmp::cache::Codec;
+    let n = 1usize << 9;
+    let edges = generator::rmat(9, 4000, generator::RmatParams::default(), 2024);
+    let dir = build_dataset("chunk", &edges, n, 300);
+
+    for (app, engine_iters, _, _) in app_matrix() {
+        for codec in [Codec::SnapLite, Codec::DeltaVarint, Codec::None] {
+            // golden is per-codec: delta-varint legitimately normalizes
+            // row order, which reorders float-Sum folds relative to the
+            // byte codecs; *within* a codec every configuration must be
+            // bit-identical
+            let mut golden: Option<(Vec<u32>, Vec<(usize, usize)>)> = None;
+            // chunk_rows 9 splits these ~35-row shards ~4 ways; 0 never
+            // splits — the two scheduler extremes
+            for stream in [true, false] {
+                for &chunk_rows in &[0usize, 9] {
+                    for &(threads, depth) in &[(4usize, 0usize), (4, 2)] {
+                        let engine = VswEngine::open(
+                            dir.clone(),
+                            EngineConfig {
+                                max_iters: engine_iters,
+                                threads,
+                                selective: true,
+                                selective_threshold: 0.05,
+                                prefetch_depth: depth,
+                                cache_codec: codec,
+                                stream_gather: stream,
+                                chunk_rows,
+                                ..Default::default()
+                            },
+                        )
+                        .unwrap();
+                        let got = engine.run(app.as_ref()).unwrap();
+                        let bits: Vec<u32> =
+                            got.values.iter().map(|v| v.to_bits()).collect();
+                        let accounting: Vec<(usize, usize)> = got
+                            .stats
+                            .iters
+                            .iter()
+                            .map(|i| (i.shards_processed, i.shards_skipped))
+                            .collect();
+                        match &golden {
+                            None => golden = Some((bits, accounting)),
+                            Some((gb, ga)) => {
+                                let what = format!(
+                                    "{}: codec={} stream={stream} chunk_rows={chunk_rows} \
+                                     t={threads} d={depth}",
+                                    app.name(),
+                                    codec.name()
+                                );
+                                assert_eq!(gb, &bits, "{what} changed value bits");
+                                assert_eq!(ga, &accounting, "{what} changed accounting");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn frontier_skipping_is_deterministic_under_prefetch() {
     // SSSP on a long path: selective scheduling skips most shards once the
     // frontier passes; skipped/processed counts must not depend on the
