@@ -230,10 +230,10 @@ APPS = [PageRank(), Sssp(), Wcc(), Bfs(), SpMv(), SpMv64(),
         WeightedSssp(), LabelProp(), MaxDeg()]
 
 
-def run_reference(app):
-    edges, weights = fixture_graph()
+def run_reference(app, graph=None, start_vals=None):
+    edges, weights = graph if graph is not None else fixture_graph()
     in_adj, in_w, out_deg = adjacency(edges, weights)
-    vals = [app.init(v) for v in range(N)]
+    vals = start_vals[:] if start_vals is not None else [app.init(v) for v in range(N)]
     iters = app.fixed_iters if app.fixed_iters is not None else MAX_ITERS
     for _ in range(iters):
         nxt = []
@@ -253,6 +253,119 @@ def run_reference(app):
     return vals
 
 
+# ---- dynamic-graph (delta-shard) semantics mirror ---------------------------
+#
+# Mirrors rust/src/graph/mutation.rs + storage/delta.rs closely enough for
+# the no-toolchain container to verify the subsystem's two core theorems:
+#
+# 1. **Row-order equivalence** — merging base rows (survivors in base
+#    order) with resident delta inserts (insertion order per destination)
+#    yields exactly the per-row edge sequence of a from-scratch stable
+#    counting sort over the final edge list.  This is what makes
+#    delta-merged execution bit-identical to a rebuild in the engine.
+# 2. **Monotone warm restart** — for Min/Max apps whose apply folds the old
+#    value, iterating from the previous fixpoint after insert-only batches
+#    reaches the same fixpoint as a cold start.
+#
+# Mutations: ("+", s, d, w) appends one edge; ("-", s, d) removes every
+# live (s, d) edge (base via tombstone, prior inserts by pruning).
+
+DELTA_BATCHES = [
+    # batch 1: inserts + deletes, incl. insert-then-delete and reinsert
+    [("+", 3, 11, np.float32(0.5)), ("-", 7, 5, None), ("+", 0, 12, np.float32(1.0)),
+     ("-", 3, 11, None), ("+", 3, 11, np.float32(2.0))],
+    # batch 2: deletes aimed at known base edges of the fixture graph
+    [("-", 0, 5, None), ("+", 40, 1, np.float32(0.25)), ("+", 40, 2, np.float32(0.75))],
+    # batch 3: insert-only (the incremental-restart epoch)
+    [("+", 5, 30, np.float32(1.5)), ("+", 17, 44, np.float32(0.5)),
+     ("+", 5, 31, np.float32(1.0))],
+]
+
+
+def apply_batch(edges, weights, batch):
+    """The executable specification (mirrors mutation::apply_batch)."""
+    for op in batch:
+        if op[0] == "+":
+            _, s, d, w = op
+            edges.append((s, d))
+            weights.append(w)
+        else:
+            _, s, d = op[0], op[1], op[2]
+            keep = [k for k, e in enumerate(edges) if e != (s, d)]
+            edges[:] = [edges[k] for k in keep]
+            weights[:] = [weights[k] for k in keep]
+
+
+def merged_rows(base_edges, base_weights, batches):
+    """Per-destination rows via the delta-shard path: base survivors in
+    base order + inserts in insertion order, tombstones kill base edges."""
+    ins = [[] for _ in range(N)]     # per-destination (src, w), insertion order
+    tombs = [set() for _ in range(N)]
+    for batch in batches:
+        for op in batch:
+            if op[0] == "+":
+                _, s, d, w = op
+                ins[d].append((s, w))
+            else:
+                _, s, d = op[0], op[1], op[2]
+                ins[d] = [(u, w) for (u, w) in ins[d] if u != s]
+                tombs[d].add(s)
+    rows = [[] for _ in range(N)]
+    for (s, d), w in zip(base_edges, base_weights):
+        if s not in tombs[d]:
+            rows[d].append((s, w))
+    for d in range(N):
+        rows[d].extend(ins[d])
+    return rows
+
+
+def rebuild_rows(edges, weights):
+    """Per-destination rows via a stable counting sort of the final list —
+    what a from-scratch preprocess produces."""
+    rows = [[] for _ in range(N)]
+    for (s, d), w in zip(edges, weights):
+        rows[d].append((s, w))
+    return rows
+
+
+def delta_selfcheck():
+    base_edges, base_weights = fixture_graph()
+
+    # theorem 1: delta-merged rows == rebuilt rows, edge for edge, in order
+    final_edges = list(base_edges)
+    final_weights = list(base_weights)
+    for batch in DELTA_BATCHES:
+        apply_batch(final_edges, final_weights, batch)
+    merged = merged_rows(base_edges, base_weights, DELTA_BATCHES)
+    rebuilt = rebuild_rows(final_edges, final_weights)
+    assert merged == rebuilt, "delta merge order != stable rebuild order"
+    assert sum(len(r) for r in merged) == len(final_edges)
+    # the deletes actually fired (batch 2 targets live base edges)
+    assert len(final_edges) < len(base_edges) + sum(
+        1 for b in DELTA_BATCHES for op in b if op[0] == "+"
+    )
+
+    # theorem 2: monotone warm restart — old fixpoint + insert-only batch
+    # re-converges to the cold fixpoint (Min/Max apps fold old in apply)
+    pre_edges = list(base_edges)
+    pre_weights = list(base_weights)
+    for batch in DELTA_BATCHES[:2]:
+        apply_batch(pre_edges, pre_weights, batch)
+    post_edges = list(pre_edges)
+    post_weights = list(pre_weights)
+    apply_batch(post_edges, post_weights, DELTA_BATCHES[2])
+    assert all(op[0] == "+" for op in DELTA_BATCHES[2]), "epoch 3 must be insert-only"
+    for app in APPS:
+        if app.reduce == "sum":
+            continue
+        old_fix = run_reference(app, graph=(pre_edges, pre_weights))
+        cold = run_reference(app, graph=(post_edges, post_weights))
+        warm = run_reference(app, graph=(post_edges, post_weights), start_vals=old_fix)
+        assert warm == cold, f"{app.name}: warm restart missed the cold fixpoint"
+    print("delta semantics mirror: ok "
+          f"({len(DELTA_BATCHES)} batches, {len(final_edges)} final edges)")
+
+
 def render(app, vals):
     lines = []
     for x in vals:
@@ -269,6 +382,10 @@ def render(app, vals):
 
 def main():
     check = "--check" in sys.argv
+    # the dynamic-graph semantics mirror runs in both modes: it is the
+    # no-toolchain container's way to verify the Rust subsystem's ordering
+    # and warm-restart theorems
+    delta_selfcheck()
     root = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "fixtures")
     root = os.path.normpath(root)
     os.makedirs(root, exist_ok=True)

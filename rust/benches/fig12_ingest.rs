@@ -1,0 +1,151 @@
+//! Fig 12 (extension) — dynamic-graph update throughput and incremental
+//! recomputation.
+//!
+//! The paper's pipeline is strictly static (preprocess once, read
+//! forever); this driver measures the delta-shard subsystem that lifts
+//! that restriction: (1) `ingest` throughput — mutations/second absorbed
+//! into per-interval delta shards with per-epoch Bloom rebuilds, (2)
+//! incremental restart — SSSP re-converging from the previous epoch's
+//! fixpoint seeded with the inserted edges' sources, vs a cold start on
+//! the mutated graph, and (3) compaction — merged shard rewrite time.
+//! Warm and cold must agree exactly, and post-compaction results must be
+//! bit-identical; the driver fails loudly otherwise.
+//!
+//! `--quick` (the CI bench-smoke mode): tiny dataset, small batches, and
+//! `fig_ingest_*` records appended to `$GRAPHMP_BENCH_JSON` if set.
+
+use std::time::Instant;
+
+use graphmp::apps::Sssp;
+use graphmp::coordinator::benchjson::{self, BenchRecord};
+use graphmp::coordinator::cli::Args;
+use graphmp::coordinator::datasets::Dataset;
+use graphmp::coordinator::report;
+use graphmp::engine::{EngineConfig, RunStats, VswEngine, WarmStart};
+use graphmp::graph::mutation;
+use graphmp::runtime::EpochManifest;
+use graphmp::sharding::{preprocess, PreprocessConfig};
+use graphmp::storage::property::Property;
+use graphmp::storage::DatasetDir;
+use graphmp::util::bench::Table;
+use graphmp::util::humansize;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["quick", "bench"])?;
+    let quick = args.has("quick");
+    let dataset = if quick {
+        Dataset::by_name("tiny")?
+    } else {
+        Dataset::by_name(
+            &std::env::var("GRAPHMP_FIG12_DATASET").unwrap_or_else(|_| "twitter-s".into()),
+        )?
+    };
+    let (rounds, batch_size) = if quick { (4usize, 1_000usize) } else { (8, 20_000) };
+    println!(
+        "Fig 12: delta-shard ingest + incremental recomputation on {} ({rounds} x {batch_size} \
+         mutations)",
+        dataset.name
+    );
+
+    // fresh mutable copy — the shared bench datasets must stay immutable
+    let dir = DatasetDir::new(
+        std::env::temp_dir().join(format!("graphmp_fig12_{}", std::process::id())),
+    );
+    let _ = std::fs::remove_dir_all(&dir.root);
+    let edges = dataset.generate();
+    preprocess(dataset.name, &edges, dataset.num_vertices(), &dir, &PreprocessConfig::default())?;
+
+    // cold fixpoint at the base epoch (the warm start's input)
+    let app = Sssp { source: 0 };
+    let engine = VswEngine::open(dir.clone(), EngineConfig::default())?;
+    let base = engine.run(&app)?;
+    drop(engine);
+
+    // 1) update throughput: R insert-only batches (insert-only keeps the
+    // incremental leg eligible; deletes are exercised by the test suite)
+    let t_apply = Instant::now();
+    let mut applied = 0u64;
+    for r in 0..rounds {
+        let batch = mutation::synth_batch(
+            dataset.num_vertices(),
+            &[],
+            batch_size,
+            0.0,
+            false,
+            0xF16_12 + r as u64,
+        );
+        applied += batch.len() as u64;
+        mutation::ingest(&dir, &batch, 0.01)?;
+    }
+    let apply_wall = t_apply.elapsed();
+    let rate = applied as f64 / apply_wall.as_secs_f64().max(1e-9);
+
+    // 2) incremental restart vs cold start on the mutated graph
+    let engine = VswEngine::open(dir.clone(), EngineConfig::default())?;
+    let property = Property::load(&dir.property_path())?;
+    let manifest = EpochManifest::load_or_bootstrap(&dir, &property)?;
+    let seed = mutation::incremental_seed(&dir, &manifest, 0, engine.epoch())?
+        .expect("insert-only history must be incremental-eligible");
+    let seed_len = seed.len();
+    let t_warm = Instant::now();
+    let warm =
+        engine.run_seeded(&app, Some(WarmStart { values: base.values.clone(), active: seed }))?;
+    let warm_wall = t_warm.elapsed();
+    let t_cold = Instant::now();
+    let cold = engine.run(&app)?;
+    let cold_wall = t_cold.elapsed();
+    assert_eq!(warm.values, cold.values, "incremental restart diverged from cold start");
+
+    // 3) compaction: merged rewrite, then bit-identical re-execution
+    let t_compact = Instant::now();
+    let creport = mutation::compact(&dir, 0.0)?;
+    let compact_wall = t_compact.elapsed();
+    let engine = VswEngine::open(dir.clone(), EngineConfig::default())?;
+    let after = engine.run(&app)?;
+    assert_eq!(after.values, cold.values, "compaction changed results");
+
+    let mut table = Table::new(
+        &format!("Fig12 dynamic graph ({})", dataset.name),
+        &["leg", "total", "detail"],
+    );
+    table.row(&[
+        "ingest".into(),
+        humansize::duration(apply_wall),
+        format!("{applied} mutations, {rate:.0}/s, {} epochs", rounds),
+    ]);
+    table.row(&[
+        "incremental".into(),
+        humansize::duration(warm_wall),
+        format!(
+            "{} iters from warm seed ({seed_len} vertices) vs {} cold in {}",
+            warm.stats.num_iters(),
+            cold.stats.num_iters(),
+            humansize::duration(cold_wall)
+        ),
+    ]);
+    table.row(&[
+        "compact".into(),
+        humansize::duration(compact_wall),
+        format!("{} shards merged", creport.compacted_shards.len()),
+    ]);
+    table.print();
+    report::append_markdown(&report::results_path(), &table)?;
+
+    benchjson::record_if_requested(&BenchRecord::from_stats(
+        "fig_ingest_apply",
+        apply_wall,
+        &RunStats::default(),
+    ))?;
+    benchjson::record_if_requested(&BenchRecord::from_stats(
+        "fig_ingest_incremental",
+        warm_wall,
+        &warm.stats,
+    ))?;
+    benchjson::record_if_requested(&BenchRecord::from_stats(
+        "fig_ingest_compact",
+        compact_wall,
+        &RunStats::default(),
+    ))?;
+    let _ = std::fs::remove_dir_all(&dir.root);
+    Ok(())
+}

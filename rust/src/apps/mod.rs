@@ -234,6 +234,19 @@ impl AnyProgram {
         }
     }
 
+    /// The program's reduction monoid — what incremental restart checks:
+    /// Min/Max programs (whose `apply` folds the old value) re-converge
+    /// from a prior fixpoint after insert-only mutations; Sum programs
+    /// must recompute cold.
+    pub fn reduce(&self) -> Reduce {
+        match self {
+            AnyProgram::F32(p) => p.reduce(),
+            AnyProgram::F64(p) => p.reduce(),
+            AnyProgram::U32(p) => p.reduce(),
+            AnyProgram::U64(p) => p.reduce(),
+        }
+    }
+
     /// Unwrap the classic float lane (legacy drivers); errors for typed
     /// programs.
     pub fn into_f32(self) -> anyhow::Result<Box<dyn VertexProgram<f32>>> {

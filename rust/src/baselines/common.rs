@@ -202,6 +202,53 @@ pub fn edges_from_bytes_w(buf: &[u8], weighted: bool) -> Result<(Vec<Edge>, Vec<
     Ok((edges, weights))
 }
 
+/// Hottest-first chunk schedule for the baselines' ordered read-ahead —
+/// the governor's priority-schedule idea (`engine::Governor::schedule`)
+/// extended to the PSW/ESG/DSW/VSP comparisons so adaptive-GraphMP
+/// ablations race engines that also order their I/O by activity.
+///
+/// Heat is the number of a chunk's vertices that changed in the *previous*
+/// iteration (the baselines have no Bloom filters; observed activity is
+/// their equivalent signal).  The order is deterministic — heat
+/// descending, chunk id ascending, decided only from completed iterations
+/// — and every reordered loop writes only its own chunk's vertex range
+/// while reading the previous iteration's values, so results are identical
+/// in any order, bit for bit.  Disabled, [`Self::order`] returns file
+/// order: the original schedules unchanged.
+pub struct HeatSchedule {
+    enabled: bool,
+    /// Heat driving this iteration's order (last iteration's counts).
+    cur: Vec<u64>,
+    /// Counts accumulating during the current iteration.
+    next: Vec<u64>,
+}
+
+impl HeatSchedule {
+    pub fn new(chunks: usize, enabled: bool) -> Self {
+        Self { enabled, cur: vec![0; chunks], next: vec![0; chunks] }
+    }
+
+    /// This iteration's chunk issue order (a permutation of `0..chunks`).
+    pub fn order(&self) -> Vec<usize> {
+        let mut o: Vec<usize> = (0..self.cur.len()).collect();
+        if self.enabled {
+            o.sort_by_key(|&i| (std::cmp::Reverse(self.cur[i]), i));
+        }
+        o
+    }
+
+    /// Record how many of `chunk`'s vertices changed this iteration.
+    pub fn record(&mut self, chunk: usize, changed: u64) {
+        self.next[chunk] += changed;
+    }
+
+    /// End of iteration: recorded counts drive the next order.
+    pub fn advance(&mut self) {
+        std::mem::swap(&mut self.cur, &mut self.next);
+        self.next.fill(0);
+    }
+}
+
 /// File read-ahead depth the baseline engines stream their per-iteration
 /// files with.  The baselines model single-disk systems, so a shallow
 /// ordered read-ahead (overlap the *next* file with current compute) keeps
@@ -240,6 +287,27 @@ mod tests {
         assert_eq!(chunk_of(&b, 24), 0);
         assert_eq!(chunk_of(&b, 25), 1);
         assert_eq!(chunk_of(&b, 99), 3);
+    }
+
+    #[test]
+    fn heat_schedule_orders_hottest_first_deterministically() {
+        let mut s = HeatSchedule::new(4, true);
+        assert_eq!(s.order(), vec![0, 1, 2, 3], "no history = file order");
+        s.record(2, 10);
+        s.record(0, 3);
+        s.record(3, 10);
+        assert_eq!(s.order(), vec![0, 1, 2, 3], "counts apply only after advance");
+        s.advance();
+        // heat desc, id asc on ties
+        assert_eq!(s.order(), vec![2, 3, 0, 1]);
+        assert_eq!(s.order(), vec![2, 3, 0, 1], "same inputs, same order");
+        s.advance();
+        assert_eq!(s.order(), vec![0, 1, 2, 3], "heat resets each iteration");
+        // disabled: always file order
+        let mut s = HeatSchedule::new(3, false);
+        s.record(2, 99);
+        s.advance();
+        assert_eq!(s.order(), vec![0, 1, 2]);
     }
 
     #[test]

@@ -43,6 +43,7 @@ pub struct DswEngine {
     weighted: bool,
     /// Enable source-chunk selective scheduling.
     pub selective: bool,
+    adaptive_order: bool,
 }
 
 impl DswEngine {
@@ -55,7 +56,16 @@ impl DswEngine {
             out_deg: Vec::new(),
             weighted: false,
             selective: true,
+            adaptive_order: false,
         }
+    }
+
+    /// Process destination columns hottest-first (previous iteration's
+    /// changed counts) instead of in grid order.  Column order never
+    /// changes results: each column folds its block rows in the same
+    /// `0..q` order and writes only its own double-buffered chunk.
+    pub fn set_adaptive_order(&mut self, on: bool) {
+        self.adaptive_order = on;
     }
 
     fn block_path(&self, i: usize, j: usize) -> PathBuf {
@@ -116,6 +126,7 @@ impl DswEngine {
         let mut iter_walls = Vec::new();
         let mut iter_io = Vec::new();
         let mut edges_processed = 0u64;
+        let mut sched = common::HeatSchedule::new(q, self.adaptive_order);
         // reusable value-decode buffers (the shared fetch path's scratch):
         // every (column, block) pair re-reads value files each iteration,
         // so decoding into fresh vectors dominated steady-state allocation
@@ -133,8 +144,12 @@ impl DswEngine {
             // `chunk_active` (chunk files only change at the end-of-iteration
             // rename), so one ordered read-ahead covers every column — the
             // skipped rows are never read, keeping Table II's byte counts
+            // column order: hottest destination first under adaptive
+            // order, grid order otherwise (the inner block-row order is
+            // fixed, so the per-column fold is identical either way)
+            let order = sched.order();
             let mut schedule = Vec::new();
-            for j in 0..q {
+            for &j in &order {
                 schedule.push(self.chunk_path(j));
                 for i in 0..q {
                     if selective && !chunk_active.get(i) {
@@ -146,7 +161,7 @@ impl DswEngine {
             }
             let mut stream = ReadAhead::new(schedule, common::READ_AHEAD_DEPTH);
 
-            for j in 0..q {
+            for &j in &order {
                 let (lo_j, hi_j) = (self.bounds[j], self.bounds[j + 1]);
                 common::values_from_bytes_into(
                     &common::next_buf(&mut stream, "dsw column")?,
@@ -185,6 +200,7 @@ impl DswEngine {
                 }
                 chunk_buf.clear();
                 chunk_buf.extend_from_slice(old);
+                let mut col_changed = 0u64;
                 for k in 0..acc.len() {
                     // PageRank-style Sum programs recompute from the full
                     // in-edge set; with skipped rows the sum would be partial,
@@ -192,10 +208,12 @@ impl DswEngine {
                     let nv = app.apply(acc[k], old[k], &ctx);
                     if V::changed(old[k], nv, 0.0) {
                         changed = true;
+                        col_changed += 1;
                         next_active.set(j);
                     }
                     chunk_buf[k] = nv;
                 }
+                sched.record(j, col_changed);
                 // double-buffered chunk write (Jacobi semantics): later
                 // columns must still read this iteration's *input* values
                 common::write_values(&self.chunk_next_path(j), &chunk_buf)?; // C·V/√P
@@ -205,6 +223,7 @@ impl DswEngine {
             }
 
             chunk_active = next_active;
+            sched.advance();
             iter_walls.push(t_iter.elapsed());
             iter_io.push(io::snapshot().since(&io_before));
             if !changed {

@@ -35,6 +35,7 @@ pub struct EsgEngine {
     num_edges: u64,
     out_deg: Vec<u32>,
     weighted: bool,
+    adaptive_order: bool,
 }
 
 impl EsgEngine {
@@ -46,7 +47,17 @@ impl EsgEngine {
             num_edges: 0,
             out_deg: Vec::new(),
             weighted: false,
+            adaptive_order: false,
         }
+    }
+
+    /// Gather destination partitions hottest-first (previous iteration's
+    /// changed counts) instead of in file order.  Only the gather phase
+    /// reorders: the scatter phase's partition order fixes the
+    /// concatenation order of each update file, which *is* the float-Sum
+    /// fold order, so it stays file-ordered to keep results bit-identical.
+    pub fn set_adaptive_order(&mut self, on: bool) {
+        self.adaptive_order = on;
     }
 
     fn edges_path(&self, i: usize) -> PathBuf {
@@ -94,6 +105,7 @@ impl EsgEngine {
         let mut iter_walls = Vec::new();
         let mut iter_io = Vec::new();
         let mut edges_processed = 0u64;
+        let mut sched = common::HeatSchedule::new(p, self.adaptive_order);
 
         for _iter in 0..max_iters {
             let t_iter = Instant::now();
@@ -133,14 +145,18 @@ impl EsgEngine {
                 io::write_file(&self.updates_path(i), buf)?; // C·E write
             }
 
-            // --- phase 2: gather ------------------------------------------
+            // --- phase 2: gather (hottest destination first under
+            // adaptive order; each partition folds only its own update
+            // file and writes only its own chunk, so order is free) ------
+            let order = sched.order();
             let mut gather_stream = ReadAhead::new(
-                (0..p)
-                    .flat_map(|i| [self.chunk_path(i), self.updates_path(i)])
+                order
+                    .iter()
+                    .flat_map(|&i| [self.chunk_path(i), self.updates_path(i)])
                     .collect(),
                 common::READ_AHEAD_DEPTH,
             );
-            for i in 0..p {
+            for &i in &order {
                 let (lo, hi) = (self.bounds[i], self.bounds[i + 1]);
                 let mut chunk: Vec<V> =
                     common::values_from_bytes(&common::next_buf(&mut gather_stream, "esg chunk")?)?;
@@ -151,17 +167,21 @@ impl EsgEngine {
                     let k = (d - lo) as usize;
                     acc[k] = reduce.combine(acc[k], contrib);
                 }
+                let mut part_changed = 0u64;
                 for k in 0..acc.len() {
                     let old = chunk[k];
                     let nv = app.apply(acc[k], old, &ctx);
                     if V::changed(old, nv, 0.0) {
                         changed = true;
+                        part_changed += 1;
                     }
                     chunk[k] = nv;
                 }
+                sched.record(i, part_changed);
                 common::write_values(&self.chunk_path(i), &chunk)?; // C·V write
             }
 
+            sched.advance();
             iter_walls.push(t_iter.elapsed());
             iter_io.push(io::snapshot().since(&io_before));
             if !changed {

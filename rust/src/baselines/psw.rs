@@ -40,11 +40,26 @@ pub struct PswEngine {
     num_vertices: usize,
     num_edges: u64,
     out_deg: Vec<u32>,
+    adaptive_order: bool,
 }
 
 impl PswEngine {
     pub fn new(dir: PathBuf) -> Self {
-        Self { dir, intervals: Vec::new(), num_vertices: 0, num_edges: 0, out_deg: Vec::new() }
+        Self {
+            dir,
+            intervals: Vec::new(),
+            num_vertices: 0,
+            num_edges: 0,
+            out_deg: Vec::new(),
+            adaptive_order: false,
+        }
+    }
+
+    /// Issue shards hottest-first (previous iteration's changed-vertex
+    /// counts) instead of in file order — same files, same bytes, same
+    /// per-shard fold order, so results are identical either way.
+    pub fn set_adaptive_order(&mut self, on: bool) {
+        self.adaptive_order = on;
     }
 
     fn shard_path(&self, i: usize) -> PathBuf {
@@ -95,6 +110,7 @@ impl PswEngine {
         let mut iter_walls = Vec::new();
         let mut iter_io = Vec::new();
         let mut edges_processed = 0u64;
+        let mut sched = common::HeatSchedule::new(p, self.adaptive_order);
 
         for _iter in 0..max_iters {
             let t_iter = Instant::now();
@@ -105,16 +121,21 @@ impl PswEngine {
             let mut new_values = values.clone();
             let mut changed = false;
 
-            // shard + edge-value files stream through an ordered read-ahead:
-            // same files, same order, same byte accounting — the next
-            // shard's disk time just overlaps the current shard's update
+            // shard + edge-value files stream through an ordered read-ahead
+            // (hottest-first under adaptive order): same files, same byte
+            // accounting — the next shard's disk time just overlaps the
+            // current shard's update, and each shard writes only its own
+            // interval from the previous values, so order never changes
+            // results
+            let order = sched.order();
             let mut stream = ReadAhead::new(
-                (0..p)
-                    .flat_map(|i| [self.shard_path(i), self.evals_path(i)])
+                order
+                    .iter()
+                    .flat_map(|&i| [self.shard_path(i), self.evals_path(i)])
                     .collect(),
                 common::READ_AHEAD_DEPTH,
             );
-            for _i in 0..p {
+            for &i in &order {
                 // D·E/P real
                 let csr = shardfile::from_bytes(&common::next_buf(&mut stream, "psw shard")?)?;
                 // C·E/P real
@@ -125,6 +146,7 @@ impl PswEngine {
                 // the f32 case)
                 io::account_virtual_read((csr.num_edges() * (V::BYTES + 8)) as u64);
                 let (lo, _hi) = (csr.lo, csr.hi);
+                let mut shard_changed = 0u64;
                 for (row, (v, _)) in csr.iter_rows().enumerate() {
                     let s = csr.row_ptr[row] as usize;
                     let e = csr.row_ptr[row + 1] as usize;
@@ -143,9 +165,11 @@ impl PswEngine {
                     let nv = app.apply(acc, old, &ctx);
                     if V::changed(old, nv, 0.0) {
                         changed = true;
+                        shard_changed += 1;
                     }
                     new_values[(lo + row as u32) as usize] = nv;
                 }
+                sched.record(i, shard_changed);
                 edges_processed += csr.num_edges() as u64;
             }
 
@@ -156,10 +180,10 @@ impl PswEngine {
             // rewrites through its sliding windows) is accounted virtually.
             common::write_values(&self.values_path(), &new_values)?;
             let mut stream = ReadAhead::new(
-                (0..p).map(|i| self.shard_path(i)).collect(),
+                order.iter().map(|&i| self.shard_path(i)).collect(),
                 common::READ_AHEAD_DEPTH,
             );
-            for i in 0..p {
+            for &i in &order {
                 let csr =
                     shardfile::from_bytes(&common::next_buf(&mut stream, "psw writeback")?)?;
                 let evals: Vec<V> =
@@ -170,6 +194,7 @@ impl PswEngine {
                 io::account_virtual_write((csr.num_edges() * (V::BYTES + 16)) as u64);
             }
 
+            sched.advance();
             iter_walls.push(t_iter.elapsed());
             iter_io.push(io::snapshot().since(&io_before));
             if !changed {

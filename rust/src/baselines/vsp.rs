@@ -39,6 +39,7 @@ pub struct VspEngine {
     num_vertices: usize,
     num_edges: u64,
     out_deg: Vec<u32>,
+    adaptive_order: bool,
 }
 
 impl VspEngine {
@@ -50,7 +51,15 @@ impl VspEngine {
             num_vertices: 0,
             num_edges: 0,
             out_deg: Vec::new(),
+            adaptive_order: false,
         }
+    }
+
+    /// Issue g-shards hottest-first (previous iteration's changed-vertex
+    /// counts) instead of in file order; each shard writes only its own
+    /// interval from the previous view, so results are identical.
+    pub fn set_adaptive_order(&mut self, on: bool) {
+        self.adaptive_order = on;
     }
 
     fn gshard_path(&self, i: usize) -> PathBuf {
@@ -98,6 +107,7 @@ impl VspEngine {
         let mut iter_walls = Vec::new();
         let mut iter_io = Vec::new();
         let mut edges_processed = 0u64;
+        let mut sched = common::HeatSchedule::new(p, self.adaptive_order);
 
         // VENUS's materialized view: the current value array, from which
         // v-shard reads are served (accounted virtually below)
@@ -110,17 +120,20 @@ impl VspEngine {
             let mut new_view = view.clone();
 
             // g-shard structure streams ahead of the per-shard compute
+            // (hottest-first under adaptive order; same files, same bytes)
+            let order = sched.order();
             let mut stream = ReadAhead::new(
-                (0..p).map(|i| self.gshard_path(i)).collect(),
+                order.iter().map(|&i| self.gshard_path(i)).collect(),
                 common::READ_AHEAD_DEPTH,
             );
-            for i in 0..p {
+            for &i in &order {
                 // D·E real
                 let csr = shardfile::from_bytes(&common::next_buf(&mut stream, "vsp gshard")?)?;
                 // v-shard value gather: C·|v-shard| virtual read (C = the
                 // lane width; f32 reproduces the paper's C=4)
                 io::account_virtual_read((V::BYTES * self.vshard_sizes[i]) as u64);
                 let reduce = app.reduce();
+                let mut shard_changed = 0u64;
                 for (row, (v, _)) in csr.iter_rows().enumerate() {
                     let s = csr.row_ptr[row] as usize;
                     let e = csr.row_ptr[row + 1] as usize;
@@ -136,9 +149,11 @@ impl VspEngine {
                     let nv = app.apply(acc, old, &ctx);
                     if V::changed(old, nv, 0.0) {
                         changed = true;
+                        shard_changed += 1;
                     }
                     new_view[v as usize] = nv;
                 }
+                sched.record(i, shard_changed);
                 edges_processed += csr.num_edges() as u64;
             }
 
@@ -146,6 +161,7 @@ impl VspEngine {
             common::write_values(&self.values_path(), &new_view)?;
             view = new_view;
 
+            sched.advance();
             iter_walls.push(t_iter.elapsed());
             iter_io.push(io::snapshot().since(&io_before));
             if !changed {

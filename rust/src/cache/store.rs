@@ -23,6 +23,9 @@ pub struct CacheStats {
     pub insertions: AtomicU64,
     pub evictions: AtomicU64,
     pub rejected: AtomicU64,
+    /// Slots dropped because their shard's file epoch moved on (a
+    /// compaction rewrote the base shard under a live cache).
+    pub invalidated: AtomicU64,
     /// Total decompression time, ns (the paper's mode-selection cost).
     pub decompress_ns: AtomicU64,
     pub compress_ns: AtomicU64,
@@ -81,6 +84,10 @@ struct Slot {
     data: Option<CacheVal>,
     /// CLOCK reference bit.
     referenced: AtomicBool,
+    /// Epoch key the payload was admitted under (see
+    /// [`ShardCache::set_shard_epoch`]); a probe whose expected epoch
+    /// disagrees drops the slot instead of serving stale bytes.
+    epoch: u64,
     /// Per-shard probe history (under the slot lock) — the governor's
     /// "how disk-bound has this shard been" signal.
     hits: u64,
@@ -106,6 +113,8 @@ pub struct ShardCache {
     /// Per-shard eviction priorities (higher = keep longer), installed by
     /// the adaptive governor each iteration; empty = CLOCK order.
     priorities: Mutex<Vec<u64>>,
+    /// Per-shard expected file epoch (see [`Self::set_shard_epoch`]).
+    expected_epochs: Vec<AtomicU64>,
     pub stats: CacheStats,
 }
 
@@ -120,6 +129,7 @@ impl ShardCache {
                     Mutex::new(Slot {
                         data: None,
                         referenced: AtomicBool::new(false),
+                        epoch: 0,
                         hits: 0,
                         misses: 0,
                     })
@@ -131,8 +141,19 @@ impl ShardCache {
             clock_hand: AtomicUsize::new(0),
             evict: false,
             priorities: Mutex::new(Vec::new()),
+            expected_epochs: (0..num_shards).map(|_| AtomicU64::new(0)).collect(),
             stats: CacheStats::default(),
         }
+    }
+
+    /// Set the file epoch shard `id`'s payload is expected to come from.
+    /// A resident slot admitted under a different epoch is dropped lazily
+    /// on its next probe (and no longer reads as resident), so a
+    /// compaction that rewrites base shard files invalidates exactly the
+    /// touched slots — an ingest, which leaves base bytes alone, costs the
+    /// cache nothing.
+    pub fn set_shard_epoch(&self, id: usize, epoch: u64) {
+        self.expected_epochs[id].store(epoch, Ordering::Relaxed);
     }
 
     /// Switch to CLOCK replacement (second-chance LRU approximation).
@@ -164,6 +185,16 @@ impl ShardCache {
     /// cheap `Arc` clone and the hit/miss accounting is updated.
     fn probe(&self, id: usize) -> Option<ShardView> {
         let mut slot = self.slots[id].lock().unwrap();
+        // epoch-keyed invalidation: a payload admitted under a superseded
+        // file epoch must not be served — drop it and fall through to the
+        // miss path so the caller re-reads the rewritten shard
+        if slot.data.is_some() && slot.epoch != self.expected_epochs[id].load(Ordering::Relaxed)
+        {
+            if let Some(old) = slot.data.take() {
+                self.used.fetch_sub(old.size(), Ordering::Relaxed);
+            }
+            self.stats.invalidated.fetch_add(1, Ordering::Relaxed);
+        }
         let found = match &slot.data {
             Some(CacheVal::Decoded(csr)) => Some(ShardView::Decoded(csr.clone())),
             Some(CacheVal::Bytes(b)) => {
@@ -211,7 +242,8 @@ impl ShardCache {
     /// can consult residency when building its schedule without distorting
     /// the statistics its own scores are derived from.
     pub fn is_resident(&self, id: usize) -> bool {
-        self.slots[id].lock().unwrap().data.is_some()
+        let slot = self.slots[id].lock().unwrap();
+        slot.data.is_some() && slot.epoch == self.expected_epochs[id].load(Ordering::Relaxed)
     }
 
     /// Lifetime (hits, misses) for shard `id` — the governor's per-shard
@@ -272,6 +304,7 @@ impl ShardCache {
         }
         self.used.fetch_add(size, Ordering::Relaxed);
         slot.data = Some(val);
+        slot.epoch = self.expected_epochs[id].load(Ordering::Relaxed);
         slot.referenced.store(true, Ordering::Relaxed);
         self.stats.insertions.fetch_add(1, Ordering::Relaxed);
         Ok(())
@@ -619,6 +652,48 @@ mod tests {
         cache.get(1).unwrap();
         assert_eq!(cache.shard_history(0), (1, 0));
         assert_eq!(cache.shard_history(1), (0, 2));
+    }
+
+    #[test]
+    fn epoch_bump_invalidates_stale_slots_lazily() {
+        let cache = ShardCache::new(2, Codec::SnapLite, usize::MAX);
+        let (_, payload) = shard(0, 300);
+        cache.insert(0, &payload).unwrap();
+        cache.insert(1, &payload).unwrap();
+        assert!(cache.is_resident(0));
+        let used_full = cache.used_bytes();
+        // shard 0's file was rewritten (compaction): bump its epoch
+        cache.set_shard_epoch(0, 1);
+        assert!(!cache.is_resident(0), "stale slot must not read as resident");
+        assert!(cache.is_resident(1), "untouched shard keeps its slot");
+        // the stale probe drops the slot and reports a miss
+        assert!(cache.get(0).unwrap().is_none());
+        assert_eq!(cache.stats.invalidated.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.stats.misses.load(Ordering::Relaxed), 1);
+        assert!(cache.used_bytes() < used_full, "invalidation must return budget");
+        // re-admission records the new epoch and hits again
+        cache.insert(0, &payload).unwrap();
+        assert!(cache.is_resident(0));
+        assert!(cache.get(0).unwrap().is_some());
+        // fetch paths observe the invalidation too
+        let cache = ShardCache::new(1, Codec::None, usize::MAX);
+        let reads = AtomicU64::new(0);
+        let fetch = |cache: &ShardCache| {
+            cache
+                .fetch_decoded(0, true, || {
+                    reads.fetch_add(1, Ordering::Relaxed);
+                    Ok(payload.clone())
+                })
+                .unwrap()
+        };
+        fetch(&cache);
+        fetch(&cache);
+        assert_eq!(reads.load(Ordering::Relaxed), 1);
+        cache.set_shard_epoch(0, 7);
+        fetch(&cache);
+        assert_eq!(reads.load(Ordering::Relaxed), 2, "stale slot must force a re-read");
+        fetch(&cache);
+        assert_eq!(reads.load(Ordering::Relaxed), 2, "re-admitted slot hits under new epoch");
     }
 
     #[test]

@@ -252,6 +252,81 @@ impl EdgeSource for DvRows<'_> {
     }
 }
 
+/// Merge a base-shard row stream with the shard's resident delta state
+/// ([`crate::storage::delta::DeltaShard`]) inside the fold: each row
+/// yields the base edges (minus tombstoned sources) in base order, then
+/// the inserted edges in insertion order — exactly the row layout a
+/// from-scratch preprocess of the final edge list produces, which is what
+/// makes delta-merged execution bit-identical to a full rebuild on every
+/// value lane.  Wraps any inner source, so the decoded, in-place-view and
+/// delta-varint paths all mutate through the same few lines.
+pub struct DeltaRows<'a, S: EdgeSource> {
+    inner: S,
+    delta: &'a crate::storage::delta::DeltaShard,
+    /// Shard-local index of the next row to stream.
+    row: usize,
+    end: usize,
+    start_vertex: VertexId,
+    rows: usize,
+}
+
+impl<'a, S: EdgeSource> DeltaRows<'a, S> {
+    /// `start_row` is the shard-local row the inner source begins at (the
+    /// chunk offset); `inner` must cover exactly `rows` rows from there.
+    pub fn new(
+        inner: S,
+        delta: &'a crate::storage::delta::DeltaShard,
+        start_row: usize,
+        rows: usize,
+    ) -> Self {
+        debug_assert_eq!(inner.num_rows(), rows);
+        debug_assert_eq!(inner.first_vertex(), delta.lo + start_row as VertexId);
+        Self {
+            inner,
+            delta,
+            row: start_row,
+            end: start_row + rows,
+            start_vertex: delta.lo + start_row as VertexId,
+            rows,
+        }
+    }
+}
+
+impl<S: EdgeSource> EdgeSource for DeltaRows<'_, S> {
+    fn first_vertex(&self) -> VertexId {
+        self.start_vertex
+    }
+
+    fn num_rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    fn next_row<F: FnMut(VertexId, Weight)>(&mut self, mut f: F) -> Result<()> {
+        anyhow::ensure!(self.row < self.end, "delta row source exhausted");
+        let r = self.row;
+        self.row += 1;
+        let tombs = self.delta.row_tombs(r);
+        if tombs.is_empty() {
+            self.inner.next_row(&mut f)?;
+        } else {
+            self.inner.next_row(|u, w| {
+                if tombs.binary_search(&u).is_err() {
+                    f(u, w);
+                }
+            })?;
+        }
+        let (s, e) = (
+            self.delta.ins_row_ptr[r] as usize,
+            self.delta.ins_row_ptr[r + 1] as usize,
+        );
+        for k in s..e {
+            f(self.delta.ins_col[k], self.delta.ins_weight(k));
+        }
+        Ok(())
+    }
+}
+
 /// Stream-fold any [`EdgeSource`] through the program, writing one value
 /// per row into `out` (`out.len() == source.num_rows()`).  This is the one
 /// native inner loop: the decoded path runs it over [`CsrRows`], so the
@@ -741,6 +816,125 @@ mod tests {
                 &out_deg,
                 &ctx,
             );
+        }
+    }
+
+    #[test]
+    fn delta_rows_equal_merged_csr_on_every_source_and_chunking() {
+        use crate::cache::deltavarint;
+        use crate::graph::generator;
+        use crate::storage::delta::DeltaShard;
+        use crate::storage::shardfile;
+        // base shard [0, 32) plus a delta with tombstones and inserts
+        let edges: Vec<(u32, u32)> = generator::erdos_renyi(64, 400, 17)
+            .into_iter()
+            .filter(|&(_, d)| d < 32)
+            .collect();
+        let weights = generator::synth_weights(&edges, 3);
+        for weighted in [false, true] {
+            let base = if weighted {
+                Csr::from_edges_weighted(0, 32, &edges, &weights)
+            } else {
+                Csr::from_edges(0, 32, &edges)
+            };
+            // tombstone a few real base edges, insert a few new ones
+            let mut tomb_rows: Vec<Vec<u32>> = vec![Vec::new(); 32];
+            for r in (0..32).step_by(5) {
+                if let Some(&u) = base.in_neighbors(r as u32).first() {
+                    tomb_rows[r].push(u);
+                }
+            }
+            let mut ins_rows: Vec<Vec<(u32, f32)>> = vec![Vec::new(); 32];
+            for r in (0..32).step_by(3) {
+                ins_rows[r].push(((r as u32 + 40) % 64, 0.5));
+                ins_rows[r].push(((r as u32 + 41) % 64, 2.0));
+            }
+            let dropped = tomb_rows
+                .iter()
+                .enumerate()
+                .map(|(r, t)| {
+                    t.iter()
+                        .map(|&u| {
+                            base.in_neighbors(r as u32).iter().filter(|&&x| x == u).count()
+                        })
+                        .sum::<usize>()
+                })
+                .sum::<usize>() as u64;
+            let delta = DeltaShard::from_rows(0, 32, &ins_rows, &tomb_rows, dropped, true);
+            let merged = delta.merge(&base);
+            let ctx = ProgramContext { num_vertices: 64 };
+            let src: Vec<f32> = (0..64).map(|v| (v as f32) * 0.375 + 0.25).collect();
+            let out_deg: Vec<u32> = (0..64).map(|v| (v * 7 % 5 + 1) as u32).collect();
+            let app = PageRank::default();
+            let want = native_shard(&app, &merged, &src, &out_deg, &ctx);
+
+            let payload = shardfile::to_bytes(&base);
+            let layout = shardfile::parse_layout(&payload).unwrap();
+            let n = 32usize;
+            for chunk_rows in [n, 1, 7] {
+                // decoded base rows + delta
+                let mut got = vec![0.0f32; n];
+                for start in (0..n).step_by(chunk_rows) {
+                    let end = (start + chunk_rows).min(n);
+                    let mut rows = DeltaRows::new(
+                        CsrRows::new(&base, start..end),
+                        &delta,
+                        start,
+                        end - start,
+                    );
+                    process_rows(&app, &mut rows, &src, &out_deg, &ctx, &mut got[start..end])
+                        .unwrap();
+                }
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&got), bits(&want), "CsrRows+delta chunk={chunk_rows}");
+
+                // in-place view + delta
+                let mut got = vec![0.0f32; n];
+                for start in (0..n).step_by(chunk_rows) {
+                    let end = (start + chunk_rows).min(n);
+                    let mut rows = DeltaRows::new(
+                        ViewRows::new(layout.view(&payload), start..end),
+                        &delta,
+                        start,
+                        end - start,
+                    );
+                    process_rows(&app, &mut rows, &src, &out_deg, &ctx, &mut got[start..end])
+                        .unwrap();
+                }
+                assert_eq!(bits(&got), bits(&want), "ViewRows+delta chunk={chunk_rows}");
+            }
+
+            // delta-varint normalizes base row order; its oracle is the
+            // merged dv-decoded base (same normalization)
+            let dv = deltavarint::encode(&base);
+            let dv_base = deltavarint::decode(&dv).unwrap();
+            let dv_want = native_shard(&app, &delta.merge(&dv_base), &src, &out_deg, &ctx);
+            let plan = deltavarint::plan(&dv, 7).unwrap();
+            let mut got = vec![0.0f32; n];
+            for chunk in &plan.chunks {
+                let mut rows = DeltaRows::new(
+                    DvRows::new(
+                        plan.cursor(&dv, chunk),
+                        plan.lo,
+                        chunk.start_row,
+                        chunk.end_row - chunk.start_row,
+                    ),
+                    &delta,
+                    chunk.start_row,
+                    chunk.end_row - chunk.start_row,
+                );
+                process_rows(
+                    &app,
+                    &mut rows,
+                    &src,
+                    &out_deg,
+                    &ctx,
+                    &mut got[chunk.start_row..chunk.end_row],
+                )
+                .unwrap();
+            }
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&got), bits(&dv_want), "DvRows+delta");
         }
     }
 

@@ -6,8 +6,8 @@ mod shared;
 mod stats;
 mod vsw;
 
-pub use backend::{process_rows, Backend, CsrRows, DvRows, EdgeSource, ViewRows};
+pub use backend::{process_rows, Backend, CsrRows, DeltaRows, DvRows, EdgeSource, ViewRows};
 pub use governor::{Governor, GovernorConfig};
 pub use shared::SharedSlice;
 pub use stats::{AnyRunResult, IterStats, RunResult, RunStats};
-pub use vsw::{EngineConfig, VswEngine};
+pub use vsw::{EngineConfig, VswEngine, WarmStart};

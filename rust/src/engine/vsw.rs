@@ -76,6 +76,7 @@
 
 use std::cell::Cell;
 use std::collections::VecDeque;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
@@ -86,13 +87,17 @@ use crate::apps::{AnyProgram, ProgramContext, VertexProgram, VertexValue};
 use crate::bloom::{digest, BloomFilter, Digest};
 use crate::cache::deltavarint::DvPlan;
 use crate::cache::{deltavarint, Codec, ShardCache, ShardView};
-use crate::engine::backend::{process_rows, Backend, CsrRows, DvRows, ViewRows};
+use crate::engine::backend::{
+    process_rows, Backend, CsrRows, DeltaRows, DvRows, EdgeSource, ViewRows,
+};
 use crate::engine::governor::{Governor, GovernorConfig};
 use crate::engine::shared::SharedSlice;
 use crate::engine::stats::{AnyRunResult, IterStats, RunResult, RunStats};
 use crate::graph::csr::Csr;
-use crate::graph::VertexId;
-use crate::sharding::preprocess::load_bloom;
+use crate::graph::{AnyValues, VertexId};
+use crate::runtime::EpochManifest;
+use crate::sharding::preprocess::load_bloom_file;
+use crate::storage::delta::DeltaShard;
 use crate::storage::prefetch::{ReadAhead, Semaphore};
 use crate::storage::property::Property;
 use crate::storage::shardfile::{self, PayloadLayout};
@@ -142,6 +147,10 @@ pub struct EngineConfig {
     /// (`--chunk-rows`); shards wider than this span several cores.
     /// `0` = never split.  Any value produces identical results.
     pub chunk_rows: usize,
+    /// Snapshot epoch to open on a mutated dataset (`--epoch`); `None` =
+    /// the manifest's current epoch.  Ignored (treated as the base) on a
+    /// dataset without an epoch manifest.
+    pub epoch: Option<u64>,
 }
 
 impl Default for EngineConfig {
@@ -160,6 +169,7 @@ impl Default for EngineConfig {
             prefetch_max: 8,
             stream_gather: true,
             chunk_rows: 8192,
+            epoch: None,
         }
     }
 }
@@ -323,6 +333,102 @@ struct WorkerScratch {
     runs: Vec<(usize, usize, usize, usize)>,
 }
 
+/// Per-epoch file state resolved from the snapshot manifest: which base
+/// shard / Bloom / delta files a reader at this epoch sees.
+struct EpochFiles {
+    id: u64,
+    num_edges: u64,
+    vertex_info: VertexInfo,
+    blooms: Vec<BloomFilter>,
+    shard_paths: Vec<PathBuf>,
+    /// Epoch at which each base shard file was last rewritten — the
+    /// cache's slot-invalidation key.
+    shard_epochs: Vec<u64>,
+    deltas: Vec<Option<Arc<DeltaShard>>>,
+}
+
+fn load_epoch_files(
+    dir: &DatasetDir,
+    property: &Property,
+    requested: Option<u64>,
+) -> Result<EpochFiles> {
+    let manifest = EpochManifest::load_or_bootstrap(dir, property)?;
+    let id = requested.unwrap_or(manifest.current);
+    let entry = manifest.epoch(id)?;
+    let p = property.num_shards();
+    anyhow::ensure!(entry.shards.len() == p, "epoch {id} shard table disagrees with property");
+    let vertex_info = VertexInfo::load(&dir.root.join(&entry.vertexinfo))
+        .with_context(|| format!("vertexinfo (epoch {id})"))?;
+    let mut blooms = Vec::with_capacity(p);
+    let mut shard_paths = Vec::with_capacity(p);
+    let mut shard_epochs = Vec::with_capacity(p);
+    let mut deltas = Vec::with_capacity(p);
+    for (i, s) in entry.shards.iter().enumerate() {
+        blooms.push(
+            load_bloom_file(&dir.root.join(&s.bloom)).with_context(|| format!("bloom {i}"))?,
+        );
+        shard_paths.push(dir.root.join(&s.shard));
+        shard_epochs.push(s.shard_epoch);
+        deltas.push(match &s.delta {
+            Some(f) => {
+                let d = DeltaShard::load(&dir.root.join(f))
+                    .with_context(|| format!("delta shard {i}"))?;
+                let (lo, hi) = property.interval(i);
+                anyhow::ensure!((d.lo, d.hi) == (lo, hi), "delta shard {i} interval");
+                Some(Arc::new(d))
+            }
+            None => None,
+        });
+    }
+    Ok(EpochFiles {
+        id,
+        num_edges: entry.num_edges,
+        vertex_info,
+        blooms,
+        shard_paths,
+        shard_epochs,
+        deltas,
+    })
+}
+
+/// Warm-start state for an incremental re-run on a mutated dataset: the
+/// previous epoch's fixpoint values plus the vertices whose in-edges the
+/// mutations touched (see [`crate::graph::mutation::incremental_seed`]).
+pub struct WarmStart<V> {
+    pub values: Vec<V>,
+    pub active: Vec<VertexId>,
+}
+
+/// Fold a chunk's rows, merging the shard's resident delta (if any) into
+/// the stream.  Free function because the per-payload arms instantiate it
+/// with different `EdgeSource` types.
+#[allow(clippy::too_many_arguments)]
+fn fold_chunk<V: VertexValue, P: VertexProgram<V> + ?Sized, S: EdgeSource>(
+    app: &P,
+    rows: S,
+    delta: Option<&DeltaShard>,
+    start_row: usize,
+    src: &[V],
+    out_deg: &[u32],
+    ctx: &ProgramContext,
+    out: &mut [V],
+) -> Result<()> {
+    match delta {
+        Some(d) => process_rows(
+            app,
+            &mut DeltaRows::new(rows, d, start_row, out.len()),
+            src,
+            out_deg,
+            ctx,
+            out,
+        ),
+        None => {
+            let mut rows = rows;
+            process_rows(app, &mut rows, src, out_deg, ctx, out)
+        }
+    }
+}
+
 /// An opened dataset ready to run programs (GraphMP's steady state: all
 /// vertices + metadata in memory, edges on disk/cache).
 pub struct VswEngine {
@@ -340,25 +446,33 @@ pub struct VswEngine {
     governor: Governor,
     cfg: EngineConfig,
     pub load_wall: std::time::Duration,
+    /// Snapshot epoch this engine reads (0 on a never-mutated dataset).
+    epoch: u64,
+    /// Per-shard base file paths at this epoch (compaction renames them).
+    shard_paths: Vec<PathBuf>,
+    /// Per-shard resident delta state (`None` = shard has no mutations).
+    deltas: Vec<Option<Arc<DeltaShard>>>,
 }
 
 impl VswEngine {
     /// Open a preprocessed dataset: load property, vertex info and Bloom
     /// filters (the paper's "data loading" phase; shards stay on disk but
-    /// are opportunistically pre-cached when a budget exists).
+    /// are opportunistically pre-cached when a budget exists).  On a
+    /// mutated dataset the epoch manifest picks which shard / bloom /
+    /// delta files this reader sees ([`EngineConfig::epoch`]).
     pub fn open(dir: DatasetDir, cfg: EngineConfig) -> Result<Self> {
         let t0 = Instant::now();
-        let property = Property::load(&dir.property_path()).context("property")?;
-        let vertex_info = VertexInfo::load(&dir.vertexinfo_path()).context("vertexinfo")?;
+        let mut property = Property::load(&dir.property_path()).context("property")?;
+        let files = load_epoch_files(&dir, &property, cfg.epoch)?;
+        let vertex_info = files.vertex_info;
         anyhow::ensure!(
             vertex_info.num_vertices() as u64 == property.info.num_vertices,
             "vertexinfo/property disagree"
         );
+        // surface the epoch's live edge count through the stats/CLI paths
+        property.info.num_edges = files.num_edges;
         let p = property.num_shards();
-        let mut blooms = Vec::with_capacity(p);
-        for i in 0..p {
-            blooms.push(load_bloom(&dir, i).with_context(|| format!("bloom {i}"))?);
-        }
+        let blooms = files.blooms;
         // default admission is no-evict (optimal under the cyclic sweep);
         // the adaptive governor installs per-shard priorities every
         // iteration, which makes replacement smarter than the cyclic
@@ -368,14 +482,20 @@ impl VswEngine {
         if cfg.adaptive {
             cache = cache.with_eviction();
         }
+        // key every slot by its base file's epoch so a later compaction
+        // (which rewrites the file) invalidates exactly the touched slots
+        for (i, &e) in files.shard_epochs.iter().enumerate() {
+            cache.set_shard_epoch(i, e);
+        }
         let cache_enabled = cfg.cache_budget > 0;
         // warm the cache during loading, like the paper's loading phase
         // ("places processed shards in the cache if possible"); with
         // prefetching, disk reads run ahead of the (CPU-bound) compression
         // inserts, shortening the load phase Fig 6 measures
         if cache_enabled {
-            let paths: Vec<_> = (0..p).map(|i| dir.shard_path(i)).collect();
-            for (i, bytes) in ReadAhead::new(paths, cfg.prefetch_depth).enumerate() {
+            for (i, bytes) in
+                ReadAhead::new(files.shard_paths.clone(), cfg.prefetch_depth).enumerate()
+            {
                 cache.insert(i, &bytes.with_context(|| format!("warming shard {i}"))?)?;
             }
         }
@@ -409,11 +529,50 @@ impl VswEngine {
             governor,
             cfg,
             load_wall: t0.elapsed(),
+            epoch: files.id,
+            shard_paths: files.shard_paths,
+            deltas: files.deltas,
         })
     }
 
     pub fn config(&self) -> &EngineConfig {
         &self.cfg
+    }
+
+    /// The snapshot epoch this engine reads.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Re-resolve the dataset's *latest* epoch on a live engine: reload the
+    /// manifest, swap in the new delta shards / Bloom filters / degree
+    /// arrays, and re-key the cache so slots whose base file a compaction
+    /// rewrote invalidate lazily — slots of untouched shards (and every
+    /// ingest-only epoch, which never rewrites base bytes) stay warm.
+    /// Returns the epoch now being read.  Refuses on an engine pinned to an
+    /// explicit historical epoch.
+    pub fn refresh_latest(&mut self) -> Result<u64> {
+        anyhow::ensure!(
+            self.cfg.epoch.is_none(),
+            "engine is pinned to epoch {:?}; open a fresh engine instead",
+            self.cfg.epoch
+        );
+        let mut property = Property::load(&self.dir.property_path()).context("property")?;
+        let files = load_epoch_files(&self.dir, &property, None)?;
+        if files.id == self.epoch {
+            return Ok(self.epoch);
+        }
+        property.info.num_edges = files.num_edges;
+        for (i, &e) in files.shard_epochs.iter().enumerate() {
+            self.cache.set_shard_epoch(i, e);
+        }
+        self.property = property;
+        self.vertex_info = files.vertex_info;
+        self.blooms = files.blooms;
+        self.shard_paths = files.shard_paths;
+        self.deltas = files.deltas;
+        self.epoch = files.id;
+        Ok(self.epoch)
     }
 
     pub fn cache(&self) -> &ShardCache {
@@ -457,7 +616,14 @@ impl VswEngine {
             .unwrap_or(0);
         let shard_buffers =
             (self.cfg.threads + self.governor.high_water()) as u64 * max_shard_bytes;
-        vertex_arrays + degree_arrays + blooms + cache + shard_buffers
+        // resident delta shards (the mutation subsystem keeps them decoded)
+        let deltas: u64 = self
+            .deltas
+            .iter()
+            .flatten()
+            .map(|d| d.resident_bytes() as u64)
+            .sum();
+        vertex_arrays + degree_arrays + blooms + cache + shard_buffers + deltas
     }
 
     /// Run a lane-erased program (the CLI path): dispatches to the typed
@@ -483,12 +649,64 @@ impl VswEngine {
         })
     }
 
+    /// Lane-erased warm start (the CLI's `--incremental` path): `values`
+    /// must be on the program's lane (a saved fixpoint from a prior
+    /// epoch), `active` the restart seed.  The caller is responsible for
+    /// eligibility — monotone program, insert-only history — see
+    /// [`crate::graph::mutation::incremental_seed`].
+    pub fn run_any_warm(
+        &self,
+        app: &AnyProgram,
+        values: AnyValues,
+        active: Vec<VertexId>,
+    ) -> Result<AnyRunResult> {
+        Ok(match (app, values) {
+            (AnyProgram::F32(p), AnyValues::F32(values)) => {
+                let r = self.run_seeded(p.as_ref(), Some(WarmStart { values, active }))?;
+                AnyRunResult { values: r.values.into(), stats: r.stats }
+            }
+            (AnyProgram::F64(p), AnyValues::F64(values)) => {
+                let r = self.run_seeded(p.as_ref(), Some(WarmStart { values, active }))?;
+                AnyRunResult { values: r.values.into(), stats: r.stats }
+            }
+            (AnyProgram::U32(p), AnyValues::U32(values)) => {
+                let r = self.run_seeded(p.as_ref(), Some(WarmStart { values, active }))?;
+                AnyRunResult { values: r.values.into(), stats: r.stats }
+            }
+            (AnyProgram::U64(p), AnyValues::U64(values)) => {
+                let r = self.run_seeded(p.as_ref(), Some(WarmStart { values, active }))?;
+                AnyRunResult { values: r.values.into(), stats: r.stats }
+            }
+            (app, values) => anyhow::bail!(
+                "saved values are on the {} lane but app {} runs on {}",
+                values.lane().name(),
+                app.name(),
+                app.lane().name()
+            ),
+        })
+    }
+
     /// Run `app` to convergence (or the iteration cap): Algorithm 1.
     /// Generic over the program's value lane `V`; the edge weight lane (if
     /// the dataset carries one) reaches `gather` through the shard CSRs.
     pub fn run<V: VertexValue, P: VertexProgram<V> + ?Sized>(
         &self,
         app: &P,
+    ) -> Result<RunResult<V>> {
+        self.run_seeded(app, None)
+    }
+
+    /// [`Self::run`] with an optional warm start: instead of `init` +
+    /// `initially_active`, begin from a prior fixpoint and a seeded active
+    /// set.  With the seed being the sources of edges inserted since the
+    /// fixpoint's epoch, a monotone (Min/Max) program re-converges
+    /// incrementally: the old fixpoint over-approximates the new one and
+    /// every relaxation the new edges enable starts at a seeded source.
+    /// An empty seed converges in zero iterations (nothing changed).
+    pub fn run_seeded<V: VertexValue, P: VertexProgram<V> + ?Sized>(
+        &self,
+        app: &P,
+        warm: Option<WarmStart<V>>,
     ) -> Result<RunResult<V>> {
         let t_run = Instant::now();
         let n = self.property.info.num_vertices as usize;
@@ -500,12 +718,29 @@ impl VswEngine {
             app.default_max_iters()
         };
 
-        // init(src, dst) — line 1
-        let mut src: Vec<V> = (0..n).map(|v| app.init(v as VertexId, &ctx)).collect();
+        // init(src, dst) — line 1 (or the warm state verbatim)
+        let (mut src, mut active): (Vec<V>, Vec<VertexId>) = match warm {
+            Some(w) => {
+                anyhow::ensure!(
+                    w.values.len() == n,
+                    "warm values cover {} vertices, dataset has {n}",
+                    w.values.len()
+                );
+                let mut a = w.active;
+                a.sort_unstable();
+                a.dedup();
+                anyhow::ensure!(
+                    a.last().is_none_or(|&v| (v as usize) < n),
+                    "warm active set references vertices outside the dataset"
+                );
+                (w.values, a)
+            }
+            None => (
+                (0..n).map(|v| app.init(v as VertexId, &ctx)).collect(),
+                (0..n as VertexId).filter(|&v| app.initially_active(v, &ctx)).collect(),
+            ),
+        };
         let mut dst = src.clone();
-        let mut active: Vec<VertexId> = (0..n as VertexId)
-            .filter(|&v| app.initially_active(v, &ctx))
-            .collect();
         let mut active_ratio = active.len() as f64 / n.max(1) as f64;
 
         let mut stats = RunStats {
@@ -593,7 +828,8 @@ impl VswEngine {
                 let cfg = &self.cfg;
                 let blooms = &self.blooms;
                 let cache = &self.cache;
-                let dir = &self.dir;
+                let shard_paths = &self.shard_paths;
+                let deltas = &self.deltas;
                 let property = &self.property;
                 let tol = cfg.convergence_tol;
                 let buf_pool = &buf_pool;
@@ -644,25 +880,44 @@ impl VswEngine {
                 // delta-varint stream) plus its chunk split.  Decode work
                 // not fused into the gather (payload decompression, dv
                 // planning, layout validation) is timed into `decode_ns`.
+                // effective per-shard edge count with the resident delta
+                // folded in (pure stats; the merge itself happens row by
+                // row inside the gather fold)
+                let eff_edges = |shard: usize, base: u64| match deltas[shard].as_ref() {
+                    Some(d) => d.effective_edges(base),
+                    None => base,
+                };
                 let acquire = |shard: usize, did_read: &Cell<bool>| -> ShardWork {
                     let admit = cfg.cache_budget > 0;
                     let read = || {
                         did_read.set(true);
-                        io::read_file(&dir.shard_path(shard))
+                        io::read_file(&shard_paths[shard])
                     };
                     let built: Result<(WorkPayload, usize, u64)> = (|| {
                         if !use_stream {
-                            let csr = cache.fetch_decoded(shard, admit, read)?;
+                            let mut csr = cache.fetch_decoded(shard, admit, read)?;
                             check_interval(shard, csr.lo, csr.num_vertices())?;
+                            let edges = eff_edges(shard, csr.num_edges() as u64);
+                            // the xla path runs whole-shard kernels over a
+                            // decoded CSR; materialize the merged shard for
+                            // it (native wraps the stream instead).  The
+                            // merge is O(shard edges) per acquisition and
+                            // not memoized — acceptable while xla is the
+                            // artifact-gated side path; memoize per epoch
+                            // if that changes (ROADMAP follow-on)
+                            if !native {
+                                if let Some(d) = deltas[shard].as_ref() {
+                                    csr = Arc::new(d.merge(&csr));
+                                }
+                            }
                             let chunks = chunks_of(csr.num_vertices());
-                            let edges = csr.num_edges() as u64;
                             return Ok((WorkPayload::Decoded(csr), chunks, edges));
                         }
                         match cache.fetch_view(shard, admit, read)? {
                             ShardView::Decoded(csr) => {
                                 check_interval(shard, csr.lo, csr.num_vertices())?;
                                 let chunks = chunks_of(csr.num_vertices());
-                                let edges = csr.num_edges() as u64;
+                                let edges = eff_edges(shard, csr.num_edges() as u64);
                                 Ok((WorkPayload::Decoded(csr), chunks, edges))
                             }
                             ShardView::Raw(bytes) => {
@@ -672,7 +927,7 @@ impl VswEngine {
                                     .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                                 check_interval(shard, layout.lo, layout.num_rows())?;
                                 let chunks = chunks_of(layout.num_rows());
-                                let edges = layout.num_edges as u64;
+                                let edges = eff_edges(shard, layout.num_edges as u64);
                                 Ok((
                                     WorkPayload::View { bytes, layout, pooled: false },
                                     chunks,
@@ -693,7 +948,7 @@ impl VswEngine {
                                     .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                                 check_interval(shard, plan.lo, plan.num_rows)?;
                                 let chunks = plan.chunks.len();
-                                let edges = plan.num_edges as u64;
+                                let edges = eff_edges(shard, plan.num_edges as u64);
                                 Ok((WorkPayload::Dv { bytes, plan }, chunks, edges))
                             }
                             ShardView::Compressed { codec, bytes } => {
@@ -705,7 +960,7 @@ impl VswEngine {
                                     .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                                 check_interval(shard, layout.lo, layout.num_rows())?;
                                 let chunks = chunks_of(layout.num_rows());
-                                let edges = layout.num_edges as u64;
+                                let edges = eff_edges(shard, layout.num_edges as u64);
                                 Ok((
                                     WorkPayload::View {
                                         bytes: Arc::new(buf),
@@ -747,6 +1002,9 @@ impl VswEngine {
                 // backend straight into `dst` (no per-shard value vector),
                 // then scan the written range for activity
                 let process_chunk = |s: &mut WorkerScratch, work: &ShardWork, chunk: usize| {
+                    // resident delta merged into the row stream (native
+                    // paths); the xla path received a merged CSR at acquire
+                    let delta = deltas[work.shard].as_deref();
                     match &work.payload {
                         WorkPayload::Skipped => carry_skipped(work.shard),
                         WorkPayload::Failed => {}
@@ -755,8 +1013,9 @@ impl VswEngine {
                             if native {
                                 let (a, b) = chunk_range(csr.num_vertices(), chunk);
                                 let out = unsafe { dst_shared.slice_mut(lo + a, b - a) };
-                                let mut rows = CsrRows::new(csr, a..b);
-                                match process_rows(app, &mut rows, src_ref, out_deg, &ctx, out) {
+                                let rows = CsrRows::new(csr, a..b);
+                                match fold_chunk(app, rows, delta, a, src_ref, out_deg, &ctx, out)
+                                {
                                     Ok(()) => scan_active(s, work.shard, chunk, lo + a, out),
                                     Err(e) => record_err(e),
                                 }
@@ -776,8 +1035,8 @@ impl VswEngine {
                             let lo = layout.lo as usize;
                             let (a, b) = chunk_range(layout.num_rows(), chunk);
                             let out = unsafe { dst_shared.slice_mut(lo + a, b - a) };
-                            let mut rows = ViewRows::new(layout.view(bytes), a..b);
-                            match process_rows(app, &mut rows, src_ref, out_deg, &ctx, out) {
+                            let rows = ViewRows::new(layout.view(bytes), a..b);
+                            match fold_chunk(app, rows, delta, a, src_ref, out_deg, &ctx, out) {
                                 Ok(()) => scan_active(s, work.shard, chunk, lo + a, out),
                                 Err(e) => record_err(e),
                             }
@@ -787,8 +1046,8 @@ impl VswEngine {
                             let lo = plan.lo as usize;
                             let (a, b) = (dv.start_row, dv.end_row);
                             let out = unsafe { dst_shared.slice_mut(lo + a, b - a) };
-                            let mut rows = DvRows::new(plan.cursor(bytes, dv), plan.lo, a, b - a);
-                            match process_rows(app, &mut rows, src_ref, out_deg, &ctx, out) {
+                            let rows = DvRows::new(plan.cursor(bytes, dv), plan.lo, a, b - a);
+                            match fold_chunk(app, rows, delta, a, src_ref, out_deg, &ctx, out) {
                                 Ok(()) => scan_active(s, work.shard, chunk, lo + a, out),
                                 Err(e) => record_err(e),
                             }
@@ -1339,6 +1598,110 @@ mod tests {
         let any = AnyProgram::U32(Box::new(MaxDeg));
         let a = engine.run_any(&any).unwrap();
         assert_eq!(a.values, crate::graph::AnyValues::U32(m.values));
+    }
+
+    #[test]
+    fn ingest_then_refresh_sees_new_epoch_and_compaction_invalidates_slots() {
+        use crate::graph::mutation::{self, Mutation};
+        let edges = generator::erdos_renyi(128, 900, 21);
+        let dir = build_dataset("epoch", &edges, 128, 128);
+        let mut engine = VswEngine::open(
+            dir.clone(),
+            EngineConfig { threads: 2, selective: false, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(engine.epoch(), 0);
+        let before = engine.run(&Wcc).unwrap();
+
+        // mutate: bridge vertex 0 into everything reachable from 100
+        let batch = vec![
+            Mutation::Insert { src: 0, dst: 100, weight: 1.0 },
+            Mutation::Insert { src: 100, dst: 0, weight: 1.0 },
+        ];
+        mutation::ingest(&dir, &batch, 0.01).unwrap();
+        // the live engine still reads epoch 0 until refreshed
+        let still = engine.run(&Wcc).unwrap();
+        assert_eq!(before.values, still.values, "pre-refresh reads stay at the old epoch");
+        assert_eq!(engine.refresh_latest().unwrap(), 1);
+        let after = engine.run(&Wcc).unwrap();
+        // the new edges can only merge components (labels never rise)
+        assert!(after
+            .values
+            .iter()
+            .zip(&before.values)
+            .all(|(a, b)| a <= b));
+
+        // a from-scratch rebuild of the mutated graph agrees exactly
+        let (mut final_edges, mut w) = (edges.clone(), Vec::new());
+        mutation::apply_batch(&mut final_edges, &mut w, &batch).unwrap();
+        let dir2 = build_dataset("epoch_rebuild", &final_edges, 128, 128);
+        let rebuilt = VswEngine::open(
+            dir2,
+            EngineConfig { threads: 2, selective: false, ..Default::default() },
+        )
+        .unwrap()
+        .run(&Wcc)
+        .unwrap();
+        assert_eq!(after.values, rebuilt.values, "delta-merged != from-scratch");
+
+        // compaction rewrites base files; refresh invalidates exactly the
+        // touched slots and results stay bit-identical
+        let r = mutation::compact(&dir, 0.0).unwrap();
+        assert!(r.epoch.is_some());
+        assert_eq!(engine.refresh_latest().unwrap(), 2);
+        let compacted = engine.run(&Wcc).unwrap();
+        assert_eq!(after.values, compacted.values, "compaction changed results");
+        assert!(
+            engine.cache().stats.invalidated.load(Ordering::Relaxed) > 0,
+            "compacted shards must invalidate their cache slots"
+        );
+        // an engine pinned to the base epoch still reproduces the original
+        let pinned = VswEngine::open(
+            dir,
+            EngineConfig { epoch: Some(0), threads: 2, selective: false, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(pinned.run(&Wcc).unwrap().values, before.values);
+    }
+
+    #[test]
+    fn warm_restart_matches_cold_on_monotone_apps() {
+        use crate::graph::mutation::{self, Mutation};
+        let n = 256;
+        let edges = generator::erdos_renyi(n, 1200, 3);
+        let dir = build_dataset("warm", &edges, n, 200);
+        let engine = VswEngine::open(dir.clone(), EngineConfig::default()).unwrap();
+        let app = Sssp { source: 0 };
+        let fix0 = engine.run(&app).unwrap();
+
+        // insert-only batch; seed = sources of the inserted edges
+        let batch = vec![
+            Mutation::Insert { src: 7, dst: 200, weight: 1.0 },
+            Mutation::Insert { src: 200, dst: 13, weight: 1.0 },
+            Mutation::Insert { src: 1, dst: 255, weight: 1.0 },
+        ];
+        mutation::ingest(&dir, &batch, 0.01).unwrap();
+        let engine = VswEngine::open(dir.clone(), EngineConfig::default()).unwrap();
+        let cold = engine.run(&app).unwrap();
+        let property = crate::storage::property::Property::load(&dir.property_path()).unwrap();
+        let manifest =
+            crate::runtime::EpochManifest::load_or_bootstrap(&dir, &property).unwrap();
+        let seed = mutation::incremental_seed(&dir, &manifest, 0, 1).unwrap().unwrap();
+        assert_eq!(seed, vec![1, 7, 200]);
+        let warm = engine
+            .run_seeded(&app, Some(WarmStart { values: fix0.values.clone(), active: seed }))
+            .unwrap();
+        assert_eq!(warm.values, cold.values, "warm restart missed the cold fixpoint");
+        assert!(
+            warm.stats.num_iters() <= cold.stats.num_iters(),
+            "warm restart should not iterate more than cold"
+        );
+        // an empty seed is already converged
+        let noop = engine
+            .run_seeded(&app, Some(WarmStart { values: cold.values.clone(), active: vec![] }))
+            .unwrap();
+        assert_eq!(noop.values, cold.values);
+        assert_eq!(noop.stats.num_iters(), 0);
     }
 
     #[test]

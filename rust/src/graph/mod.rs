@@ -9,6 +9,7 @@
 pub mod csr;
 pub mod edgelist;
 pub mod generator;
+pub mod mutation;
 pub mod value;
 
 pub use value::{AnyValues, Lane, VertexValue};

@@ -1,0 +1,734 @@
+//! Graph mutations: batched edge insertions/deletions, epoch ingestion and
+//! compaction — the dynamic-graph layer over GraphMP's static shards.
+//!
+//! ## Semantics
+//!
+//! A batch is an **ordered** list of [`Mutation`]s applied to the current
+//! epoch's edge multiset:
+//!
+//! * `Insert (s, d, w)` appends one new edge (the graph is a multigraph, so
+//!   duplicates are legal);
+//! * `Delete (s, d)` removes **every** live `(s, d)` edge — base edges via
+//!   a tombstone in the shard's delta, previously inserted edges by
+//!   pruning the delta's insert list.  Deleting an absent edge is a no-op.
+//!
+//! [`apply_batch`] is the executable specification on a plain edge list;
+//! [`ingest`] implements the same semantics against a dataset directory by
+//! bucketing mutations into per-interval delta shards
+//! ([`crate::storage::delta::DeltaShard`]) and appending an epoch to the
+//! snapshot manifest ([`crate::runtime::EpochManifest`]).  The equivalence
+//! — delta-merged execution ≡ preprocessing the final edge list from
+//! scratch, bit-for-bit — is the subsystem's acceptance bar
+//! (`tests/delta_epochs.rs`), and it holds because both sides produce the
+//! same per-row edge order: base survivors in base order, then inserts in
+//! insertion order (stable counting sort on one side, ordered merge on the
+//! other).
+//!
+//! ## Incremental restart
+//!
+//! For monotone programs (Min/Max reduce whose `apply` folds the old
+//! value — the same property GridGraph-style row skipping relies on), an
+//! **insert-only** mutation history lets a run warm-start from the previous
+//! epoch's fixpoint: the old fixpoint is a valid over-approximation of the
+//! new one, and seeding the active set with the sources of the inserted
+//! edges triggers exactly the relaxations the new edges enable
+//! ([`incremental_seed`]).  Deletions can *raise* Min-lattice values, which
+//! monotone re-iteration cannot do, so any deletion since the saved epoch
+//! forces a cold start; Sum lanes always recompute from scratch.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::bloom::BloomFilter;
+use crate::graph::csr::Csr;
+use crate::graph::{Edge, VertexId, Weight};
+use crate::runtime::{rel_name, Epoch, EpochManifest, EpochShard};
+use crate::sharding::preprocess::{BLOOM_MAGIC, BLOOM_VERSION};
+use crate::storage::delta::{self, DeltaShard};
+use crate::storage::format::frame;
+use crate::storage::property::Property;
+use crate::storage::vertexinfo::VertexInfo;
+use crate::storage::{io, shardfile, DatasetDir};
+use crate::util::rng::Xoshiro256;
+
+/// One edge mutation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Mutation {
+    Insert { src: VertexId, dst: VertexId, weight: Weight },
+    Delete { src: VertexId, dst: VertexId },
+}
+
+impl Mutation {
+    pub fn src(&self) -> VertexId {
+        match *self {
+            Mutation::Insert { src, .. } | Mutation::Delete { src, .. } => src,
+        }
+    }
+
+    pub fn dst(&self) -> VertexId {
+        match *self {
+            Mutation::Insert { dst, .. } | Mutation::Delete { dst, .. } => dst,
+        }
+    }
+
+    pub fn is_insert(&self) -> bool {
+        matches!(self, Mutation::Insert { .. })
+    }
+}
+
+/// Apply one batch to a plain edge list — the executable specification
+/// [`ingest`] is tested against.  `weights` must be empty (unweighted) or
+/// parallel to `edges`; a non-unit insert weight promotes an unweighted
+/// list to a weighted one (existing edges get weight 1).
+pub fn apply_batch(
+    edges: &mut Vec<Edge>,
+    weights: &mut Vec<Weight>,
+    batch: &[Mutation],
+) -> Result<()> {
+    anyhow::ensure!(
+        weights.is_empty() || weights.len() == edges.len(),
+        "weights must be empty or parallel to edges"
+    );
+    for m in batch {
+        match *m {
+            Mutation::Insert { src, dst, weight } => {
+                // a non-unit weight promotes the list to weighted (prior
+                // edges get unit weights); the flag also covers promotion
+                // while the list is still empty
+                let promote = weights.is_empty() && weight != 1.0;
+                if promote {
+                    weights.resize(edges.len(), 1.0);
+                }
+                edges.push((src, dst));
+                if promote || !weights.is_empty() {
+                    weights.push(weight);
+                }
+            }
+            Mutation::Delete { src, dst } => {
+                if weights.is_empty() {
+                    edges.retain(|&e| e != (src, dst));
+                } else {
+                    // filter both parallel lanes in one ordered pass
+                    let mut new_e = Vec::with_capacity(edges.len());
+                    let mut new_w = Vec::with_capacity(weights.len());
+                    for (k, &e) in edges.iter().enumerate() {
+                        if e != (src, dst) {
+                            new_e.push(e);
+                            new_w.push(weights[k]);
+                        }
+                    }
+                    *edges = new_e;
+                    *weights = new_w;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Apply a sequence of batches (convenience over [`apply_batch`]).
+pub fn apply_batches(
+    edges: &mut Vec<Edge>,
+    weights: &mut Vec<Weight>,
+    batches: &[Vec<Mutation>],
+) -> Result<()> {
+    for b in batches {
+        apply_batch(edges, weights, b)?;
+    }
+    Ok(())
+}
+
+/// Summary returned by [`ingest`].
+#[derive(Debug, Clone)]
+pub struct IngestReport {
+    /// The newly created epoch id.
+    pub epoch: u64,
+    pub inserts: u64,
+    pub deletes: u64,
+    /// Live edges removed by the batch's deletes (base + prior inserts).
+    pub edges_removed: u64,
+    pub touched_shards: Vec<usize>,
+    /// Live edges at the new epoch.
+    pub num_edges: u64,
+}
+
+/// Apply one mutation batch to a preprocessed dataset: bucket mutations
+/// into per-interval delta shards, rebuild Bloom filters for touched
+/// shards, update the degree arrays, archive the batch, and append a new
+/// epoch to the snapshot manifest.  Base shard files are never modified —
+/// readers at older epochs keep reproducing their results.
+pub fn ingest(dir: &DatasetDir, batch: &[Mutation], bloom_fpr: f64) -> Result<IngestReport> {
+    anyhow::ensure!(!batch.is_empty(), "empty mutation batch");
+    let property = Property::load(&dir.property_path()).context("property")?;
+    let n = property.info.num_vertices;
+    for (k, m) in batch.iter().enumerate() {
+        anyhow::ensure!(
+            (m.src() as u64) < n && (m.dst() as u64) < n,
+            "mutation {k}: edge ({}, {}) outside vertex range {n} (the vertex universe is \
+             fixed at preprocessing time)",
+            m.src(),
+            m.dst()
+        );
+        if let Mutation::Insert { weight, .. } = m {
+            anyhow::ensure!(weight.is_finite(), "mutation {k}: non-finite weight");
+        }
+    }
+
+    let mut manifest = EpochManifest::load_or_bootstrap(dir, &property)?;
+    let cur = manifest.latest().clone();
+    let new_id = cur.id + 1;
+
+    // bucket by destination interval, preserving batch order within each
+    let mut per_shard: BTreeMap<usize, Vec<Mutation>> = BTreeMap::new();
+    for &m in batch {
+        per_shard.entry(property.shard_of(m.dst())).or_default().push(m);
+    }
+
+    let mut shards = cur.shards.clone();
+    let mut out_deg_delta = vec![0i64; n as usize];
+    let mut in_deg_delta = vec![0i64; n as usize];
+    let (mut inserts, mut deletes, mut edges_removed) = (0u64, 0u64, 0u64);
+    let mut touched = Vec::with_capacity(per_shard.len());
+
+    for (&i, muts) in &per_shard {
+        let (lo, hi) = property.interval(i);
+        let base = shardfile::load(&dir.root.join(&cur.shards[i].shard))
+            .with_context(|| format!("shard {i}"))?;
+        anyhow::ensure!(
+            (base.lo, base.hi) == (lo, hi),
+            "shard {i} interval disagrees with property"
+        );
+        let rows = (hi - lo) as usize;
+        // unpack the previous cumulative delta into per-row working lists
+        let (mut ins_rows, mut tomb_rows, mut dropped) = match &cur.shards[i].delta {
+            Some(f) => {
+                let d = DeltaShard::load(&dir.root.join(f))
+                    .with_context(|| format!("delta shard {i}"))?;
+                anyhow::ensure!((d.lo, d.hi) == (lo, hi), "delta shard {i} interval");
+                let mut ins: Vec<Vec<(VertexId, Weight)>> = vec![Vec::new(); rows];
+                let mut tomb: Vec<Vec<VertexId>> = vec![Vec::new(); rows];
+                for r in 0..rows {
+                    let (s, e) = (d.ins_row_ptr[r] as usize, d.ins_row_ptr[r + 1] as usize);
+                    for k in s..e {
+                        ins[r].push((d.ins_col[k], d.ins_weight(k)));
+                    }
+                    tomb[r].extend_from_slice(d.row_tombs(r));
+                }
+                (ins, tomb, d.dropped_base)
+            }
+            None => (vec![Vec::new(); rows], vec![Vec::new(); rows], 0u64),
+        };
+
+        for &m in muts {
+            match m {
+                Mutation::Insert { src, dst, weight } => {
+                    ins_rows[(dst - lo) as usize].push((src, weight));
+                    out_deg_delta[src as usize] += 1;
+                    in_deg_delta[dst as usize] += 1;
+                    inserts += 1;
+                }
+                Mutation::Delete { src, dst } => {
+                    deletes += 1;
+                    let r = (dst - lo) as usize;
+                    let before = ins_rows[r].len();
+                    ins_rows[r].retain(|&(s, _)| s != src);
+                    let mut removed = (before - ins_rows[r].len()) as u64;
+                    if !tomb_rows[r].contains(&src) {
+                        // tombstones kill base edges; count them once, when
+                        // the tombstone first lands
+                        let k = base
+                            .in_neighbors(dst)
+                            .iter()
+                            .filter(|&&u| u == src)
+                            .count() as u64;
+                        if k > 0 {
+                            tomb_rows[r].push(src);
+                            dropped += k;
+                            removed += k;
+                        }
+                    }
+                    edges_removed += removed;
+                    out_deg_delta[src as usize] -= removed as i64;
+                    in_deg_delta[dst as usize] -= removed as i64;
+                }
+            }
+        }
+
+        let keep_weights = base.is_weighted()
+            || ins_rows.iter().flatten().any(|&(_, w)| w != 1.0);
+        let dshard = DeltaShard::from_rows(lo, hi, &ins_rows, &tomb_rows, dropped, keep_weights);
+        if dshard.is_empty() {
+            shards[i].delta = None;
+        } else {
+            let path = dir.delta_path(i, new_id);
+            dshard.save(&path)?;
+            shards[i].delta = Some(rel_name(&path));
+        }
+
+        // Bloom rebuilt over the *merged* source set (no stale sources from
+        // deleted edges, no false negatives for inserted ones)
+        let merged_edges = dshard.effective_edges(base.num_edges() as u64) as usize;
+        let mut bloom = BloomFilter::with_capacity(merged_edges.max(1), bloom_fpr);
+        for r in 0..rows {
+            let (s, e) = (base.row_ptr[r] as usize, base.row_ptr[r + 1] as usize);
+            let tombs = dshard.row_tombs(r);
+            for k in s..e {
+                let u = base.col[k];
+                if tombs.binary_search(&u).is_err() {
+                    bloom.insert(u as u64);
+                }
+            }
+            for &u in dshard.ins_sources(r) {
+                bloom.insert(u as u64);
+            }
+        }
+        let bpath = dir.epoch_bloom_path(i, new_id);
+        io::write_file(&bpath, &frame(BLOOM_MAGIC, BLOOM_VERSION, &bloom.to_bytes()))?;
+        shards[i].bloom = rel_name(&bpath);
+        touched.push(i);
+    }
+
+    // degree arrays follow the mutations; values lane is left empty
+    let vi = VertexInfo::load(&dir.root.join(&cur.vertexinfo)).context("vertexinfo")?;
+    let mut degrees = vi.degrees;
+    for v in 0..n as usize {
+        let new_out = degrees.out_deg[v] as i64 + out_deg_delta[v];
+        let new_in = degrees.in_deg[v] as i64 + in_deg_delta[v];
+        anyhow::ensure!(new_out >= 0 && new_in >= 0, "vertex {v}: degree underflow");
+        degrees.out_deg[v] = new_out as u32;
+        degrees.in_deg[v] = new_in as u32;
+    }
+    let vipath = dir.epoch_vertexinfo_path(new_id);
+    VertexInfo::new(degrees).save(&vipath)?;
+
+    let bpath = dir.batch_path(new_id);
+    delta::save_log(batch, &bpath)?;
+
+    let num_edges = cur.num_edges + inserts - edges_removed;
+    manifest.epochs.push(Epoch {
+        id: new_id,
+        kind: "ingest".into(),
+        parent: Some(cur.id),
+        num_edges,
+        vertexinfo: rel_name(&vipath),
+        batch: Some(rel_name(&bpath)),
+        inserts,
+        deletes,
+        shards,
+    });
+    manifest.current = new_id;
+    manifest.save(dir)?;
+
+    Ok(IngestReport {
+        epoch: new_id,
+        inserts,
+        deletes,
+        edges_removed,
+        touched_shards: touched,
+        num_edges,
+    })
+}
+
+/// Summary returned by [`compact`].
+#[derive(Debug, Clone)]
+pub struct CompactReport {
+    /// The new epoch id, or `None` when nothing crossed the threshold.
+    pub epoch: Option<u64>,
+    pub compacted_shards: Vec<usize>,
+    /// Shards whose delta/base ratio stayed below the threshold.
+    pub skipped_shards: usize,
+}
+
+/// Rewrite merged shard files for every shard whose delta/base edge ratio
+/// reaches `min_ratio` (`0.0` compacts every delta-bearing shard).  The
+/// merged file replays the exact row order the delta-merged stream
+/// produced, so results are bit-identical before and after; old epochs
+/// keep their files.  A no-op (nothing to compact) appends no epoch.
+pub fn compact(dir: &DatasetDir, min_ratio: f64) -> Result<CompactReport> {
+    let property = Property::load(&dir.property_path()).context("property")?;
+    let mut manifest = EpochManifest::load_or_bootstrap(dir, &property)?;
+    let cur = manifest.latest().clone();
+    let new_id = cur.id + 1;
+    let mut shards = cur.shards.clone();
+    let mut compacted = Vec::new();
+    let mut skipped = 0usize;
+
+    for i in 0..shards.len() {
+        let Some(dname) = &cur.shards[i].delta else { continue };
+        let dshard = DeltaShard::load(&dir.root.join(dname))
+            .with_context(|| format!("delta shard {i}"))?;
+        let base = shardfile::load(&dir.root.join(&cur.shards[i].shard))
+            .with_context(|| format!("shard {i}"))?;
+        let ratio = (dshard.ins_count() as f64 + dshard.dropped_base as f64)
+            / base.num_edges().max(1) as f64;
+        if ratio < min_ratio {
+            skipped += 1;
+            continue;
+        }
+        let merged = dshard.merge(&base);
+        merged.validate().with_context(|| format!("merged shard {i}"))?;
+        let path = dir.epoch_shard_path(i, new_id);
+        shardfile::save(&merged, &path)?;
+        // edge set unchanged ⇒ the epoch's bloom stays valid; only the base
+        // file (and its cache-invalidation epoch) moves
+        shards[i] = EpochShard {
+            shard: rel_name(&path),
+            bloom: cur.shards[i].bloom.clone(),
+            delta: None,
+            shard_epoch: new_id,
+        };
+        compacted.push(i);
+    }
+
+    if compacted.is_empty() {
+        return Ok(CompactReport { epoch: None, compacted_shards: vec![], skipped_shards: skipped });
+    }
+    manifest.epochs.push(Epoch {
+        id: new_id,
+        kind: "compact".into(),
+        parent: Some(cur.id),
+        num_edges: cur.num_edges,
+        vertexinfo: cur.vertexinfo.clone(),
+        batch: None,
+        inserts: 0,
+        deletes: 0,
+        shards,
+    });
+    manifest.current = new_id;
+    manifest.save(dir)?;
+    Ok(CompactReport {
+        epoch: Some(new_id),
+        compacted_shards: compacted,
+        skipped_shards: skipped,
+    })
+}
+
+/// Active-set seed for an incremental restart from epoch `from` to `to`:
+/// the deduplicated sources of every edge inserted in between.  Returns
+/// `None` when any intervening batch contains a delete — deletions can
+/// raise Min-lattice values, which warm re-iteration cannot, so the caller
+/// must cold-start.
+pub fn incremental_seed(
+    dir: &DatasetDir,
+    manifest: &EpochManifest,
+    from: u64,
+    to: u64,
+) -> Result<Option<Vec<VertexId>>> {
+    let mut seed = Vec::new();
+    for e in manifest.epochs_between(from, to) {
+        if e.kind == "compact" {
+            continue; // no logical change
+        }
+        let Some(b) = &e.batch else {
+            anyhow::bail!("epoch {} has no archived batch to replay", e.id)
+        };
+        for m in delta::load_log(&dir.root.join(b))? {
+            match m {
+                Mutation::Insert { src, .. } => seed.push(src),
+                Mutation::Delete { .. } => return Ok(None),
+            }
+        }
+    }
+    seed.sort_unstable();
+    seed.dedup();
+    Ok(Some(seed))
+}
+
+/// The current epoch's full edge list (merged base + deltas), shard by
+/// shard.  `weights` is empty when no shard carries a weight lane.  Used by
+/// `graphmp mutate-gen` to aim deletes at live edges and by tests as a
+/// convenient merged view; the order is per-shard row order, not the
+/// original input order.
+pub fn current_edges(dir: &DatasetDir) -> Result<(Vec<Edge>, Vec<Weight>)> {
+    let property = Property::load(&dir.property_path())?;
+    let manifest = EpochManifest::load_or_bootstrap(dir, &property)?;
+    let cur = manifest.latest();
+    let mut edges = Vec::new();
+    let mut weights = Vec::new();
+    let mut any_weighted = false;
+    for (i, s) in cur.shards.iter().enumerate() {
+        let base = shardfile::load(&dir.root.join(&s.shard))
+            .with_context(|| format!("shard {i}"))?;
+        let csr = match &s.delta {
+            Some(f) => DeltaShard::load(&dir.root.join(f))?.merge(&base),
+            None => base,
+        };
+        if csr.is_weighted() {
+            if !any_weighted {
+                weights.resize(edges.len(), 1.0);
+                any_weighted = true;
+            }
+            for (s, d, w) in csr.to_wedges() {
+                edges.push((s, d));
+                weights.push(w);
+            }
+        } else {
+            for e in csr.to_edges() {
+                edges.push(e);
+                if any_weighted {
+                    weights.push(1.0);
+                }
+            }
+        }
+    }
+    Ok((edges, weights))
+}
+
+/// Deterministic synthetic mutation batch against a live edge set: inserts
+/// random edges (weighted when `weighted`), deletes aim at currently live
+/// edges (existing ∪ batch inserts so far) so tombstones actually fire.
+/// Pure function of its arguments — benches and CI smoke legs get
+/// reproducible workloads.
+pub fn synth_batch(
+    num_vertices: usize,
+    existing: &[Edge],
+    count: usize,
+    delete_fraction: f64,
+    weighted: bool,
+    seed: u64,
+) -> Vec<Mutation> {
+    assert!(num_vertices > 0, "need at least one vertex");
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut live: Vec<Edge> = existing.to_vec();
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        if !live.is_empty() && rng.chance(delete_fraction) {
+            let k = rng.range_usize(0, live.len());
+            let (src, dst) = live[k];
+            // a delete kills every (src, dst) occurrence
+            live.retain(|&e| e != (src, dst));
+            out.push(Mutation::Delete { src, dst });
+        } else {
+            let src = rng.range_usize(0, num_vertices) as VertexId;
+            let dst = rng.range_usize(0, num_vertices) as VertexId;
+            let weight = if weighted {
+                (rng.range_usize(1, 9) as Weight) * 0.25
+            } else {
+                1.0
+            };
+            live.push((src, dst));
+            out.push(Mutation::Insert { src, dst, weight });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::sharding::{preprocess, preprocess_weighted, PreprocessConfig};
+
+    fn tmpdir(tag: &str) -> DatasetDir {
+        let d = std::env::temp_dir().join(format!("gmp_mut_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        DatasetDir::new(d)
+    }
+
+    #[test]
+    fn apply_batch_semantics() {
+        // delete kills all occurrences incl. prior inserts; reinsert lives
+        let mut edges = vec![(0u32, 1u32), (2, 1), (0, 1)];
+        let mut weights = Vec::new();
+        apply_batch(
+            &mut edges,
+            &mut weights,
+            &[
+                Mutation::Insert { src: 0, dst: 1, weight: 1.0 },
+                Mutation::Delete { src: 0, dst: 1 },
+                Mutation::Insert { src: 0, dst: 1, weight: 1.0 },
+            ],
+        )
+        .unwrap();
+        assert_eq!(edges, vec![(2, 1), (0, 1)]);
+        assert!(weights.is_empty(), "unit weights stay implicit");
+
+        // a non-unit insert weight promotes the list to weighted
+        apply_batch(
+            &mut edges,
+            &mut weights,
+            &[Mutation::Insert { src: 3, dst: 0, weight: 2.5 }],
+        )
+        .unwrap();
+        assert_eq!(edges, vec![(2, 1), (0, 1), (3, 0)]);
+        assert_eq!(weights, vec![1.0, 1.0, 2.5]);
+
+        // weighted delete keeps the lanes parallel
+        apply_batch(&mut edges, &mut weights, &[Mutation::Delete { src: 0, dst: 1 }]).unwrap();
+        assert_eq!(edges, vec![(2, 1), (3, 0)]);
+        assert_eq!(weights, vec![1.0, 2.5]);
+    }
+
+    #[test]
+    fn ingest_creates_epoch_and_updates_degrees() {
+        let edges = vec![(0u32, 1u32), (1, 2), (2, 0), (0, 2), (3, 1)];
+        let dir = tmpdir("ing");
+        let cfg = PreprocessConfig { max_edges_per_shard: 2, bloom_fpr: 0.01 };
+        preprocess("m", &edges, 4, &dir, &cfg).unwrap();
+        let report = ingest(
+            &dir,
+            &[
+                Mutation::Insert { src: 3, dst: 0, weight: 1.0 },
+                Mutation::Delete { src: 1, dst: 2 },
+            ],
+            0.01,
+        )
+        .unwrap();
+        assert_eq!(report.epoch, 1);
+        assert_eq!(report.inserts, 1);
+        assert_eq!(report.edges_removed, 1);
+        assert_eq!(report.num_edges, 5);
+        let property = Property::load(&dir.property_path()).unwrap();
+        let manifest = EpochManifest::load(&dir.epochs_path()).unwrap();
+        assert_eq!(manifest.current, 1);
+        let e = manifest.latest();
+        assert_eq!(e.kind, "ingest");
+        assert!(e.batch.is_some());
+        // degrees moved with the mutations
+        let vi = VertexInfo::load(&dir.root.join(&e.vertexinfo)).unwrap();
+        assert_eq!(vi.degrees.out_deg[3], 2, "insert raised out-degree");
+        assert_eq!(vi.degrees.out_deg[1], 0, "delete lowered out-degree");
+        assert_eq!(vi.degrees.in_deg[0], 2);
+        // merged view equals the specification applied to the input list
+        let (mut got, _) = current_edges(&dir).unwrap();
+        got.sort_unstable();
+        let mut want = edges.clone();
+        let mut w = Vec::new();
+        apply_batch(
+            &mut want,
+            &mut w,
+            &[
+                Mutation::Insert { src: 3, dst: 0, weight: 1.0 },
+                Mutation::Delete { src: 1, dst: 2 },
+            ],
+        )
+        .unwrap();
+        want.sort_unstable();
+        assert_eq!(got, want);
+        let _ = property;
+    }
+
+    #[test]
+    fn ingest_rejects_out_of_range_and_empty() {
+        let dir = tmpdir("rej");
+        preprocess("m", &[(0, 1)], 2, &dir, &PreprocessConfig::default()).unwrap();
+        assert!(ingest(&dir, &[], 0.01).is_err());
+        assert!(
+            ingest(&dir, &[Mutation::Insert { src: 0, dst: 9, weight: 1.0 }], 0.01).is_err()
+        );
+        assert!(ingest(
+            &dir,
+            &[Mutation::Insert { src: 0, dst: 1, weight: f32::NAN }],
+            0.01
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn compact_merges_and_respects_threshold() {
+        let edges = generator::erdos_renyi(64, 400, 5);
+        let weights = generator::synth_weights(&edges, 3);
+        let dir = tmpdir("cmp");
+        let cfg = PreprocessConfig { max_edges_per_shard: 64, bloom_fpr: 0.01 };
+        preprocess_weighted("m", &edges, &weights, 64, &dir, &cfg).unwrap();
+        // heavy mutations on shard of vertex 0, nothing elsewhere
+        let batch = vec![
+            Mutation::Insert { src: 5, dst: 0, weight: 0.5 },
+            Mutation::Insert { src: 6, dst: 0, weight: 0.75 },
+            Mutation::Insert { src: 7, dst: 1, weight: 0.25 },
+        ];
+        ingest(&dir, &batch, 0.01).unwrap();
+        let (edges_before, weights_before) = current_edges(&dir).unwrap();
+        // a sky-high threshold compacts nothing and appends no epoch
+        let r = compact(&dir, 1e9).unwrap();
+        assert!(r.epoch.is_none());
+        assert!(r.compacted_shards.is_empty());
+        assert!(r.skipped_shards > 0);
+        // threshold 0 compacts every delta-bearing shard
+        let r = compact(&dir, 0.0).unwrap();
+        assert_eq!(r.epoch, Some(2));
+        assert!(!r.compacted_shards.is_empty());
+        let manifest = EpochManifest::load(&dir.epochs_path()).unwrap();
+        let e = manifest.latest();
+        assert_eq!(e.kind, "compact");
+        for &i in &r.compacted_shards {
+            assert_eq!(e.shards[i].shard_epoch, 2, "compaction must bump the file epoch");
+            assert!(e.shards[i].delta.is_none());
+        }
+        // the merged view is unchanged by compaction
+        let (edges_after, weights_after) = current_edges(&dir).unwrap();
+        let key = |e: &[(u32, u32)], w: &[f32]| {
+            let mut v: Vec<(u32, u32, u32)> = e
+                .iter()
+                .enumerate()
+                .map(|(k, &(s, d))| (s, d, if w.is_empty() { 0 } else { w[k].to_bits() }))
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(key(&edges_before, &weights_before), key(&edges_after, &weights_after));
+    }
+
+    #[test]
+    fn incremental_seed_collects_insert_sources_and_vetoes_deletes() {
+        let dir = tmpdir("seed");
+        preprocess("m", &[(0, 1), (1, 2)], 8, &dir, &PreprocessConfig::default()).unwrap();
+        ingest(&dir, &[Mutation::Insert { src: 4, dst: 2, weight: 1.0 }], 0.01).unwrap();
+        ingest(
+            &dir,
+            &[
+                Mutation::Insert { src: 5, dst: 3, weight: 1.0 },
+                Mutation::Insert { src: 4, dst: 1, weight: 1.0 },
+            ],
+            0.01,
+        )
+        .unwrap();
+        let property = Property::load(&dir.property_path()).unwrap();
+        let manifest = EpochManifest::load_or_bootstrap(&dir, &property).unwrap();
+        assert_eq!(
+            incremental_seed(&dir, &manifest, 0, 2).unwrap(),
+            Some(vec![4, 5])
+        );
+        assert_eq!(incremental_seed(&dir, &manifest, 1, 2).unwrap(), Some(vec![4, 5]));
+        assert_eq!(
+            incremental_seed(&dir, &manifest, 2, 2).unwrap(),
+            Some(vec![]),
+            "no epochs in range, empty seed"
+        );
+        ingest(&dir, &[Mutation::Delete { src: 0, dst: 1 }], 0.01).unwrap();
+        let manifest = EpochManifest::load(&dir.epochs_path()).unwrap();
+        assert_eq!(
+            incremental_seed(&dir, &manifest, 0, 3).unwrap(),
+            None,
+            "deletes force a cold start"
+        );
+        assert_eq!(
+            incremental_seed(&dir, &manifest, 2, 3).unwrap(),
+            None,
+            "the deleting epoch is in range"
+        );
+    }
+
+    #[test]
+    fn synth_batch_is_deterministic_and_deletes_hit_live_edges() {
+        let existing = vec![(0u32, 1u32), (2, 3)];
+        let a = synth_batch(16, &existing, 40, 0.3, true, 7);
+        let b = synth_batch(16, &existing, 40, 0.3, true, 7);
+        assert_eq!(a, b);
+        assert!(a.iter().any(|m| m.is_insert()));
+        assert!(a.iter().any(|m| !m.is_insert()), "0.3 delete fraction over 40 draws");
+        // replay deletes against the live set: every delete must hit
+        let mut live = existing.clone();
+        for m in &a {
+            match *m {
+                Mutation::Insert { src, dst, .. } => live.push((src, dst)),
+                Mutation::Delete { src, dst } => {
+                    let before = live.len();
+                    live.retain(|&e| e != (src, dst));
+                    assert!(live.len() < before, "delete aimed at a dead edge");
+                }
+            }
+        }
+    }
+}

@@ -40,6 +40,9 @@ const BOOL_FLAGS: &[&str] = &[
     "adaptive",
     "weighted",
     "no-stream-gather",
+    "incremental",
+    "save-values",
+    "all",
 ];
 
 fn main() {
@@ -57,6 +60,9 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
         "generate" => cmd_generate(&args),
         "preprocess" => cmd_preprocess(&args),
         "run" => cmd_run(&args),
+        "ingest" => cmd_ingest(&args),
+        "compact" => cmd_compact(&args),
+        "mutate-gen" => cmd_mutate_gen(&args),
         "baseline" => cmd_baseline(&args),
         "bench-compare" => cmd_bench_compare(&args),
         "info" => cmd_info(&args),
@@ -94,7 +100,31 @@ USAGE:
                                             the gather (the ablation path)
                      [--chunk-rows N]       rows per intra-shard work chunk
                                             (def. 8192; 0 = never split)
+                     [--epoch N]            open a historical snapshot epoch
+                                            (default: the latest)
+                     [--save-values]        persist the fixpoint (epoch-
+                                            tagged) for incremental restart
+                     [--incremental]        warm-start from saved values;
+                                            monotone (Min/Max) apps with an
+                                            insert-only history re-converge
+                                            from the prior fixpoint, anything
+                                            else falls back to a cold start
+                     [--dump-values <file>] write the result values as text
+                                            (bit-exact, one per line)
                      [--throttle-mbps N]
+  graphmp ingest     --data <dir> --batch <file.gmdl|file.txt>
+                     [--bloom-fpr 0.01]
+                     (apply one mutation batch: `+ src dst [w]` inserts,
+                      `- src dst` tombstone deletes; creates a new epoch —
+                      base shards are never rewritten)
+  graphmp compact    --data <dir> [--min-ratio 0.2] [--all]
+                     (rewrite merged shard files for every shard whose
+                      delta/base edge ratio reaches the threshold; results
+                      are bit-identical, old epochs stay reproducible)
+  graphmp mutate-gen --data <dir> --count <N> --out <file>
+                     [--seed 1] [--delete-fraction 0.2] [--weighted]
+                     (deterministic synthetic batch; deletes aim at live
+                      edges so tombstones actually fire)
   graphmp baseline   --system <psw|esg|dsw|vsp|inmem> --data <edges>
                      --vertices <N> --app <name> [--iters N]
   graphmp bench-compare --baseline <BENCH_baseline.json> --current <BENCH_pr.json>
@@ -235,6 +265,9 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     cfg.prefetch_max = args.get_usize("prefetch-max", EngineConfig::default().prefetch_max)?;
     cfg.stream_gather = !args.has("no-stream-gather");
     cfg.chunk_rows = args.get_usize("chunk-rows", EngineConfig::default().chunk_rows)?;
+    if let Some(e) = args.get("epoch") {
+        cfg.epoch = Some(e.parse().context("--epoch")?);
+    }
     if args.has("no-cache") {
         cfg.cache_budget = 0;
     } else if let Some(c) = args.get("cache") {
@@ -265,16 +298,36 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     let cfg = engine_config(args)?;
     let engine_name = cfg.backend.name();
-    let engine = VswEngine::open(data, cfg)?;
+    let engine = VswEngine::open(data.clone(), cfg)?;
     eprintln!(
-        "loaded {}: |V|={} |E|={} shards={} (load {})",
+        "loaded {}: |V|={} |E|={} shards={} epoch={} (load {})",
         engine.property.name,
         humansize::count(engine.property.info.num_vertices),
         humansize::count(engine.property.info.num_edges),
         engine.property.num_shards(),
+        engine.epoch(),
         humansize::duration(engine.load_wall)
     );
-    let result = engine.run_any(&app)?;
+    let result = if args.has("incremental") {
+        run_incremental(&engine, &app, &data)?
+    } else {
+        engine.run_any(&app)?
+    };
+    if args.has("save-values") {
+        let path = data.values_path(app.name());
+        graphmp::storage::delta::save_values(&path, engine.epoch(), &result.values)?;
+        eprintln!(
+            "saved {} fixpoint at epoch {} -> {}",
+            app.name(),
+            engine.epoch(),
+            path.display()
+        );
+    }
+    if let Some(out) = args.get("dump-values") {
+        std::fs::write(out, render_values(&result.values))
+            .with_context(|| format!("writing {out}"))?;
+        eprintln!("dumped {} values -> {out}", result.values.len());
+    }
     let s = &result.stats;
     println!(
         "app={} lane={} engine={} iters={} total={} rate={} mem={}",
@@ -305,6 +358,174 @@ fn cmd_run(args: &Args) -> Result<()> {
         );
     }
     io::set_throttle(0);
+    Ok(())
+}
+
+/// Bit-exact text rendering of a value array (one line per vertex; float
+/// lanes as IEEE bit patterns) — what `--dump-values` writes, so CI can
+/// `cmp` two runs for exact equality.
+fn render_values(vals: &graphmp::graph::AnyValues) -> String {
+    use graphmp::graph::AnyValues;
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    match vals {
+        AnyValues::F32(v) => {
+            for x in v {
+                let _ = writeln!(s, "{:08x}", x.to_bits());
+            }
+        }
+        AnyValues::F64(v) => {
+            for x in v {
+                let _ = writeln!(s, "{:016x}", x.to_bits());
+            }
+        }
+        AnyValues::U32(v) => {
+            for x in v {
+                let _ = writeln!(s, "{x}");
+            }
+        }
+        AnyValues::U64(v) => {
+            for x in v {
+                let _ = writeln!(s, "{x}");
+            }
+        }
+    }
+    s
+}
+
+/// The `--incremental` decision tree: warm-start from the saved fixpoint
+/// when the app is monotone and the history since the save is insert-only;
+/// otherwise report why and run cold.
+fn run_incremental(
+    engine: &VswEngine,
+    app: &apps::AnyProgram,
+    data: &DatasetDir,
+) -> Result<graphmp::engine::AnyRunResult> {
+    use graphmp::graph::mutation;
+    use graphmp::runtime::EpochManifest;
+    use graphmp::storage::delta;
+    use graphmp::storage::property::Property;
+
+    let path = data.values_path(app.name());
+    anyhow::ensure!(
+        path.exists(),
+        "no saved values for {} ({} missing) — run once with --save-values first",
+        app.name(),
+        path.display()
+    );
+    let (saved_epoch, values) = delta::load_values(&path)?;
+    if !app.reduce().is_monotone() {
+        eprintln!(
+            "incremental: {} reduces with Sum — cold start (only monotone Min/Max apps \
+             can re-converge from a prior fixpoint)",
+            app.name()
+        );
+        return engine.run_any(app);
+    }
+    anyhow::ensure!(
+        saved_epoch <= engine.epoch(),
+        "saved values are from epoch {saved_epoch}, ahead of the opened epoch {}",
+        engine.epoch()
+    );
+    let property = Property::load(&data.property_path())?;
+    let manifest = EpochManifest::load_or_bootstrap(data, &property)?;
+    match mutation::incremental_seed(data, &manifest, saved_epoch, engine.epoch())? {
+        Some(seed) => {
+            eprintln!(
+                "incremental: warm start from epoch {saved_epoch} ({} seed vertices)",
+                seed.len()
+            );
+            engine.run_any_warm(app, values, seed)
+        }
+        None => {
+            eprintln!(
+                "incremental: deletions since epoch {saved_epoch} — cold start (deletes can \
+                 raise Min-lattice values, which warm re-iteration cannot)"
+            );
+            engine.run_any(app)
+        }
+    }
+}
+
+fn cmd_ingest(args: &Args) -> Result<()> {
+    use graphmp::graph::mutation;
+    use graphmp::storage::delta;
+    let data = DatasetDir::new(args.req("data")?);
+    anyhow::ensure!(data.exists(), "{} is not a preprocessed dataset", data.root.display());
+    let batch_path = PathBuf::from(args.req("batch")?);
+    let batch = delta::load_log_auto(&batch_path)
+        .with_context(|| format!("reading mutation batch {}", batch_path.display()))?;
+    let fpr = args.get_f64("bloom-fpr", 0.01)?;
+    let t0 = std::time::Instant::now();
+    let report = mutation::ingest(&data, &batch, fpr)?;
+    let wall = t0.elapsed();
+    let rate = (report.inserts + report.deletes) as f64 / wall.as_secs_f64().max(1e-9);
+    println!(
+        "epoch={} inserts={} deletes={} removed={} touched-shards={} |E|={} in {} ({:.0} mut/s)",
+        report.epoch,
+        report.inserts,
+        report.deletes,
+        report.edges_removed,
+        report.touched_shards.len(),
+        report.num_edges,
+        humansize::duration(wall),
+        rate
+    );
+    Ok(())
+}
+
+fn cmd_compact(args: &Args) -> Result<()> {
+    use graphmp::graph::mutation;
+    let data = DatasetDir::new(args.req("data")?);
+    anyhow::ensure!(data.exists(), "{} is not a preprocessed dataset", data.root.display());
+    let min_ratio = if args.has("all") { 0.0 } else { args.get_f64("min-ratio", 0.2)? };
+    let t0 = std::time::Instant::now();
+    let report = mutation::compact(&data, min_ratio)?;
+    match report.epoch {
+        Some(e) => println!(
+            "epoch={} compacted-shards={} below-threshold={} in {}",
+            e,
+            report.compacted_shards.len(),
+            report.skipped_shards,
+            humansize::duration(t0.elapsed())
+        ),
+        None => println!(
+            "nothing to compact ({} delta shard(s) below ratio {min_ratio})",
+            report.skipped_shards
+        ),
+    }
+    Ok(())
+}
+
+fn cmd_mutate_gen(args: &Args) -> Result<()> {
+    use graphmp::graph::mutation;
+    use graphmp::storage::delta;
+    let data = DatasetDir::new(args.req("data")?);
+    anyhow::ensure!(data.exists(), "{} is not a preprocessed dataset", data.root.display());
+    let out = PathBuf::from(args.req("out")?);
+    let count = args.get_usize("count", 0)?;
+    anyhow::ensure!(count > 0, "--count must be positive");
+    let seed = args.get_usize("seed", 1)? as u64;
+    let delete_fraction = args.get_f64("delete-fraction", 0.2)?;
+    let property = graphmp::storage::property::Property::load(&data.property_path())?;
+    let (existing, _) = mutation::current_edges(&data)?;
+    let batch = mutation::synth_batch(
+        property.info.num_vertices as usize,
+        &existing,
+        count,
+        delete_fraction,
+        args.has("weighted"),
+        seed,
+    );
+    delta::save_log(&batch, &out)?;
+    let ins = batch.iter().filter(|m| m.is_insert()).count();
+    println!(
+        "wrote {} mutations ({} inserts, {} deletes) -> {}",
+        batch.len(),
+        ins,
+        batch.len() - ins,
+        out.display()
+    );
     Ok(())
 }
 
@@ -414,6 +635,14 @@ fn cmd_info(args: &Args) -> Result<()> {
     println!("max in-deg:  {}", p.info.max_in_degree);
     println!("max out-deg: {}", p.info.max_out_degree);
     println!("shards:      {}", p.num_shards());
+    if data.epochs_path().exists() {
+        let m = graphmp::runtime::EpochManifest::load(&data.epochs_path())?;
+        let cur = m.latest();
+        let deltas = cur.shards.iter().filter(|s| s.delta.is_some()).count();
+        println!("epoch:       {} ({} epochs, kind {})", m.current, m.epochs.len(), cur.kind);
+        println!("live edges:  {}", cur.num_edges);
+        println!("delta shards:{deltas}");
+    }
     Ok(())
 }
 

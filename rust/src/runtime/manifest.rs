@@ -1,4 +1,15 @@
-//! `artifacts/manifest.json` parsing + geometry validation.
+//! Manifests: the `artifacts/manifest.json` AOT-artifact table (geometry
+//! validation) and the dataset-side **epoch manifest** (`epochs.json`)
+//! that versions a mutable graph.
+//!
+//! The epoch manifest is the snapshot spine of the dynamic-graph
+//! subsystem: every applied mutation batch (`graphmp ingest`) and every
+//! compaction (`graphmp compact`) appends one immutable [`Epoch`] whose
+//! per-shard file table names exactly which base shard / delta shard /
+//! Bloom filter a reader at that epoch sees.  Files referenced by older
+//! epochs are never rewritten, so any historical epoch reproduces
+//! bit-for-bit; the manifest itself is replaced atomically (tmp + rename)
+//! so a reader always loads a consistent snapshot.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -6,6 +17,8 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use super::geometry::Geometry;
+use crate::storage::property::Property;
+use crate::storage::DatasetDir;
 use crate::util::json::Json;
 
 /// One AOT artifact entry.
@@ -75,6 +88,227 @@ impl Manifest {
     }
 }
 
+// ---- epoch manifest (dynamic-graph snapshots) -------------------------------
+
+/// Manifest entries store file *names* relative to the dataset root; the
+/// names come from [`DatasetDir`]'s path helpers so the on-disk scheme has
+/// one source of truth.
+pub(crate) fn rel_name(path: &Path) -> String {
+    path.file_name()
+        .expect("dataset artifact paths always carry a file name")
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// What one shard looks like at a given epoch: its (possibly compacted)
+/// base shard file, the Bloom filter covering the *merged* sources, and the
+/// resident delta file if the shard has un-compacted mutations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochShard {
+    pub shard: String,
+    pub bloom: String,
+    pub delta: Option<String>,
+    /// Epoch id at which `shard` (the base file) was last rewritten — the
+    /// cache's slot-invalidation key: ingest leaves it unchanged (base
+    /// bytes are untouched, residents stay valid), compaction bumps it.
+    pub shard_epoch: u64,
+}
+
+/// One immutable snapshot of the graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Epoch {
+    pub id: u64,
+    /// `"base"` (preprocessing output), `"ingest"` or `"compact"`.
+    pub kind: String,
+    pub parent: Option<u64>,
+    /// Live edges at this epoch (base − tombstoned + inserted).
+    pub num_edges: u64,
+    /// Vertex-info file carrying this epoch's degree arrays.
+    pub vertexinfo: String,
+    /// Archived mutation log applied by this epoch (`ingest` only).
+    pub batch: Option<String>,
+    pub inserts: u64,
+    pub deletes: u64,
+    pub shards: Vec<EpochShard>,
+}
+
+/// The `epochs.json` snapshot chain of a mutable dataset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochManifest {
+    pub version: i64,
+    /// Epoch readers open by default (always the last entry's id).
+    pub current: u64,
+    pub epochs: Vec<Epoch>,
+}
+
+impl EpochManifest {
+    /// The base epoch of a freshly preprocessed (static) dataset: the
+    /// preprocessing output's standard file names, no deltas.
+    pub fn bootstrap(property: &Property) -> Self {
+        // names only — the rootless DatasetDir is just the naming scheme
+        let names = DatasetDir::new("");
+        let shards = (0..property.num_shards())
+            .map(|i| EpochShard {
+                shard: rel_name(&names.shard_path(i)),
+                bloom: rel_name(&names.bloom_path(i)),
+                delta: None,
+                shard_epoch: 0,
+            })
+            .collect();
+        EpochManifest {
+            version: 1,
+            current: 0,
+            epochs: vec![Epoch {
+                id: 0,
+                kind: "base".into(),
+                parent: None,
+                num_edges: property.info.num_edges,
+                vertexinfo: rel_name(&names.vertexinfo_path()),
+                batch: None,
+                inserts: 0,
+                deletes: 0,
+                shards,
+            }],
+        }
+    }
+
+    /// Load `dir/epochs.json`, or synthesize the base epoch when the
+    /// dataset has never been mutated.
+    pub fn load_or_bootstrap(dir: &DatasetDir, property: &Property) -> Result<Self> {
+        let path = dir.epochs_path();
+        if path.exists() {
+            Self::load(&path)
+        } else {
+            Ok(Self::bootstrap(property))
+        }
+    }
+
+    pub fn latest(&self) -> &Epoch {
+        self.epochs.last().expect("manifest always holds >= 1 epoch")
+    }
+
+    pub fn epoch(&self, id: u64) -> Result<&Epoch> {
+        self.epochs
+            .iter()
+            .find(|e| e.id == id)
+            .with_context(|| format!("epoch {id} not in manifest (current {})", self.current))
+    }
+
+    /// Epochs strictly after `from` up to and including `to`, oldest first.
+    pub fn epochs_between(&self, from: u64, to: u64) -> Vec<&Epoch> {
+        self.epochs.iter().filter(|e| e.id > from && e.id <= to).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let epochs = self
+            .epochs
+            .iter()
+            .map(|e| {
+                let mut m = BTreeMap::new();
+                m.insert("id".into(), Json::Int(e.id as i64));
+                m.insert("kind".into(), Json::Str(e.kind.clone()));
+                if let Some(p) = e.parent {
+                    m.insert("parent".into(), Json::Int(p as i64));
+                }
+                m.insert("num_edges".into(), Json::Int(e.num_edges as i64));
+                m.insert("vertexinfo".into(), Json::Str(e.vertexinfo.clone()));
+                if let Some(b) = &e.batch {
+                    m.insert("batch".into(), Json::Str(b.clone()));
+                }
+                m.insert("inserts".into(), Json::Int(e.inserts as i64));
+                m.insert("deletes".into(), Json::Int(e.deletes as i64));
+                let shards = e
+                    .shards
+                    .iter()
+                    .map(|s| {
+                        let mut sm = BTreeMap::new();
+                        sm.insert("shard".into(), Json::Str(s.shard.clone()));
+                        sm.insert("bloom".into(), Json::Str(s.bloom.clone()));
+                        if let Some(d) = &s.delta {
+                            sm.insert("delta".into(), Json::Str(d.clone()));
+                        }
+                        sm.insert("shard_epoch".into(), Json::Int(s.shard_epoch as i64));
+                        Json::Obj(sm)
+                    })
+                    .collect();
+                m.insert("shards".into(), Json::Arr(shards));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("version".into(), Json::Int(self.version));
+        root.insert("current".into(), Json::Int(self.current as i64));
+        root.insert("epochs".into(), Json::Arr(epochs));
+        Json::Obj(root)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let version = j.req("version")?.as_i64().context("version")?;
+        let current = j.req("current")?.as_i64().context("current")? as u64;
+        let mut epochs = Vec::new();
+        for e in j.req("epochs")?.as_arr().context("epochs must be array")? {
+            let mut shards = Vec::new();
+            for s in e.req("shards")?.as_arr().context("shards must be array")? {
+                shards.push(EpochShard {
+                    shard: s.req("shard")?.as_str().context("shard")?.to_string(),
+                    bloom: s.req("bloom")?.as_str().context("bloom")?.to_string(),
+                    delta: s.get("delta").and_then(|d| d.as_str()).map(String::from),
+                    shard_epoch: s
+                        .get("shard_epoch")
+                        .and_then(Json::as_i64)
+                        .unwrap_or(0) as u64,
+                });
+            }
+            epochs.push(Epoch {
+                id: e.req("id")?.as_i64().context("id")? as u64,
+                kind: e.req("kind")?.as_str().context("kind")?.to_string(),
+                parent: e.get("parent").and_then(Json::as_i64).map(|p| p as u64),
+                num_edges: e.req("num_edges")?.as_i64().context("num_edges")? as u64,
+                vertexinfo: e.req("vertexinfo")?.as_str().context("vertexinfo")?.to_string(),
+                batch: e.get("batch").and_then(|b| b.as_str()).map(String::from),
+                inserts: e.get("inserts").and_then(Json::as_i64).unwrap_or(0) as u64,
+                deletes: e.get("deletes").and_then(Json::as_i64).unwrap_or(0) as u64,
+                shards,
+            });
+        }
+        anyhow::ensure!(!epochs.is_empty(), "epoch manifest holds no epochs");
+        anyhow::ensure!(
+            epochs.windows(2).all(|w| w[0].id < w[1].id),
+            "epoch ids must be increasing"
+        );
+        anyhow::ensure!(
+            epochs.last().unwrap().id == current,
+            "current epoch must be the last entry"
+        );
+        let p = epochs[0].shards.len();
+        anyhow::ensure!(
+            epochs.iter().all(|e| e.shards.len() == p),
+            "epoch shard tables disagree on shard count"
+        );
+        Ok(Self { version, current, epochs })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?)
+    }
+
+    /// Atomically replace `dir/epochs.json`: write to a temp file in the
+    /// same directory, then rename over the old manifest, so a concurrent
+    /// reader sees either the previous snapshot chain or the new one —
+    /// never a torn file.
+    pub fn save(&self, dir: &DatasetDir) -> Result<()> {
+        let path = dir.epochs_path();
+        let tmp = dir.root.join(".epochs.json.tmp");
+        std::fs::write(&tmp, format!("{}\n", self.to_json()))
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,5 +356,80 @@ mod tests {
         std::fs::remove_file(dir.join("pr_shard.hlo.txt")).unwrap();
         assert!(Manifest::load(&dir).is_err());
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    // ---- epoch manifest ----------------------------------------------------
+
+    fn sample_property() -> Property {
+        Property {
+            name: "t".into(),
+            info: crate::graph::GraphInfo {
+                num_vertices: 20,
+                num_edges: 9,
+                max_in_degree: 3,
+                max_out_degree: 3,
+            },
+            intervals: vec![0, 10, 20],
+        }
+    }
+
+    #[test]
+    fn epoch_manifest_bootstrap_and_roundtrip() {
+        let p = sample_property();
+        let mut m = EpochManifest::bootstrap(&p);
+        assert_eq!(m.current, 0);
+        assert_eq!(m.latest().shards.len(), 2);
+        assert_eq!(m.latest().num_edges, 9);
+        // append an ingest epoch touching shard 1
+        let mut e1 = m.latest().clone();
+        e1.id = 1;
+        e1.kind = "ingest".into();
+        e1.parent = Some(0);
+        e1.num_edges = 11;
+        e1.inserts = 2;
+        e1.vertexinfo = "vertexinfo_e0001.bin".into();
+        e1.batch = Some("batch_e0001.gmdl".into());
+        e1.shards[1].delta = Some("delta_0001_e0001.gmd".into());
+        e1.shards[1].bloom = "bloom_0001_e0001.gmb".into();
+        m.epochs.push(e1);
+        m.current = 1;
+        let n = EpochManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, n);
+        assert_eq!(n.epoch(1).unwrap().shards[1].delta.as_deref(), Some("delta_0001_e0001.gmd"));
+        assert!(n.epoch(7).is_err());
+        assert_eq!(n.epochs_between(0, 1).len(), 1);
+        assert!(n.epochs_between(1, 1).is_empty());
+    }
+
+    #[test]
+    fn epoch_manifest_save_is_atomic_and_loadable() {
+        let dir = DatasetDir::new(
+            std::env::temp_dir().join(format!("gmp_epochs_{}", std::process::id())),
+        );
+        dir.create().unwrap();
+        let p = sample_property();
+        let m = EpochManifest::bootstrap(&p);
+        m.save(&dir).unwrap();
+        assert!(dir.epochs_path().exists());
+        assert!(!dir.root.join(".epochs.json.tmp").exists(), "tmp file must be renamed away");
+        assert_eq!(EpochManifest::load(&dir.epochs_path()).unwrap(), m);
+        // load_or_bootstrap prefers the on-disk chain
+        assert_eq!(EpochManifest::load_or_bootstrap(&dir, &p).unwrap(), m);
+        std::fs::remove_dir_all(&dir.root).unwrap();
+    }
+
+    #[test]
+    fn epoch_manifest_rejects_inconsistent_chains() {
+        let p = sample_property();
+        let mut m = EpochManifest::bootstrap(&p);
+        m.current = 3; // current must match the last entry
+        assert!(EpochManifest::from_json(&m.to_json()).is_err());
+        let mut m = EpochManifest::bootstrap(&p);
+        let mut dup = m.latest().clone();
+        dup.shards.pop(); // shard-count drift
+        dup.id = 1;
+        m.epochs.push(dup);
+        m.current = 1;
+        assert!(EpochManifest::from_json(&m.to_json()).is_err());
     }
 }

@@ -15,4 +15,5 @@ mod manifest;
 
 pub use executor::ShardRuntime;
 pub use geometry::Geometry;
-pub use manifest::Manifest;
+pub use manifest::{Epoch, EpochManifest, EpochShard, Manifest};
+pub(crate) use manifest::rel_name;

@@ -145,12 +145,18 @@ pub fn preprocess_weighted(
     Ok(PreprocessOutput { property, shard_edge_counts, bloom_bytes })
 }
 
-/// Load a shard's Bloom filter.
-pub fn load_bloom(dir: &DatasetDir, shard: usize) -> Result<BloomFilter> {
-    let buf = io::read_file(&dir.bloom_path(shard))?;
+/// Load a framed Bloom filter from an arbitrary path (base blooms and the
+/// per-epoch rebuilds of mutated shards share the same `GMBF` framing).
+pub fn load_bloom_file(path: &std::path::Path) -> Result<BloomFilter> {
+    let buf = io::read_file(path)?;
     let (version, payload) = crate::storage::format::unframe(BLOOM_MAGIC, &buf)?;
     anyhow::ensure!(version == BLOOM_VERSION, "bloom version {version}");
     BloomFilter::from_bytes(payload)
+}
+
+/// Load a shard's base Bloom filter.
+pub fn load_bloom(dir: &DatasetDir, shard: usize) -> Result<BloomFilter> {
+    load_bloom_file(&dir.bloom_path(shard))
 }
 
 /// Enforce the kernel-geometry vertex cap by splitting wide intervals.

@@ -1,0 +1,577 @@
+//! Delta storage for dynamic graphs: the `GMDL` mutation log and the
+//! `GMDS` per-interval delta shard.
+//!
+//! GraphMP's preprocessing writes base shards once; this module is what
+//! lets a dataset absorb edge insertions/deletions afterwards without a
+//! full rebuild.  Two on-disk artifacts:
+//!
+//! * **`GMDL` mutation log** — a batch of ordered edge mutations (insert
+//!   with optional weight, delete with tombstone semantics).  `graphmp
+//!   ingest` consumes one and archives it per epoch so incremental restart
+//!   can replay "what changed since".  A 3/4-column text form (`+ s d [w]`
+//!   / `- s d`) is accepted too.
+//! * **`GMDS` delta shard** — the cumulative mutation state of one vertex
+//!   interval relative to its base shard file: inserted edges grouped by
+//!   destination (insertion order preserved within a row) plus a tombstone
+//!   set that kills base edges.  Readers merge base rows with the resident
+//!   delta inside the gather fold (`engine::backend::DeltaRows`), in
+//!   exactly the row order a from-scratch preprocess of the final edge
+//!   list would produce — which is what makes delta-merged execution
+//!   bit-identical to a rebuild.
+//!
+//! Both are framed binary (magic + version + length + CRC32), like every
+//! other GraphMP file.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::csr::Csr;
+use crate::graph::mutation::Mutation;
+use crate::graph::{VertexId, Weight};
+use crate::storage::format::{
+    frame, get_f32s, get_u32, get_u32s, get_u64, put_f32s, put_u32, put_u32s, put_u64, unframe,
+};
+use crate::storage::io;
+
+const LOG_MAGIC: &[u8; 4] = b"GMDL";
+const LOG_VERSION: u32 = 1;
+
+const SHARD_MAGIC: &[u8; 4] = b"GMDS";
+const SHARD_VERSION: u32 = 1;
+
+const VALUES_MAGIC: &[u8; 4] = b"GMVV";
+const VALUES_VERSION: u32 = 1;
+
+// ---- GMDL mutation log ------------------------------------------------------
+
+/// Serialize a mutation batch to framed `GMDL` bytes.
+pub fn log_to_bytes(batch: &[Mutation]) -> Vec<u8> {
+    let mut payload = Vec::with_capacity(8 + batch.len() * 13);
+    put_u64(&mut payload, batch.len() as u64);
+    for m in batch {
+        match *m {
+            Mutation::Insert { src, dst, weight } => {
+                payload.push(0);
+                put_u32(&mut payload, src);
+                put_u32(&mut payload, dst);
+                payload.extend_from_slice(&weight.to_le_bytes());
+            }
+            Mutation::Delete { src, dst } => {
+                payload.push(1);
+                put_u32(&mut payload, src);
+                put_u32(&mut payload, dst);
+                payload.extend_from_slice(&1.0f32.to_le_bytes());
+            }
+        }
+    }
+    frame(LOG_MAGIC, LOG_VERSION, &payload)
+}
+
+/// Parse a framed `GMDL` buffer.
+pub fn log_from_bytes(buf: &[u8]) -> Result<Vec<Mutation>> {
+    let (version, payload) = unframe(LOG_MAGIC, buf)?;
+    anyhow::ensure!(version == LOG_VERSION, "mutation log version {version}");
+    let (n, mut p) = get_u64(payload, 0)?;
+    let n = n as usize;
+    // checked arithmetic: a crafted record count must parse-error, not
+    // wrap the length check and walk past the buffer
+    anyhow::ensure!(
+        n.checked_mul(13).and_then(|b| b.checked_add(8)) == Some(payload.len()),
+        "mutation log length mismatch ({} records declared)",
+        n
+    );
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let op = payload[p];
+        p += 1;
+        let (src, q) = get_u32(payload, p)?;
+        let (dst, q) = get_u32(payload, q)?;
+        let weight = f32::from_le_bytes(payload[q..q + 4].try_into().unwrap());
+        p = q + 4;
+        out.push(match op {
+            0 => Mutation::Insert { src, dst, weight },
+            1 => Mutation::Delete { src, dst },
+            other => bail!("mutation log: unknown op {other}"),
+        });
+    }
+    anyhow::ensure!(p == payload.len(), "mutation log trailing bytes");
+    Ok(out)
+}
+
+/// Write a mutation batch through the accounting layer.
+pub fn save_log(batch: &[Mutation], path: &Path) -> Result<()> {
+    io::write_file(path, &log_to_bytes(batch))
+}
+
+/// Read a binary mutation log.
+pub fn load_log(path: &Path) -> Result<Vec<Mutation>> {
+    log_from_bytes(&io::read_file(path)?)
+}
+
+/// Parse the text mutation form: one mutation per line, `+ src dst
+/// [weight]` inserts (weight defaults to 1) and `- src dst` deletes;
+/// `#`/`%` comments and blank lines are skipped.
+pub fn log_from_text(text: &str) -> Result<Vec<Mutation>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (Some(op), Some(a), Some(b)) = (it.next(), it.next(), it.next()) else {
+            bail!("line {}: expected `+|- src dst [weight]`", lineno + 1);
+        };
+        let src: VertexId = a.parse().with_context(|| format!("line {}: src", lineno + 1))?;
+        let dst: VertexId = b.parse().with_context(|| format!("line {}: dst", lineno + 1))?;
+        match op {
+            "+" => {
+                let weight: Weight = match it.next() {
+                    Some(w) => {
+                        w.parse().with_context(|| format!("line {}: weight", lineno + 1))?
+                    }
+                    None => 1.0,
+                };
+                out.push(Mutation::Insert { src, dst, weight });
+            }
+            "-" => out.push(Mutation::Delete { src, dst }),
+            other => bail!("line {}: unknown op {other:?} (want + or -)", lineno + 1),
+        }
+    }
+    Ok(out)
+}
+
+/// Read a mutation batch, auto-detecting the binary (`GMDL` magic) or text
+/// form.
+pub fn load_log_auto(path: &Path) -> Result<Vec<Mutation>> {
+    let bytes = io::read_file(path)?;
+    if bytes.len() >= 4 && &bytes[0..4] == LOG_MAGIC {
+        log_from_bytes(&bytes)
+    } else {
+        // re-read as text to keep line numbers in errors
+        let r = BufReader::new(File::open(path)?);
+        let mut text = String::new();
+        for line in r.lines() {
+            text.push_str(&line?);
+            text.push('\n');
+        }
+        log_from_text(&text)
+    }
+}
+
+// ---- GMVV saved fixpoint values ---------------------------------------------
+
+/// Persist a run's fixpoint values tagged with the epoch they were computed
+/// at — the warm-start input of incremental restart.
+pub fn save_values(path: &Path, epoch: u64, values: &crate::graph::AnyValues) -> Result<()> {
+    use crate::storage::format::put_any_values;
+    let mut payload = Vec::new();
+    put_u64(&mut payload, epoch);
+    put_any_values(&mut payload, values);
+    io::write_file(path, &frame(VALUES_MAGIC, VALUES_VERSION, &payload))
+}
+
+/// Load saved fixpoint values; returns `(epoch, values)`.
+pub fn load_values(path: &Path) -> Result<(u64, crate::graph::AnyValues)> {
+    use crate::storage::format::get_any_values;
+    let buf = io::read_file(path)?;
+    let (version, payload) = unframe(VALUES_MAGIC, &buf)?;
+    anyhow::ensure!(version == VALUES_VERSION, "saved values version {version}");
+    let (epoch, p) = get_u64(payload, 0)?;
+    let (values, p) = get_any_values(payload, p)?;
+    anyhow::ensure!(p == payload.len(), "saved values trailing bytes");
+    Ok((epoch, values))
+}
+
+// ---- GMDS delta shard -------------------------------------------------------
+
+/// Cumulative mutation state of one vertex interval `[lo, hi)` relative to
+/// its base shard file.
+///
+/// * `ins_*` — inserted edges as a mini-CSR grouped by destination, with
+///   insertion order preserved inside each row (exactly the order a
+///   from-scratch preprocess would append them in).  `ins_wgt` is empty
+///   when every insert is unit-weight *and* the base shard is unweighted.
+/// * `tomb_*` — per-row **sorted** source ids whose base edges are dead: a
+///   tombstone `(s, d)` kills every base edge `(s, d)`, never an insert
+///   (deletes prune the insert list directly at ingest time).
+/// * `dropped_base` — how many base edges the tombstones kill, recorded at
+///   ingest time so readers can report effective edge counts without
+///   rescanning the base shard.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DeltaShard {
+    pub lo: VertexId,
+    pub hi: VertexId,
+    pub ins_row_ptr: Vec<u32>,
+    pub ins_col: Vec<VertexId>,
+    /// Parallel to `ins_col`; empty = all unit weights.
+    pub ins_wgt: Vec<Weight>,
+    pub tomb_row_ptr: Vec<u32>,
+    /// Sorted (ascending, deduplicated) within each row.
+    pub tomb_src: Vec<VertexId>,
+    pub dropped_base: u64,
+}
+
+impl DeltaShard {
+    /// Build from per-row insert/tombstone lists (ingest's working form).
+    /// `tomb_rows` entries need not be sorted; they are normalized here.
+    pub fn from_rows(
+        lo: VertexId,
+        hi: VertexId,
+        ins_rows: &[Vec<(VertexId, Weight)>],
+        tomb_rows: &[Vec<VertexId>],
+        dropped_base: u64,
+        keep_weights: bool,
+    ) -> Self {
+        let rows = (hi - lo) as usize;
+        assert_eq!(ins_rows.len(), rows);
+        assert_eq!(tomb_rows.len(), rows);
+        let mut d = DeltaShard {
+            lo,
+            hi,
+            ins_row_ptr: Vec::with_capacity(rows + 1),
+            ins_col: Vec::new(),
+            ins_wgt: Vec::new(),
+            tomb_row_ptr: Vec::with_capacity(rows + 1),
+            tomb_src: Vec::new(),
+            dropped_base,
+        };
+        d.ins_row_ptr.push(0);
+        d.tomb_row_ptr.push(0);
+        for r in 0..rows {
+            for &(s, w) in &ins_rows[r] {
+                d.ins_col.push(s);
+                if keep_weights {
+                    d.ins_wgt.push(w);
+                }
+            }
+            d.ins_row_ptr.push(d.ins_col.len() as u32);
+            let mut t = tomb_rows[r].clone();
+            t.sort_unstable();
+            t.dedup();
+            d.tomb_src.extend_from_slice(&t);
+            d.tomb_row_ptr.push(d.tomb_src.len() as u32);
+        }
+        d
+    }
+
+    pub fn num_rows(&self) -> usize {
+        (self.hi - self.lo) as usize
+    }
+
+    /// Total inserted edges resident in this delta.
+    pub fn ins_count(&self) -> usize {
+        self.ins_col.len()
+    }
+
+    pub fn num_tombstones(&self) -> usize {
+        self.tomb_src.len()
+    }
+
+    pub fn is_weighted(&self) -> bool {
+        !self.ins_wgt.is_empty()
+    }
+
+    /// Is the delta a no-op (possible after insert-then-delete sequences)?
+    pub fn is_empty(&self) -> bool {
+        self.ins_col.is_empty() && self.tomb_src.is_empty()
+    }
+
+    /// Inserted sources of local row `r`, in insertion order.
+    #[inline]
+    pub fn ins_sources(&self, r: usize) -> &[VertexId] {
+        &self.ins_col[self.ins_row_ptr[r] as usize..self.ins_row_ptr[r + 1] as usize]
+    }
+
+    /// Weight of the `k`-th insert slot (an index into `ins_col`).
+    #[inline]
+    pub fn ins_weight(&self, k: usize) -> Weight {
+        if self.ins_wgt.is_empty() {
+            1.0
+        } else {
+            self.ins_wgt[k]
+        }
+    }
+
+    /// Sorted tombstoned sources of local row `r`.
+    #[inline]
+    pub fn row_tombs(&self, r: usize) -> &[VertexId] {
+        &self.tomb_src[self.tomb_row_ptr[r] as usize..self.tomb_row_ptr[r + 1] as usize]
+    }
+
+    /// Does a tombstone kill base edge `(src, lo + r)`?
+    #[inline]
+    pub fn is_tombstoned(&self, r: usize, src: VertexId) -> bool {
+        self.row_tombs(r).binary_search(&src).is_ok()
+    }
+
+    /// Merge with the base shard into a standalone CSR: per row, base
+    /// survivors in base order followed by the inserts in insertion order —
+    /// the exact row layout `Csr::from_edges_weighted`'s stable counting
+    /// sort produces for the final edge list, so a compacted shard replays
+    /// the merged stream bit-for-bit.
+    pub fn merge(&self, base: &Csr) -> Csr {
+        assert_eq!((base.lo, base.hi), (self.lo, self.hi), "delta/base interval mismatch");
+        let rows = self.num_rows();
+        let weighted = base.is_weighted() || self.is_weighted();
+        let cap = base.num_edges() + self.ins_count();
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col = Vec::with_capacity(cap);
+        let mut wgt = if weighted { Vec::with_capacity(cap) } else { Vec::new() };
+        row_ptr.push(0u32);
+        for r in 0..rows {
+            let (s, e) = (base.row_ptr[r] as usize, base.row_ptr[r + 1] as usize);
+            let tombs = self.row_tombs(r);
+            for k in s..e {
+                let u = base.col[k];
+                if tombs.binary_search(&u).is_ok() {
+                    continue;
+                }
+                col.push(u);
+                if weighted {
+                    wgt.push(base.weight(k));
+                }
+            }
+            let (is_, ie) = (
+                self.ins_row_ptr[r] as usize,
+                self.ins_row_ptr[r + 1] as usize,
+            );
+            for k in is_..ie {
+                col.push(self.ins_col[k]);
+                if weighted {
+                    wgt.push(self.ins_weight(k));
+                }
+            }
+            row_ptr.push(col.len() as u32);
+        }
+        Csr { lo: self.lo, hi: self.hi, row_ptr, col, wgt }
+    }
+
+    /// Effective edge count of the merged shard given the base edge count.
+    pub fn effective_edges(&self, base_edges: u64) -> u64 {
+        base_edges.saturating_sub(self.dropped_base) + self.ins_count() as u64
+    }
+
+    /// Approximate resident memory of the decoded delta (Fig 11 honesty:
+    /// the engine keeps every delta shard in memory).
+    pub fn resident_bytes(&self) -> usize {
+        (self.ins_row_ptr.len()
+            + self.tomb_row_ptr.len()
+            + self.ins_col.len()
+            + self.tomb_src.len()
+            + self.ins_wgt.len())
+            * 4
+            + 8
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut payload = Vec::new();
+        put_u32(&mut payload, self.lo);
+        put_u32(&mut payload, self.hi);
+        put_u32s(&mut payload, &self.ins_row_ptr);
+        put_u32s(&mut payload, &self.ins_col);
+        put_f32s(&mut payload, &self.ins_wgt);
+        put_u32s(&mut payload, &self.tomb_row_ptr);
+        put_u32s(&mut payload, &self.tomb_src);
+        put_u64(&mut payload, self.dropped_base);
+        frame(SHARD_MAGIC, SHARD_VERSION, &payload)
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<Self> {
+        let (version, payload) = unframe(SHARD_MAGIC, buf)?;
+        anyhow::ensure!(version == SHARD_VERSION, "delta shard version {version}");
+        let (lo, p) = get_u32(payload, 0)?;
+        let (hi, p) = get_u32(payload, p)?;
+        anyhow::ensure!(lo < hi, "delta shard interval empty [{lo},{hi})");
+        let rows = (hi - lo) as usize;
+        let (ins_row_ptr, p) = get_u32s(payload, p)?;
+        let (ins_col, p) = get_u32s(payload, p)?;
+        let (ins_wgt, p) = get_f32s(payload, p)?;
+        let (tomb_row_ptr, p) = get_u32s(payload, p)?;
+        let (tomb_src, p) = get_u32s(payload, p)?;
+        let (dropped_base, p) = get_u64(payload, p)?;
+        anyhow::ensure!(p == payload.len(), "delta shard trailing bytes");
+        let d = DeltaShard {
+            lo,
+            hi,
+            ins_row_ptr,
+            ins_col,
+            ins_wgt,
+            tomb_row_ptr,
+            tomb_src,
+            dropped_base,
+        };
+        d.validate(rows)?;
+        Ok(d)
+    }
+
+    fn validate(&self, rows: usize) -> Result<()> {
+        let check_ptrs = |ptr: &[u32], len: usize, what: &str| -> Result<()> {
+            anyhow::ensure!(ptr.len() == rows + 1, "{what} row_ptr length");
+            anyhow::ensure!(ptr[0] == 0, "{what} row_ptr[0]");
+            anyhow::ensure!(ptr[rows] as usize == len, "{what} row_ptr tail");
+            anyhow::ensure!(ptr.windows(2).all(|w| w[0] <= w[1]), "{what} row_ptr monotone");
+            Ok(())
+        };
+        check_ptrs(&self.ins_row_ptr, self.ins_col.len(), "insert")?;
+        check_ptrs(&self.tomb_row_ptr, self.tomb_src.len(), "tombstone")?;
+        anyhow::ensure!(
+            self.ins_wgt.is_empty() || self.ins_wgt.len() == self.ins_col.len(),
+            "insert weight lane length"
+        );
+        for r in 0..rows {
+            let t = self.row_tombs(r);
+            anyhow::ensure!(t.windows(2).all(|w| w[0] < w[1]), "tombstones not sorted/unique");
+        }
+        Ok(())
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        io::write_file(path, &self.to_bytes())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_bytes(&io::read_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_batch() -> Vec<Mutation> {
+        vec![
+            Mutation::Insert { src: 3, dst: 11, weight: 0.5 },
+            Mutation::Delete { src: 1, dst: 10 },
+            Mutation::Insert { src: 0, dst: 12, weight: 1.0 },
+        ]
+    }
+
+    #[test]
+    fn log_roundtrips() {
+        let b = sample_batch();
+        assert_eq!(log_from_bytes(&log_to_bytes(&b)).unwrap(), b);
+        assert_eq!(log_from_bytes(&log_to_bytes(&[])).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn log_rejects_corruption_and_truncation() {
+        let bytes = log_to_bytes(&sample_batch());
+        for cut in [0, 5, bytes.len() - 1] {
+            assert!(log_from_bytes(&bytes[..cut]).is_err());
+        }
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        assert!(log_from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn text_form_parses_and_rejects() {
+        let got = log_from_text("# comment\n+ 3 11 0.5\n- 1 10\n+ 0 12\n").unwrap();
+        assert_eq!(got, sample_batch());
+        assert!(log_from_text("* 1 2\n").is_err());
+        assert!(log_from_text("+ 1\n").is_err());
+        assert!(log_from_text("+ 1 x\n").is_err());
+    }
+
+    #[test]
+    fn auto_detects_binary_and_text() {
+        let dir = std::env::temp_dir().join(format!("gmp_delta_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bp = dir.join("b.gmdl");
+        save_log(&sample_batch(), &bp).unwrap();
+        assert_eq!(load_log_auto(&bp).unwrap(), sample_batch());
+        let tp = dir.join("t.txt");
+        std::fs::write(&tp, "+ 3 11 0.5\n- 1 10\n+ 0 12\n").unwrap();
+        assert_eq!(load_log_auto(&tp).unwrap(), sample_batch());
+    }
+
+    fn sample_delta() -> DeltaShard {
+        // interval [10, 13): row 0 inserts (5,2.0) then (7,0.25); row 1
+        // tombstones {1, 4}; row 2 both
+        DeltaShard::from_rows(
+            10,
+            13,
+            &[vec![(5, 2.0), (7, 0.25)], vec![], vec![(9, 1.5)]],
+            &[vec![], vec![4, 1], vec![2]],
+            3,
+            true,
+        )
+    }
+
+    #[test]
+    fn delta_shard_roundtrips_and_validates() {
+        let d = sample_delta();
+        let e = DeltaShard::from_bytes(&d.to_bytes()).unwrap();
+        assert_eq!(d, e);
+        assert_eq!(e.ins_count(), 3);
+        assert_eq!(e.num_tombstones(), 3);
+        assert_eq!(e.ins_sources(0), &[5, 7]);
+        assert_eq!(e.row_tombs(1), &[1, 4], "tombstones normalized sorted");
+        assert!(e.is_tombstoned(1, 4) && !e.is_tombstoned(1, 5));
+        assert_eq!(e.effective_edges(10), 10 - 3 + 3);
+
+        let bytes = d.to_bytes();
+        for cut in [0, 7, bytes.len() - 1] {
+            assert!(DeltaShard::from_bytes(&bytes[..cut]).is_err());
+        }
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x01;
+        assert!(DeltaShard::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn merge_preserves_base_order_filters_tombs_appends_inserts() {
+        // base [10,13): row10 <- {1,2}, row11 <- {1,4,6}, row12 <- {2}
+        let base = Csr::from_edges(
+            10,
+            13,
+            &[(1, 10), (2, 10), (1, 11), (4, 11), (6, 11), (2, 12)],
+        );
+        let d = sample_delta();
+        let m = d.merge(&base);
+        assert_eq!(m.in_neighbors(10), &[1, 2, 5, 7]);
+        assert_eq!(m.in_neighbors(11), &[6], "tombstoned sources dropped");
+        assert_eq!(m.in_neighbors(12), &[9]);
+        assert!(m.is_weighted());
+        // base edges carry unit weight, inserts their own
+        assert_eq!(m.in_weights(10), &[1.0, 1.0, 2.0, 0.25]);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn saved_values_roundtrip_with_epoch_tag() {
+        use crate::graph::AnyValues;
+        let dir = std::env::temp_dir().join(format!("gmp_gmvv_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("values_wcc.gmv");
+        let vals = AnyValues::F32(vec![0.5, f32::INFINITY, -1.0]);
+        save_values(&p, 3, &vals).unwrap();
+        let (epoch, got) = load_values(&p).unwrap();
+        assert_eq!(epoch, 3);
+        assert_eq!(got, vals);
+        // u64 lane too
+        save_values(&p, 9, &AnyValues::U64(vec![1, u64::MAX])).unwrap();
+        let (epoch, got) = load_values(&p).unwrap();
+        assert_eq!((epoch, got), (9, AnyValues::U64(vec![1, u64::MAX])));
+        let mut bad = std::fs::read(&p).unwrap();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x08;
+        std::fs::write(&p, &bad).unwrap();
+        assert!(load_values(&p).is_err());
+    }
+
+    #[test]
+    fn unweighted_delta_on_unweighted_base_stays_unweighted() {
+        let base = Csr::from_edges(0, 2, &[(1, 0)]);
+        let d = DeltaShard::from_rows(0, 2, &[vec![(3, 1.0)], vec![]], &[vec![], vec![]], 0, false);
+        let m = d.merge(&base);
+        assert!(!m.is_weighted());
+        assert_eq!(m.in_neighbors(0), &[1, 3]);
+    }
+}

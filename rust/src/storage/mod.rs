@@ -11,6 +11,7 @@
 //! HDD bandwidth so that disk-era cost ratios are reproducible on a
 //! container whose page cache would otherwise hide them.
 
+pub mod delta;
 pub mod format;
 pub mod io;
 pub mod prefetch;
@@ -47,6 +48,44 @@ impl DatasetDir {
         self.root.join(format!("bloom_{i:04}.gmb"))
     }
 
+    // -- dynamic-graph (epoch) artifacts ---------------------------------
+
+    /// The epoch manifest (`runtime::EpochManifest`); absent on a dataset
+    /// that has never been mutated.
+    pub fn epochs_path(&self) -> PathBuf {
+        self.root.join("epochs.json")
+    }
+
+    /// Shard `i`'s cumulative delta state as of epoch `e`.
+    pub fn delta_path(&self, i: usize, e: u64) -> PathBuf {
+        self.root.join(format!("delta_{i:04}_e{e:04}.gmd"))
+    }
+
+    /// Shard `i`'s Bloom filter rebuilt at epoch `e`.
+    pub fn epoch_bloom_path(&self, i: usize, e: u64) -> PathBuf {
+        self.root.join(format!("bloom_{i:04}_e{e:04}.gmb"))
+    }
+
+    /// Shard `i`'s merged (compacted) base file written at epoch `e`.
+    pub fn epoch_shard_path(&self, i: usize, e: u64) -> PathBuf {
+        self.root.join(format!("shard_{i:04}_e{e:04}.gms"))
+    }
+
+    /// Degree arrays as of epoch `e`.
+    pub fn epoch_vertexinfo_path(&self, e: u64) -> PathBuf {
+        self.root.join(format!("vertexinfo_e{e:04}.bin"))
+    }
+
+    /// The archived mutation log epoch `e` applied.
+    pub fn batch_path(&self, e: u64) -> PathBuf {
+        self.root.join(format!("batch_e{e:04}.gmdl"))
+    }
+
+    /// Saved fixpoint values of `app` (for incremental restart).
+    pub fn values_path(&self, app: &str) -> PathBuf {
+        self.root.join(format!("values_{app}.gmv"))
+    }
+
     pub fn exists(&self) -> bool {
         self.property_path().exists()
     }
@@ -67,5 +106,12 @@ mod tests {
         assert!(d.shard_path(3).ends_with("shard_0003.gms"));
         assert!(d.bloom_path(12).ends_with("bloom_0012.gmb"));
         assert!(d.property_path().ends_with("property.json"));
+        assert!(d.epochs_path().ends_with("epochs.json"));
+        assert!(d.delta_path(3, 2).ends_with("delta_0003_e0002.gmd"));
+        assert!(d.epoch_bloom_path(1, 2).ends_with("bloom_0001_e0002.gmb"));
+        assert!(d.epoch_shard_path(0, 5).ends_with("shard_0000_e0005.gms"));
+        assert!(d.epoch_vertexinfo_path(9).ends_with("vertexinfo_e0009.bin"));
+        assert!(d.batch_path(4).ends_with("batch_e0004.gmdl"));
+        assert!(d.values_path("wcc").ends_with("values_wcc.gmv"));
     }
 }

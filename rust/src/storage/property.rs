@@ -30,6 +30,16 @@ impl Property {
         (self.intervals[shard], self.intervals[shard + 1])
     }
 
+    /// Which shard's interval contains vertex `v` (binary search over the
+    /// boundary array; `v` must be `< num_vertices`).
+    pub fn shard_of(&self, v: VertexId) -> usize {
+        debug_assert!((v as u64) < self.info.num_vertices);
+        match self.intervals.binary_search(&v) {
+            Ok(i) => i.min(self.num_shards() - 1),
+            Err(i) => i - 1,
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         use std::collections::BTreeMap;
         let mut m = BTreeMap::new();
@@ -106,6 +116,15 @@ mod tests {
         assert_eq!(p, q);
         assert_eq!(q.num_shards(), 2);
         assert_eq!(q.interval(1), (40, 100));
+    }
+
+    #[test]
+    fn shard_of_maps_boundaries_correctly() {
+        let p = sample();
+        assert_eq!(p.shard_of(0), 0);
+        assert_eq!(p.shard_of(39), 0);
+        assert_eq!(p.shard_of(40), 1);
+        assert_eq!(p.shard_of(99), 1);
     }
 
     #[test]

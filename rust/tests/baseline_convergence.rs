@@ -127,3 +127,62 @@ fn io_ordering_matches_table2_shape() {
     let run = engine.run(&app).unwrap();
     assert_eq!(run.stats.iters[1].io.bytes_read, 0, "VSW cached should read 0");
 }
+
+/// The governor's hottest-first idea extended to the baselines (ROADMAP
+/// "fair adaptive comparisons" item): enabling heat-ordered read-ahead
+/// must be bit-invisible in every engine's results — it only reorders
+/// which independent chunk is streamed first.
+#[test]
+fn adaptive_order_is_bit_invisible_in_every_baseline() {
+    let e = edges();
+    let apps: Vec<Box<dyn VertexProgram>> = vec![
+        Box::new(PageRank::default()),
+        Box::new(Sssp { source: 0 }),
+        Box::new(Wcc),
+    ];
+    for app in &apps {
+        // PSW
+        let mut a = PswEngine::new(baseline_dir("psw_ao"));
+        a.prepare(&e, N).unwrap();
+        let base = a.run(app.as_ref(), 8).unwrap();
+        let mut b = PswEngine::new(baseline_dir("psw_ao"));
+        b.set_adaptive_order(true);
+        b.prepare(&e, N).unwrap();
+        let hot = b.run(app.as_ref(), 8).unwrap();
+        assert_eq!(base.values, hot.values, "psw {}", app.name());
+        assert_eq!(base.io.bytes_read, hot.io.bytes_read, "psw bytes {}", app.name());
+
+        // ESG (gather phase reorders; scatter order is the fold order)
+        let mut a = EsgEngine::new(baseline_dir("esg_ao"));
+        a.prepare(&e, N).unwrap();
+        let base = a.run(app.as_ref(), 8).unwrap();
+        let mut b = EsgEngine::new(baseline_dir("esg_ao"));
+        b.set_adaptive_order(true);
+        b.prepare(&e, N).unwrap();
+        let hot = b.run(app.as_ref(), 8).unwrap();
+        assert_eq!(base.values, hot.values, "esg {}", app.name());
+        assert_eq!(base.io.bytes_read, hot.io.bytes_read, "esg bytes {}", app.name());
+
+        // DSW (column order moves, block-row fold order does not)
+        let mut a = DswEngine::new(baseline_dir("dsw_ao"));
+        a.prepare(&e, N).unwrap();
+        let base = a.run(app.as_ref(), 8).unwrap();
+        let mut b = DswEngine::new(baseline_dir("dsw_ao"));
+        b.set_adaptive_order(true);
+        b.prepare(&e, N).unwrap();
+        let hot = b.run(app.as_ref(), 8).unwrap();
+        assert_eq!(base.values, hot.values, "dsw {}", app.name());
+        assert_eq!(base.io.bytes_read, hot.io.bytes_read, "dsw bytes {}", app.name());
+
+        // VSP
+        let mut a = VspEngine::new(baseline_dir("vsp_ao"));
+        a.prepare(&e, N).unwrap();
+        let base = a.run(app.as_ref(), 8).unwrap();
+        let mut b = VspEngine::new(baseline_dir("vsp_ao"));
+        b.set_adaptive_order(true);
+        b.prepare(&e, N).unwrap();
+        let hot = b.run(app.as_ref(), 8).unwrap();
+        assert_eq!(base.values, hot.values, "vsp {}", app.name());
+        assert_eq!(base.io.bytes_read, hot.io.bytes_read, "vsp bytes {}", app.name());
+    }
+}

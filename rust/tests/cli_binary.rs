@@ -20,9 +20,103 @@ fn help_lists_subcommands() {
     let out = bin().output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["generate", "preprocess", "run", "baseline", "info", "datasets"] {
+    for cmd in [
+        "generate",
+        "preprocess",
+        "run",
+        "baseline",
+        "info",
+        "datasets",
+        "ingest",
+        "compact",
+        "mutate-gen",
+    ] {
         assert!(text.contains(cmd), "help missing {cmd}");
     }
+}
+
+#[test]
+fn mutation_flow_ingest_incremental_compact() {
+    let d = workdir().join("mutflow");
+    std::fs::create_dir_all(&d).unwrap();
+    let edges = d.join("edges.bin");
+    let data = d.join("data.gmp");
+    let _ = std::fs::remove_dir_all(&data);
+    let run_ok = |args: &mut Command| {
+        let out = args.output().unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        out
+    };
+    run_ok(bin().args(["generate", "--dataset", "tiny", "--out"]).arg(&edges));
+    run_ok(bin().args(["preprocess", "--input"]).arg(&edges).args(["--out"]).arg(&data));
+
+    // batch 1: inserts + tombstone deletes, from the text form
+    let b1 = d.join("b1.txt");
+    std::fs::write(&b1, "+ 3 7\n+ 9 7\n- 3 7\n+ 1 2\n").unwrap();
+    let out = run_ok(bin().args(["ingest", "--data"]).arg(&data).args(["--batch"]).arg(&b1));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("epoch=1"), "{text}");
+
+    // run + save the fixpoint, dump values
+    let v1 = d.join("v1.txt");
+    run_ok(
+        bin()
+            .args(["run", "--data"])
+            .arg(&data)
+            .args(["--app", "wcc", "--save-values", "--dump-values"])
+            .arg(&v1),
+    );
+
+    // batch 2: insert-only (synthetic), then incremental vs cold agree
+    let b2 = d.join("b2.gmdl");
+    run_ok(
+        bin()
+            .args(["mutate-gen", "--data"])
+            .arg(&data)
+            .args(["--count", "100", "--seed", "3", "--delete-fraction", "0", "--out"])
+            .arg(&b2),
+    );
+    run_ok(bin().args(["ingest", "--data"]).arg(&data).args(["--batch"]).arg(&b2));
+    let warm = d.join("warm.txt");
+    let cold = d.join("cold.txt");
+    let out = run_ok(
+        bin()
+            .args(["run", "--data"])
+            .arg(&data)
+            .args(["--app", "wcc", "--incremental", "--dump-values"])
+            .arg(&warm),
+    );
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("warm start"),
+        "incremental run must report the warm path"
+    );
+    run_ok(
+        bin()
+            .args(["run", "--data"])
+            .arg(&data)
+            .args(["--app", "wcc", "--dump-values"])
+            .arg(&cold),
+    );
+    assert_eq!(
+        std::fs::read(&warm).unwrap(),
+        std::fs::read(&cold).unwrap(),
+        "incremental and cold dumps must be byte-identical"
+    );
+
+    // compact all, results unchanged; info reports the epoch chain
+    run_ok(bin().args(["compact", "--data"]).arg(&data).args(["--all"]));
+    let after = d.join("after.txt");
+    run_ok(
+        bin()
+            .args(["run", "--data"])
+            .arg(&data)
+            .args(["--app", "wcc", "--dump-values"])
+            .arg(&after),
+    );
+    assert_eq!(std::fs::read(&cold).unwrap(), std::fs::read(&after).unwrap());
+    let out = run_ok(bin().args(["info", "--data"]).arg(&data));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("epoch:"), "{text}");
 }
 
 #[test]

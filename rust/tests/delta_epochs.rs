@@ -1,0 +1,302 @@
+//! The dynamic-graph subsystem's acceptance bar.
+//!
+//! * **Delta ≡ rebuild, bit for bit** — a base dataset + N random
+//!   insert/delete batches (+ optional compaction) must execute exactly
+//!   like a from-scratch preprocess of the final edge list, on every value
+//!   lane, weighted and unweighted, with selective scheduling, threading
+//!   and prefetch all enabled.  This holds by construction (per-row edge
+//!   order: base survivors in base order, then inserts in insertion order
+//!   — the same sequence the stable counting sort produces) and is locked
+//!   in here.
+//! * **Incremental ≡ cold** — after insert-only batches, every monotone
+//!   (Min/Max) app warm-started from the previous epoch's fixpoint with
+//!   the inserted edges' sources as the active seed must land on the same
+//!   fixpoint as a cold start, in no more iterations.
+//!
+//! Delta-varint is covered on the monotone lanes (min/max folds are
+//! order-independent); on float-Sum lanes the dv codec's row-order
+//! normalization composes differently with resident inserts than with a
+//! rebuilt shard, so Sum equality is asserted on the order-preserving
+//! codecs (None/SnapLite) — the same carve-out the cross-engine matrix
+//! makes for ESG/DSW float-Sum reorders.
+
+use graphmp::apps::{LabelProp, MaxDeg, PageRank, SpMv64, Sssp, VertexProgram, Wcc, WeightedSssp};
+use graphmp::cache::Codec;
+use graphmp::engine::{EngineConfig, VswEngine, WarmStart};
+use graphmp::graph::generator;
+use graphmp::graph::mutation::{self, Mutation};
+use graphmp::runtime::EpochManifest;
+use graphmp::sharding::{preprocess_weighted, PreprocessConfig};
+use graphmp::storage::property::Property;
+use graphmp::storage::DatasetDir;
+use graphmp::util::prop;
+
+fn tmpdir(tag: &str) -> DatasetDir {
+    let d = std::env::temp_dir().join(format!("gmp_de_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    DatasetDir::new(d)
+}
+
+fn build(
+    tag: &str,
+    edges: &[(u32, u32)],
+    weights: &[f32],
+    n: usize,
+    cap: usize,
+) -> DatasetDir {
+    let dir = tmpdir(tag);
+    let cfg = PreprocessConfig { max_edges_per_shard: cap, bloom_fpr: 0.01 };
+    preprocess_weighted(tag, edges, weights, n, &dir, &cfg).unwrap();
+    dir
+}
+
+fn engine(dir: &DatasetDir, codec: Codec) -> VswEngine {
+    VswEngine::open(
+        dir.clone(),
+        EngineConfig {
+            threads: 3,
+            // well past any test graph's diameter, so fixpoint apps truly
+            // converge (warm-vs-cold equality needs real fixpoints)
+            max_iters: 200,
+            cache_codec: codec,
+            prefetch_depth: 2,
+            selective: true,
+            selective_threshold: 0.05,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+fn bits_f32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn bits_f64(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Run every lane on both engines and demand bit equality (`sum_lanes`
+/// gates the float-Sum apps for codecs that reorder rows).
+fn assert_engines_bit_identical(a: &VswEngine, b: &VswEngine, sum_lanes: bool, what: &str) {
+    // Min lanes: f32 unweighted + weighted, u64, u32
+    let x = a.run(&Sssp { source: 0 }).unwrap().values;
+    let y = b.run(&Sssp { source: 0 }).unwrap().values;
+    assert_eq!(bits_f32(&x), bits_f32(&y), "{what}: sssp");
+    let x = a.run(&Wcc).unwrap().values;
+    let y = b.run(&Wcc).unwrap().values;
+    assert_eq!(bits_f32(&x), bits_f32(&y), "{what}: wcc");
+    let x = a.run(&WeightedSssp { source: 0 }).unwrap().values;
+    let y = b.run(&WeightedSssp { source: 0 }).unwrap().values;
+    assert_eq!(bits_f32(&x), bits_f32(&y), "{what}: wsssp");
+    let lp: &dyn VertexProgram<u64> = &LabelProp;
+    assert_eq!(a.run(lp).unwrap().values, b.run(lp).unwrap().values, "{what}: labelprop");
+    let md: &dyn VertexProgram<u32> = &MaxDeg;
+    assert_eq!(a.run(md).unwrap().values, b.run(md).unwrap().values, "{what}: maxdeg");
+    if sum_lanes {
+        let x = a.run(&PageRank::default()).unwrap().values;
+        let y = b.run(&PageRank::default()).unwrap().values;
+        assert_eq!(bits_f32(&x), bits_f32(&y), "{what}: pagerank");
+        let sp: &dyn VertexProgram<f64> = &SpMv64::default();
+        let x = a.run(sp).unwrap().values;
+        let y = b.run(sp).unwrap().values;
+        assert_eq!(bits_f64(&x), bits_f64(&y), "{what}: spmv64");
+    }
+}
+
+#[test]
+fn prop_delta_merged_and_compacted_execution_equal_from_scratch_rebuild() {
+    prop::check(0xDE17A, 6, |g| {
+        let n = g.usize_in(24, 120);
+        let m = g.usize_in(20, 400);
+        let base_edges = g.edges(n, m);
+        let weighted = g.bool(0.5);
+        let base_weights: Vec<f32> = if weighted {
+            (0..m).map(|_| (g.usize_in(1, 9) as f32) * 0.25).collect()
+        } else {
+            Vec::new()
+        };
+        let cap = g.usize_in(16, 128);
+        let tag = format!("p{}", g.case_seed);
+        let dir = build(&tag, &base_edges, &base_weights, n, cap);
+
+        // N random batches, deletes aimed at live edges
+        let mut final_edges = base_edges.clone();
+        let mut final_weights = base_weights.clone();
+        let num_batches = g.usize_in(1, 4);
+        for b in 0..num_batches {
+            let count = g.usize_in(1, 40);
+            let batch = mutation::synth_batch(
+                n,
+                &final_edges,
+                count,
+                0.35,
+                weighted,
+                g.case_seed ^ (b as u64 + 1),
+            );
+            mutation::apply_batch(&mut final_edges, &mut final_weights, &batch).unwrap();
+            mutation::ingest(&dir, &batch, 0.01).unwrap();
+        }
+        // optional (possibly partial) compaction
+        if g.bool(0.5) {
+            let ratio = if g.bool(0.5) { 0.0 } else { 0.3 };
+            mutation::compact(&dir, ratio).unwrap();
+        }
+
+        // from-scratch preprocess of the final edge list
+        let rebuilt = build(&format!("{tag}_rb"), &final_edges, &final_weights, n, cap);
+
+        // order-preserving codecs: every lane must match bit for bit
+        for codec in [Codec::None, Codec::SnapLite] {
+            let a = engine(&dir, codec);
+            let b = engine(&rebuilt, codec);
+            assert_engines_bit_identical(&a, &b, true, &format!("codec {}", codec.name()));
+        }
+        // delta-varint: monotone lanes (order-independent folds)
+        let a = engine(&dir, Codec::DeltaVarint);
+        let b = engine(&rebuilt, Codec::DeltaVarint);
+        assert_engines_bit_identical(&a, &b, false, "codec delta-varint");
+
+        let _ = std::fs::remove_dir_all(&dir.root);
+        let _ = std::fs::remove_dir_all(&rebuilt.root);
+    });
+}
+
+#[test]
+fn prop_incremental_restart_equals_cold_start_on_monotone_apps() {
+    prop::check(0x1C4E, 6, |g| {
+        let n = g.usize_in(32, 160);
+        let m = g.usize_in(30, 500);
+        let base_edges = g.edges(n, m);
+        let weighted = g.bool(0.5);
+        let base_weights: Vec<f32> = if weighted {
+            (0..m).map(|_| (g.usize_in(1, 9) as f32) * 0.25).collect()
+        } else {
+            Vec::new()
+        };
+        let tag = format!("w{}", g.case_seed);
+        let dir = build(&tag, &base_edges, &base_weights, n, 64);
+
+        // fixpoints at the base epoch
+        let e0 = engine(&dir, Codec::SnapLite);
+        let sssp0 = e0.run(&Sssp { source: 0 }).unwrap();
+        let wcc0 = e0.run(&Wcc).unwrap();
+        let wsssp0 = e0.run(&WeightedSssp { source: 0 }).unwrap();
+        let lp: &dyn VertexProgram<u64> = &LabelProp;
+        let lp0 = e0.run(lp).unwrap();
+        let md: &dyn VertexProgram<u32> = &MaxDeg;
+        let md0 = e0.run(md).unwrap();
+        drop(e0);
+
+        // insert-only history across a couple of epochs
+        for b in 0..g.usize_in(1, 3) {
+            let batch = mutation::synth_batch(
+                n,
+                &[],
+                g.usize_in(1, 30),
+                0.0,
+                weighted,
+                g.case_seed ^ (0x100 + b as u64),
+            );
+            assert!(batch.iter().all(|mu| mu.is_insert()));
+            mutation::ingest(&dir, &batch, 0.01).unwrap();
+        }
+
+        let e1 = engine(&dir, Codec::SnapLite);
+        let property = Property::load(&dir.property_path()).unwrap();
+        let manifest = EpochManifest::load_or_bootstrap(&dir, &property).unwrap();
+        let seed = mutation::incremental_seed(&dir, &manifest, 0, e1.epoch())
+            .unwrap()
+            .expect("insert-only history is always eligible");
+
+        // every monotone lane: warm == cold, in no more iterations
+        macro_rules! check_warm {
+            ($app:expr, $fix:expr, $label:literal) => {{
+                let cold = e1.run($app).unwrap();
+                let warm = e1
+                    .run_seeded(
+                        $app,
+                        Some(WarmStart { values: $fix.values.clone(), active: seed.clone() }),
+                    )
+                    .unwrap();
+                assert_eq!(warm.values, cold.values, concat!($label, ": warm != cold"));
+                assert!(
+                    warm.stats.num_iters() <= cold.stats.num_iters(),
+                    concat!($label, ": warm iterated more than cold")
+                );
+            }};
+        }
+        check_warm!(&Sssp { source: 0 }, sssp0, "sssp");
+        check_warm!(&Wcc, wcc0, "wcc");
+        check_warm!(&WeightedSssp { source: 0 }, wsssp0, "wsssp");
+        check_warm!(lp, lp0, "labelprop");
+        check_warm!(md, md0, "maxdeg");
+
+        let _ = std::fs::remove_dir_all(&dir.root);
+    });
+}
+
+#[test]
+fn deletions_force_cold_start_and_still_converge_correctly() {
+    // deleting an edge can *raise* Min-lattice values: the subsystem must
+    // refuse the warm path and the cold re-run must match a rebuild
+    let n = 64;
+    let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|v| (v, v + 1)).collect();
+    let dir = build("delpath", &edges, &[], n, 32);
+    let e0 = engine(&dir, Codec::SnapLite);
+    let before = e0.run(&Sssp { source: 0 }).unwrap();
+    assert_eq!(before.values[n - 1], (n - 1) as f32);
+    drop(e0);
+
+    // cut the path in the middle
+    let batch = vec![Mutation::Delete { src: 31, dst: 32 }];
+    mutation::ingest(&dir, &batch, 0.01).unwrap();
+    let property = Property::load(&dir.property_path()).unwrap();
+    let manifest = EpochManifest::load_or_bootstrap(&dir, &property).unwrap();
+    assert_eq!(
+        mutation::incremental_seed(&dir, &manifest, 0, 1).unwrap(),
+        None,
+        "a delete must veto the warm path"
+    );
+
+    let e1 = engine(&dir, Codec::SnapLite);
+    let after = e1.run(&Sssp { source: 0 }).unwrap();
+    assert!(after.values[40].is_infinite(), "the far side must become unreachable");
+    assert_eq!(after.values[31], 31.0, "the near side keeps its distances");
+
+    let mut final_edges = edges.clone();
+    let mut w = Vec::new();
+    mutation::apply_batch(&mut final_edges, &mut w, &batch).unwrap();
+    let rebuilt = build("delpath_rb", &final_edges, &[], n, 32);
+    let want = engine(&rebuilt, Codec::SnapLite).run(&Sssp { source: 0 }).unwrap();
+    assert_eq!(bits_f32(&after.values), bits_f32(&want.values));
+}
+
+#[test]
+fn historical_epochs_stay_reproducible_after_mutations_and_compaction() {
+    let edges = generator::erdos_renyi(96, 600, 77);
+    let dir = build("hist", &edges, &[], 96, 64);
+    let base = engine(&dir, Codec::SnapLite).run(&Wcc).unwrap();
+
+    let b1 = mutation::synth_batch(96, &edges, 50, 0.3, false, 5);
+    mutation::ingest(&dir, &b1, 0.01).unwrap();
+    let at1 = engine(&dir, Codec::SnapLite).run(&Wcc).unwrap();
+    let b2 = mutation::synth_batch(96, &[], 30, 0.0, false, 6);
+    mutation::ingest(&dir, &b2, 0.01).unwrap();
+    mutation::compact(&dir, 0.0).unwrap();
+
+    // pinned readers reproduce every historical epoch bit-for-bit
+    let open_at = |e: u64| {
+        VswEngine::open(
+            dir.clone(),
+            EngineConfig { epoch: Some(e), max_iters: 200, threads: 2, ..Default::default() },
+        )
+        .unwrap()
+    };
+    assert_eq!(bits_f32(&open_at(0).run(&Wcc).unwrap().values), bits_f32(&base.values));
+    assert_eq!(bits_f32(&open_at(1).run(&Wcc).unwrap().values), bits_f32(&at1.values));
+    // the compacted epoch equals the pre-compaction epoch it merged
+    let at2 = open_at(2).run(&Wcc).unwrap();
+    let at3 = open_at(3).run(&Wcc).unwrap();
+    assert_eq!(bits_f32(&at2.values), bits_f32(&at3.values));
+}
