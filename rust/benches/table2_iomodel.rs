@@ -117,7 +117,7 @@ fn main() -> anyhow::Result<()> {
         let engine = VswEngine::open(dir.clone(), GraphMpVariant::NoCache.to_config(false, 3))?;
         let run = engine.run(&PageRank::default())?;
         let io = run.stats.iters[1].io;
-        let shards = engine.property.num_shards() as u64;
+        let shards = engine.property().num_shards() as u64;
         let p = ModelParams { v, e, p: shards, c: 4, d: 5, n_cores: 1, theta: 1.0 };
         add_row("VSW θ=1 (GraphMP-NC)", Model::Vsw, p, io.bytes_read, io.bytes_written);
 

@@ -84,9 +84,16 @@ struct Slot {
     data: Option<CacheVal>,
     /// CLOCK reference bit.
     referenced: AtomicBool,
-    /// Epoch key the payload was admitted under (see
-    /// [`ShardCache::set_shard_epoch`]); a probe whose expected epoch
+    /// File epoch the payload was admitted under — the caller's
+    /// `shard_epoch` at admission time.  A probe whose expected epoch
     /// disagrees drops the slot instead of serving stale bytes.
+    ///
+    /// Ordering audit: `epoch` is read and written **only under the slot
+    /// mutex**, in the same critical section that reads/writes `data`, so
+    /// the payload↔epoch pairing is indivisible — no atomics ordering is
+    /// involved in the correctness gate.  The `stats.invalidated` counter
+    /// (and every other `CacheStats` field) is `Relaxed` because it is
+    /// purely diagnostic: nothing branches on it.
     epoch: u64,
     /// Per-shard probe history (under the slot lock) — the governor's
     /// "how disk-bound has this shard been" signal.
@@ -103,6 +110,21 @@ struct Slot {
 /// optimal `budget/total` hit ratio (§Perf opt-4).  CLOCK eviction remains
 /// available via [`ShardCache::with_eviction`] for non-cyclic access
 /// patterns.
+///
+/// ## Epoch keying
+///
+/// Every probe/insert carries the **caller's** expected file epoch — the
+/// `shard_epoch` recorded in the epoch snapshot the caller is pinned to
+/// (compaction rewrites a base shard file and bumps it; ingest leaves base
+/// bytes alone, so residents stay valid).  A slot serves a payload only to
+/// callers whose epoch matches the one it was admitted under, so readers
+/// pinned to different epochs can share one cache without ever being
+/// handed each other's bytes.  There is no cache-global epoch table to
+/// re-key on refresh: the earlier design stamped inserts from a shared
+/// `expected_epochs` array, which let a reader that had opened an *old*
+/// shard file admit those stale bytes under the *new* epoch if a
+/// compaction slid in between the read and the insert — per-call keying
+/// makes that pairing indivisible (see [`Slot::epoch`]'s ordering audit).
 pub struct ShardCache {
     slots: Vec<Mutex<Slot>>,
     codec: Codec,
@@ -113,8 +135,6 @@ pub struct ShardCache {
     /// Per-shard eviction priorities (higher = keep longer), installed by
     /// the adaptive governor each iteration; empty = CLOCK order.
     priorities: Mutex<Vec<u64>>,
-    /// Per-shard expected file epoch (see [`Self::set_shard_epoch`]).
-    expected_epochs: Vec<AtomicU64>,
     pub stats: CacheStats,
 }
 
@@ -141,19 +161,8 @@ impl ShardCache {
             clock_hand: AtomicUsize::new(0),
             evict: false,
             priorities: Mutex::new(Vec::new()),
-            expected_epochs: (0..num_shards).map(|_| AtomicU64::new(0)).collect(),
             stats: CacheStats::default(),
         }
-    }
-
-    /// Set the file epoch shard `id`'s payload is expected to come from.
-    /// A resident slot admitted under a different epoch is dropped lazily
-    /// on its next probe (and no longer reads as resident), so a
-    /// compaction that rewrites base shard files invalidates exactly the
-    /// touched slots — an ingest, which leaves base bytes alone, costs the
-    /// cache nothing.
-    pub fn set_shard_epoch(&self, id: usize, epoch: u64) {
-        self.expected_epochs[id].store(epoch, Ordering::Relaxed);
     }
 
     /// Switch to CLOCK replacement (second-chance LRU approximation).
@@ -182,14 +191,18 @@ impl ShardCache {
     }
 
     /// Probe the slot under its lock; on hit the payload comes back as a
-    /// cheap `Arc` clone and the hit/miss accounting is updated.
-    fn probe(&self, id: usize) -> Option<ShardView> {
+    /// cheap `Arc` clone and the hit/miss accounting is updated.  `epoch`
+    /// is the caller's expected file epoch for this shard.
+    fn probe(&self, id: usize, epoch: u64) -> Option<ShardView> {
         let mut slot = self.slots[id].lock().unwrap();
-        // epoch-keyed invalidation: a payload admitted under a superseded
+        // epoch-keyed invalidation: a payload admitted under a different
         // file epoch must not be served — drop it and fall through to the
-        // miss path so the caller re-reads the rewritten shard
-        if slot.data.is_some() && slot.epoch != self.expected_epochs[id].load(Ordering::Relaxed)
-        {
+        // miss path so the caller re-reads its own shard file.  (When
+        // readers pinned to different epochs alternate on one shard this
+        // can thrash the slot; that only happens for the shards a
+        // compaction rewrote while an old-epoch session is still live,
+        // and it trades a re-read for correctness.)
+        if slot.data.is_some() && slot.epoch != epoch {
             if let Some(old) = slot.data.take() {
                 self.used.fetch_sub(old.size(), Ordering::Relaxed);
             }
@@ -217,12 +230,13 @@ impl ShardCache {
         }
     }
 
-    /// Probe for shard `id`; on hit, return the CSR (allocation-free for
-    /// mode-1, decompressed otherwise).  Decompression runs on the slot's
-    /// `Arc`-shared payload *after* the slot lock is released — a slow
-    /// codec never serializes other probes, and no payload copy is made.
-    pub fn get(&self, id: usize) -> Result<Option<Arc<Csr>>> {
-        match self.probe(id) {
+    /// Probe for shard `id` at the caller's file `epoch`; on hit, return
+    /// the CSR (allocation-free for mode-1, decompressed otherwise).
+    /// Decompression runs on the slot's `Arc`-shared payload *after* the
+    /// slot lock is released — a slow codec never serializes other probes,
+    /// and no payload copy is made.
+    pub fn get(&self, id: usize, epoch: u64) -> Result<Option<Arc<Csr>>> {
+        match self.probe(id, epoch) {
             Some(ShardView::Decoded(csr)) => Ok(Some(csr)),
             Some(ShardView::Compressed { codec, bytes }) => {
                 let t0 = std::time::Instant::now();
@@ -237,13 +251,14 @@ impl ShardCache {
         }
     }
 
-    /// Is shard `id` currently cached?  A pure peek: unlike [`Self::get`] it
-    /// neither decodes nor touches the hit/miss accounting, so the governor
-    /// can consult residency when building its schedule without distorting
-    /// the statistics its own scores are derived from.
-    pub fn is_resident(&self, id: usize) -> bool {
+    /// Is shard `id` currently cached at the caller's file `epoch`?  A pure
+    /// peek: unlike [`Self::get`] it neither decodes nor touches the
+    /// hit/miss accounting, so the governor can consult residency when
+    /// building its schedule without distorting the statistics its own
+    /// scores are derived from.
+    pub fn is_resident(&self, id: usize, epoch: u64) -> bool {
         let slot = self.slots[id].lock().unwrap();
-        slot.data.is_some() && slot.epoch == self.expected_epochs[id].load(Ordering::Relaxed)
+        slot.data.is_some() && slot.epoch == epoch
     }
 
     /// Lifetime (hits, misses) for shard `id` — the governor's per-shard
@@ -272,9 +287,12 @@ impl ShardCache {
         p.extend_from_slice(scores);
     }
 
-    /// Insert shard `id` given its serialized payload.  Evicts via CLOCK if
+    /// Insert shard `id`'s serialized payload, keyed by the file `epoch`
+    /// the caller read it from — never by any cache-global notion of
+    /// "current", so bytes from an old shard file can only ever be served
+    /// back to readers pinned to that same epoch.  Evicts via CLOCK if
     /// over budget; gives up (rejects) if the payload alone exceeds budget.
-    pub fn insert(&self, id: usize, payload: &[u8]) -> Result<()> {
+    pub fn insert(&self, id: usize, epoch: u64, payload: &[u8]) -> Result<()> {
         let t0 = std::time::Instant::now();
         let val = if self.codec.is_compressing() {
             CacheVal::Bytes(Arc::new(self.codec.compress(payload)?))
@@ -304,7 +322,7 @@ impl ShardCache {
         }
         self.used.fetch_add(size, Ordering::Relaxed);
         slot.data = Some(val);
-        slot.epoch = self.expected_epochs[id].load(Ordering::Relaxed);
+        slot.epoch = epoch;
         slot.referenced.store(true, Ordering::Relaxed);
         self.stats.insertions.fetch_add(1, Ordering::Relaxed);
         Ok(())
@@ -318,25 +336,30 @@ impl ShardCache {
     pub fn fetch_decoded(
         &self,
         id: usize,
+        epoch: u64,
         admit: bool,
         read: impl FnOnce() -> Result<Vec<u8>>,
     ) -> Result<Arc<Csr>> {
-        if let Some(csr) = self.get(id)? {
+        if let Some(csr) = self.get(id, epoch)? {
             return Ok(csr);
         }
         let bytes = read()?;
         if admit {
             // admission failure (over budget / codec reject) is not an
             // error: the shard still decodes from the bytes in hand
-            let _ = self.insert(id, &bytes);
+            let _ = self.insert(id, epoch, &bytes);
             // mode-1 admission already decoded the payload into the slot —
             // hand that Arc back instead of decoding a second time (a plain
             // peek, no hit/miss accounting: this acquisition was already
-            // counted as a miss above)
+            // counted as a miss above).  Re-check the slot's epoch: a
+            // concurrent reader at another epoch may have replaced the
+            // payload between our insert and this peek.
             if !self.codec.is_compressing() {
                 let slot = self.slots[id].lock().unwrap();
-                if let Some(CacheVal::Decoded(csr)) = &slot.data {
-                    return Ok(csr.clone());
+                if slot.epoch == epoch {
+                    if let Some(CacheVal::Decoded(csr)) = &slot.data {
+                        return Ok(csr.clone());
+                    }
                 }
             }
         }
@@ -352,19 +375,22 @@ impl ShardCache {
     pub fn fetch_view(
         &self,
         id: usize,
+        epoch: u64,
         admit: bool,
         read: impl FnOnce() -> Result<Vec<u8>>,
     ) -> Result<ShardView> {
-        if let Some(view) = self.probe(id) {
+        if let Some(view) = self.probe(id, epoch) {
             return Ok(view);
         }
         let bytes = read()?;
         if admit {
-            let _ = self.insert(id, &bytes);
+            let _ = self.insert(id, epoch, &bytes);
             if !self.codec.is_compressing() {
                 let slot = self.slots[id].lock().unwrap();
-                if let Some(CacheVal::Decoded(csr)) = &slot.data {
-                    return Ok(ShardView::Decoded(csr.clone()));
+                if slot.epoch == epoch {
+                    if let Some(CacheVal::Decoded(csr)) = &slot.data {
+                        return Ok(ShardView::Decoded(csr.clone()));
+                    }
                 }
             }
         }
@@ -451,9 +477,9 @@ mod tests {
         for codec in Codec::ALL {
             let cache = ShardCache::new(4, codec, usize::MAX);
             let (csr, payload) = shard(0, 500);
-            assert!(cache.get(0).unwrap().is_none());
-            cache.insert(0, &payload).unwrap();
-            let got = cache.get(0).unwrap().expect("hit");
+            assert!(cache.get(0, 0).unwrap().is_none());
+            cache.insert(0, 0, &payload).unwrap();
+            let got = cache.get(0, 0).unwrap().expect("hit");
             let mut a = got.to_edges();
             a.sort_unstable();
             let mut b = csr.to_edges();
@@ -470,7 +496,7 @@ mod tests {
         let cache = ShardCache::new(8, Codec::None, one * 2 + 10).with_eviction();
         for id in 0..6 {
             let (_, p) = shard((id * 8) as u32, 2000);
-            cache.insert(id, &p).unwrap();
+            cache.insert(id, 0, &p).unwrap();
         }
         assert!(cache.used_bytes() <= cache.budget());
         assert!(cache.num_cached() <= 2);
@@ -484,12 +510,12 @@ mod tests {
         let cache = ShardCache::new(8, Codec::None, one * 2 + 10);
         for id in 0..6 {
             let (_, p) = shard((id * 8) as u32, 2000);
-            cache.insert(id, &p).unwrap();
+            cache.insert(id, 0, &p).unwrap();
         }
         // first two stay, later insertions rejected — cyclic-scan-optimal
         assert_eq!(cache.num_cached(), 2);
-        assert!(cache.get(0).unwrap().is_some());
-        assert!(cache.get(1).unwrap().is_some());
+        assert!(cache.get(0, 0).unwrap().is_some());
+        assert!(cache.get(1, 0).unwrap().is_some());
         assert_eq!(cache.stats.evictions.load(Ordering::Relaxed), 0);
         assert_eq!(cache.stats.rejected.load(Ordering::Relaxed), 4);
     }
@@ -498,7 +524,7 @@ mod tests {
     fn oversized_payload_rejected() {
         let (_, payload) = shard(0, 2000);
         let cache = ShardCache::new(2, Codec::None, 16);
-        cache.insert(0, &payload).unwrap();
+        cache.insert(0, 0, &payload).unwrap();
         assert_eq!(cache.num_cached(), 0);
         assert_eq!(cache.stats.rejected.load(Ordering::Relaxed), 1);
     }
@@ -507,10 +533,10 @@ mod tests {
     fn stats_track_hits_misses() {
         let cache = ShardCache::new(2, Codec::SnapLite, usize::MAX);
         let (_, payload) = shard(0, 100);
-        cache.get(0).unwrap();
-        cache.insert(0, &payload).unwrap();
-        cache.get(0).unwrap();
-        cache.get(1).unwrap();
+        cache.get(0, 0).unwrap();
+        cache.insert(0, 0, &payload).unwrap();
+        cache.get(0, 0).unwrap();
+        cache.get(1, 0).unwrap();
         assert_eq!(cache.stats.hits.load(Ordering::Relaxed), 1);
         assert_eq!(cache.stats.misses.load(Ordering::Relaxed), 2);
         assert!((cache.stats.hit_ratio() - 1.0 / 3.0).abs() < 1e-9);
@@ -523,7 +549,7 @@ mod tests {
         let reads = AtomicU64::new(0);
         let fetch = |cache: &ShardCache| {
             cache
-                .fetch_decoded(0, true, || {
+                .fetch_decoded(0, 0, true, || {
                     reads.fetch_add(1, Ordering::Relaxed);
                     Ok(payload.clone())
                 })
@@ -550,7 +576,7 @@ mod tests {
         let reads = AtomicU64::new(0);
         for _ in 0..3 {
             cache
-                .fetch_decoded(0, false, || {
+                .fetch_decoded(0, 0, false, || {
                     reads.fetch_add(1, Ordering::Relaxed);
                     Ok(payload.clone())
                 })
@@ -568,7 +594,7 @@ mod tests {
         let reads = AtomicU64::new(0);
         // miss: serialized bytes come back raw, one read
         let v = cache
-            .fetch_view(0, true, || {
+            .fetch_view(0, 0, true, || {
                 reads.fetch_add(1, Ordering::Relaxed);
                 Ok(payload.clone())
             })
@@ -579,7 +605,7 @@ mod tests {
         }
         assert_eq!(reads.load(Ordering::Relaxed), 1);
         // hit: the compressed slot payload, Arc-shared with the slot
-        let v = cache.fetch_view(0, true, || panic!("hit must not read")).unwrap();
+        let v = cache.fetch_view(0, 0, true, || panic!("hit must not read")).unwrap();
         match v {
             ShardView::Compressed { codec, bytes } => {
                 assert_eq!(codec, Codec::SnapLite);
@@ -601,15 +627,15 @@ mod tests {
         let cache = ShardCache::new(2, Codec::None, usize::MAX);
         let (_, payload) = shard(0, 100);
         // admission decodes into the slot; the view is that same Arc
-        let v = cache.fetch_view(0, true, || Ok(payload.clone())).unwrap();
+        let v = cache.fetch_view(0, 0, true, || Ok(payload.clone())).unwrap();
         let ShardView::Decoded(a) = v else { panic!("mode-1 admit must yield Decoded") };
-        let ShardView::Decoded(b) = cache.fetch_view(0, true, || panic!("hit")).unwrap() else {
+        let ShardView::Decoded(b) = cache.fetch_view(0, 0, true, || panic!("hit")).unwrap() else {
             panic!("mode-1 hit must yield Decoded")
         };
         assert!(Arc::ptr_eq(&a, &b), "both views must share the cached Arc");
         // without admission the raw bytes come back
         let nc = ShardCache::new(2, Codec::None, usize::MAX);
-        match nc.fetch_view(0, false, || Ok(payload.clone())).unwrap() {
+        match nc.fetch_view(0, 0, false, || Ok(payload.clone())).unwrap() {
             ShardView::Raw(bytes) => assert_eq!(*bytes, payload),
             _ => panic!("unadmitted read must stay raw"),
         }
@@ -627,8 +653,8 @@ mod tests {
                 s.spawn(move || {
                     for round in 0..50 {
                         let id = (t * 7 + round) % 16;
-                        if cache.get(id).unwrap().is_none() {
-                            cache.insert(id, &payloads[id]).unwrap();
+                        if cache.get(id, 0).unwrap().is_none() {
+                            cache.insert(id, 0, &payloads[id]).unwrap();
                         }
                     }
                 });
@@ -641,59 +667,95 @@ mod tests {
     fn residency_peek_and_history_do_not_touch_stats() {
         let cache = ShardCache::new(2, Codec::None, usize::MAX);
         let (_, payload) = shard(0, 100);
-        assert!(!cache.is_resident(0));
-        cache.insert(0, &payload).unwrap();
-        assert!(cache.is_resident(0));
+        assert!(!cache.is_resident(0, 0));
+        cache.insert(0, 0, &payload).unwrap();
+        assert!(cache.is_resident(0, 0));
         assert_eq!(cache.stats.hits.load(Ordering::Relaxed), 0);
         assert_eq!(cache.stats.misses.load(Ordering::Relaxed), 0);
         assert_eq!(cache.shard_history(0), (0, 0));
-        cache.get(0).unwrap();
-        cache.get(1).unwrap();
-        cache.get(1).unwrap();
+        cache.get(0, 0).unwrap();
+        cache.get(1, 0).unwrap();
+        cache.get(1, 0).unwrap();
         assert_eq!(cache.shard_history(0), (1, 0));
         assert_eq!(cache.shard_history(1), (0, 2));
     }
 
     #[test]
-    fn epoch_bump_invalidates_stale_slots_lazily() {
+    fn epoch_mismatch_invalidates_stale_slots_lazily() {
         let cache = ShardCache::new(2, Codec::SnapLite, usize::MAX);
         let (_, payload) = shard(0, 300);
-        cache.insert(0, &payload).unwrap();
-        cache.insert(1, &payload).unwrap();
-        assert!(cache.is_resident(0));
+        cache.insert(0, 0, &payload).unwrap();
+        cache.insert(1, 0, &payload).unwrap();
+        assert!(cache.is_resident(0, 0));
         let used_full = cache.used_bytes();
-        // shard 0's file was rewritten (compaction): bump its epoch
-        cache.set_shard_epoch(0, 1);
-        assert!(!cache.is_resident(0), "stale slot must not read as resident");
-        assert!(cache.is_resident(1), "untouched shard keeps its slot");
-        // the stale probe drops the slot and reports a miss
-        assert!(cache.get(0).unwrap().is_none());
+        // shard 0's file was rewritten (compaction): a reader pinned to the
+        // new snapshot expects file epoch 1 for it
+        assert!(!cache.is_resident(0, 1), "stale slot must not read as resident");
+        assert!(cache.is_resident(1, 0), "untouched shard keeps its slot");
+        // the mismatched probe drops the slot and reports a miss
+        assert!(cache.get(0, 1).unwrap().is_none());
         assert_eq!(cache.stats.invalidated.load(Ordering::Relaxed), 1);
         assert_eq!(cache.stats.misses.load(Ordering::Relaxed), 1);
         assert!(cache.used_bytes() < used_full, "invalidation must return budget");
         // re-admission records the new epoch and hits again
-        cache.insert(0, &payload).unwrap();
-        assert!(cache.is_resident(0));
-        assert!(cache.get(0).unwrap().is_some());
+        cache.insert(0, 1, &payload).unwrap();
+        assert!(cache.is_resident(0, 1));
+        assert!(cache.get(0, 1).unwrap().is_some());
         // fetch paths observe the invalidation too
         let cache = ShardCache::new(1, Codec::None, usize::MAX);
         let reads = AtomicU64::new(0);
-        let fetch = |cache: &ShardCache| {
+        let fetch = |cache: &ShardCache, epoch: u64| {
             cache
-                .fetch_decoded(0, true, || {
+                .fetch_decoded(0, epoch, true, || {
                     reads.fetch_add(1, Ordering::Relaxed);
                     Ok(payload.clone())
                 })
                 .unwrap()
         };
-        fetch(&cache);
-        fetch(&cache);
+        fetch(&cache, 0);
+        fetch(&cache, 0);
         assert_eq!(reads.load(Ordering::Relaxed), 1);
-        cache.set_shard_epoch(0, 7);
-        fetch(&cache);
+        fetch(&cache, 7);
         assert_eq!(reads.load(Ordering::Relaxed), 2, "stale slot must force a re-read");
-        fetch(&cache);
+        fetch(&cache, 7);
         assert_eq!(reads.load(Ordering::Relaxed), 2, "re-admitted slot hits under new epoch");
+    }
+
+    #[test]
+    fn concurrent_readers_at_different_epochs_never_cross_serve() {
+        // Two generations of shard 0's file: the epoch-0 payload has 100
+        // edges, the epoch-1 (compacted) payload 200.  Readers pinned to
+        // each epoch hammer the same slot concurrently; an epoch-keyed hit
+        // must always decode to the reader's own generation — the
+        // cross-epoch stale-serve this refactor eliminates would surface
+        // here as a wrong edge count.
+        let old_payload = shard(0, 100).1;
+        let new_payload = shard(0, 200).1;
+        for codec in [Codec::None, Codec::SnapLite] {
+            let cache = Arc::new(ShardCache::new(1, codec, usize::MAX));
+            std::thread::scope(|s| {
+                for t in 0..4 {
+                    let cache = cache.clone();
+                    let (epoch, mine, want) = if t % 2 == 0 {
+                        (0u64, &old_payload, 100)
+                    } else {
+                        (1u64, &new_payload, 200)
+                    };
+                    s.spawn(move || {
+                        for _ in 0..200 {
+                            let csr = cache
+                                .fetch_decoded(0, epoch, true, || Ok(mine.clone()))
+                                .unwrap();
+                            assert_eq!(
+                                csr.num_edges(),
+                                want,
+                                "epoch-{epoch} reader served the other epoch's payload"
+                            );
+                        }
+                    });
+                }
+            });
+        }
     }
 
     #[test]
@@ -702,14 +764,14 @@ mod tests {
         let one = Codec::None.compress(&payload).unwrap().len();
         let cache = ShardCache::new(4, Codec::None, one * 4);
         assert_eq!(cache.lendable_bytes(), one * 4);
-        cache.insert(0, &payload).unwrap();
+        cache.insert(0, 0, &payload).unwrap();
         let after_one = cache.lendable_bytes();
         assert!(after_one < one * 4);
-        cache.insert(1, &payload).unwrap();
+        cache.insert(1, 0, &payload).unwrap();
         assert!(cache.lendable_bytes() < after_one);
         // unbounded budget: effectively infinite loan
         let unbounded = ShardCache::new(2, Codec::None, usize::MAX);
-        unbounded.insert(0, &payload).unwrap();
+        unbounded.insert(0, 0, &payload).unwrap();
         assert!(unbounded.lendable_bytes() > (1 << 40));
     }
 
@@ -719,19 +781,19 @@ mod tests {
         let one = Codec::None.compress(&payload).unwrap().len();
         // room for exactly 2 entries
         let cache = ShardCache::new(4, Codec::None, one * 2 + 10).with_eviction();
-        cache.insert(0, &payload).unwrap();
-        cache.insert(1, &payload).unwrap();
+        cache.insert(0, 0, &payload).unwrap();
+        cache.insert(1, 0, &payload).unwrap();
         // shard 0 is hot (priority 100), shard 1 cold (priority 1)
         cache.set_priorities(&[100, 1, 50, 50]);
         let (_, p2) = shard(16, 2000);
-        cache.insert(2, &p2).unwrap();
-        assert!(cache.is_resident(0), "hot shard must survive eviction");
-        assert!(!cache.is_resident(1), "cold shard must be the victim");
-        assert!(cache.is_resident(2));
+        cache.insert(2, 0, &p2).unwrap();
+        assert!(cache.is_resident(0, 0), "hot shard must survive eviction");
+        assert!(!cache.is_resident(1, 0), "cold shard must be the victim");
+        assert!(cache.is_resident(2, 0));
         // a wrong-length priority slice is ignored (previous scores stand)
         cache.set_priorities(&[1, 2]);
         let (_, p3) = shard(24, 2000);
-        cache.insert(3, &p3).unwrap();
+        cache.insert(3, 0, &p3).unwrap();
         assert!(cache.used_bytes() <= cache.budget());
     }
 }

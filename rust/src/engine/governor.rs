@@ -216,6 +216,9 @@ impl Governor {
     ///
     /// Non-adaptive mode returns file order — bit-for-bit the PR 1 issue
     /// sequence.
+    ///
+    /// `shard_epochs` is the calling snapshot's per-shard file-epoch table
+    /// (residency is epoch-keyed; see [`ShardCache::is_resident`]).
     pub fn schedule(
         &self,
         num_shards: usize,
@@ -223,6 +226,7 @@ impl Governor {
         digests: &[Digest],
         blooms: &[BloomFilter],
         cache: &ShardCache,
+        shard_epochs: &[u64],
     ) -> Vec<usize> {
         if !self.cfg.adaptive {
             return (0..num_shards).collect();
@@ -233,7 +237,9 @@ impl Governor {
         cache.set_priorities(&scores);
         // materialize residency once: sort_by_key re-evaluates its key per
         // comparison, and is_resident takes a slot lock each call
-        let resident: Vec<bool> = (0..num_shards).map(|s| cache.is_resident(s)).collect();
+        let resident: Vec<bool> = (0..num_shards)
+            .map(|s| cache.is_resident(s, shard_epochs[s]))
+            .collect();
         let mut order: Vec<usize> = (0..num_shards).collect();
         // resident shards sort after all non-resident ones; within each
         // class, score descending then id ascending — fully deterministic
@@ -262,7 +268,7 @@ mod tests {
         assert_eq!(g.high_water(), 3);
         let cache = ShardCache::new(4, Codec::None, usize::MAX);
         let blooms: Vec<BloomFilter> = (0..4).map(|_| BloomFilter::new(64, 1)).collect();
-        assert_eq!(g.schedule(4, false, &[], &blooms, &cache), vec![0, 1, 2, 3]);
+        assert_eq!(g.schedule(4, false, &[], &blooms, &cache, &[0; 4]), vec![0, 1, 2, 3]);
     }
 
     fn digests(keys: &[u64]) -> Vec<crate::bloom::Digest> {
@@ -322,14 +328,14 @@ mod tests {
         // make shard 0 cache-resident
         let edges: Vec<(u32, u32)> = (0..16).map(|i| (i % 4, i % 8)).collect();
         let payload = shardfile::to_bytes(&Csr::from_edges(0, 8, &edges));
-        cache.insert(0, &payload).unwrap();
-        assert!(cache.is_resident(0));
+        cache.insert(0, 0, &payload).unwrap();
+        assert!(cache.is_resident(0, 0));
 
         let active = digests(&[100, 101]);
-        let order = g.schedule(3, true, &active, &blooms, &cache);
+        let order = g.schedule(3, true, &active, &blooms, &cache, &[0; 3]);
         assert_eq!(order, vec![1, 2, 0], "densest uncached first, resident last");
 
         // determinism: identical inputs, identical order
-        assert_eq!(order, g.schedule(3, true, &active, &blooms, &cache));
+        assert_eq!(order, g.schedule(3, true, &active, &blooms, &cache, &[0; 3]));
     }
 }

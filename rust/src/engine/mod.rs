@@ -10,4 +10,4 @@ pub use backend::{process_rows, Backend, CsrRows, DeltaRows, DvRows, EdgeSource,
 pub use governor::{Governor, GovernorConfig};
 pub use shared::SharedSlice;
 pub use stats::{AnyRunResult, IterStats, RunResult, RunStats};
-pub use vsw::{EngineConfig, VswEngine, WarmStart};
+pub use vsw::{EngineConfig, EpochState, VswEngine, WarmStart};

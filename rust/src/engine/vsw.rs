@@ -78,7 +78,7 @@ use std::cell::Cell;
 use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -333,32 +333,45 @@ struct WorkerScratch {
     runs: Vec<(usize, usize, usize, usize)>,
 }
 
-/// Per-epoch file state resolved from the snapshot manifest: which base
-/// shard / Bloom / delta files a reader at this epoch sees.
-struct EpochFiles {
-    id: u64,
-    num_edges: u64,
-    vertex_info: VertexInfo,
-    blooms: Vec<BloomFilter>,
-    shard_paths: Vec<PathBuf>,
-    /// Epoch at which each base shard file was last rewritten — the
-    /// cache's slot-invalidation key.
-    shard_epochs: Vec<u64>,
-    deltas: Vec<Option<Arc<DeltaShard>>>,
+/// One epoch's complete read view, resolved from the snapshot manifest:
+/// which base shard / Bloom / delta files a reader at this epoch sees,
+/// plus the metadata those files imply.  **Immutable once built** — the
+/// engine swaps a fresh `Arc<EpochState>` in on refresh and every run
+/// clones the Arc exactly once at its start, so an in-flight run (or a
+/// server session holding the Arc) is structurally pinned to its epoch:
+/// there is no window in which it can observe half of one epoch and half
+/// of another.
+pub struct EpochState {
+    /// Snapshot epoch id (0 on a never-mutated dataset).
+    pub epoch: u64,
+    /// Dataset property with `info.num_edges` reflecting this epoch's
+    /// *live* edge count.
+    pub property: Property,
+    /// Degree arrays as of this epoch.
+    pub vertex_info: VertexInfo,
+    pub blooms: Vec<BloomFilter>,
+    /// Per-shard base file paths at this epoch (compaction renames them).
+    pub shard_paths: Vec<PathBuf>,
+    /// Epoch at which each base shard file was last rewritten — the key
+    /// every cache probe/insert for that shard carries.
+    pub shard_epochs: Vec<u64>,
+    /// Per-shard resident delta state (`None` = shard has no mutations).
+    pub deltas: Vec<Option<Arc<DeltaShard>>>,
 }
 
-fn load_epoch_files(
-    dir: &DatasetDir,
-    property: &Property,
-    requested: Option<u64>,
-) -> Result<EpochFiles> {
-    let manifest = EpochManifest::load_or_bootstrap(dir, property)?;
+fn load_epoch_state(dir: &DatasetDir, requested: Option<u64>) -> Result<EpochState> {
+    let mut property = Property::load(&dir.property_path()).context("property")?;
+    let manifest = EpochManifest::load_or_bootstrap(dir, &property)?;
     let id = requested.unwrap_or(manifest.current);
     let entry = manifest.epoch(id)?;
     let p = property.num_shards();
     anyhow::ensure!(entry.shards.len() == p, "epoch {id} shard table disagrees with property");
     let vertex_info = VertexInfo::load(&dir.root.join(&entry.vertexinfo))
         .with_context(|| format!("vertexinfo (epoch {id})"))?;
+    anyhow::ensure!(
+        vertex_info.num_vertices() as u64 == property.info.num_vertices,
+        "vertexinfo/property disagree"
+    );
     let mut blooms = Vec::with_capacity(p);
     let mut shard_paths = Vec::with_capacity(p);
     let mut shard_epochs = Vec::with_capacity(p);
@@ -380,15 +393,55 @@ fn load_epoch_files(
             None => None,
         });
     }
-    Ok(EpochFiles {
-        id,
-        num_edges: entry.num_edges,
+    // surface the epoch's live edge count through the stats/CLI paths
+    property.info.num_edges = entry.num_edges;
+    Ok(EpochState {
+        epoch: id,
+        property,
         vertex_info,
         blooms,
         shard_paths,
         shard_epochs,
         deltas,
     })
+}
+
+impl EpochState {
+    fn max_shard_bytes(&self) -> u64 {
+        self.property
+            .intervals
+            .windows(2)
+            .map(|w| (w[1] - w[0]) as u64 * 16)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// The engine's worker pools.  [`ThreadPool`] batches share a completion
+/// counter, so one `Pools` instance must never run two batches at once —
+/// the engine hands them out through a mutex and builds a fresh throwaway
+/// set when a second run arrives concurrently (thread counts are identical
+/// either way, so results don't depend on which set a run got).
+struct Pools {
+    compute: ThreadPool,
+    /// Dedicated I/O workers for the prefetch pipeline (None ⇔ the
+    /// synchronous path: depth 0 and the governor disabled).
+    io: Option<ThreadPool>,
+}
+
+impl Pools {
+    fn build(cfg: &EngineConfig) -> Self {
+        let compute = ThreadPool::new(cfg.threads.max(1));
+        let io = if cfg.prefetch_depth > 0 || cfg.adaptive {
+            // a few readers saturate the pipeline; decode parallelism is
+            // bounded by the in-flight window anyway
+            let readers = if cfg.adaptive { cfg.prefetch_max } else { cfg.prefetch_depth };
+            Some(ThreadPool::new(readers.clamp(1, 4)))
+        } else {
+            None
+        };
+        Self { compute, io }
+    }
 }
 
 /// Warm-start state for an incremental re-run on a mutated dataset: the
@@ -431,27 +484,28 @@ fn fold_chunk<V: VertexValue, P: VertexProgram<V> + ?Sized, S: EdgeSource>(
 
 /// An opened dataset ready to run programs (GraphMP's steady state: all
 /// vertices + metadata in memory, edges on disk/cache).
+///
+/// Shared-engine model (`graphmp serve`): every method that runs or
+/// inspects takes `&self`, so one engine behind an `Arc` serves many
+/// concurrent sessions.  The epoch view lives in a single
+/// `RwLock<Arc<EpochState>>` that [`Self::refresh_latest`] replaces
+/// *wholesale* — a reader either sees the old snapshot or the new one,
+/// never a mix — and runs pin themselves by cloning the Arc once up
+/// front ([`Self::snapshot`] / [`Self::run_pinned`]).
 pub struct VswEngine {
     dir: DatasetDir,
-    pub property: Property,
-    pub vertex_info: VertexInfo,
-    blooms: Vec<BloomFilter>,
+    /// Current epoch snapshot; swapped atomically by `refresh_latest`.
+    state: RwLock<Arc<EpochState>>,
+    /// Shared across epochs — slots are keyed per call by the reader's
+    /// `shard_epochs[shard]`, so stale payloads can't cross epochs.
     cache: ShardCache,
-    pool: ThreadPool,
-    /// Dedicated I/O workers for the prefetch pipeline (None ⇔ the
-    /// synchronous path: depth 0 and the governor disabled).
-    io_pool: Option<ThreadPool>,
+    /// Worker pools, leased per run (see [`Pools`]).
+    pools: Mutex<Pools>,
     /// Adaptive I/O governor; with `cfg.adaptive == false` it pins every
     /// decision at the fixed-knob behavior.
     governor: Governor,
     cfg: EngineConfig,
     pub load_wall: std::time::Duration,
-    /// Snapshot epoch this engine reads (0 on a never-mutated dataset).
-    epoch: u64,
-    /// Per-shard base file paths at this epoch (compaction renames them).
-    shard_paths: Vec<PathBuf>,
-    /// Per-shard resident delta state (`None` = shard has no mutations).
-    deltas: Vec<Option<Arc<DeltaShard>>>,
 }
 
 impl VswEngine {
@@ -462,17 +516,8 @@ impl VswEngine {
     /// delta files this reader sees ([`EngineConfig::epoch`]).
     pub fn open(dir: DatasetDir, cfg: EngineConfig) -> Result<Self> {
         let t0 = Instant::now();
-        let mut property = Property::load(&dir.property_path()).context("property")?;
-        let files = load_epoch_files(&dir, &property, cfg.epoch)?;
-        let vertex_info = files.vertex_info;
-        anyhow::ensure!(
-            vertex_info.num_vertices() as u64 == property.info.num_vertices,
-            "vertexinfo/property disagree"
-        );
-        // surface the epoch's live edge count through the stats/CLI paths
-        property.info.num_edges = files.num_edges;
-        let p = property.num_shards();
-        let blooms = files.blooms;
+        let st = load_epoch_state(&dir, cfg.epoch)?;
+        let p = st.property.num_shards();
         // default admission is no-evict (optimal under the cyclic sweep);
         // the adaptive governor installs per-shard priorities every
         // iteration, which makes replacement smarter than the cyclic
@@ -482,11 +527,6 @@ impl VswEngine {
         if cfg.adaptive {
             cache = cache.with_eviction();
         }
-        // key every slot by its base file's epoch so a later compaction
-        // (which rewrites the file) invalidates exactly the touched slots
-        for (i, &e) in files.shard_epochs.iter().enumerate() {
-            cache.set_shard_epoch(i, e);
-        }
         let cache_enabled = cfg.cache_budget > 0;
         // warm the cache during loading, like the paper's loading phase
         // ("places processed shards in the cache if possible"); with
@@ -494,44 +534,28 @@ impl VswEngine {
         // inserts, shortening the load phase Fig 6 measures
         if cache_enabled {
             for (i, bytes) in
-                ReadAhead::new(files.shard_paths.clone(), cfg.prefetch_depth).enumerate()
+                ReadAhead::new(st.shard_paths.clone(), cfg.prefetch_depth).enumerate()
             {
-                cache.insert(i, &bytes.with_context(|| format!("warming shard {i}"))?)?;
+                cache.insert(
+                    i,
+                    st.shard_epochs[i],
+                    &bytes.with_context(|| format!("warming shard {i}"))?,
+                )?;
             }
         }
-        let pool = ThreadPool::new(cfg.threads.max(1));
-        let io_pool = if cfg.prefetch_depth > 0 || cfg.adaptive {
-            // a few readers saturate the pipeline; decode parallelism is
-            // bounded by the in-flight window anyway
-            let readers = if cfg.adaptive { cfg.prefetch_max } else { cfg.prefetch_depth };
-            Some(ThreadPool::new(readers.clamp(1, 4)))
-        } else {
-            None
-        };
-        let max_shard_bytes = property
-            .intervals
-            .windows(2)
-            .map(|w| (w[1] - w[0]) as u64 * 16)
-            .max()
-            .unwrap_or(0);
+        let pools = Pools::build(&cfg);
         let governor = Governor::new(
             GovernorConfig::from_engine(cfg.adaptive, cfg.prefetch_depth, cfg.prefetch_max),
-            max_shard_bytes as usize,
+            st.max_shard_bytes() as usize,
         );
         Ok(Self {
             dir,
-            property,
-            vertex_info,
-            blooms,
+            state: RwLock::new(Arc::new(st)),
             cache,
-            pool,
-            io_pool,
+            pools: Mutex::new(pools),
             governor,
             cfg,
             load_wall: t0.elapsed(),
-            epoch: files.id,
-            shard_paths: files.shard_paths,
-            deltas: files.deltas,
         })
     }
 
@@ -539,40 +563,50 @@ impl VswEngine {
         &self.cfg
     }
 
-    /// The snapshot epoch this engine reads.
-    pub fn epoch(&self) -> u64 {
-        self.epoch
+    /// The engine's *current* epoch snapshot.  A clone of the returned Arc
+    /// stays valid — and keeps serving bit-identical results — no matter
+    /// how many refreshes happen afterwards; pass it to
+    /// [`Self::run_pinned`] to keep a whole session on one epoch.
+    pub fn snapshot(&self) -> Arc<EpochState> {
+        self.state.read().unwrap().clone()
     }
 
-    /// Re-resolve the dataset's *latest* epoch on a live engine: reload the
-    /// manifest, swap in the new delta shards / Bloom filters / degree
-    /// arrays, and re-key the cache so slots whose base file a compaction
-    /// rewrote invalidate lazily — slots of untouched shards (and every
-    /// ingest-only epoch, which never rewrites base bytes) stay warm.
-    /// Returns the epoch now being read.  Refuses on an engine pinned to an
-    /// explicit historical epoch.
-    pub fn refresh_latest(&mut self) -> Result<u64> {
+    /// The snapshot epoch this engine currently reads.
+    pub fn epoch(&self) -> u64 {
+        self.snapshot().epoch
+    }
+
+    /// The dataset property as of the current epoch (live edge count
+    /// included).
+    pub fn property(&self) -> Property {
+        self.snapshot().property.clone()
+    }
+
+    /// Re-resolve the dataset's *latest* epoch on a live engine: build a
+    /// complete new [`EpochState`] (delta shards, Bloom filters, degree
+    /// arrays, shard file epochs) and swap it in atomically.  In-flight
+    /// runs hold the previous Arc and finish on their epoch untouched; the
+    /// cache needs no re-keying because every probe carries its caller's
+    /// shard epoch — slots whose base file a compaction rewrote invalidate
+    /// lazily on the next current-epoch probe, while slots of untouched
+    /// shards (and every ingest-only epoch, which never rewrites base
+    /// bytes) stay warm.  Returns the epoch now being read.  Refuses on an
+    /// engine pinned to an explicit historical epoch.
+    pub fn refresh_latest(&self) -> Result<u64> {
         anyhow::ensure!(
             self.cfg.epoch.is_none(),
             "engine is pinned to epoch {:?}; open a fresh engine instead",
             self.cfg.epoch
         );
-        let mut property = Property::load(&self.dir.property_path()).context("property")?;
-        let files = load_epoch_files(&self.dir, &property, None)?;
-        if files.id == self.epoch {
-            return Ok(self.epoch);
+        let next = load_epoch_state(&self.dir, None)?;
+        let id = next.epoch;
+        let mut cur = self.state.write().unwrap();
+        // epoch ids are monotonic; never swap backwards if a concurrent
+        // refresh already installed something newer
+        if id > cur.epoch {
+            *cur = Arc::new(next);
         }
-        property.info.num_edges = files.num_edges;
-        for (i, &e) in files.shard_epochs.iter().enumerate() {
-            self.cache.set_shard_epoch(i, e);
-        }
-        self.property = property;
-        self.vertex_info = files.vertex_info;
-        self.blooms = files.blooms;
-        self.shard_paths = files.shard_paths;
-        self.deltas = files.deltas;
-        self.epoch = files.id;
-        Ok(self.epoch)
+        Ok(cur.epoch)
     }
 
     pub fn cache(&self) -> &ShardCache {
@@ -602,48 +636,49 @@ impl VswEngine {
     /// therefore a *ceiling* on the in-flight footprint: Fig 11 can only
     /// over-report, never under-report, which keeps the figure honest.
     pub fn memory_estimate(&self) -> u64 {
-        let v = self.property.info.num_vertices;
+        self.memory_estimate_for(&self.snapshot())
+    }
+
+    fn memory_estimate_for(&self, st: &EpochState) -> u64 {
+        let v = st.property.info.num_vertices;
         let vertex_arrays = 2 * 4 * v; // src + dst f32
         let degree_arrays = 2 * 4 * v; // in + out u32
-        let blooms: u64 = self.blooms.iter().map(|b| b.size_bytes() as u64).sum();
+        let blooms: u64 = st.blooms.iter().map(|b| b.size_bytes() as u64).sum();
         let cache = self.cache.used_bytes() as u64;
-        let max_shard_bytes = self
-            .property
-            .intervals
-            .windows(2)
-            .map(|w| (w[1] - w[0]) as u64 * 16)
-            .max()
-            .unwrap_or(0);
         let shard_buffers =
-            (self.cfg.threads + self.governor.high_water()) as u64 * max_shard_bytes;
+            (self.cfg.threads + self.governor.high_water()) as u64 * st.max_shard_bytes();
         // resident delta shards (the mutation subsystem keeps them decoded)
-        let deltas: u64 = self
-            .deltas
-            .iter()
-            .flatten()
-            .map(|d| d.resident_bytes() as u64)
-            .sum();
+        let deltas: u64 =
+            st.deltas.iter().flatten().map(|d| d.resident_bytes() as u64).sum();
         vertex_arrays + degree_arrays + blooms + cache + shard_buffers + deltas
     }
 
     /// Run a lane-erased program (the CLI path): dispatches to the typed
     /// [`Self::run`] for the program's value lane.
     pub fn run_any(&self, app: &AnyProgram) -> Result<AnyRunResult> {
+        self.run_any_pinned(&self.snapshot(), app)
+    }
+
+    /// [`Self::run_any`] against an explicit epoch snapshot: the server's
+    /// session path, where a session captured its snapshot at `open` time
+    /// and must keep reading it even after `refresh_latest` moved the
+    /// engine forward.
+    pub fn run_any_pinned(&self, st: &Arc<EpochState>, app: &AnyProgram) -> Result<AnyRunResult> {
         Ok(match app {
             AnyProgram::F32(p) => {
-                let r = self.run(p.as_ref())?;
+                let r = self.run_pinned(st, p.as_ref())?;
                 AnyRunResult { values: r.values.into(), stats: r.stats }
             }
             AnyProgram::F64(p) => {
-                let r = self.run(p.as_ref())?;
+                let r = self.run_pinned(st, p.as_ref())?;
                 AnyRunResult { values: r.values.into(), stats: r.stats }
             }
             AnyProgram::U32(p) => {
-                let r = self.run(p.as_ref())?;
+                let r = self.run_pinned(st, p.as_ref())?;
                 AnyRunResult { values: r.values.into(), stats: r.stats }
             }
             AnyProgram::U64(p) => {
-                let r = self.run(p.as_ref())?;
+                let r = self.run_pinned(st, p.as_ref())?;
                 AnyRunResult { values: r.values.into(), stats: r.stats }
             }
         })
@@ -696,6 +731,16 @@ impl VswEngine {
         self.run_seeded(app, None)
     }
 
+    /// [`Self::run`] against an explicit epoch snapshot (see
+    /// [`Self::run_any_pinned`]).
+    pub fn run_pinned<V: VertexValue, P: VertexProgram<V> + ?Sized>(
+        &self,
+        st: &Arc<EpochState>,
+        app: &P,
+    ) -> Result<RunResult<V>> {
+        self.run_seeded_at(st, app, None)
+    }
+
     /// [`Self::run`] with an optional warm start: instead of `init` +
     /// `initially_active`, begin from a prior fixpoint and a seeded active
     /// set.  With the seed being the sources of edges inserted since the
@@ -708,9 +753,32 @@ impl VswEngine {
         app: &P,
         warm: Option<WarmStart<V>>,
     ) -> Result<RunResult<V>> {
+        self.run_seeded_at(&self.snapshot(), app, warm)
+    }
+
+    /// The engine loop proper, pinned to `st`.  Takes `&self` so any
+    /// number of sessions can run concurrently against one engine: the
+    /// worker pools are leased (first run gets the shared set, overlapping
+    /// runs get a fresh throwaway set with identical thread counts — see
+    /// [`Pools`]), and every cache access is keyed by `st.shard_epochs`.
+    fn run_seeded_at<V: VertexValue, P: VertexProgram<V> + ?Sized>(
+        &self,
+        st: &Arc<EpochState>,
+        app: &P,
+        warm: Option<WarmStart<V>>,
+    ) -> Result<RunResult<V>> {
         let t_run = Instant::now();
-        let n = self.property.info.num_vertices as usize;
-        let p = self.property.num_shards();
+        let pools_guard = self.pools.try_lock();
+        let pools_owned;
+        let pools: &Pools = match pools_guard {
+            Ok(ref g) => g,
+            Err(_) => {
+                pools_owned = Pools::build(&self.cfg);
+                &pools_owned
+            }
+        };
+        let n = st.property.info.num_vertices as usize;
+        let p = st.property.num_shards();
         let ctx = ProgramContext { num_vertices: n as u64 };
         let max_iters = if self.cfg.max_iters > 0 {
             self.cfg.max_iters
@@ -748,14 +816,14 @@ impl VswEngine {
             ..Default::default()
         };
         let mut edges_processed = 0u64;
-        let out_deg = &self.vertex_info.degrees.out_deg;
+        let out_deg = &st.vertex_info.degrees.out_deg;
 
         // persistent per-run state: worker scratch arenas, the digest
         // array, the active-merge staging and the payload-buffer freelist
         // are allocated once here and reused by every iteration — the
         // zero-allocation steady state
         let mut scratch: Vec<WorkerScratch> =
-            (0..self.pool.threads()).map(|_| WorkerScratch::default()).collect();
+            (0..pools.compute.threads()).map(|_| WorkerScratch::default()).collect();
         let mut digest_buf: Vec<Digest> = Vec::new();
         let mut next_active: Vec<VertexId> = Vec::new();
         let mut run_index: Vec<(usize, usize, usize, usize, usize)> = Vec::new();
@@ -796,7 +864,7 @@ impl VswEngine {
             // governor: size this iteration's in-flight window (a finite
             // cache budget lends its unused bytes; an unbounded or disabled
             // cache imposes no loan) and pick the shard issue order
-            let window = if self.io_pool.is_some() {
+            let window = if pools.io.is_some() {
                 let lendable =
                     if self.cfg.cache_budget == 0 || self.cfg.cache_budget == usize::MAX {
                         None
@@ -807,9 +875,15 @@ impl VswEngine {
             } else {
                 0
             };
-            let order = if self.io_pool.is_some() {
-                self.governor
-                    .schedule(p, selective_now, digests, &self.blooms, &self.cache)
+            let order = if pools.io.is_some() {
+                self.governor.schedule(
+                    p,
+                    selective_now,
+                    digests,
+                    &st.blooms,
+                    &self.cache,
+                    &st.shard_epochs,
+                )
             } else {
                 Vec::new()
             };
@@ -826,11 +900,12 @@ impl VswEngine {
                 let dst_shared = SharedSlice::new(&mut dst);
                 let src_ref: &[V] = &src;
                 let cfg = &self.cfg;
-                let blooms = &self.blooms;
+                let blooms = &st.blooms;
                 let cache = &self.cache;
-                let shard_paths = &self.shard_paths;
-                let deltas = &self.deltas;
-                let property = &self.property;
+                let shard_paths = &st.shard_paths;
+                let shard_epochs = &st.shard_epochs;
+                let deltas = &st.deltas;
+                let property = &st.property;
                 let tol = cfg.convergence_tol;
                 let buf_pool = &buf_pool;
                 let decode_ns = &decode_ns;
@@ -895,7 +970,8 @@ impl VswEngine {
                     };
                     let built: Result<(WorkPayload, usize, u64)> = (|| {
                         if !use_stream {
-                            let mut csr = cache.fetch_decoded(shard, admit, read)?;
+                            let mut csr =
+                                cache.fetch_decoded(shard, shard_epochs[shard], admit, read)?;
                             check_interval(shard, csr.lo, csr.num_vertices())?;
                             let edges = eff_edges(shard, csr.num_edges() as u64);
                             // the xla path runs whole-shard kernels over a
@@ -913,7 +989,7 @@ impl VswEngine {
                             let chunks = chunks_of(csr.num_vertices());
                             return Ok((WorkPayload::Decoded(csr), chunks, edges));
                         }
-                        match cache.fetch_view(shard, admit, read)? {
+                        match cache.fetch_view(shard, shard_epochs[shard], admit, read)? {
                             ShardView::Decoded(csr) => {
                                 check_interval(shard, csr.lo, csr.num_vertices())?;
                                 let chunks = chunks_of(csr.num_vertices());
@@ -1070,7 +1146,7 @@ impl VswEngine {
                     }
                 };
 
-                if let Some(io_pool) = self.io_pool.as_ref().filter(|_| window > 0) {
+                if let Some(io_pool) = pools.io.as_ref().filter(|_| window > 0) {
                     // ---- pipelined path: the I/O pool produces ready
                     // shards (hottest first, per the governor's schedule)
                     // onto the chunk board; every compute worker claims
@@ -1106,8 +1182,9 @@ impl VswEngine {
                                 // window bounds — so they stay gated.
                                 let resident_streams = cache.codec() == Codec::None
                                     || (use_stream && cache.codec() == Codec::DeltaVarint);
-                                let fast_resident =
-                                    adaptive && resident_streams && cache.is_resident(shard);
+                                let fast_resident = adaptive
+                                    && resident_streams
+                                    && cache.is_resident(shard, shard_epochs[shard]);
                                 let mut holds_permit = if fast_resident {
                                     gate.try_acquire()
                                 } else {
@@ -1142,7 +1219,7 @@ impl VswEngine {
                                 board.push(work);
                             });
                         });
-                        self.pool.broadcast_with(scratch_ref, |s, _worker| loop {
+                        pools.compute.broadcast_with(scratch_ref, |s, _worker| loop {
                             let t_wait = Instant::now();
                             let claimed = board.claim();
                             let waited = t_wait.elapsed().as_nanos() as u64;
@@ -1174,7 +1251,7 @@ impl VswEngine {
                     // acquire and process whole shards off a shared cursor,
                     // chunk by chunk, with the same scratch arenas --------
                     let cursor = AtomicUsize::new(0);
-                    self.pool.broadcast_with(&mut scratch, |s, _worker| loop {
+                    pools.compute.broadcast_with(&mut scratch, |s, _worker| loop {
                         let shard = cursor.fetch_add(1, Ordering::Relaxed);
                         if shard >= p {
                             break;
@@ -1258,7 +1335,7 @@ impl VswEngine {
 
         stats.total_wall = t_run.elapsed();
         stats.edges_processed = edges_processed;
-        stats.memory_bytes = self.memory_estimate();
+        stats.memory_bytes = self.memory_estimate_for(st);
         Ok(RunResult { values: src, stats })
     }
 }
@@ -1605,7 +1682,7 @@ mod tests {
         use crate::graph::mutation::{self, Mutation};
         let edges = generator::erdos_renyi(128, 900, 21);
         let dir = build_dataset("epoch", &edges, 128, 128);
-        let mut engine = VswEngine::open(
+        let engine = VswEngine::open(
             dir.clone(),
             EngineConfig { threads: 2, selective: false, ..Default::default() },
         )

@@ -49,7 +49,7 @@ use crate::storage::delta::{self, DeltaShard};
 use crate::storage::format::frame;
 use crate::storage::property::Property;
 use crate::storage::vertexinfo::VertexInfo;
-use crate::storage::{io, shardfile, DatasetDir};
+use crate::storage::{durable, io, shardfile, DatasetDir};
 use crate::util::rng::Xoshiro256;
 
 /// One edge mutation.
@@ -190,6 +190,10 @@ pub fn ingest(dir: &DatasetDir, batch: &[Mutation], bloom_fpr: f64) -> Result<In
     let mut in_deg_delta = vec![0i64; n as usize];
     let (mut inserts, mut deletes, mut edges_removed) = (0u64, 0u64, 0u64);
     let mut touched = Vec::with_capacity(per_shard.len());
+    // every artifact the new epoch will reference, fsynced before the
+    // manifest publishes the reference (durability ordering: a crash after
+    // manifest.save must find the files it names complete on disk)
+    let mut new_artifacts: Vec<std::path::PathBuf> = Vec::new();
 
     for (&i, muts) in &per_shard {
         let (lo, hi) = property.interval(i);
@@ -264,6 +268,7 @@ pub fn ingest(dir: &DatasetDir, batch: &[Mutation], bloom_fpr: f64) -> Result<In
             let path = dir.delta_path(i, new_id);
             dshard.save(&path)?;
             shards[i].delta = Some(rel_name(&path));
+            new_artifacts.push(path);
         }
 
         // Bloom rebuilt over the *merged* source set (no stale sources from
@@ -286,6 +291,7 @@ pub fn ingest(dir: &DatasetDir, batch: &[Mutation], bloom_fpr: f64) -> Result<In
         let bpath = dir.epoch_bloom_path(i, new_id);
         io::write_file(&bpath, &frame(BLOOM_MAGIC, BLOOM_VERSION, &bloom.to_bytes()))?;
         shards[i].bloom = rel_name(&bpath);
+        new_artifacts.push(bpath);
         touched.push(i);
     }
 
@@ -301,9 +307,15 @@ pub fn ingest(dir: &DatasetDir, batch: &[Mutation], bloom_fpr: f64) -> Result<In
     }
     let vipath = dir.epoch_vertexinfo_path(new_id);
     VertexInfo::new(degrees).save(&vipath)?;
+    new_artifacts.push(vipath.clone());
 
     let bpath = dir.batch_path(new_id);
     delta::save_log(batch, &bpath)?;
+    new_artifacts.push(bpath.clone());
+
+    for p in &new_artifacts {
+        durable::sync_file(p)?;
+    }
 
     let num_edges = cur.num_edges + inserts - edges_removed;
     manifest.epochs.push(Epoch {
@@ -370,6 +382,7 @@ pub fn compact(dir: &DatasetDir, min_ratio: f64) -> Result<CompactReport> {
         merged.validate().with_context(|| format!("merged shard {i}"))?;
         let path = dir.epoch_shard_path(i, new_id);
         shardfile::save(&merged, &path)?;
+        durable::sync_file(&path)?;
         // edge set unchanged ⇒ the epoch's bloom stays valid; only the base
         // file (and its cache-invalidation epoch) moves
         shards[i] = EpochShard {

@@ -378,6 +378,41 @@ impl AnyValues {
         }
     }
 
+    /// Bit-exact text form of element `i` (float lanes as IEEE bit
+    /// patterns, integer lanes as decimal) — `None` past the end.  One
+    /// rendering shared by `--dump-values` and the serve protocol, so the
+    /// two can be compared byte for byte.
+    pub fn render_bits(&self, i: usize) -> Option<String> {
+        match self {
+            AnyValues::U32(v) => v.get(i).map(|x| format!("{x}")),
+            AnyValues::U64(v) => v.get(i).map(|x| format!("{x}")),
+            AnyValues::F32(v) => v.get(i).map(|x| format!("{:08x}", x.to_bits())),
+            AnyValues::F64(v) => v.get(i).map(|x| format!("{:016x}", x.to_bits())),
+        }
+    }
+
+    /// [`Self::render_bits`] over the whole vector, one line per vertex
+    /// with a trailing newline on each (the `--dump-values` file format).
+    pub fn render_bits_all(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        match self {
+            AnyValues::U32(v) => v.iter().for_each(|x| {
+                let _ = writeln!(s, "{x}");
+            }),
+            AnyValues::U64(v) => v.iter().for_each(|x| {
+                let _ = writeln!(s, "{x}");
+            }),
+            AnyValues::F32(v) => v.iter().for_each(|x| {
+                let _ = writeln!(s, "{:08x}", x.to_bits());
+            }),
+            AnyValues::F64(v) => v.iter().for_each(|x| {
+                let _ = writeln!(s, "{:016x}", x.to_bits());
+            }),
+        }
+        s
+    }
+
     /// Append the wire form: `[lane tag u32][count u64][raw LE elements]`.
     pub fn write(&self, out: &mut Vec<u8>) {
         out.extend_from_slice(&self.lane().tag().to_le_bytes());

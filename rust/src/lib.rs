@@ -35,6 +35,7 @@
 //! | [`baselines`] | PSW / ESG / DSW / VSP out-of-core engines + in-memory    |
 //! | [`iomodel`]   | Table II analytic I/O model                              |
 //! | [`runtime`]   | PJRT loading + execution of the AOT artifacts            |
+//! | [`server`]    | `graphmp serve`: resident engine, sessions, admission    |
 //! | [`coordinator`]| job specs, experiment drivers, report formatting        |
 //!
 //! ## The shard I/O pipeline
@@ -86,6 +87,7 @@ pub mod engine;
 pub mod graph;
 pub mod iomodel;
 pub mod runtime;
+pub mod server;
 pub mod sharding;
 pub mod storage;
 pub mod util;

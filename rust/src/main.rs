@@ -60,6 +60,8 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
         "generate" => cmd_generate(&args),
         "preprocess" => cmd_preprocess(&args),
         "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         "ingest" => cmd_ingest(&args),
         "compact" => cmd_compact(&args),
         "mutate-gen" => cmd_mutate_gen(&args),
@@ -112,6 +114,22 @@ USAGE:
                      [--dump-values <file>] write the result values as text
                                             (bit-exact, one per line)
                      [--throttle-mbps N]
+  graphmp serve      --listen 127.0.0.1:0 [--socket <path>] [--data <dir>]
+                     [--max-heavy 2] [--max-light 32] [--max-queue 16]
+                     [engine flags as for `run`]
+                     (resident daemon: keeps one engine per dataset loaded
+                      and serves epoch-pinned sessions over a line protocol;
+                      prints `listening <addr>` when ready.  `ingest`
+                      requests advance the dataset while open sessions keep
+                      reading their snapshot bit-identically)
+  graphmp client     --connect <addr> | --socket <path>  <request ...>
+                     [--dump-values <file>]
+                     (send one request line, e.g. `ping`, `open data=<dir>`,
+                      `run session=1 app=pagerank values=1`,
+                      `value session=1 app=pagerank vertex=7`,
+                      `ingest data=<dir> batch=<file>`, `shutdown`;
+                      --dump-values writes payload lines bit-identical to
+                      `run --dump-values`)
   graphmp ingest     --data <dir> --batch <file.gmdl|file.txt>
                      [--bloom-fpr 0.01]
                      (apply one mutation batch: `+ src dst [w]` inserts,
@@ -299,12 +317,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     let cfg = engine_config(args)?;
     let engine_name = cfg.backend.name();
     let engine = VswEngine::open(data.clone(), cfg)?;
+    let property = engine.property();
     eprintln!(
         "loaded {}: |V|={} |E|={} shards={} epoch={} (load {})",
-        engine.property.name,
-        humansize::count(engine.property.info.num_vertices),
-        humansize::count(engine.property.info.num_edges),
-        engine.property.num_shards(),
+        property.name,
+        humansize::count(property.info.num_vertices),
+        humansize::count(property.info.num_edges),
+        property.num_shards(),
         engine.epoch(),
         humansize::duration(engine.load_wall)
     );
@@ -363,34 +382,11 @@ fn cmd_run(args: &Args) -> Result<()> {
 
 /// Bit-exact text rendering of a value array (one line per vertex; float
 /// lanes as IEEE bit patterns) — what `--dump-values` writes, so CI can
-/// `cmp` two runs for exact equality.
+/// `cmp` two runs for exact equality.  The serve protocol renders values
+/// through the same [`graphmp::graph::AnyValues::render_bits_all`], so a
+/// daemon response compares byte for byte against a dump file.
 fn render_values(vals: &graphmp::graph::AnyValues) -> String {
-    use graphmp::graph::AnyValues;
-    use std::fmt::Write as _;
-    let mut s = String::new();
-    match vals {
-        AnyValues::F32(v) => {
-            for x in v {
-                let _ = writeln!(s, "{:08x}", x.to_bits());
-            }
-        }
-        AnyValues::F64(v) => {
-            for x in v {
-                let _ = writeln!(s, "{:016x}", x.to_bits());
-            }
-        }
-        AnyValues::U32(v) => {
-            for x in v {
-                let _ = writeln!(s, "{x}");
-            }
-        }
-        AnyValues::U64(v) => {
-            for x in v {
-                let _ = writeln!(s, "{x}");
-            }
-        }
-    }
-    s
+    vals.render_bits_all()
 }
 
 /// The `--incremental` decision tree: warm-start from the saved fixpoint
@@ -445,6 +441,116 @@ fn run_incremental(
             engine.run_any(app)
         }
     }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use graphmp::server::{Request, SchedulerConfig, Server};
+    let ecfg = engine_config(args)?;
+    let sched = SchedulerConfig {
+        max_light: args.get_usize("max-light", SchedulerConfig::default().max_light)?,
+        max_heavy: args.get_usize("max-heavy", SchedulerConfig::default().max_heavy)?,
+        max_queue: args.get_usize("max-queue", SchedulerConfig::default().max_queue)?,
+    };
+    let srv = Arc::new(Server::new(ecfg, sched)?);
+    // pre-load the named dataset so the first client doesn't pay the load
+    if let Some(data) = args.get("data") {
+        let resp = srv.handle(&Request::new("epoch").arg("data", data).render());
+        if let Some(msg) = &resp.error {
+            bail!("preloading {data}: {msg}");
+        }
+        eprintln!("preloaded {data} at epoch {}", resp.get("epoch").unwrap_or("?"));
+    }
+    let listener = std::net::TcpListener::bind(args.get_or("listen", "127.0.0.1:0"))
+        .context("binding --listen")?;
+    // the ready line clients and CI parse; flushed before blocking
+    println!("listening {}", listener.local_addr()?);
+    use std::io::Write as _;
+    std::io::stdout().flush()?;
+    #[cfg(unix)]
+    if let Some(sock) = args.get("socket") {
+        let path = PathBuf::from(sock);
+        let _ = std::fs::remove_file(&path);
+        let ul = std::os::unix::net::UnixListener::bind(&path)
+            .with_context(|| format!("binding --socket {sock}"))?;
+        println!("listening-unix {}", path.display());
+        std::io::stdout().flush()?;
+        let srv2 = srv.clone();
+        std::thread::spawn(move || {
+            let _ = srv2.serve_unix(ul, &path);
+        });
+    }
+    #[cfg(not(unix))]
+    anyhow::ensure!(args.get("socket").is_none(), "--socket is only available on unix");
+    srv.serve_tcp(listener)?;
+    eprintln!("serve: shut down");
+    Ok(())
+}
+
+fn client_roundtrip<S: std::io::Read + std::io::Write>(
+    mut stream: S,
+    line: &str,
+) -> Result<graphmp::server::Response> {
+    use std::io::Write as _;
+    stream.write_all(line.as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    graphmp::server::Response::read_from(&mut std::io::BufReader::new(stream))
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let request_line = args.positional()[1..].join(" ");
+    anyhow::ensure!(
+        !request_line.trim().is_empty(),
+        "client needs a request, e.g. `graphmp client --connect 127.0.0.1:4000 ping`"
+    );
+    let resp = match args.get("socket") {
+        Some(sock) => {
+            #[cfg(unix)]
+            let r = client_roundtrip(
+                std::os::unix::net::UnixStream::connect(sock)
+                    .with_context(|| format!("connecting to socket {sock}"))?,
+                &request_line,
+            )?;
+            #[cfg(not(unix))]
+            let r = {
+                let _ = sock;
+                bail!("--socket is only available on unix")
+            };
+            r
+        }
+        None => {
+            let addr = args.req("connect")?;
+            client_roundtrip(
+                std::net::TcpStream::connect(addr)
+                    .with_context(|| format!("connecting to {addr}"))?,
+                &request_line,
+            )?
+        }
+    };
+    if let Some(msg) = &resp.error {
+        bail!("server: {msg}");
+    }
+    let header: Vec<String> = resp
+        .kv
+        .iter()
+        .filter(|(k, _)| k != "lines")
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect();
+    println!("ok{}{}", if header.is_empty() { "" } else { " " }, header.join(" "));
+    if let Some(out) = args.get("dump-values") {
+        let mut s = String::with_capacity(resp.payload.len() * 9);
+        for l in &resp.payload {
+            s.push_str(l);
+            s.push('\n');
+        }
+        std::fs::write(out, s).with_context(|| format!("writing {out}"))?;
+        eprintln!("dumped {} values -> {out}", resp.payload.len());
+    } else {
+        for l in &resp.payload {
+            println!("{l}");
+        }
+    }
+    Ok(())
 }
 
 fn cmd_ingest(args: &Args) -> Result<()> {

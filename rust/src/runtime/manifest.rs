@@ -294,18 +294,22 @@ impl EpochManifest {
         Self::from_json(&Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?)
     }
 
-    /// Atomically replace `dir/epochs.json`: write to a temp file in the
-    /// same directory, then rename over the old manifest, so a concurrent
-    /// reader sees either the previous snapshot chain or the new one —
-    /// never a torn file.
+    /// Durably replace `dir/epochs.json` via
+    /// [`crate::storage::durable::write_atomic`]: tmp write → file fsync →
+    /// rename → parent-directory fsync.  A concurrent reader sees either
+    /// the previous snapshot chain or the new one (never a torn file), and
+    /// a crash at any point cannot lose the manifest every historical
+    /// epoch depends on.  Callers must fsync any artifacts a new epoch
+    /// references *before* calling this — publication makes them reachable.
     pub fn save(&self, dir: &DatasetDir) -> Result<()> {
         let path = dir.epochs_path();
         let tmp = dir.root.join(".epochs.json.tmp");
-        std::fs::write(&tmp, format!("{}\n", self.to_json()))
-            .with_context(|| format!("writing {}", tmp.display()))?;
-        std::fs::rename(&tmp, &path)
-            .with_context(|| format!("renaming into {}", path.display()))?;
-        Ok(())
+        crate::storage::durable::write_atomic(
+            &tmp,
+            &path,
+            format!("{}\n", self.to_json()).as_bytes(),
+        )
+        .with_context(|| format!("publishing {}", path.display()))
     }
 }
 
@@ -415,6 +419,22 @@ mod tests {
         assert_eq!(EpochManifest::load(&dir.epochs_path()).unwrap(), m);
         // load_or_bootstrap prefers the on-disk chain
         assert_eq!(EpochManifest::load_or_bootstrap(&dir, &p).unwrap(), m);
+        std::fs::remove_dir_all(&dir.root).unwrap();
+    }
+
+    #[test]
+    fn epoch_manifest_save_fsyncs_file_and_directory() {
+        let dir = DatasetDir::new(
+            std::env::temp_dir().join(format!("gmp_epochs_sync_{}", std::process::id())),
+        );
+        dir.create().unwrap();
+        let m = EpochManifest::bootstrap(&sample_property());
+        let spy = crate::storage::durable::FsyncSpy::new();
+        m.save(&dir).unwrap();
+        let (files, dirs) = spy.deltas();
+        assert!(files >= 1, "manifest tmp file must be fsynced before rename (saw {files})");
+        assert!(dirs >= 1, "dataset dir must be fsynced after rename (saw {dirs})");
+        assert_eq!(EpochManifest::load(&dir.epochs_path()).unwrap(), m);
         std::fs::remove_dir_all(&dir.root).unwrap();
     }
 

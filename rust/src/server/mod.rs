@@ -1,0 +1,548 @@
+//! `graphmp serve` — the resident multi-tenant engine.
+//!
+//! Opening a big dataset costs seconds to minutes (degree arrays, Bloom
+//! filters, cache warming); paying that per CLI invocation makes
+//! interactive use of a semi-external engine pointless.  The server keeps
+//! one [`VswEngine`] resident per dataset and speaks a line protocol
+//! ([`protocol`]) over localhost TCP and (on Unix) a Unix-domain socket —
+//! vendored end to end, no network dependencies.
+//!
+//! Three properties define the design:
+//!
+//! * **Epoch-pinned sessions** ([`session`]): `open` captures the
+//!   engine's current [`EpochState`] Arc; every `run`/`value`/`degree` on
+//!   that session reads that snapshot bit-identically, no matter how many
+//!   `ingest` requests advance the manifest underneath.  A new `open`
+//!   after an ingest sees the new epoch.  Pinning is structural — the
+//!   session holds the snapshot, there is nothing to forget to check.
+//! * **Admission control** ([`scheduler`]): heavy jobs (`run`, `ingest`,
+//!   first-touch engine loads) are capped at a small concurrency with a
+//!   bounded wait queue; light lookups have their own generous cap so
+//!   they never starve behind heavy work.  Queue overflow answers
+//!   `err busy` immediately.
+//! * **Serialized mutation**: per dataset, ingests take an exclusive lock
+//!   and then [`VswEngine::refresh_latest`] — concurrent readers are
+//!   never blocked, they just keep their epoch.
+
+mod protocol;
+mod scheduler;
+mod session;
+
+pub use protocol::{Request, Response};
+pub use scheduler::{JobClass, Scheduler, SchedulerConfig};
+pub use session::{Session, SessionRegistry};
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::apps;
+use crate::engine::{EngineConfig, VswEngine};
+use crate::graph::mutation;
+use crate::storage::{delta, DatasetDir};
+
+/// One resident dataset: the shared engine plus the mutation lock that
+/// serializes `ingest`/`refresh` against each other (readers never take
+/// it).
+struct EngineEntry {
+    dir: DatasetDir,
+    engine: VswEngine,
+    ingest_lock: Mutex<()>,
+}
+
+/// Where to poke a blocking accept loop so it re-checks the shutdown
+/// flag.
+enum WakeAddr {
+    Tcp(std::net::SocketAddr),
+    #[cfg(unix)]
+    Unix(PathBuf),
+}
+
+/// The daemon state behind every connection thread.
+pub struct Server {
+    ecfg: EngineConfig,
+    engines: Mutex<HashMap<PathBuf, Arc<EngineEntry>>>,
+    sessions: SessionRegistry,
+    sched: Scheduler,
+    shutdown: AtomicBool,
+    wakers: Mutex<Vec<WakeAddr>>,
+}
+
+impl Server {
+    /// `ecfg` is fixed for the daemon's lifetime and applies to every
+    /// dataset it opens — pass the same engine flags to `serve` as to the
+    /// `run` invocations you want to compare against.  An explicit
+    /// `--epoch` pin is rejected: the daemon's whole point is serving the
+    /// advancing latest epoch while sessions pin themselves.
+    pub fn new(ecfg: EngineConfig, sched: SchedulerConfig) -> Result<Self> {
+        anyhow::ensure!(
+            ecfg.epoch.is_none(),
+            "serve refuses --epoch: sessions pin epochs, the daemon follows the latest"
+        );
+        Ok(Self {
+            ecfg,
+            engines: Mutex::new(HashMap::new()),
+            sessions: SessionRegistry::default(),
+            sched: Scheduler::new(sched),
+            shutdown: AtomicBool::new(false),
+            wakers: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Resolve (or first-touch load) the resident engine for `data`.
+    /// Loading counts as a heavy job; a map hit is free.
+    fn engine_entry(&self, data: &str) -> Result<Arc<EngineEntry>> {
+        let dir = DatasetDir::new(data);
+        anyhow::ensure!(dir.exists(), "{} is not a preprocessed dataset", dir.root.display());
+        let key = std::fs::canonicalize(&dir.root).unwrap_or_else(|_| dir.root.clone());
+        if let Some(e) = self.engines.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let _ticket = self.sched.admit(JobClass::Heavy)?;
+        // the map lock is held across the load so a racing open of the
+        // same dataset waits for this one instead of loading twice
+        let mut map = self.engines.lock().unwrap();
+        if let Some(e) = map.get(&key) {
+            return Ok(e.clone());
+        }
+        let dir = DatasetDir::new(&key);
+        let engine = VswEngine::open(dir.clone(), self.ecfg.clone())
+            .with_context(|| format!("opening {}", key.display()))?;
+        let entry = Arc::new(EngineEntry { dir, engine, ingest_lock: Mutex::new(()) });
+        map.insert(key, entry.clone());
+        Ok(entry)
+    }
+
+    /// Handle one request line, producing exactly one response.  Pure
+    /// request/response — no connection state — so unit tests drive the
+    /// full command surface without a socket.
+    pub fn handle(&self, line: &str) -> Response {
+        let req = match protocol::handle_malformed(line) {
+            Ok(r) => r,
+            Err(resp) => return resp,
+        };
+        match self.dispatch(&req) {
+            Ok(resp) => resp,
+            Err(e) => Response::err(format!("{e:#}")),
+        }
+    }
+
+    fn dispatch(&self, req: &Request) -> Result<Response> {
+        match req.cmd.as_str() {
+            "ping" => Ok(Response::ok().with("pong", 1)),
+            "open" => self.cmd_open(req),
+            "close" => self.cmd_close(req),
+            "info" => self.cmd_info(req),
+            "epoch" => self.cmd_epoch(req),
+            "refresh" => self.cmd_refresh(req),
+            "stats" => Ok(self.cmd_stats()),
+            "run" => self.cmd_run(req),
+            "value" => self.cmd_value(req),
+            "degree" => self.cmd_degree(req),
+            "ingest" => self.cmd_ingest(req),
+            "shutdown" => {
+                self.shutdown.store(true, Ordering::SeqCst);
+                self.wake_listeners();
+                Ok(Response::ok().with("bye", 1))
+            }
+            other => bail!("unknown command {other:?}"),
+        }
+    }
+
+    fn cmd_open(&self, req: &Request) -> Result<Response> {
+        let entry = self.engine_entry(req.req("data")?)?;
+        let state = entry.engine.snapshot();
+        let session = self.sessions.open(entry.dir.root.clone(), state);
+        let st = &session.state;
+        Ok(Response::ok()
+            .with("session", session.id)
+            .with("epoch", st.epoch)
+            .with("vertices", st.property.info.num_vertices)
+            .with("edges", st.property.info.num_edges)
+            .with("shards", st.property.num_shards()))
+    }
+
+    fn cmd_close(&self, req: &Request) -> Result<Response> {
+        let id = req.req_u64("session")?;
+        Ok(Response::ok().with("closed", u8::from(self.sessions.close(id))))
+    }
+
+    fn cmd_info(&self, req: &Request) -> Result<Response> {
+        let _ticket = self.sched.admit(JobClass::Light)?;
+        // session → the pinned snapshot; data → the engine's current epoch
+        let (name, st) = match req.get_u64("session")? {
+            Some(id) => {
+                let s = self.sessions.get(id)?;
+                (s.state.property.name.clone(), s.state.clone())
+            }
+            None => {
+                let entry = self.engine_entry(req.req("data")?)?;
+                let st = entry.engine.snapshot();
+                (st.property.name.clone(), st)
+            }
+        };
+        Ok(Response::ok()
+            .with("name", name)
+            .with("epoch", st.epoch)
+            .with("vertices", st.property.info.num_vertices)
+            .with("edges", st.property.info.num_edges)
+            .with("shards", st.property.num_shards()))
+    }
+
+    fn cmd_epoch(&self, req: &Request) -> Result<Response> {
+        let entry = self.engine_entry(req.req("data")?)?;
+        Ok(Response::ok().with("epoch", entry.engine.epoch()))
+    }
+
+    /// Re-resolve the latest epoch after an out-of-band mutation (e.g. a
+    /// CLI `ingest` run against the same files while the daemon is up).
+    fn cmd_refresh(&self, req: &Request) -> Result<Response> {
+        let entry = self.engine_entry(req.req("data")?)?;
+        let _guard = entry.ingest_lock.lock().unwrap();
+        let epoch = entry.engine.refresh_latest()?;
+        Ok(Response::ok().with("epoch", epoch))
+    }
+
+    fn cmd_stats(&self) -> Response {
+        // deliberately unthrottled: this is how saturation is observed
+        let (light, heavy, queued) = self.sched.counts();
+        Response::ok()
+            .with("sessions", self.sessions.count())
+            .with("datasets", self.engines.lock().unwrap().len())
+            .with("light", light)
+            .with("heavy", heavy)
+            .with("queued", queued)
+    }
+
+    fn cmd_run(&self, req: &Request) -> Result<Response> {
+        let sid = req.req_u64("session")?;
+        let session = self.sessions.get(sid)?;
+        let app = apps::by_name(req.req("app")?)?;
+        let entry = self.engine_entry(&session.dataset.display().to_string())?;
+        let _ticket = self.sched.admit(JobClass::Heavy)?;
+        let t0 = Instant::now();
+        let result = entry.engine.run_any_pinned(&session.state, &app)?;
+        let values = Arc::new(result.values);
+        session.store_result(app.name(), values.clone());
+        let mut resp = Response::ok()
+            .with("session", sid)
+            .with("app", app.name())
+            .with("epoch", session.state.epoch)
+            .with("iters", result.stats.num_iters())
+            .with("vertices", values.len())
+            .with("wall_us", t0.elapsed().as_micros());
+        if req.get("values") == Some("1") {
+            let lines = (0..values.len())
+                .map(|i| values.render_bits(i).expect("index in range"))
+                .collect();
+            resp = resp.with_payload(lines);
+        }
+        Ok(resp)
+    }
+
+    fn cmd_value(&self, req: &Request) -> Result<Response> {
+        let _ticket = self.sched.admit(JobClass::Light)?;
+        let session = self.sessions.get(req.req_u64("session")?)?;
+        let app = req.req("app")?;
+        let vertex = req.req_u64("vertex")? as usize;
+        let values = session
+            .result(app)
+            .with_context(|| format!("no {app} values in session {} (run first)", session.id))?;
+        let bits = values
+            .render_bits(vertex)
+            .with_context(|| format!("vertex {vertex} out of range ({})", values.len()))?;
+        Ok(Response::ok()
+            .with("session", session.id)
+            .with("app", app)
+            .with("vertex", vertex)
+            .with("value", bits))
+    }
+
+    fn cmd_degree(&self, req: &Request) -> Result<Response> {
+        let _ticket = self.sched.admit(JobClass::Light)?;
+        let session = self.sessions.get(req.req_u64("session")?)?;
+        let vertex = req.req_u64("vertex")? as usize;
+        let deg = &session.state.vertex_info.degrees;
+        anyhow::ensure!(vertex < deg.in_deg.len(), "vertex {vertex} out of range");
+        Ok(Response::ok()
+            .with("session", session.id)
+            .with("vertex", vertex)
+            .with("in", deg.in_deg[vertex])
+            .with("out", deg.out_deg[vertex]))
+    }
+
+    fn cmd_ingest(&self, req: &Request) -> Result<Response> {
+        let entry = self.engine_entry(req.req("data")?)?;
+        let batch_path = PathBuf::from(req.req("batch")?);
+        let batch = delta::load_log_auto(&batch_path)
+            .with_context(|| format!("reading mutation batch {}", batch_path.display()))?;
+        let fpr = match req.get("bloom-fpr") {
+            Some(v) => v.parse::<f64>().context("bad bloom-fpr")?,
+            None => 0.01,
+        };
+        let _ticket = self.sched.admit(JobClass::Heavy)?;
+        let _guard = entry.ingest_lock.lock().unwrap();
+        let report = mutation::ingest(&entry.dir, &batch, fpr)?;
+        let epoch = entry.engine.refresh_latest()?;
+        Ok(Response::ok()
+            .with("epoch", epoch)
+            .with("inserts", report.inserts)
+            .with("deletes", report.deletes)
+            .with("removed", report.edges_removed)
+            .with("touched", report.touched_shards.len())
+            .with("edges", report.num_edges))
+    }
+
+    // ---- the byte-stream side ------------------------------------------
+
+    /// Serve one connection: request lines in, response blocks out, until
+    /// EOF or shutdown.
+    pub fn serve_stream<S: Read + Write>(&self, stream: S) {
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+            if line.trim().is_empty() {
+                continue;
+            }
+            let resp = self.handle(&line);
+            let out = resp.render();
+            let stream = reader.get_mut();
+            if stream.write_all(out.as_bytes()).is_err() || stream.flush().is_err() {
+                break;
+            }
+            if self.is_shutdown() {
+                break;
+            }
+        }
+    }
+
+    /// Accept loop over localhost TCP.  Registers the listener so a
+    /// `shutdown` request can poke the blocking accept.
+    pub fn serve_tcp(self: &Arc<Self>, listener: TcpListener) -> Result<()> {
+        let addr = listener.local_addr()?;
+        self.wakers.lock().unwrap().push(WakeAddr::Tcp(addr));
+        for conn in listener.incoming() {
+            if self.is_shutdown() {
+                break;
+            }
+            if let Ok(stream) = conn {
+                let srv = self.clone();
+                std::thread::spawn(move || srv.serve_stream(stream));
+            }
+        }
+        Ok(())
+    }
+
+    /// Accept loop over a Unix-domain socket (Unix only).
+    #[cfg(unix)]
+    pub fn serve_unix(
+        self: &Arc<Self>,
+        listener: std::os::unix::net::UnixListener,
+        path: &Path,
+    ) -> Result<()> {
+        self.wakers.lock().unwrap().push(WakeAddr::Unix(path.to_path_buf()));
+        for conn in listener.incoming() {
+            if self.is_shutdown() {
+                break;
+            }
+            if let Ok(stream) = conn {
+                let srv = self.clone();
+                std::thread::spawn(move || srv.serve_stream(stream));
+            }
+        }
+        let _ = std::fs::remove_file(path);
+        Ok(())
+    }
+
+    /// Poke every registered listener so its accept loop observes the
+    /// shutdown flag.
+    fn wake_listeners(&self) {
+        let wakers = self.wakers.lock().unwrap();
+        for w in wakers.iter() {
+            match w {
+                WakeAddr::Tcp(addr) => {
+                    let _ = std::net::TcpStream::connect(addr);
+                }
+                #[cfg(unix)]
+                WakeAddr::Unix(path) => {
+                    let _ = std::os::unix::net::UnixStream::connect(path);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::sharding::{preprocess, PreprocessConfig};
+
+    fn build_dataset(tag: &str) -> DatasetDir {
+        let dir = DatasetDir::new(
+            std::env::temp_dir().join(format!("gmp_serve_{tag}_{}", std::process::id())),
+        );
+        let _ = std::fs::remove_dir_all(&dir.root);
+        let edges = generator::erdos_renyi(128, 900, 77);
+        let cfg = PreprocessConfig { max_edges_per_shard: 128, bloom_fpr: 0.01 };
+        preprocess(tag, &edges, 128, &dir, &cfg).unwrap();
+        dir
+    }
+
+    fn server() -> Server {
+        Server::new(
+            EngineConfig { threads: 2, selective: false, ..Default::default() },
+            SchedulerConfig::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn rejects_epoch_pinned_config_and_unknown_commands() {
+        let err = Server::new(
+            EngineConfig { epoch: Some(0), ..Default::default() },
+            SchedulerConfig::default(),
+        );
+        assert!(err.is_err());
+        let srv = server();
+        assert!(srv.handle("frobnicate x=1").error.is_some());
+        assert!(srv.handle("open").error.is_some(), "missing data= must err, not panic");
+        assert!(srv.handle("ping").is_ok());
+    }
+
+    #[test]
+    fn sessions_stay_pinned_while_ingest_advances_the_epoch() {
+        let dir = build_dataset("pin");
+        let data = dir.root.display().to_string();
+        let srv = server();
+
+        let open1 = srv.handle(&Request::new("open").arg("data", &data).render());
+        assert!(open1.is_ok(), "{:?}", open1.error);
+        assert_eq!(open1.get("epoch"), Some("0"));
+        let s1 = open1.get("session").unwrap().to_string();
+
+        let run = Request::new("run")
+            .arg("session", &s1)
+            .arg("app", "pagerank")
+            .arg("values", "1")
+            .render();
+        let r1 = srv.handle(&run);
+        assert!(r1.is_ok(), "{:?}", r1.error);
+        assert_eq!(r1.payload.len(), 128);
+
+        // mutate through the daemon: s1 must not move
+        let batch = vec![
+            mutation::Mutation::Insert { src: 0, dst: 100, weight: 1.0 },
+            mutation::Mutation::Insert { src: 100, dst: 0, weight: 1.0 },
+        ];
+        let bpath = std::env::temp_dir().join(format!("gmp_serve_pin_{}.gmdl", std::process::id()));
+        delta::save_log(&batch, &bpath).unwrap();
+        let ing = srv.handle(
+            &Request::new("ingest")
+                .arg("data", &data)
+                .arg("batch", &bpath.display().to_string())
+                .render(),
+        );
+        assert!(ing.is_ok(), "{:?}", ing.error);
+        assert_eq!(ing.get("epoch"), Some("1"));
+
+        // the pinned session reproduces its pre-ingest payload exactly
+        let r1b = srv.handle(&run);
+        assert_eq!(r1b.payload, r1.payload, "pinned session drifted across an ingest");
+
+        // a fresh session sees the new epoch and different values
+        let open2 = srv.handle(&Request::new("open").arg("data", &data).render());
+        assert_eq!(open2.get("epoch"), Some("1"));
+        let s2 = open2.get("session").unwrap();
+        let r2 = srv.handle(
+            &Request::new("run")
+                .arg("session", s2)
+                .arg("app", "pagerank")
+                .arg("values", "1")
+                .render(),
+        );
+        assert!(r2.is_ok(), "{:?}", r2.error);
+        assert_ne!(r2.payload, r1.payload, "new epoch must change pagerank");
+
+        // value lookups are bit-exact echoes of the run payload
+        let v = srv.handle(
+            &Request::new("value")
+                .arg("session", &s1)
+                .arg("app", "pagerank")
+                .arg("vertex", "5")
+                .render(),
+        );
+        assert_eq!(v.get("value"), Some(r1.payload[5].as_str()));
+
+        // degree reads come from the pinned snapshot
+        let d = srv.handle(
+            &Request::new("degree").arg("session", &s1).arg("vertex", "0").render(),
+        );
+        assert!(d.is_ok(), "{:?}", d.error);
+
+        let c = srv.handle(&Request::new("close").arg("session", &s1).render());
+        assert_eq!(c.get("closed"), Some("1"));
+        assert!(srv
+            .handle(&Request::new("value")
+                .arg("session", &s1)
+                .arg("app", "pagerank")
+                .arg("vertex", "0")
+                .render())
+            .error
+            .is_some());
+        let _ = std::fs::remove_file(&bpath);
+        let _ = std::fs::remove_dir_all(&dir.root);
+    }
+
+    #[test]
+    fn tcp_round_trip_serves_and_shuts_down() {
+        let dir = build_dataset("tcp");
+        let data = dir.root.display().to_string();
+        let srv = Arc::new(server());
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let srv2 = srv.clone();
+        let accept = std::thread::spawn(move || srv2.serve_tcp(listener).unwrap());
+
+        let stream = std::net::TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut send = |line: String| -> Response {
+            let mut s = stream.try_clone().unwrap();
+            s.write_all(line.as_bytes()).unwrap();
+            s.flush().unwrap();
+            Response::read_from(&mut reader).unwrap()
+        };
+        assert!(send(Request::new("ping").render()).is_ok());
+        let open = send(Request::new("open").arg("data", &data).render());
+        assert!(open.is_ok(), "{:?}", open.error);
+        let run = send(
+            Request::new("run")
+                .arg("session", open.get("session").unwrap())
+                .arg("app", "wcc")
+                .arg("values", "1")
+                .render(),
+        );
+        assert!(run.is_ok(), "{:?}", run.error);
+        assert_eq!(run.payload.len(), 128);
+        let bye = send(Request::new("shutdown").render());
+        assert!(bye.is_ok());
+        accept.join().unwrap();
+        assert!(srv.is_shutdown());
+        let _ = std::fs::remove_dir_all(&dir.root);
+    }
+}

@@ -1,0 +1,267 @@
+//! The serve line protocol: one request per line, one response per
+//! request, plain UTF-8 over any byte stream (localhost TCP or a Unix
+//! socket).  No framing library, no serialization dependency — the whole
+//! wire format is:
+//!
+//! ```text
+//! request  := cmd [SP key=value]* LF
+//! response := ("ok" [SP key=value]*) | ("err" SP message) LF
+//!             payload-line{N} LF               -- iff the header carries lines=N
+//! ```
+//!
+//! Keys are bare identifiers; values and error messages are
+//! percent-escaped so embedded spaces, `%`, `=` and control characters
+//! survive the line discipline.  Payload lines are raw (the bit-exact
+//! value rendering never contains specials), which keeps a `run values=1`
+//! payload byte-for-byte identical to a `--dump-values` file.
+
+use anyhow::{bail, Context, Result};
+use std::io::BufRead;
+
+/// Percent-escape everything a `key=value` token can't carry verbatim.
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            ' ' | '%' | '=' | '\x00'..='\x1f' | '\x7f' => {
+                out.push('%');
+                out.push_str(&format!("{:02x}", c as u32));
+            }
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Invert [`escape`].  Rejects truncated or non-hex escapes.
+pub fn unescape(s: &str) -> Result<String> {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'%' {
+            anyhow::ensure!(i + 2 < bytes.len(), "truncated escape in {s:?}");
+            let hex = std::str::from_utf8(&bytes[i + 1..i + 3])?;
+            out.push(u8::from_str_radix(hex, 16).with_context(|| format!("bad escape %{hex}"))?);
+            i += 3;
+        } else {
+            out.push(bytes[i]);
+            i += 1;
+        }
+    }
+    String::from_utf8(out).context("unescaped request is not UTF-8")
+}
+
+/// A parsed request line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub cmd: String,
+    pub kv: Vec<(String, String)>,
+}
+
+impl Request {
+    pub fn new(cmd: &str) -> Self {
+        Self { cmd: cmd.to_string(), kv: Vec::new() }
+    }
+
+    pub fn arg(mut self, key: &str, value: &str) -> Self {
+        self.kv.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn parse(line: &str) -> Result<Request> {
+        let line = line.trim_end_matches(['\r', '\n']);
+        let mut tokens = line.split(' ').filter(|t| !t.is_empty());
+        let cmd = tokens.next().context("empty request")?.to_string();
+        let mut kv = Vec::new();
+        for t in tokens {
+            let (k, v) = t.split_once('=').with_context(|| format!("bad token {t:?}"))?;
+            kv.push((k.to_string(), unescape(v)?));
+        }
+        Ok(Request { cmd, kv })
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = self.cmd.clone();
+        for (k, v) in &self.kv {
+            s.push(' ');
+            s.push_str(k);
+            s.push('=');
+            s.push_str(&escape(v));
+        }
+        s.push('\n');
+        s
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.get(key).with_context(|| format!("{}: missing {key}=", self.cmd))
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        self.get(key)
+            .map(|v| v.parse::<u64>().with_context(|| format!("{}: bad {key}={v:?}", self.cmd)))
+            .transpose()
+    }
+
+    pub fn req_u64(&self, key: &str) -> Result<u64> {
+        self.get_u64(key)?.with_context(|| format!("{}: missing {key}=", self.cmd))
+    }
+}
+
+/// A response: header keys plus optional payload lines.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    /// `None` = ok; `Some(msg)` = error.
+    pub error: Option<String>,
+    pub kv: Vec<(String, String)>,
+    pub payload: Vec<String>,
+}
+
+impl Response {
+    pub fn ok() -> Self {
+        Self { error: None, kv: Vec::new(), payload: Vec::new() }
+    }
+
+    pub fn err(msg: impl std::fmt::Display) -> Self {
+        Self { error: Some(msg.to_string()), kv: Vec::new(), payload: Vec::new() }
+    }
+
+    pub fn with(mut self, key: &str, value: impl std::fmt::Display) -> Self {
+        self.kv.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn with_payload(mut self, lines: Vec<String>) -> Self {
+        self.payload = lines;
+        self
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Wire form, `lines=N` appended automatically when a payload rides
+    /// along.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        match &self.error {
+            Some(msg) => {
+                s.push_str("err ");
+                s.push_str(&escape(msg));
+            }
+            None => {
+                s.push_str("ok");
+                for (k, v) in &self.kv {
+                    s.push(' ');
+                    s.push_str(k);
+                    s.push('=');
+                    s.push_str(&escape(v));
+                }
+                if !self.payload.is_empty() {
+                    s.push_str(&format!(" lines={}", self.payload.len()));
+                }
+            }
+        }
+        s.push('\n');
+        for line in &self.payload {
+            s.push_str(line);
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Client side: read one response (header + declared payload lines)
+    /// off a buffered stream.
+    pub fn read_from(reader: &mut impl BufRead) -> Result<Response> {
+        let mut header = String::new();
+        anyhow::ensure!(reader.read_line(&mut header)? > 0, "connection closed");
+        let header = header.trim_end_matches(['\r', '\n']);
+        if let Some(msg) = header.strip_prefix("err ") {
+            return Ok(Response::err(unescape(msg)?));
+        }
+        let rest = match header {
+            "ok" => "",
+            _ => header.strip_prefix("ok ").with_context(|| format!("bad response {header:?}"))?,
+        };
+        let mut kv = Vec::new();
+        for t in rest.split(' ').filter(|t| !t.is_empty()) {
+            let (k, v) = t.split_once('=').with_context(|| format!("bad token {t:?}"))?;
+            kv.push((k.to_string(), unescape(v)?));
+        }
+        let n: usize = match kv.iter().find(|(k, _)| k == "lines") {
+            Some((_, v)) => v.parse().context("bad lines= count")?,
+            None => 0,
+        };
+        let mut payload = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut line = String::new();
+            anyhow::ensure!(reader.read_line(&mut line)? > 0, "payload truncated");
+            while line.ends_with('\n') || line.ends_with('\r') {
+                line.pop();
+            }
+            payload.push(line);
+        }
+        Ok(Response { error: None, kv, payload })
+    }
+}
+
+/// Parse a request line, surfacing malformed input as an `err` response
+/// instead of tearing the connection down.
+pub fn handle_malformed(line: &str) -> std::result::Result<Request, Response> {
+    Request::parse(line).map_err(|e| Response::err(format!("{e:#}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escape_roundtrips_specials() {
+        for s in ["plain", "with space", "a=b%c", "tab\there", "nl\nthere", ""] {
+            assert_eq!(unescape(&escape(s)).unwrap(), s, "roundtrip {s:?}");
+        }
+        assert!(unescape("%zz").is_err());
+        assert!(unescape("%1").is_err());
+    }
+
+    #[test]
+    fn request_roundtrips_through_wire_form() {
+        let r = Request::new("open").arg("data", "/tmp/my data").arg("epoch", "3");
+        let back = Request::parse(&r.render()).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.get("data"), Some("/tmp/my data"));
+        assert_eq!(back.req_u64("epoch").unwrap(), 3);
+        assert!(back.req("missing").is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_with_payload() {
+        let resp = Response::ok()
+            .with("epoch", 2)
+            .with("app", "pagerank")
+            .with_payload(vec!["3f800000".into(), "00000000".into()]);
+        let wire = resp.render();
+        assert!(wire.starts_with("ok epoch=2 app=pagerank lines=2\n"), "{wire:?}");
+        let mut r = std::io::BufReader::new(wire.as_bytes());
+        let back = Response::read_from(&mut r).unwrap();
+        assert!(back.is_ok());
+        assert_eq!(back.get("epoch"), Some("2"));
+        assert_eq!(back.payload, vec!["3f800000", "00000000"]);
+    }
+
+    #[test]
+    fn error_responses_carry_escaped_messages() {
+        let resp = Response::err("no such session 7 (closed?)");
+        let mut r = std::io::BufReader::new(resp.render().as_bytes());
+        let back = Response::read_from(&mut r).unwrap();
+        assert_eq!(back.error.as_deref(), Some("no such session 7 (closed?)"));
+    }
+}

@@ -1,0 +1,127 @@
+//! Read sessions: each one pins an [`EpochState`] snapshot at `open` time
+//! and keeps reading it — bit-identically — no matter how many ingests
+//! advance the dataset underneath.  Closing the session (or the daemon
+//! dropping it) releases the snapshot's Arc, letting the old epoch's
+//! resident state go away once the last reader is done.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::engine::EpochState;
+use crate::graph::AnyValues;
+
+/// One client session: an epoch-pinned view of one dataset.
+pub struct Session {
+    pub id: u64,
+    pub dataset: PathBuf,
+    /// The snapshot this session reads; never replaced for the session's
+    /// lifetime (epoch pinning is structural, not advisory).
+    pub state: Arc<EpochState>,
+    /// Fixpoints computed by this session, keyed by app name, for `value`
+    /// lookups without re-running.
+    results: Mutex<HashMap<String, Arc<AnyValues>>>,
+}
+
+impl Session {
+    pub fn store_result(&self, app: &str, values: Arc<AnyValues>) {
+        self.results.lock().unwrap().insert(app.to_string(), values);
+    }
+
+    pub fn result(&self, app: &str) -> Option<Arc<AnyValues>> {
+        self.results.lock().unwrap().get(app).cloned()
+    }
+}
+
+/// The daemon's session table.
+#[derive(Default)]
+pub struct SessionRegistry {
+    next_id: AtomicU64,
+    map: Mutex<HashMap<u64, Arc<Session>>>,
+}
+
+impl SessionRegistry {
+    pub fn open(&self, dataset: PathBuf, state: Arc<EpochState>) -> Arc<Session> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let session =
+            Arc::new(Session { id, dataset, state, results: Mutex::new(HashMap::new()) });
+        self.map.lock().unwrap().insert(id, session.clone());
+        session
+    }
+
+    pub fn get(&self, id: u64) -> Result<Arc<Session>> {
+        self.map
+            .lock()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .with_context(|| format!("no such session {id} (closed?)"))
+    }
+
+    /// Returns whether the session existed.
+    pub fn close(&self, id: u64) -> bool {
+        self.map.lock().unwrap().remove(&id).is_some()
+    }
+
+    pub fn count(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_state() -> Arc<EpochState> {
+        Arc::new(EpochState {
+            epoch: 3,
+            property: crate::storage::property::Property {
+                name: "t".into(),
+                info: crate::graph::GraphInfo {
+                    num_vertices: 4,
+                    num_edges: 0,
+                    max_in_degree: 0,
+                    max_out_degree: 0,
+                },
+                intervals: vec![0, 4],
+            },
+            vertex_info: crate::storage::vertexinfo::VertexInfo::new(crate::graph::Degrees {
+                in_deg: vec![0; 4],
+                out_deg: vec![0; 4],
+            }),
+            blooms: Vec::new(),
+            shard_paths: Vec::new(),
+            shard_epochs: Vec::new(),
+            deltas: Vec::new(),
+        })
+    }
+
+    #[test]
+    fn sessions_open_pin_and_close() {
+        let reg = SessionRegistry::default();
+        let st = dummy_state();
+        let s1 = reg.open(PathBuf::from("/a"), st.clone());
+        let s2 = reg.open(PathBuf::from("/a"), st);
+        assert_ne!(s1.id, s2.id);
+        assert_eq!(reg.count(), 2);
+        assert_eq!(reg.get(s1.id).unwrap().state.epoch, 3);
+        assert!(reg.close(s1.id));
+        assert!(!reg.close(s1.id), "double close must report absence");
+        assert!(reg.get(s1.id).is_err());
+        assert_eq!(reg.count(), 1);
+    }
+
+    #[test]
+    fn results_are_stored_per_app() {
+        let reg = SessionRegistry::default();
+        let s = reg.open(PathBuf::from("/a"), dummy_state());
+        assert!(s.result("pagerank").is_none());
+        s.store_result("pagerank", Arc::new(AnyValues::U32(vec![1, 2, 3])));
+        let v = s.result("pagerank").unwrap();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v.render_bits(1).as_deref(), Some("2"));
+    }
+}

@@ -1,0 +1,155 @@
+//! Crash-durable file publication: fsync-then-rename with observable sync
+//! counts.
+//!
+//! A bare `write` + `rename` is *atomic* (a concurrent reader sees the old
+//! or the new file, never a torn one) but not *durable*: after a crash the
+//! filesystem may replay the rename without the data blocks it points at,
+//! leaving a zero-length or garbage target — or lose the rename entirely
+//! even though the caller was told the ingest succeeded.  The POSIX recipe
+//! for "this file now exists with these bytes, even across power loss" is:
+//!
+//! 1. write the bytes to a temp file **in the same directory** as the
+//!    target (rename must not cross filesystems),
+//! 2. `fsync` the temp file (data + inode reach the platter),
+//! 3. `rename` it over the target,
+//! 4. `fsync` the **parent directory** (the rename itself is a directory
+//!    entry update; until the directory's metadata is synced the new name
+//!    may vanish on crash).
+//!
+//! [`write_atomic`] performs all four steps.  [`sync_file`] flushes an
+//! already-written artifact before a manifest publishes a reference to it
+//! (referenced files must be durable *before* the reference is).
+//!
+//! Every sync is counted in process-wide counters ([`file_syncs`] /
+//! [`dir_syncs`]) so tests can assert the write path really issued them —
+//! the [`FsyncSpy`] helper snapshots the counters and reports deltas.
+//! Counters are two relaxed atomic increments per publication; the fsyncs
+//! themselves dominate by orders of magnitude.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{Context, Result};
+
+static FILE_SYNCS: AtomicU64 = AtomicU64::new(0);
+static DIR_SYNCS: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of file `fsync`s issued through this module.
+pub fn file_syncs() -> u64 {
+    FILE_SYNCS.load(Ordering::Relaxed)
+}
+
+/// Process-wide count of directory `fsync`s issued through this module.
+pub fn dir_syncs() -> u64 {
+    DIR_SYNCS.load(Ordering::Relaxed)
+}
+
+/// Flush an existing file's data and metadata to stable storage.
+pub fn sync_file(path: &Path) -> Result<()> {
+    let f = File::open(path).with_context(|| format!("opening {} to fsync", path.display()))?;
+    f.sync_all().with_context(|| format!("fsync {}", path.display()))?;
+    FILE_SYNCS.fetch_add(1, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Flush a directory's entry table to stable storage — the step that makes
+/// a rename (or create) inside it survive a crash.
+pub fn sync_dir(dir: &Path) -> Result<()> {
+    // opening a directory read-only and calling fsync on it is the portable
+    // unix idiom; on platforms where directories cannot be fsynced the
+    // open itself fails and we degrade to rename-only atomicity
+    match File::open(dir) {
+        Ok(d) => {
+            d.sync_all().with_context(|| format!("fsync dir {}", dir.display()))?;
+            DIR_SYNCS.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::Unsupported => Ok(()),
+        Err(e) => Err(e).with_context(|| format!("opening dir {} to fsync", dir.display())),
+    }
+}
+
+/// Durably replace `dst` with `bytes`: tmp write → file fsync → rename →
+/// parent-directory fsync.  `tmp` must live in the same directory as `dst`.
+/// On return, a crash at any point leaves either the complete old file or
+/// the complete new file at `dst` — never a missing or torn one.
+pub fn write_atomic(tmp: &Path, dst: &Path, bytes: &[u8]) -> Result<()> {
+    {
+        let mut f = OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+        FILE_SYNCS.fetch_add(1, Ordering::Relaxed);
+    }
+    std::fs::rename(tmp, dst)
+        .with_context(|| format!("renaming {} into {}", tmp.display(), dst.display()))?;
+    let parent = dst.parent().unwrap_or_else(|| Path::new("."));
+    sync_dir(parent)
+}
+
+/// Snapshot of the sync counters for test assertions: construct before the
+/// code under test, then ask how many syncs it issued.
+pub struct FsyncSpy {
+    files_before: u64,
+    dirs_before: u64,
+}
+
+impl FsyncSpy {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        Self { files_before: file_syncs(), dirs_before: dir_syncs() }
+    }
+
+    /// (file fsyncs, directory fsyncs) issued since construction.  Counters
+    /// are process-wide, so concurrent tests can only *inflate* the deltas;
+    /// asserting `>= n` stays sound under parallel test execution.
+    pub fn deltas(&self) -> (u64, u64) {
+        (
+            file_syncs().saturating_sub(self.files_before),
+            dir_syncs().saturating_sub(self.dirs_before),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_atomic_publishes_bytes_and_syncs_both_levels() {
+        let dir = std::env::temp_dir().join(format!("gmp_durable_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let dst = dir.join("target.json");
+        let tmp = dir.join(".target.json.tmp");
+        let spy = FsyncSpy::new();
+        write_atomic(&tmp, &dst, b"{\"v\":1}\n").unwrap();
+        let (files, dirs) = spy.deltas();
+        assert!(files >= 1, "tmp file must be fsynced before the rename");
+        assert!(dirs >= 1, "parent dir must be fsynced after the rename");
+        assert!(!tmp.exists(), "tmp must be renamed away");
+        assert_eq!(std::fs::read(&dst).unwrap(), b"{\"v\":1}\n");
+        // overwrite goes through the same path
+        write_atomic(&tmp, &dst, b"{\"v\":2}\n").unwrap();
+        assert_eq!(std::fs::read(&dst).unwrap(), b"{\"v\":2}\n");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sync_file_counts_and_errors_on_missing() {
+        let dir = std::env::temp_dir().join(format!("gmp_durable_sf_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("artifact.bin");
+        std::fs::write(&p, b"abc").unwrap();
+        let spy = FsyncSpy::new();
+        sync_file(&p).unwrap();
+        assert!(spy.deltas().0 >= 1);
+        assert!(sync_file(&dir.join("nope.bin")).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -12,6 +12,7 @@
 //! container whose page cache would otherwise hide them.
 
 pub mod delta;
+pub mod durable;
 pub mod format;
 pub mod io;
 pub mod prefetch;

@@ -30,6 +30,8 @@ fn help_lists_subcommands() {
         "ingest",
         "compact",
         "mutate-gen",
+        "serve",
+        "client",
     ] {
         assert!(text.contains(cmd), "help missing {cmd}");
     }

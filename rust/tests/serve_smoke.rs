@@ -1,0 +1,308 @@
+//! The resident-engine acceptance bar, at two levels.
+//!
+//! * **Library**: `run_pinned` against a snapshot taken before a burst of
+//!   ingests must stay bit-identical to an engine opened with
+//!   `epoch: Some(0)` — while the ingests and `refresh_latest` happen
+//!   concurrently on other threads, against the *same* engine instance.
+//! * **Black box**: a real `graphmp serve` daemon, driven through the
+//!   `graphmp client` binary over TCP (and a bare Unix socket leg):
+//!   sessions opened before an ingest keep reproducing their epoch's
+//!   values byte-for-byte (`values=1` payload vs `run --dump-values`),
+//!   new sessions see the new epoch, and `shutdown` actually exits.
+
+use std::io::{BufRead, BufReader, Read};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use graphmp::apps::PageRank;
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::graph::generator;
+use graphmp::graph::mutation::{self, Mutation};
+use graphmp::sharding::{preprocess, PreprocessConfig};
+use graphmp::storage::DatasetDir;
+
+fn workdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gmp_srvsmoke_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+// ---- library level ------------------------------------------------------
+
+#[test]
+fn pinned_runs_stay_bit_exact_while_ingests_advance_concurrently() {
+    let dir = DatasetDir::new(workdir("lib").join("data.gmp"));
+    let edges = generator::erdos_renyi(128, 900, 77);
+    let cfg = PreprocessConfig { max_edges_per_shard: 128, bloom_fpr: 0.01 };
+    preprocess("srvlib", &edges, 128, &dir, &cfg).unwrap();
+
+    let ecfg = EngineConfig { threads: 3, max_iters: 20, ..Default::default() };
+    let engine = Arc::new(VswEngine::open(dir.clone(), ecfg.clone()).unwrap());
+    let st0 = engine.snapshot();
+    assert_eq!(st0.epoch, 0);
+
+    // ground truth for epoch 0: a separate engine opened pinned to it
+    let expect = {
+        let pinned = VswEngine::open(dir.clone(), EngineConfig { epoch: Some(0), ..ecfg.clone() })
+            .unwrap();
+        bits(&pinned.run(&PageRank::default()).unwrap().values)
+    };
+
+    // two reader threads hammer the pre-ingest snapshot...
+    let barrier = Arc::new(Barrier::new(3));
+    let handles: Vec<_> = (0..2)
+        .map(|_| {
+            let (engine, st0, barrier, expect) =
+                (engine.clone(), st0.clone(), barrier.clone(), expect.clone());
+            std::thread::spawn(move || {
+                barrier.wait();
+                for _ in 0..2 {
+                    let got = bits(&engine.run_pinned(&st0, &PageRank::default()).unwrap().values);
+                    assert_eq!(got, expect, "pinned run drifted during concurrent ingest");
+                }
+            })
+        })
+        .collect();
+
+    // ...while this thread advances the dataset underneath them, twice
+    barrier.wait();
+    for (i, batch) in [
+        vec![
+            Mutation::Insert { src: 0, dst: 100, weight: 1.0 },
+            Mutation::Insert { src: 100, dst: 0, weight: 1.0 },
+        ],
+        vec![
+            Mutation::Insert { src: 5, dst: 17, weight: 1.0 },
+            Mutation::Delete { src: 0, dst: 100 },
+        ],
+    ]
+    .iter()
+    .enumerate()
+    {
+        mutation::ingest(&dir, batch, 0.01).unwrap();
+        assert_eq!(engine.refresh_latest().unwrap(), i as u64 + 1);
+    }
+    let latest = bits(&engine.run(&PageRank::default()).unwrap().values);
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(engine.epoch(), 2);
+    assert_ne!(latest, expect, "inserted edges must change pagerank at the new epoch");
+
+    // the pre-ingest snapshot is still reproducible after the dust settles
+    let again = bits(&engine.run_pinned(&st0, &PageRank::default()).unwrap().values);
+    assert_eq!(again, expect);
+    let _ = std::fs::remove_dir_all(dir.root.parent().unwrap());
+}
+
+// ---- black box ----------------------------------------------------------
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_graphmp"))
+}
+
+fn run_ok(cmd: &mut Command) -> String {
+    let out = cmd.output().unwrap();
+    assert!(
+        out.status.success(),
+        "command failed: {}\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+/// Extract `key=value` from a client `ok ...` header line.
+fn kv(stdout: &str, key: &str) -> String {
+    let prefix = format!("{key}=");
+    stdout
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix(&prefix))
+        .unwrap_or_else(|| panic!("no {key}= in {stdout:?}"))
+        .to_string()
+}
+
+/// Spawn `graphmp serve`, wait for its ready line, and keep the pipes
+/// drained so the daemon can never block on a full pipe buffer.
+fn spawn_daemon(extra: &[&str]) -> (Child, String) {
+    let mut child = bin()
+        .arg("serve")
+        .args(["--listen", "127.0.0.1:0"])
+        .args(extra)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+    let mut stdout = BufReader::new(child.stdout.take().unwrap());
+    let mut ready = String::new();
+    stdout.read_line(&mut ready).unwrap();
+    let addr = ready
+        .trim()
+        .strip_prefix("listening ")
+        .unwrap_or_else(|| panic!("bad ready line {ready:?}"))
+        .to_string();
+    std::thread::spawn(move || {
+        let mut rest = String::new();
+        let _ = stdout.read_to_string(&mut rest);
+    });
+    let mut stderr = child.stderr.take().unwrap();
+    std::thread::spawn(move || {
+        let mut rest = String::new();
+        let _ = stderr.read_to_string(&mut rest);
+    });
+    (child, addr)
+}
+
+fn wait_exit(child: &mut Child, what: &str) {
+    let t0 = Instant::now();
+    loop {
+        if let Some(status) = child.try_wait().unwrap() {
+            assert!(status.success(), "{what}: daemon exited with {status}");
+            return;
+        }
+        if t0.elapsed() > Duration::from_secs(60) {
+            let _ = child.kill();
+            panic!("{what}: daemon did not exit after shutdown");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+#[test]
+fn serve_daemon_pins_sessions_across_ingest_byte_for_byte() {
+    let d = workdir("daemon");
+    let edges = d.join("edges.bin");
+    let data = d.join("data.gmp");
+    run_ok(bin().args(["generate", "--dataset", "tiny", "--out"]).arg(&edges));
+    run_ok(bin().args(["preprocess", "--input"]).arg(&edges).args(["--out"]).arg(&data));
+    let data = data.display().to_string();
+
+    let (mut child, addr) = spawn_daemon(&[]);
+    let client = |tokens: &[&str], dump: Option<&Path>| -> String {
+        let mut c = bin();
+        c.args(["client", "--connect", &addr]);
+        if let Some(p) = dump {
+            c.arg("--dump-values").arg(p);
+        }
+        run_ok(c.args(tokens))
+    };
+
+    assert_eq!(kv(&client(&["ping"], None), "pong"), "1");
+
+    // session 1 pins epoch 0; its payload matches `run --dump-values`
+    let open1 = client(&["open", &format!("data={data}")], None);
+    assert_eq!(kv(&open1, "epoch"), "0");
+    let s1 = kv(&open1, "session");
+    let srv0 = d.join("srv0.txt");
+    let run1 = client(
+        &["run", &format!("session={s1}"), "app=pagerank", "values=1"],
+        Some(&srv0),
+    );
+    assert_eq!(kv(&run1, "epoch"), "0");
+    let cli0 = d.join("cli0.txt");
+    run_ok(
+        bin()
+            .args(["run", "--data", &data, "--app", "pagerank", "--dump-values"])
+            .arg(&cli0),
+    );
+    assert_eq!(
+        std::fs::read(&srv0).unwrap(),
+        std::fs::read(&cli0).unwrap(),
+        "serve payload must be byte-identical to run --dump-values"
+    );
+
+    // ingest through the daemon: the dataset moves to epoch 1...
+    let batch = d.join("b.gmdl");
+    run_ok(
+        bin()
+            .args(["mutate-gen", "--data", &data])
+            .args(["--count", "40", "--seed", "9", "--delete-fraction", "0.25", "--out"])
+            .arg(&batch),
+    );
+    let ing = client(
+        &["ingest", &format!("data={data}"), &format!("batch={}", batch.display())],
+        None,
+    );
+    assert_eq!(kv(&ing, "epoch"), "1");
+
+    // ...but session 1 keeps reproducing epoch 0, byte for byte
+    let srv0b = d.join("srv0b.txt");
+    let run1b = client(
+        &["run", &format!("session={s1}"), "app=pagerank", "values=1"],
+        Some(&srv0b),
+    );
+    assert_eq!(kv(&run1b, "epoch"), "0");
+    assert_eq!(
+        std::fs::read(&srv0).unwrap(),
+        std::fs::read(&srv0b).unwrap(),
+        "pinned session drifted across an ingest"
+    );
+
+    // a fresh session sees epoch 1 and matches a fresh CLI run
+    let open2 = client(&["open", &format!("data={data}")], None);
+    assert_eq!(kv(&open2, "epoch"), "1");
+    let s2 = kv(&open2, "session");
+    let srv1 = d.join("srv1.txt");
+    client(&["run", &format!("session={s2}"), "app=pagerank", "values=1"], Some(&srv1));
+    let cli1 = d.join("cli1.txt");
+    run_ok(
+        bin()
+            .args(["run", "--data", &data, "--app", "pagerank", "--dump-values"])
+            .arg(&cli1),
+    );
+    assert_eq!(std::fs::read(&srv1).unwrap(), std::fs::read(&cli1).unwrap());
+    assert_ne!(
+        std::fs::read(&cli0).unwrap(),
+        std::fs::read(&cli1).unwrap(),
+        "the ingest must change pagerank"
+    );
+
+    // the old epoch stays reachable from the CLI too
+    let cli0b = d.join("cli0b.txt");
+    run_ok(
+        bin()
+            .args(["run", "--data", &data, "--app", "pagerank", "--epoch", "0", "--dump-values"])
+            .arg(&cli0b),
+    );
+    assert_eq!(std::fs::read(&cli0).unwrap(), std::fs::read(&cli0b).unwrap());
+
+    // light lookups echo the stored fixpoint bit-exactly
+    let want = std::fs::read_to_string(&srv0).unwrap().lines().nth(5).unwrap().to_string();
+    let val = client(
+        &["value", &format!("session={s1}"), "app=pagerank", "vertex=5"],
+        None,
+    );
+    assert_eq!(kv(&val, "value"), want);
+    assert_eq!(kv(&client(&["stats"], None), "sessions"), "2");
+
+    client(&["shutdown"], None);
+    wait_exit(&mut child, "tcp daemon");
+    let _ = std::fs::remove_dir_all(&d);
+}
+
+#[cfg(unix)]
+#[test]
+fn serve_answers_on_the_unix_socket_and_shuts_down() {
+    let d = workdir("unix");
+    let sock = d.join("graphmp.sock");
+    let sock_s = sock.display().to_string();
+    let (mut child, _addr) = spawn_daemon(&["--socket", &sock_s]);
+    // the socket is bound before the ready line, but poll for the file to
+    // stay robust against slow filesystems
+    let t0 = Instant::now();
+    while !sock.exists() && t0.elapsed() < Duration::from_secs(10) {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let out = run_ok(bin().args(["client", "--socket", &sock_s, "ping"]));
+    assert_eq!(kv(&out, "pong"), "1");
+    run_ok(bin().args(["client", "--socket", &sock_s, "shutdown"]));
+    wait_exit(&mut child, "unix daemon");
+    let _ = std::fs::remove_dir_all(&d);
+}
