@@ -1,0 +1,110 @@
+//! Fig 13 (repro extension) — saturating the cold path.
+//!
+//! Two ablations the paper's Fig 5/7 framing implies but never isolates:
+//!
+//! * **Cold shard reads**: with the cache disabled every iteration
+//!   re-reads every shard, so the gather is bounded by how fast bytes
+//!   leave the device.  Buffered `pread` vs the `O_DIRECT` submission
+//!   ring (`--direct-io`), reported as effective read GB/s — the ring's
+//!   queue depth follows the governor's window.
+//! * **SIMD gather folds**: warm mode-1 cache (no I/O after warming), the
+//!   vectorized run kernels vs the scalar fold on the same rows.  Results
+//!   are bit-identical by construction; only the fold time may move.
+//!
+//! `--quick` (CI bench-smoke): tiny dataset, short horizon, and two
+//! records appended to `$GRAPHMP_BENCH_JSON` — `fig_cold_gbps` (the
+//! direct-io cold run) and `fig_simd_fold` (the simd-on warm run) — so
+//! bench-compare gates both paths PR over PR.
+
+use std::time::Instant;
+
+use graphmp::apps;
+use graphmp::cache::Codec;
+use graphmp::coordinator::benchjson::{self, BenchRecord};
+use graphmp::coordinator::cli::Args;
+use graphmp::coordinator::datasets::Dataset;
+use graphmp::coordinator::experiment::{ensure_dataset, run_graphmp_cfg, GraphMpVariant};
+use graphmp::coordinator::report;
+use graphmp::engine::{simd, VswEngine};
+use graphmp::storage::io;
+use graphmp::util::bench::Table;
+use graphmp::util::humansize;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["quick", "bench"])?;
+    let quick = args.has("quick");
+    let dataset = Dataset::by_name(if quick { "tiny" } else { "twitter-s" })?;
+    println!("Fig 13: cold-path direct I/O + SIMD gather folds on {}", dataset.name);
+    let dir = ensure_dataset(dataset)?;
+    let pr = apps::by_name("pagerank")?.into_f32()?;
+    let iters = if quick { 5 } else { 10 };
+
+    // ---- cold path: cache off, every iteration re-reads from disk -------
+    let mut cold = Table::new(
+        &format!("Fig13 cold shard reads (cache off), {}", dataset.name),
+        &["path", "total", "read GB/s", "io wait", "ring (direct/fallback)"],
+    );
+    for (label, direct) in [("buffered pread", false), ("direct-io ring", true)] {
+        let mut cfg = GraphMpVariant::NoCache.to_config(false, iters);
+        cfg.direct_io = direct;
+        let before = io::snapshot();
+        let t0 = Instant::now();
+        let engine = VswEngine::open(dir.clone(), cfg)?;
+        let result = engine.run(pr.as_ref())?;
+        let wall = t0.elapsed();
+        let read = io::snapshot().since(&before).bytes_read;
+        let gbps = read as f64 / 1e9 / result.stats.total_wall.as_secs_f64().max(1e-9);
+        let ring = match engine.direct_reader() {
+            Some(r) => {
+                let (d, f) = r.counts();
+                format!("{d}/{f}")
+            }
+            None => "—".into(),
+        };
+        cold.row(&[
+            label.into(),
+            humansize::duration(result.stats.total_wall),
+            format!("{gbps:.2}"),
+            humansize::duration(result.stats.total_io_wait()),
+            ring,
+        ]);
+        if direct {
+            benchjson::record_if_requested(&BenchRecord::from_stats(
+                "fig_cold_gbps",
+                wall,
+                &result.stats,
+            ))?;
+        }
+    }
+    cold.print();
+    report::append_markdown(&report::results_path(), &cold)?;
+
+    // ---- SIMD fold: warm mode-1 cache, zero steady-state I/O ------------
+    let mut fold = Table::new(
+        &format!("Fig13 gather fold, warm cache, {} (cpu: {})", dataset.name, simd::level()),
+        &["fold", "total", "compute", "hit ratio"],
+    );
+    for (label, on) in [("simd", true), ("scalar", false)] {
+        let mut cfg = GraphMpVariant::Cached(Codec::None).to_config(false, iters);
+        cfg.simd = on;
+        let t0 = Instant::now();
+        let (run, _load) = run_graphmp_cfg(&dir, cfg, pr.as_ref())?;
+        let wall = t0.elapsed();
+        fold.row(&[
+            label.into(),
+            humansize::duration(run.stats.total_wall),
+            humansize::duration(run.stats.total_compute()),
+            format!("{:.1}%", run.stats.cache_hit_ratio() * 100.0),
+        ]);
+        if on {
+            benchjson::record_if_requested(&BenchRecord::from_stats(
+                "fig_simd_fold",
+                wall,
+                &run.stats,
+            ))?;
+        }
+    }
+    fold.print();
+    report::append_markdown(&report::results_path(), &fold)?;
+    Ok(())
+}

@@ -135,8 +135,17 @@ pub struct ShardCache {
     /// Per-shard eviction priorities (higher = keep longer), installed by
     /// the adaptive governor each iteration; empty = CLOCK order.
     priorities: Mutex<Vec<u64>>,
+    /// Freelist of payload-decode scratch buffers: a compressed-codec
+    /// `get` decompresses into one of these (reusing its capacity slot)
+    /// instead of allocating a shard-sized buffer per hit.  Bounded so a
+    /// burst of concurrent decodes can't pin shard-sized allocations
+    /// forever.
+    scratch: Mutex<Vec<Vec<u8>>>,
     pub stats: CacheStats,
 }
+
+/// Max buffers the decode-scratch freelist retains.
+const SCRATCH_MAX: usize = 8;
 
 impl ShardCache {
     /// Cache for `num_shards` shards with a total compressed-byte `budget`.
@@ -161,7 +170,19 @@ impl ShardCache {
             clock_hand: AtomicUsize::new(0),
             evict: false,
             priorities: Mutex::new(Vec::new()),
+            scratch: Mutex::new(Vec::new()),
             stats: CacheStats::default(),
+        }
+    }
+
+    fn take_scratch(&self) -> Vec<u8> {
+        self.scratch.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn put_scratch(&self, buf: Vec<u8>) {
+        let mut pool = self.scratch.lock().unwrap();
+        if pool.len() < SCRATCH_MAX {
+            pool.push(buf);
         }
     }
 
@@ -240,7 +261,18 @@ impl ShardCache {
             Some(ShardView::Decoded(csr)) => Ok(Some(csr)),
             Some(ShardView::Compressed { codec, bytes }) => {
                 let t0 = std::time::Instant::now();
-                let csr = codec.decompress_shard(&bytes)?;
+                // byte codecs decode into a recycled scratch slot; the
+                // structural delta-varint codec decodes straight to a CSR
+                let csr = if matches!(codec, Codec::DeltaVarint) {
+                    codec.decompress_shard(&bytes)?
+                } else {
+                    let mut buf = self.take_scratch();
+                    let res = codec
+                        .decompress_payload_into(&bytes, &mut buf)
+                        .and_then(|()| shardfile::from_bytes(&buf));
+                    self.put_scratch(buf);
+                    res?
+                };
                 self.stats
                     .decompress_ns
                     .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -640,6 +672,31 @@ mod tests {
             _ => panic!("unadmitted read must stay raw"),
         }
         assert_eq!(nc.num_cached(), 0);
+    }
+
+    #[test]
+    fn compressed_hits_recycle_one_decode_scratch() {
+        let cache = ShardCache::new(2, Codec::Zlib1, usize::MAX);
+        let (csr, payload) = shard(0, 400);
+        cache.insert(0, 0, &payload).unwrap();
+        for _ in 0..3 {
+            let got = cache.get(0, 0).unwrap().expect("hit");
+            let mut a = got.to_edges();
+            a.sort_unstable();
+            let mut b = csr.to_edges();
+            b.sort_unstable();
+            assert_eq!(a, b);
+        }
+        assert_eq!(
+            cache.scratch.lock().unwrap().len(),
+            1,
+            "sequential hits must reuse one scratch buffer, not grow the pool"
+        );
+        // delta-varint decodes structurally — the scratch pool stays out of it
+        let dv = ShardCache::new(1, Codec::DeltaVarint, usize::MAX);
+        dv.insert(0, 0, &payload).unwrap();
+        assert!(dv.get(0, 0).unwrap().is_some());
+        assert!(dv.scratch.lock().unwrap().is_empty());
     }
 
     #[test]

@@ -138,6 +138,37 @@ pub fn record_if_requested(rec: &BenchRecord) -> Result<()> {
     Ok(())
 }
 
+/// One compared bench, structured so alternative renderings (the CI job
+/// summary's markdown table) don't have to re-parse the human lines.
+#[derive(Debug, Clone)]
+pub struct CompareRow {
+    pub name: String,
+    pub base_wall: f64,
+    /// `None` = present in baseline but missing from the current run.
+    pub cur_wall: Option<f64>,
+    pub status: RowStatus,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowStatus {
+    Ok,
+    Regressed,
+    /// Current is far below baseline — the gate has dead slack.
+    Stale,
+    Missing,
+}
+
+impl RowStatus {
+    fn label(self) -> &'static str {
+        match self {
+            RowStatus::Ok => "ok",
+            RowStatus::Regressed => "**regressed**",
+            RowStatus::Stale => "stale baseline",
+            RowStatus::Missing => "**missing**",
+        }
+    }
+}
+
 /// Outcome of a baseline-vs-current comparison.
 #[derive(Debug, Default)]
 pub struct CompareReport {
@@ -152,6 +183,46 @@ pub struct CompareReport {
     /// failure (a genuine speedup looks the same), but surfaced loudly so
     /// the baseline gets refreshed and the gate stays tight.
     pub stale_baseline: Vec<String>,
+    /// Structured per-bench rows (baseline order), one per baseline bench.
+    pub rows: Vec<CompareRow>,
+}
+
+impl CompareReport {
+    /// Render the delta table as GitHub-flavored markdown — pointed at
+    /// `$GITHUB_STEP_SUMMARY` by the CI bench-compare step.
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::from(
+            "### bench-compare\n\n\
+             | bench | baseline (s) | current (s) | delta | status |\n\
+             |---|---:|---:|---:|---|\n",
+        );
+        for r in &self.rows {
+            match r.cur_wall {
+                Some(cur) => {
+                    let delta = if r.base_wall > 0.0 {
+                        (cur / r.base_wall - 1.0) * 100.0
+                    } else {
+                        0.0
+                    };
+                    s.push_str(&format!(
+                        "| {} | {:.3} | {:.3} | {:+.1}% | {} |\n",
+                        r.name,
+                        r.base_wall,
+                        cur,
+                        delta,
+                        r.status.label()
+                    ));
+                }
+                None => s.push_str(&format!(
+                    "| {} | {:.3} | — | — | {} |\n",
+                    r.name,
+                    r.base_wall,
+                    r.status.label()
+                )),
+            }
+        }
+        s
+    }
 }
 
 /// Diff `current` against `baseline` under the gate semantics documented
@@ -168,6 +239,12 @@ pub fn compare(
             report
                 .regressions
                 .push(format!("{name}: present in baseline but missing from current run"));
+            report.rows.push(CompareRow {
+                name: name.clone(),
+                base_wall: base.wall_secs,
+                cur_wall: None,
+                status: RowStatus::Missing,
+            });
             continue;
         };
         report.compared += 1;
@@ -188,7 +265,7 @@ pub fn compare(
         ));
         let over_ratio = cur.wall_secs > base.wall_secs * (1.0 + tolerance);
         let over_abs = cur.wall_secs - base.wall_secs > min_abs_secs;
-        if over_ratio && over_abs {
+        let status = if over_ratio && over_abs {
             report.regressions.push(format!(
                 "{name}: {:.3}s > {:.3}s * {:.2} (+{:.3}s)",
                 cur.wall_secs,
@@ -196,6 +273,7 @@ pub fn compare(
                 1.0 + tolerance,
                 cur.wall_secs - base.wall_secs
             ));
+            RowStatus::Regressed
         } else if cur.wall_secs < base.wall_secs * 0.5
             && base.wall_secs - cur.wall_secs > min_abs_secs
         {
@@ -206,7 +284,16 @@ pub fn compare(
                 base.wall_secs,
                 tolerance * 100.0
             ));
-        }
+            RowStatus::Stale
+        } else {
+            RowStatus::Ok
+        };
+        report.rows.push(CompareRow {
+            name: name.clone(),
+            base_wall: base.wall_secs,
+            cur_wall: Some(cur.wall_secs),
+            status,
+        });
     }
     report
 }
@@ -288,6 +375,19 @@ mod tests {
         assert!(r.regressions.is_empty());
         assert_eq!(r.stale_baseline.len(), 1, "{:?}", r.stale_baseline);
         assert!(r.stale_baseline[0].starts_with("a:"));
+    }
+
+    #[test]
+    fn markdown_table_carries_every_baseline_row() {
+        let base = map(&[rec("a", 2.0), rec("gone", 1.0), rec("slow", 2.0)]);
+        let cur = map(&[rec("a", 2.1), rec("slow", 9.0)]);
+        let r = compare(&base, &cur, 0.25, 0.25);
+        assert_eq!(r.rows.len(), 3);
+        let md = r.to_markdown();
+        assert!(md.contains("| a | 2.000 | 2.100 | +5.0% | ok |"), "{md}");
+        assert!(md.contains("| gone | 1.000 | — | — | **missing** |"), "{md}");
+        assert!(md.contains("| slow | 2.000 | 9.000 | +350.0% | **regressed** |"), "{md}");
+        assert!(md.starts_with("### bench-compare"));
     }
 
     #[test]

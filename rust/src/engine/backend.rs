@@ -17,6 +17,7 @@ use anyhow::Result;
 
 use crate::apps::{GatherKind, KernelKind, ProgramContext, Reduce, VertexProgram, VertexValue};
 use crate::cache::deltavarint::DvCursor;
+use crate::engine::simd;
 use crate::graph::csr::Csr;
 use crate::graph::{VertexId, Weight};
 use crate::runtime::ShardRuntime;
@@ -126,6 +127,21 @@ pub trait EdgeSource {
     /// Stream the next row's in-edges, in storage order, into
     /// `f(src_id, weight)` (weight 1.0 on unweighted shards).
     fn next_row<F: FnMut(VertexId, Weight)>(&mut self, f: F) -> Result<()>;
+
+    /// Hand the next row's edges to `k` as contiguous slices when the
+    /// representation stores them that way (decoded CSR; aligned
+    /// little-endian payload views), consuming the row and returning
+    /// `Some(k(cols, wgts))`.  `wgts` is empty on unweighted rows.
+    /// `Ok(None)` means "no contiguous run here" and leaves the row
+    /// **unconsumed** so the caller can fall back to [`Self::next_row`];
+    /// cursor-based sources (delta-varint, delta merges) keep this
+    /// default and always take the scalar path.
+    fn next_row_run<T, K: FnOnce(&[VertexId], &[Weight]) -> T>(
+        &mut self,
+        _k: K,
+    ) -> Result<Option<T>> {
+        Ok(None)
+    }
 }
 
 /// Rows of a decoded [`Csr`] (optionally a sub-range).
@@ -174,6 +190,19 @@ impl EdgeSource for CsrRows<'_> {
         self.row += 1;
         Ok(())
     }
+
+    #[inline]
+    fn next_row_run<T, K: FnOnce(&[VertexId], &[Weight]) -> T>(
+        &mut self,
+        k: K,
+    ) -> Result<Option<T>> {
+        anyhow::ensure!(self.row < self.end, "csr row source exhausted");
+        let s = self.csr.row_ptr[self.row] as usize;
+        let e = self.csr.row_ptr[self.row + 1] as usize;
+        let wgts = if self.csr.wgt.is_empty() { &[][..] } else { &self.csr.wgt[s..e] };
+        self.row += 1;
+        Ok(Some(k(&self.csr.col[s..e], wgts)))
+    }
 }
 
 /// Rows of a serialized shard buffer, read in place through a validated
@@ -218,6 +247,28 @@ impl EdgeSource for ViewRows<'_> {
         }
         self.row += 1;
         Ok(())
+    }
+
+    #[inline]
+    fn next_row_run<T, K: FnOnce(&[VertexId], &[Weight]) -> T>(
+        &mut self,
+        k: K,
+    ) -> Result<Option<T>> {
+        anyhow::ensure!(self.row < self.end, "view row source exhausted");
+        let s = self.view.row_ptr(self.row);
+        let e = self.view.row_ptr(self.row + 1);
+        // an unaligned (or big-endian) buffer yields no runs — scalar path
+        let Some(cols) = self.view.col_run(s, e) else { return Ok(None) };
+        let wgts = if self.view.is_weighted() {
+            match self.view.weight_run(s, e) {
+                Some(w) => w,
+                None => return Ok(None),
+            }
+        } else {
+            &[][..]
+        };
+        self.row += 1;
+        Ok(Some(k(cols, wgts)))
     }
 }
 
@@ -341,71 +392,118 @@ pub fn process_rows<V: VertexValue, P: VertexProgram<V> + ?Sized, S: EdgeSource>
     ctx: &ProgramContext,
     out: &mut [V],
 ) -> Result<()> {
+    process_rows_cfg(app, source, src, out_deg, ctx, simd::enabled_default(), out)
+}
+
+/// [`process_rows`] with an explicit SIMD toggle.  When `simd` is on and
+/// the source can hand whole rows as contiguous runs
+/// ([`EdgeSource::next_row_run`]), each specialized arm folds the run
+/// through the vectorized kernels in [`simd`]; rows (or sources) without
+/// runs fall back to the per-edge scalar fold inside the same call, so
+/// results are bit-identical either way (see `simd`'s module docs for why
+/// that holds per reduction).
+pub fn process_rows_cfg<V: VertexValue, P: VertexProgram<V> + ?Sized, S: EdgeSource>(
+    app: &P,
+    source: &mut S,
+    src: &[V],
+    out_deg: &[u32],
+    ctx: &ProgramContext,
+    simd: bool,
+    out: &mut [V],
+) -> Result<()> {
     match (app.gather_kind(), app.reduce()) {
-        (GatherKind::RankOverOutDeg, Reduce::Sum) => stream_fold(
-            app,
-            source,
-            src,
-            ctx,
-            V::vzero(),
-            #[inline(always)]
-            |acc: V, u, _w| {
-                let d = out_deg[u];
-                // branchless dangling-source guard: 0 contribution
-                acc.vadd(if d == 0 { V::vzero() } else { src[u].div_deg(d) })
-            },
-            out,
-        ),
-        (GatherKind::PlusOne, Reduce::Min) => stream_fold(
-            app,
-            source,
-            src,
-            ctx,
-            V::vmax_value(),
-            #[inline(always)]
-            |acc: V, u, _w| acc.vmin(src[u].vadd(V::vone())),
-            out,
-        ),
-        (GatherKind::PlusWeight, Reduce::Min) => stream_fold(
-            app,
-            source,
-            src,
-            ctx,
-            V::vmax_value(),
-            #[inline(always)]
-            |acc: V, u, w| acc.vmin(src[u].vadd(V::from_weight(w))),
-            out,
-        ),
-        (GatherKind::Identity, Reduce::Min) => stream_fold(
-            app,
-            source,
-            src,
-            ctx,
-            V::vmax_value(),
-            #[inline(always)]
-            |acc: V, u, _w| acc.vmin(src[u]),
-            out,
-        ),
-        (GatherKind::Identity, Reduce::Sum) => stream_fold(
-            app,
-            source,
-            src,
-            ctx,
-            V::vzero(),
-            #[inline(always)]
-            |acc: V, u, _w| acc.vadd(src[u]),
-            out,
-        ),
-        (GatherKind::Identity, Reduce::Max) => stream_fold(
-            app,
-            source,
-            src,
-            ctx,
-            V::vmin_value(),
-            #[inline(always)]
-            |acc: V, u, _w| acc.vmax(src[u]),
-            out,
-        ),
+        (GatherKind::RankOverOutDeg, Reduce::Sum) => {
+            let fold =
+                #[inline(always)]
+                |acc: V, u: usize, _w: Weight| {
+                    let d = out_deg[u];
+                    // branchless dangling-source guard: 0 contribution
+                    acc.vadd(if d == 0 { V::vzero() } else { src[u].div_deg(d) })
+                };
+            if simd {
+                let run = |cols: &[VertexId], _wgts: &[Weight]| {
+                    simd::sum_map(cols, |u| {
+                        let d = out_deg[u as usize];
+                        if d == 0 { V::vzero() } else { src[u as usize].div_deg(d) }
+                    })
+                };
+                stream_fold_runs(app, source, src, ctx, V::vzero(), fold, run, out)
+            } else {
+                stream_fold(app, source, src, ctx, V::vzero(), fold, out)
+            }
+        }
+        (GatherKind::PlusOne, Reduce::Min) => {
+            let fold =
+                #[inline(always)]
+                |acc: V, u: usize, _w: Weight| acc.vmin(src[u].vadd(V::vone()));
+            if simd {
+                let run = |cols: &[VertexId], _wgts: &[Weight]| {
+                    simd::min_map(cols, |u| src[u as usize].vadd(V::vone()))
+                };
+                stream_fold_runs(app, source, src, ctx, V::vmax_value(), fold, run, out)
+            } else {
+                stream_fold(app, source, src, ctx, V::vmax_value(), fold, out)
+            }
+        }
+        (GatherKind::PlusWeight, Reduce::Min) => {
+            let fold =
+                #[inline(always)]
+                |acc: V, u: usize, w: Weight| acc.vmin(src[u].vadd(V::from_weight(w)));
+            if simd {
+                let run = |cols: &[VertexId], wgts: &[Weight]| {
+                    if wgts.is_empty() {
+                        // unweighted rows stream w = 1.0
+                        simd::min_map(cols, |u| src[u as usize].vadd(V::from_weight(1.0)))
+                    } else {
+                        simd::min_zip(cols, wgts, |u, w| {
+                            src[u as usize].vadd(V::from_weight(w))
+                        })
+                    }
+                };
+                stream_fold_runs(app, source, src, ctx, V::vmax_value(), fold, run, out)
+            } else {
+                stream_fold(app, source, src, ctx, V::vmax_value(), fold, out)
+            }
+        }
+        (GatherKind::Identity, Reduce::Min) => {
+            let fold =
+                #[inline(always)]
+                |acc: V, u: usize, _w: Weight| acc.vmin(src[u]);
+            if simd {
+                let run = |cols: &[VertexId], _wgts: &[Weight]| {
+                    simd::min_map(cols, |u| src[u as usize])
+                };
+                stream_fold_runs(app, source, src, ctx, V::vmax_value(), fold, run, out)
+            } else {
+                stream_fold(app, source, src, ctx, V::vmax_value(), fold, out)
+            }
+        }
+        (GatherKind::Identity, Reduce::Sum) => {
+            let fold =
+                #[inline(always)]
+                |acc: V, u: usize, _w: Weight| acc.vadd(src[u]);
+            if simd {
+                let run = |cols: &[VertexId], _wgts: &[Weight]| {
+                    simd::sum_map(cols, |u| src[u as usize])
+                };
+                stream_fold_runs(app, source, src, ctx, V::vzero(), fold, run, out)
+            } else {
+                stream_fold(app, source, src, ctx, V::vzero(), fold, out)
+            }
+        }
+        (GatherKind::Identity, Reduce::Max) => {
+            let fold =
+                #[inline(always)]
+                |acc: V, u: usize, _w: Weight| acc.vmax(src[u]);
+            if simd {
+                let run = |cols: &[VertexId], _wgts: &[Weight]| {
+                    simd::max_map(cols, |u| src[u as usize])
+                };
+                stream_fold_runs(app, source, src, ctx, V::vmin_value(), fold, run, out)
+            } else {
+                stream_fold(app, source, src, ctx, V::vmin_value(), fold, out)
+            }
+        }
         _ => stream_fold_generic(app, source, src, out_deg, ctx, out),
     }
 }
@@ -432,6 +530,44 @@ fn stream_fold<
     for (i, slot) in out.iter_mut().enumerate() {
         let mut acc = identity;
         source.next_row(|u, w| acc = fold(acc, u as usize, w))?;
+        *slot = app.apply(acc, src[lo + i], ctx);
+    }
+    Ok(())
+}
+
+/// [`stream_fold`] with a per-row run kernel: rows the source hands out as
+/// contiguous slices go through `run` (the vectorized fold), rows it
+/// cannot fall back to the scalar `fold` — both computing the same
+/// reduction from the same `identity`.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn stream_fold_runs<
+    V: VertexValue,
+    P: VertexProgram<V> + ?Sized,
+    S: EdgeSource,
+    F: Fn(V, usize, Weight) -> V,
+    R: Fn(&[VertexId], &[Weight]) -> V,
+>(
+    app: &P,
+    source: &mut S,
+    src: &[V],
+    ctx: &ProgramContext,
+    identity: V,
+    fold: F,
+    run: R,
+    out: &mut [V],
+) -> Result<()> {
+    debug_assert_eq!(out.len(), source.num_rows());
+    let lo = source.first_vertex() as usize;
+    for (i, slot) in out.iter_mut().enumerate() {
+        let acc = match source.next_row_run(&run)? {
+            Some(v) => v,
+            None => {
+                let mut a = identity;
+                source.next_row(|u, w| a = fold(a, u as usize, w))?;
+                a
+            }
+        };
         *slot = app.apply(acc, src[lo + i], ctx);
     }
     Ok(())
@@ -935,6 +1071,98 @@ mod tests {
             }
             let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
             assert_eq!(bits(&got), bits(&dv_want), "DvRows+delta");
+        }
+    }
+
+    /// SIMD dispatch must be invisible: `process_rows_cfg(simd=true)` and
+    /// `(simd=false)` produce the same bits on every source shape,
+    /// including the unaligned-view fallback and odd chunkings.
+    fn assert_simd_matches_scalar<V: VertexValue>(
+        app: &dyn VertexProgram<V>,
+        csr: &Csr,
+        src: &[V],
+        out_deg: &[u32],
+        ctx: &ProgramContext,
+    ) {
+        use crate::storage::shardfile;
+        let n = csr.num_vertices();
+        let bits = |v: &[V]| {
+            let mut b = Vec::new();
+            v.iter().for_each(|x| x.write_le(&mut b));
+            b
+        };
+        let mut scalar = vec![V::vzero(); n];
+        process_rows_cfg(app, &mut CsrRows::new(csr, 0..n), src, out_deg, ctx, false, &mut scalar)
+            .unwrap();
+        for chunk_rows in [n.max(1), 1, 5] {
+            let mut got = vec![V::vzero(); n];
+            for start in (0..n).step_by(chunk_rows) {
+                let end = (start + chunk_rows).min(n);
+                let mut rows = CsrRows::new(csr, start..end);
+                process_rows_cfg(app, &mut rows, src, out_deg, ctx, true, &mut got[start..end])
+                    .unwrap();
+            }
+            assert_eq!(bits(&got), bits(&scalar), "{} CsrRows simd chunk={chunk_rows}", app.name());
+        }
+        let payload = shardfile::to_bytes(csr);
+        let layout = shardfile::parse_layout(&payload).unwrap();
+        let mut got = vec![V::vzero(); n];
+        let mut rows = ViewRows::new(layout.view(&payload), 0..n);
+        process_rows_cfg(app, &mut rows, src, out_deg, ctx, true, &mut got).unwrap();
+        assert_eq!(bits(&got), bits(&scalar), "{} ViewRows simd", app.name());
+        // misalign the payload by one byte: col_run must refuse the cast
+        // and the scalar fallback inside the simd path must still match
+        let mut shifted = vec![0u8; payload.len() + 1];
+        shifted[1..].copy_from_slice(&payload);
+        let layout2 = shardfile::parse_layout(&shifted[1..]).unwrap();
+        let mut got = vec![V::vzero(); n];
+        let mut rows = ViewRows::new(layout2.view(&shifted[1..]), 0..n);
+        process_rows_cfg(app, &mut rows, src, out_deg, ctx, true, &mut got).unwrap();
+        assert_eq!(bits(&got), bits(&scalar), "{} shifted ViewRows simd", app.name());
+    }
+
+    #[test]
+    fn simd_folds_are_bit_identical_to_scalar() {
+        use crate::apps::Bfs;
+        use crate::graph::generator;
+        let edges: Vec<(u32, u32)> =
+            generator::rmat(8, 1500, generator::RmatParams::default(), 33)
+                .into_iter()
+                .filter(|&(_, d)| d < 64)
+                .collect();
+        let weights = generator::synth_weights(&edges, 13);
+        let ctx = ProgramContext { num_vertices: 256 };
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(77);
+        let out_deg: Vec<u32> = (0..256).map(|_| rng.gen_range(16) as u32).collect();
+        for weighted in [false, true] {
+            let csr = if weighted {
+                Csr::from_edges_weighted(0, 64, &edges, &weights)
+            } else {
+                Csr::from_edges(0, 64, &edges)
+            };
+            let src: Vec<f32> = (0..256).map(|v| (v as f32) * 0.25 + 0.5).collect();
+            let f32_apps: Vec<Box<dyn VertexProgram>> = vec![
+                Box::new(PageRank::default()),
+                Box::new(Sssp { source: 0 }),
+                Box::new(WeightedSssp { source: 0 }),
+                Box::new(Wcc),
+                Box::new(Bfs { root: 0 }),
+            ];
+            for app in &f32_apps {
+                assert_simd_matches_scalar(app.as_ref(), &csr, &src, &out_deg, &ctx);
+            }
+            let src64: Vec<u64> = (0..256).collect();
+            assert_simd_matches_scalar::<u64>(&LabelProp, &csr, &src64, &out_deg, &ctx);
+            let src32: Vec<u32> = vec![0; 256];
+            assert_simd_matches_scalar::<u32>(&MaxDeg, &csr, &src32, &out_deg, &ctx);
+            let srcf64: Vec<f64> = (0..256).map(|v| (v as f64) * 0.125).collect();
+            assert_simd_matches_scalar::<f64>(
+                &crate::apps::SpMv64::default(),
+                &csr,
+                &srcf64,
+                &out_deg,
+                &ctx,
+            );
         }
     }
 

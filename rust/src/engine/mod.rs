@@ -3,10 +3,13 @@
 mod backend;
 mod governor;
 mod shared;
+pub mod simd;
 mod stats;
 mod vsw;
 
-pub use backend::{process_rows, Backend, CsrRows, DeltaRows, DvRows, EdgeSource, ViewRows};
+pub use backend::{
+    process_rows, process_rows_cfg, Backend, CsrRows, DeltaRows, DvRows, EdgeSource, ViewRows,
+};
 pub use governor::{Governor, GovernorConfig};
 pub use shared::SharedSlice;
 pub use stats::{AnyRunResult, IterStats, RunResult, RunStats};

@@ -1,0 +1,234 @@
+//! Vectorized per-lane fold kernels for the gather inner loop.
+//!
+//! [`process_rows`](crate::engine::process_rows)'s scalar fold is a
+//! serial dependency chain: one `acc = combine(acc, map(col[k]))` per
+//! edge, so the CPU retires roughly one edge per combine latency.  These
+//! kernels break the chain where the math allows it and keep it where it
+//! doesn't, so results stay **bit-identical** to the scalar fold:
+//!
+//! * **Min/Max** — associative and commutative on every lane, so the run
+//!   folds into [`LANES`] independent accumulators (which the
+//!   autovectorizer turns into vector `min`/`max` ops and the OoO core
+//!   can overlap regardless) and combines them in a fixed order.  Integer
+//!   lanes are exact by construction; float lanes are exact for every
+//!   value the engine produces (reassociation could only differ on
+//!   `±0.0` ties or NaN, neither of which the app registry emits).
+//! * **Sum, integer lanes** — wrapping add is exactly associative, so the
+//!   same multi-accumulator shape applies
+//!   ([`VertexValue::SUM_REASSOCIATES`]).
+//! * **Sum, float lanes** — addition is order-sensitive, so the add chain
+//!   stays strictly left-to-right; only the *map* half (the `src` gather,
+//!   degree divide, weight lift) is blocked through a scratch array where
+//!   it vectorizes and pipelines independently of the serial adds.
+//!
+//! The kernels are written against the safe portable subset (chunked
+//! slices + fixed-size arrays) rather than `std::arch` intrinsics: the
+//! shapes below are exactly what LLVM's vectorizer recognizes, and one
+//! source path means the runtime `--simd`/`--no-simd` toggle selects
+//! *dispatch* (runs vs per-edge callbacks), not a second numeric
+//! implementation.  [`level`] reports what the host actually runs.
+
+use std::sync::OnceLock;
+
+use crate::apps::VertexValue;
+
+/// Independent accumulators for reassociable reductions; 8 × 64-bit
+/// covers one AVX-512 register or two NEON/SSE registers.
+pub const LANES: usize = 8;
+
+/// Map-block size for the order-preserving float-sum path.
+const BLOCK: usize = 32;
+
+/// Runtime default for [`crate::engine::EngineConfig::simd`]:
+/// `GRAPHMP_SIMD=0` disables, anything else (or unset) enables.
+pub fn enabled_default() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| std::env::var("GRAPHMP_SIMD").map(|v| v != "0").unwrap_or(true))
+}
+
+/// Best vector ISA the autovectorized kernels can use on this host
+/// (reporting only — dispatch is portable).
+pub fn level() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return "avx2";
+        }
+        if std::arch::is_x86_feature_detected!("sse4.1") {
+            return "sse4.1";
+        }
+        return "sse2";
+    }
+    #[cfg(target_arch = "aarch64")]
+    return "neon";
+    #[allow(unreachable_code)]
+    "portable"
+}
+
+/// `min(map(u) for u in cols)` with `vmax_value` identity.
+#[inline]
+pub fn min_map<V: VertexValue, F: Fn(u32) -> V>(cols: &[u32], map: F) -> V {
+    let mut accs = [V::vmax_value(); LANES];
+    let mut it = cols.chunks_exact(LANES);
+    for chunk in it.by_ref() {
+        for (a, &u) in accs.iter_mut().zip(chunk) {
+            *a = a.vmin(map(u));
+        }
+    }
+    let mut acc = accs[0];
+    for &a in &accs[1..] {
+        acc = acc.vmin(a);
+    }
+    for &u in it.remainder() {
+        acc = acc.vmin(map(u));
+    }
+    acc
+}
+
+/// `max(map(u) for u in cols)` with `vmin_value` identity.
+#[inline]
+pub fn max_map<V: VertexValue, F: Fn(u32) -> V>(cols: &[u32], map: F) -> V {
+    let mut accs = [V::vmin_value(); LANES];
+    let mut it = cols.chunks_exact(LANES);
+    for chunk in it.by_ref() {
+        for (a, &u) in accs.iter_mut().zip(chunk) {
+            *a = a.vmax(map(u));
+        }
+    }
+    let mut acc = accs[0];
+    for &a in &accs[1..] {
+        acc = acc.vmax(a);
+    }
+    for &u in it.remainder() {
+        acc = acc.vmax(map(u));
+    }
+    acc
+}
+
+/// `min(map(u, w))` over an edge run with a parallel weight lane.
+#[inline]
+pub fn min_zip<V: VertexValue, F: Fn(u32, f32) -> V>(cols: &[u32], wgts: &[f32], map: F) -> V {
+    debug_assert_eq!(cols.len(), wgts.len());
+    let mut accs = [V::vmax_value(); LANES];
+    let mut cit = cols.chunks_exact(LANES);
+    let mut wit = wgts.chunks_exact(LANES);
+    for (cc, wc) in cit.by_ref().zip(wit.by_ref()) {
+        for ((a, &u), &w) in accs.iter_mut().zip(cc).zip(wc) {
+            *a = a.vmin(map(u, w));
+        }
+    }
+    let mut acc = accs[0];
+    for &a in &accs[1..] {
+        acc = acc.vmin(a);
+    }
+    for (&u, &w) in cit.remainder().iter().zip(wit.remainder()) {
+        acc = acc.vmin(map(u, w));
+    }
+    acc
+}
+
+/// `sum(map(u) for u in cols)` from `vzero`, bit-identical to the scalar
+/// left fold: integer lanes reassociate across [`LANES`] accumulators
+/// (exact), float lanes keep the serial add order and only block the map.
+#[inline]
+pub fn sum_map<V: VertexValue, F: Fn(u32) -> V>(cols: &[u32], map: F) -> V {
+    if V::SUM_REASSOCIATES {
+        let mut accs = [V::vzero(); LANES];
+        let mut it = cols.chunks_exact(LANES);
+        for chunk in it.by_ref() {
+            for (a, &u) in accs.iter_mut().zip(chunk) {
+                *a = a.vadd(map(u));
+            }
+        }
+        let mut acc = accs[0];
+        for &a in &accs[1..] {
+            acc = acc.vadd(a);
+        }
+        for &u in it.remainder() {
+            acc = acc.vadd(map(u));
+        }
+        return acc;
+    }
+    let mut acc = V::vzero();
+    let mut scratch = [V::vzero(); BLOCK];
+    let mut it = cols.chunks_exact(BLOCK);
+    for chunk in it.by_ref() {
+        // the map half (gathers, divides) vectorizes here...
+        for (s, &u) in scratch.iter_mut().zip(chunk) {
+            *s = map(u);
+        }
+        // ...while the adds keep the exact scalar order
+        for &s in &scratch {
+            acc = acc.vadd(s);
+        }
+    }
+    for &u in it.remainder() {
+        acc = acc.vadd(map(u));
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scalar_min<V: VertexValue>(cols: &[u32], map: impl Fn(u32) -> V) -> V {
+        cols.iter().fold(V::vmax_value(), |a, &u| a.vmin(map(u)))
+    }
+
+    fn scalar_max<V: VertexValue>(cols: &[u32], map: impl Fn(u32) -> V) -> V {
+        cols.iter().fold(V::vmin_value(), |a, &u| a.vmax(map(u)))
+    }
+
+    fn scalar_sum<V: VertexValue>(cols: &[u32], map: impl Fn(u32) -> V) -> V {
+        cols.iter().fold(V::vzero(), |a, &u| a.vadd(map(u)))
+    }
+
+    #[test]
+    fn kernels_match_scalar_folds_at_every_length() {
+        // lengths straddle the chunk boundaries (LANES=8, BLOCK=32)
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(42);
+        for len in [0usize, 1, 7, 8, 9, 31, 32, 33, 63, 257] {
+            let cols: Vec<u32> = (0..len).map(|_| rng.gen_range(1000) as u32).collect();
+            let wgts: Vec<f32> = (0..len).map(|_| rng.next_f32() + 0.01).collect();
+            let src: Vec<f32> = (0..1000).map(|i| (i as f32) * 0.37 + 0.5).collect();
+            let src64: Vec<u64> = (0..1000).collect();
+
+            let m = |u: u32| src[u as usize];
+            assert_eq!(min_map(&cols, m).to_bits(), scalar_min(&cols, m).to_bits(), "min {len}");
+            assert_eq!(max_map(&cols, m).to_bits(), scalar_max(&cols, m).to_bits(), "max {len}");
+            // float sum: strict order must survive the blocking
+            assert_eq!(sum_map(&cols, m).to_bits(), scalar_sum(&cols, m).to_bits(), "sum {len}");
+            // integer sum: multi-accumulator reassociation is exact
+            let mi = |u: u32| src64[u as usize];
+            assert_eq!(sum_map(&cols, mi), scalar_sum(&cols, mi), "u64 sum {len}");
+
+            let mz = |u: u32, w: f32| src[u as usize] + w;
+            let want = cols
+                .iter()
+                .zip(&wgts)
+                .fold(f32::vmax_value(), |a, (&u, &w)| a.vmin(mz(u, w)));
+            assert_eq!(min_zip(&cols, &wgts, mz).to_bits(), want.to_bits(), "zip {len}");
+        }
+    }
+
+    #[test]
+    fn identities_on_empty_runs() {
+        let m = |u: u32| u as f32;
+        assert_eq!(min_map::<f32, _>(&[], m), f32::vmax_value());
+        assert_eq!(max_map::<f32, _>(&[], m), f32::vmin_value());
+        assert_eq!(sum_map::<f32, _>(&[], m), 0.0);
+        assert!(!level().is_empty());
+    }
+
+    #[test]
+    fn infinities_survive_min_lanes() {
+        // SSSP-style runs: mostly +inf with a few finite distances
+        let cols: Vec<u32> = (0..50).collect();
+        let src: Vec<f32> = (0..50)
+            .map(|i| if i % 9 == 0 { i as f32 } else { f32::INFINITY })
+            .collect();
+        let m = |u: u32| src[u as usize];
+        assert_eq!(min_map(&cols, m).to_bits(), scalar_min(&cols, m).to_bits());
+    }
+}

@@ -88,8 +88,9 @@ use crate::bloom::{digest, BloomFilter, Digest};
 use crate::cache::deltavarint::DvPlan;
 use crate::cache::{deltavarint, Codec, ShardCache, ShardView};
 use crate::engine::backend::{
-    process_rows, Backend, CsrRows, DeltaRows, DvRows, EdgeSource, ViewRows,
+    process_rows_cfg, Backend, CsrRows, DeltaRows, DvRows, EdgeSource, ViewRows,
 };
+use crate::engine::simd;
 use crate::engine::governor::{Governor, GovernorConfig};
 use crate::engine::shared::SharedSlice;
 use crate::engine::stats::{AnyRunResult, IterStats, RunResult, RunStats};
@@ -99,6 +100,7 @@ use crate::runtime::EpochManifest;
 use crate::sharding::preprocess::load_bloom_file;
 use crate::storage::delta::DeltaShard;
 use crate::storage::prefetch::{ReadAhead, Semaphore};
+use crate::storage::uring::DirectShardReader;
 use crate::storage::property::Property;
 use crate::storage::shardfile::{self, PayloadLayout};
 use crate::storage::vertexinfo::VertexInfo;
@@ -151,6 +153,19 @@ pub struct EngineConfig {
     /// the manifest's current epoch.  Ignored (treated as the base) on a
     /// dataset without an epoch manifest.
     pub epoch: Option<u64>,
+    /// Read shard files through the direct-I/O submission ring
+    /// ([`DirectShardReader`]: `O_DIRECT` + io_uring where the kernel
+    /// supports it, an aligned thread-pool fallback everywhere else)
+    /// instead of buffered `read()`.  Bytes, accounting and results are
+    /// identical; what changes is that cold reads bypass the page cache
+    /// and the governor's window maps to real device queue depth
+    /// (`--direct-io`, default off or `GRAPHMP_DIRECT_IO=1`).
+    pub direct_io: bool,
+    /// Use the vectorized gather kernels ([`crate::engine::simd`]) for
+    /// rows the edge source can hand out as contiguous runs.  Results are
+    /// bit-identical to the scalar fold; `--no-simd` (or `GRAPHMP_SIMD=0`)
+    /// pins the scalar path for A/B runs.
+    pub simd: bool,
 }
 
 impl Default for EngineConfig {
@@ -170,6 +185,8 @@ impl Default for EngineConfig {
             stream_gather: true,
             chunk_rows: 8192,
             epoch: None,
+            direct_io: std::env::var("GRAPHMP_DIRECT_IO").map(|v| v == "1").unwrap_or(false),
+            simd: simd::enabled_default(),
         }
     }
 }
@@ -464,20 +481,22 @@ fn fold_chunk<V: VertexValue, P: VertexProgram<V> + ?Sized, S: EdgeSource>(
     src: &[V],
     out_deg: &[u32],
     ctx: &ProgramContext,
+    simd: bool,
     out: &mut [V],
 ) -> Result<()> {
     match delta {
-        Some(d) => process_rows(
+        Some(d) => process_rows_cfg(
             app,
             &mut DeltaRows::new(rows, d, start_row, out.len()),
             src,
             out_deg,
             ctx,
+            simd,
             out,
         ),
         None => {
             let mut rows = rows;
-            process_rows(app, &mut rows, src, out_deg, ctx, out)
+            process_rows_cfg(app, &mut rows, src, out_deg, ctx, simd, out)
         }
     }
 }
@@ -504,6 +523,10 @@ pub struct VswEngine {
     /// Adaptive I/O governor; with `cfg.adaptive == false` it pins every
     /// decision at the fixed-knob behavior.
     governor: Governor,
+    /// Direct-I/O submission ring; `Some` iff `cfg.direct_io`.  Shared by
+    /// the load-time prefetcher and every run's cold-shard reads so the
+    /// governor's window feedback lands on one queue-depth knob.
+    direct: Option<Arc<DirectShardReader>>,
     cfg: EngineConfig,
     pub load_wall: std::time::Duration,
 }
@@ -528,13 +551,17 @@ impl VswEngine {
             cache = cache.with_eviction();
         }
         let cache_enabled = cfg.cache_budget > 0;
+        let direct = cfg
+            .direct_io
+            .then(|| DirectShardReader::new(cfg.prefetch_depth.max(1)));
         // warm the cache during loading, like the paper's loading phase
         // ("places processed shards in the cache if possible"); with
         // prefetching, disk reads run ahead of the (CPU-bound) compression
         // inserts, shortening the load phase Fig 6 measures
         if cache_enabled {
             for (i, bytes) in
-                ReadAhead::new(st.shard_paths.clone(), cfg.prefetch_depth).enumerate()
+                ReadAhead::with_reader(st.shard_paths.clone(), cfg.prefetch_depth, direct.clone())
+                    .enumerate()
             {
                 cache.insert(
                     i,
@@ -554,6 +581,7 @@ impl VswEngine {
             cache,
             pools: Mutex::new(pools),
             governor,
+            direct,
             cfg,
             load_wall: t0.elapsed(),
         })
@@ -561,6 +589,12 @@ impl VswEngine {
 
     pub fn config(&self) -> &EngineConfig {
         &self.cfg
+    }
+
+    /// The direct-I/O reader, when `cfg.direct_io` is on.  Exposed so
+    /// callers (benches, tests) can inspect its direct/fallback counters.
+    pub fn direct_reader(&self) -> Option<&Arc<DirectShardReader>> {
+        self.direct.as_ref()
     }
 
     /// The engine's *current* epoch snapshot.  A clone of the returned Arc
@@ -875,6 +909,14 @@ impl VswEngine {
             } else {
                 0
             };
+            // direct-I/O path: the governor's in-flight window IS the
+            // device queue depth — feed it to the submission ring so
+            // adaptive widening/narrowing reaches the hardware
+            if window > 0 {
+                if let Some(r) = &self.direct {
+                    r.set_queue_depth(window);
+                }
+            }
             let order = if pools.io.is_some() {
                 self.governor.schedule(
                     p,
@@ -962,11 +1004,15 @@ impl VswEngine {
                     Some(d) => d.effective_edges(base),
                     None => base,
                 };
+                let direct = &self.direct;
                 let acquire = |shard: usize, did_read: &Cell<bool>| -> ShardWork {
                     let admit = cfg.cache_budget > 0;
                     let read = || {
                         did_read.set(true);
-                        io::read_file(&shard_paths[shard])
+                        match direct {
+                            Some(r) => r.read_file(&shard_paths[shard]),
+                            None => io::read_file(&shard_paths[shard]),
+                        }
                     };
                     let built: Result<(WorkPayload, usize, u64)> = (|| {
                         if !use_stream {
@@ -1090,8 +1136,9 @@ impl VswEngine {
                                 let (a, b) = chunk_range(csr.num_vertices(), chunk);
                                 let out = unsafe { dst_shared.slice_mut(lo + a, b - a) };
                                 let rows = CsrRows::new(csr, a..b);
-                                match fold_chunk(app, rows, delta, a, src_ref, out_deg, &ctx, out)
-                                {
+                                match fold_chunk(
+                                    app, rows, delta, a, src_ref, out_deg, &ctx, cfg.simd, out,
+                                ) {
                                     Ok(()) => scan_active(s, work.shard, chunk, lo + a, out),
                                     Err(e) => record_err(e),
                                 }
@@ -1112,7 +1159,9 @@ impl VswEngine {
                             let (a, b) = chunk_range(layout.num_rows(), chunk);
                             let out = unsafe { dst_shared.slice_mut(lo + a, b - a) };
                             let rows = ViewRows::new(layout.view(bytes), a..b);
-                            match fold_chunk(app, rows, delta, a, src_ref, out_deg, &ctx, out) {
+                            match fold_chunk(
+                                app, rows, delta, a, src_ref, out_deg, &ctx, cfg.simd, out,
+                            ) {
                                 Ok(()) => scan_active(s, work.shard, chunk, lo + a, out),
                                 Err(e) => record_err(e),
                             }
@@ -1123,7 +1172,9 @@ impl VswEngine {
                             let (a, b) = (dv.start_row, dv.end_row);
                             let out = unsafe { dst_shared.slice_mut(lo + a, b - a) };
                             let rows = DvRows::new(plan.cursor(bytes, dv), plan.lo, a, b - a);
-                            match fold_chunk(app, rows, delta, a, src_ref, out_deg, &ctx, out) {
+                            match fold_chunk(
+                                app, rows, delta, a, src_ref, out_deg, &ctx, cfg.simd, out,
+                            ) {
                                 Ok(()) => scan_active(s, work.shard, chunk, lo + a, out),
                                 Err(e) => record_err(e),
                             }
@@ -1799,5 +1850,40 @@ mod tests {
         assert!(result.stats.total_io_wait() > std::time::Duration::ZERO);
         let f = result.stats.io_wait_fraction();
         assert!((0.0..=1.0).contains(&f), "fraction {f}");
+    }
+
+    #[test]
+    fn direct_io_reader_is_bit_identical_and_counted() {
+        let edges = generator::rmat(8, 3000, generator::RmatParams::default(), 19);
+        let n = 256;
+        let dir = build_dataset("directio", &edges, n, 200);
+        let run = |direct_io: bool, simd: bool| {
+            let engine = VswEngine::open(
+                dir.clone(),
+                EngineConfig {
+                    cache_budget: 0, // every iteration re-reads from disk
+                    selective: false,
+                    max_iters: 4,
+                    threads: 3,
+                    direct_io,
+                    simd,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let result = engine.run(&PageRank::default()).unwrap();
+            let counts = engine.direct_reader().map(|d| d.counts());
+            (result.values, counts)
+        };
+        let (base, no_reader) = run(false, true);
+        assert!(no_reader.is_none(), "reader must be absent when direct_io is off");
+        for simd in [false, true] {
+            let (vals, counts) = run(true, simd);
+            let (d, f) = counts.expect("direct_io on must expose the reader");
+            assert!(d + f > 0, "no reads went through the direct reader");
+            for (i, (a, b)) in vals.iter().zip(&base).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "v{i} differs (simd={simd})");
+            }
+        }
     }
 }

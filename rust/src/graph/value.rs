@@ -85,6 +85,11 @@ pub trait VertexValue:
     const LANE: Lane;
     /// Wire width; equals `Self::LANE.bytes()`.
     const BYTES: usize;
+    /// Whether `vadd` is exactly associative (integer wrapping add), so a
+    /// `Sum` reduction may reassociate across SIMD accumulators without
+    /// changing any bit.  Float addition is order-sensitive: float lanes
+    /// keep the strict left-to-right fold (`engine::simd::sum_map`).
+    const SUM_REASSOCIATES: bool;
 
     /// Additive identity (`Reduce::Sum`).
     fn vzero() -> Self;
@@ -124,6 +129,7 @@ pub trait VertexValue:
 impl VertexValue for u32 {
     const LANE: Lane = Lane::U32;
     const BYTES: usize = 4;
+    const SUM_REASSOCIATES: bool = true;
 
     fn vzero() -> Self {
         0
@@ -169,6 +175,7 @@ impl VertexValue for u32 {
 impl VertexValue for u64 {
     const LANE: Lane = Lane::U64;
     const BYTES: usize = 8;
+    const SUM_REASSOCIATES: bool = true;
 
     fn vzero() -> Self {
         0
@@ -214,6 +221,7 @@ impl VertexValue for u64 {
 impl VertexValue for f32 {
     const LANE: Lane = Lane::F32;
     const BYTES: usize = 4;
+    const SUM_REASSOCIATES: bool = false;
 
     fn vzero() -> Self {
         0.0
@@ -262,6 +270,7 @@ impl VertexValue for f32 {
 impl VertexValue for f64 {
     const LANE: Lane = Lane::F64;
     const BYTES: usize = 8;
+    const SUM_REASSOCIATES: bool = false;
 
     fn vzero() -> Self {
         0.0

@@ -43,6 +43,8 @@ const BOOL_FLAGS: &[&str] = &[
     "incremental",
     "save-values",
     "all",
+    "direct-io",
+    "no-simd",
 ];
 
 fn main() {
@@ -102,6 +104,18 @@ USAGE:
                                             the gather (the ablation path)
                      [--chunk-rows N]       rows per intra-shard work chunk
                                             (def. 8192; 0 = never split)
+                     [--direct-io]          read shards via the O_DIRECT
+                                            submission ring (io_uring where
+                                            the kernel has it, an aligned
+                                            thread pool elsewhere); the
+                                            governor window sets the device
+                                            queue depth.  GRAPHMP_DIRECT_IO=1
+                                            flips the default on,
+                                            GRAPHMP_URING=pool pins the
+                                            fallback ring
+                     [--no-simd]            pin the scalar gather fold
+                                            (results are bit-identical either
+                                            way; GRAPHMP_SIMD=0 equivalent)
                      [--epoch N]            open a historical snapshot epoch
                                             (default: the latest)
                      [--save-values]        persist the fixpoint (epoch-
@@ -116,6 +130,10 @@ USAGE:
                      [--throttle-mbps N]
   graphmp serve      --listen 127.0.0.1:0 [--socket <path>] [--data <dir>]
                      [--max-heavy 2] [--max-light 32] [--max-queue 16]
+                     [--session-ttl-secs 3600]  evict sessions idle this
+                                                long (0 = never); any
+                                                request on a session
+                                                counts as use
                      [engine flags as for `run`]
                      (resident daemon: keeps one engine per dataset loaded
                       and serves epoch-pinned sessions over a line protocol;
@@ -147,6 +165,9 @@ USAGE:
                      --vertices <N> --app <name> [--iters N]
   graphmp bench-compare --baseline <BENCH_baseline.json> --current <BENCH_pr.json>
                      [--tolerance 0.25] [--min-abs-secs 0.25]
+                     [--markdown <file>]  append the delta table as a GFM
+                                          table (CI points this at
+                                          $GITHUB_STEP_SUMMARY)
                      (exit 1 when any bench regressed past the gate)
   graphmp info       --data <dir>
   graphmp datasets
@@ -283,6 +304,12 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     cfg.prefetch_max = args.get_usize("prefetch-max", EngineConfig::default().prefetch_max)?;
     cfg.stream_gather = !args.has("no-stream-gather");
     cfg.chunk_rows = args.get_usize("chunk-rows", EngineConfig::default().chunk_rows)?;
+    if args.has("direct-io") {
+        cfg.direct_io = true;
+    }
+    if args.has("no-simd") {
+        cfg.simd = false;
+    }
     if let Some(e) = args.get("epoch") {
         cfg.epoch = Some(e.parse().context("--epoch")?);
     }
@@ -451,7 +478,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_heavy: args.get_usize("max-heavy", SchedulerConfig::default().max_heavy)?,
         max_queue: args.get_usize("max-queue", SchedulerConfig::default().max_queue)?,
     };
-    let srv = Arc::new(Server::new(ecfg, sched)?);
+    let ttl_secs = args.get_usize(
+        "session-ttl-secs",
+        Server::DEFAULT_SESSION_TTL.as_secs() as usize,
+    )?;
+    let ttl = (ttl_secs > 0).then(|| std::time::Duration::from_secs(ttl_secs as u64));
+    let srv = Arc::new(Server::new(ecfg, sched)?.with_session_ttl(ttl));
     // pre-load the named dataset so the first client doesn't pay the load
     if let Some(data) = args.get("data") {
         let resp = srv.handle(&Request::new("epoch").arg("data", data).render());
@@ -708,6 +740,15 @@ fn cmd_bench_compare(args: &Args) -> Result<()> {
     let cur = benchjson::load(&current)
         .with_context(|| format!("loading current {}", current.display()))?;
     let report = benchjson::compare(&base, &cur, tolerance, min_abs);
+    if let Some(md) = args.get("markdown") {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(md)
+            .with_context(|| format!("opening --markdown {md}"))?;
+        f.write_all(report.to_markdown().as_bytes())?;
+    }
     for line in &report.lines {
         println!("{line}");
     }

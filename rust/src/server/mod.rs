@@ -38,7 +38,7 @@ use std::net::TcpListener;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -88,11 +88,23 @@ impl Server {
         Ok(Self {
             ecfg,
             engines: Mutex::new(HashMap::new()),
-            sessions: SessionRegistry::default(),
+            sessions: SessionRegistry::with_ttl(Some(Self::DEFAULT_SESSION_TTL)),
             sched: Scheduler::new(sched),
             shutdown: AtomicBool::new(false),
             wakers: Mutex::new(Vec::new()),
         })
+    }
+
+    /// Sessions idle this long are evicted (`--session-ttl-secs`; 0
+    /// disables).  A pinned snapshot holds real memory — old-epoch shards,
+    /// stored fixpoints — so an abandoned session must eventually let go.
+    pub const DEFAULT_SESSION_TTL: Duration = Duration::from_secs(3600);
+
+    /// Replace the idle-session TTL (`None` = never evict).  Call before
+    /// serving: the registry is rebuilt, dropping any existing sessions.
+    pub fn with_session_ttl(mut self, ttl: Option<Duration>) -> Self {
+        self.sessions = SessionRegistry::with_ttl(ttl);
+        self
     }
 
     pub fn is_shutdown(&self) -> bool {
@@ -138,6 +150,10 @@ impl Server {
     }
 
     fn dispatch(&self, req: &Request) -> Result<Response> {
+        // opportunistic idle-session eviction: every request pays one
+        // cheap map scan, so an abandoned session outlives its TTL by at
+        // most the daemon's idle gap between requests
+        self.sessions.sweep_idle();
         match req.cmd.as_str() {
             "ping" => Ok(Response::ok().with("pong", 1)),
             "open" => self.cmd_open(req),
@@ -506,6 +522,29 @@ mod tests {
             .error
             .is_some());
         let _ = std::fs::remove_file(&bpath);
+        let _ = std::fs::remove_dir_all(&dir.root);
+    }
+
+    #[test]
+    fn idle_sessions_are_evicted_across_requests() {
+        let dir = build_dataset("ttl");
+        let data = dir.root.display().to_string();
+        let srv = server().with_session_ttl(Some(Duration::from_millis(1)));
+        let open = srv.handle(&Request::new("open").arg("data", &data).render());
+        assert!(open.is_ok(), "{:?}", open.error);
+        let sid = open.get("session").unwrap().to_string();
+        std::thread::sleep(Duration::from_millis(20));
+        // the sweep runs on dispatch, so any request flushes the idle one
+        let stats = srv.handle("stats");
+        assert_eq!(stats.get("sessions"), Some("0"), "idle session must be evicted");
+        let gone = srv.handle(
+            &Request::new("value")
+                .arg("session", &sid)
+                .arg("app", "pagerank")
+                .arg("vertex", "0")
+                .render(),
+        );
+        assert!(gone.error.is_some(), "evicted session must read as closed");
         let _ = std::fs::remove_dir_all(&dir.root);
     }
 

@@ -8,6 +8,7 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -24,6 +25,9 @@ pub struct Session {
     /// Fixpoints computed by this session, keyed by app name, for `value`
     /// lookups without re-running.
     results: Mutex<HashMap<String, Arc<AnyValues>>>,
+    /// Milliseconds (on the registry's clock) of the last `open`/`get`;
+    /// the idle-eviction sweep compares against this.
+    last_used_ms: AtomicU64,
 }
 
 impl Session {
@@ -37,28 +41,64 @@ impl Session {
 }
 
 /// The daemon's session table.
-#[derive(Default)]
+///
+/// A client that opens a session and silently goes away would otherwise
+/// pin its epoch snapshot (and any stored fixpoints) forever; the
+/// registry evicts sessions idle past `ttl` ([`Self::sweep_idle`], run by
+/// the server on every dispatch).  Any `get` counts as use, so an active
+/// session can never be evicted mid-conversation.
 pub struct SessionRegistry {
     next_id: AtomicU64,
     map: Mutex<HashMap<u64, Arc<Session>>>,
+    /// Clock origin for `last_used_ms` stamps.
+    t0: Instant,
+    /// `None` = idle eviction disabled.
+    ttl: Option<Duration>,
+}
+
+impl Default for SessionRegistry {
+    fn default() -> Self {
+        Self::with_ttl(None)
+    }
 }
 
 impl SessionRegistry {
+    pub fn with_ttl(ttl: Option<Duration>) -> Self {
+        Self {
+            next_id: AtomicU64::new(0),
+            map: Mutex::new(HashMap::new()),
+            t0: Instant::now(),
+            ttl,
+        }
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.t0.elapsed().as_millis() as u64
+    }
+
     pub fn open(&self, dataset: PathBuf, state: Arc<EpochState>) -> Arc<Session> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
-        let session =
-            Arc::new(Session { id, dataset, state, results: Mutex::new(HashMap::new()) });
+        let session = Arc::new(Session {
+            id,
+            dataset,
+            state,
+            results: Mutex::new(HashMap::new()),
+            last_used_ms: AtomicU64::new(self.now_ms()),
+        });
         self.map.lock().unwrap().insert(id, session.clone());
         session
     }
 
     pub fn get(&self, id: u64) -> Result<Arc<Session>> {
-        self.map
+        let s = self
+            .map
             .lock()
             .unwrap()
             .get(&id)
             .cloned()
-            .with_context(|| format!("no such session {id} (closed?)"))
+            .with_context(|| format!("no such session {id} (closed?)"))?;
+        s.last_used_ms.store(self.now_ms(), Ordering::Relaxed);
+        Ok(s)
     }
 
     /// Returns whether the session existed.
@@ -68,6 +108,27 @@ impl SessionRegistry {
 
     pub fn count(&self) -> usize {
         self.map.lock().unwrap().len()
+    }
+
+    /// Evict sessions idle past the registry's TTL; returns how many went.
+    /// No-op when no TTL is configured.
+    pub fn sweep_idle(&self) -> usize {
+        match self.ttl {
+            Some(ttl) => self.sweep_idle_at(self.now_ms(), ttl),
+            None => 0,
+        }
+    }
+
+    /// The sweep against an explicit clock reading — split out so tests
+    /// can drive time instead of sleeping.
+    pub fn sweep_idle_at(&self, now_ms: u64, ttl: Duration) -> usize {
+        let ttl_ms = ttl.as_millis() as u64;
+        let mut map = self.map.lock().unwrap();
+        let before = map.len();
+        map.retain(|_, s| {
+            now_ms.saturating_sub(s.last_used_ms.load(Ordering::Relaxed)) <= ttl_ms
+        });
+        before - map.len()
     }
 }
 
@@ -112,6 +173,43 @@ mod tests {
         assert!(!reg.close(s1.id), "double close must report absence");
         assert!(reg.get(s1.id).is_err());
         assert_eq!(reg.count(), 1);
+    }
+
+    #[test]
+    fn idle_sessions_are_swept_but_touched_ones_survive() {
+        let reg = SessionRegistry::with_ttl(Some(std::time::Duration::from_secs(10)));
+        let st = dummy_state();
+        let idle = reg.open(PathBuf::from("/a"), st.clone());
+        let busy = reg.open(PathBuf::from("/a"), st);
+        // pretend both were opened at t=0 on the registry clock
+        idle.last_used_ms.store(0, Ordering::Relaxed);
+        busy.last_used_ms.store(0, Ordering::Relaxed);
+        // within the TTL nothing goes
+        assert_eq!(reg.sweep_idle_at(10_000, std::time::Duration::from_secs(10)), 0);
+        assert_eq!(reg.count(), 2);
+        // `get` counts as use, so only the untouched session is evicted
+        busy.last_used_ms.store(11_000, Ordering::Relaxed);
+        assert_eq!(reg.sweep_idle_at(12_000, std::time::Duration::from_secs(10)), 1);
+        assert_eq!(reg.count(), 1);
+        assert!(reg.get(idle.id).is_err(), "idle session must be gone");
+        assert!(reg.get(busy.id).is_ok(), "recently used session must survive");
+        // a disabled-TTL registry never sweeps
+        let off = SessionRegistry::default();
+        let s = off.open(PathBuf::from("/a"), dummy_state());
+        s.last_used_ms.store(0, Ordering::Relaxed);
+        assert_eq!(off.sweep_idle(), 0);
+        assert_eq!(off.count(), 1);
+    }
+
+    #[test]
+    fn get_refreshes_last_used() {
+        let reg = SessionRegistry::with_ttl(Some(std::time::Duration::from_millis(50)));
+        let s = reg.open(PathBuf::from("/a"), dummy_state());
+        s.last_used_ms.store(0, Ordering::Relaxed);
+        let _ = reg.get(s.id).unwrap(); // re-stamps to "now"
+        let stamped = s.last_used_ms.load(Ordering::Relaxed);
+        assert!(stamped <= reg.now_ms());
+        assert_eq!(reg.sweep_idle_at(stamped, std::time::Duration::from_millis(50)), 0);
     }
 
     #[test]

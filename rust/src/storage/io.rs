@@ -138,6 +138,17 @@ pub fn append_file(path: &Path, data: &[u8]) -> Result<()> {
     Ok(())
 }
 
+/// Account for a read performed outside [`read_file`]: the direct-I/O
+/// reader (`storage::uring`) does its own syscalls but must hit the same
+/// counters and throttle so the Table II stats and the HDD model see
+/// identical traffic.  `elapsed` is the real wall time of the read, which
+/// the throttle credits against the simulated disk budget.
+pub fn account_read(bytes: u64, elapsed: Duration) {
+    GLOBAL.bytes_read.fetch_add(bytes, Ordering::Relaxed);
+    GLOBAL.read_ops.fetch_add(1, Ordering::Relaxed);
+    apply_throttle(bytes, elapsed);
+}
+
 /// Account for a read served from an in-memory mock of disk (used by
 /// baseline engines that model per-iteration re-reads without touching the
 /// real filesystem in unit tests).

@@ -18,6 +18,7 @@ pub mod io;
 pub mod prefetch;
 pub mod property;
 pub mod shardfile;
+pub mod uring;
 pub mod vertexinfo;
 
 use std::path::{Path, PathBuf};

@@ -22,12 +22,13 @@
 use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::sync::mpsc;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 use anyhow::Result;
 
 use crate::storage::io;
+use crate::storage::uring::DirectShardReader;
 
 /// A counting semaphore (no std equivalent in the offline crate set).
 ///
@@ -75,12 +76,19 @@ impl Semaphore {
 
 enum Inner {
     /// depth 0: plain synchronous reads (no thread, no reordering risk).
-    Sync(VecDeque<PathBuf>),
+    Sync(VecDeque<PathBuf>, Option<Arc<DirectShardReader>>),
     /// background reader feeding a bounded channel.
     Async {
         rx: Option<mpsc::Receiver<Result<Vec<u8>>>>,
         handle: Option<thread::JoinHandle<()>>,
     },
+}
+
+fn read_via(reader: &Option<Arc<DirectShardReader>>, path: &std::path::Path) -> Result<Vec<u8>> {
+    match reader {
+        Some(r) => r.read_file(path),
+        None => io::read_file(path),
+    }
 }
 
 /// Ordered file read-ahead: yields each path's contents **in the order
@@ -95,13 +103,25 @@ pub struct ReadAhead {
 
 impl ReadAhead {
     pub fn new(paths: Vec<PathBuf>, depth: usize) -> Self {
+        Self::with_reader(paths, depth, None)
+    }
+
+    /// Like [`ReadAhead::new`], but routing every read through a
+    /// [`DirectShardReader`] when one is given (`--direct-io`): the
+    /// cache-warming load phase then does `O_DIRECT` ring reads instead
+    /// of buffered ones, with identical bytes and accounting.
+    pub fn with_reader(
+        paths: Vec<PathBuf>,
+        depth: usize,
+        reader: Option<Arc<DirectShardReader>>,
+    ) -> Self {
         if depth == 0 {
-            return Self { inner: Inner::Sync(paths.into()) };
+            return Self { inner: Inner::Sync(paths.into(), reader) };
         }
         let (tx, rx) = mpsc::sync_channel::<Result<Vec<u8>>>(depth);
         let handle = thread::spawn(move || {
             for path in paths {
-                let item = io::read_file(&path);
+                let item = read_via(&reader, &path);
                 if tx.send(item).is_err() {
                     return; // consumer dropped the iterator; stop reading
                 }
@@ -116,7 +136,7 @@ impl Iterator for ReadAhead {
 
     fn next(&mut self) -> Option<Self::Item> {
         match &mut self.inner {
-            Inner::Sync(paths) => paths.pop_front().map(|p| io::read_file(&p)),
+            Inner::Sync(paths, reader) => paths.pop_front().map(|p| read_via(reader, &p)),
             Inner::Async { rx, .. } => rx.as_ref()?.recv().ok(),
         }
     }
@@ -184,6 +204,20 @@ mod tests {
         let n: usize = ReadAhead::new(paths, 2).map(|r| r.unwrap().len()).sum();
         assert_eq!(n as u64, want);
         assert!(io::snapshot().since(&before).bytes_read >= want);
+    }
+
+    #[test]
+    fn readahead_with_direct_reader_matches_buffered() {
+        use crate::storage::uring::{DirectShardReader, RingMode};
+        let paths = write_fixtures("direct", 6);
+        let want: Vec<Vec<u8>> = paths.iter().map(|p| std::fs::read(p).unwrap()).collect();
+        for depth in [0usize, 2] {
+            let reader = Arc::new(DirectShardReader::with_mode(RingMode::Pool, 2));
+            let got: Vec<Vec<u8>> = ReadAhead::with_reader(paths.clone(), depth, Some(reader))
+                .map(|r| r.unwrap())
+                .collect();
+            assert_eq!(got, want, "depth {depth}");
+        }
     }
 
     #[test]

@@ -246,6 +246,53 @@ impl PayloadView<'_> {
     }
 }
 
+impl<'a> PayloadView<'a> {
+    /// Reinterpret `buf[off..]` as `len` little-endian 4-byte scalars when
+    /// the section happens to sit on a 4-byte boundary.  The framed
+    /// container gives no alignment promise (offsets depend on the header
+    /// and whoever allocated the buffer), so this is a runtime check, not
+    /// an invariant — and the cast is only meaningful where the in-memory
+    /// scalar layout *is* the wire layout, i.e. little-endian targets.
+    /// Everything bounds-relevant was validated by [`parse_layout`].
+    #[inline]
+    fn run_at<T: Copy>(&self, off: usize, len: usize) -> Option<&'a [T]> {
+        debug_assert_eq!(std::mem::size_of::<T>(), 4);
+        if cfg!(target_endian = "big") {
+            return None;
+        }
+        let bytes = self.buf.get(off..off + len * 4)?;
+        let ptr = bytes.as_ptr();
+        if ptr.align_offset(std::mem::align_of::<T>()) != 0 {
+            return None;
+        }
+        // SAFETY: `bytes` covers exactly `len * 4` in-bounds bytes of a
+        // live `&'a [u8]`, the pointer is aligned for `T` (checked above),
+        // and `T` is a 4-byte POD scalar (u32/f32) whose every bit pattern
+        // is valid; on little-endian targets the wire format matches the
+        // in-memory representation.
+        Some(unsafe { std::slice::from_raw_parts(ptr as *const T, len) })
+    }
+
+    /// Edge slots `[s, e)` of `col` as a borrowed slice, when the buffer
+    /// is aligned for it (`None` → use per-slot [`Self::col`]).
+    #[inline]
+    pub fn col_run(&self, s: usize, e: usize) -> Option<&'a [u32]> {
+        debug_assert!(s <= e && e <= self.layout.num_edges);
+        self.run_at(self.layout.col_off + s * 4, e - s)
+    }
+
+    /// Edge slots `[s, e)` of the weight lane; `None` when unweighted or
+    /// unaligned (`None` → use per-slot [`Self::weight`]).
+    #[inline]
+    pub fn weight_run(&self, s: usize, e: usize) -> Option<&'a [f32]> {
+        debug_assert!(s <= e && e <= self.layout.num_edges);
+        if !self.layout.weighted {
+            return None;
+        }
+        self.run_at(self.layout.wgt_off + s * 4, e - s)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -356,6 +403,49 @@ mod tests {
         let u = sample();
         assert_view_matches(&u, &to_bytes(&u));
         assert_view_matches(&u, &to_bytes_v1(&u));
+    }
+
+    #[test]
+    fn payload_runs_match_per_slot_reads() {
+        for bytes in [to_bytes(&sample_weighted()), to_bytes(&sample()), to_bytes_v1(&sample())] {
+            let layout = parse_layout(&bytes).unwrap();
+            let view = layout.view(&bytes);
+            let m = view.num_edges();
+            if let Some(cols) = view.col_run(0, m) {
+                assert_eq!(cols.len(), m);
+                for (k, &c) in cols.iter().enumerate() {
+                    assert_eq!(c, view.col(k));
+                }
+            }
+            match view.weight_run(0, m) {
+                Some(w) => {
+                    assert!(view.is_weighted());
+                    for (k, &x) in w.iter().enumerate() {
+                        assert_eq!(x.to_bits(), view.weight(k).to_bits());
+                    }
+                }
+                None => {} // unweighted, or the allocator gave odd alignment
+            }
+            if let Some(cols) = view.col_run(1, m) {
+                assert_eq!(cols.len(), m - 1);
+                assert_eq!(cols[0], view.col(1));
+            }
+            if let Some(r) = view.col_run(2, 2) {
+                assert!(r.is_empty());
+            }
+
+            // a deliberately shifted copy: runs are either refused
+            // (alignment check) or still read the same slots
+            let mut shifted = vec![0u8; bytes.len() + 1];
+            shifted[1..].copy_from_slice(&bytes);
+            let l2 = parse_layout(&shifted[1..]).unwrap();
+            let v2 = l2.view(&shifted[1..]);
+            if let Some(cols) = v2.col_run(0, m) {
+                for (k, &c) in cols.iter().enumerate() {
+                    assert_eq!(c, v2.col(k));
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,159 @@
+//! Direct-I/O equivalence: the `O_DIRECT` submission ring must be an
+//! invisible substitution for buffered reads.
+//!
+//! Two layers:
+//! * **Byte layer** — [`DirectShardReader`] vs `std::fs::read`,
+//!   byte-for-byte, across file sizes chosen to hit every alignment edge
+//!   (sub-sector files, exact sector/segment multiples, unaligned tails
+//!   that force the short-read restart path), in both the resolved mode
+//!   and the forced thread-pool fallback.
+//! * **Engine layer** — full runs over every cache codec with
+//!   `--direct-io` on and off produce bit-identical fixpoints, both with
+//!   a warm cache (direct reads only during load) and with the cache off
+//!   (every iteration is cold reads).
+
+use graphmp::apps::{PageRank, Sssp};
+use graphmp::cache::Codec;
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::graph::generator;
+use graphmp::sharding::{preprocess, PreprocessConfig};
+use graphmp::storage::uring::{DirectShardReader, RingMode};
+use graphmp::storage::DatasetDir;
+use graphmp::util::rng::Xoshiro256;
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("gmp_directio_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn reader_matches_buffered_byte_for_byte() {
+    const SEG: usize = 1 << 20; // uring's submission segment
+    let dir = tmp_dir("bytes");
+    // alignment edges: sub-sector, sector±1, segment±1, multi-segment
+    // with a ragged tail, and an empty file
+    let sizes = [
+        0usize,
+        1,
+        511,
+        4095,
+        4096,
+        4097,
+        SEG - 1,
+        SEG,
+        SEG + 1,
+        2 * SEG + 4096 + 7,
+        3 * SEG + 513,
+    ];
+    let readers = [
+        ("resolved", DirectShardReader::with_mode(graphmp::storage::uring::resolve_mode(), 4)),
+        ("pool", DirectShardReader::with_mode(RingMode::Pool, 3)),
+    ];
+    let mut rng = Xoshiro256::seed_from_u64(0xD1EC7);
+    for (i, &size) in sizes.iter().enumerate() {
+        let mut data = vec![0u8; size];
+        for b in data.iter_mut() {
+            *b = rng.next_u64() as u8;
+        }
+        let path = dir.join(format!("f{i}.bin"));
+        std::fs::write(&path, &data).unwrap();
+        let want = std::fs::read(&path).unwrap();
+        for (label, reader) in &readers {
+            let got = reader.read_file(&path).unwrap();
+            assert_eq!(got, want, "{label} reader diverged at size {size}");
+        }
+    }
+    for (label, reader) in &readers {
+        let (d, f) = reader.counts();
+        assert_eq!(
+            (d + f) as usize,
+            sizes.len(),
+            "{label} reader must count one read per file"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn reader_surfaces_missing_files_as_errors() {
+    let reader = DirectShardReader::with_mode(RingMode::Pool, 2);
+    assert!(reader.read_file(std::path::Path::new("/nonexistent/gmp_shard")).is_err());
+}
+
+fn build_dataset(tag: &str) -> DatasetDir {
+    let dir = DatasetDir::new(tmp_dir(tag).join("data"));
+    let edges = generator::rmat(8, 3000, generator::RmatParams::default(), 7);
+    let cfg = PreprocessConfig { max_edges_per_shard: 200, bloom_fpr: 0.01 };
+    preprocess(tag, &edges, 256, &dir, &cfg).unwrap();
+    dir
+}
+
+fn run_pagerank(dir: &DatasetDir, codec: Codec, budget: usize, direct_io: bool) -> Vec<u32> {
+    let engine = VswEngine::open(
+        dir.clone(),
+        EngineConfig {
+            max_iters: 4,
+            threads: 3,
+            selective: false,
+            cache_codec: codec,
+            cache_budget: budget,
+            direct_io,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let result = engine.run(&PageRank::default()).unwrap();
+    if direct_io {
+        let (d, f) = engine.direct_reader().expect("reader must exist").counts();
+        assert!(d + f > 0, "direct_io run never touched the ring");
+    }
+    result.values.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn engine_fixpoints_are_bit_identical_across_codecs_and_io_paths() {
+    let dir = build_dataset("codecs");
+    for codec in Codec::ALL {
+        // warm cache: the ring serves the load-time warming reads
+        let buffered = run_pagerank(&dir, codec, usize::MAX, false);
+        let direct = run_pagerank(&dir, codec, usize::MAX, true);
+        assert_eq!(buffered, direct, "codec {} warm-cache run diverged", codec.name());
+    }
+    // cache off: every iteration re-reads every shard through the ring
+    let buffered = run_pagerank(&dir, Codec::None, 0, false);
+    let direct = run_pagerank(&dir, Codec::None, 0, true);
+    assert_eq!(buffered, direct, "cold-path run diverged");
+    let _ = std::fs::remove_dir_all(dir.root.parent().unwrap());
+}
+
+#[test]
+fn sssp_agrees_with_direct_io_and_either_fold() {
+    let dir = build_dataset("sssp");
+    let run = |direct_io: bool, simd: bool| {
+        let engine = VswEngine::open(
+            dir.clone(),
+            EngineConfig {
+                threads: 2,
+                selective: false,
+                cache_budget: 0,
+                direct_io,
+                simd,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let values = engine.run(&Sssp { source: 0 }).unwrap().values;
+        values.iter().map(|v| v.to_bits()).collect::<Vec<u32>>()
+    };
+    let base = run(false, true);
+    for (direct_io, simd) in [(true, true), (true, false), (false, false)] {
+        assert_eq!(
+            run(direct_io, simd),
+            base,
+            "sssp diverged at direct_io={direct_io} simd={simd}"
+        );
+    }
+    let _ = std::fs::remove_dir_all(dir.root.parent().unwrap());
+}
