@@ -84,8 +84,10 @@ fn main() -> anyhow::Result<()> {
     let engine = VswEngine::open(dir.clone(), EngineConfig::default())?;
     let property = Property::load(&dir.property_path())?;
     let manifest = EpochManifest::load_or_bootstrap(&dir, &property)?;
-    let seed = mutation::incremental_seed(&dir, &manifest, 0, engine.epoch())?
+    let plan = mutation::incremental_plan(&dir, &manifest, 0, engine.epoch())?
         .expect("insert-only history must be incremental-eligible");
+    assert!(!plan.has_resets(), "insert-only history must not require resets");
+    let seed = plan.seed;
     let seed_len = seed.len();
     let t_warm = Instant::now();
     let warm =

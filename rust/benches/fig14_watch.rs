@@ -1,0 +1,148 @@
+//! Fig 14 (extension) — standing-query latency: `graphmp watch` advance
+//! vs cold recompute over a live mutation stream.
+//!
+//! The driver registers standing queries (SSSP — monotone warm restart;
+//! SpMV — single-pass Sum row maintenance), then streams delete-bearing
+//! mutation batches.  After every ingest it measures the watch advance
+//! (update-to-answer latency: re-derive the fixpoint and emit only the
+//! changed `<vertex> <bits>` lines) against a full cold recompute of the
+//! same epoch.  Two invariants fail the driver loudly:
+//!
+//! * every emission must equal the line diff of the two full dumps
+//!   around it (the delta-only contract, deletes included);
+//! * the summed watch-advance wall must beat the summed cold-recompute
+//!   wall — otherwise the standing query is pointless.
+//!
+//! `--quick` (the CI bench-smoke mode): tiny dataset, small batches, and
+//! a `fig_watch_latency` record appended to `$GRAPHMP_BENCH_JSON` if set.
+
+use std::time::{Duration, Instant};
+
+use graphmp::apps;
+use graphmp::coordinator::benchjson::{self, BenchRecord};
+use graphmp::coordinator::cli::Args;
+use graphmp::coordinator::datasets::Dataset;
+use graphmp::coordinator::report;
+use graphmp::engine::standing;
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::graph::mutation;
+use graphmp::sharding::{preprocess, PreprocessConfig};
+use graphmp::storage::DatasetDir;
+use graphmp::util::bench::Table;
+use graphmp::util::humansize;
+
+/// Full bit-exact per-vertex rendering of a cold run (the dump file).
+fn full_dump(engine: &VswEngine, app: &apps::AnyProgram) -> anyhow::Result<Vec<String>> {
+    let r = engine.run_any(app)?;
+    Ok((0..r.values.len()).map(|i| r.values.render_bits(i).expect("in range")).collect())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["quick", "bench"])?;
+    let quick = args.has("quick");
+    let dataset = if quick {
+        Dataset::by_name("tiny")?
+    } else {
+        Dataset::by_name(
+            &std::env::var("GRAPHMP_FIG14_DATASET").unwrap_or_else(|_| "twitter-s".into()),
+        )?
+    };
+    let (rounds, batch_size) = if quick { (4usize, 500usize) } else { (8, 10_000) };
+    println!(
+        "Fig 14: standing-query advance vs cold recompute on {} ({rounds} x {batch_size} \
+         mutations, deletes included)",
+        dataset.name
+    );
+
+    // fresh mutable copy — the shared bench datasets must stay immutable
+    let dir = DatasetDir::new(
+        std::env::temp_dir().join(format!("graphmp_fig14_{}", std::process::id())),
+    );
+    let _ = std::fs::remove_dir_all(&dir.root);
+    let mut edges = dataset.generate();
+    let mut weights: Vec<f32> = Vec::new();
+    let n = dataset.num_vertices();
+    preprocess(dataset.name, &edges, n, &dir, &PreprocessConfig::default())?;
+
+    let engine = VswEngine::open(dir.clone(), EngineConfig::default())?;
+    let lanes = ["sssp", "spmv"];
+    let mut dumps: Vec<Vec<String>> = Vec::new();
+    for name in lanes {
+        let app = apps::by_name(name)?;
+        let out = standing::watch_advance(&dir, &engine, &app, None)?;
+        assert!(out.registered, "{name}: first watch call must register");
+        dumps.push(full_dump(&engine, &app)?);
+    }
+
+    let mut watch_wall = Duration::ZERO;
+    let mut cold_wall = Duration::ZERO;
+    let mut emitted = 0usize;
+    let mut last_stats = graphmp::engine::RunStats::default();
+    for r in 0..rounds {
+        let batch =
+            mutation::synth_batch(n, &edges, batch_size, 0.2, false, 0xF16_14 + r as u64);
+        mutation::apply_batch(&mut edges, &mut weights, &batch)?;
+        mutation::ingest(&dir, &batch, 0.01)?;
+        engine.refresh_latest()?;
+
+        for (i, name) in lanes.iter().enumerate() {
+            let app = apps::by_name(name)?;
+            let t0 = Instant::now();
+            let out = standing::watch_advance(&dir, &engine, &app, None)?;
+            watch_wall += t0.elapsed();
+            let t1 = Instant::now();
+            let new = full_dump(&engine, &app)?;
+            cold_wall += t1.elapsed();
+            let diff: Vec<String> = dumps[i]
+                .iter()
+                .zip(&new)
+                .enumerate()
+                .filter(|(_, (a, b))| a != b)
+                .map(|(v, (_, b))| format!("{v} {b}"))
+                .collect();
+            assert_eq!(
+                out.lines, diff,
+                "{name}: round {r} emission diverged from the dump diff"
+            );
+            emitted += out.lines.len();
+            dumps[i] = new;
+            if *name == "sssp" {
+                last_stats = out.stats;
+            }
+        }
+    }
+
+    assert!(
+        watch_wall < cold_wall,
+        "standing-query advance ({}) must beat cold recompute ({})",
+        humansize::duration(watch_wall),
+        humansize::duration(cold_wall)
+    );
+
+    let mut table = Table::new(
+        &format!("Fig14 standing queries ({})", dataset.name),
+        &["leg", "total", "detail"],
+    );
+    table.row(&[
+        "watch".into(),
+        humansize::duration(watch_wall),
+        format!("{rounds} rounds x {} lanes, {emitted} changed lines emitted", lanes.len()),
+    ]);
+    table.row(&[
+        "cold".into(),
+        humansize::duration(cold_wall),
+        format!("full recompute + dump per round ({:.2}x watch)", {
+            cold_wall.as_secs_f64() / watch_wall.as_secs_f64().max(1e-9)
+        }),
+    ]);
+    table.print();
+    report::append_markdown(&report::results_path(), &table)?;
+
+    benchjson::record_if_requested(&BenchRecord::from_stats(
+        "fig_watch_latency",
+        watch_wall,
+        &last_stats,
+    ))?;
+    let _ = std::fs::remove_dir_all(&dir.root);
+    Ok(())
+}

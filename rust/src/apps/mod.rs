@@ -247,6 +247,20 @@ impl AnyProgram {
         }
     }
 
+    /// The program's gather shape — what Sum-lane incremental maintenance
+    /// checks: a gather reading `src_out_deg` ([`GatherKind::RankOverOutDeg`]
+    /// or the unknowable [`GatherKind::Custom`]) makes a mutated vertex's
+    /// *surviving* out-edges change contribution too, so only
+    /// degree-oblivious gathers recompute mutation destinations alone.
+    pub fn gather_kind(&self) -> GatherKind {
+        match self {
+            AnyProgram::F32(p) => p.gather_kind(),
+            AnyProgram::F64(p) => p.gather_kind(),
+            AnyProgram::U32(p) => p.gather_kind(),
+            AnyProgram::U64(p) => p.gather_kind(),
+        }
+    }
+
     /// Unwrap the classic float lane (legacy drivers); errors for typed
     /// programs.
     pub fn into_f32(self) -> anyhow::Result<Box<dyn VertexProgram<f32>>> {

@@ -4,6 +4,7 @@ mod backend;
 mod governor;
 mod shared;
 pub mod simd;
+pub mod standing;
 mod stats;
 mod vsw;
 
@@ -12,5 +13,6 @@ pub use backend::{
 };
 pub use governor::{Governor, GovernorConfig};
 pub use shared::SharedSlice;
+pub use standing::{Advance, AdvanceMode, WatchOutcome};
 pub use stats::{AnyRunResult, IterStats, RunResult, RunStats};
 pub use vsw::{EngineConfig, EpochState, VswEngine, WarmStart};

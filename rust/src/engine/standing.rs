@@ -1,0 +1,361 @@
+//! Standing queries over the mutation stream (`graphmp watch`).
+//!
+//! A standing query keeps an app's fixpoint alive across ingests and, on
+//! each advance, re-emits **only the vertices whose bit-exact value
+//! changed** since the previous emission.  The state lives in a `GMCS`
+//! sidecar next to the dataset ([`DatasetDir::watch_path`]): the baseline
+//! value vector, the epoch it was computed at, the last changed-set, and —
+//! for `--window N` queries — the sliding-window membership.
+//!
+//! The same decision tree also backs `run --incremental`
+//! ([`incremental_run`]), so the CLI one-shot, the daemon `watch`/`poll`
+//! verbs and the restart path all share one implementation:
+//!
+//! * **monotone apps** (Min/Max reduce) — [`mutation::incremental_plan`]
+//!   derives a warm-start seed; delete-bearing ranges additionally carry a
+//!   reset set (the forward closure of deleted-edge destinations) that
+//!   [`VswEngine::run_any_plan`] re-initialises before relaxing.  Only when
+//!   a batch in the range is unreplayable does the query fall back cold.
+//! * **single-pass Sum apps** with a degree-oblivious gather (Identity /
+//!   PlusOne / PlusWeight, effective `max_iters == 1`) — every row is an
+//!   independent fold over its in-edges, so only mutation destinations can
+//!   change.  [`VswEngine::run_any_rows`] refolds exactly those rows
+//!   through the same kernels the cold pass uses, which keeps the result
+//!   bit-identical to a cold recompute.
+//! * **everything else** (iterative Sum like PageRank) — recompute cold;
+//!   the changed-set diff still applies.
+//!
+//! ## Sliding windows
+//!
+//! `--window N` interprets the query as "the fixpoint over the last `N`
+//! ingest batches".  Aging a batch out is just more mutation stream: the
+//! archived batch's inserts are replayed as deletes (its own deletes are
+//! dropped — a tombstone already kills every `(src,dst)` occurrence, which
+//! is the system-wide delete semantics the window inherits).  The expiry
+//! ingest happens *before* the advance, so one warm/rows pass absorbs both
+//! the payload and the expiry.  A pruned archived batch is dropped from
+//! the window with a warning rather than failing the query.  One windowed
+//! watch per dataset is supported: a second windowed watch would observe
+//! the first one's expiry batches as payload.
+
+use anyhow::{Context, Result};
+
+use crate::apps::{AnyProgram, GatherKind, Reduce};
+use crate::engine::{AnyRunResult, VswEngine};
+use crate::graph::mutation::{self, Mutation};
+use crate::graph::{AnyValues, VertexId};
+use crate::runtime::EpochManifest;
+use crate::storage::delta::{self, WatchState};
+use crate::storage::property::Property;
+use crate::storage::DatasetDir;
+
+/// How an advance obtained its new values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdvanceMode {
+    /// Full recompute from `init` (first emission or fallback).
+    Cold,
+    /// Monotone warm restart seeded from the mutation range.
+    Warm,
+    /// Monotone warm restart with delete-derived resets.
+    WarmReset,
+    /// Single-pass Sum row maintenance (mutation destinations only).
+    Rows,
+    /// Nothing to do — the baseline epoch is already current.
+    Idle,
+}
+
+impl AdvanceMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AdvanceMode::Cold => "cold",
+            AdvanceMode::Warm => "warm",
+            AdvanceMode::WarmReset => "warm+reset",
+            AdvanceMode::Rows => "rows",
+            AdvanceMode::Idle => "idle",
+        }
+    }
+}
+
+/// Result of advancing a value vector from one epoch to the engine's.
+pub struct Advance {
+    pub result: AnyRunResult,
+    pub mode: AdvanceMode,
+}
+
+/// One `watch` emission: the epoch it brings the query to and the
+/// changed-set lines (`<vertex> <bits>`, ascending by vertex).
+pub struct WatchOutcome {
+    pub epoch: u64,
+    pub mode: AdvanceMode,
+    /// True when this call created the sidecar (full emission).
+    pub registered: bool,
+    /// Ingest batches aged out of the sliding window by this advance.
+    pub expired: usize,
+    pub lines: Vec<String>,
+    pub stats: crate::engine::RunStats,
+}
+
+/// Effective iteration bound: the engine config wins when set, the app
+/// default otherwise (mirrors the run loop's own resolution).
+fn effective_max_iters(engine: &VswEngine, app: &AnyProgram) -> usize {
+    let cfg = engine.config().max_iters;
+    if cfg > 0 {
+        cfg
+    } else {
+        app.default_max_iters()
+    }
+}
+
+/// Is `app` a single-pass Sum whose gather never reads vertex degrees?
+/// Those rows are independent folds, so row-level maintenance is exact.
+fn sum_single_pass(engine: &VswEngine, app: &AnyProgram) -> bool {
+    app.reduce() == Reduce::Sum
+        && effective_max_iters(engine, app) == 1
+        && matches!(
+            app.gather_kind(),
+            GatherKind::Identity | GatherKind::PlusOne | GatherKind::PlusWeight
+        )
+}
+
+/// Destinations touched by the mutation range `(from, to]`, or `None`
+/// when a batch in the range is missing/unarchived (degrade cold).
+fn affected_rows(
+    dir: &DatasetDir,
+    manifest: &EpochManifest,
+    from: u64,
+    to: u64,
+) -> Result<Option<Vec<VertexId>>> {
+    let mut rows: Vec<VertexId> = Vec::new();
+    for e in manifest.epochs_between(from, to) {
+        if e.kind == "compact" {
+            continue;
+        }
+        let Some(b) = &e.batch else { return Ok(None) };
+        let path = dir.root.join(b);
+        if !path.exists() {
+            return Ok(None);
+        }
+        for m in delta::load_log(&path)? {
+            rows.push(m.dst());
+        }
+    }
+    rows.sort_unstable();
+    rows.dedup();
+    Ok(Some(rows))
+}
+
+/// Advance `baseline` (computed at epoch `from`) to the engine's current
+/// epoch along the cheapest exact path for `app`.  `from` must not be
+/// ahead of the engine — callers that can see a future baseline (stale
+/// saved fixpoints) must check and fall back cold themselves.
+pub fn advance_values(
+    dir: &DatasetDir,
+    engine: &VswEngine,
+    app: &AnyProgram,
+    baseline: AnyValues,
+    from: u64,
+) -> Result<Advance> {
+    let to = engine.epoch();
+    anyhow::ensure!(
+        from <= to,
+        "baseline epoch {from} is ahead of engine epoch {to}"
+    );
+    if from == to {
+        return Ok(Advance {
+            result: AnyRunResult { values: baseline, stats: Default::default() },
+            mode: AdvanceMode::Idle,
+        });
+    }
+    let property = Property::load(&dir.property_path()).context("property")?;
+    let manifest = EpochManifest::load_or_bootstrap(dir, &property)?;
+    if app.reduce().is_monotone() {
+        if let Some(plan) = mutation::incremental_plan(dir, &manifest, from, to)? {
+            let mode =
+                if plan.has_resets() { AdvanceMode::WarmReset } else { AdvanceMode::Warm };
+            return Ok(Advance { result: engine.run_any_plan(app, baseline, &plan)?, mode });
+        }
+    } else if sum_single_pass(engine, app) {
+        if let Some(rows) = affected_rows(dir, &manifest, from, to)? {
+            return Ok(Advance {
+                result: engine.run_any_rows(app, baseline, &rows)?,
+                mode: AdvanceMode::Rows,
+            });
+        }
+    }
+    Ok(Advance { result: engine.run_any(app)?, mode: AdvanceMode::Cold })
+}
+
+/// `run --incremental`: resume from the saved fixpoint
+/// (`DatasetDir::values_path`) when it is usable, cold otherwise.  A
+/// fixpoint saved at a *later* epoch than the run target must not warm-
+/// start — `epochs_between` would see an empty range and silently keep
+/// future values — so it degrades cold with an explanation.
+pub fn incremental_run(
+    dir: &DatasetDir,
+    engine: &VswEngine,
+    app: &AnyProgram,
+) -> Result<Advance> {
+    let path = dir.values_path(app.name());
+    let (saved_epoch, values) = delta::load_values(&path)
+        .with_context(|| format!("loading saved values {}", path.display()))?;
+    let to = engine.epoch();
+    if saved_epoch > to {
+        eprintln!(
+            "incremental: saved fixpoint for {} is at epoch {saved_epoch}, ahead of run \
+             epoch {to}; recomputing cold",
+            app.name()
+        );
+        return Ok(Advance { result: engine.run_any(app)?, mode: AdvanceMode::Cold });
+    }
+    advance_values(dir, engine, app, values, saved_epoch)
+}
+
+/// Bitwise inequality diff of two same-lane value vectors: the vertices
+/// whose stored bits differ, ascending.  Float lanes compare IEEE bit
+/// patterns (so `-0.0 != 0.0` and NaN payloads count), matching the
+/// `--dump-values` text diff line for line.
+pub fn diff_changed(old: &AnyValues, new: &AnyValues) -> Result<Vec<VertexId>> {
+    anyhow::ensure!(
+        old.lane() == new.lane() && old.len() == new.len(),
+        "changed-set diff needs matching vectors ({} x{} vs {} x{})",
+        old.lane().name(),
+        old.len(),
+        new.lane().name(),
+        new.len()
+    );
+    let mut out = Vec::new();
+    macro_rules! scan {
+        ($a:expr, $b:expr, $ne:expr) => {
+            for (i, (x, y)) in $a.iter().zip($b.iter()).enumerate() {
+                if $ne(*x, *y) {
+                    out.push(i as VertexId);
+                }
+            }
+        };
+    }
+    match (old, new) {
+        (AnyValues::U32(a), AnyValues::U32(b)) => scan!(a, b, |x: u32, y: u32| x != y),
+        (AnyValues::U64(a), AnyValues::U64(b)) => scan!(a, b, |x: u64, y: u64| x != y),
+        (AnyValues::F32(a), AnyValues::F32(b)) => {
+            scan!(a, b, |x: f32, y: f32| x.to_bits() != y.to_bits())
+        }
+        (AnyValues::F64(a), AnyValues::F64(b)) => {
+            scan!(a, b, |x: f64, y: f64| x.to_bits() != y.to_bits())
+        }
+        _ => unreachable!("lane equality checked above"),
+    }
+    Ok(out)
+}
+
+fn changed_lines(values: &AnyValues, changed: &[VertexId]) -> Vec<String> {
+    changed
+        .iter()
+        .map(|&v| {
+            let bits = values.render_bits(v as usize).expect("changed vertex within range");
+            format!("{v} {bits}")
+        })
+        .collect()
+}
+
+/// Register-or-advance a standing query.
+///
+/// First call (no sidecar): computes the fixpoint cold, emits **every**
+/// vertex, and writes the sidecar.  Subsequent calls: age out expired
+/// window batches (ingesting their inserts as deletes), advance the
+/// baseline along the cheapest exact path, emit only the changed lines,
+/// and re-stamp the sidecar.  `window` overrides the stored window size
+/// when `Some`; `None` keeps whatever the registration chose.
+pub fn watch_advance(
+    dir: &DatasetDir,
+    engine: &VswEngine,
+    app: &AnyProgram,
+    window: Option<u32>,
+) -> Result<WatchOutcome> {
+    let path = dir.watch_path(app.name());
+    if !path.exists() {
+        let result = engine.run_any(app)?;
+        let changed: Vec<VertexId> = (0..result.values.len() as VertexId).collect();
+        let lines = changed_lines(&result.values, &changed);
+        let state = WatchState {
+            epoch: engine.epoch(),
+            window: window.unwrap_or(0),
+            window_epochs: Vec::new(),
+            last_changed: changed,
+            values: result.values,
+        };
+        delta::save_watch(&path, &state)?;
+        return Ok(WatchOutcome {
+            epoch: state.epoch,
+            mode: AdvanceMode::Cold,
+            registered: true,
+            expired: 0,
+            lines,
+            stats: result.stats,
+        });
+    }
+
+    let mut state = delta::load_watch(&path)
+        .with_context(|| format!("loading watch state {}", path.display()))?;
+    if let Some(w) = window {
+        state.window = w;
+    }
+
+    let mut expired = 0usize;
+    if state.window > 0 {
+        let property = Property::load(&dir.property_path()).context("property")?;
+        let manifest = EpochManifest::load_or_bootstrap(dir, &property)?;
+        for e in manifest.epochs_between(state.epoch, manifest.current) {
+            if e.kind == "ingest" {
+                state.window_epochs.push(e.id);
+            }
+        }
+        while state.window_epochs.len() > state.window as usize {
+            let old = state.window_epochs.remove(0);
+            let Some(batch) = manifest.epoch(old).ok().and_then(|e| e.batch.clone()) else {
+                eprintln!("watch: epoch {old} has no archived batch; dropping it from the window");
+                expired += 1;
+                continue;
+            };
+            let batch = dir.root.join(batch);
+            if !batch.exists() {
+                eprintln!(
+                    "watch: archived batch for epoch {old} was pruned; dropping it from the window"
+                );
+                expired += 1;
+                continue;
+            }
+            let tombs: Vec<Mutation> = delta::load_log(&batch)?
+                .into_iter()
+                .filter_map(|m| match m {
+                    Mutation::Insert { src, dst, .. } => Some(Mutation::Delete { src, dst }),
+                    Mutation::Delete { .. } => None,
+                })
+                .collect();
+            if !tombs.is_empty() {
+                mutation::ingest(dir, &tombs, 0.01)
+                    .with_context(|| format!("expiring window epoch {old}"))?;
+            }
+            expired += 1;
+        }
+        if expired > 0 {
+            engine.refresh_latest()?;
+        }
+    }
+
+    let baseline = std::mem::take(&mut state.values);
+    let adv = advance_values(dir, engine, app, baseline.clone(), state.epoch)?;
+    let changed = diff_changed(&baseline, &adv.result.values)?;
+    let lines = changed_lines(&adv.result.values, &changed);
+    state.epoch = engine.epoch();
+    state.last_changed = changed;
+    state.values = adv.result.values;
+    delta::save_watch(&path, &state)?;
+    Ok(WatchOutcome {
+        epoch: state.epoch,
+        mode: adv.mode,
+        registered: false,
+        expired,
+        lines,
+        stats: adv.result.stats,
+    })
+}

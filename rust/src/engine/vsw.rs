@@ -463,7 +463,7 @@ impl Pools {
 
 /// Warm-start state for an incremental re-run on a mutated dataset: the
 /// previous epoch's fixpoint values plus the vertices whose in-edges the
-/// mutations touched (see [`crate::graph::mutation::incremental_seed`]).
+/// mutations touched (see [`crate::graph::mutation::incremental_plan`]).
 pub struct WarmStart<V> {
     pub values: Vec<V>,
     pub active: Vec<VertexId>,
@@ -722,7 +722,8 @@ impl VswEngine {
     /// must be on the program's lane (a saved fixpoint from a prior
     /// epoch), `active` the restart seed.  The caller is responsible for
     /// eligibility — monotone program, insert-only history — see
-    /// [`crate::graph::mutation::incremental_seed`].
+    /// [`crate::graph::mutation::incremental_plan`]; delete-bearing plans
+    /// go through [`Self::run_any_plan`] instead.
     pub fn run_any_warm(
         &self,
         app: &AnyProgram,
@@ -753,6 +754,155 @@ impl VswEngine {
                 app.lane().name()
             ),
         })
+    }
+
+    /// Delete-capable warm restart ([`crate::graph::mutation::SeedPlan`]):
+    /// reset every vertex in `plan.reset` back to `init` (a delete may have
+    /// orphaned its saved value), then warm-run with `plan.seed` active.
+    /// With an empty reset set this is exactly [`Self::run_any_warm`].
+    pub fn run_any_plan(
+        &self,
+        app: &AnyProgram,
+        values: AnyValues,
+        plan: &crate::graph::mutation::SeedPlan,
+    ) -> Result<AnyRunResult> {
+        let st = self.snapshot();
+        let n = st.property.info.num_vertices;
+        anyhow::ensure!(
+            plan.reset.iter().all(|&v| (v as u64) < n),
+            "reset set references vertices outside the dataset"
+        );
+        let ctx = ProgramContext { num_vertices: n };
+        let active = plan.seed.clone();
+        macro_rules! lane {
+            ($p:expr, $values:expr) => {{
+                let mut values = $values;
+                for &v in &plan.reset {
+                    values[v as usize] = $p.init(v, &ctx);
+                }
+                let r = self.run_seeded_at(&st, $p.as_ref(), Some(WarmStart { values, active }))?;
+                AnyRunResult { values: r.values.into(), stats: r.stats }
+            }};
+        }
+        Ok(match (app, values) {
+            (AnyProgram::F32(p), AnyValues::F32(values)) => lane!(p, values),
+            (AnyProgram::F64(p), AnyValues::F64(values)) => lane!(p, values),
+            (AnyProgram::U32(p), AnyValues::U32(values)) => lane!(p, values),
+            (AnyProgram::U64(p), AnyValues::U64(values)) => lane!(p, values),
+            (app, values) => anyhow::bail!(
+                "saved values are on the {} lane but app {} runs on {}",
+                values.lane().name(),
+                app.name(),
+                app.lane().name()
+            ),
+        })
+    }
+
+    /// Incremental Sum-lane maintenance: recompute only `rows` of a
+    /// *single-pass* Sum program (effective `max_iters == 1`, e.g. SpMV)
+    /// and splice the results into `baseline`, the previous epoch's
+    /// fixpoint.  Each row of a single-pass program is independent —
+    /// `apply(fold over its in-edges of the init vector, init)` — and a
+    /// mutation only changes the in-edge list of its destination row, so
+    /// recomputing exactly those rows through the same
+    /// [`fold_chunk`] the full engine uses (same merged base+delta stream,
+    /// same fixed fold order, same SIMD kernels) is bit-identical to a
+    /// cold recompute.  Eligibility — Sum reduce, single pass, a gather
+    /// that never reads `src_out_deg` — is the caller's job
+    /// (`engine::standing::advance`).
+    pub fn run_any_rows(
+        &self,
+        app: &AnyProgram,
+        baseline: AnyValues,
+        rows: &[VertexId],
+    ) -> Result<AnyRunResult> {
+        let st = self.snapshot();
+        macro_rules! lane {
+            ($p:expr, $values:expr) => {{
+                let mut values = $values;
+                let stats = self.recompute_rows(&st, $p.as_ref(), &mut values, rows)?;
+                AnyRunResult { values: values.into(), stats }
+            }};
+        }
+        Ok(match (app, baseline) {
+            (AnyProgram::F32(p), AnyValues::F32(values)) => lane!(p, values),
+            (AnyProgram::F64(p), AnyValues::F64(values)) => lane!(p, values),
+            (AnyProgram::U32(p), AnyValues::U32(values)) => lane!(p, values),
+            (AnyProgram::U64(p), AnyValues::U64(values)) => lane!(p, values),
+            (app, values) => anyhow::bail!(
+                "baseline values are on the {} lane but app {} runs on {}",
+                values.lane().name(),
+                app.name(),
+                app.lane().name()
+            ),
+        })
+    }
+
+    /// The typed half of [`Self::run_any_rows`]: decode each affected
+    /// shard once (through the cache, so repeated polls stay warm) and
+    /// re-fold the listed rows against the program's init vector.
+    fn recompute_rows<V: VertexValue, P: VertexProgram<V> + ?Sized>(
+        &self,
+        st: &EpochState,
+        app: &P,
+        values: &mut [V],
+        rows: &[VertexId],
+    ) -> Result<RunStats> {
+        let t0 = Instant::now();
+        let n = st.property.info.num_vertices as usize;
+        anyhow::ensure!(
+            values.len() == n,
+            "baseline values cover {} vertices, dataset has {n}",
+            values.len()
+        );
+        anyhow::ensure!(
+            rows.iter().all(|&v| (v as usize) < n),
+            "row set references vertices outside the dataset"
+        );
+        let ctx = ProgramContext { num_vertices: n as u64 };
+        // iteration 0 of a single-pass run folds the init vector
+        let src: Vec<V> = (0..n).map(|v| app.init(v as VertexId, &ctx)).collect();
+        let out_deg = &st.vertex_info.degrees.out_deg;
+        let mut by_shard: Vec<Vec<VertexId>> = vec![Vec::new(); st.property.num_shards()];
+        for &v in rows {
+            by_shard[st.property.shard_of(v)].push(v);
+        }
+        let mut stats = RunStats { load_wall: self.load_wall, ..Default::default() };
+        for (shard, list) in by_shard.iter().enumerate() {
+            if list.is_empty() {
+                continue;
+            }
+            let admit = self.cfg.cache_budget > 0;
+            let read = || match &self.direct {
+                Some(r) => r.read_file(&st.shard_paths[shard]),
+                None => io::read_file(&st.shard_paths[shard]),
+            };
+            let csr = self.cache.fetch_decoded(shard, st.shard_epochs[shard], admit, read)?;
+            let (lo, hi) = st.property.interval(shard);
+            anyhow::ensure!(
+                csr.lo == lo && csr.num_vertices() == (hi - lo) as usize,
+                "shard {shard} interval disagrees with property"
+            );
+            let delta = st.deltas[shard].as_deref();
+            let mut out = [V::vzero()];
+            for &v in list {
+                let r = (v - lo) as usize;
+                fold_chunk(
+                    app,
+                    CsrRows::new(&csr, r..r + 1),
+                    delta,
+                    r,
+                    &src,
+                    out_deg,
+                    &ctx,
+                    self.cfg.simd,
+                    &mut out,
+                )?;
+                values[v as usize] = out[0];
+            }
+        }
+        stats.total_wall = t0.elapsed();
+        Ok(stats)
     }
 
     /// Run `app` to convergence (or the iteration cap): Algorithm 1.
@@ -1814,10 +1964,11 @@ mod tests {
         let property = crate::storage::property::Property::load(&dir.property_path()).unwrap();
         let manifest =
             crate::runtime::EpochManifest::load_or_bootstrap(&dir, &property).unwrap();
-        let seed = mutation::incremental_seed(&dir, &manifest, 0, 1).unwrap().unwrap();
-        assert_eq!(seed, vec![1, 7, 200]);
+        let plan = mutation::incremental_plan(&dir, &manifest, 0, 1).unwrap().unwrap();
+        assert!(plan.reset.is_empty(), "insert-only history plans no resets");
+        assert_eq!(plan.seed, vec![1, 7, 200]);
         let warm = engine
-            .run_seeded(&app, Some(WarmStart { values: fix0.values.clone(), active: seed }))
+            .run_seeded(&app, Some(WarmStart { values: fix0.values.clone(), active: plan.seed }))
             .unwrap();
         assert_eq!(warm.values, cold.values, "warm restart missed the cold fixpoint");
         assert!(

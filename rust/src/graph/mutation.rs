@@ -31,10 +31,13 @@
 //! **insert-only** mutation history lets a run warm-start from the previous
 //! epoch's fixpoint: the old fixpoint is a valid over-approximation of the
 //! new one, and seeding the active set with the sources of the inserted
-//! edges triggers exactly the relaxations the new edges enable
-//! ([`incremental_seed`]).  Deletions can *raise* Min-lattice values, which
-//! monotone re-iteration cannot do, so any deletion since the saved epoch
-//! forces a cold start; Sum lanes always recompute from scratch.
+//! edges triggers exactly the relaxations the new edges enable.
+//! Deletions can *raise* Min-lattice values, which monotone re-iteration
+//! cannot do on its own — so a delete-bearing history additionally resets
+//! the forward closure of the deleted edges' destinations back to `init`
+//! and re-derives them ([`incremental_plan`] / [`SeedPlan`]).  Sum lanes
+//! recompute cold, except single-pass Sum programs, which the engine
+//! maintains row-incrementally (`VswEngine::run_any_rows`).
 
 use std::collections::BTreeMap;
 
@@ -417,35 +420,134 @@ pub fn compact(dir: &DatasetDir, min_ratio: f64) -> Result<CompactReport> {
     })
 }
 
-/// Active-set seed for an incremental restart from epoch `from` to `to`:
-/// the deduplicated sources of every edge inserted in between.  Returns
-/// `None` when any intervening batch contains a delete — deletions can
-/// raise Min-lattice values, which warm re-iteration cannot, so the caller
-/// must cold-start.
-pub fn incremental_seed(
+/// What a monotone (Min/Max) warm restart from epoch `from` to `to` must
+/// do before re-iterating: reset `reset` back to `init` (their old values
+/// may no longer be derivable once edges were deleted), then re-converge
+/// with `seed` as the active set.  Insert-only history yields an empty
+/// `reset` — the classic seeded restart.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SeedPlan {
+    /// Vertices whose saved values a delete may have orphaned: the forward
+    /// closure of the deleted edges' destinations (plus, conservatively,
+    /// the out-neighbors of delete sources — degree-dependent gathers see
+    /// their contribution change).  Empty for insert-only history.
+    pub reset: Vec<VertexId>,
+    /// Warm-restart active seed: inserted-edge sources, every reset vertex
+    /// (its change to `init` must propagate), and the current in-edge
+    /// sources of reset vertices (so their rows get recomputed).
+    pub seed: Vec<VertexId>,
+}
+
+impl SeedPlan {
+    pub fn has_resets(&self) -> bool {
+        !self.reset.is_empty()
+    }
+}
+
+/// Plan a monotone warm restart from epoch `from` to `to`.
+///
+/// Insert-only history: `seed` = deduplicated sources of inserted edges,
+/// no resets (the old fixpoint over-approximates the new one everywhere).
+///
+/// Delete-bearing history: a tombstone can orphan a saved value — the
+/// derivation that produced it may have run through the deleted edge.  The
+/// set of possibly-orphaned vertices is the *forward closure* `F` of the
+/// deleted edges' destinations over the old edge set (⊆ current ∪ deleted):
+/// any vertex with an in-edge from `F` could have derived its value from an
+/// `F` vertex and joins `F`.  Resetting `F` to `init` and seeding
+/// `inserted sources ∪ F ∪ in-sources(F)` restores the warm invariant: no
+/// vertex outside `F` ever read a reset value, every reset vertex is
+/// recomputed from live in-edges, and the reset itself propagates.
+/// Degree-dependent gathers (`src_out_deg`) are covered by also closing
+/// over the delete sources' current out-neighbors.
+///
+/// Returns `Ok(None)` — caller must cold-start — when history is
+/// unreplayable: an epoch with no archived batch, an archived batch file
+/// pruned from disk, or a delete-bearing plan whose `to` is not the
+/// manifest's current epoch (the closure is computed against the current
+/// edge set).  Corrupt batch files are still hard errors.
+pub fn incremental_plan(
     dir: &DatasetDir,
     manifest: &EpochManifest,
     from: u64,
     to: u64,
-) -> Result<Option<Vec<VertexId>>> {
-    let mut seed = Vec::new();
+) -> Result<Option<SeedPlan>> {
+    let mut ins_src: Vec<VertexId> = Vec::new();
+    let mut dels: Vec<Edge> = Vec::new();
     for e in manifest.epochs_between(from, to) {
         if e.kind == "compact" {
             continue; // no logical change
         }
         let Some(b) = &e.batch else {
-            anyhow::bail!("epoch {} has no archived batch to replay", e.id)
+            return Ok(None); // nothing to replay — degrade to cold
         };
-        for m in delta::load_log(&dir.root.join(b))? {
+        let path = dir.root.join(b);
+        if !path.exists() {
+            return Ok(None); // archived batch pruned — degrade to cold
+        }
+        for m in delta::load_log(&path)? {
             match m {
-                Mutation::Insert { src, .. } => seed.push(src),
-                Mutation::Delete { .. } => return Ok(None),
+                Mutation::Insert { src, .. } => ins_src.push(src),
+                Mutation::Delete { src, dst } => dels.push((src, dst)),
             }
+        }
+    }
+    ins_src.sort_unstable();
+    ins_src.dedup();
+    if dels.is_empty() {
+        return Ok(Some(SeedPlan { reset: Vec::new(), seed: ins_src }));
+    }
+    // the closure below reads the *current* edge set; a historical target
+    // epoch would need the edge set as of `to`, which we don't reconstruct
+    if to != manifest.current {
+        return Ok(None);
+    }
+    let property = Property::load(&dir.property_path())?;
+    let n = property.info.num_vertices as usize;
+    let (edges, _weights) = current_edges(dir)?;
+
+    // initial frontier: deleted destinations, plus current out-neighbors
+    // of delete sources (their out-degree changed — a degree-dependent
+    // gather's contribution along every surviving out-edge changed too)
+    let mut del_src = vec![false; n];
+    let mut in_frontier = vec![false; n];
+    for &(s, d) in &dels {
+        del_src[s as usize] = true;
+        in_frontier[d as usize] = true;
+    }
+    // forward closure over old edges ⊆ current ∪ deleted, following src→dst
+    let mut adj: Vec<Vec<VertexId>> = vec![Vec::new(); n];
+    for &(s, d) in edges.iter().chain(dels.iter()) {
+        adj[s as usize].push(d);
+        if del_src[s as usize] {
+            in_frontier[d as usize] = true;
+        }
+    }
+    let mut stack: Vec<VertexId> =
+        (0..n as VertexId).filter(|&v| in_frontier[v as usize]).collect();
+    while let Some(v) = stack.pop() {
+        for &w in &adj[v as usize] {
+            if !in_frontier[w as usize] {
+                in_frontier[w as usize] = true;
+                stack.push(w);
+            }
+        }
+    }
+    let reset: Vec<VertexId> =
+        (0..n as VertexId).filter(|&v| in_frontier[v as usize]).collect();
+
+    // seed: insert sources, the reset set itself, and every current
+    // in-source of a reset vertex (forces its row to be recomputed)
+    let mut seed = ins_src;
+    seed.extend_from_slice(&reset);
+    for &(s, d) in &edges {
+        if in_frontier[d as usize] {
+            seed.push(s);
         }
     }
     seed.sort_unstable();
     seed.dedup();
-    Ok(Some(seed))
+    Ok(Some(SeedPlan { reset, seed }))
 }
 
 /// The current epoch's full edge list (merged base + deltas), shard by
@@ -684,7 +786,7 @@ mod tests {
     }
 
     #[test]
-    fn incremental_seed_collects_insert_sources_and_vetoes_deletes() {
+    fn incremental_plan_collects_insert_sources_and_derives_delete_resets() {
         let dir = tmpdir("seed");
         preprocess("m", &[(0, 1), (1, 2)], 8, &dir, &PreprocessConfig::default()).unwrap();
         ingest(&dir, &[Mutation::Insert { src: 4, dst: 2, weight: 1.0 }], 0.01).unwrap();
@@ -700,27 +802,39 @@ mod tests {
         let property = Property::load(&dir.property_path()).unwrap();
         let manifest = EpochManifest::load_or_bootstrap(&dir, &property).unwrap();
         assert_eq!(
-            incremental_seed(&dir, &manifest, 0, 2).unwrap(),
-            Some(vec![4, 5])
+            incremental_plan(&dir, &manifest, 0, 2).unwrap(),
+            Some(SeedPlan { reset: vec![], seed: vec![4, 5] })
         );
-        assert_eq!(incremental_seed(&dir, &manifest, 1, 2).unwrap(), Some(vec![4, 5]));
         assert_eq!(
-            incremental_seed(&dir, &manifest, 2, 2).unwrap(),
-            Some(vec![]),
-            "no epochs in range, empty seed"
+            incremental_plan(&dir, &manifest, 1, 2).unwrap(),
+            Some(SeedPlan { reset: vec![], seed: vec![4, 5] })
         );
+        assert_eq!(
+            incremental_plan(&dir, &manifest, 2, 2).unwrap(),
+            Some(SeedPlan { reset: vec![], seed: vec![] }),
+            "no epochs in range, empty plan"
+        );
+        // current edges: 0→1, 1→2, 4→2, 5→3, 4→1; delete 0→1.
+        // Forward closure of dst 1 over old edges: {1, 2}; 0's surviving
+        // out-neighbors: none left.  Resets {1, 2}; seed adds their current
+        // in-sources {1, 4} and the reset set itself.
         ingest(&dir, &[Mutation::Delete { src: 0, dst: 1 }], 0.01).unwrap();
         let manifest = EpochManifest::load(&dir.epochs_path()).unwrap();
-        assert_eq!(
-            incremental_seed(&dir, &manifest, 0, 3).unwrap(),
-            None,
-            "deletes force a cold start"
-        );
-        assert_eq!(
-            incremental_seed(&dir, &manifest, 2, 3).unwrap(),
-            None,
-            "the deleting epoch is in range"
-        );
+        let plan = incremental_plan(&dir, &manifest, 2, 3).unwrap().expect("delete plan");
+        assert_eq!(plan.reset, vec![1, 2]);
+        assert!(plan.has_resets());
+        assert_eq!(plan.seed, vec![1, 2, 4], "reset set ∪ in-sources of resets");
+        let full = incremental_plan(&dir, &manifest, 0, 3).unwrap().expect("full-range plan");
+        assert_eq!(full.reset, vec![1, 2]);
+        assert_eq!(full.seed, vec![1, 2, 4, 5], "insert sources join the seed");
+        // a delete-bearing plan against a non-current target degrades cold
+        ingest(&dir, &[Mutation::Insert { src: 6, dst: 7, weight: 1.0 }], 0.01).unwrap();
+        let manifest = EpochManifest::load(&dir.epochs_path()).unwrap();
+        assert_eq!(incremental_plan(&dir, &manifest, 0, 3).unwrap(), None);
+        // a pruned archived batch degrades cold instead of erroring
+        std::fs::remove_file(dir.batch_path(4)).unwrap();
+        assert_eq!(incremental_plan(&dir, &manifest, 3, 4).unwrap(), None);
+        let _ = std::fs::remove_dir_all(&dir.root);
     }
 
     #[test]

@@ -64,6 +64,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
+        "watch" => cmd_watch(&args),
         "ingest" => cmd_ingest(&args),
         "compact" => cmd_compact(&args),
         "mutate-gen" => cmd_mutate_gen(&args),
@@ -145,9 +146,24 @@ USAGE:
                      (send one request line, e.g. `ping`, `open data=<dir>`,
                       `run session=1 app=pagerank values=1`,
                       `value session=1 app=pagerank vertex=7`,
-                      `ingest data=<dir> batch=<file>`, `shutdown`;
+                      `ingest data=<dir> batch=<file>`,
+                      `watch data=<dir> app=<name> [window=N]`,
+                      `poll data=<dir> app=<name>`, `shutdown`;
                       --dump-values writes payload lines bit-identical to
                       `run --dump-values`)
+  graphmp watch      --data <dir> --app <name> [--window N]
+                     [--dump-changed <file>] [engine flags as for `run`]
+                     (standing query: the first call computes the fixpoint
+                      and emits every vertex as `<vertex> <bits>`; every
+                      later call advances past any ingests since and emits
+                      ONLY the changed lines — monotone apps warm-restart
+                      (deletes re-derive the affected closure), single-pass
+                      Sum apps refold just the mutated rows, both bit-
+                      identical to a cold recompute.  --window N ages the
+                      oldest ingest batch out once more than N are live,
+                      by replaying its inserts as deletes.  State lives in
+                      watch_<app>.gmw next to the dataset; the daemon's
+                      `watch`/`poll` verbs advance the same file)
   graphmp ingest     --data <dir> --batch <file.gmdl|file.txt>
                      [--bloom-fpr 0.01]
                      (apply one mutation batch: `+ src dst [w]` inserts,
@@ -416,18 +432,18 @@ fn render_values(vals: &graphmp::graph::AnyValues) -> String {
     vals.render_bits_all()
 }
 
-/// The `--incremental` decision tree: warm-start from the saved fixpoint
-/// when the app is monotone and the history since the save is insert-only;
-/// otherwise report why and run cold.
+/// The `--incremental` decision tree lives in
+/// [`graphmp::engine::standing::incremental_run`]: monotone apps warm-start
+/// (delete-bearing histories reset the affected closure first), single-pass
+/// Sum apps refold only the mutated rows, everything else — and any
+/// unreplayable history, or a fixpoint saved *ahead* of the run epoch —
+/// recomputes cold with an explanation on stderr.
 fn run_incremental(
     engine: &VswEngine,
     app: &apps::AnyProgram,
     data: &DatasetDir,
 ) -> Result<graphmp::engine::AnyRunResult> {
-    use graphmp::graph::mutation;
-    use graphmp::runtime::EpochManifest;
-    use graphmp::storage::delta;
-    use graphmp::storage::property::Property;
+    use graphmp::engine::standing;
 
     let path = data.values_path(app.name());
     anyhow::ensure!(
@@ -436,38 +452,57 @@ fn run_incremental(
         app.name(),
         path.display()
     );
-    let (saved_epoch, values) = delta::load_values(&path)?;
-    if !app.reduce().is_monotone() {
-        eprintln!(
-            "incremental: {} reduces with Sum — cold start (only monotone Min/Max apps \
-             can re-converge from a prior fixpoint)",
-            app.name()
-        );
-        return engine.run_any(app);
+    let adv = standing::incremental_run(data, engine, app)?;
+    eprintln!("incremental: {} path to epoch {}", adv.mode.as_str(), engine.epoch());
+    Ok(adv.result)
+}
+
+/// `graphmp watch`: one-shot register-or-advance of a standing query.
+/// Emits changed lines (`<vertex> <bits>`) on stdout (or `--dump-changed`),
+/// a summary on stderr; the persistent state lives next to the dataset.
+fn cmd_watch(args: &Args) -> Result<()> {
+    use graphmp::engine::standing;
+    let data = DatasetDir::new(args.req("data")?);
+    anyhow::ensure!(data.exists(), "{} is not a preprocessed dataset", data.root.display());
+    let app = apps::by_name(args.req("app")?)?;
+    if let Some(mbps) = args.get("throttle-mbps") {
+        io::set_throttle(mbps.parse::<u64>().context("--throttle-mbps")? << 20);
     }
+    let cfg = engine_config(args)?;
     anyhow::ensure!(
-        saved_epoch <= engine.epoch(),
-        "saved values are from epoch {saved_epoch}, ahead of the opened epoch {}",
-        engine.epoch()
+        cfg.epoch.is_none(),
+        "watch refuses --epoch: a standing query always follows the latest epoch"
     );
-    let property = Property::load(&data.property_path())?;
-    let manifest = EpochManifest::load_or_bootstrap(data, &property)?;
-    match mutation::incremental_seed(data, &manifest, saved_epoch, engine.epoch())? {
-        Some(seed) => {
-            eprintln!(
-                "incremental: warm start from epoch {saved_epoch} ({} seed vertices)",
-                seed.len()
-            );
-            engine.run_any_warm(app, values, seed)
+    let window = match args.get("window") {
+        Some(v) => Some(v.parse::<u32>().context("--window")?),
+        None => None,
+    };
+    let engine = VswEngine::open(data.clone(), cfg)?;
+    let out = standing::watch_advance(&data, &engine, &app, window)?;
+    if let Some(path) = args.get("dump-changed") {
+        let mut text = String::with_capacity(out.lines.len() * 16);
+        for line in &out.lines {
+            text.push_str(line);
+            text.push('\n');
         }
-        None => {
-            eprintln!(
-                "incremental: deletions since epoch {saved_epoch} — cold start (deletes can \
-                 raise Min-lattice values, which warm re-iteration cannot)"
-            );
-            engine.run_any(app)
+        std::fs::write(path, text).with_context(|| format!("writing {path}"))?;
+        eprintln!("dumped {} changed lines -> {path}", out.lines.len());
+    } else {
+        for line in &out.lines {
+            println!("{line}");
         }
     }
+    eprintln!(
+        "watch {}: epoch={} mode={} changed={}{}{}",
+        app.name(),
+        out.epoch,
+        out.mode.as_str(),
+        out.lines.len(),
+        if out.registered { " [registered]" } else { "" },
+        if out.expired > 0 { format!(" expired={}", out.expired) } else { String::new() },
+    );
+    io::set_throttle(0);
+    Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -484,6 +519,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     )?;
     let ttl = (ttl_secs > 0).then(|| std::time::Duration::from_secs(ttl_secs as u64));
     let srv = Arc::new(Server::new(ecfg, sched)?.with_session_ttl(ttl));
+    // timer-tick eviction: abandoned sessions are reaped even on a daemon
+    // that never receives another request or connection
+    if let Some(t) = ttl {
+        let _ = srv.spawn_sweeper(t.min(std::time::Duration::from_secs(1)));
+    }
     // pre-load the named dataset so the first client doesn't pay the load
     if let Some(data) = args.get("data") {
         let resp = srv.handle(&Request::new("epoch").arg("data", data).render());

@@ -166,6 +166,8 @@ impl Server {
             "value" => self.cmd_value(req),
             "degree" => self.cmd_degree(req),
             "ingest" => self.cmd_ingest(req),
+            "watch" => self.cmd_watch(req, true),
+            "poll" => self.cmd_watch(req, false),
             "shutdown" => {
                 self.shutdown.store(true, Ordering::SeqCst);
                 self.wake_listeners();
@@ -319,6 +321,43 @@ impl Server {
             .with("edges", report.num_edges))
     }
 
+    /// `watch` (register-or-advance) and `poll` (advance-only) for a
+    /// standing query.  The first `watch` computes the fixpoint and emits
+    /// every vertex; every later call emits only the changed lines
+    /// (`<vertex> <bits>`).  Advancing may ingest window-expiry batches,
+    /// so the whole call holds the dataset's ingest lock.
+    fn cmd_watch(&self, req: &Request, register: bool) -> Result<Response> {
+        use crate::engine::standing;
+        let entry = self.engine_entry(req.req("data")?)?;
+        let app = apps::by_name(req.req("app")?)?;
+        if !register {
+            anyhow::ensure!(
+                entry.dir.watch_path(app.name()).exists(),
+                "no standing query for {} on this dataset — send `watch` first",
+                app.name()
+            );
+        }
+        let window = match req.get("window") {
+            Some(v) => Some(v.parse::<u32>().context("bad window")?),
+            None => None,
+        };
+        let _ticket = self.sched.admit(JobClass::Heavy)?;
+        let _guard = entry.ingest_lock.lock().unwrap();
+        // pick up out-of-band CLI ingests before deciding what changed
+        entry.engine.refresh_latest()?;
+        let t0 = Instant::now();
+        let out = standing::watch_advance(&entry.dir, &entry.engine, &app, window)?;
+        Ok(Response::ok()
+            .with("app", app.name())
+            .with("epoch", out.epoch)
+            .with("mode", out.mode.as_str())
+            .with("registered", u8::from(out.registered))
+            .with("expired", out.expired)
+            .with("changed", out.lines.len())
+            .with("wall_us", t0.elapsed().as_micros())
+            .with_payload(out.lines))
+    }
+
     // ---- the byte-stream side ------------------------------------------
 
     /// Serve one connection: request lines in, response blocks out, until
@@ -356,6 +395,9 @@ impl Server {
             if self.is_shutdown() {
                 break;
             }
+            // accept-path sweep: a new connection reaps abandoned sessions
+            // even if it never sends a request
+            self.sessions.sweep_idle();
             if let Ok(stream) = conn {
                 let srv = self.clone();
                 std::thread::spawn(move || srv.serve_stream(stream));
@@ -376,6 +418,7 @@ impl Server {
             if self.is_shutdown() {
                 break;
             }
+            self.sessions.sweep_idle();
             if let Ok(stream) = conn {
                 let srv = self.clone();
                 std::thread::spawn(move || srv.serve_stream(stream));
@@ -383,6 +426,21 @@ impl Server {
         }
         let _ = std::fs::remove_file(path);
         Ok(())
+    }
+
+    /// Background idle-session sweeper: a timer tick that evicts
+    /// TTL-expired sessions even when the daemon receives no further
+    /// requests *or* connections.  Exits once the shutdown flag is up
+    /// (checked each tick, so it lingers at most one `interval`).
+    pub fn spawn_sweeper(self: &Arc<Self>, interval: Duration) -> std::thread::JoinHandle<()> {
+        let srv = self.clone();
+        std::thread::spawn(move || loop {
+            std::thread::sleep(interval);
+            if srv.is_shutdown() {
+                break;
+            }
+            srv.sessions.sweep_idle();
+        })
     }
 
     /// Poke every registered listener so its accept loop observes the
@@ -545,6 +603,93 @@ mod tests {
                 .render(),
         );
         assert!(gone.error.is_some(), "evicted session must read as closed");
+        let _ = std::fs::remove_dir_all(&dir.root);
+    }
+
+    #[test]
+    fn sweeper_thread_evicts_idle_sessions_without_any_request() {
+        let dir = build_dataset("sweepthread");
+        let data = dir.root.display().to_string();
+        let srv = Arc::new(server().with_session_ttl(Some(Duration::from_millis(1))));
+        let open = srv.handle(&Request::new("open").arg("data", &data).render());
+        assert!(open.is_ok(), "{:?}", open.error);
+        assert_eq!(srv.sessions.count(), 1);
+        let sweeper = srv.spawn_sweeper(Duration::from_millis(2));
+        // no further requests or connections: the timer tick alone reaps it
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while srv.sessions.count() > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(srv.sessions.count(), 0, "sweeper tick failed to evict the idle session");
+        srv.shutdown.store(true, Ordering::SeqCst);
+        sweeper.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir.root);
+    }
+
+    #[test]
+    fn watch_then_poll_emits_exactly_the_dump_diff() {
+        let dir = build_dataset("watch");
+        let data = dir.root.display().to_string();
+        let srv = server();
+
+        // registration computes the fixpoint and emits every vertex
+        let w0 =
+            srv.handle(&Request::new("watch").arg("data", &data).arg("app", "spmv").render());
+        assert!(w0.is_ok(), "{:?}", w0.error);
+        assert_eq!(w0.get("registered"), Some("1"));
+        assert_eq!(w0.payload.len(), 128);
+
+        // quiet poll: nothing changed, nothing emitted
+        let p0 = srv.handle(&Request::new("poll").arg("data", &data).arg("app", "spmv").render());
+        assert!(p0.is_ok(), "{:?}", p0.error);
+        assert_eq!(p0.get("mode"), Some("idle"));
+        assert!(p0.payload.is_empty());
+
+        // mutate through the daemon, then poll: delta-only re-emission
+        let batch = vec![
+            mutation::Mutation::Insert { src: 0, dst: 100, weight: 1.0 },
+            mutation::Mutation::Insert { src: 100, dst: 0, weight: 1.0 },
+        ];
+        let bpath =
+            std::env::temp_dir().join(format!("gmp_serve_watch_{}.gmdl", std::process::id()));
+        delta::save_log(&batch, &bpath).unwrap();
+        let ing = srv.handle(
+            &Request::new("ingest")
+                .arg("data", &data)
+                .arg("batch", &bpath.display().to_string())
+                .render(),
+        );
+        assert!(ing.is_ok(), "{:?}", ing.error);
+        let p1 = srv.handle(&Request::new("poll").arg("data", &data).arg("app", "spmv").render());
+        assert!(p1.is_ok(), "{:?}", p1.error);
+        assert_eq!(p1.get("mode"), Some("rows"), "single-pass Sum must take the row path");
+
+        // the changed-set must equal the diff of two full dumps
+        let open = srv.handle(&Request::new("open").arg("data", &data).render());
+        let run = srv.handle(
+            &Request::new("run")
+                .arg("session", open.get("session").unwrap())
+                .arg("app", "spmv")
+                .arg("values", "1")
+                .render(),
+        );
+        assert!(run.is_ok(), "{:?}", run.error);
+        let old: Vec<&str> =
+            w0.payload.iter().map(|l| l.split_once(' ').unwrap().1).collect();
+        let expect: Vec<String> = run
+            .payload
+            .iter()
+            .enumerate()
+            .filter(|(v, bits)| old[*v] != bits.as_str())
+            .map(|(v, bits)| format!("{v} {bits}"))
+            .collect();
+        assert!(!expect.is_empty(), "the test batch must change some rows");
+        assert_eq!(p1.payload, expect, "poll payload diverged from the dump diff");
+
+        // poll without a prior watch is an error, not a registration
+        let e = srv.handle(&Request::new("poll").arg("data", &data).arg("app", "sssp").render());
+        assert!(e.error.is_some());
+        let _ = std::fs::remove_file(&bpath);
         let _ = std::fs::remove_dir_all(&dir.root);
     }
 

@@ -32,7 +32,8 @@ use crate::graph::csr::Csr;
 use crate::graph::mutation::Mutation;
 use crate::graph::{VertexId, Weight};
 use crate::storage::format::{
-    frame, get_f32s, get_u32, get_u32s, get_u64, put_f32s, put_u32, put_u32s, put_u64, unframe,
+    frame, get_f32s, get_u32, get_u32s, get_u64, get_u64s, put_f32s, put_u32, put_u32s, put_u64,
+    put_u64s, unframe,
 };
 use crate::storage::io;
 
@@ -44,6 +45,9 @@ const SHARD_VERSION: u32 = 1;
 
 const VALUES_MAGIC: &[u8; 4] = b"GMVV";
 const VALUES_VERSION: u32 = 1;
+
+const WATCH_MAGIC: &[u8; 4] = b"GMCS";
+const WATCH_VERSION: u32 = 1;
 
 // ---- GMDL mutation log ------------------------------------------------------
 
@@ -184,6 +188,56 @@ pub fn load_values(path: &Path) -> Result<(u64, crate::graph::AnyValues)> {
     let (values, p) = get_any_values(payload, p)?;
     anyhow::ensure!(p == payload.len(), "saved values trailing bytes");
     Ok((epoch, values))
+}
+
+// ---- GMCS standing-query (watch) sidecar ------------------------------------
+
+/// Persistent state of one standing query (`graphmp watch`), stored next
+/// to the GMVV fixpoint: the epoch the query last emitted at, the baseline
+/// values to diff the next epoch against, the changed-set of the most
+/// recent emission, and (for `--window N`) which payload ingest epochs are
+/// currently inside the sliding window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WatchState {
+    /// Epoch the `values` baseline was computed at.
+    pub epoch: u64,
+    /// Count-window size in ingest batches; 0 = unbounded (no expiry).
+    pub window: u32,
+    /// Ingest epochs currently inside the window, oldest first.  Expiry
+    /// epochs the watch itself created are never listed here.
+    pub window_epochs: Vec<u64>,
+    /// Vertices re-emitted by the most recent advance (the changed-set).
+    pub last_changed: Vec<VertexId>,
+    /// Full baseline values at `epoch` — what the next advance diffs
+    /// against, bit for bit.
+    pub values: crate::graph::AnyValues,
+}
+
+/// Persist a standing query's state (`GMCS`).
+pub fn save_watch(path: &Path, state: &WatchState) -> Result<()> {
+    use crate::storage::format::put_any_values;
+    let mut payload = Vec::new();
+    put_u64(&mut payload, state.epoch);
+    put_u32(&mut payload, state.window);
+    put_u64s(&mut payload, &state.window_epochs);
+    put_u32s(&mut payload, &state.last_changed);
+    put_any_values(&mut payload, &state.values);
+    io::write_file(path, &frame(WATCH_MAGIC, WATCH_VERSION, &payload))
+}
+
+/// Load a standing query's state (`GMCS`).
+pub fn load_watch(path: &Path) -> Result<WatchState> {
+    use crate::storage::format::get_any_values;
+    let buf = io::read_file(path)?;
+    let (version, payload) = unframe(WATCH_MAGIC, &buf)?;
+    anyhow::ensure!(version == WATCH_VERSION, "watch state version {version}");
+    let (epoch, p) = get_u64(payload, 0)?;
+    let (window, p) = get_u32(payload, p)?;
+    let (window_epochs, p) = get_u64s(payload, p)?;
+    let (last_changed, p) = get_u32s(payload, p)?;
+    let (values, p) = get_any_values(payload, p)?;
+    anyhow::ensure!(p == payload.len(), "watch state trailing bytes");
+    Ok(WatchState { epoch, window, window_epochs, last_changed, values })
 }
 
 // ---- GMDS delta shard -------------------------------------------------------
@@ -564,6 +618,39 @@ mod tests {
         bad[mid] ^= 0x08;
         std::fs::write(&p, &bad).unwrap();
         assert!(load_values(&p).is_err());
+    }
+
+    #[test]
+    fn watch_state_roundtrips_and_rejects_corruption() {
+        use crate::graph::AnyValues;
+        let dir = std::env::temp_dir().join(format!("gmp_gmcs_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("watch_spmv.gmw");
+        let state = WatchState {
+            epoch: 7,
+            window: 3,
+            window_epochs: vec![5, 6, 7],
+            last_changed: vec![1, 4, 200],
+            values: AnyValues::F64(vec![0.25, f64::NEG_INFINITY]),
+        };
+        save_watch(&p, &state).unwrap();
+        assert_eq!(load_watch(&p).unwrap(), state);
+        // unbounded window, empty changed-set
+        let s2 = WatchState {
+            epoch: 0,
+            window: 0,
+            window_epochs: vec![],
+            last_changed: vec![],
+            values: AnyValues::U32(vec![9]),
+        };
+        save_watch(&p, &s2).unwrap();
+        assert_eq!(load_watch(&p).unwrap(), s2);
+        let mut bad = std::fs::read(&p).unwrap();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x04;
+        std::fs::write(&p, &bad).unwrap();
+        assert!(load_watch(&p).is_err(), "CRC must catch the flip");
+        let _ = std::fs::remove_file(&p);
     }
 
     #[test]

@@ -88,6 +88,12 @@ impl DatasetDir {
         self.root.join(format!("values_{app}.gmv"))
     }
 
+    /// Standing-query state of `app` (`graphmp watch` — baseline values,
+    /// last changed-set, sliding-window membership).
+    pub fn watch_path(&self, app: &str) -> PathBuf {
+        self.root.join(format!("watch_{app}.gmw"))
+    }
+
     pub fn exists(&self) -> bool {
         self.property_path().exists()
     }
@@ -115,5 +121,6 @@ mod tests {
         assert!(d.epoch_vertexinfo_path(9).ends_with("vertexinfo_e0009.bin"));
         assert!(d.batch_path(4).ends_with("batch_e0004.gmdl"));
         assert!(d.values_path("wcc").ends_with("values_wcc.gmv"));
+        assert!(d.watch_path("spmv").ends_with("watch_spmv.gmw"));
     }
 }

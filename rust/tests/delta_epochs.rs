@@ -205,9 +205,11 @@ fn prop_incremental_restart_equals_cold_start_on_monotone_apps() {
         let e1 = engine(&dir, Codec::SnapLite);
         let property = Property::load(&dir.property_path()).unwrap();
         let manifest = EpochManifest::load_or_bootstrap(&dir, &property).unwrap();
-        let seed = mutation::incremental_seed(&dir, &manifest, 0, e1.epoch())
+        let plan = mutation::incremental_plan(&dir, &manifest, 0, e1.epoch())
             .unwrap()
             .expect("insert-only history is always eligible");
+        assert!(!plan.has_resets(), "insert-only history must not require resets");
+        let seed = plan.seed;
 
         // every monotone lane: warm == cold, in no more iterations
         macro_rules! check_warm {
@@ -237,9 +239,10 @@ fn prop_incremental_restart_equals_cold_start_on_monotone_apps() {
 }
 
 #[test]
-fn deletions_force_cold_start_and_still_converge_correctly() {
-    // deleting an edge can *raise* Min-lattice values: the subsystem must
-    // refuse the warm path and the cold re-run must match a rebuild
+fn deletions_warm_start_via_reset_plan_and_match_cold() {
+    // deleting an edge can *raise* Min-lattice values: the plan must carry
+    // a reset set (the forward closure of the cut) and warm restart through
+    // it must land exactly where a cold run — and a rebuild — lands
     let n = 64;
     let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|v| (v, v + 1)).collect();
     let dir = build("delpath", &edges, &[], n, 32);
@@ -253,23 +256,38 @@ fn deletions_force_cold_start_and_still_converge_correctly() {
     mutation::ingest(&dir, &batch, 0.01).unwrap();
     let property = Property::load(&dir.property_path()).unwrap();
     let manifest = EpochManifest::load_or_bootstrap(&dir, &property).unwrap();
-    assert_eq!(
-        mutation::incremental_seed(&dir, &manifest, 0, 1).unwrap(),
-        None,
-        "a delete must veto the warm path"
-    );
+    let plan = mutation::incremental_plan(&dir, &manifest, 0, 1)
+        .unwrap()
+        .expect("a delete-bearing range targeting the current epoch is plannable");
+    // everything downstream of the cut gets re-derived
+    let expect: Vec<u32> = (32..n as u32).collect();
+    assert_eq!(plan.reset, expect, "reset = forward closure of the deleted edge's dst");
+    assert!(plan.seed.iter().all(|v| (32..n as u32).contains(v)));
 
     let e1 = engine(&dir, Codec::SnapLite);
-    let after = e1.run(&Sssp { source: 0 }).unwrap();
-    assert!(after.values[40].is_infinite(), "the far side must become unreachable");
-    assert_eq!(after.values[31], 31.0, "the near side keeps its distances");
+    let cold = e1.run(&Sssp { source: 0 }).unwrap();
+    assert!(cold.values[40].is_infinite(), "the far side must become unreachable");
+    assert_eq!(cold.values[31], 31.0, "the near side keeps its distances");
+
+    let app = graphmp::apps::AnyProgram::F32(Box::new(Sssp { source: 0 }));
+    let warm = e1
+        .run_any_plan(&app, before.values.clone().into(), &plan)
+        .unwrap();
+    let graphmp::graph::AnyValues::F32(warm_values) = &warm.values else {
+        panic!("sssp runs on the f32 lane");
+    };
+    assert_eq!(bits_f32(warm_values), bits_f32(&cold.values), "warm-via-plan != cold");
+    assert!(
+        warm.stats.num_iters() <= cold.stats.num_iters(),
+        "delete-capable warm restart iterated more than cold"
+    );
 
     let mut final_edges = edges.clone();
     let mut w = Vec::new();
     mutation::apply_batch(&mut final_edges, &mut w, &batch).unwrap();
     let rebuilt = build("delpath_rb", &final_edges, &[], n, 32);
     let want = engine(&rebuilt, Codec::SnapLite).run(&Sssp { source: 0 }).unwrap();
-    assert_eq!(bits_f32(&after.values), bits_f32(&want.values));
+    assert_eq!(bits_f32(&cold.values), bits_f32(&want.values));
 }
 
 #[test]

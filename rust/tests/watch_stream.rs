@@ -1,0 +1,233 @@
+//! Standing-query acceptance bar (`graphmp watch` / `standing`).
+//!
+//! * **Changed-set ≡ dump diff** — across R random mutation batches
+//!   (delete-bearing included), every lane's watch emission must equal the
+//!   line-by-line diff of two full `--dump-values` renderings: exactly the
+//!   vertices whose bit-exact text changed, each as `<vertex> <bits>`.
+//!   Monotone lanes advance warm (delete batches via reset plans),
+//!   single-pass Sum refolds only mutated rows, iterative Sum recomputes
+//!   cold — the emission contract is identical for all of them.
+//! * **Stale fixpoints never warm-start** — a fixpoint saved at epoch N
+//!   must not seed a run targeting an epoch `< N` (the mutation range
+//!   would read as empty and silently keep future values); it degrades to
+//!   a cold start instead.
+//! * **Sliding windows expire as mutation stream** — with `--window N`,
+//!   aging out the oldest ingest batch replays its inserts as deletes, and
+//!   the advanced values equal a cold run over the surviving window.
+
+use graphmp::apps;
+use graphmp::cache::Codec;
+use graphmp::engine::standing::{self, AdvanceMode};
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::graph::mutation::{self, Mutation};
+use graphmp::sharding::{preprocess, PreprocessConfig};
+use graphmp::storage::{delta, DatasetDir};
+use graphmp::util::prop;
+
+fn tmpdir(tag: &str) -> DatasetDir {
+    let d = std::env::temp_dir().join(format!("gmp_watch_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    DatasetDir::new(d)
+}
+
+fn build(tag: &str, edges: &[(u32, u32)], n: usize) -> DatasetDir {
+    let dir = tmpdir(tag);
+    let cfg = PreprocessConfig { max_edges_per_shard: 64, bloom_fpr: 0.01 };
+    preprocess(tag, edges, n, &dir, &cfg).unwrap();
+    dir
+}
+
+/// Fresh engine per advance, the way the CLI one-shot opens one.
+/// `max_iters` 200 for fixpoint apps; 0 (= app default) for single-pass.
+fn engine(dir: &DatasetDir, max_iters: usize) -> VswEngine {
+    VswEngine::open(
+        dir.clone(),
+        EngineConfig {
+            threads: 2,
+            max_iters,
+            cache_codec: Codec::SnapLite,
+            selective: true,
+            selective_threshold: 0.05,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+/// Full bit-exact dump, split into per-vertex lines (no vertex prefix).
+fn dump(dir: &DatasetDir, name: &str, max_iters: usize) -> Vec<String> {
+    let app = apps::by_name(name).unwrap();
+    let e = engine(dir, max_iters);
+    let r = e.run_any(&app).unwrap();
+    (0..r.values.len()).map(|i| r.values.render_bits(i).unwrap()).collect()
+}
+
+/// The expected emission: `<vertex> <bits>` for every line that differs.
+fn dump_diff(old: &[String], new: &[String]) -> Vec<String> {
+    assert_eq!(old.len(), new.len());
+    old.iter()
+        .zip(new)
+        .enumerate()
+        .filter(|(_, (a, b))| a != b)
+        .map(|(v, (_, b))| format!("{v} {b}"))
+        .collect()
+}
+
+#[test]
+fn prop_watch_changed_set_equals_dump_diff_across_random_batches() {
+    // (app, engine max_iters, modes an advance may legally report)
+    const LANES: &[(&str, usize, &[AdvanceMode])] = &[
+        ("sssp", 200, &[AdvanceMode::Warm, AdvanceMode::WarmReset]),
+        ("maxdeg", 200, &[AdvanceMode::Warm, AdvanceMode::WarmReset]),
+        ("spmv", 0, &[AdvanceMode::Rows]),
+        ("pagerank", 0, &[AdvanceMode::Cold]),
+    ];
+    prop::check(0x5A7C, 4, |g| {
+        let n = g.usize_in(48, 128);
+        let m = g.usize_in(60, 400);
+        let mut edges = g.edges(n, m);
+        let mut weights: Vec<f32> = Vec::new();
+        let tag = format!("ws{}", g.case_seed);
+        let dir = build(&tag, &edges, n);
+
+        // register every lane: full emission of n lines
+        let mut dumps: Vec<Vec<String>> = Vec::new();
+        for &(name, iters, _) in LANES {
+            let app = apps::by_name(name).unwrap();
+            let e = engine(&dir, iters);
+            let out = standing::watch_advance(&dir, &e, &app, None).unwrap();
+            assert!(out.registered, "{name}: first call must register");
+            assert_eq!(out.lines.len(), n, "{name}: registration emits every vertex");
+            let full = dump(&dir, name, iters);
+            let all: Vec<String> =
+                full.iter().enumerate().map(|(v, b)| format!("{v} {b}")).collect();
+            assert_eq!(out.lines, all, "{name}: registration emission != full dump");
+            dumps.push(full);
+        }
+
+        // R delete-bearing batches; each advance must emit the dump diff
+        let rounds = g.usize_in(2, 4);
+        for r in 0..rounds {
+            let batch = mutation::synth_batch(
+                n,
+                &edges,
+                g.usize_in(5, 25),
+                0.4,
+                false,
+                g.case_seed ^ (0xB00 + r as u64),
+            );
+            mutation::apply_batch(&mut edges, &mut weights, &batch).unwrap();
+            mutation::ingest(&dir, &batch, 0.01).unwrap();
+            let has_delete = batch.iter().any(|mu| !mu.is_insert());
+
+            for (i, &(name, iters, modes)) in LANES.iter().enumerate() {
+                let app = apps::by_name(name).unwrap();
+                let e = engine(&dir, iters);
+                let out = standing::watch_advance(&dir, &e, &app, None).unwrap();
+                assert!(!out.registered);
+                assert!(
+                    modes.contains(&out.mode),
+                    "{name}: unexpected advance mode {:?} (delete={has_delete})",
+                    out.mode
+                );
+                let new = dump(&dir, name, iters);
+                assert_eq!(
+                    out.lines,
+                    dump_diff(&dumps[i], &new),
+                    "{name}: round {r} emission != dump diff (delete={has_delete})"
+                );
+                dumps[i] = new;
+            }
+        }
+
+        let _ = std::fs::remove_dir_all(&dir.root);
+    });
+}
+
+#[test]
+fn incremental_rejects_fixpoint_saved_ahead_of_run_epoch() {
+    let n = 64;
+    let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|v| (v, v + 1)).collect();
+    let dir = build("stale", &edges, n);
+    let app = apps::by_name("sssp").unwrap();
+
+    // two insert-only epochs
+    for s in 0..2u64 {
+        let batch = vec![Mutation::Insert { src: 0, dst: 40 + s as u32, weight: 1.0 }];
+        mutation::ingest(&dir, &batch, 0.01).unwrap();
+    }
+
+    // fixpoint saved at the latest epoch (2)
+    let e2 = engine(&dir, 200);
+    assert_eq!(e2.epoch(), 2);
+    let fix = e2.run_any(&app).unwrap();
+    delta::save_values(&dir.values_path(app.name()), e2.epoch(), &fix.values).unwrap();
+    drop(e2);
+
+    // a run pinned at epoch 1 must NOT warm-start from the epoch-2 save:
+    // the mutation range (2, 1] is empty and warm restart would silently
+    // keep future values.  It must fall back cold — and match a cold run.
+    let pinned = VswEngine::open(
+        dir.clone(),
+        EngineConfig { epoch: Some(1), threads: 2, max_iters: 200, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(pinned.epoch(), 1);
+    let adv = standing::incremental_run(&dir, &pinned, &app).unwrap();
+    assert_eq!(adv.mode, AdvanceMode::Cold, "stale-ahead fixpoint must run cold");
+    let cold = pinned.run_any(&app).unwrap();
+    assert_eq!(adv.result.values, cold.values, "cold fallback diverged");
+
+    // sanity: the same save warm-starts a run that targets a *later* epoch
+    let batch = vec![Mutation::Insert { src: 0, dst: 50, weight: 1.0 }];
+    mutation::ingest(&dir, &batch, 0.01).unwrap();
+    let e3 = engine(&dir, 200);
+    assert_eq!(e3.epoch(), 3);
+    let adv2 = standing::incremental_run(&dir, &e3, &app).unwrap();
+    assert_eq!(adv2.mode, AdvanceMode::Warm);
+    assert_eq!(adv2.result.values, e3.run_any(&app).unwrap().values);
+
+    let _ = std::fs::remove_dir_all(&dir.root);
+}
+
+#[test]
+fn sliding_window_expires_oldest_batch_as_deletes() {
+    let n = 16;
+    let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|v| (v, v + 1)).collect();
+    let dir = build("window", &edges, n);
+    let app = apps::by_name("sssp").unwrap();
+
+    // register with a one-batch window: dist v = v on the bare path
+    let e = engine(&dir, 200);
+    let out = standing::watch_advance(&dir, &e, &app, Some(1)).unwrap();
+    assert!(out.registered);
+    drop(e);
+
+    // batch A: shortcut 0 -> 8 (dist 8 drops to 1, downstream follows)
+    mutation::ingest(&dir, &[Mutation::Insert { src: 0, dst: 8, weight: 1.0 }], 0.01).unwrap();
+    let e = engine(&dir, 200);
+    let out = standing::watch_advance(&dir, &e, &app, None).unwrap();
+    assert_eq!(out.expired, 0, "window of 1 holds the single live batch");
+    assert!(out.lines.iter().any(|l| l.starts_with("8 ")), "dist[8] must change");
+    drop(e);
+
+    // batch B: shortcut 0 -> 12; the window is full, so batch A expires —
+    // its insert is replayed as a delete and dist[8] returns to 8
+    mutation::ingest(&dir, &[Mutation::Insert { src: 0, dst: 12, weight: 1.0 }], 0.01).unwrap();
+    let e = engine(&dir, 200);
+    let out = standing::watch_advance(&dir, &e, &app, None).unwrap();
+    assert_eq!(out.expired, 1, "the oldest batch must age out");
+
+    // the advanced values equal a cold run over the surviving graph
+    // (base path + shortcut 0->12 only)
+    let cold = e.run_any(&app).unwrap();
+    let state = delta::load_watch(&dir.watch_path(app.name())).unwrap();
+    assert_eq!(state.values, cold.values, "window advance != cold over surviving window");
+    let want: Vec<(u32, u32)> = edges.iter().copied().chain([(0, 12)]).collect();
+    let rebuilt = build("window_rb", &want, n);
+    let wantv = engine(&rebuilt, 200).run_any(&app).unwrap();
+    assert_eq!(state.values, wantv.values, "surviving window != rebuilt graph");
+
+    let _ = std::fs::remove_dir_all(&dir.root);
+    let _ = std::fs::remove_dir_all(&rebuilt.root);
+}
