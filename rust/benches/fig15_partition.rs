@@ -1,0 +1,142 @@
+//! Fig 15 (extension) — partitioned-execution speedup: the `partrun`
+//! coordinator over N interval workers vs the same workload on N=1.
+//!
+//! Workers are in-process (`cluster::worker::spawn_local`: socketpair +
+//! thread — the same protocol bytes as spawned `partworker` processes,
+//! minus exec/connect noise), each pinned to a single compute thread, so
+//! the measured speedup is purely the partition-level parallelism the
+//! barrier protocol buys: N folds running concurrently between barriers,
+//! with only changed values crossing them.
+//!
+//! Two invariants fail the driver loudly:
+//!
+//! * N=1 and N=4 values must be **byte-identical** to each other and to a
+//!   plain single-process `run` (the bit-identity contract);
+//! * N=4 must beat N=1 on wall clock — otherwise the partitioning is
+//!   pointless.
+//!
+//! `--quick` (the CI bench-smoke mode): smaller graph, and a
+//! `fig_part_speedup` record (the N=4 wall) appended to
+//! `$GRAPHMP_BENCH_JSON` if set.
+
+#[cfg(not(unix))]
+fn main() {
+    println!("Fig 15: skipped (partition workers ride Unix socketpairs)");
+}
+
+#[cfg(unix)]
+fn main() -> anyhow::Result<()> {
+    use std::time::{Duration, Instant};
+
+    use graphmp::apps;
+    use graphmp::cluster::{worker, Coordinator, PartitionManifest, StreamLink};
+    use graphmp::coordinator::benchjson::{self, BenchRecord};
+    use graphmp::coordinator::cli::Args;
+    use graphmp::coordinator::report;
+    use graphmp::engine::{EngineConfig, VswEngine};
+    use graphmp::graph::generator;
+    use graphmp::sharding::{preprocess, PreprocessConfig};
+    use graphmp::storage::DatasetDir;
+    use graphmp::util::bench::Table;
+    use graphmp::util::humansize;
+
+    /// One full partitioned pagerank run; returns (wall, stitched values).
+    fn partitioned(
+        dir: &DatasetDir,
+        num_shards: usize,
+        workers: usize,
+        iters: usize,
+    ) -> anyhow::Result<(Duration, Vec<String>)> {
+        let manifest = PartitionManifest::balanced(num_shards, workers)?;
+        let cfg = EngineConfig { max_iters: iters, threads: 1, ..Default::default() };
+        let mut links = Vec::new();
+        let mut handles = Vec::new();
+        for _ in 0..workers {
+            let (stream, handle) = worker::spawn_local(dir.clone(), cfg.clone(), None)?;
+            links.push(StreamLink::new(stream));
+            handles.push(handle);
+        }
+        let mut coord = Coordinator::new(manifest, links)?;
+        let t0 = Instant::now();
+        let summary = coord.run("pagerank", iters, true)?;
+        let wall = t0.elapsed();
+        drop(coord);
+        for h in handles {
+            h.join().expect("worker thread panicked")?;
+        }
+        Ok((wall, summary.values))
+    }
+
+    let args = Args::parse(std::env::args().skip(1), &["quick", "bench"])?;
+    let quick = args.has("quick");
+    let (scale, num_edges, iters) =
+        if quick { (14u32, 600_000u64, 10usize) } else { (16, 4_000_000, 10) };
+    let n = 1usize << scale;
+    println!(
+        "Fig 15: partitioned pagerank speedup, rmat scale {scale} (|V|={} |E|={}) x {iters} iters",
+        humansize::count(n as u64),
+        humansize::count(num_edges),
+    );
+
+    let dir = DatasetDir::new(
+        std::env::temp_dir().join(format!("graphmp_fig15_{}", std::process::id())),
+    );
+    let _ = std::fs::remove_dir_all(&dir.root);
+    let edges = generator::rmat(scale, num_edges, generator::RmatParams::default(), 15);
+    // shard fine enough that 4 workers each own a real run of shards
+    let cfg = PreprocessConfig {
+        max_edges_per_shard: (edges.len() / 16).max(4096),
+        bloom_fpr: 0.01,
+    };
+    preprocess("fig15", &edges, n, &dir, &cfg)?;
+    let engine = VswEngine::open(
+        dir.clone(),
+        EngineConfig { max_iters: iters, threads: 1, ..Default::default() },
+    )?;
+    let p = engine.property().num_shards();
+    anyhow::ensure!(p >= 4, "fig15 graph must span at least 4 shards, got {p}");
+
+    // the single-process truth (and the RunStats the record rides on)
+    let reference = engine.run_any(&apps::by_name("pagerank")?)?;
+    let want: Vec<String> =
+        (0..reference.values.len()).map(|v| reference.values.render_bits(v).unwrap()).collect();
+
+    // best-of-2 per worker count to damp scheduler noise
+    let mut walls = Vec::new();
+    for workers in [1usize, 4] {
+        let mut best = Duration::MAX;
+        for _ in 0..2 {
+            let (wall, values) = partitioned(&dir, p, workers, iters)?;
+            assert_eq!(
+                values, want,
+                "N={workers} partitioned values diverged from the single-process run"
+            );
+            best = best.min(wall);
+        }
+        walls.push((workers, best));
+    }
+    let (n1, n4) = (walls[0].1, walls[1].1);
+    let speedup = n1.as_secs_f64() / n4.as_secs_f64().max(1e-9);
+
+    let mut table =
+        Table::new("Fig15 partitioned speedup (pagerank)", &["workers", "wall", "speedup"]);
+    table.row(&["1".into(), humansize::duration(n1), "1.00x".into()]);
+    table.row(&["4".into(), humansize::duration(n4), format!("{speedup:.2}x")]);
+    table.print();
+    report::append_markdown(&report::results_path(), &table)?;
+
+    assert!(
+        n4 < n1,
+        "N=4 ({}) must beat N=1 ({}) — partitioning bought nothing",
+        humansize::duration(n4),
+        humansize::duration(n1),
+    );
+
+    benchjson::record_if_requested(&BenchRecord::from_stats(
+        "fig_part_speedup",
+        n4,
+        &reference.stats,
+    ))?;
+    let _ = std::fs::remove_dir_all(&dir.root);
+    Ok(())
+}

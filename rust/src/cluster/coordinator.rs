@@ -1,0 +1,372 @@
+//! The partition coordinator: drives N workers through iteration
+//! barriers over the line protocol and merges their projections.
+//!
+//! The barrier is post-all-then-receive-all: every worker gets its
+//! `part-step` (with the *other* workers' delta lines from the previous
+//! iteration as payload) before the coordinator reads any response, so
+//! all N folds run concurrently and the receive loop is the
+//! synchronization point.  Between barriers the coordinator only merges
+//! counts and re-routes delta lines — it never touches values, which is
+//! why a partitioned run is bit-identical to the single-process engine:
+//! the workers compute with the engine's own fold path and the
+//! coordinator is pure plumbing.
+//!
+//! A worker that dies mid-iteration closes its socket; the next receive
+//! on that link fails ("connection closed") and the run surfaces a clean
+//! error naming the worker instead of hanging on a barrier that can
+//! never complete.
+
+use std::io::{BufReader, Read, Write};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::apps;
+use crate::server::{part, Request, Response};
+
+use super::manifest::PartitionManifest;
+
+/// One worker connection, split so the barrier can post to every worker
+/// before receiving from any.
+pub trait WorkerLink {
+    /// Write one request; do not wait for the response.
+    fn post(&mut self, req: &Request) -> Result<()>;
+    /// Read the next response (blocks).
+    fn recv(&mut self) -> Result<Response>;
+}
+
+/// [`WorkerLink`] over any byte stream — a Unix socket to a `partworker`
+/// process, or a socketpair into an in-process worker thread.
+pub struct StreamLink<S: Read + Write> {
+    reader: BufReader<S>,
+}
+
+impl<S: Read + Write> StreamLink<S> {
+    pub fn new(stream: S) -> Self {
+        Self { reader: BufReader::new(stream) }
+    }
+}
+
+impl<S: Read + Write> WorkerLink for StreamLink<S> {
+    fn post(&mut self, req: &Request) -> Result<()> {
+        let s = self.reader.get_mut();
+        s.write_all(req.render().as_bytes())?;
+        s.flush()?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Response> {
+        Response::read_from(&mut self.reader)
+    }
+}
+
+/// One iteration barrier, as the coordinator saw it.
+#[derive(Debug, Clone)]
+pub struct PartIterStats {
+    pub iter: usize,
+    /// Merged global active count *after* this iteration.
+    pub active: u64,
+    pub shards_processed: usize,
+    pub shards_skipped: usize,
+    /// Delta lines exchanged at this barrier (sum over workers).
+    pub delta_lines: usize,
+    pub edges: u64,
+    pub wall: Duration,
+}
+
+/// What a partitioned run produced.
+#[derive(Debug)]
+pub struct PartRunSummary {
+    pub app: String,
+    pub epoch: u64,
+    pub vertices: usize,
+    pub lane: String,
+    pub workers: usize,
+    pub iters: Vec<PartIterStats>,
+    pub total_wall: Duration,
+    /// Final values in `--dump-values` form (one bit-line per vertex,
+    /// ascending); empty unless requested.
+    pub values: Vec<String>,
+}
+
+pub struct Coordinator<L: WorkerLink> {
+    manifest: PartitionManifest,
+    links: Vec<L>,
+}
+
+impl<L: WorkerLink> Coordinator<L> {
+    pub fn new(manifest: PartitionManifest, links: Vec<L>) -> Result<Self> {
+        anyhow::ensure!(
+            manifest.num_parts() == links.len(),
+            "manifest has {} parts but {} workers are connected",
+            manifest.num_parts(),
+            links.len()
+        );
+        Ok(Self { manifest, links })
+    }
+
+    fn worker_tag(&self, i: usize) -> String {
+        let (lo, hi) = self.manifest.part(i);
+        format!("worker {i} (shards {lo}..{hi})")
+    }
+
+    fn post(&mut self, i: usize, req: &Request) -> Result<()> {
+        let tag = self.worker_tag(i);
+        self.links[i].post(req).with_context(|| tag)
+    }
+
+    /// Receive and unwrap one response; transport failures (a dead
+    /// worker's closed socket) and `err` answers both surface with the
+    /// worker's identity attached.
+    fn recv_ok(&mut self, i: usize) -> Result<Response> {
+        let tag = self.worker_tag(i);
+        let resp = self.links[i].recv().with_context(|| tag.clone())?;
+        match resp.error {
+            Some(e) => bail!("{tag}: {e}"),
+            None => Ok(resp),
+        }
+    }
+
+    /// Drive `app` to convergence (or the iteration cap) across all
+    /// workers.  `max_iters = 0` defers to the app's default, exactly
+    /// like [`crate::engine::EngineConfig::max_iters`].
+    pub fn run(
+        &mut self,
+        app_name: &str,
+        max_iters: usize,
+        collect_values: bool,
+    ) -> Result<PartRunSummary> {
+        let t0 = Instant::now();
+        let app = apps::by_name(app_name)?;
+        let max_iters = if max_iters > 0 { max_iters } else { app.default_max_iters() };
+        let w = self.links.len();
+
+        // barrier 0: bind the program and owned ranges everywhere, then
+        // cross-check that every worker projects the same world
+        for i in 0..w {
+            let req = Request::new(part::INIT)
+                .arg("app", app_name)
+                .arg("shards", &self.manifest.part_spec(i));
+            self.post(i, &req)?;
+        }
+        let (mut epoch, mut vertices, mut lane, mut global_active) =
+            (0u64, 0usize, String::new(), 0u64);
+        for i in 0..w {
+            let resp = self.recv_ok(i)?;
+            let e = resp_u64(&resp, "epoch")?;
+            let n = resp_u64(&resp, "vertices")? as usize;
+            let l = resp.get("lane").context("init response missing lane=")?.to_string();
+            let a = resp_u64(&resp, "active")?;
+            if i == 0 {
+                (epoch, vertices, lane, global_active) = (e, n, l, a);
+            } else {
+                anyhow::ensure!(
+                    (e, n, &l, a) == (epoch, vertices, &lane, global_active),
+                    "{} initialized at epoch {e} / {n} vertices / {a} active, \
+                     worker 0 at epoch {epoch} / {vertices} / {global_active} — \
+                     did an ingest land between worker spawns?",
+                    self.worker_tag(i)
+                );
+            }
+        }
+
+        // per-worker outbox: the delta lines each worker must apply at
+        // its next barrier (everyone else's changes from the last one)
+        let mut pending: Vec<Vec<String>> = vec![Vec::new(); w];
+        let mut iters = Vec::new();
+
+        for iter in 0..max_iters {
+            if global_active == 0 {
+                break;
+            }
+            let t_iter = Instant::now();
+            for i in 0..w {
+                let req = Request::new(part::STEP)
+                    .arg("iter", &iter.to_string())
+                    .arg("active", &global_active.to_string())
+                    .with_payload(std::mem::take(&mut pending[i]));
+                self.post(i, &req)?;
+            }
+            let mut outs = Vec::with_capacity(w);
+            for i in 0..w {
+                outs.push(self.recv_ok(i)?);
+            }
+            let mut stats = PartIterStats {
+                iter,
+                active: 0,
+                shards_processed: 0,
+                shards_skipped: 0,
+                delta_lines: 0,
+                edges: 0,
+                wall: Duration::ZERO,
+            };
+            for resp in &outs {
+                stats.active += resp_u64(resp, "active")?;
+                stats.shards_processed += resp_u64(resp, "processed")? as usize;
+                stats.shards_skipped += resp_u64(resp, "skipped")? as usize;
+                stats.edges += resp_u64(resp, "edges")?;
+                stats.delta_lines += resp.payload.len();
+            }
+            for (i, outbox) in pending.iter_mut().enumerate() {
+                for (j, resp) in outs.iter().enumerate() {
+                    if j != i {
+                        outbox.extend(resp.payload.iter().cloned());
+                    }
+                }
+            }
+            global_active = stats.active;
+            stats.wall = t_iter.elapsed();
+            iters.push(stats);
+        }
+
+        let values =
+            if collect_values { self.collect_values(vertices)? } else { Vec::new() };
+        self.shutdown();
+
+        Ok(PartRunSummary {
+            app: app.name().to_string(),
+            epoch,
+            vertices,
+            lane,
+            workers: w,
+            iters,
+            total_wall: t0.elapsed(),
+            values,
+        })
+    }
+
+    /// Stitch every worker's owned intervals into one full ascending
+    /// rendering — byte-identical to the single-process `--dump-values`.
+    fn collect_values(&mut self, n: usize) -> Result<Vec<String>> {
+        let w = self.links.len();
+        for i in 0..w {
+            self.post(i, &Request::new(part::VALUES))?;
+        }
+        let mut values = vec![String::new(); n];
+        let mut filled = vec![false; n];
+        for i in 0..w {
+            let resp = self.recv_ok(i)?;
+            for line in resp.payload {
+                let (v, bits) = line
+                    .split_once(' ')
+                    .with_context(|| format!("bad value line {line:?}"))?;
+                let v: usize = v.parse().with_context(|| format!("bad value line {line:?}"))?;
+                anyhow::ensure!(v < n, "value line for vertex {v} outside the dataset");
+                anyhow::ensure!(!filled[v], "vertex {v} reported by two workers");
+                values[v] = bits.to_string();
+                filled[v] = true;
+            }
+        }
+        let missing = filled.iter().filter(|&&f| !f).count();
+        anyhow::ensure!(missing == 0, "{missing} vertices reported by no worker");
+        Ok(values)
+    }
+
+    /// Best-effort clean exit: a worker that already died stays dead, the
+    /// rest get to leave gracefully.
+    fn shutdown(&mut self) {
+        let w = self.links.len();
+        for i in 0..w {
+            let _ = self.links[i].post(&Request::new(part::SHUTDOWN));
+        }
+        for link in &mut self.links {
+            let _ = link.recv();
+        }
+    }
+}
+
+fn resp_u64(resp: &Response, key: &str) -> Result<u64> {
+    resp.get(key)
+        .with_context(|| format!("worker response missing {key}="))?
+        .parse::<u64>()
+        .with_context(|| format!("worker response: bad {key}="))
+}
+
+/// Spawning and reaping `partworker` child processes (the `partrun` CLI
+/// path).  Unix-only: worker links ride Unix-domain sockets.
+#[cfg(unix)]
+pub mod process {
+    use super::*;
+    use std::os::unix::net::UnixStream;
+    use std::path::{Path, PathBuf};
+    use std::process::{Child, Command, Stdio};
+
+    /// The spawned children.  Dropping kills any still-running worker, so
+    /// a coordinator error can't leak orphan processes.
+    pub struct ProcessWorkers {
+        children: Vec<Child>,
+        sock_dir: PathBuf,
+    }
+
+    impl ProcessWorkers {
+        /// Spawn one `partworker` per manifest part and connect to each.
+        /// `forward` is the engine flag tail every worker receives
+        /// verbatim (so workers run the exact config `partrun` was given).
+        pub fn spawn(
+            exe: &Path,
+            data: &Path,
+            manifest: &PartitionManifest,
+            forward: &[String],
+            timeout: Duration,
+        ) -> Result<(Self, Vec<StreamLink<UnixStream>>)> {
+            let sock_dir = std::env::temp_dir()
+                .join(format!("gmp_part_{}_{:x}", std::process::id(), manifest.num_parts()));
+            std::fs::create_dir_all(&sock_dir)?;
+            let mut this = Self { children: Vec::new(), sock_dir };
+            let mut socks = Vec::new();
+            for i in 0..manifest.num_parts() {
+                let sock = this.sock_dir.join(format!("w{i}.sock"));
+                let _ = std::fs::remove_file(&sock);
+                let child = Command::new(exe)
+                    .arg("partworker")
+                    .arg("--data")
+                    .arg(data)
+                    .arg("--socket")
+                    .arg(&sock)
+                    .arg("--worker-id")
+                    .arg(i.to_string())
+                    .args(forward)
+                    .stdin(Stdio::null())
+                    .spawn()
+                    .with_context(|| format!("spawning worker {i}"))?;
+                this.children.push(child);
+                socks.push(sock);
+            }
+            let mut links = Vec::new();
+            for (i, sock) in socks.iter().enumerate() {
+                let deadline = Instant::now() + timeout;
+                let stream = loop {
+                    match UnixStream::connect(sock) {
+                        Ok(s) => break s,
+                        Err(e) => {
+                            // a worker that died during engine load never
+                            // listens — surface its exit, don't time out
+                            if let Ok(Some(status)) = this.children[i].try_wait() {
+                                bail!("worker {i} exited during startup ({status})");
+                            }
+                            if Instant::now() >= deadline {
+                                return Err(anyhow::Error::from(e)).with_context(|| {
+                                    format!("worker {i} never came up on {}", sock.display())
+                                });
+                            }
+                            std::thread::sleep(Duration::from_millis(20));
+                        }
+                    }
+                };
+                links.push(StreamLink::new(stream));
+            }
+            Ok((this, links))
+        }
+    }
+
+    impl Drop for ProcessWorkers {
+        fn drop(&mut self) {
+            for c in &mut self.children {
+                // cleanly-exited children are no-ops; stragglers die here
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+            let _ = std::fs::remove_dir_all(&self.sock_dir);
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! The partition manifest: which worker owns which contiguous shard run.
+//!
+//! Shards are already the engine's unit of destination-interval ownership,
+//! so a partition is just a split of `[0, num_shards)` into contiguous,
+//! non-empty, in-order parts — one per worker.  Contiguity keeps each
+//! worker's owned vertex ranges contiguous too (shard intervals tile the
+//! vertex universe in order), which is what makes the final value stitch
+//! a plain concatenation.
+//!
+//! The manifest survives vertex-universe growth: [`PartitionManifest::extend`]
+//! folds shards appended by a later epoch into the tail part, so a saved
+//! partitioning stays valid as the dataset grows.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// A split of `[0, num_shards)` into one contiguous shard run per worker.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartitionManifest {
+    /// `parts[i] = (lo, hi)`: worker `i` owns shards `lo..hi`.  In order,
+    /// non-empty, gap-free, starting at 0.
+    parts: Vec<(usize, usize)>,
+}
+
+impl PartitionManifest {
+    /// Even split: every part gets `num_shards / workers` shards, the
+    /// first `num_shards % workers` parts one extra.
+    pub fn balanced(num_shards: usize, workers: usize) -> Result<Self> {
+        anyhow::ensure!(workers > 0, "a partition needs at least one worker");
+        anyhow::ensure!(
+            workers <= num_shards,
+            "{workers} workers over {num_shards} shards leaves someone idle — \
+             use at most one worker per shard"
+        );
+        let (base, extra) = (num_shards / workers, num_shards % workers);
+        let mut parts = Vec::with_capacity(workers);
+        let mut lo = 0;
+        for i in 0..workers {
+            let hi = lo + base + usize::from(i < extra);
+            parts.push((lo, hi));
+            lo = hi;
+        }
+        Ok(Self { parts })
+    }
+
+    /// Uneven split from explicit interior boundaries (`--split`): e.g.
+    /// boundaries `[2, 5]` over 8 shards gives parts `0..2`, `2..5`,
+    /// `5..8`.  Boundaries must be strictly increasing inside
+    /// `(0, num_shards)`.
+    pub fn from_boundaries(num_shards: usize, boundaries: &[usize]) -> Result<Self> {
+        anyhow::ensure!(num_shards > 0, "cannot partition an empty dataset");
+        let mut parts = Vec::with_capacity(boundaries.len() + 1);
+        let mut lo = 0;
+        for &b in boundaries {
+            anyhow::ensure!(
+                b > lo && b < num_shards,
+                "split boundary {b} out of order (previous {lo}, dataset has {num_shards} shards)"
+            );
+            parts.push((lo, b));
+            lo = b;
+        }
+        parts.push((lo, num_shards));
+        Ok(Self { parts })
+    }
+
+    /// Parse a `--split` value: comma-separated interior shard boundaries.
+    pub fn parse_split(num_shards: usize, spec: &str) -> Result<Self> {
+        let boundaries = spec
+            .split(',')
+            .map(|t| t.trim().parse::<usize>().with_context(|| format!("bad --split token {t:?}")))
+            .collect::<Result<Vec<_>>>()?;
+        Self::from_boundaries(num_shards, &boundaries)
+    }
+
+    /// Grow the manifest to a dataset that gained shards (vertex-universe
+    /// growth appends intervals, it never reshapes existing ones): the new
+    /// shards join the tail part.  Shrinking is rejected — shards never
+    /// disappear.
+    pub fn extend(&mut self, new_num_shards: usize) -> Result<()> {
+        let cur = self.num_shards();
+        anyhow::ensure!(
+            new_num_shards >= cur,
+            "dataset shrank from {cur} to {new_num_shards} shards — not a growth epoch"
+        );
+        self.parts.last_mut().expect("manifest is never empty").1 = new_num_shards;
+        Ok(())
+    }
+
+    pub fn num_parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.parts.last().expect("manifest is never empty").1
+    }
+
+    /// Worker `i`'s owned shard run.
+    pub fn part(&self, i: usize) -> (usize, usize) {
+        self.parts[i]
+    }
+
+    /// The wire form of worker `i`'s ownership for `part-init`: `"lo:hi"`.
+    pub fn part_spec(&self, i: usize) -> String {
+        let (lo, hi) = self.parts[i];
+        format!("{lo}:{hi}")
+    }
+
+    /// Which part owns `shard`.
+    pub fn owner_of(&self, shard: usize) -> Option<usize> {
+        self.parts.iter().position(|&(lo, hi)| (lo..hi).contains(&shard))
+    }
+
+    pub fn to_json(&self) -> String {
+        Json::Arr(
+            self.parts
+                .iter()
+                .map(|&(lo, hi)| Json::Arr(vec![Json::Int(lo as i64), Json::Int(hi as i64)]))
+                .collect(),
+        )
+        .to_string()
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("partition manifest")?;
+        let arr = j.as_arr().context("partition manifest must be an array of [lo, hi] pairs")?;
+        let mut parts = Vec::with_capacity(arr.len());
+        for p in arr {
+            let pair = p.as_arr().context("partition part must be [lo, hi]")?;
+            let [lo, hi] = pair else { bail!("partition part must be [lo, hi]") };
+            let (lo, hi) = (
+                lo.as_i64().context("part lo")? as usize,
+                hi.as_i64().context("part hi")? as usize,
+            );
+            parts.push((lo, hi));
+        }
+        let m = Self { parts };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.parts.is_empty(), "partition manifest has no parts");
+        let mut expect = 0;
+        for &(lo, hi) in &self.parts {
+            anyhow::ensure!(
+                lo == expect && hi > lo,
+                "partition parts must be contiguous, in-order and non-empty \
+                 (got [{lo}, {hi}) where [{expect}, ..) was expected)"
+            );
+            expect = hi;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_splits_cover_everything_in_order() {
+        let m = PartitionManifest::balanced(10, 4).unwrap();
+        assert_eq!(
+            (0..4).map(|i| m.part(i)).collect::<Vec<_>>(),
+            vec![(0, 3), (3, 6), (6, 8), (8, 10)]
+        );
+        assert_eq!(m.num_shards(), 10);
+        assert_eq!(m.owner_of(0), Some(0));
+        assert_eq!(m.owner_of(7), Some(2));
+        assert_eq!(m.owner_of(9), Some(3));
+        assert_eq!(m.owner_of(10), None);
+        assert_eq!(m.part_spec(1), "3:6");
+
+        // one worker per shard is the densest legal split
+        let tight = PartitionManifest::balanced(3, 3).unwrap();
+        assert_eq!(tight.part(2), (2, 3));
+        assert!(PartitionManifest::balanced(3, 4).is_err());
+        assert!(PartitionManifest::balanced(3, 0).is_err());
+    }
+
+    #[test]
+    fn uneven_boundaries_parse_and_validate() {
+        let m = PartitionManifest::parse_split(8, "2,5").unwrap();
+        assert_eq!((m.part(0), m.part(1), m.part(2)), ((0, 2), (2, 5), (5, 8)));
+        assert!(PartitionManifest::parse_split(8, "5,2").is_err());
+        assert!(PartitionManifest::parse_split(8, "0,5").is_err());
+        assert!(PartitionManifest::parse_split(8, "2,8").is_err());
+        assert!(PartitionManifest::parse_split(8, "2,x").is_err());
+    }
+
+    #[test]
+    fn extend_folds_new_shards_into_the_tail_part() {
+        let mut m = PartitionManifest::balanced(6, 3).unwrap();
+        m.extend(9).unwrap();
+        assert_eq!(m.part(2), (4, 9));
+        assert_eq!(m.num_shards(), 9);
+        assert!(m.extend(8).is_err(), "shrinking must be rejected");
+        // a no-growth extend is a no-op
+        m.extend(9).unwrap();
+        assert_eq!(m.num_shards(), 9);
+    }
+
+    #[test]
+    fn json_roundtrip_and_rejection() {
+        let m = PartitionManifest::balanced(10, 3).unwrap();
+        let back = PartitionManifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        assert!(PartitionManifest::from_json("[]").is_err());
+        assert!(PartitionManifest::from_json("[[0,2],[3,4]]").is_err(), "gap");
+        assert!(PartitionManifest::from_json("[[0,2],[2,2]]").is_err(), "empty part");
+        assert!(PartitionManifest::from_json("[[1,2]]").is_err(), "must start at 0");
+        assert!(PartitionManifest::from_json("{\"a\":1}").is_err());
+    }
+}

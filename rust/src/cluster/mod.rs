@@ -1,0 +1,26 @@
+//! Partitioned VSW execution (`graphmp partrun`): N worker processes,
+//! each owning a contiguous interval range, driven through iteration
+//! barriers by a coordinator over the serve line protocol.
+//!
+//! Division of labor:
+//!
+//! * [`manifest`] — which worker owns which contiguous shard run, with
+//!   growth support (new intervals fold into the tail part).
+//! * [`worker`] — engine + pinned snapshot + lane-typed value state;
+//!   folds its owned shards through the single-process engine's own
+//!   chunk path, so its bits are the engine's bits.
+//! * [`coordinator`] — post-all/receive-all barriers, delta-line
+//!   routing, merged-active convergence, final value stitching, and
+//!   clean failure when a worker dies mid-iteration.
+//!
+//! The invariant the whole module is built around: partitioned runs are
+//! **bit-identical** to single-process VSW runs, for every app, worker
+//! count and split — see [`crate::engine::partition`] for the argument.
+
+pub mod coordinator;
+pub mod manifest;
+pub mod worker;
+
+pub use coordinator::{Coordinator, PartIterStats, PartRunSummary, StreamLink, WorkerLink};
+pub use manifest::PartitionManifest;
+pub use worker::Worker;

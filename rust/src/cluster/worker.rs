@@ -1,0 +1,402 @@
+//! The partition worker: one process (or thread), one contiguous shard
+//! run, the full partition-protocol surface over any byte stream.
+//!
+//! A worker holds its own [`VswEngine`] — shards, Bloom filters, cache
+//! budget — pinned to the epoch snapshot taken at open.  Its value state
+//! is two full-length arrays: `cur` is globally consistent at every
+//! barrier (own intervals from its own folds, remote intervals from the
+//! delta lines the coordinator relays), `next` is the fold target for the
+//! owned intervals only.  Each `part-step` folds the owned shards
+//! *sequentially on the connection thread* through the single-process
+//! engine's own [`fold_chunk`](crate::engine::vsw) path — parallelism in
+//! a partitioned run is process-level by design, which is exactly what
+//! makes the N-worker wall clock scale.
+
+use std::io::{BufReader, Read, Write};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::apps::{self, AnyProgram, ProgramContext, VertexProgram, VertexValue};
+use crate::bloom::{digest, Digest};
+use crate::engine::partition::{decode_delta, render_value, step_shards, StepOutcome};
+use crate::engine::{EngineConfig, EpochState, VswEngine};
+use crate::graph::VertexId;
+use crate::server::{part, Request, Response};
+use crate::storage::DatasetDir;
+
+/// Per-lane run state; the worker-side mirror of
+/// [`crate::apps::AnyProgram`]'s lane erasure.
+enum LaneState {
+    F32(TypedState<f32>),
+    F64(TypedState<f64>),
+    U32(TypedState<u32>),
+    U64(TypedState<u64>),
+}
+
+/// Run one expression against whichever lane is live.
+macro_rules! with_lane {
+    ($state:expr, $ts:ident => $body:expr) => {
+        match $state {
+            LaneState::F32($ts) => $body,
+            LaneState::F64($ts) => $body,
+            LaneState::U32($ts) => $body,
+            LaneState::U64($ts) => $body,
+        }
+    };
+}
+
+struct TypedState<V: VertexValue> {
+    app: Box<dyn VertexProgram<V>>,
+    /// Globally consistent at every barrier.
+    cur: Vec<V>,
+    /// Fold target; only owned intervals are ever written.
+    next: Vec<V>,
+    /// The *global* frontier entering the next step: own actives from the
+    /// last fold plus remote flag-1 vertices from the barrier payload.
+    frontier: Vec<VertexId>,
+}
+
+impl<V: VertexValue> TypedState<V> {
+    /// `init` and `initially_active` are pure functions of the vertex id,
+    /// so every worker computes the identical full-length iteration-0
+    /// state locally — the first barrier needs no value exchange.
+    fn init(app: Box<dyn VertexProgram<V>>, n: usize) -> Self {
+        let ctx = ProgramContext { num_vertices: n as u64 };
+        let cur: Vec<V> = (0..n).map(|v| app.init(v as VertexId, &ctx)).collect();
+        let next = cur.clone();
+        let frontier = (0..n as VertexId).filter(|&v| app.initially_active(v, &ctx)).collect();
+        Self { app, cur, next, frontier }
+    }
+
+    fn step(
+        &mut self,
+        engine: &VswEngine,
+        st: &EpochState,
+        shards: &[usize],
+        global_active: u64,
+        payload: &[String],
+    ) -> Result<StepOutcome> {
+        let n = self.cur.len();
+        // barrier sync: other workers' bit-changed values land in `cur`,
+        // their flag-1 vertices join the frontier — after this, `cur` and
+        // `frontier` equal the single-process engine's `src` and `active`
+        for line in payload {
+            let (v, val, active) = decode_delta::<V>(line)?;
+            anyhow::ensure!((v as usize) < n, "delta line for vertex {v} outside the dataset");
+            self.cur[v as usize] = val;
+            if active {
+                self.frontier.push(v);
+            }
+        }
+        // the selective decision is a pure function of the merged global
+        // count the coordinator broadcast — every worker (and the
+        // single-process engine) resolves it identically
+        let cfg = engine.config();
+        let ratio = global_active as f64 / n.max(1) as f64;
+        let selective_now =
+            cfg.selective && ratio > 0.0 && ratio < cfg.selective_threshold;
+        let mut digests: Vec<Digest> = Vec::new();
+        if selective_now {
+            self.frontier.sort_unstable();
+            digests.extend(self.frontier.iter().map(|&v| digest(v as u64)));
+        }
+        let out = step_shards(
+            engine,
+            st,
+            self.app.as_ref(),
+            shards,
+            selective_now,
+            &digests,
+            &self.cur,
+            &mut self.next,
+        )?;
+        // commit own intervals; remote intervals stay at the previous
+        // iteration until the next barrier payload re-syncs them
+        for &shard in shards {
+            let (lo, hi) = st.property.interval(shard);
+            let (lo, hi) = (lo as usize, hi as usize);
+            self.cur[lo..hi].copy_from_slice(&self.next[lo..hi]);
+        }
+        self.frontier.clear();
+        self.frontier.extend_from_slice(&out.active);
+        Ok(out)
+    }
+
+    /// `"{v} {bits}"` per owned vertex, ascending — the coordinator
+    /// stitches these into a full `--dump-values`-identical rendering.
+    fn values_lines(&self, st: &EpochState, shards: &[usize]) -> Vec<String> {
+        let mut lines = Vec::new();
+        for &shard in shards {
+            let (lo, hi) = st.property.interval(shard);
+            for v in lo..hi {
+                lines.push(format!("{v} {}", render_value(self.cur[v as usize])));
+            }
+        }
+        lines
+    }
+}
+
+/// One partition worker: engine + pinned snapshot + lane-typed run state.
+pub struct Worker {
+    engine: VswEngine,
+    st: Arc<EpochState>,
+    shards: Vec<usize>,
+    state: Option<LaneState>,
+    /// Fault injection (`GRAPHMP_PART_CRASH_ITER`): drop the connection
+    /// without responding on the `part-step` carrying this iteration
+    /// number, so coordinator crash handling can be exercised end to end.
+    pub crash_iter: Option<u64>,
+}
+
+impl Worker {
+    pub fn open(dir: DatasetDir, cfg: EngineConfig) -> Result<Worker> {
+        let engine = VswEngine::open(dir, cfg)?;
+        let st = engine.snapshot();
+        Ok(Worker { engine, st, shards: Vec::new(), state: None, crash_iter: None })
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.st.epoch
+    }
+
+    /// Serve the coordinator's connection until `part-shutdown`, EOF, or
+    /// an injected crash.  One request, one response, in order — the
+    /// coordinator's post-all-then-recv-all barrier depends on it.
+    pub fn serve_connection<S: Read + Write>(&mut self, stream: S) -> Result<()> {
+        let mut reader = BufReader::new(stream);
+        loop {
+            let Some(req) = Request::read_from(&mut reader)? else {
+                return Ok(()); // coordinator hung up
+            };
+            if req.cmd == part::STEP {
+                if let (Some(c), Ok(Some(i))) = (self.crash_iter, req.get_u64("iter")) {
+                    if i == c {
+                        // die mid-iteration with the response unsent: the
+                        // coordinator must surface this, not hang
+                        bail!("injected worker crash at iteration {i}");
+                    }
+                }
+            }
+            let shutdown = req.cmd == part::SHUTDOWN;
+            let resp = self.handle(&req);
+            let out = resp.render();
+            let s = reader.get_mut();
+            s.write_all(out.as_bytes())?;
+            s.flush()?;
+            if shutdown {
+                return Ok(());
+            }
+        }
+    }
+
+    /// One request, one response; errors become `err` responses (the
+    /// connection survives a rejected request).
+    pub fn handle(&mut self, req: &Request) -> Response {
+        match self.dispatch(req) {
+            Ok(resp) => resp,
+            Err(e) => Response::err(format!("{e:#}")),
+        }
+    }
+
+    fn dispatch(&mut self, req: &Request) -> Result<Response> {
+        match req.cmd.as_str() {
+            part::INIT => self.cmd_init(req),
+            part::STEP => self.cmd_step(req),
+            part::VALUES => self.cmd_values(),
+            part::SHUTDOWN => Ok(Response::ok().with("bye", 1)),
+            other => bail!("unknown partition verb {other:?}"),
+        }
+    }
+
+    fn cmd_init(&mut self, req: &Request) -> Result<Response> {
+        let any = apps::by_name(req.req("app")?)?;
+        let spec = req.req("shards")?;
+        let p = self.st.property.num_shards();
+        let mut shards: Vec<usize> = Vec::new();
+        for range in spec.split(',') {
+            let (lo, hi) = range
+                .split_once(':')
+                .with_context(|| format!("bad shard range {range:?} (want lo:hi)"))?;
+            let lo: usize = lo.parse().with_context(|| format!("bad shard range {range:?}"))?;
+            let hi: usize = hi.parse().with_context(|| format!("bad shard range {range:?}"))?;
+            anyhow::ensure!(
+                lo < hi && hi <= p,
+                "shard range {range:?} out of bounds (dataset has {p} shards)"
+            );
+            anyhow::ensure!(
+                shards.last().is_none_or(|&s| s < lo),
+                "shard ranges must be ascending and disjoint"
+            );
+            shards.extend(lo..hi);
+        }
+        let n = self.st.property.info.num_vertices as usize;
+        let lane = any.lane();
+        let state = match any {
+            AnyProgram::F32(app) => LaneState::F32(TypedState::init(app, n)),
+            AnyProgram::F64(app) => LaneState::F64(TypedState::init(app, n)),
+            AnyProgram::U32(app) => LaneState::U32(TypedState::init(app, n)),
+            AnyProgram::U64(app) => LaneState::U64(TypedState::init(app, n)),
+        };
+        let active = with_lane!(&state, ts => ts.frontier.len());
+        self.shards = shards;
+        self.state = Some(state);
+        Ok(Response::ok()
+            .with("epoch", self.st.epoch)
+            .with("vertices", n)
+            .with("lane", lane.name())
+            .with("active", active))
+    }
+
+    fn cmd_step(&mut self, req: &Request) -> Result<Response> {
+        req.req_u64("iter")?;
+        let global_active = req.req_u64("active")?;
+        let state = self.state.as_mut().context("part-step before part-init")?;
+        let out = with_lane!(state, ts => ts.step(
+            &self.engine,
+            &self.st,
+            &self.shards,
+            global_active,
+            &req.payload,
+        ))?;
+        let (active, processed, skipped, edges) =
+            (out.active.len(), out.shards_processed, out.shards_skipped, out.edges);
+        Ok(Response::ok()
+            .with("active", active)
+            .with("processed", processed)
+            .with("skipped", skipped)
+            .with("edges", edges)
+            .with_payload(out.lines))
+    }
+
+    fn cmd_values(&self) -> Result<Response> {
+        let state = self.state.as_ref().context("part-values before part-init")?;
+        let lines = with_lane!(state, ts => ts.values_lines(&self.st, &self.shards));
+        Ok(Response::ok().with("vertices", lines.len()).with_payload(lines))
+    }
+}
+
+/// In-process worker: a thread serving one end of a socketpair — the
+/// test/bench stand-in for a spawned `partworker` process.  Same protocol
+/// bytes, same barrier behavior, no exec.  The engine opens inside the
+/// thread; an open failure surfaces at the coordinator's first receive as
+/// a closed connection, and precisely in the returned join handle.
+#[cfg(unix)]
+pub fn spawn_local(
+    dir: DatasetDir,
+    cfg: EngineConfig,
+    crash_iter: Option<u64>,
+) -> Result<(std::os::unix::net::UnixStream, std::thread::JoinHandle<Result<()>>)> {
+    let (ours, theirs) = std::os::unix::net::UnixStream::pair()?;
+    let handle = std::thread::spawn(move || {
+        let mut w = Worker::open(dir, cfg)?;
+        w.crash_iter = crash_iter;
+        w.serve_connection(theirs)
+    });
+    Ok((ours, handle))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generator;
+    use crate::sharding::{preprocess, PreprocessConfig};
+
+    fn build_dataset(tag: &str) -> DatasetDir {
+        let dir = DatasetDir::new(
+            std::env::temp_dir().join(format!("gmp_partworker_{tag}_{}", std::process::id())),
+        );
+        let _ = std::fs::remove_dir_all(&dir.root);
+        let edges = generator::erdos_renyi(96, 700, 11);
+        let cfg = PreprocessConfig { max_edges_per_shard: 128, bloom_fpr: 0.01 };
+        preprocess(tag, &edges, 96, &dir, &cfg).unwrap();
+        dir
+    }
+
+    #[test]
+    fn worker_rejects_protocol_misuse_without_dying() {
+        let dir = build_dataset("misuse");
+        let mut w = Worker::open(dir.clone(), EngineConfig::default()).unwrap();
+        let p = {
+            let prop =
+                crate::storage::property::Property::load(&dir.property_path()).unwrap();
+            prop.num_shards()
+        };
+        assert!(p >= 2, "test graph must span several shards, got {p}");
+
+        // step/values before init
+        let step = Request::new(part::STEP).arg("iter", "0").arg("active", "5");
+        assert!(w.handle(&step).error.is_some());
+        assert!(w.handle(&Request::new(part::VALUES)).error.is_some());
+
+        // malformed shard specs
+        for bad in ["", "3", "2:1", "0:999", "1:2,0:1", "x:2"] {
+            let r = w.handle(&Request::new(part::INIT).arg("app", "pagerank").arg("shards", bad));
+            assert!(r.error.is_some(), "shards={bad:?} must be rejected");
+        }
+        let r = w.handle(&Request::new(part::INIT).arg("app", "nosuch").arg("shards", "0:1"));
+        assert!(r.error.is_some());
+
+        // a good init answers the full projection
+        let spec = format!("0:{p}");
+        let ok = w.handle(&Request::new(part::INIT).arg("app", "pagerank").arg("shards", &spec));
+        assert!(ok.is_ok(), "{:?}", ok.error);
+        assert_eq!(ok.get("vertices"), Some("96"));
+        assert_eq!(ok.get("lane"), Some("f32"));
+        assert_eq!(ok.get("active"), Some("96"), "pagerank starts fully active");
+
+        // garbage barrier payload is rejected, not applied
+        let r = w.handle(
+            &Request::new(part::STEP)
+                .arg("iter", "0")
+                .arg("active", "96")
+                .with_payload(vec!["not a delta line".into()]),
+        );
+        assert!(r.error.is_some());
+
+        // unknown verbs err
+        assert!(w.handle(&Request::new("frobnicate")).error.is_some());
+        let _ = std::fs::remove_dir_all(&dir.root);
+    }
+
+    #[test]
+    fn single_worker_owning_everything_matches_run() {
+        let dir = build_dataset("solo");
+        let cfg = EngineConfig { threads: 1, ..Default::default() };
+        let engine = VswEngine::open(dir.clone(), cfg.clone()).unwrap();
+        let app = apps::by_name("pagerank").unwrap();
+        let reference = engine.run_any(&app).unwrap();
+
+        let mut w = Worker::open(dir.clone(), cfg).unwrap();
+        let p = w.st.property.num_shards();
+        let spec = format!("0:{p}");
+        let init = w.handle(&Request::new(part::INIT).arg("app", "pagerank").arg("shards", &spec));
+        assert!(init.is_ok(), "{:?}", init.error);
+        let mut active: u64 = init.get("active").unwrap().parse().unwrap();
+        for iter in 0..app.default_max_iters() {
+            if active == 0 {
+                break;
+            }
+            let resp = w.handle(
+                &Request::new(part::STEP)
+                    .arg("iter", &iter.to_string())
+                    .arg("active", &active.to_string()),
+            );
+            assert!(resp.is_ok(), "{:?}", resp.error);
+            active = resp.get("active").unwrap().parse().unwrap();
+        }
+        let vals = w.handle(&Request::new(part::VALUES));
+        assert!(vals.is_ok(), "{:?}", vals.error);
+        assert_eq!(vals.payload.len(), 96);
+        for (v, line) in vals.payload.iter().enumerate() {
+            let (id, bits) = line.split_once(' ').unwrap();
+            assert_eq!(id.parse::<usize>().unwrap(), v);
+            assert_eq!(
+                bits,
+                reference.values.render_bits(v).unwrap(),
+                "vertex {v} diverged from the single-process run"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir.root);
+    }
+}

@@ -465,6 +465,45 @@ pub fn process_rows_cfg<V: VertexValue, P: VertexProgram<V> + ?Sized, S: EdgeSou
                 stream_fold(app, source, src, ctx, V::vmax_value(), fold, out)
             }
         }
+        (GatherKind::PlusWeight, Reduce::Sum) => {
+            let fold =
+                #[inline(always)]
+                |acc: V, u: usize, w: Weight| acc.vadd(src[u].vadd(V::from_weight(w)));
+            if simd {
+                let run = |cols: &[VertexId], wgts: &[Weight]| {
+                    if wgts.is_empty() {
+                        // unweighted rows stream w = 1.0
+                        simd::sum_map(cols, |u| src[u as usize].vadd(V::from_weight(1.0)))
+                    } else {
+                        simd::sum_zip(cols, wgts, |u, w| {
+                            src[u as usize].vadd(V::from_weight(w))
+                        })
+                    }
+                };
+                stream_fold_runs(app, source, src, ctx, V::vzero(), fold, run, out)
+            } else {
+                stream_fold(app, source, src, ctx, V::vzero(), fold, out)
+            }
+        }
+        (GatherKind::PlusWeight, Reduce::Max) => {
+            let fold =
+                #[inline(always)]
+                |acc: V, u: usize, w: Weight| acc.vmax(src[u].vadd(V::from_weight(w)));
+            if simd {
+                let run = |cols: &[VertexId], wgts: &[Weight]| {
+                    if wgts.is_empty() {
+                        simd::max_map(cols, |u| src[u as usize].vadd(V::from_weight(1.0)))
+                    } else {
+                        simd::max_zip(cols, wgts, |u, w| {
+                            src[u as usize].vadd(V::from_weight(w))
+                        })
+                    }
+                };
+                stream_fold_runs(app, source, src, ctx, V::vmin_value(), fold, run, out)
+            } else {
+                stream_fold(app, source, src, ctx, V::vmin_value(), fold, out)
+            }
+        }
         (GatherKind::Identity, Reduce::Min) => {
             let fold =
                 #[inline(always)]
@@ -1163,6 +1202,110 @@ mod tests {
                 &out_deg,
                 &ctx,
             );
+        }
+    }
+
+    /// `(PlusWeight, Sum)` / `(PlusWeight, Max)` probe: no registry app
+    /// declares these shapes yet, so a test-local program exercises the
+    /// widened weighted arms against the generic virtual fallback.
+    struct WeightedProbe {
+        reduce: Reduce,
+    }
+
+    impl VertexProgram<f32> for WeightedProbe {
+        fn name(&self) -> &'static str {
+            "wprobe"
+        }
+        fn init(&self, v: VertexId, _ctx: &ProgramContext) -> f32 {
+            (v as f32) * 0.5 + 0.25
+        }
+        fn initially_active(&self, _v: VertexId, _ctx: &ProgramContext) -> bool {
+            true
+        }
+        fn gather(&self, src_val: f32, _src_out_deg: u32, weight: Weight) -> f32 {
+            src_val.vadd(f32::from_weight(weight))
+        }
+        fn reduce(&self) -> Reduce {
+            self.reduce
+        }
+        fn apply(&self, reduced: f32, old: f32, _ctx: &ProgramContext) -> f32 {
+            match self.reduce {
+                Reduce::Max => reduced.vmax(old),
+                _ => reduced,
+            }
+        }
+        fn kernel(&self) -> KernelKind {
+            KernelKind::None
+        }
+        fn gather_kind(&self) -> GatherKind {
+            GatherKind::PlusWeight
+        }
+    }
+
+    /// Same probe on the u64 lane: weighted sums there reassociate across
+    /// SIMD accumulators (`SUM_REASSOCIATES`), which must still be exact.
+    struct WeightedSumU64;
+
+    impl VertexProgram<u64> for WeightedSumU64 {
+        fn name(&self) -> &'static str {
+            "wsum64"
+        }
+        fn init(&self, v: VertexId, _ctx: &ProgramContext) -> u64 {
+            v as u64
+        }
+        fn initially_active(&self, _v: VertexId, _ctx: &ProgramContext) -> bool {
+            true
+        }
+        fn gather(&self, src_val: u64, _src_out_deg: u32, weight: Weight) -> u64 {
+            src_val.vadd(u64::from_weight(weight))
+        }
+        fn reduce(&self) -> Reduce {
+            Reduce::Sum
+        }
+        fn apply(&self, reduced: u64, _old: u64, _ctx: &ProgramContext) -> u64 {
+            reduced
+        }
+        fn kernel(&self) -> KernelKind {
+            KernelKind::None
+        }
+        fn gather_kind(&self) -> GatherKind {
+            GatherKind::PlusWeight
+        }
+    }
+
+    #[test]
+    fn weighted_sum_and_max_arms_match_generic_and_scalar() {
+        use crate::graph::generator;
+        let edges: Vec<(u32, u32)> =
+            generator::rmat(8, 1500, generator::RmatParams::default(), 33)
+                .into_iter()
+                .filter(|&(_, d)| d < 64)
+                .collect();
+        let weights = generator::synth_weights(&edges, 13);
+        let ctx = ProgramContext { num_vertices: 256 };
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(5);
+        let out_deg: Vec<u32> = (0..256).map(|_| rng.gen_range(16) as u32).collect();
+        let src: Vec<f32> = (0..256).map(|v| (v as f32) * 0.25 + 0.5).collect();
+        let src64: Vec<u64> = (0..256).map(|v| v * 3 + 1).collect();
+        for weighted in [false, true] {
+            let csr = if weighted {
+                Csr::from_edges_weighted(0, 64, &edges, &weights)
+            } else {
+                Csr::from_edges(0, 64, &edges)
+            };
+            for reduce in [Reduce::Sum, Reduce::Max] {
+                let app = WeightedProbe { reduce };
+                // the specialized arm must reproduce the virtual fallback
+                // bit-for-bit (same serial order, same per-edge ops)
+                let fast = native_shard(&app, &csr, &src, &out_deg, &ctx);
+                let slow = generic_shard(&app, &csr, &src, &out_deg, &ctx);
+                let b = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(b(&fast), b(&slow), "{reduce:?} weighted={weighted}");
+                // and its SIMD path must match its own scalar path on
+                // every source / chunking / alignment
+                assert_simd_matches_scalar(&app, &csr, &src, &out_deg, &ctx);
+            }
+            assert_simd_matches_scalar::<u64>(&WeightedSumU64, &csr, &src64, &out_deg, &ctx);
         }
     }
 

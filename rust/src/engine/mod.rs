@@ -2,6 +2,7 @@
 
 mod backend;
 mod governor;
+pub mod partition;
 mod shared;
 pub mod simd;
 pub mod standing;

@@ -1,0 +1,280 @@
+//! Range-restricted VSW execution + the barrier delta codec — the engine
+//! half of partitioned execution (`graphmp partrun`, [`crate::cluster`]).
+//!
+//! ## Why a partitioned step is bit-identical by construction
+//!
+//! Shards partition edges by *destination* interval: every in-edge of a
+//! destination vertex lives in exactly one shard (plus that shard's
+//! resident delta).  The per-destination fold is a pure function of (the
+//! shard's rows in their fixed on-disk order, the full `src` array), and
+//! [`step_shards`] runs it through the very same
+//! [`fold_chunk`](crate::engine::vsw) / `process_rows` / SIMD kernels the
+//! single-process loop uses — so a worker that owns a shard computes the
+//! exact bits the single-process engine would, regardless of which worker
+//! owns it or how many workers there are.  The only thing partitioning
+//! changes is *which process* holds a destination range; the values
+//! flowing between processes are re-synchronized at iteration barriers
+//! via [`encode_delta`] lines.
+//!
+//! ## The delta codec
+//!
+//! One line per bit-changed own-range vertex, `"{v} {bits} {flag}"`:
+//! `bits` is [`AnyValues::render_bits`]'s exact per-lane text form
+//! (integer lanes decimal, float lanes IEEE bit patterns in hex — the
+//! `--dump-values` format, so dumps stay byte-comparable end to end), and
+//! `flag` is `1` iff the vertex is *active* under the engine's tolerance
+//! predicate ([`VertexValue::changed`]).  Active ⊆ bit-changed on every
+//! lane for any `tol ≥ 0` (a value that moved beyond the tolerance cannot
+//! have kept its bits), so a single line set carries both the value sync
+//! and the frontier bits.  The change scan itself is the bit-pattern diff
+//! the standing-query layer established
+//! ([`crate::engine::standing::diff_changed`]), applied range-restricted
+//! while the fold's output is still hot.
+
+use anyhow::{Context, Result};
+
+use crate::apps::{ProgramContext, VertexProgram, VertexValue};
+use crate::bloom::Digest;
+use crate::engine::backend::CsrRows;
+use crate::engine::vsw::{fold_chunk, EpochState, VswEngine};
+use crate::graph::value::Lane;
+use crate::graph::VertexId;
+use crate::storage::io;
+
+/// What one worker's iteration step produced over its owned shards.
+#[derive(Debug, Default)]
+pub struct StepOutcome {
+    /// Own-range vertices active under the tolerance predicate, ascending
+    /// (the worker's contribution to the next global frontier).
+    pub active: Vec<VertexId>,
+    /// One [`encode_delta`] line per bit-changed own-range vertex,
+    /// ascending — the barrier payload other workers apply.
+    pub lines: Vec<String>,
+    pub shards_processed: usize,
+    pub shards_skipped: usize,
+    /// Edges folded (resident deltas included), for iteration stats.
+    pub edges: u64,
+}
+
+/// One partitioned iteration over `shards` (the worker's owned contiguous
+/// shard run): Bloom-screen exactly like the single-process loop, fold
+/// each surviving shard *whole* through the shared [`fold_chunk`] into
+/// `next[interval]`, carry screened intervals forward from `cur`, then
+/// scan the owned ranges for bit changes and tolerance-actives.
+///
+/// `cur` must be the globally-consistent value array entering this
+/// iteration (all ranges synced); only `next`'s owned intervals are
+/// written.  `selective_now` and `digests` must be derived from the
+/// *global* frontier (the coordinator's merged active count and the
+/// worker's merged frontier) so every worker makes the same screening
+/// decision the single-process engine would.
+#[allow(clippy::too_many_arguments)]
+pub fn step_shards<V: VertexValue, P: VertexProgram<V> + ?Sized>(
+    engine: &VswEngine,
+    st: &EpochState,
+    app: &P,
+    shards: &[usize],
+    selective_now: bool,
+    digests: &[Digest],
+    cur: &[V],
+    next: &mut [V],
+) -> Result<StepOutcome> {
+    let cfg = engine.config();
+    let n = st.property.info.num_vertices as usize;
+    anyhow::ensure!(
+        cur.len() == n && next.len() == n,
+        "value arrays cover {}/{} vertices, dataset has {n}",
+        cur.len(),
+        next.len()
+    );
+    let p = st.property.num_shards();
+    let ctx = ProgramContext { num_vertices: n as u64 };
+    let out_deg = &st.vertex_info.degrees.out_deg;
+    let mut outcome = StepOutcome::default();
+
+    for &shard in shards {
+        anyhow::ensure!(shard < p, "owned shard {shard} out of range (dataset has {p})");
+        let (lo, hi) = st.property.interval(shard);
+        let (lo, hi) = (lo as usize, hi as usize);
+        if selective_now && !st.blooms[shard].contains_any_digest(digests) {
+            // line 5: provably inactive — carry the interval forward
+            next[lo..hi].copy_from_slice(&cur[lo..hi]);
+            outcome.shards_skipped += 1;
+            continue;
+        }
+        let admit = cfg.cache_budget > 0;
+        let read = || match engine.direct_reader() {
+            Some(r) => r.read_file(&st.shard_paths[shard]),
+            None => io::read_file(&st.shard_paths[shard]),
+        };
+        let csr = engine.cache().fetch_decoded(shard, st.shard_epochs[shard], admit, read)?;
+        anyhow::ensure!(
+            csr.lo as usize == lo && csr.num_vertices() == hi - lo,
+            "shard {shard} interval disagrees with property"
+        );
+        let delta = st.deltas[shard].as_deref();
+        let rows = csr.num_vertices();
+        fold_chunk(
+            app,
+            CsrRows::new(&csr, 0..rows),
+            delta,
+            0,
+            cur,
+            out_deg,
+            &ctx,
+            cfg.simd,
+            &mut next[lo..hi],
+        )?;
+        outcome.edges += match delta {
+            Some(d) => d.effective_edges(csr.num_edges() as u64),
+            None => csr.num_edges() as u64,
+        };
+        outcome.shards_processed += 1;
+    }
+
+    // the range-restricted bit diff + active scan (standing's diff with
+    // the frontier flag folded into the same pass)
+    let tol = cfg.convergence_tol as f64;
+    let (mut ba, mut bb) = (Vec::with_capacity(8), Vec::with_capacity(8));
+    for &shard in shards {
+        let (lo, hi) = st.property.interval(shard);
+        for v in lo..hi {
+            let i = v as usize;
+            let (old, new) = (cur[i], next[i]);
+            ba.clear();
+            bb.clear();
+            old.write_le(&mut ba);
+            new.write_le(&mut bb);
+            let is_active = V::changed(old, new, tol);
+            if ba != bb || is_active {
+                outcome.lines.push(encode_delta(v, new, is_active));
+                if is_active {
+                    outcome.active.push(v);
+                }
+            }
+        }
+    }
+    Ok(outcome)
+}
+
+/// Bit-exact text form of one value — [`AnyValues::render_bits`]'s
+/// per-lane rendering (integer decimal, float IEEE bits in hex), typed.
+///
+/// [`AnyValues::render_bits`]: crate::graph::AnyValues::render_bits
+pub fn render_value<V: VertexValue>(v: V) -> String {
+    let mut b = Vec::with_capacity(V::BYTES);
+    v.write_le(&mut b);
+    match V::LANE {
+        Lane::U32 => u32::from_le_bytes(b[..4].try_into().unwrap()).to_string(),
+        Lane::U64 => u64::from_le_bytes(b[..8].try_into().unwrap()).to_string(),
+        Lane::F32 => format!("{:08x}", u32::from_le_bytes(b[..4].try_into().unwrap())),
+        Lane::F64 => format!("{:016x}", u64::from_le_bytes(b[..8].try_into().unwrap())),
+    }
+}
+
+/// Invert [`render_value`].
+pub fn parse_value<V: VertexValue>(s: &str) -> Result<V> {
+    let err = || format!("bad {} value {s:?}", V::LANE.name());
+    Ok(match V::LANE {
+        Lane::U32 => {
+            let x: u32 = s.parse().with_context(err)?;
+            V::read_le(&x.to_le_bytes())
+        }
+        Lane::U64 => {
+            let x: u64 = s.parse().with_context(err)?;
+            V::read_le(&x.to_le_bytes())
+        }
+        Lane::F32 => {
+            let x = u32::from_str_radix(s, 16).with_context(err)?;
+            V::read_le(&x.to_le_bytes())
+        }
+        Lane::F64 => {
+            let x = u64::from_str_radix(s, 16).with_context(err)?;
+            V::read_le(&x.to_le_bytes())
+        }
+    })
+}
+
+/// One barrier line: `"{v} {bits} {flag}"`, `flag = 1` iff active.
+pub fn encode_delta<V: VertexValue>(v: VertexId, val: V, active: bool) -> String {
+    format!("{v} {} {}", render_value(val), active as u8)
+}
+
+/// Invert [`encode_delta`].
+pub fn decode_delta<V: VertexValue>(line: &str) -> Result<(VertexId, V, bool)> {
+    let mut it = line.split_ascii_whitespace();
+    let (v, bits, flag) = (it.next(), it.next(), it.next());
+    let (Some(v), Some(bits), Some(flag), None) = (v, bits, flag, it.next()) else {
+        anyhow::bail!("malformed delta line {line:?} (want \"v bits flag\")");
+    };
+    let v: VertexId = v.parse().with_context(|| format!("bad vertex id in {line:?}"))?;
+    let val = parse_value::<V>(bits)?;
+    let active = match flag {
+        "0" => false,
+        "1" => true,
+        other => anyhow::bail!("bad active flag {other:?} in delta line"),
+    };
+    Ok((v, val, active))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_text_roundtrips_bitwise_on_every_lane() {
+        fn rt<V: VertexValue>(x: V) {
+            let s = render_value(x);
+            let back: V = parse_value(&s).unwrap();
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            x.write_le(&mut a);
+            back.write_le(&mut b);
+            assert_eq!(a, b, "{s}");
+        }
+        rt(0u32);
+        rt(u32::MAX);
+        rt(u64::MAX - 7);
+        rt(-0.0f32);
+        rt(f32::INFINITY);
+        rt(1.5f32);
+        rt(f64::NEG_INFINITY);
+        rt(std::f64::consts::PI);
+    }
+
+    #[test]
+    fn rendering_matches_anyvalues_render_bits() {
+        use crate::graph::AnyValues;
+        assert_eq!(
+            render_value(1.5f32),
+            AnyValues::F32(vec![1.5]).render_bits(0).unwrap()
+        );
+        assert_eq!(
+            render_value(2.5f64),
+            AnyValues::F64(vec![2.5]).render_bits(0).unwrap()
+        );
+        assert_eq!(render_value(7u32), AnyValues::U32(vec![7]).render_bits(0).unwrap());
+        assert_eq!(
+            render_value(u64::MAX),
+            AnyValues::U64(vec![u64::MAX]).render_bits(0).unwrap()
+        );
+    }
+
+    #[test]
+    fn delta_lines_roundtrip_and_reject_garbage() {
+        let line = encode_delta(42u32, f32::INFINITY, true);
+        let (v, val, active) = decode_delta::<f32>(&line).unwrap();
+        assert_eq!((v, active), (42, true));
+        assert_eq!(val.to_bits(), f32::INFINITY.to_bits());
+
+        let line = encode_delta(7u32, 9u64, false);
+        assert_eq!(decode_delta::<u64>(&line).unwrap(), (7, 9, false));
+
+        assert!(decode_delta::<f32>("42").is_err());
+        assert!(decode_delta::<f32>("42 3f800000 2").is_err());
+        assert!(decode_delta::<f32>("x 3f800000 1").is_err());
+        assert!(decode_delta::<f32>("42 zz 1").is_err());
+        assert!(decode_delta::<f32>("42 3f800000 1 extra").is_err());
+        // integer lanes parse decimal, not hex
+        assert!(decode_delta::<u32>("42 zz 1").is_err());
+    }
+}

@@ -127,6 +127,73 @@ pub fn min_zip<V: VertexValue, F: Fn(u32, f32) -> V>(cols: &[u32], wgts: &[f32],
     acc
 }
 
+/// `max(map(u, w))` over an edge run with a parallel weight lane.
+#[inline]
+pub fn max_zip<V: VertexValue, F: Fn(u32, f32) -> V>(cols: &[u32], wgts: &[f32], map: F) -> V {
+    debug_assert_eq!(cols.len(), wgts.len());
+    let mut accs = [V::vmin_value(); LANES];
+    let mut cit = cols.chunks_exact(LANES);
+    let mut wit = wgts.chunks_exact(LANES);
+    for (cc, wc) in cit.by_ref().zip(wit.by_ref()) {
+        for ((a, &u), &w) in accs.iter_mut().zip(cc).zip(wc) {
+            *a = a.vmax(map(u, w));
+        }
+    }
+    let mut acc = accs[0];
+    for &a in &accs[1..] {
+        acc = acc.vmax(a);
+    }
+    for (&u, &w) in cit.remainder().iter().zip(wit.remainder()) {
+        acc = acc.vmax(map(u, w));
+    }
+    acc
+}
+
+/// `sum(map(u, w))` over an edge run with a parallel weight lane, under
+/// the same bit-identity discipline as [`sum_map`]: integer lanes
+/// reassociate across [`LANES`] accumulators, float lanes keep the serial
+/// add order and only block the (gather × weight) map.
+#[inline]
+pub fn sum_zip<V: VertexValue, F: Fn(u32, f32) -> V>(cols: &[u32], wgts: &[f32], map: F) -> V {
+    debug_assert_eq!(cols.len(), wgts.len());
+    if V::SUM_REASSOCIATES {
+        let mut accs = [V::vzero(); LANES];
+        let mut cit = cols.chunks_exact(LANES);
+        let mut wit = wgts.chunks_exact(LANES);
+        for (cc, wc) in cit.by_ref().zip(wit.by_ref()) {
+            for ((a, &u), &w) in accs.iter_mut().zip(cc).zip(wc) {
+                *a = a.vadd(map(u, w));
+            }
+        }
+        let mut acc = accs[0];
+        for &a in &accs[1..] {
+            acc = acc.vadd(a);
+        }
+        for (&u, &w) in cit.remainder().iter().zip(wit.remainder()) {
+            acc = acc.vadd(map(u, w));
+        }
+        return acc;
+    }
+    let mut acc = V::vzero();
+    let mut scratch = [V::vzero(); BLOCK];
+    let mut cit = cols.chunks_exact(BLOCK);
+    let mut wit = wgts.chunks_exact(BLOCK);
+    for (cc, wc) in cit.by_ref().zip(wit.by_ref()) {
+        // the map half (gathers, weight lifts) vectorizes here...
+        for ((s, &u), &w) in scratch.iter_mut().zip(cc).zip(wc) {
+            *s = map(u, w);
+        }
+        // ...while the adds keep the exact scalar order
+        for &s in &scratch {
+            acc = acc.vadd(s);
+        }
+    }
+    for (&u, &w) in cit.remainder().iter().zip(wit.remainder()) {
+        acc = acc.vadd(map(u, w));
+    }
+    acc
+}
+
 /// `sum(map(u) for u in cols)` from `vzero`, bit-identical to the scalar
 /// left fold: integer lanes reassociate across [`LANES`] accumulators
 /// (exact), float lanes keep the serial add order and only block the map.
@@ -209,6 +276,20 @@ mod tests {
                 .zip(&wgts)
                 .fold(f32::vmax_value(), |a, (&u, &w)| a.vmin(mz(u, w)));
             assert_eq!(min_zip(&cols, &wgts, mz).to_bits(), want.to_bits(), "zip {len}");
+
+            // weighted max: same multi-accumulator shape as min_zip
+            let want = cols
+                .iter()
+                .zip(&wgts)
+                .fold(f32::vmin_value(), |a, (&u, &w)| a.vmax(mz(u, w)));
+            assert_eq!(max_zip(&cols, &wgts, mz).to_bits(), want.to_bits(), "max zip {len}");
+            // weighted float sum: strict order must survive the blocking
+            let want = cols.iter().zip(&wgts).fold(0.0f32, |a, (&u, &w)| a.vadd(mz(u, w)));
+            assert_eq!(sum_zip(&cols, &wgts, mz).to_bits(), want.to_bits(), "sum zip {len}");
+            // weighted integer sum: reassociation is exact (weights lift to 1)
+            let mzi = |u: u32, w: f32| src64[u as usize].wrapping_add(w as u64);
+            let want = cols.iter().zip(&wgts).fold(0u64, |a, (&u, &w)| a.vadd(mzi(u, w)));
+            assert_eq!(sum_zip(&cols, &wgts, mzi), want, "u64 sum zip {len}");
         }
     }
 
@@ -218,6 +299,10 @@ mod tests {
         assert_eq!(min_map::<f32, _>(&[], m), f32::vmax_value());
         assert_eq!(max_map::<f32, _>(&[], m), f32::vmin_value());
         assert_eq!(sum_map::<f32, _>(&[], m), 0.0);
+        let mz = |u: u32, w: f32| u as f32 + w;
+        assert_eq!(min_zip::<f32, _>(&[], &[], mz), f32::vmax_value());
+        assert_eq!(max_zip::<f32, _>(&[], &[], mz), f32::vmin_value());
+        assert_eq!(sum_zip::<f32, _>(&[], &[], mz), 0.0);
         assert!(!level().is_empty());
     }
 

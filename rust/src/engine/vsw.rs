@@ -471,9 +471,12 @@ pub struct WarmStart<V> {
 
 /// Fold a chunk's rows, merging the shard's resident delta (if any) into
 /// the stream.  Free function because the per-payload arms instantiate it
-/// with different `EdgeSource` types.
+/// with different `EdgeSource` types.  `pub(crate)` because the
+/// partitioned step ([`crate::engine::partition`]) folds its owned shards
+/// through this exact function — sharing it is what makes the partitioned
+/// per-shard results bit-identical to the single-process loop.
 #[allow(clippy::too_many_arguments)]
-fn fold_chunk<V: VertexValue, P: VertexProgram<V> + ?Sized, S: EdgeSource>(
+pub(crate) fn fold_chunk<V: VertexValue, P: VertexProgram<V> + ?Sized, S: EdgeSource>(
     app: &P,
     rows: S,
     delta: Option<&DeltaShard>,
@@ -517,7 +520,9 @@ pub struct VswEngine {
     state: RwLock<Arc<EpochState>>,
     /// Shared across epochs — slots are keyed per call by the reader's
     /// `shard_epochs[shard]`, so stale payloads can't cross epochs.
-    cache: ShardCache,
+    /// Behind an `Arc` so a [`Self::with_config`] view whose override
+    /// keeps the cache shape can share the warmed slots.
+    cache: Arc<ShardCache>,
     /// Worker pools, leased per run (see [`Pools`]).
     pools: Mutex<Pools>,
     /// Adaptive I/O governor; with `cfg.adaptive == false` it pins every
@@ -578,12 +583,65 @@ impl VswEngine {
         Ok(Self {
             dir,
             state: RwLock::new(Arc::new(st)),
-            cache,
+            cache: Arc::new(cache),
             pools: Mutex::new(pools),
             governor,
             direct,
             cfg,
             load_wall: t0.elapsed(),
+        })
+    }
+
+    /// A per-request view of this engine under different knobs (the
+    /// `graphmp serve` `iters`/`threads`/`codec` overrides): shares the
+    /// dataset handle and the *current* epoch snapshot, reuses the warmed
+    /// shard cache when the override keeps its shape (same codec, budget
+    /// and eviction mode) and builds a fresh cold one otherwise, and gets
+    /// its own pools + governor so an overridden run never perturbs the
+    /// resident configuration.  Results are knob-invariant (the
+    /// conformance matrix locks that), so overridden runs stay
+    /// bit-identical to the resident engine's.
+    pub fn with_config(&self, cfg: EngineConfig) -> Result<VswEngine> {
+        anyhow::ensure!(
+            cfg.epoch == self.cfg.epoch,
+            "config overrides cannot re-pin the epoch; open a fresh engine instead"
+        );
+        let st = self.snapshot();
+        let same_cache = cfg.cache_codec == self.cfg.cache_codec
+            && cfg.cache_budget == self.cfg.cache_budget
+            && cfg.adaptive == self.cfg.adaptive;
+        let cache = if same_cache {
+            self.cache.clone()
+        } else {
+            let mut c = ShardCache::new(
+                st.property.num_shards(),
+                cfg.cache_codec,
+                cfg.cache_budget.max(1),
+            );
+            if cfg.adaptive {
+                c = c.with_eviction();
+            }
+            Arc::new(c)
+        };
+        let direct = if cfg.direct_io == self.cfg.direct_io {
+            self.direct.clone()
+        } else {
+            cfg.direct_io.then(|| DirectShardReader::new(cfg.prefetch_depth.max(1)))
+        };
+        let pools = Pools::build(&cfg);
+        let governor = Governor::new(
+            GovernorConfig::from_engine(cfg.adaptive, cfg.prefetch_depth, cfg.prefetch_max),
+            st.max_shard_bytes() as usize,
+        );
+        Ok(Self {
+            dir: self.dir.clone(),
+            state: RwLock::new(st),
+            cache,
+            pools: Mutex::new(pools),
+            governor,
+            direct,
+            cfg,
+            load_wall: self.load_wall,
         })
     }
 

@@ -36,6 +36,7 @@
 //! | [`iomodel`]   | Table II analytic I/O model                              |
 //! | [`runtime`]   | PJRT loading + execution of the AOT artifacts            |
 //! | [`server`]    | `graphmp serve`: resident engine, sessions, admission    |
+//! | [`cluster`]   | `graphmp partrun`: interval workers + barrier exchange   |
 //! | [`coordinator`]| job specs, experiment drivers, report formatting        |
 //!
 //! ## The shard I/O pipeline
@@ -82,6 +83,7 @@ pub mod apps;
 pub mod baselines;
 pub mod bloom;
 pub mod cache;
+pub mod cluster;
 pub mod coordinator;
 pub mod engine;
 pub mod graph;

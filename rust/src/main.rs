@@ -7,6 +7,8 @@
 //!                    [--engine native|xla] [--artifacts artifacts]
 //!                    [--cache mode-2|none|...] [--no-cache] [--no-selective]
 //!                    [--threads N] [--prefetch-depth N] [--throttle-mbps 300]
+//! graphmp partrun    --data data.gmp --app pagerank --workers 4
+//!                    [--split 2,5] [engine flags as for run]
 //! graphmp baseline   --system psw|esg|dsw|vsp|inmem --data edges.bin
 //!                    --vertices N --app pagerank [--iters 10]
 //! graphmp info       --data data.gmp
@@ -62,6 +64,8 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
         "generate" => cmd_generate(&args),
         "preprocess" => cmd_preprocess(&args),
         "run" => cmd_run(&args),
+        "partrun" => cmd_partrun(&args),
+        "partworker" => cmd_partworker(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
         "watch" => cmd_watch(&args),
@@ -129,6 +133,20 @@ USAGE:
                      [--dump-values <file>] write the result values as text
                                             (bit-exact, one per line)
                      [--throttle-mbps N]
+  graphmp partrun    --data <dir> --app <name> [--workers N]
+                     [--split <b1,b2,...>] [--dump-values <file>]
+                     [engine flags as for `run`, forwarded to every worker]
+                     (partitioned execution: N worker processes, each
+                      owning a contiguous shard run, driven through
+                      iteration barriers over Unix sockets; only *changed*
+                      vertex values and frontier bits cross a barrier.
+                      Results are bit-identical to `run` for every app,
+                      worker count and split — `--dump-values` output
+                      `cmp`s clean against a single-process dump.
+                      --split gives explicit interior shard boundaries,
+                      e.g. `2,5` over 8 shards makes parts 0..2, 2..5,
+                      5..8; otherwise shards split evenly over --workers
+                      (default 2).  Unix only)
   graphmp serve      --listen 127.0.0.1:0 [--socket <path>] [--data <dir>]
                      [--max-heavy 2] [--max-light 32] [--max-queue 16]
                      [--session-ttl-secs 3600]  evict sessions idle this
@@ -430,6 +448,173 @@ fn cmd_run(args: &Args) -> Result<()> {
 /// daemon response compares byte for byte against a dump file.
 fn render_values(vals: &graphmp::graph::AnyValues) -> String {
     vals.render_bits_all()
+}
+
+/// The engine flags `partrun` forwards verbatim to every `partworker`
+/// child, so the workers fold with the exact configuration the user gave
+/// the coordinator.  `--engine`/`--artifacts` are deliberately absent:
+/// partitioned execution is native-engine only (checked in
+/// [`cmd_partrun`]), and `--dump-values`/`--workers`/`--split` are
+/// coordinator-side concerns.
+fn engine_forward_flags(args: &Args) -> Vec<String> {
+    let mut fwd = Vec::new();
+    for key in [
+        "iters",
+        "tol",
+        "threads",
+        "prefetch-depth",
+        "prefetch-max",
+        "chunk-rows",
+        "epoch",
+        "cache",
+        "cache-budget-mb",
+    ] {
+        if let Some(v) = args.get(key) {
+            fwd.push(format!("--{key}"));
+            fwd.push(v.to_string());
+        }
+    }
+    for key in ["no-selective", "adaptive", "no-stream-gather", "direct-io", "no-simd", "no-cache"]
+    {
+        if args.has(key) {
+            fwd.push(format!("--{key}"));
+        }
+    }
+    fwd
+}
+
+/// `graphmp partrun`: partitioned VSW.  Spawns one `partworker` process
+/// per manifest part, drives them through iteration barriers, and stitches
+/// the final values — bit-identical to `graphmp run` by construction (the
+/// workers run the engine's own fold path; see [`graphmp::cluster`]).
+#[cfg(unix)]
+fn cmd_partrun(args: &Args) -> Result<()> {
+    use graphmp::cluster::{coordinator::process::ProcessWorkers, Coordinator, PartitionManifest};
+    use graphmp::storage::property::Property;
+
+    let data = DatasetDir::new(args.req("data")?);
+    anyhow::ensure!(data.exists(), "{} is not a preprocessed dataset", data.root.display());
+    let app = apps::by_name(args.req("app")?)?;
+    let cfg = engine_config(args)?;
+    anyhow::ensure!(
+        matches!(cfg.backend, Backend::Native),
+        "partrun is native-engine only (every worker would need its own artifacts)"
+    );
+    // the shard count is epoch-stable (growth epochs extend shards in
+    // place), so the base property is enough to build the manifest before
+    // any worker exists
+    let property = Property::load(&data.property_path())?;
+    let num_shards = property.num_shards();
+    let manifest = match args.get("split") {
+        Some(spec) => {
+            let m = PartitionManifest::parse_split(num_shards, spec)?;
+            if let Some(w) = args.get("workers") {
+                let w: usize = w.parse().context("--workers")?;
+                anyhow::ensure!(
+                    w == m.num_parts(),
+                    "--split makes {} parts but --workers says {w}",
+                    m.num_parts()
+                );
+            }
+            m
+        }
+        None => PartitionManifest::balanced(num_shards, args.get_usize("workers", 2)?)?,
+    };
+    eprintln!(
+        "partitioning {}: |V|={} |E|={} shards={} workers={} parts={}",
+        property.name,
+        humansize::count(property.info.num_vertices),
+        humansize::count(property.info.num_edges),
+        num_shards,
+        manifest.num_parts(),
+        manifest.to_json()
+    );
+
+    let exe = std::env::current_exe().context("locating the graphmp binary")?;
+    let forward = engine_forward_flags(args);
+    let (workers, links) = ProcessWorkers::spawn(
+        &exe,
+        &data.root,
+        &manifest,
+        &forward,
+        std::time::Duration::from_secs(120),
+    )?;
+    let mut coord = Coordinator::new(manifest, links)?;
+    let dump = args.get("dump-values");
+    let summary = coord.run(app.name(), cfg.max_iters, dump.is_some())?;
+    drop(workers); // children already got part-shutdown; this reaps them
+
+    if let Some(out) = dump {
+        let mut text = String::with_capacity(summary.values.len() * 9);
+        for line in &summary.values {
+            text.push_str(line);
+            text.push('\n');
+        }
+        std::fs::write(out, text).with_context(|| format!("writing {out}"))?;
+        eprintln!("dumped {} values -> {out}", summary.values.len());
+    }
+    println!(
+        "app={} lane={} engine=partitioned workers={} epoch={} iters={} total={}",
+        summary.app,
+        summary.lane,
+        summary.workers,
+        summary.epoch,
+        summary.iters.len(),
+        humansize::duration(summary.total_wall),
+    );
+    for it in &summary.iters {
+        println!(
+            "  iter {:3}: {:>9}  processed={:3} skipped={:3} active={:8} delta-lines={:8} edges={}",
+            it.iter,
+            humansize::duration(it.wall),
+            it.shards_processed,
+            it.shards_skipped,
+            it.active,
+            it.delta_lines,
+            humansize::count(it.edges),
+        );
+    }
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn cmd_partrun(_args: &Args) -> Result<()> {
+    bail!("partrun is only available on unix (worker links ride Unix-domain sockets)")
+}
+
+/// The hidden `partworker` subcommand: one partition worker process.
+/// Spawned by `partrun`, never by hand — binds the given socket, serves
+/// exactly one coordinator connection, exits.  `GRAPHMP_PART_CRASH_ITER`
+/// (with `GRAPHMP_PART_CRASH_WORKER`, default 0, matched against
+/// `--worker-id`) injects a mid-iteration crash for the conformance tests.
+#[cfg(unix)]
+fn cmd_partworker(args: &Args) -> Result<()> {
+    use graphmp::cluster::Worker;
+
+    let data = DatasetDir::new(args.req("data")?);
+    anyhow::ensure!(data.exists(), "{} is not a preprocessed dataset", data.root.display());
+    let sock = PathBuf::from(args.req("socket")?);
+    let worker_id = args.get_or("worker-id", "0").to_string();
+    let mut worker = Worker::open(data, engine_config(args)?)?;
+    if let Ok(spec) = std::env::var("GRAPHMP_PART_CRASH_ITER") {
+        let target =
+            std::env::var("GRAPHMP_PART_CRASH_WORKER").unwrap_or_else(|_| "0".to_string());
+        if target == worker_id {
+            worker.crash_iter = Some(spec.parse().context("GRAPHMP_PART_CRASH_ITER")?);
+        }
+    }
+    let _ = std::fs::remove_file(&sock);
+    let listener = std::os::unix::net::UnixListener::bind(&sock)
+        .with_context(|| format!("binding worker socket {}", sock.display()))?;
+    let (stream, _) = listener.accept().context("accepting the coordinator")?;
+    let served = worker.serve_connection(stream);
+    let _ = std::fs::remove_file(&sock);
+    served
+}
+
+#[cfg(not(unix))]
+fn cmd_partworker(_args: &Args) -> Result<()> {
+    bail!("partworker is only available on unix")
 }
 
 /// The `--incremental` decision tree lives in

@@ -28,7 +28,7 @@ mod protocol;
 mod scheduler;
 mod session;
 
-pub use protocol::{Request, Response};
+pub use protocol::{part, Request, Response};
 pub use scheduler::{JobClass, Scheduler, SchedulerConfig};
 pub use session::{Session, SessionRegistry};
 
@@ -43,6 +43,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::apps;
+use crate::cache::Codec;
 use crate::engine::{EngineConfig, VswEngine};
 use crate::graph::mutation;
 use crate::storage::{delta, DatasetDir};
@@ -242,14 +243,49 @@ impl Server {
             .with("queued", queued)
     }
 
+    /// Per-request engine-config overrides on `run`: `iters=`, `threads=`
+    /// and `codec=` shadow the daemon's fixed config for this one request.
+    /// Returns `None` when the request carries no overrides (the resident
+    /// engine runs untouched); malformed values become `err` responses.
+    fn run_overrides(&self, req: &Request) -> Result<Option<EngineConfig>> {
+        let (iters, threads, codec) =
+            (req.get("iters"), req.get("threads"), req.get("codec"));
+        if iters.is_none() && threads.is_none() && codec.is_none() {
+            return Ok(None);
+        }
+        let mut cfg = self.ecfg.clone();
+        if let Some(v) = iters {
+            cfg.max_iters =
+                v.parse().with_context(|| format!("run: bad iters={v:?}"))?;
+        }
+        if let Some(v) = threads {
+            cfg.threads =
+                v.parse().with_context(|| format!("run: bad threads={v:?}"))?;
+            anyhow::ensure!(cfg.threads > 0, "run: threads=0 is not an engine");
+        }
+        if let Some(v) = codec {
+            cfg.cache_codec = v
+                .parse::<Codec>()
+                .map_err(|e| e.context(format!("run: bad codec={v:?}")))?;
+        }
+        Ok(Some(cfg))
+    }
+
     fn cmd_run(&self, req: &Request) -> Result<Response> {
         let sid = req.req_u64("session")?;
         let session = self.sessions.get(sid)?;
         let app = apps::by_name(req.req("app")?)?;
+        let overrides = self.run_overrides(req)?;
         let entry = self.engine_entry(&session.dataset.display().to_string())?;
         let _ticket = self.sched.admit(JobClass::Heavy)?;
         let t0 = Instant::now();
-        let result = entry.engine.run_any_pinned(&session.state, &app)?;
+        let result = match overrides {
+            // a shadow engine over the same dataset + pinned snapshot:
+            // shares the resident shard cache when compatible, runs this
+            // one request, drops
+            Some(cfg) => entry.engine.with_config(cfg)?.run_any_pinned(&session.state, &app)?,
+            None => entry.engine.run_any_pinned(&session.state, &app)?,
+        };
         let values = Arc::new(result.values);
         session.store_result(app.name(), values.clone());
         let mut resp = Response::ok()
@@ -580,6 +616,74 @@ mod tests {
             .error
             .is_some());
         let _ = std::fs::remove_file(&bpath);
+        let _ = std::fs::remove_dir_all(&dir.root);
+    }
+
+    #[test]
+    fn run_accepts_per_request_overrides_and_rejects_malformed() {
+        let dir = build_dataset("ovr");
+        let data = dir.root.display().to_string();
+        let srv = server();
+        let open = srv.handle(&Request::new("open").arg("data", &data).render());
+        assert!(open.is_ok(), "{:?}", open.error);
+        let sid = open.get("session").unwrap().to_string();
+
+        let full = srv.handle(
+            &Request::new("run")
+                .arg("session", &sid)
+                .arg("app", "pagerank")
+                .arg("values", "1")
+                .render(),
+        );
+        assert!(full.is_ok(), "{:?}", full.error);
+
+        // iters=1 truncates the fixpoint for this request only
+        let one = srv.handle(
+            &Request::new("run")
+                .arg("session", &sid)
+                .arg("app", "pagerank")
+                .arg("iters", "1")
+                .arg("values", "1")
+                .render(),
+        );
+        assert!(one.is_ok(), "{:?}", one.error);
+        assert_eq!(one.get("iters"), Some("1"));
+        assert_ne!(one.payload, full.payload, "iters=1 must truncate the fixpoint");
+
+        // threads/codec overrides may not change a single bit
+        let alt = srv.handle(
+            &Request::new("run")
+                .arg("session", &sid)
+                .arg("app", "pagerank")
+                .arg("threads", "1")
+                .arg("codec", "none")
+                .arg("values", "1")
+                .render(),
+        );
+        assert!(alt.is_ok(), "{:?}", alt.error);
+        assert_eq!(alt.payload, full.payload, "overrides must not change the fixpoint bits");
+
+        // malformed overrides answer err and leave the session usable
+        for (key, val) in
+            [("iters", "many"), ("threads", "0"), ("threads", "-2"), ("codec", "brotli")]
+        {
+            let r = srv.handle(
+                &Request::new("run")
+                    .arg("session", &sid)
+                    .arg("app", "pagerank")
+                    .arg(key, val)
+                    .render(),
+            );
+            assert!(r.error.is_some(), "{key}={val} must be rejected");
+        }
+        let again = srv.handle(
+            &Request::new("run")
+                .arg("session", &sid)
+                .arg("app", "pagerank")
+                .arg("values", "1")
+                .render(),
+        );
+        assert_eq!(again.payload, full.payload, "a rejected override must not poison the engine");
         let _ = std::fs::remove_dir_all(&dir.root);
     }
 

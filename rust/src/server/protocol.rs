@@ -5,6 +5,7 @@
 //!
 //! ```text
 //! request  := cmd [SP key=value]* LF
+//!             payload-line{N} LF               -- iff the header carries lines=N
 //! response := ("ok" [SP key=value]*) | ("err" SP message) LF
 //!             payload-line{N} LF               -- iff the header carries lines=N
 //! ```
@@ -14,6 +15,12 @@
 //! survive the line discipline.  Payload lines are raw (the bit-exact
 //! value rendering never contains specials), which keeps a `run values=1`
 //! payload byte-for-byte identical to a `--dump-values` file.
+//!
+//! Requests carry payloads symmetrically to responses (the partition
+//! barrier ships delta lines *to* workers): [`Request::with_payload`]
+//! appends `lines=N` to the rendered header and the receiving side reads
+//! them back through [`Request::read_from`].  The serve daemon's
+//! line-at-a-time `handle` path never uses request payloads.
 
 use anyhow::{bail, Context, Result};
 use std::io::BufRead;
@@ -52,16 +59,18 @@ pub fn unescape(s: &str) -> Result<String> {
     String::from_utf8(out).context("unescaped request is not UTF-8")
 }
 
-/// A parsed request line.
+/// A parsed request line, plus optional payload lines (declared via a
+/// `lines=N` key, mirroring [`Response`]).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
     pub cmd: String,
     pub kv: Vec<(String, String)>,
+    pub payload: Vec<String>,
 }
 
 impl Request {
     pub fn new(cmd: &str) -> Self {
-        Self { cmd: cmd.to_string(), kv: Vec::new() }
+        Self { cmd: cmd.to_string(), kv: Vec::new(), payload: Vec::new() }
     }
 
     pub fn arg(mut self, key: &str, value: &str) -> Self {
@@ -69,6 +78,13 @@ impl Request {
         self
     }
 
+    pub fn with_payload(mut self, lines: Vec<String>) -> Self {
+        self.payload = lines;
+        self
+    }
+
+    /// Parse a bare header line.  A `lines=N` key stays in `kv`; the
+    /// payload itself is consumed by [`Self::read_from`].
     pub fn parse(line: &str) -> Result<Request> {
         let line = line.trim_end_matches(['\r', '\n']);
         let mut tokens = line.split(' ').filter(|t| !t.is_empty());
@@ -78,9 +94,38 @@ impl Request {
             let (k, v) = t.split_once('=').with_context(|| format!("bad token {t:?}"))?;
             kv.push((k.to_string(), unescape(v)?));
         }
-        Ok(Request { cmd, kv })
+        Ok(Request { cmd, kv, payload: Vec::new() })
     }
 
+    /// Server side: read one request (header + declared payload lines)
+    /// off a buffered stream.  `Ok(None)` = clean EOF before a header.
+    pub fn read_from(reader: &mut impl BufRead) -> Result<Option<Request>> {
+        let mut header = String::new();
+        loop {
+            header.clear();
+            if reader.read_line(&mut header)? == 0 {
+                return Ok(None);
+            }
+            if !header.trim().is_empty() {
+                break;
+            }
+        }
+        let mut req = Request::parse(&header)?;
+        let n = req.get_u64("lines")?.unwrap_or(0) as usize;
+        req.payload.reserve(n);
+        for _ in 0..n {
+            let mut line = String::new();
+            anyhow::ensure!(reader.read_line(&mut line)? > 0, "request payload truncated");
+            while line.ends_with('\n') || line.ends_with('\r') {
+                line.pop();
+            }
+            req.payload.push(line);
+        }
+        Ok(Some(req))
+    }
+
+    /// Wire form, `lines=N` appended automatically when a payload rides
+    /// along (so `kv` must not carry its own `lines` key).
     pub fn render(&self) -> String {
         let mut s = self.cmd.clone();
         for (k, v) in &self.kv {
@@ -89,7 +134,14 @@ impl Request {
             s.push('=');
             s.push_str(&escape(v));
         }
+        if !self.payload.is_empty() {
+            s.push_str(&format!(" lines={}", self.payload.len()));
+        }
         s.push('\n');
+        for line in &self.payload {
+            s.push_str(line);
+            s.push('\n');
+        }
         s
     }
 
@@ -219,6 +271,38 @@ pub fn handle_malformed(line: &str) -> std::result::Result<Request, Response> {
     Request::parse(line).map_err(|e| Response::err(format!("{e:#}")))
 }
 
+/// Verbs of the partition protocol (`graphmp partrun`): the coordinator
+/// drives each worker process over this same line protocol on a private
+/// Unix socket.  One request/response pair per worker per barrier:
+///
+/// ```text
+/// part-init app=<name> shards=<lo:hi[,lo:hi]*>
+///   -> ok epoch=E vertices=N lane=L active=A         (A = global initial frontier)
+/// part-step iter=K active=A [lines=M + M delta lines from *other* workers]
+///   -> ok active=a processed=p skipped=s [lines=m + m own delta lines]
+/// part-values
+///   -> ok lines=R + bit-exact value lines of the owned intervals, ascending
+/// part-shutdown
+///   -> ok                                            (worker exits afterwards)
+/// ```
+///
+/// Delta lines are [`crate::engine::partition::encode_delta`]'s
+/// `"{v} {bits} {flag}"` form: the bit-changed values of the sender's
+/// ranges, with `flag = 1` marking tolerance-active vertices (the
+/// frontier bits).  `active=` on `part-step` is the *merged* global count
+/// — each worker derives the same selective-scheduling decision from it
+/// that the single-process engine would.
+pub mod part {
+    /// Bind a program + owned shard ranges; compute the init state.
+    pub const INIT: &str = "part-init";
+    /// Run one iteration barrier-to-barrier.
+    pub const STEP: &str = "part-step";
+    /// Dump the owned intervals' final values.
+    pub const VALUES: &str = "part-values";
+    /// Clean worker exit.
+    pub const SHUTDOWN: &str = "part-shutdown";
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -240,6 +324,27 @@ mod tests {
         assert_eq!(back.get("data"), Some("/tmp/my data"));
         assert_eq!(back.req_u64("epoch").unwrap(), 3);
         assert!(back.req("missing").is_err());
+    }
+
+    #[test]
+    fn request_payload_roundtrips_through_read_from() {
+        let r = Request::new(part::STEP)
+            .arg("iter", "3")
+            .arg("active", "17")
+            .with_payload(vec!["5 3f800000 1".into(), "9 40000000 0".into()]);
+        let wire = r.render();
+        assert!(wire.starts_with("part-step iter=3 active=17 lines=2\n"), "{wire:?}");
+        let mut reader = std::io::BufReader::new(wire.as_bytes());
+        let back = Request::read_from(&mut reader).unwrap().unwrap();
+        assert_eq!(back.cmd, part::STEP);
+        assert_eq!(back.req_u64("iter").unwrap(), 3);
+        assert_eq!(back.payload, r.payload);
+        // stream exhausted -> clean EOF
+        assert!(Request::read_from(&mut reader).unwrap().is_none());
+        // declared payload that never arrives is an error, not a hang
+        let mut truncated =
+            std::io::BufReader::new("part-step iter=0 lines=2\nonly one\n".as_bytes());
+        assert!(Request::read_from(&mut truncated).is_err());
     }
 
     #[test]

@@ -1,0 +1,233 @@
+//! The partitioned-execution conformance matrix: a `partrun`-style
+//! coordinator driving in-process workers must produce values **byte-
+//! identical** to the single-process VSW engine —
+//!
+//! * for all nine registered apps (every value lane),
+//! * for N ∈ {2, 4} workers, balanced and deliberately uneven splits,
+//! * with the adaptive I/O governor on or off inside the workers,
+//!
+//! plus the failure half of the contract: a worker that dies
+//! mid-iteration must surface as a clean coordinator error naming the
+//! worker, never as a hung barrier.  A final black-box test runs the real
+//! `graphmp partrun` binary (separate worker *processes* over Unix
+//! sockets) and `cmp`s its `--dump-values` file against `graphmp run`'s.
+#![cfg(unix)]
+
+use graphmp::apps;
+use graphmp::cluster::{worker, Coordinator, PartitionManifest, StreamLink};
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::graph::{generator, Edge, Weight};
+use graphmp::sharding::{preprocess_weighted, PreprocessConfig};
+use graphmp::storage::property::Property;
+use graphmp::storage::DatasetDir;
+
+const N: usize = 128;
+const APPS: [&str; 9] = [
+    "pagerank",
+    "sssp",
+    "wcc",
+    "bfs",
+    "spmv",
+    "spmv64",
+    "weighted-sssp",
+    "labelprop",
+    "maxdeg",
+];
+
+/// Same deterministic symmetrized weighted graph as the cross-engine
+/// matrix, sharded fine (128 edges/shard) so 4 workers all own several
+/// shards.
+fn build_dataset(tag: &str) -> DatasetDir {
+    let mut edges: Vec<Edge> = generator::rmat(7, 600, generator::RmatParams::default(), 77);
+    let rev: Vec<_> = edges.iter().map(|&(s, d)| (d, s)).collect();
+    edges.extend(rev);
+    let weights: Vec<Weight> = generator::synth_weights(&edges, 5);
+    let dir = DatasetDir::new(
+        std::env::temp_dir().join(format!("gmp_partconf_{tag}_{}", std::process::id())),
+    );
+    let _ = std::fs::remove_dir_all(&dir.root);
+    let cfg = PreprocessConfig { max_edges_per_shard: 128, bloom_fpr: 0.01 };
+    preprocess_weighted(tag, &edges, &weights, N, &dir, &cfg).unwrap();
+    dir
+}
+
+fn num_shards(dir: &DatasetDir) -> usize {
+    Property::load(&dir.property_path()).unwrap().num_shards()
+}
+
+/// The single-process truth: one engine, `run_any`, bit-rendered lines.
+fn reference_lines(dir: &DatasetDir, app_name: &str, cfg: &EngineConfig) -> Vec<String> {
+    let engine = VswEngine::open(dir.clone(), cfg.clone()).unwrap();
+    let app = apps::by_name(app_name).unwrap();
+    let res = engine.run_any(&app).unwrap();
+    (0..res.values.len()).map(|v| res.values.render_bits(v).unwrap()).collect()
+}
+
+/// A full partitioned run over in-process workers (socketpair + thread per
+/// part — the same protocol bytes as spawned `partworker` processes).
+fn partitioned_lines(
+    dir: &DatasetDir,
+    manifest: PartitionManifest,
+    app_name: &str,
+    cfg: &EngineConfig,
+) -> Vec<String> {
+    let mut links = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..manifest.num_parts() {
+        let (stream, handle) = worker::spawn_local(dir.clone(), cfg.clone(), None).unwrap();
+        links.push(StreamLink::new(stream));
+        handles.push(handle);
+    }
+    let mut coord = Coordinator::new(manifest, links).unwrap();
+    let summary = coord.run(app_name, cfg.max_iters, true).unwrap();
+    drop(coord);
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    assert_eq!(summary.vertices, N);
+    summary.values
+}
+
+fn assert_identical(got: &[String], want: &[String], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (v, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a, b, "{what}: vertex {v} diverged from the single-process run");
+    }
+}
+
+#[test]
+fn every_app_is_bit_identical_across_worker_counts() {
+    let dir = build_dataset("apps");
+    let p = num_shards(&dir);
+    assert!(p >= 4, "conformance graph must span at least 4 shards, got {p}");
+    let cfg = EngineConfig { threads: 1, ..Default::default() };
+    for app in APPS {
+        let want = reference_lines(&dir, app, &cfg);
+        for workers in [2, 4] {
+            let manifest = PartitionManifest::balanced(p, workers).unwrap();
+            let got = partitioned_lines(&dir, manifest, app, &cfg);
+            assert_identical(&got, &want, &format!("{app} N={workers}"));
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir.root);
+}
+
+#[test]
+fn uneven_splits_and_adaptive_workers_stay_bit_identical() {
+    let dir = build_dataset("uneven");
+    let p = num_shards(&dir);
+    // worker 0 gets a single shard, worker 2 gets the long tail
+    let manifest = || PartitionManifest::from_boundaries(p, &[1, 3]).unwrap();
+    for (app, adaptive) in
+        [("pagerank", false), ("pagerank", true), ("weighted-sssp", true), ("labelprop", false)]
+    {
+        let cfg = EngineConfig {
+            threads: 1,
+            adaptive,
+            prefetch_depth: if adaptive { 2 } else { 0 },
+            prefetch_max: 4,
+            ..Default::default()
+        };
+        let want = reference_lines(&dir, app, &cfg);
+        let got = partitioned_lines(&dir, manifest(), app, &cfg);
+        assert_identical(&got, &want, &format!("{app} uneven adaptive={adaptive}"));
+    }
+    let _ = std::fs::remove_dir_all(&dir.root);
+}
+
+#[test]
+fn selective_scheduling_engages_identically_in_partitioned_runs() {
+    // sssp's frontier shrinks below the selective threshold mid-run, so
+    // this exercises the digest/screening path across a partition
+    let dir = build_dataset("selective");
+    let p = num_shards(&dir);
+    for selective in [false, true] {
+        let cfg = EngineConfig { threads: 1, selective, ..Default::default() };
+        let want = reference_lines(&dir, "sssp", &cfg);
+        let got =
+            partitioned_lines(&dir, PartitionManifest::balanced(p, 3).unwrap(), "sssp", &cfg);
+        assert_identical(&got, &want, &format!("sssp selective={selective}"));
+    }
+    let _ = std::fs::remove_dir_all(&dir.root);
+}
+
+#[test]
+fn worker_crash_mid_iteration_is_a_clean_error_not_a_hang() {
+    let dir = build_dataset("crash");
+    let p = num_shards(&dir);
+    let manifest = PartitionManifest::balanced(p, 2).unwrap();
+    let cfg = EngineConfig { threads: 1, ..Default::default() };
+    let mut links = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..manifest.num_parts() {
+        // worker 1 dies on the part-step carrying iteration 1, with the
+        // response unsent
+        let crash = (i == 1).then_some(1);
+        let (stream, handle) = worker::spawn_local(dir.clone(), cfg.clone(), crash).unwrap();
+        links.push(StreamLink::new(stream));
+        handles.push(handle);
+    }
+    let mut coord = Coordinator::new(manifest, links).unwrap();
+    let err = coord.run("pagerank", 0, true).expect_err("a dead worker must fail the run");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("worker 1"), "error must name the dead worker: {msg}");
+    drop(coord);
+    // worker 0 sees EOF and exits clean; worker 1 reports the injected crash
+    assert!(handles.remove(0).join().unwrap().is_ok());
+    let crashed = handles.remove(0).join().unwrap();
+    assert!(format!("{:#}", crashed.unwrap_err()).contains("injected worker crash"));
+    let _ = std::fs::remove_dir_all(&dir.root);
+}
+
+#[test]
+fn partrun_binary_dump_matches_run_dump_byte_for_byte() {
+    use std::process::Command;
+    let dir = build_dataset("binary");
+    let single = dir.root.with_extension("single.txt");
+    let parted = dir.root.with_extension("parted.txt");
+    let run_ok = |args: &mut Command| {
+        let out = args.output().unwrap();
+        assert!(
+            out.status.success(),
+            "stdout: {}\nstderr: {}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        out
+    };
+    run_ok(
+        Command::new(env!("CARGO_BIN_EXE_graphmp"))
+            .args(["run", "--data"])
+            .arg(&dir.root)
+            .args(["--app", "pagerank", "--dump-values"])
+            .arg(&single),
+    );
+    run_ok(
+        Command::new(env!("CARGO_BIN_EXE_graphmp"))
+            .args(["partrun", "--data"])
+            .arg(&dir.root)
+            .args(["--app", "pagerank", "--workers", "2", "--dump-values"])
+            .arg(&parted),
+    );
+    let a = std::fs::read(&single).unwrap();
+    let b = std::fs::read(&parted).unwrap();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "partrun --dump-values must cmp clean against run --dump-values");
+
+    // a crash-injected child surfaces as a coordinator error, not a hang
+    let out = Command::new(env!("CARGO_BIN_EXE_graphmp"))
+        .args(["partrun", "--data"])
+        .arg(&dir.root)
+        .args(["--app", "pagerank", "--workers", "2"])
+        .env("GRAPHMP_PART_CRASH_ITER", "1")
+        .env("GRAPHMP_PART_CRASH_WORKER", "1")
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("worker 1"), "stderr must name the dead worker: {stderr}");
+
+    let _ = std::fs::remove_file(&single);
+    let _ = std::fs::remove_file(&parted);
+    let _ = std::fs::remove_dir_all(&dir.root);
+}
