@@ -22,6 +22,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::apps;
+use crate::obs;
 use crate::server::{part, Request, Response};
 
 use super::manifest::PartitionManifest;
@@ -87,6 +88,10 @@ pub struct PartRunSummary {
     /// Final values in `--dump-values` form (one bit-line per vertex,
     /// ascending); empty unless requested.
     pub values: Vec<String>,
+    /// High-water bytes held in the coordinator's stitch buffers (the
+    /// per-worker delta outboxes plus the value-collection staging) —
+    /// charged into partitioned memory accounting.
+    pub stitch_bytes: u64,
 }
 
 pub struct Coordinator<L: WorkerLink> {
@@ -174,6 +179,8 @@ impl<L: WorkerLink> Coordinator<L> {
         // its next barrier (everyone else's changes from the last one)
         let mut pending: Vec<Vec<String>> = vec![Vec::new(); w];
         let mut iters = Vec::new();
+        let mut stitch_bytes: u64 = 0;
+        obs::trace::record_run_start(app.name(), epoch);
 
         for iter in 0..max_iters {
             if global_active == 0 {
@@ -191,6 +198,13 @@ impl<L: WorkerLink> Coordinator<L> {
             for i in 0..w {
                 outs.push(self.recv_ok(i)?);
             }
+            // post-all → receive-all is the barrier; its latency is the
+            // coordinator's foremost health signal
+            obs::metrics::observe_secs(
+                "graphmp_barrier_seconds",
+                &[],
+                t_iter.elapsed().as_secs_f64(),
+            );
             let mut stats = PartIterStats {
                 iter,
                 active: 0,
@@ -214,13 +228,42 @@ impl<L: WorkerLink> Coordinator<L> {
                     }
                 }
             }
+            let outbox_bytes: u64 =
+                pending.iter().flatten().map(|l| l.len() as u64 + 24).sum();
+            stitch_bytes = stitch_bytes.max(outbox_bytes);
             global_active = stats.active;
             stats.wall = t_iter.elapsed();
+            obs::metrics::counter_add(
+                "graphmp_barrier_delta_lines_total",
+                &[],
+                stats.delta_lines as u64,
+            );
+            if obs::trace::installed() {
+                obs::trace::record(obs::trace::TraceRecord::Iter {
+                    epoch,
+                    iter: iter as u64,
+                    wall_ns: stats.wall.as_nanos() as u64,
+                    io_wait_ns: 0,
+                    compute_ns: 0,
+                    decode_ns: 0,
+                    shards_processed: stats.shards_processed as u64,
+                    shards_skipped: stats.shards_skipped as u64,
+                    active: stats.active,
+                    read_bytes: 0,
+                    cache_hits: 0,
+                    cache_misses: 0,
+                    window: stats.delta_lines as u64,
+                });
+            }
             iters.push(stats);
         }
 
         let values =
             if collect_values { self.collect_values(vertices)? } else { Vec::new() };
+        let value_bytes: u64 =
+            values.iter().map(|l| l.len() as u64 + 24 + 1).sum::<u64>();
+        stitch_bytes = stitch_bytes.max(value_bytes);
+        obs::metrics::gauge_set("graphmp_part_stitch_bytes", &[], stitch_bytes);
         self.shutdown();
 
         Ok(PartRunSummary {
@@ -232,6 +275,7 @@ impl<L: WorkerLink> Coordinator<L> {
             iters,
             total_wall: t0.elapsed(),
             values,
+            stitch_bytes,
         })
     }
 

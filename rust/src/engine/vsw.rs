@@ -96,6 +96,7 @@ use crate::engine::shared::SharedSlice;
 use crate::engine::stats::{AnyRunResult, IterStats, RunResult, RunStats};
 use crate::graph::csr::Csr;
 use crate::graph::{AnyValues, VertexId};
+use crate::obs;
 use crate::runtime::EpochManifest;
 use crate::sharding::preprocess::load_bloom_file;
 use crate::storage::delta::DeltaShard;
@@ -228,6 +229,12 @@ struct ShardWork {
     /// finalizes the shard.
     done_chunks: AtomicUsize,
     edges: u64,
+    /// Flight-recorder span inputs: wall time spent acquiring (read +
+    /// decode) and decoding this shard, stamped by the producer, and fold
+    /// nanoseconds accumulated by the compute workers.
+    acquire_ns: u64,
+    decode_local_ns: u64,
+    fold_ns: AtomicU64,
 }
 
 impl ShardWork {
@@ -240,6 +247,9 @@ impl ShardWork {
             next_chunk: AtomicUsize::new(0),
             done_chunks: AtomicUsize::new(0),
             edges,
+            acquire_ns: 0,
+            decode_local_ns: 0,
+            fold_ns: AtomicU64::new(0),
         }
     }
 }
@@ -668,6 +678,13 @@ impl VswEngine {
         self.snapshot().epoch
     }
 
+    /// Direct-I/O traffic split, `(direct, fallback)` reads, when this
+    /// engine runs a submission ring (`--direct-io`).  Surfaced by
+    /// `graphmp info` and the daemon's `stats` verb.
+    pub fn direct_counts(&self) -> Option<(u64, u64)> {
+        self.direct.as_ref().map(|r| r.counts())
+    }
+
     /// The dataset property as of the current epoch (live edge count
     /// included).
     pub fn property(&self) -> Property {
@@ -742,7 +759,51 @@ impl VswEngine {
         // resident delta shards (the mutation subsystem keeps them decoded)
         let deltas: u64 =
             st.deltas.iter().flatten().map(|d| d.resident_bytes() as u64).sum();
+        // The observability layer (metrics series + trace ring) is resident
+        // alongside the run, so Fig-11-style accounting charges it too.
         vertex_arrays + degree_arrays + blooms + cache + shard_buffers + deltas
+            + obs::overhead_bytes()
+    }
+
+    /// Label value for this engine's metric series: the dataset directory
+    /// name (`tiny.gmp`), stable across epochs and sessions.
+    fn dataset_label(&self) -> String {
+        self.dir.root.file_name().and_then(|s| s.to_str()).unwrap_or("dataset").to_string()
+    }
+
+    /// Push one completed iteration's signals into the metrics registry:
+    /// cache totals are mirrored (`counter_to`), per-iteration clocks are
+    /// added, governor/window state is gauged.  A handful of relaxed
+    /// atomics per *iteration* — invisible next to a shard fold.
+    fn obs_iteration(&self, st: &EpochState, it: &IterStats, lent_bytes: usize) {
+        use crate::obs::metrics as m;
+        let ds = self.dataset_label();
+        let l: &[(&str, &str)] = &[("dataset", ds.as_str())];
+        let cs = &self.cache.stats;
+        m::counter_to("graphmp_cache_hits_total", l, cs.hits.load(Ordering::Relaxed));
+        m::counter_to("graphmp_cache_misses_total", l, cs.misses.load(Ordering::Relaxed));
+        m::counter_to("graphmp_cache_evictions_total", l, cs.evictions.load(Ordering::Relaxed));
+        m::counter_to(
+            "graphmp_cache_invalidations_total",
+            l,
+            cs.invalidated.load(Ordering::Relaxed),
+        );
+        m::gauge_set("graphmp_cache_resident_bytes", l, self.cache.used_bytes() as u64);
+        m::counter_add("graphmp_engine_iterations_total", l, 1);
+        m::counter_add("graphmp_engine_io_wait_seconds_total", l, it.io_wait.as_nanos() as u64);
+        m::counter_add("graphmp_engine_compute_seconds_total", l, it.compute.as_nanos() as u64);
+        m::counter_add("graphmp_engine_decode_seconds_total", l, it.decode_ns);
+        m::gauge_set_f64("graphmp_engine_active_ratio", l, it.active_ratio);
+        m::gauge_set("graphmp_engine_window", l, it.prefetch_depth as u64);
+        m::gauge_set("graphmp_engine_lent_bytes", l, lent_bytes as u64);
+        m::gauge_set("graphmp_engine_epoch", l, st.epoch);
+        m::observe_secs("graphmp_iter_seconds", l, it.wall.as_secs_f64());
+        if let Some(r) = &self.direct {
+            let (direct, fallback) = r.counts();
+            m::counter_to("graphmp_uring_direct_reads_total", l, direct);
+            m::counter_to("graphmp_uring_fallback_reads_total", l, fallback);
+            m::gauge_set("graphmp_uring_queue_depth", l, r.queue_depth() as u64);
+        }
     }
 
     /// Run a lane-erased program (the CLI path): dispatches to the typed
@@ -1027,6 +1088,7 @@ impl VswEngine {
         } else {
             app.default_max_iters()
         };
+        obs::trace::record_run_start(app.name(), st.epoch);
 
         // init(src, dst) — line 1 (or the warm state verbatim)
         let (mut src, mut active): (Vec<V>, Vec<VertexId>) = match warm {
@@ -1106,12 +1168,15 @@ impl VswEngine {
             // governor: size this iteration's in-flight window (a finite
             // cache budget lends its unused bytes; an unbounded or disabled
             // cache imposes no loan) and pick the shard issue order
+            let mut lent_bytes = 0usize;
             let window = if pools.io.is_some() {
                 let lendable =
                     if self.cfg.cache_budget == 0 || self.cfg.cache_budget == usize::MAX {
                         None
                     } else {
-                        Some(self.cache.lendable_bytes())
+                        let l = self.cache.lendable_bytes();
+                        lent_bytes = l;
+                        Some(l)
                     };
                 self.governor.plan_window(lendable)
             } else {
@@ -1214,6 +1279,11 @@ impl VswEngine {
                 };
                 let direct = &self.direct;
                 let acquire = |shard: usize, did_read: &Cell<bool>| -> ShardWork {
+                    // flight-recorder span inputs: wall acquire time and the
+                    // slice of it spent decoding (Cell because the decode
+                    // sites live inside the payload-builder closure)
+                    let t_acq = Instant::now();
+                    let dec_local = Cell::new(0u64);
                     let admit = cfg.cache_budget > 0;
                     let read = || {
                         did_read.set(true);
@@ -1253,8 +1323,9 @@ impl VswEngine {
                             ShardView::Raw(bytes) => {
                                 let t0 = Instant::now();
                                 let layout = shardfile::parse_layout(&bytes)?;
-                                decode_ns
-                                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                                let d = t0.elapsed().as_nanos() as u64;
+                                decode_ns.fetch_add(d, Ordering::Relaxed);
+                                dec_local.set(dec_local.get() + d);
                                 check_interval(shard, layout.lo, layout.num_rows())?;
                                 let chunks = chunks_of(layout.num_rows());
                                 let edges = eff_edges(shard, layout.num_edges as u64);
@@ -1274,8 +1345,9 @@ impl VswEngine {
                                 // three-vector materialization per hit
                                 let t0 = Instant::now();
                                 let plan = deltavarint::plan(&bytes, chunk_rows)?;
-                                decode_ns
-                                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                                let d = t0.elapsed().as_nanos() as u64;
+                                decode_ns.fetch_add(d, Ordering::Relaxed);
+                                dec_local.set(dec_local.get() + d);
                                 check_interval(shard, plan.lo, plan.num_rows)?;
                                 let chunks = plan.chunks.len();
                                 let edges = eff_edges(shard, plan.num_edges as u64);
@@ -1286,8 +1358,9 @@ impl VswEngine {
                                 let mut buf = buf_pool.take();
                                 codec.decompress_payload_into(&bytes, &mut buf)?;
                                 let layout = shardfile::parse_layout(&buf)?;
-                                decode_ns
-                                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                                let d = t0.elapsed().as_nanos() as u64;
+                                decode_ns.fetch_add(d, Ordering::Relaxed);
+                                dec_local.set(dec_local.get() + d);
                                 check_interval(shard, layout.lo, layout.num_rows())?;
                                 let chunks = chunks_of(layout.num_rows());
                                 let edges = eff_edges(shard, layout.num_edges as u64);
@@ -1305,7 +1378,10 @@ impl VswEngine {
                     })();
                     match built {
                         Ok((payload, chunks, edges)) => {
-                            ShardWork::new(shard, payload, chunks, edges)
+                            let mut w = ShardWork::new(shard, payload, chunks, edges);
+                            w.acquire_ns = t_acq.elapsed().as_nanos() as u64;
+                            w.decode_local_ns = dec_local.get();
+                            w
                         }
                         Err(e) => {
                             record_err(e);
@@ -1402,6 +1478,15 @@ impl VswEngine {
                         if let WorkPayload::View { bytes, pooled: true, .. } = other {
                             buf_pool.put(bytes.clone());
                         }
+                        if obs::trace::shard_sampled(work.shard as u64) {
+                            obs::trace::record(obs::trace::TraceRecord::Shard {
+                                iter: iter as u64,
+                                shard: work.shard as u64,
+                                acquire_ns: work.acquire_ns,
+                                decode_ns: work.decode_local_ns,
+                                fold_ns: work.fold_ns.load(Ordering::Relaxed),
+                            });
+                        }
                     }
                 };
 
@@ -1492,8 +1577,9 @@ impl VswEngine {
                             io_wait_ns.fetch_add(waited, Ordering::Relaxed);
                             let t_comp = Instant::now();
                             process_chunk(s, &work, chunk);
-                            compute_ns
-                                .fetch_add(t_comp.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                            let dt = t_comp.elapsed().as_nanos() as u64;
+                            compute_ns.fetch_add(dt, Ordering::Relaxed);
+                            work.fold_ns.fetch_add(dt, Ordering::Relaxed);
                             if work.done_chunks.fetch_add(1, Ordering::AcqRel) + 1
                                 == work.num_chunks
                             {
@@ -1528,6 +1614,8 @@ impl VswEngine {
                         for chunk in 0..work.num_chunks {
                             process_chunk(s, &work, chunk);
                         }
+                        work.fold_ns
+                            .fetch_add(t_comp.elapsed().as_nanos() as u64, Ordering::Relaxed);
                         finalize(&work);
                         compute_ns.fetch_add(t_comp.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     });
@@ -1590,6 +1678,31 @@ impl VswEngine {
                 prefetch_depth: window,
                 decode_ns: decode_ns.load(Ordering::Relaxed),
             });
+
+            // observability: one registry push + one flight-recorder record
+            // per completed iteration (no-ops under GRAPHMP_OBS=0; proven
+            // bit-invisible by tests/obs_conformance.rs)
+            let it = stats.iters.last().expect("just pushed");
+            if obs::metrics::enabled() {
+                self.obs_iteration(st, it, lent_bytes);
+            }
+            if obs::trace::installed() {
+                obs::trace::record(obs::trace::TraceRecord::Iter {
+                    epoch: st.epoch,
+                    iter: iter as u64,
+                    wall_ns: it.wall.as_nanos() as u64,
+                    io_wait_ns: it.io_wait.as_nanos() as u64,
+                    compute_ns: it.compute.as_nanos() as u64,
+                    decode_ns: it.decode_ns,
+                    shards_processed: it.shards_processed as u64,
+                    shards_skipped: it.shards_skipped as u64,
+                    active: it.active_vertices,
+                    read_bytes: it.io.bytes_read,
+                    cache_hits: it.cache_hits,
+                    cache_misses: it.cache_misses,
+                    window: window as u64,
+                });
+            }
         }
 
         stats.total_wall = t_run.elapsed();

@@ -34,6 +34,7 @@
 //! | [`engine`]    | the VSW engine (Algorithm 1) + pipelined shard prefetch  |
 //! | [`baselines`] | PSW / ESG / DSW / VSP out-of-core engines + in-memory    |
 //! | [`iomodel`]   | Table II analytic I/O model                              |
+//! | [`obs`]       | metrics registry + Prometheus exposition, flight recorder|
 //! | [`runtime`]   | PJRT loading + execution of the AOT artifacts            |
 //! | [`server`]    | `graphmp serve`: resident engine, sessions, admission    |
 //! | [`cluster`]   | `graphmp partrun`: interval workers + barrier exchange   |
@@ -88,6 +89,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod graph;
 pub mod iomodel;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod sharding;

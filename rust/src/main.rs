@@ -75,6 +75,8 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
         "baseline" => cmd_baseline(&args),
         "bench-compare" => cmd_bench_compare(&args),
         "info" => cmd_info(&args),
+        "top" => cmd_top(&args),
+        "trace-dump" => cmd_trace_dump(&args),
         "datasets" => cmd_datasets(),
         "apps" => cmd_apps(),
         _ => {
@@ -123,6 +125,14 @@ USAGE:
                                             way; GRAPHMP_SIMD=0 equivalent)
                      [--epoch N]            open a historical snapshot epoch
                                             (default: the latest)
+                     [--trace <file>]       flight recorder: append GMTF span
+                                            records (per-iteration + sampled
+                                            per-shard acquire/decode/fold
+                                            timings) to <file>, ring-capped;
+                                            read back with `trace-dump`
+                     [--trace-cap N]        ring capacity in records (def. 4096)
+                     [--trace-sample N]     span every Nth shard (def. 16;
+                                            0 = iteration records only)
                      [--save-values]        persist the fixpoint (epoch-
                                             tagged) for incremental restart
                      [--incremental]        warm-start from saved values;
@@ -153,6 +163,18 @@ USAGE:
                                                 long (0 = never); any
                                                 request on a session
                                                 counts as use
+                     [--engine-ttl-secs N]  evict resident engines idle this
+                                            long (0 = never, the default);
+                                            an engine pinned by an open
+                                            session or an in-flight run is
+                                            never evicted
+                     [--metrics-listen <addr>]  also serve Prometheus text
+                                            over plain HTTP (`GET /metrics`);
+                                            prints `metrics-listening <addr>`
+                                            when bound.  The same text is
+                                            always available as the `metrics`
+                                            protocol verb
+                     [--trace <file>]       flight recorder, as for `run`
                      [engine flags as for `run`]
                      (resident daemon: keeps one engine per dataset loaded
                       and serves epoch-pinned sessions over a line protocol;
@@ -204,8 +226,21 @@ USAGE:
                                           $GITHUB_STEP_SUMMARY)
                      (exit 1 when any bench regressed past the gate)
   graphmp info       --data <dir>
+  graphmp top        <addr> [--interval-ms 1000] [--iters N]
+                     (live daemon dashboard: polls the `metrics` verb and
+                      renders one line per dataset — epoch, iterations,
+                      cache hit %, io-wait fraction, window, resident
+                      bytes — plus a daemon summary line.  --iters 0
+                      (default) refreshes until interrupted)
+  graphmp trace-dump <file.gmtf>
+                     (render a `--trace` flight-recorder log as text:
+                      one line per meta/iter/shard record)
   graphmp datasets
   graphmp apps       (list every vertex program with its value lane)
+
+Observability: every command honours GRAPHMP_OBS=0 (drop all metric and
+trace updates); the daemon exposes Prometheus text via the `metrics` verb
+(`graphmp client --connect <addr> metrics`) and `--metrics-listen`.
 "#,
         apps = apps::app_names()
     )
@@ -368,6 +403,23 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     Ok(cfg)
 }
 
+/// Install the flight recorder when `--trace <path>` was given; returns
+/// whether it was.  The caller pairs this with [`finish_trace`] once the
+/// run is over (the daemon leaves it installed for its lifetime instead).
+fn install_trace(args: &Args) -> Result<bool> {
+    let Some(path) = args.get("trace") else { return Ok(false) };
+    let cap = args.get_usize("trace-cap", 0)?;
+    let sample = args.get_usize("trace-sample", graphmp::obs::trace::DEFAULT_SAMPLE as usize)?;
+    graphmp::obs::trace::install(std::path::Path::new(path), cap, sample as u32)?;
+    Ok(true)
+}
+
+fn finish_trace() {
+    if let Some(path) = graphmp::obs::trace::finish() {
+        eprintln!("trace written -> {}", path.display());
+    }
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let data = DatasetDir::new(args.req("data")?);
     anyhow::ensure!(data.exists(), "{} is not a preprocessed dataset", data.root.display());
@@ -375,6 +427,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(mbps) = args.get("throttle-mbps") {
         io::set_throttle(mbps.parse::<u64>().context("--throttle-mbps")? << 20);
     }
+    install_trace(args)?;
     let cfg = engine_config(args)?;
     let engine_name = cfg.backend.name();
     let engine = VswEngine::open(data.clone(), cfg)?;
@@ -437,6 +490,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             if it.selective_enabled { "[selective]" } else { "" },
         );
     }
+    finish_trace();
     io::set_throttle(0);
     Ok(())
 }
@@ -530,6 +584,7 @@ fn cmd_partrun(args: &Args) -> Result<()> {
         manifest.to_json()
     );
 
+    install_trace(args)?;
     let exe = std::env::current_exe().context("locating the graphmp binary")?;
     let forward = engine_forward_flags(args);
     let (workers, links) = ProcessWorkers::spawn(
@@ -553,14 +608,16 @@ fn cmd_partrun(args: &Args) -> Result<()> {
         std::fs::write(out, text).with_context(|| format!("writing {out}"))?;
         eprintln!("dumped {} values -> {out}", summary.values.len());
     }
+    finish_trace();
     println!(
-        "app={} lane={} engine=partitioned workers={} epoch={} iters={} total={}",
+        "app={} lane={} engine=partitioned workers={} epoch={} iters={} total={} stitch={}",
         summary.app,
         summary.lane,
         summary.workers,
         summary.epoch,
         summary.iters.len(),
         humansize::duration(summary.total_wall),
+        humansize::bytes(summary.stitch_bytes),
     );
     for it in &summary.iters {
         println!(
@@ -703,10 +760,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Server::DEFAULT_SESSION_TTL.as_secs() as usize,
     )?;
     let ttl = (ttl_secs > 0).then(|| std::time::Duration::from_secs(ttl_secs as u64));
-    let srv = Arc::new(Server::new(ecfg, sched)?.with_session_ttl(ttl));
-    // timer-tick eviction: abandoned sessions are reaped even on a daemon
-    // that never receives another request or connection
-    if let Some(t) = ttl {
+    let engine_ttl_secs = args.get_usize("engine-ttl-secs", 0)?;
+    let engine_ttl =
+        (engine_ttl_secs > 0).then(|| std::time::Duration::from_secs(engine_ttl_secs as u64));
+    install_trace(args)?;
+    let srv = Arc::new(
+        Server::new(ecfg, sched)?.with_session_ttl(ttl).with_engine_ttl(engine_ttl),
+    );
+    // timer-tick eviction: abandoned sessions (and idle engines) are
+    // reaped even on a daemon that never receives another request
+    if let Some(t) = [ttl, engine_ttl].into_iter().flatten().min() {
         let _ = srv.spawn_sweeper(t.min(std::time::Duration::from_secs(1)));
     }
     // pre-load the named dataset so the first client doesn't pay the load
@@ -723,6 +786,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("listening {}", listener.local_addr()?);
     use std::io::Write as _;
     std::io::stdout().flush()?;
+    if let Some(maddr) = args.get("metrics-listen") {
+        let ml = std::net::TcpListener::bind(maddr).context("binding --metrics-listen")?;
+        println!("metrics-listening {}", ml.local_addr()?);
+        std::io::stdout().flush()?;
+        let _ = srv.serve_metrics_http(ml);
+    }
     #[cfg(unix)]
     if let Some(sock) = args.get("socket") {
         let path = PathBuf::from(sock);
@@ -739,6 +808,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     #[cfg(not(unix))]
     anyhow::ensure!(args.get("socket").is_none(), "--socket is only available on unix");
     srv.serve_tcp(listener)?;
+    finish_trace();
     eprintln!("serve: shut down");
     Ok(())
 }
@@ -1014,6 +1084,106 @@ fn cmd_info(args: &Args) -> Result<()> {
         println!("epoch:       {} ({} epochs, kind {})", m.current, m.epochs.len(), cur.kind);
         println!("live edges:  {}", cur.num_edges);
         println!("delta shards:{deltas}");
+    }
+    println!("simd:        {}", graphmp::engine::simd::level());
+    println!("uring:       {}", graphmp::storage::uring::resolve_mode().name());
+    Ok(())
+}
+
+fn cmd_trace_dump(args: &Args) -> Result<()> {
+    let path = args
+        .get("trace")
+        .map(str::to_string)
+        .or_else(|| args.positional().get(1).cloned())
+        .context("trace-dump needs a file, e.g. `graphmp trace-dump run.gmtf`")?;
+    print!("{}", graphmp::obs::trace::dump(std::path::Path::new(&path))?);
+    Ok(())
+}
+
+/// `graphmp top <addr>`: poll the daemon's `metrics` verb and render a
+/// compact refresh — one daemon summary line plus one line per dataset.
+fn cmd_top(args: &Args) -> Result<()> {
+    use graphmp::obs::metrics as m;
+    let addr = args
+        .get("connect")
+        .map(str::to_string)
+        .or_else(|| args.positional().get(1).cloned())
+        .context("top needs an address, e.g. `graphmp top 127.0.0.1:4000`")?;
+    let interval =
+        std::time::Duration::from_millis(args.get_usize("interval-ms", 1000)? as u64);
+    let max_ticks = args.get_usize("iters", 0)?; // 0 = refresh forever
+    let mut tick = 0usize;
+    loop {
+        tick += 1;
+        let resp = client_roundtrip(
+            std::net::TcpStream::connect(&addr)
+                .with_context(|| format!("connecting to {addr}"))?,
+            "metrics",
+        )?;
+        if let Some(msg) = &resp.error {
+            bail!("server: {msg}");
+        }
+        let samples: Vec<(String, Vec<(String, String)>, f64)> =
+            resp.payload.iter().filter_map(|l| m::parse_line(l)).collect();
+        let label = |ls: &[(String, String)], key: &str| -> Option<String> {
+            ls.iter().find(|(k, _)| k == key).map(|(_, v)| v.clone())
+        };
+        // sum over every series of a family (collapses labels)
+        let total = |name: &str| -> f64 {
+            samples.iter().filter(|(n, _, _)| n == name).map(|(_, _, v)| v).sum()
+        };
+        // one series of a family, selected by a label value
+        let at = |name: &str, key: &str, val: &str| -> f64 {
+            samples
+                .iter()
+                .find(|(n, ls, _)| n == name && label(ls, key).as_deref() == Some(val))
+                .map(|(_, _, v)| *v)
+                .unwrap_or(0.0)
+        };
+        println!(
+            "[{tick}] {addr}  sessions={} engines={} evicted={} jobs l/h/q={}/{}/{} \
+             requests={} busy={} read={}",
+            total("graphmp_sessions_open") as u64,
+            total("graphmp_engines_resident") as u64,
+            total("graphmp_engines_evicted_total") as u64,
+            at("graphmp_jobs_inflight", "class", "light") as u64,
+            at("graphmp_jobs_inflight", "class", "heavy") as u64,
+            total("graphmp_jobs_queued") as u64,
+            total("graphmp_requests_total") as u64,
+            total("graphmp_admission_busy_total") as u64,
+            humansize::bytes(total("graphmp_io_read_bytes_total") as u64),
+        );
+        let mut datasets: Vec<String> = samples
+            .iter()
+            .filter_map(|(_, ls, _)| label(ls, "dataset"))
+            .collect();
+        datasets.sort();
+        datasets.dedup();
+        for ds in &datasets {
+            let get = |name: &str| at(name, "dataset", ds);
+            let hits = get("graphmp_cache_hits_total");
+            let misses = get("graphmp_cache_misses_total");
+            let hit_pct =
+                if hits + misses > 0.0 { 100.0 * hits / (hits + misses) } else { 0.0 };
+            let io_wait = get("graphmp_engine_io_wait_seconds_total");
+            let compute = get("graphmp_engine_compute_seconds_total");
+            let busy = io_wait + compute;
+            let io_pct = if busy > 0.0 { 100.0 * io_wait / busy } else { 0.0 };
+            println!(
+                "  {ds}: epoch={} iters={} window={} active={:.2}% hit={hit_pct:.0}% \
+                 io-wait={io_pct:.0}% resident={} lent={}",
+                get("graphmp_engine_epoch") as u64,
+                get("graphmp_engine_iterations_total") as u64,
+                get("graphmp_engine_window") as u64,
+                get("graphmp_engine_active_ratio") * 100.0,
+                humansize::bytes(get("graphmp_cache_resident_bytes") as u64),
+                humansize::bytes(get("graphmp_engine_lent_bytes") as u64),
+            );
+        }
+        if max_ticks > 0 && tick >= max_ticks {
+            break;
+        }
+        std::thread::sleep(interval);
     }
     Ok(())
 }

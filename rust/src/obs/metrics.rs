@@ -1,0 +1,591 @@
+//! Process-wide metrics registry with Prometheus text exposition.
+//!
+//! The registry is deliberately tiny: a fixed table of *descriptors*
+//! (name, help, type) defined at compile time, and per-(metric, label
+//! set) *series* created lazily on first touch.  Descriptors fix the
+//! exposition order, so the rendered text is stable enough to golden-test
+//! (`tests/obs_exposition.rs`).
+//!
+//! Hot-path cost: one relaxed atomic load for the enabled check, one
+//! `Mutex` lock over a short `Vec` scan to resolve the series (callers on
+//! per-iteration paths touch a handful of series per iteration, not per
+//! edge), then relaxed atomic adds/stores.  Histogram sums are f64 bits
+//! in an `AtomicU64` updated by a CAS loop.
+//!
+//! Two update idioms are used at the seams:
+//!
+//! * **push** — code that already computes a delta calls [`counter_add`]
+//!   / [`observe_secs`] (per-iteration engine stats, barrier timings,
+//!   admission rejections);
+//! * **mirror** — subsystems that keep their own monotonic atomics
+//!   (`ShardCache` stats, `uring` counts, `storage::io` totals) are
+//!   copied in with [`counter_to`], a `fetch_max` so the exposition stays
+//!   monotonic no matter how many engines share a family.
+//!
+//! `GRAPHMP_OBS=0` disables every update at startup; [`set_enabled`]
+//! flips the same flag at runtime (the overhead bench measures both modes
+//! in one process, and the conformance suite proves bit-invisibility).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Exposition content type (what a real Prometheus scraper expects).
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+/// Shared latency ladder (seconds) for every histogram family.
+pub const LATENCY_BUCKETS: &[f64] = &[0.001, 0.005, 0.02, 0.1, 0.5, 2.0, 10.0];
+
+/// Metric kind, rendered as the `# TYPE` line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+/// How the raw `AtomicU64` backing a series is interpreted at render time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Unit {
+    /// Plain integer count / bytes.
+    Int,
+    /// Accumulated nanoseconds, rendered as seconds.
+    SecondsFromNanos,
+    /// f64 bit pattern (gauges like active-ratio).
+    Float,
+}
+
+struct Descriptor {
+    name: &'static str,
+    help: &'static str,
+    kind: Kind,
+    unit: Unit,
+}
+
+macro_rules! desc {
+    ($name:literal, $kind:ident, $unit:ident, $help:literal) => {
+        Descriptor { name: $name, help: $help, kind: Kind::$kind, unit: Unit::$unit }
+    };
+}
+
+/// Every metric family this crate exports, in exposition order.  Adding a
+/// family here is the *only* registration step; the golden exposition
+/// test pins this table.
+const DESCRIPTORS: &[Descriptor] = &[
+    desc!("graphmp_io_read_bytes_total", Counter, Int, "Bytes read from storage (real files)"),
+    desc!("graphmp_io_written_bytes_total", Counter, Int, "Bytes written to storage (real files)"),
+    desc!("graphmp_io_read_ops_total", Counter, Int, "Storage read operations"),
+    desc!("graphmp_io_write_ops_total", Counter, Int, "Storage write operations"),
+    desc!(
+        "graphmp_io_throttle_stall_seconds_total",
+        Counter,
+        SecondsFromNanos,
+        "Time spent sleeping in the disk-throttle model"
+    ),
+    desc!("graphmp_cache_hits_total", Counter, Int, "Shard cache hits"),
+    desc!("graphmp_cache_misses_total", Counter, Int, "Shard cache misses"),
+    desc!("graphmp_cache_evictions_total", Counter, Int, "Shards evicted from the cache"),
+    desc!(
+        "graphmp_cache_invalidations_total",
+        Counter,
+        Int,
+        "Cached shards invalidated by epoch refresh"
+    ),
+    desc!("graphmp_cache_resident_bytes", Gauge, Int, "Bytes currently resident in the shard cache"),
+    desc!("graphmp_engine_iterations_total", Counter, Int, "VSW iterations executed"),
+    desc!(
+        "graphmp_engine_io_wait_seconds_total",
+        Counter,
+        SecondsFromNanos,
+        "Time the compute side waited on shard I/O"
+    ),
+    desc!(
+        "graphmp_engine_compute_seconds_total",
+        Counter,
+        SecondsFromNanos,
+        "Time spent in gather/apply compute"
+    ),
+    desc!(
+        "graphmp_engine_decode_seconds_total",
+        Counter,
+        SecondsFromNanos,
+        "Time spent decoding / decompressing shard payloads"
+    ),
+    desc!("graphmp_engine_active_ratio", Gauge, Float, "Active-vertex ratio of the last iteration"),
+    desc!("graphmp_engine_window", Gauge, Int, "Prefetch window planned by the I/O governor"),
+    desc!("graphmp_engine_lent_bytes", Gauge, Int, "Cache bytes lent to the prefetcher"),
+    desc!("graphmp_engine_epoch", Gauge, Int, "Epoch the engine last iterated on"),
+    desc!("graphmp_iter_seconds", Histogram, Float, "Wall time per VSW iteration"),
+    desc!(
+        "graphmp_uring_direct_reads_total",
+        Counter,
+        Int,
+        "Shard reads served by the O_DIRECT submission ring"
+    ),
+    desc!(
+        "graphmp_uring_fallback_reads_total",
+        Counter,
+        Int,
+        "Shard reads that fell back to buffered I/O"
+    ),
+    desc!("graphmp_uring_queue_depth", Gauge, Int, "Submission-ring queue depth (last planned)"),
+    desc!("graphmp_sessions_open", Gauge, Int, "Open daemon sessions"),
+    desc!("graphmp_engines_resident", Gauge, Int, "Resident VswEngine instances in the daemon"),
+    desc!("graphmp_engines_evicted_total", Counter, Int, "Idle engines evicted by --engine-ttl-secs"),
+    desc!("graphmp_requests_total", Counter, Int, "Daemon requests dispatched, by verb"),
+    desc!(
+        "graphmp_admission_busy_total",
+        Counter,
+        Int,
+        "Requests rejected with err busy by admission control"
+    ),
+    desc!("graphmp_jobs_inflight", Gauge, Int, "Admitted jobs currently running, by class"),
+    desc!("graphmp_jobs_queued", Gauge, Int, "Jobs waiting for an admission slot"),
+    desc!(
+        "graphmp_barrier_seconds",
+        Histogram,
+        Float,
+        "Partition coordinator post-all/receive-all barrier latency"
+    ),
+    desc!(
+        "graphmp_barrier_delta_lines_total",
+        Counter,
+        Int,
+        "Delta lines exchanged across partition barriers"
+    ),
+    desc!("graphmp_part_stitch_bytes", Gauge, Int, "Coordinator stitch-buffer bytes (high water)"),
+    desc!("graphmp_trace_records_total", Counter, Int, "Flight-recorder records written"),
+    desc!("graphmp_trace_dropped_total", Counter, Int, "Flight-recorder records dropped by the ring cap"),
+    desc!("graphmp_build_info", Gauge, Int, "Build/runtime capabilities (value is always 1)"),
+];
+
+/// One (metric, label set) time series.
+struct Series {
+    /// Label pairs exactly as registered, used for rendering and lookup.
+    labels: Vec<(String, String)>,
+    /// Counter / gauge cell, interpreted per the family's [`Unit`].
+    value: AtomicU64,
+    /// Histogram-only: one non-cumulative count per bucket + overflow.
+    buckets: Vec<AtomicU64>,
+    /// Histogram-only: f64 bits of the observation sum.
+    sum_bits: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Series {
+    fn new(labels: Vec<(String, String)>, histogram: bool) -> Self {
+        let nb = if histogram { LATENCY_BUCKETS.len() + 1 } else { 0 };
+        Series {
+            labels,
+            value: AtomicU64::new(0),
+            buckets: (0..nb).map(|_| AtomicU64::new(0)).collect(),
+            sum_bits: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    fn label_text(&self, extra: Option<(&str, &str)>) -> String {
+        if self.labels.is_empty() && extra.is_none() {
+            return String::new();
+        }
+        let mut out = String::from("{");
+        let mut first = true;
+        for (k, v) in self.labels.iter().map(|(k, v)| (k.as_str(), v.as_str())).chain(extra) {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(k);
+            out.push_str("=\"");
+            for c in v.chars() {
+                match c {
+                    '\\' => out.push_str("\\\\"),
+                    '"' => out.push_str("\\\""),
+                    '\n' => out.push_str("\\n"),
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+        }
+        out.push('}');
+        out
+    }
+}
+
+struct Family {
+    desc: &'static Descriptor,
+    series: Mutex<Vec<Arc<Series>>>,
+}
+
+struct Registry {
+    families: Vec<Family>,
+}
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| Registry {
+        families: DESCRIPTORS
+            .iter()
+            .map(|d| Family { desc: d, series: Mutex::new(Vec::new()) })
+            .collect(),
+    })
+}
+
+fn enabled_flag() -> &'static AtomicBool {
+    static FLAG: OnceLock<AtomicBool> = OnceLock::new();
+    FLAG.get_or_init(|| {
+        let on = std::env::var("GRAPHMP_OBS").map(|v| v != "0").unwrap_or(true);
+        AtomicBool::new(on)
+    })
+}
+
+/// Whether updates are recorded.  Defaults to on; `GRAPHMP_OBS=0` in the
+/// environment starts the process with the registry disabled.
+pub fn enabled() -> bool {
+    enabled_flag().load(Ordering::Relaxed)
+}
+
+/// Runtime override of the `GRAPHMP_OBS` switch (the overhead bench
+/// toggles this between warm runs inside one process).
+pub fn set_enabled(on: bool) {
+    enabled_flag().store(on, Ordering::Relaxed);
+}
+
+fn series(name: &str, labels: &[(&str, &str)]) -> Option<Arc<Series>> {
+    let fam = registry().families.iter().find(|f| f.desc.name == name)?;
+    let mut vec = fam.series.lock().unwrap();
+    if let Some(s) = vec.iter().find(|s| {
+        s.labels.len() == labels.len()
+            && s.labels.iter().zip(labels).all(|((k, v), (lk, lv))| k == lk && v == lv)
+    }) {
+        return Some(Arc::clone(s));
+    }
+    let owned = labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    let s = Arc::new(Series::new(owned, fam.desc.kind == Kind::Histogram));
+    vec.push(Arc::clone(&s));
+    Some(s)
+}
+
+/// Add `delta` to a counter.  For `*_seconds_total` families the delta is
+/// in nanoseconds.  No-op when disabled or the name is unknown.
+pub fn counter_add(name: &str, labels: &[(&str, &str)], delta: u64) {
+    if !enabled() || delta == 0 {
+        return;
+    }
+    if let Some(s) = series(name, labels) {
+        s.value.fetch_add(delta, Ordering::Relaxed);
+    }
+}
+
+/// Raise a counter to an externally-tracked monotonic `total` (mirror
+/// idiom — `fetch_max`, so repeated snapshots and multiple reporters can
+/// never move the exposition backwards).
+pub fn counter_to(name: &str, labels: &[(&str, &str)], total: u64) {
+    if !enabled() {
+        return;
+    }
+    if let Some(s) = series(name, labels) {
+        s.value.fetch_max(total, Ordering::Relaxed);
+    }
+}
+
+/// Set an integer gauge.
+pub fn gauge_set(name: &str, labels: &[(&str, &str)], v: u64) {
+    if !enabled() {
+        return;
+    }
+    if let Some(s) = series(name, labels) {
+        s.value.store(v, Ordering::Relaxed);
+    }
+}
+
+/// Set a float gauge (families declared with a float unit).
+pub fn gauge_set_f64(name: &str, labels: &[(&str, &str)], v: f64) {
+    if !enabled() {
+        return;
+    }
+    if let Some(s) = series(name, labels) {
+        s.value.store(v.to_bits(), Ordering::Relaxed);
+    }
+}
+
+fn f64_fetch_add(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Record one observation (seconds) into a histogram family.
+pub fn observe_secs(name: &str, labels: &[(&str, &str)], secs: f64) {
+    if !enabled() {
+        return;
+    }
+    if let Some(s) = series(name, labels) {
+        let idx = LATENCY_BUCKETS
+            .iter()
+            .position(|&le| secs <= le)
+            .unwrap_or(LATENCY_BUCKETS.len());
+        s.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        s.count.fetch_add(1, Ordering::Relaxed);
+        f64_fetch_add(&s.sum_bits, secs);
+    }
+}
+
+fn fmt_value(unit: Unit, raw: u64) -> String {
+    match unit {
+        Unit::Int => raw.to_string(),
+        Unit::SecondsFromNanos => format!("{}", raw as f64 / 1e9),
+        Unit::Float => format!("{}", f64::from_bits(raw)),
+    }
+}
+
+/// Pull-collect subsystems that keep their own global atomics, so a
+/// scrape sees current totals without any hot-path double accounting.
+fn collect_pulls() {
+    let io = crate::storage::io::snapshot();
+    counter_to("graphmp_io_read_bytes_total", &[], io.bytes_read);
+    counter_to("graphmp_io_written_bytes_total", &[], io.bytes_written);
+    counter_to("graphmp_io_read_ops_total", &[], io.read_ops);
+    counter_to("graphmp_io_write_ops_total", &[], io.write_ops);
+    counter_to("graphmp_io_throttle_stall_seconds_total", &[], io.throttle_ns);
+    let (records, dropped) = crate::obs::trace::totals();
+    counter_to("graphmp_trace_records_total", &[], records);
+    counter_to("graphmp_trace_dropped_total", &[], dropped);
+    let simd = crate::engine::simd::level();
+    let uring = crate::storage::uring::resolve_mode().name();
+    gauge_set("graphmp_build_info", &[("simd", simd), ("uring", uring)], 1);
+}
+
+/// Render the full registry as Prometheus text format (v0.0.4).  Every
+/// family gets its `# HELP` / `# TYPE` header even when no series exist
+/// yet, so the exposed schema is stable; series render in creation order.
+pub fn render() -> String {
+    if enabled() {
+        collect_pulls();
+    }
+    let mut out = String::with_capacity(4096);
+    for fam in &registry().families {
+        let d = fam.desc;
+        out.push_str("# HELP ");
+        out.push_str(d.name);
+        out.push(' ');
+        out.push_str(d.help);
+        out.push('\n');
+        out.push_str("# TYPE ");
+        out.push_str(d.name);
+        out.push(' ');
+        out.push_str(d.kind.as_str());
+        out.push('\n');
+        let vec = fam.series.lock().unwrap();
+        for s in vec.iter() {
+            if d.kind == Kind::Histogram {
+                let mut cum = 0u64;
+                for (i, b) in s.buckets.iter().enumerate() {
+                    cum += b.load(Ordering::Relaxed);
+                    let le = if i < LATENCY_BUCKETS.len() {
+                        format!("{}", LATENCY_BUCKETS[i])
+                    } else {
+                        "+Inf".to_string()
+                    };
+                    out.push_str(d.name);
+                    out.push_str("_bucket");
+                    out.push_str(&s.label_text(Some(("le", le.as_str()))));
+                    out.push(' ');
+                    out.push_str(&cum.to_string());
+                    out.push('\n');
+                }
+                let sum = f64::from_bits(s.sum_bits.load(Ordering::Relaxed));
+                out.push_str(d.name);
+                out.push_str("_sum");
+                out.push_str(&s.label_text(None));
+                out.push(' ');
+                out.push_str(&format!("{sum}"));
+                out.push('\n');
+                out.push_str(d.name);
+                out.push_str("_count");
+                out.push_str(&s.label_text(None));
+                out.push(' ');
+                out.push_str(&s.count.load(Ordering::Relaxed).to_string());
+                out.push('\n');
+            } else {
+                out.push_str(d.name);
+                out.push_str(&s.label_text(None));
+                out.push(' ');
+                out.push_str(&fmt_value(d.unit, s.value.load(Ordering::Relaxed)));
+                out.push('\n');
+            }
+        }
+    }
+    out
+}
+
+/// Parse one exposition sample line into `(name, labels, value)`.
+/// Returns `None` for comments, blank lines, and malformed input.  Used
+/// by `graphmp top` and the format tests.
+pub fn parse_line(line: &str) -> Option<(String, Vec<(String, String)>, f64)> {
+    let line = line.trim();
+    if line.is_empty() || line.starts_with('#') {
+        return None;
+    }
+    let (name_part, rest) = if let Some(open) = line.find('{') {
+        let close = line.rfind('}')?;
+        if close < open {
+            return None;
+        }
+        (&line[..open], Some((&line[open + 1..close], &line[close + 1..])))
+    } else {
+        let sp = line.find(' ')?;
+        (&line[..sp], None)
+    };
+    let mut labels = Vec::new();
+    let value_str = match rest {
+        Some((body, tail)) => {
+            let mut chars = body.chars().peekable();
+            while chars.peek().is_some() {
+                let key: String = chars.by_ref().take_while(|&c| c != '=').collect();
+                if chars.next() != Some('"') {
+                    return None;
+                }
+                let mut val = String::new();
+                loop {
+                    match chars.next()? {
+                        '\\' => match chars.next()? {
+                            'n' => val.push('\n'),
+                            c => val.push(c),
+                        },
+                        '"' => break,
+                        c => val.push(c),
+                    }
+                }
+                if key.is_empty() {
+                    return None;
+                }
+                labels.push((key, val));
+                if chars.peek() == Some(&',') {
+                    chars.next();
+                }
+            }
+            tail.trim()
+        }
+        None => line[name_part.len()..].trim(),
+    };
+    let value = if value_str == "+Inf" {
+        f64::INFINITY
+    } else {
+        value_str.parse::<f64>().ok()?
+    };
+    if name_part.is_empty() {
+        return None;
+    }
+    Some((name_part.to_string(), labels, value))
+}
+
+/// Approximate resident bytes held by the registry (descriptor table,
+/// series cells, label strings) — charged into `RunStats::memory_bytes`.
+pub fn overhead_bytes() -> u64 {
+    let mut total = (DESCRIPTORS.len() * std::mem::size_of::<Family>()) as u64;
+    for fam in &registry().families {
+        let vec = fam.series.lock().unwrap();
+        for s in vec.iter() {
+            total += std::mem::size_of::<Series>() as u64;
+            total += (s.buckets.len() * 8) as u64;
+            for (k, v) in &s.labels {
+                total += (k.len() + v.len()) as u64;
+            }
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The enabled flag is process-global; serialize tests that flip it.
+    static GATE: Mutex<()> = Mutex::new(());
+
+    fn gate() -> std::sync::MutexGuard<'static, ()> {
+        GATE.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn counters_accumulate_and_mirror_is_monotonic() {
+        let _g = gate();
+        set_enabled(true);
+        counter_add("graphmp_barrier_delta_lines_total", &[("dataset", "unit-a")], 3);
+        counter_add("graphmp_barrier_delta_lines_total", &[("dataset", "unit-a")], 4);
+        counter_to("graphmp_cache_hits_total", &[("dataset", "unit-a")], 10);
+        counter_to("graphmp_cache_hits_total", &[("dataset", "unit-a")], 7);
+        let text = render();
+        assert!(
+            text.contains("graphmp_barrier_delta_lines_total{dataset=\"unit-a\"} 7"),
+            "{text}"
+        );
+        assert!(text.contains("graphmp_cache_hits_total{dataset=\"unit-a\"} 10"), "{text}");
+    }
+
+    #[test]
+    fn disabled_updates_are_dropped() {
+        let _g = gate();
+        set_enabled(true);
+        counter_add("graphmp_admission_busy_total", &[("dataset", "unit-b")], 1);
+        set_enabled(false);
+        counter_add("graphmp_admission_busy_total", &[("dataset", "unit-b")], 99);
+        set_enabled(true);
+        let text = render();
+        assert!(text.contains("graphmp_admission_busy_total{dataset=\"unit-b\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let _g = gate();
+        set_enabled(true);
+        let l = &[("dataset", "unit-h")];
+        observe_secs("graphmp_iter_seconds", l, 0.0005);
+        observe_secs("graphmp_iter_seconds", l, 0.01);
+        observe_secs("graphmp_iter_seconds", l, 100.0);
+        let text = render();
+        assert!(
+            text.contains("graphmp_iter_seconds_bucket{dataset=\"unit-h\",le=\"0.001\"} 1"),
+            "{text}"
+        );
+        assert!(
+            text.contains("graphmp_iter_seconds_bucket{dataset=\"unit-h\",le=\"0.02\"} 2"),
+            "{text}"
+        );
+        assert!(
+            text.contains("graphmp_iter_seconds_bucket{dataset=\"unit-h\",le=\"+Inf\"} 3"),
+            "{text}"
+        );
+        assert!(text.contains("graphmp_iter_seconds_count{dataset=\"unit-h\"} 3"), "{text}");
+    }
+
+    #[test]
+    fn parse_line_roundtrips() {
+        let (name, labels, v) =
+            parse_line("graphmp_cache_hits_total{dataset=\"tiny.gmp\"} 42").unwrap();
+        assert_eq!(name, "graphmp_cache_hits_total");
+        assert_eq!(labels, vec![("dataset".to_string(), "tiny.gmp".to_string())]);
+        assert_eq!(v, 42.0);
+        let (name, labels, v) = parse_line("graphmp_sessions_open 2").unwrap();
+        assert_eq!(name, "graphmp_sessions_open");
+        assert!(labels.is_empty());
+        assert_eq!(v, 2.0);
+        assert!(parse_line("# TYPE x counter").is_none());
+        assert!(parse_line("").is_none());
+    }
+}

@@ -1,0 +1,27 @@
+//! First-class observability: a zero-dependency metrics registry with
+//! Prometheus text exposition ([`metrics`]) and a bounded binary flight
+//! recorder ([`trace`]).
+//!
+//! Both layers are designed to stay on in production:
+//!
+//! * every hot-path update is a handful of relaxed atomic ops behind an
+//!   `enabled()` check (`GRAPHMP_OBS=0` turns the whole subsystem into
+//!   no-ops, and [`metrics::set_enabled`] flips it at runtime so the
+//!   overhead bench can compare both modes in one process);
+//! * nothing here may change results — the conformance suite reruns the
+//!   engines with metrics + tracing fully enabled and asserts the value
+//!   dumps are byte-identical (`tests/obs_conformance.rs`).
+//!
+//! The registry is scraped three ways: the `metrics` verb on the serve
+//! line protocol, `graphmp client metrics`, and the daemon's optional
+//! `--metrics-listen` plain-HTTP `GET /metrics` listener.  `graphmp top`
+//! polls the same exposition and renders a live per-dataset view.
+
+pub mod metrics;
+pub mod trace;
+
+/// Total resident overhead of the observability layer, charged into
+/// `RunStats::memory_bytes` so Fig-11-style accounting stays honest.
+pub fn overhead_bytes() -> u64 {
+    metrics::overhead_bytes() + trace::overhead_bytes()
+}

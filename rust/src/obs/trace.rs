@@ -1,0 +1,449 @@
+//! Flight recorder: a bounded binary log of per-run span records (GMTF).
+//!
+//! `--trace <path>` on `run`/`partrun`/`serve` installs a process-global
+//! recorder.  The engine appends one [`TraceRecord::Iter`] per VSW
+//! iteration (same fields as `IterStats`) and, at a configurable sample
+//! rate, one [`TraceRecord::Shard`] per shard with the acquire → decode →
+//! fold timing split.  Records are epoch/app-tagged by a
+//! [`TraceRecord::Meta`] written at each run start.
+//!
+//! The recorder is ring-buffer capped so it can stay on in production:
+//! the newest `cap` records are always retained, the file is appended per
+//! record and rewritten from the ring once it grows past `2 × cap`
+//! records, so the on-disk log is bounded at roughly twice the ring.
+//! `graphmp trace-dump <path>` renders the log as text.
+//!
+//! ## GMTF format (version 1)
+//!
+//! ```text
+//! header:  "GMTF" magic · u32 LE version
+//! record:  u8 kind · payload
+//!   kind 1 (meta):  u64 epoch · u32 sample · u32 app_len · app bytes
+//!   kind 2 (iter):  13 × u64 LE   (see TraceRecord::Iter field order)
+//!   kind 3 (shard):  5 × u64 LE   (iter, shard, acquire_ns, decode_ns, fold_ns)
+//! ```
+//!
+//! All integers are little-endian.  Unknown kinds abort the decode, so
+//! version bumps must change `VERSION`.
+
+use crate::Result;
+use anyhow::{bail, Context};
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// File magic.
+pub const MAGIC: [u8; 4] = *b"GMTF";
+/// Format version written to the header.
+pub const VERSION: u32 = 1;
+/// Default ring capacity (records retained).
+pub const DEFAULT_CAP: usize = 4096;
+/// Default shard sample rate: every Nth shard gets a span record.
+pub const DEFAULT_SAMPLE: u32 = 16;
+
+/// One record in the flight-recorder log.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceRecord {
+    /// Run start: which app, on which epoch, at what shard sample rate.
+    Meta { app: String, epoch: u64, sample: u32 },
+    /// One VSW iteration (mirror of `IterStats`, nanosecond clocks).
+    Iter {
+        epoch: u64,
+        iter: u64,
+        wall_ns: u64,
+        io_wait_ns: u64,
+        compute_ns: u64,
+        decode_ns: u64,
+        shards_processed: u64,
+        shards_skipped: u64,
+        active: u64,
+        read_bytes: u64,
+        cache_hits: u64,
+        cache_misses: u64,
+        window: u64,
+    },
+    /// Sampled per-shard span: acquire → decode → fold timing split.
+    Shard { iter: u64, shard: u64, acquire_ns: u64, decode_ns: u64, fold_ns: u64 },
+}
+
+struct Recorder {
+    path: PathBuf,
+    file: File,
+    cap: usize,
+    ring: VecDeque<TraceRecord>,
+    /// Records currently in the file; rewritten from the ring at `2*cap`.
+    file_records: usize,
+}
+
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+static SAMPLE: AtomicU32 = AtomicU32::new(0);
+static CAP: AtomicU64 = AtomicU64::new(0);
+static TOTAL: AtomicU64 = AtomicU64::new(0);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static RECORDER: Mutex<Option<Recorder>> = Mutex::new(None);
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn encode(rec: &TraceRecord, buf: &mut Vec<u8>) {
+    match rec {
+        TraceRecord::Meta { app, epoch, sample } => {
+            buf.push(1);
+            put_u64(buf, *epoch);
+            put_u32(buf, *sample);
+            put_u32(buf, app.len() as u32);
+            buf.extend_from_slice(app.as_bytes());
+        }
+        TraceRecord::Iter {
+            epoch,
+            iter,
+            wall_ns,
+            io_wait_ns,
+            compute_ns,
+            decode_ns,
+            shards_processed,
+            shards_skipped,
+            active,
+            read_bytes,
+            cache_hits,
+            cache_misses,
+            window,
+        } => {
+            buf.push(2);
+            for v in [
+                epoch,
+                iter,
+                wall_ns,
+                io_wait_ns,
+                compute_ns,
+                decode_ns,
+                shards_processed,
+                shards_skipped,
+                active,
+                read_bytes,
+                cache_hits,
+                cache_misses,
+                window,
+            ] {
+                put_u64(buf, *v);
+            }
+        }
+        TraceRecord::Shard { iter, shard, acquire_ns, decode_ns, fold_ns } => {
+            buf.push(3);
+            for v in [iter, shard, acquire_ns, decode_ns, fold_ns] {
+                put_u64(buf, *v);
+            }
+        }
+    }
+}
+
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl Cursor<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        if self.pos + n > self.data.len() {
+            bail!("truncated trace record at byte {}", self.pos);
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+fn decode(cur: &mut Cursor<'_>) -> Result<TraceRecord> {
+    let kind = cur.take(1)?[0];
+    match kind {
+        1 => {
+            let epoch = cur.u64()?;
+            let sample = cur.u32()?;
+            let len = cur.u32()? as usize;
+            let app = std::str::from_utf8(cur.take(len)?)
+                .context("meta record app name is not UTF-8")?
+                .to_string();
+            Ok(TraceRecord::Meta { app, epoch, sample })
+        }
+        2 => Ok(TraceRecord::Iter {
+            epoch: cur.u64()?,
+            iter: cur.u64()?,
+            wall_ns: cur.u64()?,
+            io_wait_ns: cur.u64()?,
+            compute_ns: cur.u64()?,
+            decode_ns: cur.u64()?,
+            shards_processed: cur.u64()?,
+            shards_skipped: cur.u64()?,
+            active: cur.u64()?,
+            read_bytes: cur.u64()?,
+            cache_hits: cur.u64()?,
+            cache_misses: cur.u64()?,
+            window: cur.u64()?,
+        }),
+        3 => Ok(TraceRecord::Shard {
+            iter: cur.u64()?,
+            shard: cur.u64()?,
+            acquire_ns: cur.u64()?,
+            decode_ns: cur.u64()?,
+            fold_ns: cur.u64()?,
+        }),
+        k => bail!("unknown trace record kind {k}"),
+    }
+}
+
+fn write_header(file: &mut File) -> Result<()> {
+    file.write_all(&MAGIC)?;
+    file.write_all(&VERSION.to_le_bytes())?;
+    Ok(())
+}
+
+/// Install the flight recorder at `path`.  `cap` bounds the ring (0 uses
+/// [`DEFAULT_CAP`]); `sample` is the shard sample rate (0 disables shard
+/// spans).  Replaces any previously installed recorder.
+pub fn install(path: &Path, cap: usize, sample: u32) -> Result<()> {
+    let cap = if cap == 0 { DEFAULT_CAP } else { cap };
+    let mut file = File::create(path)
+        .with_context(|| format!("creating trace file {}", path.display()))?;
+    write_header(&mut file)?;
+    let rec = Recorder {
+        path: path.to_path_buf(),
+        file,
+        cap,
+        ring: VecDeque::with_capacity(cap.min(1 << 16)),
+        file_records: 0,
+    };
+    *RECORDER.lock().unwrap() = Some(rec);
+    SAMPLE.store(sample, Ordering::Relaxed);
+    CAP.store(cap as u64, Ordering::Relaxed);
+    INSTALLED.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Whether a recorder is installed (cheap; checked before building records).
+pub fn installed() -> bool {
+    INSTALLED.load(Ordering::Relaxed)
+}
+
+/// Whether shard `shard` should get a span record this run.
+pub fn shard_sampled(shard: u64) -> bool {
+    if !installed() || !crate::obs::metrics::enabled() {
+        return false;
+    }
+    let s = SAMPLE.load(Ordering::Relaxed);
+    s > 0 && shard % s as u64 == 0
+}
+
+/// Append one record.  No-op unless installed and `GRAPHMP_OBS` is on.
+pub fn record(rec: TraceRecord) {
+    if !installed() || !crate::obs::metrics::enabled() {
+        return;
+    }
+    let mut guard = RECORDER.lock().unwrap();
+    let Some(r) = guard.as_mut() else { return };
+    if r.ring.len() >= r.cap {
+        r.ring.pop_front();
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+    }
+    let mut buf = Vec::with_capacity(128);
+    encode(&rec, &mut buf);
+    r.ring.push_back(rec);
+    TOTAL.fetch_add(1, Ordering::Relaxed);
+    if r.file.write_all(&buf).is_ok() {
+        r.file_records += 1;
+    }
+    if r.file_records >= r.cap * 2 {
+        // Rewrite the file from the ring so the on-disk log stays bounded.
+        if let Ok(mut f) = File::create(&r.path) {
+            if write_header(&mut f).is_ok() {
+                let mut all = Vec::with_capacity(r.ring.len() * 64);
+                for rec in &r.ring {
+                    encode(rec, &mut all);
+                }
+                if f.write_all(&all).is_ok() {
+                    r.file = f;
+                    r.file_records = r.ring.len();
+                }
+            }
+        }
+    }
+}
+
+/// Convenience: tag the start of a run (app + epoch) in the log.
+pub fn record_run_start(app: &str, epoch: u64) {
+    if !installed() {
+        return;
+    }
+    let sample = SAMPLE.load(Ordering::Relaxed);
+    record(TraceRecord::Meta { app: app.to_string(), epoch, sample });
+}
+
+/// Flush and uninstall the recorder, returning its path if one was live.
+pub fn finish() -> Option<PathBuf> {
+    let mut guard = RECORDER.lock().unwrap();
+    let rec = guard.take()?;
+    INSTALLED.store(false, Ordering::Relaxed);
+    let _ = rec.file.sync_all();
+    Some(rec.path)
+}
+
+/// `(records written, records dropped by the ring cap)` — pull-collected
+/// into the metrics registry.
+pub fn totals() -> (u64, u64) {
+    (TOTAL.load(Ordering::Relaxed), DROPPED.load(Ordering::Relaxed))
+}
+
+/// Approximate resident bytes of the trace ring.
+pub fn overhead_bytes() -> u64 {
+    if !installed() {
+        return 0;
+    }
+    CAP.load(Ordering::Relaxed) * (std::mem::size_of::<TraceRecord>() as u64 + 16)
+}
+
+/// Decode every record in a GMTF file.
+pub fn read_records(path: &Path) -> Result<Vec<TraceRecord>> {
+    let data = std::fs::read(path)
+        .with_context(|| format!("reading trace file {}", path.display()))?;
+    if data.len() < 8 || data[..4] != MAGIC {
+        bail!("{} is not a GMTF trace (bad magic)", path.display());
+    }
+    let version = u32::from_le_bytes(data[4..8].try_into().unwrap());
+    if version != VERSION {
+        bail!("unsupported GMTF version {version} (expected {VERSION})");
+    }
+    let mut cur = Cursor { data: &data, pos: 8 };
+    let mut out = Vec::new();
+    while cur.pos < cur.data.len() {
+        out.push(decode(&mut cur)?);
+    }
+    Ok(out)
+}
+
+fn ms(ns: u64) -> f64 {
+    ns as f64 / 1e6
+}
+
+/// Render one record as a text line (`graphmp trace-dump` output).
+pub fn format_record(rec: &TraceRecord) -> String {
+    match rec {
+        TraceRecord::Meta { app, epoch, sample } => {
+            format!("meta app={app} epoch={epoch} sample={sample}")
+        }
+        TraceRecord::Iter {
+            epoch,
+            iter,
+            wall_ns,
+            io_wait_ns,
+            compute_ns,
+            decode_ns,
+            shards_processed,
+            shards_skipped,
+            active,
+            read_bytes,
+            cache_hits,
+            cache_misses,
+            window,
+        } => format!(
+            "iter epoch={epoch} iter={iter} wall_ms={:.3} io_wait_ms={:.3} compute_ms={:.3} \
+             decode_ms={:.3} shards={shards_processed} skipped={shards_skipped} active={active} \
+             read_bytes={read_bytes} hits={cache_hits} misses={cache_misses} window={window}",
+            ms(*wall_ns),
+            ms(*io_wait_ns),
+            ms(*compute_ns),
+            ms(*decode_ns),
+        ),
+        TraceRecord::Shard { iter, shard, acquire_ns, decode_ns, fold_ns } => format!(
+            "shard iter={iter} shard={shard} acquire_us={:.1} decode_us={:.1} fold_us={:.1}",
+            *acquire_ns as f64 / 1e3,
+            *decode_ns as f64 / 1e3,
+            *fold_ns as f64 / 1e3,
+        ),
+    }
+}
+
+/// Text dump of a whole trace file.
+pub fn dump(path: &Path) -> Result<String> {
+    let recs = read_records(path)?;
+    let mut out = String::new();
+    for r in &recs {
+        out.push_str(&format_record(r));
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(recs: &[TraceRecord]) -> Vec<TraceRecord> {
+        let mut buf = Vec::new();
+        for r in recs {
+            encode(r, &mut buf);
+        }
+        let mut cur = Cursor { data: &buf, pos: 0 };
+        let mut out = Vec::new();
+        while cur.pos < cur.data.len() {
+            out.push(decode(&mut cur).unwrap());
+        }
+        out
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let recs = vec![
+            TraceRecord::Meta { app: "pagerank".into(), epoch: 3, sample: 16 },
+            TraceRecord::Iter {
+                epoch: 3,
+                iter: 0,
+                wall_ns: 1_234_567,
+                io_wait_ns: 400_000,
+                compute_ns: 800_000,
+                decode_ns: 120_000,
+                shards_processed: 8,
+                shards_skipped: 1,
+                active: 71,
+                read_bytes: 65_536,
+                cache_hits: 2,
+                cache_misses: 6,
+                window: 4,
+            },
+            TraceRecord::Shard {
+                iter: 0,
+                shard: 16,
+                acquire_ns: 52_000,
+                decode_ns: 11_000,
+                fold_ns: 90_000,
+            },
+        ];
+        assert_eq!(roundtrip(&recs), recs);
+    }
+
+    #[test]
+    fn truncated_input_is_an_error() {
+        let mut buf = Vec::new();
+        encode(
+            &TraceRecord::Shard { iter: 0, shard: 1, acquire_ns: 2, decode_ns: 3, fold_ns: 4 },
+            &mut buf,
+        );
+        buf.truncate(buf.len() - 1);
+        let mut cur = Cursor { data: &buf, pos: 0 };
+        assert!(decode(&mut cur).is_err());
+    }
+}

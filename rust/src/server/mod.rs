@@ -36,7 +36,7 @@ use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpListener;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -55,6 +55,9 @@ struct EngineEntry {
     dir: DatasetDir,
     engine: VswEngine,
     ingest_lock: Mutex<()>,
+    /// Server-clock (ms) of the last `engine_entry` resolution, for
+    /// `--engine-ttl-secs` idle eviction.
+    last_used_ms: AtomicU64,
 }
 
 /// Where to poke a blocking accept loop so it re-checks the shutdown
@@ -73,6 +76,10 @@ pub struct Server {
     sched: Scheduler,
     shutdown: AtomicBool,
     wakers: Mutex<Vec<WakeAddr>>,
+    /// Idle-*engine* TTL (`--engine-ttl-secs`; `None` = never evict).
+    engine_ttl: Option<Duration>,
+    /// Server clock origin for the engine last-used stamps.
+    t0: Instant,
 }
 
 impl Server {
@@ -93,6 +100,8 @@ impl Server {
             sched: Scheduler::new(sched),
             shutdown: AtomicBool::new(false),
             wakers: Mutex::new(Vec::new()),
+            engine_ttl: None,
+            t0: Instant::now(),
         })
     }
 
@@ -108,6 +117,20 @@ impl Server {
         self
     }
 
+    /// Set the idle-*engine* TTL (`--engine-ttl-secs`; `None` = engines
+    /// stay resident forever).  An engine is evicted only when it has
+    /// been unused past the TTL *and* no live session still pins its
+    /// dataset — a pinned snapshot must keep resolving against the same
+    /// resident cache.
+    pub fn with_engine_ttl(mut self, ttl: Option<Duration>) -> Self {
+        self.engine_ttl = ttl;
+        self
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.t0.elapsed().as_millis() as u64
+    }
+
     pub fn is_shutdown(&self) -> bool {
         self.shutdown.load(Ordering::SeqCst)
     }
@@ -119,6 +142,7 @@ impl Server {
         anyhow::ensure!(dir.exists(), "{} is not a preprocessed dataset", dir.root.display());
         let key = std::fs::canonicalize(&dir.root).unwrap_or_else(|_| dir.root.clone());
         if let Some(e) = self.engines.lock().unwrap().get(&key) {
+            e.last_used_ms.store(self.now_ms(), Ordering::Relaxed);
             return Ok(e.clone());
         }
         let _ticket = self.sched.admit(JobClass::Heavy)?;
@@ -126,14 +150,59 @@ impl Server {
         // same dataset waits for this one instead of loading twice
         let mut map = self.engines.lock().unwrap();
         if let Some(e) = map.get(&key) {
+            e.last_used_ms.store(self.now_ms(), Ordering::Relaxed);
             return Ok(e.clone());
         }
         let dir = DatasetDir::new(&key);
         let engine = VswEngine::open(dir.clone(), self.ecfg.clone())
             .with_context(|| format!("opening {}", key.display()))?;
-        let entry = Arc::new(EngineEntry { dir, engine, ingest_lock: Mutex::new(()) });
+        let entry = Arc::new(EngineEntry {
+            dir,
+            engine,
+            ingest_lock: Mutex::new(()),
+            last_used_ms: AtomicU64::new(self.now_ms()),
+        });
         map.insert(key, entry.clone());
         Ok(entry)
+    }
+
+    /// Evict engines idle past `--engine-ttl-secs`.  Runs on every
+    /// dispatch and on the sweeper's timer tick (so eviction needs zero
+    /// further requests).  An engine survives while any clone of its
+    /// entry is in use (a run in flight) or any live session still pins
+    /// its dataset.  Returns the number evicted.
+    pub fn sweep_idle_engines(&self) -> usize {
+        let Some(ttl) = self.engine_ttl else { return 0 };
+        let now = self.now_ms();
+        let ttl_ms = ttl.as_millis() as u64;
+        let mut evicted = 0usize;
+        {
+            let mut map = self.engines.lock().unwrap();
+            map.retain(|_, entry| {
+                let idle =
+                    now.saturating_sub(entry.last_used_ms.load(Ordering::Relaxed)) > ttl_ms;
+                let keep = !idle
+                    || Arc::strong_count(entry) > 1
+                    || self.sessions.references(&entry.dir.root);
+                if !keep {
+                    evicted += 1;
+                }
+                keep
+            });
+        }
+        if evicted > 0 {
+            crate::obs::metrics::counter_add(
+                "graphmp_engines_evicted_total",
+                &[],
+                evicted as u64,
+            );
+            crate::obs::metrics::gauge_set(
+                "graphmp_engines_resident",
+                &[],
+                self.engines.lock().unwrap().len() as u64,
+            );
+        }
+        evicted
     }
 
     /// Handle one request line, producing exactly one response.  Pure
@@ -150,11 +219,22 @@ impl Server {
         }
     }
 
+    /// Verbs counted per-label in `graphmp_requests_total`; anything else
+    /// folds into `verb="unknown"` so a misbehaving client cannot mint
+    /// unbounded label cardinality.
+    const VERBS: &'static [&'static str] = &[
+        "ping", "open", "close", "info", "epoch", "refresh", "stats", "metrics", "run", "value",
+        "degree", "ingest", "watch", "poll", "shutdown",
+    ];
+
     fn dispatch(&self, req: &Request) -> Result<Response> {
+        let verb = if Self::VERBS.contains(&req.cmd.as_str()) { req.cmd.as_str() } else { "unknown" };
+        crate::obs::metrics::counter_add("graphmp_requests_total", &[("verb", verb)], 1);
         // opportunistic idle-session eviction: every request pays one
         // cheap map scan, so an abandoned session outlives its TTL by at
         // most the daemon's idle gap between requests
         self.sessions.sweep_idle();
+        self.sweep_idle_engines();
         match req.cmd.as_str() {
             "ping" => Ok(Response::ok().with("pong", 1)),
             "open" => self.cmd_open(req),
@@ -163,6 +243,7 @@ impl Server {
             "epoch" => self.cmd_epoch(req),
             "refresh" => self.cmd_refresh(req),
             "stats" => Ok(self.cmd_stats()),
+            "metrics" => Ok(self.cmd_metrics()),
             "run" => self.cmd_run(req),
             "value" => self.cmd_value(req),
             "degree" => self.cmd_degree(req),
@@ -235,12 +316,50 @@ impl Server {
     fn cmd_stats(&self) -> Response {
         // deliberately unthrottled: this is how saturation is observed
         let (light, heavy, queued) = self.sched.counts();
+        // aggregate direct-I/O traffic across every resident engine —
+        // until now uring::counts() was computed but invisible here
+        let (mut direct, mut fallback) = (0u64, 0u64);
+        for e in self.engines.lock().unwrap().values() {
+            if let Some((d, f)) = e.engine.direct_counts() {
+                direct += d;
+                fallback += f;
+            }
+        }
         Response::ok()
             .with("sessions", self.sessions.count())
             .with("datasets", self.engines.lock().unwrap().len())
             .with("light", light)
             .with("heavy", heavy)
             .with("queued", queued)
+            .with("simd", crate::engine::simd::level())
+            .with("uring", crate::storage::uring::resolve_mode().name())
+            .with("direct_reads", direct)
+            .with("fallback_reads", fallback)
+    }
+
+    /// The Prometheus exposition with daemon-level gauges refreshed at
+    /// scrape time (sessions, resident engines, admission state).
+    pub fn metrics_text(&self) -> String {
+        use crate::obs::metrics as m;
+        let (light, heavy, queued) = self.sched.counts();
+        m::gauge_set("graphmp_sessions_open", &[], self.sessions.count() as u64);
+        m::gauge_set(
+            "graphmp_engines_resident",
+            &[],
+            self.engines.lock().unwrap().len() as u64,
+        );
+        m::gauge_set("graphmp_jobs_inflight", &[("class", "light")], light as u64);
+        m::gauge_set("graphmp_jobs_inflight", &[("class", "heavy")], heavy as u64);
+        m::gauge_set("graphmp_jobs_queued", &[], queued as u64);
+        m::render()
+    }
+
+    /// `metrics` verb: the exposition rides the line protocol as raw
+    /// payload lines, so `graphmp client metrics` is a one-shot scrape.
+    fn cmd_metrics(&self) -> Response {
+        let text = self.metrics_text();
+        let lines: Vec<String> = text.lines().map(str::to_string).collect();
+        Response::ok().with("format", "prometheus-0.0.4").with_payload(lines)
     }
 
     /// Per-request engine-config overrides on `run`: `iters=`, `threads=`
@@ -464,10 +583,10 @@ impl Server {
         Ok(())
     }
 
-    /// Background idle-session sweeper: a timer tick that evicts
-    /// TTL-expired sessions even when the daemon receives no further
-    /// requests *or* connections.  Exits once the shutdown flag is up
-    /// (checked each tick, so it lingers at most one `interval`).
+    /// Background idle sweeper: a timer tick that evicts TTL-expired
+    /// sessions *and* idle engines even when the daemon receives no
+    /// further requests or connections.  Exits once the shutdown flag is
+    /// up (checked each tick, so it lingers at most one `interval`).
     pub fn spawn_sweeper(self: &Arc<Self>, interval: Duration) -> std::thread::JoinHandle<()> {
         let srv = self.clone();
         std::thread::spawn(move || loop {
@@ -476,7 +595,71 @@ impl Server {
                 break;
             }
             srv.sessions.sweep_idle();
+            srv.sweep_idle_engines();
         })
+    }
+
+    /// Minimal plain-HTTP endpoint for `--metrics-listen`: any `GET` of
+    /// `/metrics` (or `/`) answers the current exposition, so a stock
+    /// Prometheus scraper attaches without speaking the line protocol.
+    /// The accept loop polls the shutdown flag, so it needs no waker.
+    pub fn serve_metrics_http(
+        self: &Arc<Self>,
+        listener: TcpListener,
+    ) -> std::thread::JoinHandle<()> {
+        listener.set_nonblocking(true).expect("metrics listener nonblocking");
+        let srv = self.clone();
+        std::thread::spawn(move || loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let _ = srv.answer_http(stream);
+                }
+                Err(_) => {
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+            if srv.is_shutdown() {
+                break;
+            }
+        })
+    }
+
+    fn answer_http(&self, stream: std::net::TcpStream) -> std::io::Result<()> {
+        stream.set_nonblocking(false)?;
+        stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+        let mut reader = BufReader::new(stream);
+        let mut request_line = String::new();
+        reader.read_line(&mut request_line)?;
+        // drain the headers up to the blank line (bounded)
+        let mut line = String::new();
+        for _ in 0..128 {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 || line == "\r\n" || line == "\n" {
+                break;
+            }
+        }
+        let mut parts = request_line.split_whitespace();
+        let method = parts.next().unwrap_or("");
+        let path = parts.next().unwrap_or("");
+        let stream = reader.get_mut();
+        if method == "GET" && (path == "/metrics" || path == "/") {
+            let body = self.metrics_text();
+            write!(
+                stream,
+                "HTTP/1.1 200 OK\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+                crate::obs::metrics::CONTENT_TYPE,
+                body.len(),
+                body
+            )?;
+        } else {
+            let body = "not found\n";
+            write!(
+                stream,
+                "HTTP/1.1 404 Not Found\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                body.len(),
+            )?;
+        }
+        stream.flush()
     }
 
     /// Poke every registered listener so its accept loop observes the
@@ -727,6 +910,88 @@ mod tests {
         assert_eq!(srv.sessions.count(), 0, "sweeper tick failed to evict the idle session");
         srv.shutdown.store(true, Ordering::SeqCst);
         sweeper.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir.root);
+    }
+
+    #[test]
+    fn idle_engines_are_evicted_with_zero_further_requests() {
+        let dir = build_dataset("engttl");
+        let data = dir.root.display().to_string();
+        let srv = Arc::new(server().with_engine_ttl(Some(Duration::from_millis(1))));
+        let open = srv.handle(&Request::new("open").arg("data", &data).render());
+        assert!(open.is_ok(), "{:?}", open.error);
+        let sid = open.get("session").unwrap().to_string();
+        assert_eq!(srv.engines.lock().unwrap().len(), 1);
+
+        // a live session pins the dataset: the sweep may not evict
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(srv.sweep_idle_engines(), 0, "session still references the dataset");
+        assert_eq!(srv.engines.lock().unwrap().len(), 1);
+
+        let closed = srv.handle(&Request::new("close").arg("session", &sid).render());
+        assert!(closed.is_ok(), "{:?}", closed.error);
+        // zero further requests or connections: the timer tick alone
+        // reaps the idle engine (mirror of the session-sweeper test)
+        let sweeper = srv.spawn_sweeper(Duration::from_millis(2));
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !srv.engines.lock().unwrap().is_empty() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(srv.engines.lock().unwrap().is_empty(), "idle engine must be evicted");
+        srv.shutdown.store(true, Ordering::SeqCst);
+        sweeper.join().unwrap();
+
+        // the dataset reopens transparently afterwards
+        let re = srv.handle(&Request::new("open").arg("data", &data).render());
+        assert!(re.is_ok(), "{:?}", re.error);
+        let _ = std::fs::remove_dir_all(&dir.root);
+    }
+
+    #[test]
+    fn metrics_verb_exposes_parseable_prometheus_text() {
+        use crate::obs::metrics as m;
+        let dir = build_dataset("metrics");
+        let data = dir.root.display().to_string();
+        let srv = server();
+        let open = srv.handle(&Request::new("open").arg("data", &data).render());
+        assert!(open.is_ok(), "{:?}", open.error);
+        let sid = open.get("session").unwrap().to_string();
+        // another test in this binary may flip the global enabled flag for
+        // an instant; retry the run+scrape instead of flaking on it
+        let mut resp = Response::err("unscraped");
+        for _ in 0..3 {
+            m::set_enabled(true);
+            let run = srv
+                .handle(&Request::new("run").arg("session", &sid).arg("app", "pagerank").render());
+            assert!(run.is_ok(), "{:?}", run.error);
+            resp = srv.handle("metrics");
+            let got_iters = resp
+                .payload
+                .iter()
+                .filter_map(|l| m::parse_line(l))
+                .any(|(n, _, v)| n == "graphmp_engine_iterations_total" && v > 0.0);
+            if got_iters {
+                break;
+            }
+        }
+        assert!(resp.is_ok(), "{:?}", resp.error);
+        assert_eq!(resp.get("format"), Some("prometheus-0.0.4"));
+        let text = resp.payload.join("\n");
+        assert!(text.contains("# TYPE graphmp_sessions_open gauge"), "{text}");
+        assert!(text.contains("# TYPE graphmp_engines_resident gauge"), "{text}");
+        assert!(text.contains("# TYPE graphmp_engine_iterations_total counter"), "{text}");
+        // every sample line must parse, and the engine must have reported
+        for line in resp.payload.iter().filter(|l| !l.starts_with('#')) {
+            assert!(m::parse_line(line).is_some(), "unparseable sample line: {line}");
+        }
+        let iters: f64 = resp
+            .payload
+            .iter()
+            .filter_map(|l| m::parse_line(l))
+            .filter(|(n, _, _)| n == "graphmp_engine_iterations_total")
+            .map(|(_, _, v)| v)
+            .sum();
+        assert!(iters > 0.0, "a run must surface iterations in the exposition");
         let _ = std::fs::remove_dir_all(&dir.root);
     }
 

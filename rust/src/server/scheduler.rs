@@ -73,6 +73,7 @@ impl Scheduler {
         let mut s = self.state.lock().unwrap();
         if s.running[idx] >= limit {
             if s.queued >= self.cfg.max_queue {
+                crate::obs::metrics::counter_add("graphmp_admission_busy_total", &[], 1);
                 bail!(
                     "busy: {} {} job(s) running and {} queued",
                     s.running[idx],

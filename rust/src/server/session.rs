@@ -110,6 +110,12 @@ impl SessionRegistry {
         self.map.lock().unwrap().len()
     }
 
+    /// Does any live session pin `dataset`?  Idle-*engine* eviction must
+    /// keep an engine whose snapshots are still reachable this way.
+    pub fn references(&self, dataset: &std::path::Path) -> bool {
+        self.map.lock().unwrap().values().any(|s| s.dataset == dataset)
+    }
+
     /// Evict sessions idle past the registry's TTL; returns how many went.
     /// No-op when no TTL is configured.
     pub fn sweep_idle(&self) -> usize {

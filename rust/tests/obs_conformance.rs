@@ -1,0 +1,121 @@
+//! Observability must be *bit-invisible*: running with the metrics
+//! registry hot and the flight recorder installed must produce values
+//! byte-identical to a run with `GRAPHMP_OBS=0` — for the single-process
+//! VSW engine and for a partitioned coordinator run alike.
+//!
+//! The enabled flag and the trace recorder are process-global, so every
+//! test takes a shared gate and restores the enabled state before
+//! releasing it.
+
+use graphmp::apps;
+use graphmp::cluster::{worker, Coordinator, PartitionManifest, StreamLink};
+use graphmp::engine::{EngineConfig, VswEngine};
+use graphmp::graph::{generator, Edge, Weight};
+use graphmp::obs::{metrics, trace};
+use graphmp::sharding::{preprocess_weighted, PreprocessConfig};
+use graphmp::storage::property::Property;
+use graphmp::storage::DatasetDir;
+use std::sync::Mutex;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const N: usize = 128;
+const APPS: [&str; 2] = ["pagerank", "weighted-sssp"];
+
+fn build_dataset(tag: &str) -> DatasetDir {
+    let mut edges: Vec<Edge> = generator::rmat(7, 600, generator::RmatParams::default(), 77);
+    let rev: Vec<_> = edges.iter().map(|&(s, d)| (d, s)).collect();
+    edges.extend(rev);
+    let weights: Vec<Weight> = generator::synth_weights(&edges, 5);
+    let dir = DatasetDir::new(
+        std::env::temp_dir().join(format!("gmp_obsconf_{tag}_{}", std::process::id())),
+    );
+    let _ = std::fs::remove_dir_all(&dir.root);
+    let cfg = PreprocessConfig { max_edges_per_shard: 128, bloom_fpr: 0.01 };
+    preprocess_weighted(tag, &edges, &weights, N, &dir, &cfg).unwrap();
+    dir
+}
+
+fn vsw_lines(dir: &DatasetDir, app_name: &str, cfg: &EngineConfig) -> Vec<String> {
+    let engine = VswEngine::open(dir.clone(), cfg.clone()).unwrap();
+    let app = apps::by_name(app_name).unwrap();
+    let res = engine.run_any(&app).unwrap();
+    (0..res.values.len()).map(|v| res.values.render_bits(v).unwrap()).collect()
+}
+
+fn partitioned_lines(dir: &DatasetDir, app_name: &str, cfg: &EngineConfig) -> Vec<String> {
+    let p = Property::load(&dir.property_path()).unwrap().num_shards();
+    let manifest = PartitionManifest::balanced(p, 2).unwrap();
+    let mut links = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..manifest.num_parts() {
+        let (stream, handle) = worker::spawn_local(dir.clone(), cfg.clone(), None).unwrap();
+        links.push(StreamLink::new(stream));
+        handles.push(handle);
+    }
+    let mut coord = Coordinator::new(manifest, links).unwrap();
+    let summary = coord.run(app_name, cfg.max_iters, true).unwrap();
+    drop(coord);
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    summary.values
+}
+
+fn assert_identical(a: &[String], b: &[String], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (v, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x, y, "{what}: vertex {v} diverged between obs-on and obs-off");
+    }
+}
+
+#[test]
+fn vsw_values_are_bit_identical_with_obs_on_and_off() {
+    let _g = gate();
+    let dir = build_dataset("vsw");
+    let trace_path = dir.root.with_extension("gmtf");
+    let cfg = EngineConfig { threads: 2, prefetch_depth: 2, ..Default::default() };
+    for app in APPS {
+        // obs fully hot: registry recording, flight recorder sampling
+        // every shard
+        metrics::set_enabled(true);
+        trace::install(&trace_path, 256, 1).unwrap();
+        let on = vsw_lines(&dir, app, &cfg);
+        trace::finish().unwrap();
+        assert!(
+            !trace::read_records(&trace_path).unwrap().is_empty(),
+            "the hot run must actually have recorded spans"
+        );
+        // the GRAPHMP_OBS=0 shape
+        metrics::set_enabled(false);
+        let off = vsw_lines(&dir, app, &cfg);
+        metrics::set_enabled(true);
+        assert_identical(&on, &off, &format!("vsw {app}"));
+    }
+    let _ = std::fs::remove_file(&trace_path);
+    let _ = std::fs::remove_dir_all(&dir.root);
+}
+
+#[test]
+fn partitioned_values_are_bit_identical_with_obs_on_and_off() {
+    let _g = gate();
+    let dir = build_dataset("part");
+    let trace_path = dir.root.with_extension("gmtf");
+    let cfg = EngineConfig { threads: 1, ..Default::default() };
+    for app in APPS {
+        metrics::set_enabled(true);
+        trace::install(&trace_path, 256, 1).unwrap();
+        let on = partitioned_lines(&dir, app, &cfg);
+        trace::finish().unwrap();
+        metrics::set_enabled(false);
+        let off = partitioned_lines(&dir, app, &cfg);
+        metrics::set_enabled(true);
+        assert_identical(&on, &off, &format!("partrun {app}"));
+    }
+    let _ = std::fs::remove_file(&trace_path);
+    let _ = std::fs::remove_dir_all(&dir.root);
+}

@@ -1,0 +1,134 @@
+//! Golden tests for the Prometheus text exposition.
+//!
+//! The registry renders its families in `DESCRIPTORS` order with a
+//! `# HELP`/`# TYPE` header per family whether or not any series exist,
+//! so the schema a scraper sees is a compile-time contract.  These tests
+//! pin that contract: the exact `# TYPE` line sequence, known-value
+//! series rendering (int counters, nanosecond counters as seconds, float
+//! gauges, cumulative histogram buckets), and that every sample line the
+//! renderer emits survives a trip through `parse_line` (what `graphmp
+//! top` consumes).
+
+use graphmp::obs::metrics as m;
+
+/// Every metric family, in exposition order.  A new family lands here in
+/// the same commit that adds its descriptor, or this test fails.
+const GOLDEN_TYPES: &[(&str, &str)] = &[
+    ("graphmp_io_read_bytes_total", "counter"),
+    ("graphmp_io_written_bytes_total", "counter"),
+    ("graphmp_io_read_ops_total", "counter"),
+    ("graphmp_io_write_ops_total", "counter"),
+    ("graphmp_io_throttle_stall_seconds_total", "counter"),
+    ("graphmp_cache_hits_total", "counter"),
+    ("graphmp_cache_misses_total", "counter"),
+    ("graphmp_cache_evictions_total", "counter"),
+    ("graphmp_cache_invalidations_total", "counter"),
+    ("graphmp_cache_resident_bytes", "gauge"),
+    ("graphmp_engine_iterations_total", "counter"),
+    ("graphmp_engine_io_wait_seconds_total", "counter"),
+    ("graphmp_engine_compute_seconds_total", "counter"),
+    ("graphmp_engine_decode_seconds_total", "counter"),
+    ("graphmp_engine_active_ratio", "gauge"),
+    ("graphmp_engine_window", "gauge"),
+    ("graphmp_engine_lent_bytes", "gauge"),
+    ("graphmp_engine_epoch", "gauge"),
+    ("graphmp_iter_seconds", "histogram"),
+    ("graphmp_uring_direct_reads_total", "counter"),
+    ("graphmp_uring_fallback_reads_total", "counter"),
+    ("graphmp_uring_queue_depth", "gauge"),
+    ("graphmp_sessions_open", "gauge"),
+    ("graphmp_engines_resident", "gauge"),
+    ("graphmp_engines_evicted_total", "counter"),
+    ("graphmp_requests_total", "counter"),
+    ("graphmp_admission_busy_total", "counter"),
+    ("graphmp_jobs_inflight", "gauge"),
+    ("graphmp_jobs_queued", "gauge"),
+    ("graphmp_barrier_seconds", "histogram"),
+    ("graphmp_barrier_delta_lines_total", "counter"),
+    ("graphmp_part_stitch_bytes", "gauge"),
+    ("graphmp_trace_records_total", "counter"),
+    ("graphmp_trace_dropped_total", "counter"),
+    ("graphmp_build_info", "gauge"),
+];
+
+#[test]
+fn type_lines_render_in_descriptor_order() {
+    m::set_enabled(true);
+    let text = m::render();
+    let got: Vec<&str> =
+        text.lines().filter(|l| l.starts_with("# TYPE ")).collect();
+    let want: Vec<String> = GOLDEN_TYPES
+        .iter()
+        .map(|(name, kind)| format!("# TYPE {name} {kind}"))
+        .collect();
+    assert_eq!(
+        got, want,
+        "exposed schema drifted — update GOLDEN_TYPES in the same commit as DESCRIPTORS"
+    );
+    // a scraper negotiates on this exact string
+    assert_eq!(m::CONTENT_TYPE, "text/plain; version=0.0.4");
+}
+
+#[test]
+fn known_values_render_exactly_and_reparse() {
+    m::set_enabled(true);
+    let l = &[("dataset", "golden.gmp")];
+    m::counter_to("graphmp_cache_hits_total", l, 42);
+    m::counter_add("graphmp_engine_io_wait_seconds_total", l, 1_500_000_000); // ns -> 1.5s
+    m::gauge_set("graphmp_engine_window", l, 4);
+    m::gauge_set_f64("graphmp_engine_active_ratio", l, 0.25);
+    m::observe_secs("graphmp_iter_seconds", l, 0.003);
+    m::observe_secs("graphmp_iter_seconds", l, 0.003);
+    m::observe_secs("graphmp_iter_seconds", l, 1.0);
+
+    let text = m::render();
+    for want in [
+        "graphmp_cache_hits_total{dataset=\"golden.gmp\"} 42",
+        "graphmp_engine_io_wait_seconds_total{dataset=\"golden.gmp\"} 1.5",
+        "graphmp_engine_window{dataset=\"golden.gmp\"} 4",
+        "graphmp_engine_active_ratio{dataset=\"golden.gmp\"} 0.25",
+        // 0.003 lands in le=0.005; buckets render cumulatively
+        "graphmp_iter_seconds_bucket{dataset=\"golden.gmp\",le=\"0.005\"} 2",
+        "graphmp_iter_seconds_bucket{dataset=\"golden.gmp\",le=\"2\"} 3",
+        "graphmp_iter_seconds_bucket{dataset=\"golden.gmp\",le=\"+Inf\"} 3",
+        "graphmp_iter_seconds_count{dataset=\"golden.gmp\"} 3",
+    ] {
+        assert!(
+            text.lines().any(|line| line == want),
+            "missing exact line {want:?} in:\n{text}"
+        );
+    }
+
+    // every sample line the renderer emits must be machine-readable
+    let mut samples = 0usize;
+    for line in text.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let parsed = m::parse_line(line);
+        assert!(parsed.is_some(), "unparseable exposition line: {line:?}");
+        samples += 1;
+    }
+    assert!(samples > 0, "render produced no sample lines");
+
+    // parse returns structured labels, not just strings
+    let (name, labels, v) =
+        m::parse_line("graphmp_iter_seconds_bucket{dataset=\"golden.gmp\",le=\"+Inf\"} 3")
+            .unwrap();
+    assert_eq!(name, "graphmp_iter_seconds_bucket");
+    assert_eq!(labels.len(), 2);
+    assert_eq!(labels[1], ("le".to_string(), "+Inf".to_string()));
+    assert_eq!(v, 3.0);
+}
+
+#[test]
+fn label_values_are_escaped_and_roundtrip() {
+    m::set_enabled(true);
+    let tricky = "we\"ird\\name";
+    m::gauge_set("graphmp_cache_resident_bytes", &[("dataset", tricky)], 7);
+    let text = m::render();
+    let line = text
+        .lines()
+        .find(|l| l.starts_with("graphmp_cache_resident_bytes{") && l.contains("we\\\""))
+        .unwrap_or_else(|| panic!("escaped series missing in:\n{text}"));
+    let (_, labels, v) = m::parse_line(line).expect("escaped line must parse");
+    assert_eq!(labels[0].1, tricky, "escape sequences must roundtrip");
+    assert_eq!(v, 7.0);
+}

@@ -1,0 +1,178 @@
+//! Flight-recorder (GMTF) integration tests: install → record → finish →
+//! read back.  The recorder is process-global, so every test here takes a
+//! shared gate before touching it.
+//!
+//! The central property: for any sequence of records that fits the ring,
+//! `read_records(path)` after `finish()` returns exactly the records that
+//! were written, in order — and `trace-dump` renders one line per record.
+//! A second test pins the ring bound: the on-disk log never exceeds twice
+//! the configured cap, and the survivors are the newest records.
+
+use graphmp::obs::{metrics, trace};
+use graphmp::util::rng::SplitMix64;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("gmp_trace_{tag}_{}.gmtf", std::process::id()))
+}
+
+/// A pseudo-random record of each kind, driven by the repo's own PRNG so
+/// the "property test" is deterministic across runs.
+fn synth_record(rng: &mut SplitMix64, i: u64) -> trace::TraceRecord {
+    match rng.next_u64() % 3 {
+        0 => trace::TraceRecord::Meta {
+            app: format!("app-{}", rng.next_u64() % 7),
+            epoch: rng.next_u64() % 100,
+            sample: (rng.next_u64() % 32) as u32,
+        },
+        1 => trace::TraceRecord::Iter {
+            epoch: rng.next_u64() % 100,
+            iter: i,
+            wall_ns: rng.next_u64() % (1 << 40),
+            io_wait_ns: rng.next_u64() % (1 << 40),
+            compute_ns: rng.next_u64() % (1 << 40),
+            decode_ns: rng.next_u64() % (1 << 40),
+            shards_processed: rng.next_u64() % 64,
+            shards_skipped: rng.next_u64() % 64,
+            active: rng.next_u64() % (1 << 30),
+            read_bytes: rng.next_u64() % (1 << 44),
+            cache_hits: rng.next_u64() % 1000,
+            cache_misses: rng.next_u64() % 1000,
+            window: rng.next_u64() % 16,
+        },
+        _ => trace::TraceRecord::Shard {
+            iter: i,
+            shard: rng.next_u64() % 256,
+            acquire_ns: rng.next_u64() % (1 << 36),
+            decode_ns: rng.next_u64() % (1 << 36),
+            fold_ns: rng.next_u64() % (1 << 36),
+        },
+    }
+}
+
+#[test]
+fn random_records_roundtrip_through_the_file() {
+    let _g = gate();
+    metrics::set_enabled(true);
+    let path = tmp("roundtrip");
+    trace::install(&path, 1024, 1).unwrap();
+    assert!(trace::installed());
+
+    let mut rng = SplitMix64::new(0xDECAF);
+    let mut written = Vec::new();
+    trace::record_run_start("pagerank", 7);
+    written.push(trace::TraceRecord::Meta { app: "pagerank".into(), epoch: 7, sample: 1 });
+    for i in 0..200 {
+        let rec = synth_record(&mut rng, i);
+        trace::record(rec.clone());
+        written.push(rec);
+    }
+    let finished = trace::finish().expect("a recorder was installed");
+    assert_eq!(finished, path);
+    assert!(!trace::installed(), "finish must uninstall");
+
+    let got = trace::read_records(&path).unwrap();
+    assert_eq!(got, written, "decoded records must equal what was recorded, in order");
+
+    // trace-dump's renderer: one line per record, kind-tagged
+    let dump = trace::dump(&path).unwrap();
+    let lines: Vec<&str> = dump.lines().collect();
+    assert_eq!(lines.len(), written.len());
+    for (line, rec) in lines.iter().zip(&written) {
+        let prefix = match rec {
+            trace::TraceRecord::Meta { .. } => "meta ",
+            trace::TraceRecord::Iter { .. } => "iter ",
+            trace::TraceRecord::Shard { .. } => "shard ",
+        };
+        assert!(line.starts_with(prefix), "{line:?} should start with {prefix:?}");
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn ring_cap_bounds_the_file_and_keeps_the_newest() {
+    let _g = gate();
+    metrics::set_enabled(true);
+    let path = tmp("ring");
+    let cap = 8usize;
+    trace::install(&path, cap, 0).unwrap();
+    let total = 45u64;
+    for i in 0..total {
+        trace::record(trace::TraceRecord::Shard {
+            iter: i,
+            shard: i,
+            acquire_ns: 1,
+            decode_ns: 2,
+            fold_ns: 3,
+        });
+    }
+    trace::finish().unwrap();
+    let got = trace::read_records(&path).unwrap();
+    assert!(
+        got.len() <= 2 * cap,
+        "on-disk log must stay bounded at 2x the ring cap, got {} records",
+        got.len()
+    );
+    // the tail of the log is the newest records, ending at total-1
+    let last = got.last().unwrap();
+    assert_eq!(
+        *last,
+        trace::TraceRecord::Shard {
+            iter: total - 1,
+            shard: total - 1,
+            acquire_ns: 1,
+            decode_ns: 2,
+            fold_ns: 3
+        }
+    );
+    let (records, dropped) = trace::totals();
+    assert!(records >= total, "totals must count every record written");
+    assert!(dropped > 0, "overflowing the ring must count drops");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn disabled_registry_silences_the_recorder() {
+    let _g = gate();
+    let path = tmp("silenced");
+    trace::install(&path, 16, 1).unwrap();
+    metrics::set_enabled(false);
+    trace::record_run_start("pagerank", 1);
+    trace::record(trace::TraceRecord::Shard {
+        iter: 0,
+        shard: 0,
+        acquire_ns: 1,
+        decode_ns: 1,
+        fold_ns: 1,
+    });
+    assert!(!trace::shard_sampled(0), "GRAPHMP_OBS=0 must disable shard sampling too");
+    metrics::set_enabled(true);
+    trace::finish().unwrap();
+    let got = trace::read_records(&path).unwrap();
+    assert!(got.is_empty(), "disabled runs must leave only the header, got {got:?}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn corrupt_files_fail_cleanly() {
+    let _g = gate();
+    let path = tmp("corrupt");
+    std::fs::write(&path, b"NOPE....").unwrap();
+    assert!(trace::read_records(&path).is_err(), "bad magic must be an error");
+    // valid header, truncated record body
+    let mut data = Vec::new();
+    data.extend_from_slice(&trace::MAGIC);
+    data.extend_from_slice(&trace::VERSION.to_le_bytes());
+    data.push(2); // iter record kind, but no payload
+    data.extend_from_slice(&[0u8; 4]);
+    std::fs::write(&path, &data).unwrap();
+    assert!(trace::read_records(&path).is_err(), "truncated records must be an error");
+    let _ = std::fs::remove_file(&path);
+}
